@@ -1,0 +1,48 @@
+//! Shared experiment setup for the paper-figure benches.
+
+use has_gpu::cluster::FunctionSpec;
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::workload::{Preset, Trace, TraceGen};
+
+/// The benchmark function set (paper §4: MLPerf-based serverless functions).
+pub fn functions() -> Vec<FunctionSpec> {
+    let perf = PerfModel::default();
+    [
+        ZooModel::ResNet50,
+        ZooModel::MobileNetV2,
+        ZooModel::BertTiny,
+        ZooModel::ConvNextTiny,
+        ZooModel::Vgg16,
+        ZooModel::DlrmSmall,
+    ]
+    .iter()
+    .map(|&m| {
+        let graph = zoo_graph(m);
+        let baseline = perf.latency(&graph, 1, 1.0, 1.0);
+        let slo = baseline * 3.0;
+        let batch = [16u32, 8, 4, 2, 1]
+            .into_iter()
+            .find(|&b| perf.latency(&graph, b, 1.0, 1.0) <= slo * 0.5)
+            .unwrap_or(1);
+        FunctionSpec {
+            name: graph.name.clone(),
+            slo,
+            batch,
+            graph,
+            artifact: None,
+        }
+    })
+    .collect()
+}
+
+/// Azure-style experiment trace (longer than the integration tests').
+pub fn trace(fns: &[FunctionSpec], preset: Preset, seconds: usize) -> Trace {
+    let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+    TraceGen::preset(preset, 11, seconds, 150.0).generate(&names)
+}
+
+/// Baseline ("pure container") latency per the paper's Fig. 6 definition.
+pub fn baseline_latency(f: &FunctionSpec, perf: &PerfModel) -> f64 {
+    perf.latency(&f.graph, 1, 1.0, 1.0)
+}

@@ -1,0 +1,74 @@
+//! Fig. 4 — ResNet-152 inference latency under batch × SM × quota.
+//!
+//! Regenerates the paper's latency grid from the ground-truth perf model and
+//! validates the *shape* against real token-scheduler runs (the no-debt
+//! window semantics executed on wall-clock time). Prints the four qualitative
+//! regimes the paper calls out.
+
+mod common;
+
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::util::bench::ascii_table;
+use has_gpu::vgpu::tokens::TokenScheduler;
+use has_gpu::vgpu::ClientId;
+
+fn main() {
+    let pm = PerfModel::default();
+    let g = zoo_graph(ZooModel::ResNet152);
+
+    println!("\n=== Fig. 4: ResNet-152 latency (ms) — batch x SM x quota ===");
+    let sms = [0.1, 0.2, 0.35, 0.5, 0.75, 1.0];
+    let quotas = [0.2, 0.4, 0.6, 0.8, 1.0];
+    for &batch in &[1u32, 4, 16, 32] {
+        let mut rows = Vec::new();
+        for &sm in &sms {
+            let mut row = vec![format!("sm={:.0}%", sm * 100.0)];
+            for &q in &quotas {
+                row.push(format!("{:.1}", pm.latency(&g, batch, sm, q) * 1e3));
+            }
+            rows.push(row);
+        }
+        let headers: Vec<String> = std::iter::once("batch".to_string())
+            .chain(quotas.iter().map(|q| format!("q={:.0}%", q * 100.0)))
+            .collect();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        println!("batch = {batch}");
+        println!("{}", ascii_table(&h, &rows));
+    }
+
+    // The paper's observations, quantified:
+    let quota_starved = pm.latency(&g, 32, 0.1, 0.4) / pm.latency(&g, 32, 0.1, 1.0);
+    let quota_ample = pm.latency(&g, 8, 1.0, 0.4) / pm.latency(&g, 8, 1.0, 1.0);
+    println!("quota gain (b32, sm10%): {quota_starved:.2}x vs (b8, sm100%): {quota_ample:.2}x");
+    let sm_small_batch = pm.latency(&g, 1, 0.5, 1.0) / pm.latency(&g, 1, 1.0, 1.0);
+    println!("small-batch SM insensitivity: lat(sm50%)/lat(sm100%) at b1 = {sm_small_batch:.3}");
+
+    // Real token-scheduler validation: dilation measured on the wall clock.
+    println!("\n--- real TokenScheduler validation (wall-clock) ---");
+    let window = 0.005;
+    for &(quota_mille, n_kernels, kernel_ms) in
+        &[(200u32, 40u32, 0.5f64), (500, 40, 0.5), (1000, 40, 0.5), (300, 4, 30.0)]
+    {
+        let ts = TokenScheduler::new(window);
+        ts.register(ClientId(1), quota_mille);
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_kernels {
+            ts.acquire(ClientId(1), kernel_ms / 1e3).unwrap();
+            // Long kernels actually occupy wall time (non-preemptible).
+            if kernel_ms >= 5.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(kernel_ms / 1e3));
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let raw = n_kernels as f64 * kernel_ms / 1e3;
+        println!(
+            "quota={:4}permille kernels={n_kernels:3}x{kernel_ms:4.1}ms raw={:6.1}ms measured={:7.1}ms dilation={:4.2}x",
+            quota_mille,
+            raw * 1e3,
+            elapsed * 1e3,
+            elapsed / raw
+        );
+    }
+    println!("fig4 bench done");
+}

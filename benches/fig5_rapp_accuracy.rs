@@ -1,0 +1,107 @@
+//! Fig. 5 — RaPP latency-prediction accuracy vs. the DIPPM baseline.
+//!
+//! Left: ConvNeXt predictions vs. ground truth across SM/quota allocations
+//! (the models were trained on random graphs; ConvNeXt is an *unseen* model).
+//! Right: MAPE for RaPP vs. DIPPM on validation / test / unseen splits
+//! (training-side numbers from artifacts/rapp_meta.json) plus the unseen-zoo
+//! MAPE measured natively in Rust.
+//!
+//! Requires `make artifacts`.
+
+mod common;
+
+use has_gpu::model::zoo::{zoo_graph, ZooModel, ALL_ZOO};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::dippm::DippmPredictor;
+use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::util::bench::ascii_table;
+use has_gpu::util::json;
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("rapp_weights.json").exists() {
+        eprintln!("SKIP fig5: run `make artifacts` first");
+        return;
+    }
+    let pm = PerfModel::default();
+    let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone()).unwrap();
+    let dippm = DippmPredictor::load(&dir.join("dippm_weights.json"), pm.clone()).unwrap();
+
+    // ---- Fig. 5 left: ConvNeXt predictions vs ground truth ---------------
+    println!("\n=== Fig. 5 (left): ConvNeXt-Tiny latency — truth vs RaPP vs DIPPM (ms) ===");
+    let g = zoo_graph(ZooModel::ConvNextTiny);
+    let mut rows = Vec::new();
+    for &(batch, sm, quota) in &[
+        (1u32, 0.1f64, 0.4f64),
+        (1, 0.35, 0.8),
+        (4, 0.2, 0.2),
+        (4, 0.5, 0.6),
+        (8, 0.75, 1.0),
+        (16, 0.3, 0.5),
+        (32, 0.15, 0.9),
+        (32, 1.0, 0.3),
+    ] {
+        let truth = pm.latency(&g, batch, sm, quota) * 1e3;
+        let p_r = rapp.latency(&g, batch, sm, quota) * 1e3;
+        let p_d = dippm.latency(&g, batch, sm, quota) * 1e3;
+        rows.push(vec![
+            format!("b{batch} sm{:.0}% q{:.0}%", sm * 100.0, quota * 100.0),
+            format!("{truth:.2}"),
+            format!("{p_r:.2}"),
+            format!("{p_d:.2}"),
+            format!("{:.1}%", ((p_r - truth) / truth).abs() * 100.0),
+            format!("{:.1}%", ((p_d - truth) / truth).abs() * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["config", "truth", "RaPP", "DIPPM", "RaPP err", "DIPPM err"],
+            &rows
+        )
+    );
+
+    // ---- Fig. 5 right: MAPE table ----------------------------------------
+    println!("=== Fig. 5 (right): MAPE (%) ===");
+    let meta = json::parse_file(&dir.join("rapp_meta.json")).unwrap();
+    let mut rows = Vec::new();
+    for model in ["rapp", "dippm"] {
+        let m = meta.get(model).unwrap();
+        rows.push(vec![
+            model.to_string(),
+            format!("{:.2}", m.get("val_mape").unwrap().as_f64().unwrap()),
+            format!("{:.2}", m.get("test_mape").unwrap().as_f64().unwrap()),
+            format!("{:.2}", m.get("unseen_mape").unwrap().as_f64().unwrap()),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(&["model", "val", "test", "unseen-graphs"], &rows)
+    );
+
+    // Unseen *zoo* models (never in the python corpus), swept densely in Rust.
+    let mut e_rapp = Vec::new();
+    let mut e_dippm = Vec::new();
+    for m in ALL_ZOO {
+        let g = zoo_graph(m);
+        for &batch in &[1u32, 4, 16] {
+            for &sm in &[0.15f64, 0.4, 0.8] {
+                for &q in &[0.25f64, 0.6, 1.0] {
+                    let truth = pm.latency(&g, batch, sm, q);
+                    e_rapp.push((rapp.latency(&g, batch, sm, q) - truth).abs() / truth);
+                    e_dippm.push((dippm.latency(&g, batch, sm, q) - truth).abs() / truth);
+                }
+            }
+        }
+    }
+    let mape = |v: &[f64]| 100.0 * v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "unseen ZOO models ({} configs): RaPP {:.2}%  DIPPM {:.2}%",
+        e_rapp.len(),
+        mape(&e_rapp),
+        mape(&e_dippm)
+    );
+    println!("paper: RaPP ~5% flat; DIPPM 10.14% -> 17.7% degrading on unseen");
+    println!("fig5 bench done");
+}

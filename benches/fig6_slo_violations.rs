@@ -1,0 +1,120 @@
+//! Fig. 6 — SLO-violation rates vs. baseline multiplier (1x..10x, step 0.25)
+//! for HAS-GPU / KServe / FaST-GShare, plus the P90/P95/P99 tail table.
+//!
+//! Left plot: ResNet-50. Right: per-function violation rates relative to
+//! HAS-GPU at the paper's highlighted multipliers.
+
+mod common;
+
+use common::{baseline_latency, functions, trace};
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
+use has_gpu::metrics::RunReport;
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::OraclePredictor;
+use has_gpu::sim::{run_sim, SimConfig};
+use has_gpu::util::bench::ascii_table;
+use has_gpu::workload::Preset;
+
+fn run_all(seconds: usize) -> Vec<RunReport> {
+    let fns = functions();
+    let tr = trace(&fns, Preset::Standard, seconds);
+    let pred = OraclePredictor::default();
+    let perf = PerfModel::default();
+    let mut out = Vec::new();
+    let mut policies: Vec<(Box<dyn ScalingPolicy>, bool)> = vec![
+        (Box::new(HybridAutoscaler::new(HybridConfig::default())), false),
+        (Box::new(KServePolicy::default()), true),
+        (Box::new(FastGSharePolicy::default()), false),
+    ];
+    for (policy, whole) in policies.iter_mut() {
+        let cfg = SimConfig {
+            n_gpus: 10,
+            bill_whole_gpu: *whole,
+            ..SimConfig::default()
+        };
+        out.push(run_sim(policy.as_mut(), &fns, &tr, &pred, &perf, &cfg));
+    }
+    out
+}
+
+fn main() {
+    let fast = std::env::var("HAS_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let seconds = if fast { 180 } else { 480 };
+    let reports = run_all(seconds);
+    let perf = PerfModel::default();
+    let fns = functions();
+
+    // ---- Fig. 6 left: ResNet-50 violation curves --------------------------
+    println!("\n=== Fig. 6 (left): ResNet-50 violation rate vs baseline multiplier ===");
+    let rn = fns.iter().find(|f| f.name == "resnet50").unwrap();
+    let base = baseline_latency(rn, &perf);
+    let mut rows = Vec::new();
+    let mut mult = 1.0;
+    while mult <= 10.0 + 1e-9 {
+        let mut row = vec![format!("{mult:.2}x")];
+        for r in &reports {
+            row.push(format!(
+                "{:.3}",
+                r.functions["resnet50"].violation_rate(base * mult)
+            ));
+        }
+        rows.push(row);
+        mult += 0.25;
+    }
+    println!(
+        "{}",
+        ascii_table(&["multiplier", "has-gpu", "kserve", "fast-gshare"], &rows)
+    );
+
+    // ---- Fig. 6 right: relative violation rates across all functions ------
+    println!("=== Fig. 6 (right): violation rates by function @ 3x baseline (relative to HAS-GPU) ===");
+    let mut rows = Vec::new();
+    for f in &fns {
+        let base = baseline_latency(f, &perf);
+        let v: Vec<f64> = reports
+            .iter()
+            .map(|r| r.functions[&f.name].violation_rate(base * 3.0))
+            .collect();
+        let denom = v[0].max(1e-4);
+        rows.push(vec![
+            f.name.clone(),
+            format!("{:.3}", v[0]),
+            format!("{:.2}x", v[1] / denom),
+            format!("{:.2}x", v[2] / denom),
+        ]);
+    }
+    println!(
+        "{}",
+        ascii_table(&["function", "has-gpu (abs)", "kserve (rel)", "fast-gshare (rel)"], &rows)
+    );
+
+    // ---- tail latency table ------------------------------------------------
+    println!("=== Fig. 6 tails: ResNet-50 P90 / P95 / P99 (ms) ===");
+    let mut rows = Vec::new();
+    for r in &reports {
+        let mut s = r.functions["resnet50"].latency_summary();
+        rows.push(vec![
+            r.platform.clone(),
+            format!("{:.1}", s.p90() * 1e3),
+            format!("{:.1}", s.p95() * 1e3),
+            format!("{:.1}", s.p99() * 1e3),
+        ]);
+    }
+    println!("{}", ascii_table(&["platform", "P90", "P95", "P99"], &rows));
+
+    // Headline factor: mean violation ratio FaST/HAS across functions+bands.
+    let (mut v_has, mut v_fg) = (0.0, 0.0);
+    for f in &fns {
+        let base = baseline_latency(f, &perf);
+        for m in [2.0, 3.0, 4.0, 5.0] {
+            v_has += reports[0].functions[&f.name].violation_rate(base * m);
+            v_fg += reports[2].functions[&f.name].violation_rate(base * m);
+        }
+    }
+    println!(
+        "FaST-GShare/HAS-GPU total violation ratio: {:.2}x (paper: 4.8x)",
+        v_fg / v_has.max(1e-6)
+    );
+    println!("fig6 bench done");
+}

@@ -1,0 +1,87 @@
+//! Fig. 7 — function costs ($ per 1K requests) under standard and stress
+//! workloads for HAS-GPU / KServe / FaST-GShare, per function.
+
+mod common;
+
+use common::{functions, trace};
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
+use has_gpu::metrics::RunReport;
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::OraclePredictor;
+use has_gpu::sim::{run_sim, SimConfig};
+use has_gpu::util::bench::ascii_table;
+use has_gpu::workload::Preset;
+
+fn run_all(preset: Preset, seconds: usize) -> Vec<RunReport> {
+    let fns = functions();
+    let tr = trace(&fns, preset, seconds);
+    let pred = OraclePredictor::default();
+    let perf = PerfModel::default();
+    let mut out = Vec::new();
+    let mut policies: Vec<(Box<dyn ScalingPolicy>, bool)> = vec![
+        (Box::new(HybridAutoscaler::new(HybridConfig::default())), false),
+        (Box::new(KServePolicy::default()), true),
+        (Box::new(FastGSharePolicy::default()), false),
+    ];
+    for (policy, whole) in policies.iter_mut() {
+        let cfg = SimConfig {
+            n_gpus: 10,
+            bill_whole_gpu: *whole,
+            ..SimConfig::default()
+        };
+        out.push(run_sim(policy.as_mut(), &fns, &tr, &pred, &perf, &cfg));
+    }
+    out
+}
+
+fn main() {
+    let fast = std::env::var("HAS_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let seconds = if fast { 180 } else { 480 };
+    for preset in [Preset::Standard, Preset::Stress] {
+        let reports = run_all(preset, seconds);
+        println!("\n=== Fig. 7: $ per 1K requests — {preset:?} workload ===");
+        let mut rows = Vec::new();
+        let mut ratios_ks = Vec::new();
+        let mut ratios_fg = Vec::new();
+        for f in functions() {
+            let per_1k: Vec<f64> = reports
+                .iter()
+                .map(|r| {
+                    r.costs
+                        .cost_per_1k(&f.name, r.functions[&f.name].served())
+                })
+                .collect();
+            ratios_ks.push(per_1k[1] / per_1k[0]);
+            ratios_fg.push(per_1k[2] / per_1k[0]);
+            rows.push(vec![
+                f.name.clone(),
+                format!("{:.4}", per_1k[0]),
+                format!("{:.4}", per_1k[1]),
+                format!("{:.4}", per_1k[2]),
+                format!("{:.1}x", per_1k[1] / per_1k[0]),
+                format!("{:.1}x", per_1k[2] / per_1k[0]),
+            ]);
+        }
+        println!(
+            "{}",
+            ascii_table(
+                &["function", "has-gpu", "kserve", "fast-gshare", "ks/has", "fg/has"],
+                &rows
+            )
+        );
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!(
+            "mean per-function cost ratio: KServe/HAS = {:.1}x (paper: 10.8x)  FaST/HAS = {:.2}x (paper: 1.72x)",
+            mean(&ratios_ks),
+            mean(&ratios_fg)
+        );
+        println!(
+            "aggregate $: has={:.3} kserve={:.3} fast-gshare={:.3}",
+            reports[0].costs.total_cost(),
+            reports[1].costs.total_cost(),
+            reports[2].costs.total_cost()
+        );
+    }
+    println!("fig7 bench done");
+}

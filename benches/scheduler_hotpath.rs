@@ -1,0 +1,114 @@
+//! Scheduler hot-path microbenchmarks (§Perf targets in DESIGN.md):
+//! token grant latency, vGPU allocation ops, autoscaler decision latency,
+//! RaPP forwards (native vs PJRT), perf-model evaluation, sim event rate.
+
+mod common;
+
+use common::functions;
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use has_gpu::cluster::reconfigurator::place_pod;
+use has_gpu::cluster::{ClusterState, GpuId, Reconfigurator};
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::features::{extract, FeatureMode};
+use has_gpu::rapp::{LatencyPredictor, OraclePredictor, RappPredictor};
+use has_gpu::simclock::EventQueue;
+use has_gpu::util::bench::{black_box, Harness};
+use has_gpu::vgpu::tokens::TokenScheduler;
+use has_gpu::vgpu::ClientId;
+use std::path::PathBuf;
+
+fn main() {
+    let mut h = Harness::new("scheduler_hotpath");
+    let pm = PerfModel::default();
+    let g = zoo_graph(ZooModel::ResNet50);
+
+    // Token grant (uncontended; budget available).
+    let ts = TokenScheduler::new(1.0); // long window: no refill churn
+    ts.register(ClientId(1), 1000);
+    h.bench("token_grant", || {
+        black_box(ts.try_acquire(ClientId(1), 1e-9).ok());
+    });
+
+    // Perf-model latency evaluation (the RaPP feature hot loop).
+    h.bench("perf_latency_resnet50_b8", || {
+        black_box(pm.latency(&g, 8, 0.5, 0.6));
+    });
+
+    // Feature extraction (full RaPP features incl. 11 probe evaluations).
+    h.bench("rapp_feature_extract", || {
+        black_box(extract(&g, 8, 0.5, 0.6, &pm, FeatureMode::Full));
+    });
+
+    // Native RaPP forward (uncached + cached).
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("rapp_weights.json").exists() {
+        let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone()).unwrap();
+        h.bench("rapp_forward_native", || {
+            black_box(rapp.forward(&g, 8, 0.5, 0.6));
+        });
+        h.bench("rapp_latency_cached", || {
+            black_box(rapp.latency(&g, 8, 0.5, 0.6));
+        });
+    }
+
+    // Autoscaler decision for a 10-GPU, ~40-pod cluster.
+    let fns = functions();
+    let mut cluster = ClusterState::new(10, pm.dev.mem_cap);
+    for f in &fns {
+        cluster.register_function(f.clone());
+    }
+    let mut recon = Reconfigurator::new(&cluster, 3);
+    let mut placed = 0;
+    'outer: for gpu in 0..10 {
+        for slot in 0..4 {
+            let f = &fns[(gpu + slot) % fns.len()];
+            if place_pod(
+                &mut recon, &mut cluster, &pm, &f.name, GpuId(gpu), 250, 250, f.batch, 0.0,
+            )
+            .is_ok()
+            {
+                placed += 1;
+            }
+            if placed >= 40 {
+                break 'outer;
+            }
+        }
+    }
+    let pred = OraclePredictor::default();
+    let mut scaler = HybridAutoscaler::new(HybridConfig::default());
+    let mut t = 0.0;
+    h.bench("autoscaler_plan_40pods", || {
+        t += 1.0;
+        black_box(scaler.plan(&fns[0], 120.0, &cluster, &pred, t));
+    });
+
+    // vGPU allocation round-trip.
+    let mut vg = has_gpu::vgpu::VGpu::new("GPU-bench", 16e9);
+    let mut id = 1000u64;
+    h.bench("vgpu_attach_detach", || {
+        id += 1;
+        let c = ClientId(id);
+        vg.attach(c, 250, 500, 1e8).unwrap();
+        vg.detach(c, 1e8).unwrap();
+    });
+
+    // Discrete-event queue throughput.
+    h.bench_elems("event_queue_push_pop", Some(64), || {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..64u64 {
+            q.push_at(i as f64 * 0.5, i);
+        }
+        while let Some(x) = q.pop() {
+            black_box(x);
+        }
+    });
+
+    // Oracle predictor via trait object (the sim's inner loop).
+    let pred_dyn: &dyn LatencyPredictor = &pred;
+    h.bench("predictor_capacity_dyn", || {
+        black_box(pred_dyn.capacity(&g, 8, 0.5, 0.6));
+    });
+
+    println!("scheduler_hotpath done");
+}

@@ -1,0 +1,76 @@
+//! Quickstart: start a real HAS-GPU server over the AOT artifacts, send a
+//! few requests, and print what happened at every layer.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end path: Rust gateway → dynamic batcher →
+//! vGPU time-token scheduler → PJRT execution of the JAX+Pallas model.
+
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig};
+use has_gpu::cluster::FunctionSpec;
+use has_gpu::gateway::{Server, ServerConfig};
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::rapp::OraclePredictor;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+
+    // One serverless inference function: the small CNN artifact, cost-managed
+    // against the mobilenet-class graph.
+    let functions = vec![FunctionSpec {
+        name: "cnn_s".into(),
+        graph: zoo_graph(ZooModel::MobileNetV2),
+        slo: 0.5,
+        batch: 8,
+        artifact: None, // resolved via artifacts/manifest.json
+    }];
+
+    println!("starting HAS-GPU server (2 simulated GPUs, PJRT CPU backend)…");
+    let server = Server::start(
+        &dir,
+        functions,
+        Box::new(HybridAutoscaler::new(HybridConfig::default())),
+        Arc::new(OraclePredictor::default()),
+        ServerConfig::default(),
+    )?;
+
+    // A single request.
+    let rx = server.submit("cnn_s", vec![0.5f32; 3 * 32 * 32]);
+    let reply = rx.recv_timeout(Duration::from_secs(30))?;
+    println!(
+        "single request: logits[0..3]={:?} latency={:?} (tokens {:?}, exec {:?})",
+        &reply.output[..3],
+        reply.latency,
+        reply.token_wait,
+        reply.exec_time
+    );
+
+    // A burst: dynamic batching + token scheduling kick in.
+    let rxs: Vec<_> = (0..32)
+        .map(|i| server.submit("cnn_s", vec![i as f32 / 32.0; 3 * 32 * 32]))
+        .collect();
+    let mut max_batch = 0;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30))?;
+        max_batch = max_batch.max(r.batch_size);
+    }
+    println!("burst of 32: max dynamic batch = {max_batch}");
+
+    let report = server.report();
+    println!(
+        "served={} cost=${:.6} pod layout (fn, sm permille, quota permille) = {:?}",
+        report.functions["cnn_s"].served(),
+        report.costs.cost_of("cnn_s"),
+        server.pod_layout()
+    );
+    server.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

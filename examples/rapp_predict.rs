@@ -1,0 +1,81 @@
+//! RaPP from the command line: predict latency / throughput for any zoo
+//! model and (batch, sm, quota) — comparing the trained GNN (native Rust
+//! forward), the AOT-compiled HLO forward via PJRT, the DIPPM baseline, and
+//! the ground-truth perf model.
+//!
+//!     make artifacts && cargo run --release --example rapp_predict -- \
+//!         --model resnet152 --batch 8 --sm 0.35 --quota 0.6
+
+use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::dippm::DippmPredictor;
+use has_gpu::rapp::features::{extract, FeatureMode};
+use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::runtime::{PjrtRapp, PjrtRuntime};
+use has_gpu::util::cli::Cli;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("rapp_predict", "RaPP latency prediction CLI")
+        .opt("model", "resnet152", "zoo model name")
+        .opt("batch", "8", "batch size")
+        .opt("sm", "0.5", "SM partition fraction (0..1]")
+        .opt("quota", "0.6", "time quota fraction (0..1]")
+        .parse();
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("rapp_weights.json").exists(), "run `make artifacts` first");
+
+    let model = args.get("model");
+    let Some(zoo) = ZooModel::from_name(model) else {
+        anyhow::bail!("unknown model '{model}'; available: {:?}", zoo_names());
+    };
+    let g = zoo_graph(zoo);
+    let (batch, sm, quota) = (
+        args.get_usize("batch") as u32,
+        args.get_f64("sm"),
+        args.get_f64("quota"),
+    );
+
+    let pm = PerfModel::default();
+    let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone())?;
+    let dippm = DippmPredictor::load(&dir.join("dippm_weights.json"), pm.clone())?;
+
+    let truth = pm.latency(&g, batch, sm, quota);
+    let p_rapp = rapp.latency(&g, batch, sm, quota);
+    let p_dippm = dippm.latency(&g, batch, sm, quota);
+
+    // The same prediction through the AOT-compiled HLO (PJRT path).
+    let runtime = Arc::new(PjrtRuntime::new()?);
+    let pjrt = PjrtRapp::new(
+        runtime,
+        dir.join("rapp.hlo.txt"),
+        rapp.weights.mode.f_op(),
+        rapp.weights.mode.f_g(),
+    );
+    let feats = extract(&g, batch, sm, quota, &pm, FeatureMode::Full);
+    let p_hlo = (pjrt.forward(&feats)? as f64).exp() / 1e3;
+
+    println!("{model} @ batch={batch} sm={sm:.2} quota={quota:.2}");
+    println!("  ground truth         : {:8.3} ms", truth * 1e3);
+    println!(
+        "  RaPP (native rust)   : {:8.3} ms  ({:+.1}%)",
+        p_rapp * 1e3,
+        (p_rapp / truth - 1.0) * 100.0
+    );
+    println!(
+        "  RaPP (PJRT HLO)      : {:8.3} ms  ({:+.1}%)",
+        p_hlo * 1e3,
+        (p_hlo / truth - 1.0) * 100.0
+    );
+    println!(
+        "  DIPPM (static-only)  : {:8.3} ms  ({:+.1}%)",
+        p_dippm * 1e3,
+        (p_dippm / truth - 1.0) * 100.0
+    );
+    println!(
+        "  throughput capability: {:8.1} req/s  (paper: C = batch x quota / t_raw)",
+        rapp.capacity(&g, batch, sm, quota)
+    );
+    Ok(())
+}

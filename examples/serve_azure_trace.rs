@@ -1,0 +1,147 @@
+//! End-to-end driver (DESIGN.md §5): serve a compressed Azure-style trace
+//! through the full real-mode stack — every request executes the AOT HLO
+//! (JAX L2 + Pallas L1) via PJRT, gated by vGPU time tokens, scaled by the
+//! hybrid autoscaler — and report latency / throughput / SLO / cost.
+//!
+//!     make artifacts && cargo run --release --example serve_azure_trace -- --seconds 60
+//!
+//! Results for the recorded run live in EXPERIMENTS.md.
+
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig};
+use has_gpu::cluster::FunctionSpec;
+use has_gpu::gateway::{Server, ServerConfig};
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::rapp::{OraclePredictor, RappPredictor};
+use has_gpu::util::cli::Cli;
+use has_gpu::util::prng::Pcg64;
+use has_gpu::workload::{Preset, TraceGen};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("serve_azure_trace", "real-mode trace serving demo")
+        .opt("seconds", "45", "trace length in (real) seconds")
+        .opt("rps", "60", "mean request rate")
+        .opt("seed", "7", "workload seed")
+        .flag("oracle", "use the perf-model oracle instead of trained RaPP")
+        .parse();
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    // Three real servable functions mapped to zoo graphs for control-plane
+    // accounting.
+    let functions = vec![
+        FunctionSpec {
+            name: "cnn_s".into(),
+            graph: zoo_graph(ZooModel::MobileNetV2),
+            slo: 0.4,
+            batch: 8,
+            artifact: None,
+        },
+        FunctionSpec {
+            name: "mlp_s".into(),
+            graph: zoo_graph(ZooModel::DlrmSmall),
+            slo: 0.3,
+            batch: 16,
+            artifact: None,
+        },
+        FunctionSpec {
+            name: "attn_s".into(),
+            graph: zoo_graph(ZooModel::BertTiny),
+            slo: 0.4,
+            batch: 8,
+            artifact: None,
+        },
+    ];
+    let input_dims = [("cnn_s", 3 * 32 * 32), ("mlp_s", 784), ("attn_s", 16 * 32)];
+
+    // Predictor: trained RaPP (the paper's control loop) or the oracle.
+    let predictor: Arc<dyn has_gpu::rapp::LatencyPredictor> = if args.has_flag("oracle") {
+        Arc::new(OraclePredictor::default())
+    } else {
+        Arc::new(RappPredictor::load(
+            &dir.join("rapp_weights.json"),
+            has_gpu::perf::PerfModel::default(),
+        )?)
+    };
+
+    let server = Server::start(
+        &dir,
+        functions.clone(),
+        Box::new(HybridAutoscaler::new(HybridConfig {
+            cooldown: 5.0,
+            ..HybridConfig::default()
+        })),
+        predictor,
+        ServerConfig {
+            n_gpus: 2,
+            tick: Duration::from_millis(500),
+            ..ServerConfig::default()
+        },
+    )?;
+
+    // Synthesize a compressed Azure-style trace and replay it open-loop.
+    let seconds = args.get_usize("seconds");
+    let names: Vec<&str> = functions.iter().map(|f| f.name.as_str()).collect();
+    let trace = TraceGen::preset(Preset::Standard, args.get_u64("seed"), seconds, args.get_f64("rps"))
+        .generate(&names);
+    println!("replaying {seconds}s trace (open loop)…");
+    let mut rng = Pcg64::seeded(args.get_u64("seed"));
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut sent = 0u64;
+    for sec in 0..seconds {
+        for f in &functions {
+            let dim = input_dims.iter().find(|(n, _)| *n == f.name).unwrap().1;
+            for at in trace.arrivals(&f.name, sec, &mut rng) {
+                // Busy-wait-free pacing.
+                let target = Duration::from_secs_f64(at);
+                if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+                    std::thread::sleep(sleep);
+                }
+                pending.push(server.submit(&f.name, vec![0.3f32; dim]));
+                sent += 1;
+            }
+        }
+        pending.retain(|rx| rx.try_recv().is_err());
+        if sec % 10 == 9 {
+            println!(
+                "t={:3}s sent={sent} in-flight={} pods={:?}",
+                sec + 1,
+                pending.len(),
+                server.pod_layout().len()
+            );
+        }
+    }
+    std::thread::sleep(Duration::from_secs(2));
+
+    let report = server.report();
+    println!("\n=== end-to-end real-mode results ({:.1}s) ===", report.duration);
+    for f in &functions {
+        let m = &report.functions[&f.name];
+        let mut s = m.latency_summary();
+        if s.is_empty() {
+            continue;
+        }
+        println!(
+            "{:8} served={:6} p50={:6.1}ms p95={:7.1}ms p99={:7.1}ms slo-viol={:.3} cost/1k=${:.4}",
+            f.name,
+            m.served(),
+            s.p50() * 1e3,
+            s.p95() * 1e3,
+            s.p99() * 1e3,
+            m.violation_rate(f.slo),
+            report.costs.cost_per_1k(&f.name, m.served()),
+        );
+    }
+    println!(
+        "throughput={:.1} req/s  vertical-ups={}  horizontal-ups={}  total-cost=${:.5}",
+        report.total_served() as f64 / report.duration,
+        report.vertical_ups,
+        report.horizontal_ups,
+        report.costs.total_cost()
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,251 @@
+"""AOT compilation driver: Python runs ONCE here; the Rust binary is
+self-contained afterwards.
+
+Produces into the artifacts directory:
+
+  models/<name>_b<batch>.hlo.txt   — servable L2 models (Pallas L1 inside)
+  rapp.hlo.txt                     — trained RaPP forward (Pallas GAT kernel)
+  rapp_weights.json / dippm_weights.json / rapp_meta.json
+  golden/perf_golden.json          — cross-language perf-model + feature +
+                                     predictor parity pins
+  manifest.json                    — index consumed by rust runtime::Manifest
+
+Interchange is HLO *text*: jax ≥ 0.5 serialises HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import features as feat
+from . import model as models
+from .opgraph import golden_graph
+from .perfsim import PROFILE_SMS, PerfModel
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big weight literals
+    # as "{...}", which the HLO text parser on the Rust side silently turns
+    # into garbage — weights MUST be printed in full.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_servables(out: pathlib.Path, log) -> list[dict]:
+    (out / "models").mkdir(parents=True, exist_ok=True)
+    entries = []
+    for name, (input_dim, output_dim) in models.SERVABLE_MODELS.items():
+        params = models.init_params(name)
+        fn = models.MODEL_FNS[name]
+        for batch in models.SERVABLE_BATCHES:
+            spec = jax.ShapeDtypeStruct((batch, input_dim), jnp.float32)
+            lowered = jax.jit(lambda x, fn=fn, params=params: (fn(params, x),)).lower(spec)
+            text = to_hlo_text(lowered)
+            rel = f"models/{name}_b{batch}.hlo.txt"
+            (out / rel).write_text(text)
+            entries.append(
+                {
+                    "name": name,
+                    "path": rel,
+                    "batch": batch,
+                    "input_dim": input_dim,
+                    "output_dim": output_dim,
+                }
+            )
+            log(f"  lowered {rel} ({len(text) / 1e3:.0f} KB)")
+    return entries
+
+
+def lower_rapp(out: pathlib.Path, params, log) -> str:
+    """Lower the trained RaPP forward (with the fused Pallas GAT kernel and
+    baked-in weights) to HLO text for the Rust PjrtRapp."""
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    f_op = int(jparams["gat1_w"].shape[0])
+    f_g = int(jparams["mlp_g_w"].shape[0])
+    n = feat.MAX_NODES
+
+    from .train_rapp import RESIDUAL_COL
+
+    def fwd(x, adj, mask, gfeats):
+        y = models.rapp_forward(
+            jparams, x, adj, mask, gfeats, use_pallas=True, residual_col=RESIDUAL_COL
+        )
+        return (jnp.reshape(y, (1,)),)
+
+    specs = (
+        jax.ShapeDtypeStruct((n, f_op), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((f_g,), jnp.float32),
+    )
+    lowered = jax.jit(fwd).lower(*specs)
+    text = to_hlo_text(lowered)
+    (out / "rapp.hlo.txt").write_text(text)
+    log(f"  lowered rapp.hlo.txt ({len(text) / 1e3:.0f} KB)")
+    return "rapp.hlo.txt"
+
+
+def write_golden(out: pathlib.Path, rapp_params, log) -> None:
+    """Cross-language parity pins. See rust/tests/artifact_parity.rs."""
+    gdir = out / "golden"
+    gdir.mkdir(parents=True, exist_ok=True)
+    perf = PerfModel()
+    g = golden_graph()
+
+    configs = []
+    for batch, sm, quota in [
+        (1, 1.0, 1.0),
+        (1, 0.5, 0.5),
+        (4, 0.5, 0.6),
+        (8, 0.25, 0.3),
+        (16, 0.1, 0.9),
+        (32, 0.05, 0.05),
+        (32, 1.0, 0.2),
+    ]:
+        configs.append(
+            {
+                "batch": batch,
+                "sm": sm,
+                "quota": quota,
+                "latency": perf.latency(g, batch, sm, quota),
+                "raw_time": perf.raw_graph_time(g, batch, sm),
+                "capacity": perf.capacity(g, batch, sm, quota),
+            }
+        )
+    op_times = [
+        [perf.op_time(node, 4, smp) for smp in PROFILE_SMS] for node in g.nodes
+    ]
+    op_f, g_f, _edges = feat.extract(g, 4, 0.5, 0.6, perf, "rapp")
+
+    # Predictor parity: ref (= rust native semantics) forward on raw features.
+    preds = []
+    if rapp_params is not None:
+        x, adj, mask = feat.pad_for_hlo(op_f, _edges, feat.F_OP_FULL)
+        from .train_rapp import RESIDUAL_COL
+
+        y = models.rapp_forward(
+            {k: jnp.asarray(v) for k, v in rapp_params.items()},
+            x,
+            adj,
+            mask,
+            jnp.asarray(g_f),
+            use_pallas=False,
+            residual_col=RESIDUAL_COL,
+        )
+        preds.append(
+            {"batch": 4, "sm": 0.5, "quota": 0.6, "ln_latency_ms": float(y)}
+        )
+
+    doc = {
+        "graph": g.to_json(),
+        "configs": configs,
+        "profile_batch": 4,
+        "op_times": op_times,
+        "features_config": {"batch": 4, "sm": 0.5, "quota": 0.6},
+        "op_features": np.asarray(op_f, dtype=np.float64).tolist(),
+        "graph_features": np.asarray(g_f, dtype=np.float64).tolist(),
+        "rapp_preds": preds,
+    }
+    (gdir / "perf_golden.json").write_text(json.dumps(doc))
+    log(f"  wrote golden/perf_golden.json ({len(g.nodes)} nodes, {len(configs)} configs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--graphs", type=int, default=120)
+    ap.add_argument("--configs-per-graph", type=int, default=110)
+    ap.add_argument("--seed", type=int, default=20260710)
+    ap.add_argument(
+        "--skip-train",
+        action="store_true",
+        help="reuse existing rapp_weights.json instead of retraining",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out).resolve()
+    out.mkdir(parents=True, exist_ok=True)
+    log = print
+    t0 = time.time()
+
+    log("[aot] lowering servable models …")
+    entries = lower_servables(out, log)
+
+    rapp_params = None
+    if args.skip_train and (out / "rapp_weights.json").exists():
+        log("[aot] --skip-train: loading existing rapp_weights.json")
+        doc = json.loads((out / "rapp_weights.json").read_text())
+        rapp_params = weights_to_params(doc)
+    else:
+        log("[aot] training RaPP + DIPPM …")
+        from .train_rapp import run_training
+
+        rapp_params, _meta = run_training(
+            out,
+            epochs=args.epochs,
+            n_graphs=args.graphs,
+            configs_per_graph=args.configs_per_graph,
+            seed=args.seed,
+            log=log,
+        )
+
+    log("[aot] exporting RaPP HLO …")
+    rapp_rel = lower_rapp(out, rapp_params, log)
+
+    log("[aot] writing golden parity files …")
+    write_golden(out, rapp_params, log)
+
+    manifest = {
+        "models": entries,
+        "rapp_hlo": rapp_rel,
+        "rapp_weights": "rapp_weights.json",
+        "dippm_weights": "dippm_weights.json",
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    log(f"[aot] done in {time.time() - t0:.0f}s → {out}")
+
+
+def weights_to_params(doc: dict) -> dict:
+    """Inverse of train_rapp.export_weights (row-major [n_in, n_out])."""
+    arch = doc["arch"]
+    f_op, f_g, h = arch["f_op"], arch["f_g"], arch["hidden"]
+    def mat(d, n_in, n_out):
+        return np.array(d["w"], dtype=np.float32).reshape(n_in, n_out)
+    p = {
+        "op_mean": np.array(doc["norm"]["op_mean"], dtype=np.float32),
+        "op_std": np.array(doc["norm"]["op_std"], dtype=np.float32),
+        "g_mean": np.array(doc["norm"]["g_mean"], dtype=np.float32),
+        "g_std": np.array(doc["norm"]["g_std"], dtype=np.float32),
+        "gat1_w": mat(doc["gat1"], f_op, h),
+        "gat1_b": np.array(doc["gat1"]["b"], dtype=np.float32),
+        "gat1_asrc": np.array(doc["gat1"]["a_src"], dtype=np.float32),
+        "gat1_adst": np.array(doc["gat1"]["a_dst"], dtype=np.float32),
+        "gat2_w": mat(doc["gat2"], h, h),
+        "gat2_b": np.array(doc["gat2"]["b"], dtype=np.float32),
+        "gat2_asrc": np.array(doc["gat2"]["a_src"], dtype=np.float32),
+        "gat2_adst": np.array(doc["gat2"]["a_dst"], dtype=np.float32),
+        "mlp_g_w": mat(doc["mlp_g"], f_g, h),
+        "mlp_g_b": np.array(doc["mlp_g"]["b"], dtype=np.float32),
+        "head1_w": mat(doc["head1"], 2 * h, h),
+        "head1_b": np.array(doc["head1"]["b"], dtype=np.float32),
+        "head2_w": mat(doc["head2"], h, 1),
+        "head2_b": np.array(doc["head2"]["b"], dtype=np.float32),
+    }
+    return p
+
+
+if __name__ == "__main__":
+    main()

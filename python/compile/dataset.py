@@ -1,0 +1,130 @@
+"""RaPP training corpus (build-time).
+
+Stands in for the paper's 53,400-sample PyTorch-model latency dataset: random
+model graphs from the benchmark's families × random (batch, SM, quota)
+configurations, labelled by the ground-truth perf model plus measurement
+noise (the paper's labels come from real profiling runs, which also carry
+run-to-run noise).
+
+Storage is factored to keep the corpus small: per-(graph, batch) operator
+feature blocks and per-graph adjacency are stored once; samples reference
+them by index.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .features import F_G_FULL, F_OP_FULL, extract, pad_for_hlo
+from .opgraph import MAX_NODES, OpGraph, sample_graph
+from .perfsim import PerfModel
+
+BATCH_CHOICES = [1, 2, 4, 8, 16, 32]
+SM_GRID = [round(0.05 * i, 2) for i in range(1, 21)]
+QUOTA_GRID = [round(0.05 * i, 2) for i in range(1, 21)]
+
+
+@dataclass
+class Corpus:
+    """Factored dataset."""
+
+    # Per (graph,batch) block index.
+    op_feats: list[np.ndarray] = field(default_factory=list)  # [64, F_OP] padded
+    adj: list[np.ndarray] = field(default_factory=list)  # [64, 64] per graph
+    mask: list[np.ndarray] = field(default_factory=list)  # [64] per (graph,batch)? per graph
+    # Samples: (block_idx, graph_idx, gfeats [F_G], y = ln(latency_ms))
+    sample_block: list[int] = field(default_factory=list)
+    sample_graph: list[int] = field(default_factory=list)
+    gfeats: list[np.ndarray] = field(default_factory=list)
+    y: list[float] = field(default_factory=list)
+
+    def arrays(self, idx: np.ndarray):
+        """Gather padded batch tensors for sample indices `idx`."""
+        blocks = np.array([self.sample_block[i] for i in idx])
+        graphs = np.array([self.sample_graph[i] for i in idx])
+        x = np.stack([self.op_feats[b] for b in blocks])
+        a = np.stack([self.adj[g] for g in graphs])
+        m = np.stack([self.mask[g] for g in graphs])
+        g = np.stack([self.gfeats[i] for i in idx])
+        yy = np.array([self.y[i] for i in idx], dtype=np.float32)
+        return x, a, m, g, yy
+
+    def __len__(self) -> int:
+        return len(self.y)
+
+
+def build_corpus(
+    graphs: list[OpGraph],
+    configs_per_graph: int,
+    perf: PerfModel,
+    seed: int,
+    noise_sigma: float = 0.03,
+) -> Corpus:
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    corpus = Corpus()
+    op_cache: dict = {}
+    graph_cache: dict = {}
+    block_of: dict[tuple[int, int], int] = {}  # (graph_idx, batch) -> block
+
+    for gi, g in enumerate(graphs):
+        # Per-graph adjacency + mask (batch-independent).
+        of0, _, edges = extract(g, 1, 1.0, 1.0, perf, "rapp", op_cache, graph_cache)
+        _, adj, mask = pad_for_hlo(of0, edges, F_OP_FULL)
+        corpus.adj.append(adj)
+        corpus.mask.append(mask)
+        for _ in range(configs_per_graph):
+            batch = rng.choice(BATCH_CHOICES)
+            sm = rng.choice(SM_GRID)
+            quota = rng.choice(QUOTA_GRID)
+            key = (gi, batch)
+            if key not in block_of:
+                of, _, _ = extract(g, batch, sm, quota, perf, "rapp", op_cache, graph_cache)
+                x, _, _ = pad_for_hlo(of, edges, F_OP_FULL)
+                block_of[key] = len(corpus.op_feats)
+                corpus.op_feats.append(x)
+            # Graph features depend on (batch, sm, quota).
+            _, gf, _ = extract(g, batch, sm, quota, perf, "rapp", op_cache, graph_cache)
+            latency = perf.latency(g, batch, sm, quota)
+            noisy = latency * math.exp(nrng.normal(0.0, noise_sigma))
+            corpus.sample_block.append(block_of[key])
+            corpus.sample_graph.append(gi)
+            corpus.gfeats.append(gf)
+            corpus.y.append(math.log(noisy * 1e3))
+    return corpus
+
+
+def make_graphs(n: int, seed: int) -> list[OpGraph]:
+    rng = random.Random(seed)
+    return [sample_graph(rng, i) for i in range(n)]
+
+
+def normalization(corpus: Corpus):
+    """Masked mean/std for op features; mean/std for graph features."""
+    xs = np.stack(corpus.op_feats)  # [B, 64, F]
+    # A block's live rows = rows with any nonzero one-hot.
+    live = xs[..., : 12].sum(axis=-1) > 0
+    flat = xs[live]
+    op_mean = flat.mean(axis=0)
+    op_std = np.maximum(flat.std(axis=0), 1e-3)
+    gs = np.stack(corpus.gfeats)
+    g_mean = gs.mean(axis=0)
+    g_std = np.maximum(gs.std(axis=0), 1e-3)
+    return (
+        op_mean.astype(np.float32),
+        op_std.astype(np.float32),
+        g_mean.astype(np.float32),
+        g_std.astype(np.float32),
+    )
+
+
+def split_indices(n: int, seed: int, frac=(0.8, 0.1, 0.1)):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    n_train = int(frac[0] * n)
+    n_val = int(frac[1] * n)
+    return idx[:n_train], idx[n_train : n_train + n_val], idx[n_train + n_val :]

@@ -1,0 +1,184 @@
+"""RaPP feature extraction — exact mirror of ``rust/src/rapp/features.rs``.
+
+Layout contract (FeatureMode::Full):
+  op features  (27): one-hot kind (12) | ln1p(flops·b/1e6) | ln1p(bytes/1e6)
+                     | ln1p(params/1e6) | kernel/7 | stride/4 | cin/1024
+                     | cout/1024 | spatial/256 | log2(b)/5
+                     | 6 × ln1p(op_time(sm_p)·1e3)   [PROFILE_SMS, full quota]
+  graph features (15): ln1p(Σflops/1e9) | ln1p(Σbytes/1e9) | ln1p(params/1e6)
+                     | n_ops/64 | n_conv/32 | n_dense+matmul/32 | depth/64
+                     | log2(b)/5 | sm | quota
+                     | 5 × ln1p(latency(q_p)·1e3)    [PROFILE_QUOTAS, full SM]
+
+StaticOnly (the DIPPM baseline) drops the runtime-prior columns.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .opgraph import KIND_INDEX, MAX_NODES, NUM_OP_KINDS, OpGraph
+from .perfsim import PROFILE_QUOTAS, PROFILE_SMS, PerfModel
+
+F_OP_STATIC = NUM_OP_KINDS + 9  # 21
+F_OP_RUNTIME = len(PROFILE_SMS)  # 6
+F_G_STATIC = 10
+# Graph runtime priors: whole-graph latency at 5 quota probes (full SM), raw
+# graph time at the 6 SM probes (full quota) — the paper's two profiling
+# passes, aggregated to graph level — plus one derived **anchor** column: the
+# separable analytic estimate ln(raw(sm)) + ln(dilation(q)) interpolated from
+# the probes. The predictor head regresses the residual against this anchor.
+F_G_RUNTIME = len(PROFILE_QUOTAS) + len(PROFILE_SMS) + 1  # 12
+
+F_OP_FULL = F_OP_STATIC + F_OP_RUNTIME  # 27
+F_G_FULL = F_G_STATIC + F_G_RUNTIME  # 22
+
+
+def f_dims(mode: str) -> tuple[int, int]:
+    if mode == "rapp":
+        return F_OP_FULL, F_G_FULL
+    if mode == "dippm":
+        return F_OP_STATIC, F_G_STATIC
+    raise ValueError(mode)
+
+
+def extract(
+    g: OpGraph,
+    batch: int,
+    sm: float,
+    quota: float,
+    perf: PerfModel,
+    mode: str = "rapp",
+    op_profile_cache: dict | None = None,
+    graph_profile_cache: dict | None = None,
+):
+    """Returns (op_feats [n, F_OP] f32, graph_feats [F_G] f32, edges)."""
+    full = mode == "rapp"
+    b = float(batch)
+    n = len(g.nodes)
+    f_op, f_g = f_dims(mode)
+    op = np.zeros((n, f_op), dtype=np.float32)
+    for i, node in enumerate(g.nodes):
+        op[i, KIND_INDEX[node.kind]] = 1.0
+        op[i, 12] = math.log1p(node.flops * b / 1e6)
+        op[i, 13] = math.log1p((node.bytes * b + 4.0 * node.params) / 1e6)
+        op[i, 14] = math.log1p(node.params / 1e6)
+        op[i, 15] = node.kernel / 7.0
+        op[i, 16] = node.stride / 4.0
+        op[i, 17] = node.cin / 1024.0
+        op[i, 18] = node.cout / 1024.0
+        op[i, 19] = node.spatial / 256.0
+        op[i, 20] = math.log2(b) / 5.0
+    if full:
+        key = (g.name, batch)
+        prof = None if op_profile_cache is None else op_profile_cache.get(key)
+        if prof is None:
+            prof = np.array(
+                [
+                    [math.log1p(perf.op_time(node, batch, smp) * 1e3) for smp in PROFILE_SMS]
+                    for node in g.nodes
+                ],
+                dtype=np.float32,
+            )
+            if op_profile_cache is not None:
+                op_profile_cache[key] = prof
+        op[:, 21:27] = prof
+
+    gf = np.zeros(f_g, dtype=np.float32)
+    gf[0] = math.log1p(g.total_flops(batch) / 1e9)
+    gf[1] = math.log1p(g.total_bytes(batch) / 1e9)
+    gf[2] = math.log1p(g.total_params() / 1e6)
+    gf[3] = n / 64.0
+    gf[4] = g.count_kind("conv2d") / 32.0
+    gf[5] = (g.count_kind("dense") + g.count_kind("matmul")) / 32.0
+    gf[6] = g.depth() / 64.0
+    gf[7] = math.log2(b) / 5.0
+    gf[8] = sm
+    gf[9] = quota
+    if full:
+        key = (g.name, batch)
+        gprof = None if graph_profile_cache is None else graph_profile_cache.get(key)
+        if gprof is None:
+            gprof = np.array(
+                [math.log1p(perf.latency(g, batch, 1.0, qp) * 1e3) for qp in PROFILE_QUOTAS]
+                + [
+                    math.log1p(perf.raw_graph_time(g, batch, smp) * 1e3)
+                    for smp in PROFILE_SMS
+                ],
+                dtype=np.float32,
+            )
+            if graph_profile_cache is not None:
+                graph_profile_cache[key] = gprof
+        gf[10:21] = gprof
+        gf[21] = anchor(g, op[:, 21:27], sm, quota, perf.dev.window)
+    return op, gf, list(g.edges)
+
+
+def _interp(xs, ys, x: float) -> float:
+    """Piecewise-linear interpolation with end clamping (mirrors rust)."""
+    if x <= xs[0]:
+        return ys[0]
+    if x >= xs[-1]:
+        return ys[-1]
+    for i in range(len(xs) - 1):
+        if x <= xs[i + 1]:
+            t = (x - xs[i]) / (xs[i + 1] - xs[i])
+            return ys[i] * (1.0 - t) + ys[i + 1] * t
+    return ys[-1]
+
+
+def anchor(g: OpGraph, op_prof, sm: float, quota: float, window: float) -> float:
+    """Probe-based analytic latency estimate: interpolate each op's profiled
+    time (the 6 SM probes, columns 21..27 of the op features) to the query
+    SM in ln-ln space, then replay the scheduler's own token-window
+    mechanics (no-debt, kernel granularity — the system knows its window).
+    The GNN head regresses the residual against this anchor: interpolation
+    error near roofline kinks plus cross-model generalisation.
+
+    Mirrors rust rapp::features::anchor exactly."""
+    ln_sms = [math.log(s) for s in PROFILE_SMS]
+    ln_sm = math.log(min(max(sm, 1e-3), 1.0))
+    now = 0.0
+    budget = quota * window
+    boundary = window
+    for i, node in enumerate(g.nodes):
+        ln_t = _interp(ln_sms, [float(v) for v in op_prof[i]], ln_sm)
+        t_est = math.expm1(ln_t) / 1e3  # invert ln1p(ms)
+        k = max(node.kernels, 1)
+        d = t_est / k
+        for _ in range(k):
+            if boundary <= now:
+                skipped = (now - boundary) // window + 1.0
+                boundary += skipped * window
+                budget = quota * window
+            if budget <= 0.0:
+                now = boundary
+                boundary += window
+                budget = quota * window
+            now += d
+            budget -= d
+    # ln(ms), matching the regression target's transform exactly.
+    return math.log(max(now * 1e3, 1e-9))
+
+
+def pad_for_hlo(op_feats: np.ndarray, edges, f_op: int):
+    """Pad to the fixed RAPP_MAX_NODES shapes consumed by the AOT HLO:
+    x [64, F_OP], adj [64, 64] (symmetrised + self-loops on live nodes),
+    mask [64]."""
+    n = op_feats.shape[0]
+    assert n <= MAX_NODES
+    x = np.zeros((MAX_NODES, f_op), dtype=np.float32)
+    x[:n] = op_feats
+    adj = np.zeros((MAX_NODES, MAX_NODES), dtype=np.float32)
+    # Self-loops on EVERY row (including padding) keep the masked softmax
+    # well-defined in training gradients; padded rows are excluded from the
+    # pooled output by `mask` regardless. Mirrored in rust runtime::PjrtRapp.
+    np.fill_diagonal(adj, 1.0)
+    for s, d in edges:
+        adj[d, s] = 1.0
+        adj[s, d] = 1.0
+    mask = np.zeros(MAX_NODES, dtype=np.float32)
+    mask[:n] = 1.0
+    return x, adj, mask

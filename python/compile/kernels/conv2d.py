@@ -1,0 +1,44 @@
+"""L1: conv2d as im2col + the tiled Pallas matmul.
+
+The paper's GPU kernels tile convolutions over threadblocks; on TPU the same
+insight — turn the convolution into a dense MXU contraction — is expressed as
+im2col patch extraction (a layout transform XLA fuses into the surrounding
+HLO) followed by the 128×128-tiled Pallas matmul, which is where the FLOPs
+land. NHWC layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: str = "SAME",
+    activation: str | None = None,
+) -> jnp.ndarray:
+    """x: [B, H, W, Cin], w: [kh, kw, Cin, Cout], b: [Cout]."""
+    bsz, h, wdt, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2
+    # Patch extraction (im2col). Output: [B, Ho, Wo, kh*kw*cin] with the
+    # feature dim ordered (cin, kh, kw) — see lax docs.
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    _, ho, wo, pdim = patches.shape
+    cols = patches.reshape(bsz * ho * wo, pdim)
+    # Weight matrix in the matching (cin, kh, kw) order.
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(pdim, cout)
+    out = matmul(cols, wmat, bias=b, activation=activation)
+    return out.reshape(bsz, ho, wo, cout)

@@ -1,0 +1,69 @@
+"""L1: fused GAT attention-aggregation Pallas kernel (RaPP's GNN hot-spot).
+
+One kernel step computes, for the whole padded graph (RAPP_MAX_NODES = 64):
+
+    h      = x @ W + b                      (MXU contraction)
+    e_ij   = leaky_relu(a_src·h_i + a_dst·h_j)   masked by adj
+    alpha  = softmax_j(e_ij)                (row-wise, masked)
+    out_i  = elu(Σ_j alpha_ij · h_j)        (second MXU contraction)
+
+The whole working set (64×64 attention matrix + 64×H features) is a few KiB —
+a single VMEM-resident block, so the fusion saves three HBM round-trips vs.
+the unfused reference. Semantics mirror ``rust/src/rapp/nn.rs`` exactly
+(LeakyReLU slope 0.2, ELU output, softmax over in-neighbours ∪ self).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _gat_kernel(x_ref, adj_ref, w_ref, b_ref, asrc_ref, adst_ref, o_ref):
+    x = x_ref[...]  # [N, F]
+    adj = adj_ref[...]  # [N, N]; adj[i, j] = 1 ⇒ j is a neighbour of i
+    h = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...][None, :]
+    s_src = jnp.sum(h * asrc_ref[...][None, :], axis=1)  # [N]
+    s_dst = jnp.sum(h * adst_ref[...][None, :], axis=1)  # [N]
+    e = s_src[:, None] + s_dst[None, :]
+    e = jnp.where(e >= 0.0, e, 0.2 * e)  # LeakyReLU(0.2)
+    e = jnp.where(adj > 0.0, e, NEG_INF)
+    # Stable masked softmax over rows.
+    m = jnp.max(e, axis=1, keepdims=True)
+    p = jnp.exp(e - m) * (adj > 0.0)
+    z = jnp.sum(p, axis=1, keepdims=True)
+    alpha = p / jnp.maximum(z, 1e-30)
+    out = jnp.dot(alpha, h, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(out >= 0.0, out, jnp.exp(jnp.minimum(out, 0.0)) - 1.0)  # ELU
+
+
+def gat_layer(
+    x: jnp.ndarray,
+    adj: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    a_src: jnp.ndarray,
+    a_dst: jnp.ndarray,
+) -> jnp.ndarray:
+    """x: [N, F], adj: [N, N] (self-loops included on live rows),
+    w: [F, H], b/a_src/a_dst: [H] → [N, H]."""
+    n, f = x.shape
+    h = w.shape[1]
+    return pl.pallas_call(
+        _gat_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, f), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, h), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), jnp.float32),
+        interpret=True,
+    )(x, adj, w, b, a_src, a_dst)

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: tiled matmul (+ fused bias / activation epilogue).
+
+This is the compute hot-spot of every L2 model (dense layers, im2col convs,
+attention projections). TPU-oriented design (DESIGN.md §Hardware-Adaptation):
+
+* the grid tiles M×N into MXU-shaped 128×128 output blocks; each grid step
+  keeps an (bm×K) LHS stripe and a (K×bn) RHS stripe in VMEM — the analogue
+  of staging CUDA shared-memory tiles per threadblock;
+* K is kept whole per block (our serving models have K ≤ 4096, so the
+  VMEM footprint per step is ≤ 128·4096·4 B ≈ 2 MiB per operand — fits the
+  16 MiB VMEM budget with double-buffering headroom);
+* the epilogue (bias add + ReLU/GELU) is fused into the same kernel, saving
+  one HBM round-trip per layer.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default block edge.
+BLOCK = 128
+
+
+def _block_dim(d: int, target: int = BLOCK) -> int:
+    return d if d <= target else target
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _epilogue(acc, bias, activation):
+    if bias is not None:
+        acc = acc + bias[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation!r}")
+    return acc
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, *, activation, has_bias):
+    """One (bm, bn) output tile: full-K contraction + fused epilogue."""
+    x = x_ref[...]
+    y = y_ref[...]
+    acc = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue(acc, None, activation) if not has_bias else acc
+
+
+def _mm_bias_kernel(x_ref, y_ref, b_ref, o_ref, *, activation):
+    x = x_ref[...]
+    y = y_ref[...]
+    acc = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue(acc, b_ref[...], activation)
+
+
+def matmul(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    activation: str | None = None,
+) -> jnp.ndarray:
+    """``activation(x @ y + bias)`` as a tiled Pallas kernel.
+
+    x: [M, K] f32, y: [K, N] f32, bias: [N] f32 or None.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn = _block_dim(m), _block_dim(n)
+    mp = ((m + bm - 1) // bm) * bm
+    np_ = ((n + bn - 1) // bn) * bn
+    xp = _pad_to(x, mp, k)
+    yp = _pad_to(y, k, np_)
+    grid = (mp // bm, np_ // bn)
+
+    if bias is not None:
+        bp = jnp.pad(bias, (0, np_ - n)) if np_ != n else bias
+        out = pl.pallas_call(
+            functools.partial(_mm_bias_kernel, activation=activation),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+                pl.BlockSpec((bn,), lambda i, j: (j,)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, yp, bp)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_mm_kernel, activation=activation, has_bias=False),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, yp)
+    return out[:m, :n]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, activation: str | None = None):
+    """Dense layer over a batch: activation(x @ w + b)."""
+    return matmul(x, w, bias=b, activation=activation)

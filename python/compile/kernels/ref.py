@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the CORE correctness signal of the L1 layer: pytest sweeps shapes,
+strides and activations and asserts ``assert_allclose(kernel, ref)``. The
+reference GAT is also the differentiable forward used by RaPP *training*
+(the Pallas version is forward-only and ships in the AOT artifact; a parity
+test keeps the two within float tolerance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def matmul_ref(x, y, bias=None, activation=None):
+    out = x.astype(jnp.float32) @ y.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation is not None:
+        raise ValueError(activation)
+    return out
+
+
+def conv2d_ref(x, w, b=None, stride=1, padding="SAME", activation=None):
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b[None, None, None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    return out
+
+
+def gat_layer_ref(x, adj, w, b, a_src, a_dst):
+    """Masked single-head GAT layer; mirrors rust/src/rapp/nn.rs."""
+    h = x @ w + b[None, :]
+    s_src = h @ a_src
+    s_dst = h @ a_dst
+    e = s_src[:, None] + s_dst[None, :]
+    e = jnp.where(e >= 0.0, e, 0.2 * e)
+    e = jnp.where(adj > 0.0, e, NEG_INF)
+    m = jnp.max(e, axis=1, keepdims=True)
+    p = jnp.exp(e - m) * (adj > 0.0)
+    z = jnp.sum(p, axis=1, keepdims=True)
+    alpha = p / jnp.maximum(z, 1e-30)
+    out = alpha @ h
+    return jnp.where(out >= 0.0, out, jnp.exp(jnp.minimum(out, 0.0)) - 1.0)

@@ -1,0 +1,176 @@
+"""L2: the JAX models, built on the L1 Pallas kernels.
+
+Two groups:
+
+* **Servable inference functions** (`cnn_s`, `mlp_s`, `attn_s`) — the small
+  real models the Rust serving plane executes on the request path. Each takes
+  one flat `[batch, input_dim]` f32 tensor and returns `[batch, output_dim]`
+  logits; ``aot.py`` lowers every (model, batch) pair to HLO text.
+* **RaPP predictor forward** (`rapp_forward`) — the GAT + MLP latency
+  predictor (padded fixed shapes) used for the AOT RaPP artifact and,
+  through the differentiable ref-GAT variant, by ``train_rapp.py``.
+
+Weight init is deterministic (seeded) so artifacts are reproducible builds.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.conv2d import conv2d
+from .kernels.gat import gat_layer
+from .kernels.matmul import dense
+from .kernels.ref import gat_layer_ref
+
+# ---------------------------------------------------------------------------
+# Servable models
+# ---------------------------------------------------------------------------
+
+SERVABLE_MODELS = {
+    # name: (input_dim, output_dim)
+    "cnn_s": (3 * 32 * 32, 10),
+    "mlp_s": (784, 10),
+    "attn_s": (16 * 32, 10),
+}
+SERVABLE_BATCHES = [1, 4, 8, 16]
+
+
+def _init(rng: np.random.Generator, *shape) -> jnp.ndarray:
+    fan_in = shape[0] if len(shape) > 1 else 1
+    return jnp.array(
+        rng.normal(0.0, (2.0 / max(fan_in, 1)) ** 0.5, size=shape), dtype=jnp.float32
+    )
+
+
+def init_params(name: str, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed + hash(name) % 1000)
+    if name == "cnn_s":
+        return {
+            "c1_w": _init(rng, 3, 3, 3, 16),
+            "c1_b": jnp.zeros(16, jnp.float32),
+            "c2_w": _init(rng, 3, 3, 16, 32),
+            "c2_b": jnp.zeros(32, jnp.float32),
+            "fc_w": _init(rng, 8 * 8 * 32, 10),
+            "fc_b": jnp.zeros(10, jnp.float32),
+        }
+    if name == "mlp_s":
+        return {
+            "w1": _init(rng, 784, 256),
+            "b1": jnp.zeros(256, jnp.float32),
+            "w2": _init(rng, 256, 64),
+            "b2": jnp.zeros(64, jnp.float32),
+            "w3": _init(rng, 64, 10),
+            "b3": jnp.zeros(10, jnp.float32),
+        }
+    if name == "attn_s":
+        d = 32
+        return {
+            "wq": _init(rng, d, d),
+            "wk": _init(rng, d, d),
+            "wv": _init(rng, d, d),
+            "wo": _init(rng, d, d),
+            "fc_w": _init(rng, d, 10),
+            "fc_b": jnp.zeros(10, jnp.float32),
+        }
+    raise ValueError(name)
+
+
+def cnn_s(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Small CNN classifier over 32×32×3 inputs; convs are Pallas im2col
+    matmuls with fused bias+ReLU."""
+    b = x.shape[0]
+    img = x.reshape(b, 32, 32, 3)
+    h = conv2d(img, params["c1_w"], params["c1_b"], stride=2, activation="relu")
+    h = conv2d(h, params["c2_w"], params["c2_b"], stride=2, activation="relu")
+    h = h.reshape(b, -1)
+    return dense(h, params["fc_w"], params["fc_b"])
+
+
+def mlp_s(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """3-layer MLP; every layer is the fused Pallas dense kernel."""
+    h = dense(x, params["w1"], params["b1"], activation="relu")
+    h = dense(h, params["w2"], params["b2"], activation="relu")
+    return dense(h, params["w3"], params["b3"])
+
+
+def attn_s(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tiny single-head attention encoder over 16 tokens of width 32;
+    projections run through the Pallas matmul."""
+    b = x.shape[0]
+    seq, d = 16, 32
+    tok = x.reshape(b * seq, d)
+    q = dense(tok, params["wq"], jnp.zeros(d, jnp.float32)).reshape(b, seq, d)
+    k = dense(tok, params["wk"], jnp.zeros(d, jnp.float32)).reshape(b, seq, d)
+    v = dense(tok, params["wv"], jnp.zeros(d, jnp.float32)).reshape(b, seq, d)
+    att = jax.nn.softmax(jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(float(d)), axis=-1)
+    ctx = jnp.einsum("bst,btd->bsd", att, v).reshape(b * seq, d)
+    out = dense(ctx, params["wo"], jnp.zeros(d, jnp.float32)).reshape(b, seq, d)
+    pooled = out.mean(axis=1)
+    return dense(pooled, params["fc_w"], params["fc_b"])
+
+
+MODEL_FNS = {"cnn_s": cnn_s, "mlp_s": mlp_s, "attn_s": attn_s}
+
+
+# ---------------------------------------------------------------------------
+# RaPP predictor forward (shapes contract: runtime::PjrtRapp)
+# ---------------------------------------------------------------------------
+
+
+def rapp_forward(
+    params: dict, x, adj, mask, gfeats, *, use_pallas: bool = True, residual_col: int | None = None
+):
+    """Padded-graph forward: x [64, F_OP], adj [64, 64], mask [64],
+    gfeats [F_G] → scalar ln(latency_ms). Normalisation is baked in
+    (`params["op_mean"]`… come from training); the Rust PjrtRapp therefore
+    feeds RAW features.
+
+    With ``residual_col`` the head predicts a *correction* added to the raw
+    anchor feature (the full-SM full-quota profiled latency) — shrinking the
+    regression range from ~11 nats to the (sm, quota) adjustment. DIPPM has
+    no profile columns, hence no anchor (None).
+    """
+    gat = gat_layer if use_pallas else gat_layer_ref
+    xn = (x - params["op_mean"][None, :]) / params["op_std"][None, :]
+    xn = xn * mask[:, None]  # zero out padding rows
+    h1 = gat(xn, adj, params["gat1_w"], params["gat1_b"], params["gat1_asrc"], params["gat1_adst"])
+    h2 = gat(h1, adj, params["gat2_w"], params["gat2_b"], params["gat2_asrc"], params["gat2_adst"])
+    pooled = jnp.sum(h2 * mask[:, None], axis=0) / jnp.maximum(jnp.sum(mask), 1.0)
+    gn = (gfeats - params["g_mean"]) / params["g_std"]
+    gh = jnp.maximum(gn @ params["mlp_g_w"] + params["mlp_g_b"], 0.0)
+    cat = jnp.concatenate([pooled, gh])
+    hh = jnp.maximum(cat @ params["head1_w"] + params["head1_b"], 0.0)
+    out = hh @ params["head2_w"][:, 0] + params["head2_b"][0]
+    if residual_col is not None:
+        out = out + gfeats[residual_col]
+    return out
+
+
+def rapp_init(f_op: int, f_g: int, hidden: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    def w(*shape):
+        return _init(rng, *shape)
+    return {
+        "op_mean": jnp.zeros(f_op, jnp.float32),
+        "op_std": jnp.ones(f_op, jnp.float32),
+        "g_mean": jnp.zeros(f_g, jnp.float32),
+        "g_std": jnp.ones(f_g, jnp.float32),
+        "gat1_w": w(f_op, hidden),
+        "gat1_b": jnp.zeros(hidden, jnp.float32),
+        "gat1_asrc": w(hidden) * 0.3,
+        "gat1_adst": w(hidden) * 0.3,
+        "gat2_w": w(hidden, hidden),
+        "gat2_b": jnp.zeros(hidden, jnp.float32),
+        "gat2_asrc": w(hidden) * 0.3,
+        "gat2_adst": w(hidden) * 0.3,
+        "mlp_g_w": w(f_g, hidden),
+        "mlp_g_b": jnp.zeros(hidden, jnp.float32),
+        "head1_w": w(2 * hidden, hidden),
+        "head1_b": jnp.zeros(hidden, jnp.float32),
+        # Zero-init output head: with a residual anchor the initial
+        # prediction IS the anchor; training only learns corrections.
+        "head2_w": jnp.zeros((hidden, 1), jnp.float32),
+        "head2_b": jnp.zeros(1, jnp.float32),
+    }

@@ -1,0 +1,341 @@
+"""Operator-graph IR (Python mirror of ``rust/src/model/``) and the random
+model-graph sampler used to build the RaPP training corpus.
+
+The JSON schema, op-kind order, and every numeric formula are a cross-language
+contract with the Rust side; ``artifacts/golden/perf_golden.json`` pins both
+implementations (see ``aot.py::write_golden`` and
+``rust/tests/artifact_parity.rs``).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+# Op-kind order IS the one-hot feature layout — keep in sync with
+# rust/src/model/mod.rs::OpKind.
+OP_KINDS = [
+    "conv2d",
+    "dense",
+    "matmul",
+    "batch_norm",
+    "layer_norm",
+    "relu",
+    "gelu",
+    "softmax",
+    "pool",
+    "add",
+    "embed",
+    "attention",
+]
+NUM_OP_KINDS = len(OP_KINDS)
+KIND_INDEX = {k: i for i, k in enumerate(OP_KINDS)}
+
+# Shared with rust/src/model/builders.rs::MAX_NODES and runtime::RAPP_MAX_NODES.
+MAX_NODES = 64
+
+COMPUTE_BOUND = {"conv2d", "dense", "matmul", "attention"}
+
+
+@dataclass
+class OpNode:
+    kind: str
+    flops: float
+    bytes: float
+    params: float
+    kernels: int = 1
+    kernel: int = 0
+    stride: int = 0
+    cin: int = 0
+    cout: int = 0
+    spatial: int = 0
+
+
+@dataclass
+class OpGraph:
+    name: str
+    family: str
+    nodes: list[OpNode] = field(default_factory=list)
+    edges: list[tuple[int, int]] = field(default_factory=list)
+
+    # ---- aggregates (mirror rust OpGraph) --------------------------------
+
+    def total_flops(self, batch: int) -> float:
+        return sum(n.flops for n in self.nodes) * batch
+
+    def total_bytes(self, batch: int) -> float:
+        act = sum(n.bytes for n in self.nodes)
+        return act * batch + 4.0 * self.total_params()
+
+    def total_params(self) -> float:
+        return sum(n.params for n in self.nodes)
+
+    def count_kind(self, kind: str) -> int:
+        return sum(1 for n in self.nodes if n.kind == kind)
+
+    def depth(self) -> int:
+        d = [1] * len(self.nodes)
+        for s, t in self.edges:
+            d[t] = max(d[t], d[s] + 1)
+        return max(d) if d else 0
+
+    def validate(self) -> None:
+        for s, t in self.edges:
+            assert s < t < len(self.nodes), f"bad edge ({s},{t}) in {self.name}"
+        assert self.nodes, f"empty graph {self.name}"
+        assert len(self.nodes) <= MAX_NODES, f"{self.name}: {len(self.nodes)} nodes"
+
+    # ---- JSON (contract with rust OpGraph::{to,from}_json) ---------------
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "family": self.family,
+            "nodes": [
+                {
+                    "kind": n.kind,
+                    "flops": n.flops,
+                    "bytes": n.bytes,
+                    "params": n.params,
+                    "kernels": n.kernels,
+                    "kernel": n.kernel,
+                    "stride": n.stride,
+                    "cin": n.cin,
+                    "cout": n.cout,
+                    "spatial": n.spatial,
+                }
+                for n in self.nodes
+            ],
+            "edges": [[s, t] for s, t in self.edges],
+        }
+
+    @staticmethod
+    def from_json(j: dict) -> "OpGraph":
+        g = OpGraph(name=j["name"], family=j["family"])
+        for n in j["nodes"]:
+            g.nodes.append(
+                OpNode(
+                    kind=n["kind"],
+                    flops=float(n["flops"]),
+                    bytes=float(n["bytes"]),
+                    params=float(n["params"]),
+                    kernels=int(n["kernels"]),
+                    kernel=int(n["kernel"]),
+                    stride=int(n["stride"]),
+                    cin=int(n["cin"]),
+                    cout=int(n["cout"]),
+                    spatial=int(n["spatial"]),
+                )
+            )
+        g.edges = [(int(s), int(t)) for s, t in j["edges"]]
+        g.validate()
+        return g
+
+
+# ---- builder helpers (formulas mirror rust GraphBuilder) -------------------
+
+
+class Builder:
+    def __init__(self, name: str, family: str):
+        self.g = OpGraph(name=name, family=family)
+
+    def push(self, node: OpNode, deps: list[int]) -> int:
+        idx = len(self.g.nodes)
+        self.g.nodes.append(node)
+        for d in deps:
+            assert d < idx
+            self.g.edges.append((d, idx))
+        return idx
+
+    def conv(self, deps, k, cin, cout, out_side, stride, repeat=1) -> int:
+        out_elems = float(cout) * float(out_side) ** 2
+        flops = 2.0 * float(k) ** 2 * cin * out_elems * repeat
+        byts = 4.0 * (cin * (float(out_side) * stride) ** 2 + out_elems) * repeat
+        params = float(k) ** 2 * cin * cout * repeat
+        return self.push(
+            OpNode("conv2d", flops, byts, params, max(repeat, 1), k, stride, cin, cout, out_side),
+            deps,
+        )
+
+    def dense(self, deps, nin, nout) -> int:
+        return self.push(
+            OpNode(
+                "dense",
+                2.0 * nin * nout,
+                4.0 * (nin + nout),
+                float(nin) * nout + nout,
+                1,
+                0,
+                0,
+                nin,
+                nout,
+                1,
+            ),
+            deps,
+        )
+
+    def elemwise(self, deps, kind, elems, params=0.0, kernels=1) -> int:
+        fpe = {"gelu": 8.0, "softmax": 5.0, "layer_norm": 4.0, "batch_norm": 4.0}.get(kind, 1.0)
+        n = OpNode(kind, fpe * elems, 8.0 * elems, params, max(kernels, 1))
+        return self.push(n, deps)
+
+    def pool(self, deps, c, side, window) -> int:
+        elems = float(c) * float(side) ** 2
+        return self.push(
+            OpNode(
+                "pool",
+                elems * float(window) ** 2,
+                4.0 * elems * (float(window) ** 2 + 1.0),
+                0.0,
+                1,
+                window,
+                window,
+                c,
+                c,
+                side,
+            ),
+            deps,
+        )
+
+    def attention(self, deps, seq, dim) -> int:
+        s, d = float(seq), float(dim)
+        proj = 4.0 * 2.0 * s * d * d
+        attn = 2.0 * 2.0 * s * s * d
+        return self.push(
+            OpNode(
+                "attention",
+                proj + attn,
+                4.0 * (3.0 * s * d + s * s),
+                4.0 * d * d,
+                6,
+                0,
+                0,
+                dim,
+                dim,
+                seq,
+            ),
+            deps,
+        )
+
+    def embed(self, deps, vocab, dim, seq) -> int:
+        return self.push(
+            OpNode(
+                "embed",
+                float(seq),
+                4.0 * seq * dim,
+                float(vocab) * dim,
+                1,
+                0,
+                0,
+                vocab,
+                dim,
+                seq,
+            ),
+            deps,
+        )
+
+    def build(self) -> OpGraph:
+        self.g.validate()
+        return self.g
+
+
+# ---- random model sampler ---------------------------------------------------
+
+
+def sample_graph(rng: random.Random, idx: int) -> OpGraph:
+    """Sample a random model graph from the CNN / MLP / transformer / recsys
+    families the paper's benchmark covers. Structure and magnitudes bracket
+    the zoo models so the Rust-side zoo graphs are in-distribution test
+    points ("unseen models", Fig. 5)."""
+    family = rng.choice(["cnn", "mlp", "transformer", "recsys"])
+    b = Builder(f"rand_{family}_{idx}", family)
+    if family == "cnn":
+        side = rng.choice([112, 56, 56, 28])
+        c = rng.choice([16, 24, 32, 48, 64])
+        prev = b.conv([], rng.choice([3, 5, 7]), 3, c, side, 2)
+        prev = b.elemwise([prev], rng.choice(["batch_norm", "layer_norm"]), c * side * side, 2.0 * c)
+        n_stages = rng.randint(2, 5)
+        for _ in range(n_stages):
+            blocks = rng.randint(1, 6)
+            cout = min(c * 2, 1024)
+            side = max(side // 2, 4)
+            conv = b.conv([prev], rng.choice([1, 3, 3, 5]), c, cout, side, 1, repeat=blocks)
+            b.g.nodes[conv].kernels = blocks * rng.randint(1, 3)
+            elems = float(cout) * side * side * blocks
+            bn = b.elemwise([conv], "batch_norm", elems, 2.0 * cout, kernels=blocks)
+            act = b.elemwise([bn], rng.choice(["relu", "gelu"]), elems, kernels=blocks)
+            if rng.random() < 0.5:
+                prev = b.elemwise([prev, act], "add", elems, kernels=blocks)
+            else:
+                prev = act
+            c = cout
+        gap = b.pool([prev], c, 1, 7)
+        b.dense([gap], c, rng.choice([10, 100, 1000]))
+    elif family == "mlp":
+        dim = rng.choice([256, 512, 1024, 2048])
+        prev = b.dense([], rng.choice([128, 784, 3072]), dim)
+        for _ in range(rng.randint(2, 8)):
+            act = b.elemwise([prev], rng.choice(["relu", "gelu"]), float(dim))
+            prev = b.dense([act], dim, dim)
+        b.dense([prev], dim, rng.choice([1, 10, 100]))
+    elif family == "transformer":
+        dim = rng.choice([128, 256, 384, 512])
+        seq = rng.choice([32, 64, 128, 256])
+        emb = b.embed([], rng.choice([8000, 30522, 50000]), dim, seq)
+        prev = b.elemwise([emb], "layer_norm", float(seq * dim), 2.0 * dim)
+        for _ in range(rng.randint(1, 6)):
+            att = b.attention([prev], seq, dim)
+            ln1 = b.elemwise([prev, att], "layer_norm", float(seq * dim), 2.0 * dim)
+            ffn = b.push(
+                OpNode(
+                    "matmul",
+                    2.0 * 2.0 * seq * dim * 4 * dim,
+                    4.0 * (seq * dim * 5.0),
+                    8.0 * dim * dim,
+                    2,
+                    0,
+                    0,
+                    dim,
+                    dim,
+                    seq,
+                ),
+                [ln1],
+            )
+            gelu = b.elemwise([ffn], "gelu", float(seq * 4 * dim))
+            prev = b.elemwise([ln1, gelu], "layer_norm", float(seq * dim), 2.0 * dim)
+        b.dense([prev], dim, rng.choice([2, 10]))
+    else:  # recsys
+        prev = b.dense([], 13, rng.choice([128, 256, 512]))
+        r = b.elemwise([prev], "relu", 256.0)
+        bot = b.dense([r], 256, 64)
+        emb = b.embed([], rng.choice([50_000, 100_000, 500_000]), 64, rng.randint(8, 32))
+        inter = b.push(
+            OpNode("matmul", 2.0 * 27 * 27 * 64, 4.0 * (27 * 64 + 27 * 27), 0.0, 1, 0, 0, 64, 64, 27),
+            [bot, emb],
+        )
+        prev = inter
+        for _ in range(rng.randint(1, 4)):
+            d = b.dense([prev], 256, 256)
+            prev = b.elemwise([d], "relu", 256.0)
+        out = b.dense([prev], 256, 1)
+        b.elemwise([out], "softmax", 1.0)
+    g = b.build()
+    assert len(g.nodes) <= MAX_NODES, f"{g.name}: {len(g.nodes)}"
+    return g
+
+
+def golden_graph() -> OpGraph:
+    """The fixed cross-language golden graph. The Rust parity test
+    reconstructs this graph from the JSON embedded in the golden file; the
+    numbers below are the single source of truth."""
+    b = Builder("golden_tiny_cnn", "golden")
+    c1 = b.conv([], 3, 3, 32, 56, 2)
+    bn = b.elemwise([c1], "batch_norm", 32.0 * 56 * 56, 64.0)
+    r1 = b.elemwise([bn], "relu", 32.0 * 56 * 56)
+    c2 = b.conv([r1], 3, 32, 64, 28, 2, repeat=2)
+    b.g.nodes[c2].kernels = 4
+    a1 = b.elemwise([r1, c2], "add", 64.0 * 28 * 28)
+    at = b.attention([a1], 49, 64)
+    p1 = b.pool([at], 64, 1, 7)
+    b.dense([p1], 64, 10)
+    return b.build()

@@ -1,0 +1,95 @@
+"""Ground-truth performance model — exact Python mirror of
+``rust/src/perf.rs`` (formulas, constants, and summation order must match;
+``artifacts/golden/perf_golden.json`` pins both sides to 1e-9 relative).
+
+Used at build time only: RaPP training labels + runtime-prior features are
+sampled from this surface, which stands in for the paper's V100 profiling
+runs (see DESIGN.md §2 for the substitution argument).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .opgraph import COMPUTE_BOUND, OpGraph, OpNode
+
+# Contract constants (rust/src/perf.rs).
+SATURATION_FLOPS = 0.5e9
+MIN_OCCUPANCY = 0.05
+
+KIND_EFFICIENCY = {
+    "conv2d": 0.62,
+    "dense": 0.70,
+    "matmul": 0.70,
+    "attention": 0.55,
+    "batch_norm": 0.18,
+    "layer_norm": 0.18,
+    "relu": 0.15,
+    "add": 0.15,
+    "gelu": 0.20,
+    "softmax": 0.20,
+    "pool": 0.25,
+    "embed": 0.10,
+}
+
+PROFILE_SMS = [0.1, 0.2, 0.35, 0.5, 0.75, 1.0]
+PROFILE_QUOTAS = [0.2, 0.4, 0.6, 0.8, 1.0]
+
+
+@dataclass
+class DeviceSpec:
+    peak_flops: float = 14.0e12
+    mem_bw: float = 900.0e9
+    mem_cap: float = 16.0e9
+    t_launch: float = 6.0e-6
+    window: float = 0.005
+    price_per_hour: float = 2.48
+
+
+class PerfModel:
+    def __init__(self, dev: DeviceSpec | None = None):
+        self.dev = dev or DeviceSpec()
+
+    def op_time(self, op: OpNode, batch: int, sm: float) -> float:
+        k = float(max(op.kernels, 1))
+        flops = op.flops * batch
+        byts = op.bytes * batch + 4.0 * op.params
+        occupancy = min(max((flops / k) / SATURATION_FLOPS, MIN_OCCUPANCY), 1.0)
+        sm_eff = min(sm, occupancy)
+        t_compute = flops / (self.dev.peak_flops * sm_eff * KIND_EFFICIENCY[op.kind])
+        t_memory = byts / (self.dev.mem_bw * max(sm, 0.1))
+        return max(t_compute, t_memory) + k * self.dev.t_launch
+
+    def raw_graph_time(self, g: OpGraph, batch: int, sm: float) -> float:
+        return sum(self.op_time(op, batch, sm) for op in g.nodes)
+
+    def latency(self, g: OpGraph, batch: int, sm: float, q: float) -> float:
+        """Token-window simulation at kernel granularity, no-debt semantics —
+        statement-for-statement mirror of rust PerfModel::latency."""
+        w = self.dev.window
+        now = 0.0
+        budget = q * w
+        boundary = w
+        for op in g.nodes:
+            k = max(op.kernels, 1)
+            d = self.op_time(op, batch, sm) / k
+            for _ in range(k):
+                if boundary <= now:
+                    skipped = (now - boundary) // w + 1.0
+                    boundary += skipped * w
+                    budget = q * w
+                if budget <= 0.0:
+                    now = boundary
+                    boundary += w
+                    budget = q * w
+                now += d
+                budget -= d
+        return now
+
+    def capacity(self, g: OpGraph, batch: int, sm: float, q: float) -> float:
+        return batch * q / self.raw_graph_time(g, batch, sm)
+
+    def memory_bytes(self, g: OpGraph, batch: int) -> float:
+        weights = 4.0 * g.total_params()
+        peak_act = max((n.bytes for n in g.nodes), default=0.0) * batch * 2.0
+        return (weights + peak_act) * 1.2 + 256e6

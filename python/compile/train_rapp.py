@@ -1,0 +1,210 @@
+"""Train RaPP (GAT + MLP over operator/graph runtime features) and the DIPPM
+static-feature baseline; export Rust-loadable weights + accuracy metadata.
+
+Training uses the differentiable reference GAT (`ref.gat_layer_ref`); the
+AOT artifact exported by ``aot.py`` swaps in the fused Pallas kernel — a
+pytest parity check keeps both within float tolerance.
+
+Outputs (into the artifacts dir):
+  rapp_weights.json   — full-feature model, rust rapp::RappWeights schema
+  dippm_weights.json  — static-only baseline, same schema (mode="dippm")
+  rapp_meta.json      — MAPE on val/test/unseen for both models (Fig. 5 data)
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from .features import F_G_FULL, F_G_STATIC, F_OP_FULL, F_OP_STATIC
+from .model import rapp_forward, rapp_init
+from .perfsim import PerfModel
+
+HIDDEN = 48
+# Anchor column for the residual target: the separable analytic estimate
+# (features.anchor) — last graph-feature column.
+RESIDUAL_COL = 21
+
+
+def _slice_mode(x, g, mode: str):
+    """Full features → mode-specific views (DIPPM drops runtime columns)."""
+    if mode == "rapp":
+        return x, g
+    return x[..., :F_OP_STATIC], g[..., :F_G_STATIC]
+
+
+def batched_forward(params, x, adj, mask, g, residual_col):
+    return jax.vmap(
+        lambda xi, ai, mi, gi: rapp_forward(
+            params, xi, ai, mi, gi, use_pallas=False, residual_col=residual_col
+        )
+    )(x, adj, mask, g)
+
+
+def loss_fn(params, x, adj, mask, g, y, residual_col):
+    pred = batched_forward(params, x, adj, mask, g, residual_col)
+    return jnp.mean((pred - y) ** 2)
+
+
+FROZEN = {"op_mean", "op_std", "g_mean", "g_std"}
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(val) for k, val in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k, p in params.items():
+        if k in FROZEN:
+            new_m[k] = state["m"][k]
+            new_v[k] = state["v"][k]
+            new_p[k] = p
+            continue
+        gk = grads[k]
+        m = b1 * state["m"][k] + (1 - b1) * gk
+        v = b2 * state["v"][k] + (1 - b2) * gk * gk
+        mh = m / (1 - b1**t)
+        vh = v / (1 - b2**t)
+        new_p[k] = p - lr * mh / (jnp.sqrt(vh) + eps)
+        new_m[k] = m
+        new_v[k] = v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def _residual_of(mode: str):
+    return RESIDUAL_COL if mode == "rapp" else None
+
+
+def mape_latency(params, corpus, idx, mode):
+    """MAPE in latency space (the paper's Fig. 5 metric)."""
+    total, count = 0.0, 0
+    for lo in range(0, len(idx), 512):
+        sub = idx[lo : lo + 512]
+        x, a, m, g, y = corpus.arrays(sub)
+        x, g = _slice_mode(x, g, mode)
+        pred = np.asarray(batched_forward(params, x, a, m, g, _residual_of(mode)))
+        lat_t = np.exp(y)
+        lat_p = np.exp(pred)
+        total += float(np.sum(np.abs(lat_t - lat_p) / lat_t))
+        count += len(sub)
+    return 100.0 * total / max(count, 1)
+
+
+def train_model(mode: str, corpus, train_idx, val_idx, epochs, seed, log):
+    f_op = F_OP_FULL if mode == "rapp" else F_OP_STATIC
+    f_g = F_G_FULL if mode == "rapp" else F_G_STATIC
+    params = rapp_init(f_op, f_g, HIDDEN, seed=seed)
+    # Bake normalisation (over train split features, mode-sliced).
+    op_mean, op_std, g_mean, g_std = ds.normalization(corpus)
+    params["op_mean"] = jnp.array(op_mean[:f_op])
+    params["op_std"] = jnp.array(op_std[:f_op])
+    params["g_mean"] = jnp.array(g_mean[:f_g])
+    params["g_std"] = jnp.array(g_std[:f_g])
+
+    residual_col = _residual_of(mode)
+    step = jax.jit(
+        lambda p, s, x, a, m, g, y, lr: _train_step(p, s, x, a, m, g, y, lr, residual_col)
+    )
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+    bs = 256
+    n = len(train_idx)
+    t0 = time.time()
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        lr = 3e-3 * (0.85**epoch)
+        losses = []
+        for lo in range(0, n - bs + 1, bs):
+            sub = train_idx[order[lo : lo + bs]]
+            x, a, m, g, y = corpus.arrays(sub)
+            x, g = _slice_mode(x, g, mode)
+            params, state, lv = step(params, state, x, a, m, g, y, lr)
+            losses.append(float(lv))
+        vm = mape_latency(params, corpus, val_idx[:1024], mode)
+        log(
+            f"[{mode}] epoch {epoch + 1}/{epochs} loss={np.mean(losses):.4f} "
+            f"val_mape={vm:.2f}% ({time.time() - t0:.0f}s)"
+        )
+    return params
+
+
+def _train_step(params, state, x, a, m, g, y, lr, residual_col):
+    lv, grads = jax.value_and_grad(loss_fn)(params, x, a, m, g, y, residual_col)
+    params, state = adam_step(params, grads, state, lr)
+    return params, state, lv
+
+
+def export_weights(params, mode: str, path):
+    """Write the rust rapp::RappWeights JSON schema."""
+    f_op = int(params["gat1_w"].shape[0])
+    f_g = int(params["mlp_g_w"].shape[0])
+    def flat(k):
+        return np.asarray(params[k], dtype=np.float64).reshape(-1).tolist()
+    doc = {
+        "arch": {
+            "mode": mode,
+            "hidden": HIDDEN,
+            "f_op": f_op,
+            "f_g": f_g,
+            "residual_col": RESIDUAL_COL if mode == "rapp" else -1,
+        },
+        "norm": {
+            "op_mean": flat("op_mean"),
+            "op_std": flat("op_std"),
+            "g_mean": flat("g_mean"),
+            "g_std": flat("g_std"),
+        },
+        "gat1": {
+            "w": flat("gat1_w"),
+            "b": flat("gat1_b"),
+            "a_src": flat("gat1_asrc"),
+            "a_dst": flat("gat1_adst"),
+        },
+        "gat2": {
+            "w": flat("gat2_w"),
+            "b": flat("gat2_b"),
+            "a_src": flat("gat2_asrc"),
+            "a_dst": flat("gat2_adst"),
+        },
+        "mlp_g": {"w": flat("mlp_g_w"), "b": flat("mlp_g_b")},
+        "head1": {"w": flat("head1_w"), "b": flat("head1_b")},
+        "head2": {"w": flat("head2_w"), "b": flat("head2_b")},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+
+def run_training(out_dir, epochs: int, n_graphs: int, configs_per_graph: int, seed: int, log=print):
+    perf = PerfModel()
+    log(f"sampling {n_graphs} training graphs + 20 unseen graphs …")
+    graphs = ds.make_graphs(n_graphs, seed=seed)
+    unseen_graphs = ds.make_graphs(20, seed=seed + 10_000)
+    t0 = time.time()
+    corpus = ds.build_corpus(graphs, configs_per_graph, perf, seed=seed + 1)
+    unseen = ds.build_corpus(unseen_graphs, 60, perf, seed=seed + 2)
+    log(f"corpus: {len(corpus)} samples (+{len(unseen)} unseen) in {time.time() - t0:.0f}s")
+    train_idx, val_idx, test_idx = ds.split_indices(len(corpus), seed=seed + 3)
+    meta = {"dataset": {"samples": len(corpus), "unseen": len(unseen), "graphs": n_graphs}}
+    results = {}
+    for mode in ["rapp", "dippm"]:
+        params = train_model(mode, corpus, train_idx, val_idx, epochs, seed + 4, log)
+        results[mode] = params
+        meta[mode] = {
+            "val_mape": mape_latency(params, corpus, val_idx, mode),
+            "test_mape": mape_latency(params, corpus, test_idx, mode),
+            "unseen_mape": mape_latency(params, unseen, np.arange(len(unseen)), mode),
+        }
+        log(f"[{mode}] final: {meta[mode]}")
+        name = "rapp_weights.json" if mode == "rapp" else "dippm_weights.json"
+        export_weights(params, mode, out_dir / name)
+    with open(out_dir / "rapp_meta.json", "w") as f:
+        json.dump(meta, f, indent=2)
+    return results["rapp"], meta

@@ -1,0 +1,5 @@
+import pathlib
+import sys
+
+# Run from python/ or repo root: make `compile` importable.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

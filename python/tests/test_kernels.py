@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, swept over shapes,
+dtype edge magnitudes, strides, paddings, and activations."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.conv2d import conv2d
+from compile.kernels.gat import gat_layer
+from compile.kernels.matmul import dense, matmul
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.array(rng.normal(0.0, scale, size=shape), dtype=jnp.float32)
+
+
+# -- matmul ------------------------------------------------------------------
+
+MM_SHAPES = [
+    (1, 1, 1),
+    (3, 7, 5),
+    (16, 64, 10),
+    (128, 128, 128),
+    (130, 257, 64),  # forces padding on M and K-full blocks on odd dims
+    (256, 100, 300),
+    (1, 3072, 10),
+]
+
+
+@pytest.mark.parametrize("m,k,n", MM_SHAPES)
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "gelu"])
+def test_matmul_fused_epilogue(activation):
+    rng = np.random.default_rng(7)
+    x, y, b = rand(rng, 50, 80), rand(rng, 80, 30), rand(rng, 30)
+    got = matmul(x, y, bias=b, activation=activation)
+    want = ref.matmul_ref(x, y, b, activation)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_large_magnitudes():
+    rng = np.random.default_rng(11)
+    x, y = rand(rng, 32, 32, scale=1e3), rand(rng, 32, 32, scale=1e-3)
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_mismatch():
+    rng = np.random.default_rng(1)
+    with pytest.raises(AssertionError):
+        matmul(rand(rng, 4, 5), rand(rng, 6, 4))
+
+
+def test_dense_is_matmul_bias():
+    rng = np.random.default_rng(2)
+    x, w, b = rand(rng, 9, 17), rand(rng, 17, 5), rand(rng, 5)
+    np.testing.assert_allclose(
+        dense(x, w, b, activation="relu"),
+        ref.matmul_ref(x, w, b, "relu"),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_matmul_under_jit():
+    rng = np.random.default_rng(3)
+    x, y = rand(rng, 33, 65), rand(rng, 65, 17)
+    got = jax.jit(matmul)(x, y)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-4, atol=2e-4)
+
+
+# -- conv2d ------------------------------------------------------------------
+
+CONV_CASES = [
+    # (batch, side, cin, cout, k, stride, padding)
+    (1, 8, 3, 4, 3, 1, "SAME"),
+    (2, 16, 3, 8, 3, 2, "SAME"),
+    (4, 32, 3, 16, 3, 2, "SAME"),
+    (1, 10, 5, 7, 5, 1, "VALID"),
+    (2, 9, 2, 3, 1, 1, "SAME"),
+]
+
+
+@pytest.mark.parametrize("b,side,cin,cout,k,stride,padding", CONV_CASES)
+def test_conv2d_matches_ref(b, side, cin, cout, k, stride, padding):
+    rng = np.random.default_rng(b + side + cout)
+    x = rand(rng, b, side, side, cin)
+    w = rand(rng, k, k, cin, cout, scale=0.3)
+    bias = rand(rng, cout, scale=0.1)
+    got = conv2d(x, w, bias, stride=stride, padding=padding, activation="relu")
+    want = ref.conv2d_ref(x, w, bias, stride=stride, padding=padding, activation="relu")
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# -- GAT ---------------------------------------------------------------------
+
+
+def random_graph_tensors(rng, n, live, f, h):
+    x = rand(rng, n, f)
+    adj = np.zeros((n, n), dtype=np.float32)
+    np.fill_diagonal(adj, 1.0)
+    for _ in range(3 * live):
+        a, b = rng.integers(0, live, 2)
+        adj[a, b] = adj[b, a] = 1.0
+    w = rand(rng, f, h, scale=0.3)
+    bias = rand(rng, h, scale=0.1)
+    a_src = rand(rng, h, scale=0.3)
+    a_dst = rand(rng, h, scale=0.3)
+    return x, jnp.array(adj), w, bias, a_src, a_dst
+
+
+@pytest.mark.parametrize("live", [1, 5, 32, 64])
+def test_gat_matches_ref(live):
+    rng = np.random.default_rng(live)
+    x, adj, w, b, asrc, adst = random_graph_tensors(rng, 64, live, 27, 32)
+    got = gat_layer(x, adj, w, b, asrc, adst)
+    want = ref.gat_layer_ref(x, adj, w, b, asrc, adst)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gat_no_nan_with_isolated_nodes():
+    rng = np.random.default_rng(9)
+    x, adj, w, b, asrc, adst = random_graph_tensors(rng, 16, 2, 8, 4)
+    out = gat_layer(x, adj, w, b, asrc, adst)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_gat_attention_is_convex_combination():
+    # Identical node features ⇒ identical outputs regardless of topology.
+    rng = np.random.default_rng(10)
+    _, adj, w, b, asrc, adst = random_graph_tensors(rng, 8, 8, 6, 4)
+    x = jnp.tile(rand(rng, 1, 6), (8, 1))
+    out = np.asarray(gat_layer(x, adj, w, b, asrc, adst))
+    np.testing.assert_allclose(out, np.tile(out[:1], (8, 1)), rtol=1e-5, atol=1e-6)

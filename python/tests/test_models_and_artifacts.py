@@ -1,0 +1,61 @@
+"""L2 model shape checks and artifact-directory integrity (when built)."""
+
+import json
+import pathlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as m
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.mark.parametrize("name", list(m.SERVABLE_MODELS))
+@pytest.mark.parametrize("batch", [1, 4])
+def test_servable_shapes(name, batch):
+    input_dim, output_dim = m.SERVABLE_MODELS[name]
+    params = m.init_params(name)
+    rng = np.random.default_rng(5)
+    x = jnp.array(rng.normal(size=(batch, input_dim)), dtype=jnp.float32)
+    out = m.MODEL_FNS[name](params, x)
+    assert out.shape == (batch, output_dim)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_servable_deterministic_params():
+    a = m.init_params("cnn_s")
+    b = m.init_params("cnn_s")
+    np.testing.assert_array_equal(np.asarray(a["c1_w"]), np.asarray(b["c1_w"]))
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+class TestArtifacts:
+    def test_manifest_lists_all_models(self):
+        doc = json.loads((ARTIFACTS / "manifest.json").read_text())
+        names = {e["name"] for e in doc["models"]}
+        assert names == set(m.SERVABLE_MODELS)
+        for e in doc["models"]:
+            assert (ARTIFACTS / e["path"]).exists(), e["path"]
+        assert (ARTIFACTS / doc["rapp_hlo"]).exists()
+        assert (ARTIFACTS / doc["rapp_weights"]).exists()
+
+    def test_hlo_text_is_parsable_header(self):
+        doc = json.loads((ARTIFACTS / "manifest.json").read_text())
+        text = (ARTIFACTS / doc["models"][0]["path"]).read_text()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_rapp_meta_shows_fig5_contrast(self):
+        meta = json.loads((ARTIFACTS / "rapp_meta.json").read_text())
+        assert meta["rapp"]["test_mape"] < 12.0
+        assert meta["rapp"]["unseen_mape"] < 20.0
+        assert meta["dippm"]["test_mape"] > 2.0 * meta["rapp"]["test_mape"]
+
+    def test_golden_file_complete(self):
+        g = json.loads((ARTIFACTS / "golden" / "perf_golden.json").read_text())
+        assert len(g["configs"]) >= 5
+        assert len(g["op_times"]) == len(g["graph"]["nodes"])
+        assert len(g["graph_features"]) == 22
+        assert g["rapp_preds"], "predictor parity pin missing"

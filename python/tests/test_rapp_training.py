@@ -1,0 +1,109 @@
+"""RaPP pipeline tests: feature extraction contract, anchor quality, the
+Pallas-vs-ref forward parity, weight export round-trip, and a training smoke
+run asserting RaPP ≪ DIPPM (the Fig. 5 contrast)."""
+
+import json
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import dataset as ds
+from compile import features as feat
+from compile.model import rapp_forward, rapp_init
+from compile.opgraph import golden_graph
+from compile.perfsim import PerfModel
+from compile.train_rapp import (
+    RESIDUAL_COL,
+    export_weights,
+    mape_latency,
+    train_model,
+)
+from compile.aot import weights_to_params
+
+
+@pytest.fixture(scope="module")
+def perf():
+    return PerfModel()
+
+
+def test_feature_dims(perf):
+    g = golden_graph()
+    op, gf, edges = feat.extract(g, 4, 0.5, 0.6, perf, "rapp")
+    assert op.shape == (len(g.nodes), feat.F_OP_FULL)
+    assert gf.shape == (feat.F_G_FULL,)
+    op_s, gf_s, _ = feat.extract(g, 4, 0.5, 0.6, perf, "dippm")
+    assert op_s.shape == (len(g.nodes), feat.F_OP_STATIC)
+    assert gf_s.shape == (feat.F_G_STATIC,)
+    assert len(edges) == len(g.edges)
+
+
+def test_anchor_tracks_ground_truth(perf):
+    """The probe-interpolated window-sim anchor must be a tight estimator
+    (it is the reason RaPP reaches paper-grade MAPE)."""
+    errs = []
+    for g in ds.make_graphs(5, seed=5):
+        for b, sm, q in [(1, 0.3, 0.5), (8, 0.15, 0.25), (32, 0.6, 0.9), (4, 1.0, 0.1)]:
+            _, gf, _ = feat.extract(g, b, sm, q, perf, "rapp")
+            truth = perf.latency(g, b, sm, q)
+            est = math.exp(gf[RESIDUAL_COL]) / 1e3
+            errs.append(abs(est - truth) / truth)
+    assert np.mean(errs) < 0.10, f"anchor MAPE {np.mean(errs):.3f}"
+
+
+def test_pad_for_hlo_contract(perf):
+    g = golden_graph()
+    op, _, edges = feat.extract(g, 4, 0.5, 0.6, perf, "rapp")
+    x, adj, mask = feat.pad_for_hlo(op, edges, feat.F_OP_FULL)
+    assert x.shape == (64, feat.F_OP_FULL)
+    assert adj.shape == (64, 64) and mask.shape == (64,)
+    assert mask.sum() == len(g.nodes)
+    # Self-loops everywhere; symmetry.
+    assert np.all(np.diag(adj) == 1.0)
+    assert np.array_equal(adj, adj.T)
+
+
+def test_rapp_forward_pallas_vs_ref_parity(perf):
+    g = golden_graph()
+    op, gf, edges = feat.extract(g, 4, 0.5, 0.6, perf, "rapp")
+    x, adj, mask = feat.pad_for_hlo(op, edges, feat.F_OP_FULL)
+    params = rapp_init(feat.F_OP_FULL, feat.F_G_FULL, 16, seed=3)
+    # Give the zero-initialised head a nonzero value for a meaningful test.
+    params["head2_w"] = jnp.ones((16, 1), jnp.float32) * 0.05
+    a = rapp_forward(params, x, adj, mask, jnp.asarray(gf), use_pallas=True, residual_col=RESIDUAL_COL)
+    b = rapp_forward(params, x, adj, mask, jnp.asarray(gf), use_pallas=False, residual_col=RESIDUAL_COL)
+    assert abs(float(a) - float(b)) < 1e-4
+
+
+def test_weights_export_roundtrip(tmp_path, perf):
+    params = rapp_init(feat.F_OP_FULL, feat.F_G_FULL, 48, seed=9)
+    path = tmp_path / "w.json"
+    export_weights(params, "rapp", path)
+    doc = json.loads(path.read_text())
+    assert doc["arch"]["f_op"] == feat.F_OP_FULL
+    assert doc["arch"]["residual_col"] == RESIDUAL_COL
+    back = weights_to_params(doc)
+    for k, v in params.items():
+        np.testing.assert_allclose(np.asarray(v), back[k], rtol=1e-6, atol=1e-7)
+
+
+def test_training_smoke_rapp_beats_dippm(perf):
+    graphs = ds.make_graphs(12, seed=21)
+    corpus = ds.build_corpus(graphs, 40, perf, seed=22)
+    tr, va, te = ds.split_indices(len(corpus), seed=23)
+    quiet = lambda *_args, **_kw: None
+    rapp = train_model("rapp", corpus, tr, va, 3, 24, quiet)
+    dippm = train_model("dippm", corpus, tr, va, 3, 24, quiet)
+    m_rapp = mape_latency(rapp, corpus, te, "rapp")
+    m_dippm = mape_latency(dippm, corpus, te, "dippm")
+    assert m_rapp < 15.0, f"rapp {m_rapp}"
+    assert m_rapp < m_dippm / 2.0, f"rapp {m_rapp} vs dippm {m_dippm}"
+
+
+def test_corpus_determinism(perf):
+    graphs = ds.make_graphs(3, seed=31)
+    a = ds.build_corpus(graphs, 10, perf, seed=32)
+    b = ds.build_corpus(graphs, 10, perf, seed=32)
+    assert a.y == b.y
+    np.testing.assert_array_equal(np.stack(a.gfeats), np.stack(b.gfeats))

@@ -1,0 +1,643 @@
+//! The Hybrid Auto-Scaler: Kalman-filter workload prediction + the hybrid
+//! vertical/horizontal scaling algorithm (paper §3.3, Algorithm 1).
+//!
+//! Per tick and per function the scaler:
+//!
+//! 1. estimates the next-interval RPS `R` with a scalar Kalman filter;
+//! 2. computes current processing capability `C_f = Σ RaPP(f, b_i, s_i, q_i)`;
+//! 3. **scale-up** (`R > C_f·α`): fills the gap ΔR *vertically first* — more
+//!    quota to existing pods, largest SM partitions first (a smaller quota
+//!    increment buys more throughput there) — then *horizontally*: a new pod
+//!    on the used GPU with the lowest HGO, else on a fresh GPU with the most
+//!    efficient (sm, quota) for ΔR;
+//! 4. **scale-down** (`R < C_f·β`, after a cooldown): mirrored stepwise quota
+//!    reduction, smallest SM partitions first, removing pods whose quota hits
+//!    zero — but always retaining one pod (keep-alive at minimal quota, which
+//!    eliminates scale-from-zero cold starts).
+//!
+//! The scaler emits [`ScalingAction`]s; the GPU Re-configurator applies them.
+
+use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, ScalingAction};
+use crate::rapp::LatencyPredictor;
+use crate::vgpu::{QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
+use std::collections::BTreeMap;
+
+/// Scalar Kalman filter for short-term RPS estimation (paper §3.3 equations,
+/// with A = H = 1: a random-walk workload model).
+#[derive(Clone, Debug)]
+pub struct KalmanFilter {
+    /// State transition (A) — 1.0 for random walk.
+    pub a: f64,
+    /// Observation model (H).
+    pub h: f64,
+    /// Process noise (Q): how fast the true rate drifts.
+    pub q: f64,
+    /// Measurement noise (D): how noisy per-tick RPS observations are.
+    pub d: f64,
+    /// Current estimate R and covariance P.
+    x: f64,
+    p: f64,
+    initialized: bool,
+}
+
+impl KalmanFilter {
+    pub fn new(process_noise: f64, measurement_noise: f64) -> Self {
+        KalmanFilter {
+            a: 1.0,
+            h: 1.0,
+            q: process_noise,
+            d: measurement_noise,
+            x: 0.0,
+            p: 1.0,
+            initialized: false,
+        }
+    }
+
+    /// Feed the measured rate `r_t`; returns the filtered estimate `R` used
+    /// as the prediction for the next interval.
+    pub fn update(&mut self, r_t: f64) -> f64 {
+        if !self.initialized {
+            self.x = r_t;
+            self.p = self.d;
+            self.initialized = true;
+            return self.x;
+        }
+        // Predict.
+        let x_pred = self.a * self.x;
+        let p_pred = self.a * self.p * self.a + self.q;
+        // Update.
+        let k = p_pred * self.h / (self.h * p_pred * self.h + self.d);
+        self.x = x_pred + k * (r_t - self.h * x_pred);
+        self.p = (1.0 - k * self.h) * p_pred;
+        self.x.max(0.0)
+    }
+
+    pub fn estimate(&self) -> f64 {
+        self.x
+    }
+
+    pub fn gain(&self) -> f64 {
+        let p_pred = self.a * self.p * self.a + self.q;
+        p_pred * self.h / (self.h * p_pred * self.h + self.d)
+    }
+}
+
+/// Scaling policy interface shared by HAS-GPU and the baseline platforms.
+pub trait ScalingPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Plan scaling actions for one function given the *observed* RPS of the
+    /// last interval. The harness applies the actions via the Re-configurator.
+    fn plan(
+        &mut self,
+        f: &FunctionSpec,
+        observed_rps: f64,
+        cluster: &ClusterState,
+        predictor: &dyn LatencyPredictor,
+        now: f64,
+    ) -> Vec<ScalingAction>;
+}
+
+/// Tunables of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct HybridConfig {
+    /// Scale-up trigger threshold α (fraction of capacity considered "full").
+    pub alpha: f64,
+    /// Scale-down trigger threshold β.
+    pub beta: f64,
+    /// Vertical scaling step ΔI_q in quota per-mille.
+    pub quota_step: QuotaMille,
+    /// Minimum interval between scale-down operations (seconds).
+    pub cooldown: f64,
+    /// Keep-alive quota for the last retained pod.
+    pub min_quota: QuotaMille,
+    /// Default SM partition for brand-new pods when the predictor's
+    /// efficiency search has no better answer.
+    pub default_sm: SmMille,
+    /// Kalman noise parameters (process, measurement).
+    pub kalman: (f64, f64),
+    /// A pod's predicted latency must stay ≤ slo × this margin; scale-down
+    /// never shrinks a pod below its SLO-feasible quota.
+    pub slo_margin: f64,
+    /// New pods start at most at this quota so they retain vertical runway
+    /// for the next burst (the whole point of quota-based vertical scaling).
+    pub headroom_quota: QuotaMille,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            alpha: 0.8,
+            beta: 0.4,
+            quota_step: QUOTA_STEP,
+            cooldown: 30.0,
+            min_quota: QUOTA_STEP,
+            default_sm: 400,
+            // Responsive filter: bursty serverless arrivals change faster
+            // than per-tick measurement noise (gain ≈ 0.8).
+            kalman: (16.0, 4.0),
+            slo_margin: 0.75,
+            headroom_quota: 600,
+        }
+    }
+}
+
+/// The paper's hybrid auto-scaler.
+pub struct HybridAutoscaler {
+    pub cfg: HybridConfig,
+    filters: BTreeMap<String, KalmanFilter>,
+    last_scale_down: BTreeMap<String, f64>,
+}
+
+impl HybridAutoscaler {
+    pub fn new(cfg: HybridConfig) -> Self {
+        HybridAutoscaler {
+            cfg,
+            filters: BTreeMap::new(),
+            last_scale_down: BTreeMap::new(),
+        }
+    }
+
+    /// Pod capacity C_{P_i} = RaPP(f, b_i, s_i, q_i) (items/s).
+    fn pod_capacity(
+        f: &FunctionSpec,
+        pod: &Pod,
+        predictor: &dyn LatencyPredictor,
+    ) -> f64 {
+        predictor.capacity(
+            &f.graph,
+            pod.batch,
+            crate::vgpu::sm_to_f64(pod.sm),
+            crate::vgpu::quota_to_f64(pod.quota),
+        )
+    }
+
+    /// Smallest quota (in steps) at which a pod of partition `sm` meets the
+    /// function SLO — the floor for vertical scale-down and the starting
+    /// point for new-pod quota sizing. Falls back to full quota when the
+    /// partition cannot meet the SLO at all.
+    fn min_slo_quota(
+        &self,
+        f: &FunctionSpec,
+        sm: SmMille,
+        predictor: &dyn LatencyPredictor,
+        margin: f64,
+    ) -> QuotaMille {
+        let smf = crate::vgpu::sm_to_f64(sm);
+        let mut q = self.cfg.quota_step;
+        while q <= QUOTA_FULL {
+            let lat = predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q));
+            if lat <= f.slo * margin {
+                return q;
+            }
+            q += self.cfg.quota_step;
+        }
+        QUOTA_FULL
+    }
+
+    /// The most efficient (sm, quota) for a required rate ΔR on an empty GPU
+    /// (`RaPPbyThroughput`, line 19): the cheapest slice (sm×quota) whose
+    /// capacity covers ΔR and whose latency meets the function SLO; falls
+    /// back to the highest-capacity slice if ΔR is unreachable.
+    fn most_efficient_slice(
+        &self,
+        f: &FunctionSpec,
+        delta_r: f64,
+        predictor: &dyn LatencyPredictor,
+    ) -> (SmMille, QuotaMille) {
+        let mut best: Option<(f64, SmMille, QuotaMille)> = None; // (cost, sm, q)
+        let mut fallback: (f64, SmMille, QuotaMille) = (0.0, SM_FULL, QUOTA_FULL);
+        let mut sm = SM_STEP * 2; // 10% minimum sensible partition
+        while sm <= SM_FULL {
+            let mut q = self.cfg.quota_step;
+            while q <= QUOTA_FULL {
+                let smf = crate::vgpu::sm_to_f64(sm);
+                let qf = crate::vgpu::quota_to_f64(q);
+                let cap = predictor.capacity(&f.graph, f.batch, smf, qf);
+                let lat = predictor.latency(&f.graph, f.batch, smf, qf);
+                if cap > fallback.0 {
+                    fallback = (cap, sm, q);
+                }
+                // Prefer slices that meet ΔR + SLO while keeping vertical
+                // runway (quota ≤ headroom cap) — larger partitions at
+                // moderate quota can absorb the next burst by a quota
+                // re-write alone.
+                if cap >= delta_r && lat <= f.slo * self.cfg.slo_margin && q <= self.cfg.headroom_quota {
+                    let cost = smf * qf;
+                    if best.map_or(true, |(c, _, _)| cost < c) {
+                        best = Some((cost, sm, q));
+                    }
+                }
+                q += self.cfg.quota_step;
+            }
+            sm += SM_STEP * 2;
+        }
+        match best {
+            Some((_, s, q)) => (s, q),
+            None => (fallback.1, fallback.2),
+        }
+    }
+}
+
+impl ScalingPolicy for HybridAutoscaler {
+    fn name(&self) -> &'static str {
+        "has-gpu"
+    }
+
+    fn plan(
+        &mut self,
+        f: &FunctionSpec,
+        observed_rps: f64,
+        cluster: &ClusterState,
+        predictor: &dyn LatencyPredictor,
+        now: f64,
+    ) -> Vec<ScalingAction> {
+        let cfg = self.cfg.clone();
+        // Kalman-filtered workload estimate (line 0: predicted RPS R).
+        let r = self
+            .filters
+            .entry(f.name.clone())
+            .or_insert_with(|| KalmanFilter::new(cfg.kalman.0, cfg.kalman.1))
+            .update(observed_rps);
+
+        let mut actions = Vec::new();
+        // Non-draining pods participate in capacity (cold-starting pods will
+        // be ready soon; counting them avoids scale-up storms).
+        let mut pods: Vec<&Pod> = cluster
+            .pods_of(&f.name)
+            .into_iter()
+            .filter(|p| p.phase != PodPhase::Draining)
+            .collect();
+        // Line 1: C_f = Σ C_{P_i}.
+        let caps: BTreeMap<_, _> = pods
+            .iter()
+            .map(|p| (p.id, Self::pod_capacity(f, p, predictor)))
+            .collect();
+        let c_f: f64 = caps.values().sum();
+
+        // ---- Scaling up (lines 2-19) ----------------------------------
+        if r > c_f * cfg.alpha {
+            let mut delta_r = r - c_f * cfg.alpha;
+            // Line 3: pods with more SMs first.
+            pods.sort_by(|a, b| b.sm.cmp(&a.sm).then(a.id.0.cmp(&b.id.0)));
+            // Vertical scale-up (lines 4-9).
+            for pod in &pods {
+                if delta_r <= 0.0 {
+                    break;
+                }
+                let a_q = cluster
+                    .gpu(pod.gpu)
+                    .max_avail_quota(pod.client_id())
+                    .unwrap_or(pod.quota);
+                let base_cap = caps[&pod.id];
+                let smf = crate::vgpu::sm_to_f64(pod.sm);
+                let mut n = 0u32;
+                let mut gained = 0.0;
+                while pod.quota + cfg.quota_step * (n + 1) <= a_q && delta_r - gained > 0.0 {
+                    n += 1;
+                    let q_new = pod.quota + cfg.quota_step * n;
+                    let cap_new = predictor.capacity(
+                        &f.graph,
+                        pod.batch,
+                        smf,
+                        crate::vgpu::quota_to_f64(q_new),
+                    );
+                    gained = cap_new - base_cap;
+                }
+                if n > 0 {
+                    actions.push(ScalingAction::SetQuota {
+                        pod: pod.id,
+                        quota: pod.quota + cfg.quota_step * n,
+                    });
+                    delta_r -= gained;
+                }
+            }
+            // Horizontal scale-up to the least-occupied used GPU (lines 10-17).
+            if delta_r > 0.0 {
+                if let Some(gpu) = cluster.least_occupied_used_gpu() {
+                    if let Some((s_max, q_max)) = cluster.gpu(gpu).max_avail_sm_quota() {
+                        let smf = crate::vgpu::sm_to_f64(s_max);
+                        let c_max = predictor.capacity(
+                            &f.graph,
+                            f.batch,
+                            smf,
+                            crate::vgpu::quota_to_f64(q_max),
+                        );
+                        if c_max > delta_r {
+                            // Find the smallest quota step covering ΔR (lines
+                            // 15-17), starting from the SLO-feasible floor.
+                            let floor = self.min_slo_quota(f, s_max, predictor, cfg.slo_margin);
+                            let mut n = (floor / cfg.quota_step).max(1);
+                            while cfg.quota_step * n <= q_max {
+                                let cap = predictor.capacity(
+                                    &f.graph,
+                                    f.batch,
+                                    smf,
+                                    crate::vgpu::quota_to_f64(cfg.quota_step * n),
+                                );
+                                if cap >= delta_r {
+                                    break;
+                                }
+                                n += 1;
+                            }
+                            let quota = (cfg.quota_step * n).min(q_max);
+                            actions.push(ScalingAction::CreatePod {
+                                function: f.name.clone(),
+                                gpu,
+                                sm: s_max,
+                                quota,
+                                batch: f.batch,
+                                new_gpu: false,
+                            });
+                            delta_r -= predictor.capacity(
+                                &f.graph,
+                                f.batch,
+                                smf,
+                                crate::vgpu::quota_to_f64(quota),
+                            );
+                        }
+                    }
+                }
+            }
+            // Horizontal scale-up to a new GPU (lines 18-19).
+            if delta_r > 0.0 {
+                if let Some(gpu) = cluster.idle_gpu() {
+                    let (sm, quota) = self.most_efficient_slice(f, delta_r, predictor);
+                    actions.push(ScalingAction::CreatePod {
+                        function: f.name.clone(),
+                        gpu,
+                        sm,
+                        quota,
+                        batch: f.batch,
+                        new_gpu: true,
+                    });
+                }
+                // Cluster exhausted: nothing more we can do this tick.
+            }
+            return actions;
+        }
+
+        // ---- Scaling down (lines 20-26) --------------------------------
+        let last_down = self.last_scale_down.get(&f.name).copied().unwrap_or(-1e18);
+        if r < c_f * cfg.beta && now - last_down >= cfg.cooldown && !pods.is_empty() {
+            // Keep enough capacity that r stays below the scale-up trigger:
+            // target C such that r ≈ C·(α+β)/2 (centred in the hysteresis band).
+            let target = r / ((cfg.alpha + cfg.beta) / 2.0).max(1e-6);
+
+            let mut c_remaining = c_f;
+            // Line 21: fewer SMs first.
+            pods.sort_by(|a, b| a.sm.cmp(&b.sm).then(a.id.0.cmp(&b.id.0)));
+            let mut remaining_pods = pods.len();
+            for pod in pods.iter() {
+                if c_remaining <= target {
+                    break;
+                }
+                let base_cap = caps[&pod.id];
+                let smf = crate::vgpu::sm_to_f64(pod.sm);
+                // SLO feasibility floor: never shrink a pod into a config
+                // whose service latency would breach the function SLO.
+                // The floor stays SLO-feasible even when idle: a keep-alive
+                // pod must serve the first reactivation request within the
+                // SLO (this is what eliminates FaST-GShare's cold-start
+                // violations). When traffic is (near-)zero the margin is
+                // relaxed to exactly the SLO — minimal keep-alive resources
+                // without risking the first request.
+                let floor = self
+                    .min_slo_quota(f, pod.sm, predictor, cfg.slo_margin)
+                    .max(cfg.min_quota);
+                // Reduce stepwise while capacity stays above target (line 22).
+                let mut n = 0u32;
+                let mut freed = 0.0;
+                while pod.quota >= floor + cfg.quota_step * (n + 1) {
+                    let q_new = pod.quota - cfg.quota_step * (n + 1);
+                    let cap_new = predictor.capacity(
+                        &f.graph,
+                        pod.batch,
+                        smf,
+                        crate::vgpu::quota_to_f64(q_new),
+                    );
+                    if c_remaining - (base_cap - cap_new) < target {
+                        break;
+                    }
+                    n += 1;
+                    freed = base_cap - cap_new;
+                }
+                // At least one pod is always retained (keep-alive: avoids the
+                // cold start of scaling from zero, line 20's R_min clause).
+                let keep_alive = remaining_pods == 1;
+                if pod.quota <= floor && !keep_alive {
+                    // Quota would hit zero: horizontal scale-down (lines 23-24)
+                    // — but only if capacity after removal still covers r.
+                    if c_remaining - base_cap >= r.max(0.0) || base_cap <= 0.0 {
+                        actions.push(ScalingAction::RemovePod { pod: pod.id });
+                        c_remaining -= base_cap;
+                        remaining_pods -= 1;
+                    }
+                } else if n > 0 {
+                    actions.push(ScalingAction::SetQuota {
+                        pod: pod.id,
+                        quota: (pod.quota - cfg.quota_step * n).max(floor),
+                    });
+                    c_remaining -= freed;
+                }
+            }
+            if !actions.is_empty() {
+                self.last_scale_down.insert(f.name.clone(), now);
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::reconfigurator::{place_pod, Reconfigurator};
+    use crate::cluster::GpuId;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+    use crate::perf::PerfModel;
+    use crate::rapp::OraclePredictor;
+
+    fn setup() -> (ClusterState, Reconfigurator, PerfModel, FunctionSpec) {
+        let mut c = ClusterState::new(6, 16e9);
+        let spec = FunctionSpec {
+            name: "resnet50".into(),
+            graph: zoo_graph(ZooModel::ResNet50),
+            slo: 0.25,
+            batch: 8,
+            artifact: None,
+        };
+        c.register_function(spec.clone());
+        let r = Reconfigurator::new(&c, 1);
+        (c, r, PerfModel::default(), spec)
+    }
+
+    #[test]
+    fn kalman_converges_to_constant_signal() {
+        let mut kf = KalmanFilter::new(1.0, 16.0);
+        let mut est = 0.0;
+        for _ in 0..100 {
+            est = kf.update(50.0);
+        }
+        assert!((est - 50.0).abs() < 1.0, "est {est}");
+    }
+
+    #[test]
+    fn kalman_tracks_ramp_with_lag() {
+        let mut kf = KalmanFilter::new(2.0, 8.0);
+        let mut last = 0.0;
+        for t in 0..200 {
+            last = kf.update(t as f64);
+        }
+        // Tracks a ramp with bounded lag.
+        assert!(last > 185.0 && last < 200.0, "est {last}");
+    }
+
+    #[test]
+    fn kalman_smooths_noise() {
+        let mut kf = KalmanFilter::new(0.5, 25.0);
+        let mut rng = crate::util::prng::Pcg64::seeded(1);
+        let mut errs_raw = 0.0;
+        let mut errs_kf = 0.0;
+        for _ in 0..500 {
+            let obs = 40.0 + rng.normal_ms(0.0, 5.0);
+            let est = kf.update(obs);
+            errs_raw += (obs - 40.0f64).abs();
+            errs_kf += (est - 40.0f64).abs();
+        }
+        assert!(errs_kf < errs_raw * 0.6, "kf {errs_kf} raw {errs_raw}");
+    }
+
+    #[test]
+    fn scale_up_prefers_vertical() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pod = place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
+        // Demand slightly above capacity: a quota bump suffices.
+        let actions = hs.plan(&spec, cap * 1.3, &c, &pred, 10.0);
+        assert!(
+            matches!(actions.as_slice(), [ScalingAction::SetQuota { pod: p, quota }] if *p == pod && *quota > 300),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn scale_up_goes_horizontal_when_vertical_exhausted() {
+        let (mut c, mut recon, pm, spec) = setup();
+        // Pod already at full quota on its slot.
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
+        let actions = hs.plan(&spec, cap * 1.5, &c, &pred, 10.0);
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, ScalingAction::CreatePod { .. })),
+            "{actions:?}"
+        );
+        // The new pod lands on the used GPU (lowest HGO among used) if it has
+        // room, or a new GPU otherwise — GPU-0 has 500‰ SM free, so used GPU.
+        if let Some(ScalingAction::CreatePod { gpu, new_gpu, .. }) = actions
+            .iter()
+            .find(|a| matches!(a, ScalingAction::CreatePod { .. }))
+        {
+            assert_eq!(*gpu, GpuId(0));
+            assert!(!new_gpu);
+        }
+    }
+
+    #[test]
+    fn burst_spills_to_new_gpu() {
+        let (mut c, mut recon, pm, spec) = setup();
+        // Fill GPU-0 completely.
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 1000, 1000, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let cap = pred.capacity(&spec.graph, 8, 1.0, 1.0);
+        let actions = hs.plan(&spec, cap * 3.0, &c, &pred, 10.0);
+        let create = actions
+            .iter()
+            .find_map(|a| match a {
+                ScalingAction::CreatePod { gpu, new_gpu, .. } => Some((*gpu, *new_gpu)),
+                _ => None,
+            })
+            .expect("must create a pod");
+        assert!(create.1, "should be a new GPU: {actions:?}");
+        assert_ne!(create.0, GpuId(0));
+    }
+
+    #[test]
+    fn no_action_inside_hysteresis_band() {
+        let (mut c, mut recon, pm, spec) = setup();
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 500, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.5);
+        // R = 0.6·C: between β=0.4 and α=0.8 ⇒ no actions.
+        let actions = hs.plan(&spec, cap * 0.6, &c, &pred, 10.0);
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    #[test]
+    fn scale_down_reduces_quota_then_respects_cooldown() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pod = place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
+        // Feed the filter a steady low rate so the estimate is low.
+        for t in 0..20 {
+            let _ = hs.plan(&spec, cap * 0.05, &c, &pred, t as f64);
+        }
+        let actions = hs.plan(&spec, cap * 0.05, &c, &pred, 100.0);
+        let down = actions.iter().find_map(|a| match a {
+            ScalingAction::SetQuota { pod: p, quota } if *p == pod => Some(*quota),
+            _ => None,
+        });
+        assert!(down.is_some() && down.unwrap() < 1000, "{actions:?}");
+        // Immediately after, cooldown blocks another scale-down.
+        let again = hs.plan(&spec, cap * 0.05, &c, &pred, 101.0);
+        assert!(again.is_empty(), "{again:?}");
+    }
+
+    #[test]
+    fn last_pod_is_kept_alive() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pod = place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 200, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        for t in 0..50 {
+            let actions = hs.plan(&spec, 0.0, &c, &pred, t as f64 * 40.0);
+            // The single pod must never be removed (keep-alive, avoids cold
+            // start from zero).
+            assert!(
+                !actions
+                    .iter()
+                    .any(|a| matches!(a, ScalingAction::RemovePod { pod: p } if *p == pod)),
+                "{actions:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn most_efficient_slice_meets_demand_cheaply() {
+        let (_c, _r, _pm, spec) = setup();
+        let pred = OraclePredictor::default();
+        let hs = HybridAutoscaler::new(HybridConfig::default());
+        let small = hs.most_efficient_slice(&spec, 5.0, &pred);
+        let big = hs.most_efficient_slice(&spec, 300.0, &pred);
+        let cost = |s: (SmMille, QuotaMille)| (s.0 as u64) * (s.1 as u64);
+        assert!(cost(small) < cost(big), "small {small:?} big {big:?}");
+        // The small slice really covers 5 rps.
+        let cap = pred.capacity(
+            &spec.graph,
+            spec.batch,
+            crate::vgpu::sm_to_f64(small.0),
+            crate::vgpu::quota_to_f64(small.1),
+        );
+        assert!(cap >= 5.0);
+    }
+}

@@ -1,0 +1,300 @@
+//! Cluster state: nodes, GPUs, pods, functions, and the GPU Re-configurator.
+//!
+//! Mirrors the paper's control-plane view (Fig. 1): the Hybrid Auto-Scaler
+//! reasons over function pods (`P_f`) and per-GPU occupancy (`{G_i}`, HGO);
+//! the **Re-configurator** is the only component that mutates GPU state — it
+//! bypasses the k8s device plugin, identifies GPUs by UUID (NVML-style), and
+//! writes allocation changes to each vGPU's device files.
+
+pub mod reconfigurator;
+
+pub use reconfigurator::{Applied, Reconfigurator, ScalingAction};
+
+use crate::model::OpGraph;
+use crate::vgpu::{ClientId, QuotaMille, SmMille, VGpu};
+use std::collections::BTreeMap;
+
+/// Cold-start latencies (seconds) — paper §4.3: KServe's GPU-instance
+/// horizontal scaling "incurs high latency from GPU device and system
+/// initialization"; shared-GPU platforms pay a container + model-load start;
+/// HAS-GPU vertical scaling pays neither.
+#[derive(Clone, Copy, Debug)]
+pub struct ColdStartSpec {
+    /// New GPU instance (device init + driver + system): KServe-style.
+    pub gpu_instance: f64,
+    /// New container on an already-managed GPU (image + CUDA ctx + model load).
+    pub container: f64,
+    /// Jitter fraction applied by the simulator (± uniform).
+    pub jitter: f64,
+}
+
+impl Default for ColdStartSpec {
+    fn default() -> Self {
+        ColdStartSpec {
+            // GPU *instance* provisioning (VM + driver + device init) — the
+            // paper singles this out as KServe's tail-latency killer.
+            gpu_instance: 20.0,
+            container: 3.0,
+            jitter: 0.2,
+        }
+    }
+}
+
+/// A deployed serverless inference function (the HASFunc CRD analogue).
+#[derive(Clone, Debug)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// Operator graph (drives the perf model, RaPP features, memory checks).
+    pub graph: OpGraph,
+    /// SLO latency bound in seconds.
+    pub slo: f64,
+    /// Serving batch size used by this function's pods.
+    pub batch: u32,
+    /// Real-mode artifact path (HLO text); None in pure-sim experiments.
+    pub artifact: Option<std::path::PathBuf>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PodId(pub u64);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GpuId(pub usize);
+
+/// Pod lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PodPhase {
+    /// Starting up; serves no traffic until `ready_at`.
+    ColdStarting { ready_at: f64 },
+    Running,
+    /// Excluded from routing; removed once in-flight work drains.
+    Draining,
+}
+
+/// A function instance bound to an SM partition + quota on one GPU.
+#[derive(Clone, Debug)]
+pub struct Pod {
+    pub id: PodId,
+    pub function: String,
+    pub gpu: GpuId,
+    pub sm: SmMille,
+    pub quota: QuotaMille,
+    pub batch: u32,
+    pub phase: PodPhase,
+    pub created_at: f64,
+    /// Cost accounting: time up to which this pod's GPU slice has been billed.
+    pub billed_until: f64,
+}
+
+impl Pod {
+    pub fn client_id(&self) -> ClientId {
+        ClientId(self.id.0)
+    }
+
+    pub fn is_ready(&self, now: f64) -> bool {
+        match self.phase {
+            PodPhase::ColdStarting { ready_at } => now >= ready_at,
+            PodPhase::Running => true,
+            PodPhase::Draining => false,
+        }
+    }
+}
+
+/// Whole-cluster state: the auto-scaler's world view.
+pub struct ClusterState {
+    gpus: Vec<VGpu>,
+    pods: BTreeMap<PodId, Pod>,
+    functions: BTreeMap<String, FunctionSpec>,
+    next_pod: u64,
+    pub coldstart: ColdStartSpec,
+}
+
+impl ClusterState {
+    /// A cluster of `n_gpus` identical GPUs with `mem_cap` bytes each.
+    pub fn new(n_gpus: usize, mem_cap: f64) -> Self {
+        ClusterState {
+            gpus: (0..n_gpus)
+                .map(|i| VGpu::new(&format!("GPU-{i:04x}"), mem_cap))
+                .collect(),
+            pods: BTreeMap::new(),
+            functions: BTreeMap::new(),
+            next_pod: 1,
+            coldstart: ColdStartSpec::default(),
+        }
+    }
+
+    pub fn register_function(&mut self, spec: FunctionSpec) {
+        self.functions.insert(spec.name.clone(), spec);
+    }
+
+    pub fn function(&self, name: &str) -> Option<&FunctionSpec> {
+        self.functions.get(name)
+    }
+
+    pub fn functions(&self) -> impl Iterator<Item = &FunctionSpec> {
+        self.functions.values()
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn gpu(&self, id: GpuId) -> &VGpu {
+        &self.gpus[id.0]
+    }
+
+    pub fn gpu_mut(&mut self, id: GpuId) -> &mut VGpu {
+        &mut self.gpus[id.0]
+    }
+
+    pub fn pods(&self) -> impl Iterator<Item = &Pod> {
+        self.pods.values()
+    }
+
+    pub fn pod(&self, id: PodId) -> Option<&Pod> {
+        self.pods.get(&id)
+    }
+
+    pub fn pod_mut(&mut self, id: PodId) -> Option<&mut Pod> {
+        self.pods.get_mut(&id)
+    }
+
+    /// Pods of one function (any phase).
+    pub fn pods_of(&self, function: &str) -> Vec<&Pod> {
+        self.pods
+            .values()
+            .filter(|p| p.function == function)
+            .collect()
+    }
+
+    /// GPUs currently hosting at least one pod.
+    pub fn used_gpus(&self) -> Vec<GpuId> {
+        (0..self.gpus.len())
+            .map(GpuId)
+            .filter(|&g| !self.gpus[g.0].is_idle())
+            .collect()
+    }
+
+    /// An idle GPU, if any (horizontal scale-up to a "new GPU", line 18-19).
+    pub fn idle_gpu(&self) -> Option<GpuId> {
+        (0..self.gpus.len())
+            .map(GpuId)
+            .find(|&g| self.gpus[g.0].is_idle())
+    }
+
+    /// Used GPU with the lowest HGO (Algorithm 1, line 11).
+    pub fn least_occupied_used_gpu(&self) -> Option<GpuId> {
+        self.used_gpus()
+            .into_iter()
+            .min_by(|&a, &b| {
+                self.gpus[a.0]
+                    .hgo()
+                    .partial_cmp(&self.gpus[b.0].hgo())
+                    .unwrap()
+            })
+    }
+
+    /// Number of GPUs with at least one pod (cost reporting).
+    pub fn gpus_in_use(&self) -> usize {
+        self.used_gpus().len()
+    }
+
+    /// Allocate a pod id (the Re-configurator performs the actual placement).
+    pub(crate) fn alloc_pod_id(&mut self) -> PodId {
+        let id = PodId(self.next_pod);
+        self.next_pod += 1;
+        id
+    }
+
+    pub(crate) fn insert_pod(&mut self, pod: Pod) {
+        self.pods.insert(pod.id, pod);
+    }
+
+    pub(crate) fn remove_pod(&mut self, id: PodId) -> Option<Pod> {
+        self.pods.remove(&id)
+    }
+
+    /// Global invariant check for property tests: every pod's placement is
+    /// consistent with its GPU's vGPU accounting.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for g in &self.gpus {
+            g.check_invariants()?;
+        }
+        for pod in self.pods.values() {
+            let vg = &self.gpus[pod.gpu.0];
+            let placement = vg
+                .clients()
+                .get(&pod.client_id())
+                .ok_or_else(|| format!("pod {:?} missing from vGPU {}", pod.id, vg.uuid))?;
+            if placement.sm != pod.sm || placement.quota != pod.quota {
+                return Err(format!(
+                    "pod {:?} desync: pod(sm={},q={}) vgpu(sm={},q={})",
+                    pod.id, pod.sm, pod.quota, placement.sm, placement.quota
+                ));
+            }
+        }
+        // No orphan clients.
+        let pod_clients: std::collections::BTreeSet<ClientId> =
+            self.pods.values().map(|p| p.client_id()).collect();
+        for g in &self.gpus {
+            for (&c, _) in g.clients() {
+                if !pod_clients.contains(&c) {
+                    return Err(format!("orphan client {c:?} on {}", g.uuid));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+
+    pub(crate) fn test_cluster() -> ClusterState {
+        let mut c = ClusterState::new(4, 16e9);
+        c.register_function(FunctionSpec {
+            name: "resnet50".into(),
+            graph: zoo_graph(ZooModel::ResNet50),
+            slo: 0.1,
+            batch: 8,
+            artifact: None,
+        });
+        c
+    }
+
+    #[test]
+    fn gpu_inventory() {
+        let c = test_cluster();
+        assert_eq!(c.n_gpus(), 4);
+        assert_eq!(c.used_gpus().len(), 0);
+        assert_eq!(c.idle_gpu(), Some(GpuId(0)));
+        assert!(c.function("resnet50").is_some());
+        assert!(c.function("nope").is_none());
+    }
+
+    #[test]
+    fn pod_phase_readiness() {
+        let pod = Pod {
+            id: PodId(1),
+            function: "f".into(),
+            gpu: GpuId(0),
+            sm: 500,
+            quota: 500,
+            batch: 4,
+            phase: PodPhase::ColdStarting { ready_at: 5.0 },
+            created_at: 0.0,
+            billed_until: 0.0,
+        };
+        assert!(!pod.is_ready(4.9));
+        assert!(pod.is_ready(5.0));
+        let mut draining = pod.clone();
+        draining.phase = PodPhase::Draining;
+        assert!(!draining.is_ready(100.0));
+    }
+
+    #[test]
+    fn empty_cluster_invariants_hold() {
+        test_cluster().check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,340 @@
+//! The GPU Re-configurator: the single mutation path for GPU allocations.
+//!
+//! Paper §3.1: the Re-configurator bypasses the Kubernetes device plugin,
+//! manages GPU topology directly via NVML UUIDs, schedules pods to *specific*
+//! GPUs, and writes connection + resource reconfiguration information to the
+//! vGPU device files. All scaling actions produced by the auto-scaler are
+//! applied through [`Reconfigurator::apply`], which keeps the cluster state,
+//! vGPU accounting, device files, and (in real mode) token schedulers in sync.
+
+use super::{ClusterState, GpuId, Pod, PodId, PodPhase};
+use crate::perf::PerfModel;
+use crate::util::prng::Pcg64;
+use crate::vgpu::device_file::DeviceFile;
+use crate::vgpu::tokens::TokenScheduler;
+use crate::vgpu::{AllocError, QuotaMille, SmMille};
+
+/// A scaling action (the S_i of Algorithm 1).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScalingAction {
+    /// Vertical scale (→ / ←): re-write a pod's quota.
+    SetQuota { pod: PodId, quota: QuotaMille },
+    /// Horizontal scale-up (↑): create a pod on a specific GPU.
+    CreatePod {
+        function: String,
+        gpu: GpuId,
+        sm: SmMille,
+        quota: QuotaMille,
+        batch: u32,
+        /// True when the GPU was previously unused (pays GPU-instance
+        /// cold start instead of container cold start).
+        new_gpu: bool,
+    },
+    /// Horizontal scale-down (↓): drain and remove a pod.
+    RemovePod { pod: PodId },
+}
+
+/// Outcome of applying one action.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Applied {
+    QuotaSet { pod: PodId, old: QuotaMille, new: QuotaMille },
+    PodCreated { pod: PodId, ready_at: f64 },
+    PodRemoved { pod: PodId },
+}
+
+pub struct Reconfigurator {
+    /// One device-file pair per GPU, indexed by GpuId.
+    device_files: Vec<DeviceFile>,
+    /// Real-mode token schedulers (None in sim mode).
+    schedulers: Option<Vec<TokenScheduler>>,
+    rng: Pcg64,
+}
+
+impl Reconfigurator {
+    pub fn new(cluster: &ClusterState, seed: u64) -> Self {
+        Reconfigurator {
+            device_files: (0..cluster.n_gpus())
+                .map(|i| DeviceFile::new(cluster.gpu(GpuId(i)).uuid.clone().as_str()))
+                .collect(),
+            schedulers: None,
+            rng: Pcg64::new(seed, 3),
+        }
+    }
+
+    /// Attach real token schedulers (real serving mode) with window `w` secs.
+    pub fn with_token_schedulers(mut self, n_gpus: usize, window: f64) -> Self {
+        self.schedulers = Some((0..n_gpus).map(|_| TokenScheduler::new(window)).collect());
+        self
+    }
+
+    pub fn device_file(&self, gpu: GpuId) -> &DeviceFile {
+        &self.device_files[gpu.0]
+    }
+
+    pub fn token_scheduler(&self, gpu: GpuId) -> Option<&TokenScheduler> {
+        self.schedulers.as_ref().map(|s| &s[gpu.0])
+    }
+
+    /// Apply one scaling action at time `now`, mutating the cluster.
+    pub fn apply(
+        &mut self,
+        cluster: &mut ClusterState,
+        perf: &PerfModel,
+        action: &ScalingAction,
+        now: f64,
+    ) -> Result<Applied, AllocError> {
+        match action {
+            ScalingAction::SetQuota { pod, quota } => {
+                let (gpu, client) = {
+                    let p = cluster
+                        .pod(*pod)
+                        .ok_or(AllocError::UnknownClient(crate::vgpu::ClientId(pod.0)))?;
+                    (p.gpu, p.client_id())
+                };
+                let old = cluster.gpu_mut(gpu).set_quota(client, *quota)?;
+                cluster.pod_mut(*pod).expect("pod exists").quota = *quota;
+                self.device_files[gpu.0].write_quota(client, *quota);
+                if let Some(scheds) = &self.schedulers {
+                    scheds[gpu.0].set_quota(client, *quota);
+                }
+                Ok(Applied::QuotaSet {
+                    pod: *pod,
+                    old,
+                    new: *quota,
+                })
+            }
+            ScalingAction::CreatePod {
+                function,
+                gpu,
+                sm,
+                quota,
+                batch,
+                new_gpu,
+            } => {
+                let spec = cluster
+                    .function(function)
+                    .unwrap_or_else(|| panic!("unknown function '{function}'"))
+                    .clone();
+                let mem = spec.graph.memory_bytes(*batch);
+                let id = cluster.alloc_pod_id();
+                let client = crate::vgpu::ClientId(id.0);
+                cluster.gpu_mut(*gpu).attach(client, *sm, *quota, mem)?;
+                let cs = &cluster.coldstart;
+                let base = if *new_gpu { cs.gpu_instance } else { cs.container };
+                let jitter = 1.0 + cs.jitter * (2.0 * self.rng.next_f64() - 1.0);
+                // Model-load time scales with weights over PCIe-ish 8 GB/s.
+                let load = 4.0 * spec.graph.total_params() / 8e9;
+                let ready_at = now + base * jitter + load;
+                let pod = Pod {
+                    id,
+                    function: function.clone(),
+                    gpu: *gpu,
+                    sm: *sm,
+                    quota: *quota,
+                    batch: *batch,
+                    phase: PodPhase::ColdStarting { ready_at },
+                    created_at: now,
+                    billed_until: now,
+                };
+                cluster.insert_pod(pod);
+                self.device_files[gpu.0].write_client(client, *sm, *quota);
+                if let Some(scheds) = &self.schedulers {
+                    scheds[gpu.0].register(client, *quota);
+                }
+                // Memory feasibility double-check against the device spec.
+                debug_assert!(perf.fits_memory(&spec.graph, *batch, perf.dev.mem_cap));
+                Ok(Applied::PodCreated { pod: id, ready_at })
+            }
+            ScalingAction::RemovePod { pod } => {
+                let p = cluster
+                    .remove_pod(*pod)
+                    .ok_or(AllocError::UnknownClient(crate::vgpu::ClientId(pod.0)))?;
+                let spec = cluster.function(&p.function).expect("function exists");
+                let mem = spec.graph.memory_bytes(p.batch);
+                cluster.gpu_mut(p.gpu).detach(p.client_id(), mem)?;
+                self.device_files[p.gpu.0].remove_client(p.client_id());
+                if let Some(scheds) = &self.schedulers {
+                    scheds[p.gpu.0].deregister(p.client_id());
+                }
+                Ok(Applied::PodRemoved { pod: *pod })
+            }
+        }
+    }
+
+    /// NVML-style inventory line per GPU (UUID, classes, HGO, free SM/mem).
+    pub fn inventory(&self, cluster: &ClusterState) -> Vec<String> {
+        (0..cluster.n_gpus())
+            .map(|i| {
+                let g = cluster.gpu(GpuId(i));
+                format!(
+                    "{} classes={:?} hgo={:.3} free_sm={}‰ free_mem={:.1}GB dfv={}",
+                    g.uuid,
+                    g.sm_classes(),
+                    g.hgo(),
+                    g.sm_free(),
+                    g.mem_free() / 1e9,
+                    self.device_files[i].version()
+                )
+            })
+            .collect()
+    }
+}
+
+/// Convenience builder used by tests, benches, and examples.
+pub fn place_pod(
+    recon: &mut Reconfigurator,
+    cluster: &mut ClusterState,
+    perf: &PerfModel,
+    function: &str,
+    gpu: GpuId,
+    sm: SmMille,
+    quota: QuotaMille,
+    batch: u32,
+    now: f64,
+) -> Result<PodId, AllocError> {
+    let new_gpu = cluster.gpu(gpu).is_idle();
+    match recon.apply(
+        cluster,
+        perf,
+        &ScalingAction::CreatePod {
+            function: function.to_string(),
+            gpu,
+            sm,
+            quota,
+            batch,
+            new_gpu,
+        },
+        now,
+    )? {
+        Applied::PodCreated { pod, .. } => Ok(pod),
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::FunctionSpec;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+
+    fn setup() -> (ClusterState, Reconfigurator, PerfModel) {
+        let mut c = ClusterState::new(3, 16e9);
+        c.register_function(FunctionSpec {
+            name: "resnet50".into(),
+            graph: zoo_graph(ZooModel::ResNet50),
+            slo: 0.1,
+            batch: 8,
+            artifact: None,
+        });
+        let r = Reconfigurator::new(&c, 42);
+        (c, r, PerfModel::default())
+    }
+
+    #[test]
+    fn create_scale_remove_lifecycle() {
+        let (mut c, mut r, pm) = setup();
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        c.check_invariants().unwrap();
+        assert_eq!(c.pods_of("resnet50").len(), 1);
+        assert!(matches!(
+            c.pod(pod).unwrap().phase,
+            PodPhase::ColdStarting { .. }
+        ));
+        assert_eq!(r.device_file(GpuId(0)).version(), 1);
+
+        // Vertical scale-up.
+        let applied = r
+            .apply(&mut c, &pm, &ScalingAction::SetQuota { pod, quota: 800 }, 1.0)
+            .unwrap();
+        assert_eq!(
+            applied,
+            Applied::QuotaSet {
+                pod,
+                old: 300,
+                new: 800
+            }
+        );
+        assert_eq!(c.pod(pod).unwrap().quota, 800);
+        c.check_invariants().unwrap();
+
+        // Remove.
+        r.apply(&mut c, &pm, &ScalingAction::RemovePod { pod }, 2.0)
+            .unwrap();
+        assert!(c.pod(pod).is_none());
+        assert!(c.gpu(GpuId(0)).is_idle());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn new_gpu_coldstart_slower_than_container() {
+        let (mut c, mut r, pm) = setup();
+        // First pod on GPU-0: new_gpu=true.
+        let a1 = r
+            .apply(
+                &mut c,
+                &pm,
+                &ScalingAction::CreatePod {
+                    function: "resnet50".into(),
+                    gpu: GpuId(0),
+                    sm: 250,
+                    quota: 300,
+                    batch: 8,
+                    new_gpu: true,
+                },
+                0.0,
+            )
+            .unwrap();
+        // Second pod on same GPU: container start.
+        let a2 = r
+            .apply(
+                &mut c,
+                &pm,
+                &ScalingAction::CreatePod {
+                    function: "resnet50".into(),
+                    gpu: GpuId(0),
+                    sm: 250,
+                    quota: 300,
+                    batch: 8,
+                    new_gpu: false,
+                },
+                0.0,
+            )
+            .unwrap();
+        let (Applied::PodCreated { ready_at: r1, .. }, Applied::PodCreated { ready_at: r2, .. }) =
+            (a1, a2)
+        else {
+            panic!()
+        };
+        assert!(r1 > r2, "gpu-instance start {r1} vs container start {r2}");
+    }
+
+    #[test]
+    fn quota_rewrite_propagates_to_device_file() {
+        let (mut c, mut r, pm) = setup();
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(1), 500, 200, 8, 0.0).unwrap();
+        r.apply(&mut c, &pm, &ScalingAction::SetQuota { pod, quota: 700 }, 1.0)
+            .unwrap();
+        let (_, q, _) = r.device_file(GpuId(1)).read();
+        assert_eq!(q.entries[&c.pod(pod).unwrap().client_id()], 700);
+    }
+
+    #[test]
+    fn alloc_errors_bubble_up() {
+        let (mut c, mut r, pm) = setup();
+        place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 800, 1000, 8, 0.0).unwrap();
+        let err = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 800, 1000, 8, 0.0);
+        assert!(matches!(err, Err(AllocError::NoSm { .. })));
+        // Failed placement must not leak state.
+        c.check_invariants().unwrap();
+        assert_eq!(c.pods_of("resnet50").len(), 1);
+    }
+
+    #[test]
+    fn inventory_reports_all_gpus() {
+        let (mut c, mut r, pm) = setup();
+        place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(2), 500, 500, 8, 0.0).unwrap();
+        let inv = r.inventory(&c);
+        assert_eq!(inv.len(), 3);
+        assert!(inv[2].contains("hgo=0.250"));
+    }
+}

@@ -1,0 +1,47 @@
+//! # HAS-GPU — Hybrid Auto-scaling Serverless inference with fine-grained GPU allocation
+//!
+//! Reproduction of *HAS-GPU: Efficient Hybrid Auto-scaling with Fine-grained GPU
+//! Allocation for SLO-aware Serverless Inferences* (Gu et al., 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX + Pallas
+//! stack: Python/JAX (L2) and Pallas kernels (L1) are used *only at build time*
+//! to AOT-compile model artifacts to HLO text; this crate loads and executes
+//! them through the PJRT CPU client ([`runtime`]) and owns every request-path
+//! component:
+//!
+//! * [`vgpu`] — the fine-grained spatio-temporal GPU allocation substrate
+//!   (SM partitions + time-window token quotas, runtime quota re-writes);
+//! * [`cluster`] — nodes, GPUs, pods, occupancy (HGO), the re-configurator;
+//! * [`rapp`] — the Resource-aware Performance Predictor (GAT + MLP) and the
+//!   DIPPM static-feature baseline;
+//! * [`autoscaler`] — Kalman-filter workload prediction + the hybrid
+//!   vertical/horizontal scaling algorithm (paper Algorithm 1);
+//! * [`baselines`] — KServe-like and FaST-GShare-like comparator autoscalers;
+//! * [`gateway`] — ingress, capacity-weighted load balancing, dynamic batching;
+//! * [`workload`] — Azure-trace-style workload synthesis and open-loop driving;
+//! * [`sim`] — a discrete-event simulation harness reproducing the paper's
+//!   cluster-scale experiments (Figs. 6 and 7);
+//! * [`perf`] — the calibrated roofline performance model (ground truth);
+//! * [`metrics`] — SLO-violation curves, tail latency, and cost accounting.
+//!
+//! See `DESIGN.md` for the module inventory and experiment index and
+//! `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod autoscaler;
+pub mod baselines;
+pub mod cluster;
+pub mod gateway;
+pub mod metrics;
+pub mod model;
+pub mod perf;
+pub mod rapp;
+pub mod runtime;
+pub mod sim;
+pub mod simclock;
+pub mod util;
+pub mod vgpu;
+pub mod workload;
+
+
+pub use perf::PerfModel;
+

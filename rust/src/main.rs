@@ -1,0 +1,187 @@
+//! `has-gpu` — the leader binary: simulate (cluster scale), predict (RaPP
+//! CLI), trace-gen, and zoo inventory subcommands.
+
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
+use has_gpu::cluster::FunctionSpec;
+use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::{LatencyPredictor, OraclePredictor, RappPredictor};
+use has_gpu::sim::{run_sim, SimConfig};
+use has_gpu::workload::{Preset, TraceGen};
+use std::path::PathBuf;
+
+const USAGE: &str = "has-gpu — Hybrid Auto-scaling Serverless GPU inference (reproduction)
+
+USAGE: has-gpu <COMMAND> [options]
+
+COMMANDS:
+  simulate   run a platform-vs-platform cluster simulation and print the report
+             [--platform has-gpu|kserve|fast-gshare] [--preset standard|stress]
+             [--seconds N] [--gpus N] [--rps R] [--seed S] [--json]
+  predict    RaPP latency prediction (requires artifacts)
+             [--model NAME] [--batch B] [--sm F] [--quota F]
+  trace-gen  synthesise an Azure-style workload trace as JSON to stdout
+             [--preset standard|stress] [--seconds N] [--rps R] [--seed S]
+  zoo        list benchmark models with FLOPs/params/baseline latency
+  help       this message
+";
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match cmd.as_str() {
+        "simulate" => simulate(argv),
+        "predict" => predict(argv),
+        "trace-gen" => trace_gen(argv),
+        "zoo" => {
+            let pm = PerfModel::default();
+            println!("{:<16} {:>10} {:>10} {:>14}", "model", "GFLOPs", "Mparams", "baseline(ms)");
+            for m in has_gpu::model::zoo::ALL_ZOO {
+                let g = zoo_graph(m);
+                println!(
+                    "{:<16} {:>10.2} {:>10.2} {:>14.2}",
+                    g.name,
+                    g.total_flops(1) / 1e9,
+                    g.total_params() / 1e6,
+                    pm.latency(&g, 1, 1.0, 1.0) * 1e3
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn opt(argv: &[String], name: &str, default: &str) -> String {
+    argv.iter()
+        .position(|a| a == &format!("--{name}"))
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn experiment_functions() -> Vec<FunctionSpec> {
+    let perf = PerfModel::default();
+    has_gpu::model::zoo::ALL_ZOO
+        .iter()
+        .filter(|m| !matches!(m, ZooModel::ResNet152)) // the Fig.4 subject stays out
+        .map(|&m| {
+            let graph = zoo_graph(m);
+            let baseline = perf.latency(&graph, 1, 1.0, 1.0);
+            let slo = baseline * 3.0;
+            let batch = [16u32, 8, 4, 2, 1]
+                .into_iter()
+                .find(|&b| perf.latency(&graph, b, 1.0, 1.0) <= slo * 0.5)
+                .unwrap_or(1);
+            FunctionSpec { name: graph.name.clone(), slo, batch, graph, artifact: None }
+        })
+        .collect()
+}
+
+fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
+    let platform = opt(&argv, "platform", "has-gpu");
+    let preset = match opt(&argv, "preset", "standard").as_str() {
+        "stress" => Preset::Stress,
+        _ => Preset::Standard,
+    };
+    let seconds: usize = opt(&argv, "seconds", "300").parse()?;
+    let gpus: usize = opt(&argv, "gpus", "10").parse()?;
+    let rps: f64 = opt(&argv, "rps", "150").parse()?;
+    let seed: u64 = opt(&argv, "seed", "11").parse()?;
+
+    let fns = experiment_functions();
+    let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+    let trace = TraceGen::preset(preset, seed, seconds, rps).generate(&names);
+    let perf = PerfModel::default();
+    let pred = OraclePredictor::default();
+
+    let (mut policy, whole): (Box<dyn ScalingPolicy>, bool) = match platform.as_str() {
+        "kserve" => (Box::new(KServePolicy::default()), true),
+        "fast-gshare" => (Box::new(FastGSharePolicy::default()), false),
+        _ => (Box::new(HybridAutoscaler::new(HybridConfig::default())), false),
+    };
+    let report = run_sim(
+        policy.as_mut(),
+        &fns,
+        &trace,
+        &pred,
+        &perf,
+        &SimConfig { n_gpus: gpus, seed, bill_whole_gpu: whole, ..SimConfig::default() },
+    );
+    if argv.iter().any(|a| a == "--json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!(
+            "platform={} duration={:.0}s served={} dropped={} cost=${:.4} v-ups={} h-ups={} h-downs={}",
+            report.platform,
+            report.duration,
+            report.total_served(),
+            report.total_dropped(),
+            report.costs.total_cost(),
+            report.vertical_ups,
+            report.horizontal_ups,
+            report.horizontal_downs
+        );
+        for (f, m) in &report.functions {
+            let mut s = m.latency_summary();
+            if s.is_empty() {
+                continue;
+            }
+            println!(
+                "  {f:<16} served={:>7} p50={:>7.1}ms p99={:>8.1}ms cost/1k=${:.4}",
+                m.served(),
+                s.p50() * 1e3,
+                s.p99() * 1e3,
+                report.costs.cost_per_1k(f, m.served())
+            );
+        }
+    }
+    Ok(())
+}
+
+fn predict(argv: Vec<String>) -> anyhow::Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let model = opt(&argv, "model", "resnet50");
+    let batch: u32 = opt(&argv, "batch", "8").parse()?;
+    let sm: f64 = opt(&argv, "sm", "0.5").parse()?;
+    let quota: f64 = opt(&argv, "quota", "0.6").parse()?;
+    let Some(zoo) = ZooModel::from_name(&model) else {
+        anyhow::bail!("unknown model '{model}'; available: {:?}", zoo_names());
+    };
+    let g = zoo_graph(zoo);
+    let pm = PerfModel::default();
+    let truth = pm.latency(&g, batch, sm, quota);
+    println!("ground truth: {:.3} ms", truth * 1e3);
+    if dir.join("rapp_weights.json").exists() {
+        let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone())?;
+        let p = rapp.latency(&g, batch, sm, quota);
+        println!(
+            "RaPP:         {:.3} ms ({:+.1}%)  capacity {:.1} req/s",
+            p * 1e3,
+            (p / truth - 1.0) * 100.0,
+            rapp.capacity(&g, batch, sm, quota)
+        );
+    } else {
+        println!("(no artifacts — run `make artifacts` for RaPP predictions)");
+    }
+    Ok(())
+}
+
+fn trace_gen(argv: Vec<String>) -> anyhow::Result<()> {
+    let preset = match opt(&argv, "preset", "standard").as_str() {
+        "stress" => Preset::Stress,
+        _ => Preset::Standard,
+    };
+    let seconds: usize = opt(&argv, "seconds", "300").parse()?;
+    let rps: f64 = opt(&argv, "rps", "150").parse()?;
+    let seed: u64 = opt(&argv, "seed", "11").parse()?;
+    let fns = experiment_functions();
+    let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+    let trace = TraceGen::preset(preset, seed, seconds, rps).generate(&names);
+    println!("{}", trace.to_json().to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! Metrics plane: per-request records, SLO-violation curves, tail latency,
+//! and fine-grained cost accounting.
+//!
+//! Reproduces the paper's evaluation methodology (§4.3):
+//!
+//! * **SLO violations** are measured against *baseline multipliers*: the
+//!   baseline is "the theoretical shortest inference time of a DL model
+//!   running in a pure container" (= full GPU, full quota latency), swept
+//!   from 1× to 10× in steps of 0.25 (Fig. 6).
+//! * **Cost** is billed at the Google Cloud V100 price ($2.48/h); for
+//!   fine-grained allocation, a pod is billed for `sm × quota × wall-time`;
+//!   whole-GPU platforms are billed for the full GPU (Fig. 7, $/1K requests).
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+/// Outcome of one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Outcome {
+    Ok,
+    /// Dropped: queue overflowed or no capacity before timeout.
+    Dropped,
+}
+
+/// One served (or dropped) request.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestRecord {
+    pub arrival: f64,
+    /// End-to-end latency (queueing + batching + execution), seconds.
+    pub latency: f64,
+    pub outcome: Outcome,
+}
+
+/// Per-function request log.
+#[derive(Clone, Debug, Default)]
+pub struct FunctionMetrics {
+    pub records: Vec<RequestRecord>,
+}
+
+impl FunctionMetrics {
+    pub fn record(&mut self, arrival: f64, latency: f64, outcome: Outcome) {
+        self.records.push(RequestRecord {
+            arrival,
+            latency,
+            outcome,
+        });
+    }
+
+    pub fn served(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.outcome == Outcome::Ok)
+            .count()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.records.len() - self.served()
+    }
+
+    /// Violation rate at an absolute latency bound. Dropped requests always
+    /// count as violations.
+    pub fn violation_rate(&self, slo: f64) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let viol = self
+            .records
+            .iter()
+            .filter(|r| r.outcome == Outcome::Dropped || r.latency > slo)
+            .count();
+        viol as f64 / self.records.len() as f64
+    }
+
+    /// The Fig. 6 curve: violation rate at `baseline × m` for each multiplier
+    /// m in 1.0..=10.0 step 0.25.
+    pub fn violation_curve(&self, baseline: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(37);
+        let mut m = 1.0;
+        while m <= 10.0 + 1e-9 {
+            out.push((m, self.violation_rate(baseline * m)));
+            m += 0.25;
+        }
+        out
+    }
+
+    /// Latency summary over served requests.
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in &self.records {
+            if r.outcome == Outcome::Ok {
+                s.add(r.latency);
+            }
+        }
+        s
+    }
+}
+
+/// Billing meter: accumulates $-cost per function from GPU-slice usage.
+#[derive(Clone, Debug, Default)]
+pub struct CostMeter {
+    /// function → accumulated cost in $.
+    cost: BTreeMap<String, f64>,
+    /// function → accumulated GPU-seconds (sm×quota-weighted).
+    gpu_seconds: BTreeMap<String, f64>,
+}
+
+impl CostMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bill `function` for holding an (sm, quota) slice over `dur` seconds.
+    /// Whole-GPU platforms pass sm = quota = 1.
+    pub fn bill_slice(
+        &mut self,
+        function: &str,
+        sm: f64,
+        quota: f64,
+        dur: f64,
+        price_per_hour: f64,
+    ) {
+        debug_assert!(dur >= 0.0);
+        let gpu_sec = sm * quota * dur;
+        *self.cost.entry(function.to_string()).or_insert(0.0) +=
+            price_per_hour / 3600.0 * gpu_sec;
+        *self.gpu_seconds.entry(function.to_string()).or_insert(0.0) += gpu_sec;
+    }
+
+    pub fn cost_of(&self, function: &str) -> f64 {
+        self.cost.get(function).copied().unwrap_or(0.0)
+    }
+
+    pub fn gpu_seconds_of(&self, function: &str) -> f64 {
+        self.gpu_seconds.get(function).copied().unwrap_or(0.0)
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.cost.values().sum()
+    }
+
+    /// The Fig. 7 metric: $ per 1000 served requests.
+    pub fn cost_per_1k(&self, function: &str, served: usize) -> f64 {
+        if served == 0 {
+            return f64::INFINITY;
+        }
+        self.cost_of(function) * 1000.0 / served as f64
+    }
+}
+
+/// Aggregated result of one platform × workload experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub platform: String,
+    pub functions: BTreeMap<String, FunctionMetrics>,
+    pub costs: CostMeter,
+    /// Wall-clock (or virtual) duration of the run.
+    pub duration: f64,
+    /// Scaling-action counts for diagnostics.
+    pub vertical_ups: usize,
+    pub vertical_downs: usize,
+    pub horizontal_ups: usize,
+    pub horizontal_downs: usize,
+}
+
+impl RunReport {
+    pub fn new(platform: &str) -> Self {
+        RunReport {
+            platform: platform.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn function(&mut self, name: &str) -> &mut FunctionMetrics {
+        self.functions.entry(name.to_string()).or_default()
+    }
+
+    pub fn total_served(&self) -> usize {
+        self.functions.values().map(|f| f.served()).sum()
+    }
+
+    pub fn total_dropped(&self) -> usize {
+        self.functions.values().map(|f| f.dropped()).sum()
+    }
+
+    /// Export as JSON for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let fns = self
+            .functions
+            .iter()
+            .map(|(name, m)| {
+                let mut lat = m.latency_summary();
+                (
+                    name.clone(),
+                    Json::obj(vec![
+                        ("served", Json::Num(m.served() as f64)),
+                        ("dropped", Json::Num(m.dropped() as f64)),
+                        ("p50", Json::Num(if lat.is_empty() { 0.0 } else { lat.p50() })),
+                        ("p90", Json::Num(if lat.is_empty() { 0.0 } else { lat.p90() })),
+                        ("p95", Json::Num(if lat.is_empty() { 0.0 } else { lat.p95() })),
+                        ("p99", Json::Num(if lat.is_empty() { 0.0 } else { lat.p99() })),
+                        ("cost", Json::Num(self.costs.cost_of(name))),
+                        (
+                            "cost_per_1k",
+                            Json::Num(self.costs.cost_per_1k(name, m.served())),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("platform", Json::Str(self.platform.clone())),
+            ("duration", Json::Num(self.duration)),
+            ("functions", Json::Obj(fns)),
+            ("vertical_ups", Json::Num(self.vertical_ups as f64)),
+            ("vertical_downs", Json::Num(self.vertical_downs as f64)),
+            ("horizontal_ups", Json::Num(self.horizontal_ups as f64)),
+            ("horizontal_downs", Json::Num(self.horizontal_downs as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_rate_counts_drops() {
+        let mut m = FunctionMetrics::default();
+        m.record(0.0, 0.05, Outcome::Ok);
+        m.record(1.0, 0.20, Outcome::Ok);
+        m.record(2.0, 0.01, Outcome::Dropped);
+        // SLO 0.1: one slow + one dropped = 2/3.
+        assert!((m.violation_rate(0.1) - 2.0 / 3.0).abs() < 1e-9);
+        // Very loose SLO: only the drop violates.
+        assert!((m.violation_rate(10.0) - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn violation_curve_shape() {
+        let mut m = FunctionMetrics::default();
+        for i in 0..100 {
+            m.record(i as f64, 0.01 * (1.0 + i as f64 / 25.0), Outcome::Ok);
+        }
+        let curve = m.violation_curve(0.01);
+        assert_eq!(curve.len(), 37);
+        assert_eq!(curve[0].0, 1.0);
+        assert_eq!(curve[36].0, 10.0);
+        // Monotone non-increasing in the multiplier.
+        for w in curve.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn cost_meter_fine_vs_whole_gpu() {
+        let mut cm = CostMeter::new();
+        cm.bill_slice("f", 0.25, 0.5, 3600.0, 2.48);
+        cm.bill_slice("g", 1.0, 1.0, 3600.0, 2.48);
+        assert!((cm.cost_of("f") - 2.48 * 0.125).abs() < 1e-9);
+        assert!((cm.cost_of("g") - 2.48).abs() < 1e-9);
+        assert!((cm.total_cost() - 2.48 * 1.125).abs() < 1e-9);
+        assert!((cm.cost_per_1k("g", 500) - 4.96).abs() < 1e-9);
+        assert!(cm.cost_per_1k("g", 0).is_infinite());
+        assert!(cm.gpu_seconds_of("f") > 0.0);
+    }
+
+    #[test]
+    fn run_report_json_exports() {
+        let mut r = RunReport::new("has-gpu");
+        r.function("resnet50").record(0.0, 0.03, Outcome::Ok);
+        r.costs.bill_slice("resnet50", 0.5, 0.5, 100.0, 2.48);
+        let j = r.to_json();
+        assert_eq!(j.get("platform").unwrap().as_str().unwrap(), "has-gpu");
+        let f = j.get("functions").unwrap().get("resnet50").unwrap();
+        assert_eq!(f.get("served").unwrap().as_f64().unwrap(), 1.0);
+        assert!(f.get("cost").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(r.total_served(), 1);
+        assert_eq!(r.total_dropped(), 0);
+    }
+}

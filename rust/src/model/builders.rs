@@ -1,0 +1,258 @@
+//! [`GraphBuilder`] — ergonomic construction of operator DAGs with
+//! automatically derived FLOPs/bytes/params from layer hyper-parameters.
+//!
+//! Builders emit *stage-level* nodes (a residual block's convs are one node)
+//! so zoo graphs stay under the 64-node padding bound shared with the
+//! RaPP HLO artifact (`MAX_NODES` contract).
+
+use super::{OpGraph, OpKind, OpNode};
+
+/// Hard cap shared with `python/compile/features.py::MAX_NODES`.
+pub const MAX_NODES: usize = 64;
+
+pub struct GraphBuilder {
+    name: String,
+    family: String,
+    nodes: Vec<OpNode>,
+    edges: Vec<(usize, usize)>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, family: &str) -> Self {
+        GraphBuilder {
+            name: name.to_string(),
+            family: family.to_string(),
+            nodes: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    /// Append a node depending on `deps`; returns its index.
+    pub fn push(&mut self, node: OpNode, deps: &[usize]) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(node);
+        for &d in deps {
+            assert!(d < id, "forward edges only");
+            self.edges.push((d, id));
+        }
+        id
+    }
+
+    /// Conv2d node: `k`×`k` kernel, `cin`→`cout` channels, output side
+    /// `out_side`, stride `stride`. FLOPs = 2·k²·cin·cout·out². `repeat`
+    /// aggregates N identical convs into one stage node (stage-level IR).
+    pub fn conv(
+        &mut self,
+        deps: &[usize],
+        k: u32,
+        cin: u32,
+        cout: u32,
+        out_side: u32,
+        stride: u32,
+        repeat: u32,
+    ) -> usize {
+        let out_elems = (cout as f64) * (out_side as f64).powi(2);
+        let flops = 2.0 * (k as f64).powi(2) * cin as f64 * out_elems * repeat as f64;
+        let bytes = 4.0
+            * (cin as f64 * (out_side as f64 * stride as f64).powi(2)
+                + out_elems)
+            * repeat as f64;
+        let params = (k as f64).powi(2) * cin as f64 * cout as f64 * repeat as f64;
+        self.push(
+            OpNode {
+                kind: OpKind::Conv2d,
+                flops,
+                bytes,
+                params,
+                kernels: repeat.max(1),
+                kernel: k,
+                stride,
+                cin,
+                cout,
+                spatial: out_side,
+            },
+            deps,
+        )
+    }
+
+    /// Dense (fully-connected) layer: FLOPs = 2·nin·nout.
+    pub fn dense(&mut self, deps: &[usize], nin: u32, nout: u32) -> usize {
+        self.push(
+            OpNode {
+                kind: OpKind::Dense,
+                flops: 2.0 * nin as f64 * nout as f64,
+                bytes: 4.0 * (nin as f64 + nout as f64),
+                params: nin as f64 * nout as f64 + nout as f64,
+                kernels: 1,
+                kernel: 0,
+                stride: 0,
+                cin: nin,
+                cout: nout,
+                spatial: 1,
+            },
+            deps,
+        )
+    }
+
+    /// Elementwise / normalisation node over `elems` activations.
+    pub fn elemwise(&mut self, deps: &[usize], kind: OpKind, elems: f64, params: f64) -> usize {
+        let flops_per_elem = match kind {
+            OpKind::Gelu => 8.0,
+            OpKind::Softmax => 5.0,
+            OpKind::LayerNorm | OpKind::BatchNorm => 4.0,
+            _ => 1.0,
+        };
+        self.push(
+            OpNode::simple(kind, flops_per_elem * elems, 8.0 * elems, params),
+            deps,
+        )
+    }
+
+    /// Pooling over a `c`×`side`×`side` output.
+    pub fn pool(&mut self, deps: &[usize], c: u32, side: u32, window: u32) -> usize {
+        let elems = c as f64 * (side as f64).powi(2);
+        self.push(
+            OpNode {
+                kind: OpKind::Pool,
+                flops: elems * (window as f64).powi(2),
+                bytes: 4.0 * elems * ((window as f64).powi(2) + 1.0),
+                params: 0.0,
+                kernels: 1,
+                kernel: window,
+                stride: window,
+                cin: c,
+                cout: c,
+                spatial: side,
+            },
+            deps,
+        )
+    }
+
+    /// Multi-head self-attention stage over `seq` tokens of width `dim`
+    /// (QKV projections + attention matmuls + output projection).
+    pub fn attention(&mut self, deps: &[usize], seq: u32, dim: u32) -> usize {
+        let s = seq as f64;
+        let d = dim as f64;
+        let proj = 4.0 * 2.0 * s * d * d; // q,k,v,o projections
+        let attn = 2.0 * 2.0 * s * s * d; // qk^T and att·v
+        self.push(
+            OpNode {
+                kind: OpKind::Attention,
+                flops: proj + attn,
+                bytes: 4.0 * (3.0 * s * d + s * s),
+                params: 4.0 * d * d,
+                kernels: 6,
+                kernel: 0,
+                stride: 0,
+                cin: dim,
+                cout: dim,
+                spatial: seq,
+            },
+            deps,
+        )
+    }
+
+    /// Embedding lookup: `vocab`×`dim` table, `seq` gathers.
+    pub fn embed(&mut self, deps: &[usize], vocab: u32, dim: u32, seq: u32) -> usize {
+        self.push(
+            OpNode {
+                kind: OpKind::Embed,
+                flops: seq as f64,
+                bytes: 4.0 * seq as f64 * dim as f64,
+                params: vocab as f64 * dim as f64,
+                kernels: 1,
+                kernel: 0,
+                stride: 0,
+                cin: vocab,
+                cout: dim,
+                spatial: seq,
+            },
+            deps,
+        )
+    }
+
+    /// Override a node's FLOPs (stage aggregation in the zoo builders).
+    pub fn set_flops(&mut self, id: usize, flops: f64) {
+        self.nodes[id].flops = flops;
+    }
+
+    /// Override a node's parameter count (stage aggregation).
+    pub fn set_params(&mut self, id: usize, params: f64) {
+        self.nodes[id].params = params;
+    }
+
+    /// Override a node's kernel-launch count (stage aggregation).
+    pub fn set_kernels(&mut self, id: usize, kernels: u32) {
+        self.nodes[id].kernels = kernels.max(1);
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn last(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    pub fn build(self) -> OpGraph {
+        assert!(
+            self.nodes.len() <= MAX_NODES,
+            "graph '{}' has {} nodes > MAX_NODES={MAX_NODES}",
+            self.name,
+            self.nodes.len()
+        );
+        let g = OpGraph {
+            name: self.name,
+            family: self.family,
+            nodes: self.nodes,
+            edges: self.edges,
+        };
+        g.validate().expect("builder produced invalid graph");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut b = GraphBuilder::new("t", "test");
+        // 3x3, 64->64, 56x56 out, stride 1: 2*9*64*64*3136 = 231.2 MFLOPs
+        b.conv(&[], 3, 64, 64, 56, 1, 1);
+        let g = b.build();
+        assert!((g.nodes[0].flops - 2.0 * 9.0 * 64.0 * 64.0 * 3136.0).abs() < 1.0);
+        assert!((g.nodes[0].params - 9.0 * 64.0 * 64.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn dense_params_include_bias() {
+        let mut b = GraphBuilder::new("t", "test");
+        b.dense(&[], 512, 10);
+        let g = b.build();
+        assert_eq!(g.nodes[0].params, 512.0 * 10.0 + 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "forward edges only")]
+    fn backward_edge_panics() {
+        let mut b = GraphBuilder::new("t", "test");
+        b.push(OpNode::simple(OpKind::Relu, 1.0, 8.0, 0.0), &[0]);
+    }
+
+    #[test]
+    fn depth_tracks_chain() {
+        let mut b = GraphBuilder::new("t", "test");
+        let a = b.elemwise(&[], OpKind::Relu, 10.0, 0.0);
+        let c = b.elemwise(&[a], OpKind::Relu, 10.0, 0.0);
+        let d = b.elemwise(&[a], OpKind::Relu, 10.0, 0.0); // parallel branch
+        b.elemwise(&[c, d], OpKind::Add, 10.0, 0.0);
+        let g = b.build();
+        assert_eq!(g.depth(), 3);
+    }
+}

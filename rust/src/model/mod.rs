@@ -1,0 +1,342 @@
+//! Operator-graph IR and the MLPerf-style model zoo.
+//!
+//! The paper extracts model features from TVM Relay's IRModule; our equivalent
+//! is [`OpGraph`] — a DAG of coarse (stage-level) operators with static
+//! features (FLOPs, bytes moved, parameters, conv shape descriptors). The
+//! graph drives three consumers:
+//!
+//! 1. the [`crate::perf::PerfModel`] ground-truth latency surface,
+//! 2. RaPP feature extraction ([`crate::rapp`]),
+//! 3. GPU-memory accounting in the cluster allocator.
+
+pub mod builders;
+pub mod zoo;
+
+pub use builders::GraphBuilder;
+pub use zoo::{zoo_graph, zoo_names, ZooModel};
+
+/// Operator kind. The discriminant order is the one-hot feature layout shared
+/// with the Python training pipeline — do not reorder (contract: FEATURE_SPEC
+/// in `python/compile/features.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Conv2d,
+    Dense,
+    MatMul,
+    BatchNorm,
+    LayerNorm,
+    Relu,
+    Gelu,
+    Softmax,
+    Pool,
+    Add,
+    Embed,
+    Attention,
+}
+
+pub const NUM_OP_KINDS: usize = 12;
+
+impl OpKind {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Conv2d => "conv2d",
+            OpKind::Dense => "dense",
+            OpKind::MatMul => "matmul",
+            OpKind::BatchNorm => "batch_norm",
+            OpKind::LayerNorm => "layer_norm",
+            OpKind::Relu => "relu",
+            OpKind::Gelu => "gelu",
+            OpKind::Softmax => "softmax",
+            OpKind::Pool => "pool",
+            OpKind::Add => "add",
+            OpKind::Embed => "embed",
+            OpKind::Attention => "attention",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "conv2d" => OpKind::Conv2d,
+            "dense" => OpKind::Dense,
+            "matmul" => OpKind::MatMul,
+            "batch_norm" => OpKind::BatchNorm,
+            "layer_norm" => OpKind::LayerNorm,
+            "relu" => OpKind::Relu,
+            "gelu" => OpKind::Gelu,
+            "softmax" => OpKind::Softmax,
+            "pool" => OpKind::Pool,
+            "add" => OpKind::Add,
+            "embed" => OpKind::Embed,
+            "attention" => OpKind::Attention,
+            _ => return None,
+        })
+    }
+
+    /// Is this op compute-dominated (dense linear algebra) rather than
+    /// bandwidth-dominated? Compute ops achieve higher peak-FLOP efficiency.
+    pub fn compute_bound(self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d | OpKind::Dense | OpKind::MatMul | OpKind::Attention
+        )
+    }
+}
+
+/// One operator node. `flops` / `bytes` are **per input item** (batch = 1);
+/// latency models scale them linearly with batch. `params` is the weight
+/// count (bytes = 4·params for f32). `kernels` is the number of device
+/// kernel launches this (possibly stage-aggregated) node stands for — it
+/// drives launch-overhead accounting, the occupancy model, and the
+/// granularity of time-quota enforcement (see `perf`).
+#[derive(Clone, Debug)]
+pub struct OpNode {
+    pub kind: OpKind,
+    pub flops: f64,
+    pub bytes: f64,
+    pub params: f64,
+    /// underlying kernel launches aggregated into this node (≥ 1)
+    pub kernels: u32,
+    /// conv kernel size (0 for non-conv)
+    pub kernel: u32,
+    /// conv/pool stride (0 for non-conv)
+    pub stride: u32,
+    pub cin: u32,
+    pub cout: u32,
+    /// output spatial edge (feature-map side, sequence length, …)
+    pub spatial: u32,
+}
+
+impl OpNode {
+    pub fn simple(kind: OpKind, flops: f64, bytes: f64, params: f64) -> Self {
+        OpNode {
+            kind,
+            flops,
+            bytes,
+            params,
+            kernels: 1,
+            kernel: 0,
+            stride: 0,
+            cin: 0,
+            cout: 0,
+            spatial: 0,
+        }
+    }
+}
+
+/// A model's operator DAG.
+#[derive(Clone, Debug)]
+pub struct OpGraph {
+    pub name: String,
+    pub family: String,
+    pub nodes: Vec<OpNode>,
+    /// Directed edges (src, dst); indices into `nodes`. Always acyclic and
+    /// src < dst by construction ([`GraphBuilder`] enforces it).
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl OpGraph {
+    /// Total FLOPs for a given batch size.
+    pub fn total_flops(&self, batch: u32) -> f64 {
+        self.nodes.iter().map(|n| n.flops).sum::<f64>() * batch as f64
+    }
+
+    /// Total bytes moved for a given batch size (weights counted once).
+    pub fn total_bytes(&self, batch: u32) -> f64 {
+        let act: f64 = self.nodes.iter().map(|n| n.bytes).sum();
+        act * batch as f64 + 4.0 * self.total_params()
+    }
+
+    pub fn total_params(&self) -> f64 {
+        self.nodes.iter().map(|n| n.params).sum()
+    }
+
+    /// Device-memory footprint estimate in bytes: weights + working
+    /// activations (+20% allocator slack) — used for the 16 GB capacity check.
+    pub fn memory_bytes(&self, batch: u32) -> f64 {
+        let weights = 4.0 * self.total_params();
+        let peak_act = self
+            .nodes
+            .iter()
+            .map(|n| n.bytes)
+            .fold(0.0f64, f64::max)
+            * batch as f64
+            * 2.0; // in + out live simultaneously
+        (weights + peak_act) * 1.2 + 256e6 // CUDA context overhead
+    }
+
+    pub fn count_kind(&self, kind: OpKind) -> usize {
+        self.nodes.iter().filter(|n| n.kind == kind).count()
+    }
+
+    /// Length of the longest path (graph depth) — a global RaPP feature.
+    pub fn depth(&self) -> usize {
+        let n = self.nodes.len();
+        let mut depth = vec![1usize; n];
+        // Edges satisfy src < dst, so one forward pass suffices.
+        for &(s, d) in &self.edges {
+            depth[d] = depth[d].max(depth[s] + 1);
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+
+    /// Verify DAG invariants (used by tests and the JSON loader).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for &(s, d) in &self.edges {
+            anyhow::ensure!(
+                s < d && d < self.nodes.len(),
+                "bad edge ({s},{d}) in '{}' with {} nodes",
+                self.name,
+                self.nodes.len()
+            );
+        }
+        anyhow::ensure!(!self.nodes.is_empty(), "empty graph '{}'", self.name);
+        for (i, node) in self.nodes.iter().enumerate() {
+            anyhow::ensure!(
+                node.flops >= 0.0 && node.bytes > 0.0,
+                "node {i} of '{}' has non-physical flops/bytes",
+                self.name
+            );
+        }
+        Ok(())
+    }
+
+    // ---- JSON interchange (contract with python/compile/opgraph.py) -------
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("family", Json::Str(self.family.clone())),
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj(vec![
+                                ("kind", Json::Str(n.kind.name().into())),
+                                ("flops", Json::Num(n.flops)),
+                                ("bytes", Json::Num(n.bytes)),
+                                ("params", Json::Num(n.params)),
+                                ("kernels", Json::Num(n.kernels as f64)),
+                                ("kernel", Json::Num(n.kernel as f64)),
+                                ("stride", Json::Num(n.stride as f64)),
+                                ("cin", Json::Num(n.cin as f64)),
+                                ("cout", Json::Num(n.cout as f64)),
+                                ("spatial", Json::Num(n.spatial as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "edges",
+                Json::Arr(
+                    self.edges
+                        .iter()
+                        .map(|&(s, d)| Json::num_arr(&[s as f64, d as f64]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let nodes = v
+            .get("nodes")?
+            .as_arr()?
+            .iter()
+            .map(|n| -> anyhow::Result<OpNode> {
+                let kind_name = n.get("kind")?.as_str()?;
+                Ok(OpNode {
+                    kind: OpKind::from_name(kind_name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown op kind '{kind_name}'"))?,
+                    flops: n.get("flops")?.as_f64()?,
+                    bytes: n.get("bytes")?.as_f64()?,
+                    params: n.get("params")?.as_f64()?,
+                    kernels: n.get("kernels")?.as_f64()? as u32,
+                    kernel: n.get("kernel")?.as_f64()? as u32,
+                    stride: n.get("stride")?.as_f64()? as u32,
+                    cin: n.get("cin")?.as_f64()? as u32,
+                    cout: n.get("cout")?.as_f64()? as u32,
+                    spatial: n.get("spatial")?.as_f64()? as u32,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let edges = v
+            .get("edges")?
+            .as_arr()?
+            .iter()
+            .map(|e| -> anyhow::Result<(usize, usize)> {
+                let pair = e.as_f64_vec()?;
+                anyhow::ensure!(pair.len() == 2, "edge must be a pair");
+                Ok((pair[0] as usize, pair[1] as usize))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let g = OpGraph {
+            name: v.get("name")?.as_str()?.to_string(),
+            family: v.get("family")?.as_str()?.to_string(),
+            nodes,
+            edges,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for i in 0..NUM_OP_KINDS {
+            let kind = [
+                OpKind::Conv2d,
+                OpKind::Dense,
+                OpKind::MatMul,
+                OpKind::BatchNorm,
+                OpKind::LayerNorm,
+                OpKind::Relu,
+                OpKind::Gelu,
+                OpKind::Softmax,
+                OpKind::Pool,
+                OpKind::Add,
+                OpKind::Embed,
+                OpKind::Attention,
+            ][i];
+            assert_eq!(kind.index(), i);
+            assert_eq!(OpKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(OpKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = zoo::zoo_graph(zoo::ZooModel::ResNet50);
+        let j = g.to_json();
+        let back = OpGraph::from_json(&j).unwrap();
+        assert_eq!(back.nodes.len(), g.nodes.len());
+        assert_eq!(back.edges, g.edges);
+        assert!((back.total_flops(4) - g.total_flops(4)).abs() < 1e-6);
+        assert_eq!(back.depth(), g.depth());
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_batch() {
+        let g = zoo::zoo_graph(zoo::ZooModel::MobileNetV2);
+        assert!((g.total_flops(8) - 8.0 * g.total_flops(1)).abs() < 1.0);
+    }
+
+    #[test]
+    fn memory_grows_with_batch() {
+        let g = zoo::zoo_graph(zoo::ZooModel::ResNet152);
+        assert!(g.memory_bytes(32) > g.memory_bytes(1));
+        // resnet152 fits a 16GB V100 at batch 32 (it does in practice).
+        assert!(g.memory_bytes(32) < 16e9);
+    }
+}

@@ -1,0 +1,390 @@
+//! The MLPerf-style benchmark model zoo (paper §4: "deep learning
+//! applications from the standard MLPerf benchmark").
+//!
+//! Graphs are stage-level approximations of the published architectures,
+//! tuned so total FLOPs / parameter counts land on the reference numbers
+//! (e.g. ResNet-50 ≈ 4.1 GFLOPs / 25.6 M params @ 224²). Exact layer-for-layer
+//! fidelity is unnecessary: the latency model and RaPP consume aggregate
+//! FLOPs/bytes per stage, which is also the granularity TVM's Relay profiler
+//! reports after fusion.
+
+use super::builders::GraphBuilder;
+use super::{OpGraph, OpKind};
+
+/// The serverless-function benchmark set used across all experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ZooModel {
+    ResNet50,
+    ResNet152,
+    MobileNetV2,
+    Vgg16,
+    ConvNextTiny,
+    BertTiny,
+    DlrmSmall,
+}
+
+pub const ALL_ZOO: [ZooModel; 7] = [
+    ZooModel::ResNet50,
+    ZooModel::ResNet152,
+    ZooModel::MobileNetV2,
+    ZooModel::Vgg16,
+    ZooModel::ConvNextTiny,
+    ZooModel::BertTiny,
+    ZooModel::DlrmSmall,
+];
+
+impl ZooModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            ZooModel::ResNet50 => "resnet50",
+            ZooModel::ResNet152 => "resnet152",
+            ZooModel::MobileNetV2 => "mobilenet_v2",
+            ZooModel::Vgg16 => "vgg16",
+            ZooModel::ConvNextTiny => "convnext_tiny",
+            ZooModel::BertTiny => "bert_tiny",
+            ZooModel::DlrmSmall => "dlrm_small",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        ALL_ZOO.iter().copied().find(|m| m.name() == s)
+    }
+}
+
+pub fn zoo_names() -> Vec<&'static str> {
+    ALL_ZOO.iter().map(|m| m.name()).collect()
+}
+
+/// Build the operator graph for a zoo model.
+pub fn zoo_graph(model: ZooModel) -> OpGraph {
+    match model {
+        ZooModel::ResNet50 => resnet(50),
+        ZooModel::ResNet152 => resnet(152),
+        ZooModel::MobileNetV2 => mobilenet_v2(),
+        ZooModel::Vgg16 => vgg16(),
+        ZooModel::ConvNextTiny => convnext_tiny(),
+        ZooModel::BertTiny => bert_tiny(),
+        ZooModel::DlrmSmall => dlrm_small(),
+    }
+}
+
+/// ResNet-d for d ∈ {50, 152}: bottleneck stages at 224² input.
+fn resnet(depth: u32) -> OpGraph {
+    // blocks per stage for the two depths we serve.
+    let blocks: [u32; 4] = match depth {
+        50 => [3, 4, 6, 3],
+        152 => [3, 8, 36, 3],
+        _ => panic!("unsupported resnet depth {depth}"),
+    };
+    let mut b = GraphBuilder::new(&format!("resnet{depth}"), "resnet");
+    // Stem: 7x7/2 conv 3->64 @112, then 3x3/2 maxpool @56.
+    let stem = b.conv(&[], 7, 3, 64, 112, 2, 1);
+    let bn = b.elemwise(&[stem], OpKind::BatchNorm, 64.0 * 112.0 * 112.0, 128.0);
+    let relu = b.elemwise(&[bn], OpKind::Relu, 64.0 * 112.0 * 112.0, 0.0);
+    let mut prev = b.pool(&[relu], 64, 56, 2);
+
+    // Bottleneck stage: width w, output side s, n blocks. Each block is
+    // 1x1(cin->w) + 3x3(w->w) + 1x1(w->4w); we aggregate a whole stage's
+    // convs into one Conv2d node + BN + ReLU + residual Add per stage.
+    let stage_cfg: [(u32, u32); 4] = [(64, 56), (128, 28), (256, 14), (512, 7)];
+    let mut cin = 64u32;
+    for (stage, &(w, side)) in stage_cfg.iter().enumerate() {
+        let n = blocks[stage];
+        let cout = 4 * w;
+        // Aggregate FLOPs of all convs in the stage into a representative
+        // 3x3 conv node (keeps kernel/channel features meaningful).
+        let per_block_flops = conv_flops(1, cin, w, side)
+            + conv_flops(3, w, w, side)
+            + conv_flops(1, w, cout, side)
+            // later blocks take cout as input
+            + (n - 1) as f64
+                * (conv_flops(1, cout, w, side)
+                    + conv_flops(3, w, w, side)
+                    + conv_flops(1, w, cout, side));
+        let conv = b.conv(&[prev], 3, w, cout, side, 1, 1);
+        // Overwrite the derived numbers with the stage aggregate.
+        b.set_flops(conv, per_block_flops);
+        b.set_params(
+            conv,
+            (cin as f64 * w as f64 + 9.0 * (w as f64).powi(2) + w as f64 * cout as f64)
+                + (n - 1) as f64
+                    * (cout as f64 * w as f64
+                        + 9.0 * (w as f64).powi(2)
+                        + w as f64 * cout as f64),
+        );
+        b.set_kernels(conv, 3 * n); // 3 convs per bottleneck block
+        let elems = cout as f64 * (side as f64).powi(2);
+        let bn = b.elemwise(&[conv], OpKind::BatchNorm, elems * n as f64, 2.0 * cout as f64);
+        b.set_kernels(bn, n);
+        let relu = b.elemwise(&[bn], OpKind::Relu, elems * n as f64, 0.0);
+        b.set_kernels(relu, n);
+        let add = b.elemwise(&[prev, relu], OpKind::Add, elems * n as f64, 0.0);
+        b.set_kernels(add, n);
+        prev = add;
+        cin = cout;
+    }
+    let gap = b.pool(&[prev], 2048, 1, 7);
+    b.dense(&[gap], 2048, 1000);
+    b.build()
+}
+
+fn conv_flops(k: u32, cin: u32, cout: u32, side: u32) -> f64 {
+    2.0 * (k as f64).powi(2) * cin as f64 * cout as f64 * (side as f64).powi(2)
+}
+
+/// MobileNetV2 at 224²: inverted-residual stages (depthwise convs make it
+/// strongly bandwidth-bound — the zoo's "small fast model").
+fn mobilenet_v2() -> OpGraph {
+    let mut b = GraphBuilder::new("mobilenet_v2", "mobilenet");
+    let stem = b.conv(&[], 3, 3, 32, 112, 2, 1);
+    let mut prev = b.elemwise(&[stem], OpKind::Relu, 32.0 * 112.0 * 112.0, 0.0);
+    // (expansion-adjusted width, out side, blocks)
+    let stages: [(u32, u32, u32); 6] =
+        [(16, 112, 1), (24, 56, 2), (32, 28, 3), (96, 14, 4), (160, 7, 3), (320, 7, 1)];
+    let mut cin = 32u32;
+    for &(c, side, n) in &stages {
+        // Inverted residual ≈ 1x1 expand (6x) + 3x3 depthwise + 1x1 project.
+        let hidden = 6 * cin;
+        let flops = n as f64
+            * (conv_flops(1, cin, hidden, side)
+                + 2.0 * 9.0 * hidden as f64 * (side as f64).powi(2) // depthwise
+                + conv_flops(1, hidden, c, side));
+        let conv = b.conv(&[prev], 3, cin, c, side, 1, n);
+        b.set_flops(conv, flops);
+        b.set_params(
+            conv,
+            n as f64
+                * (cin as f64 * hidden as f64 + 9.0 * hidden as f64 + hidden as f64 * c as f64),
+        );
+        b.set_kernels(conv, 3 * n); // expand + depthwise + project
+        let elems = c as f64 * (side as f64).powi(2) * n as f64;
+        let bn = b.elemwise(&[conv], OpKind::BatchNorm, elems, 2.0 * c as f64);
+        b.set_kernels(bn, n);
+        prev = b.elemwise(&[bn], OpKind::Relu, elems, 0.0);
+        b.set_kernels(prev, n);
+        cin = c;
+    }
+    let head = b.conv(&[prev], 1, 320, 1280, 7, 1, 1);
+    let gap = b.pool(&[head], 1280, 1, 7);
+    b.dense(&[gap], 1280, 1000);
+    b.build()
+}
+
+/// VGG-16 at 224²: the zoo's heavyweight compute-bound CNN (15.5 GFLOPs,
+/// 138 M params).
+fn vgg16() -> OpGraph {
+    let mut b = GraphBuilder::new("vgg16", "vgg");
+    let cfg: [(u32, u32, u32); 5] =
+        [(64, 224, 2), (128, 112, 2), (256, 56, 3), (512, 28, 3), (512, 14, 3)];
+    let mut prev: Option<usize> = None;
+    let mut cin = 3u32;
+    for &(c, side, n) in &cfg {
+        let deps: Vec<usize> = prev.into_iter().collect();
+        let flops = conv_flops(3, cin, c, side) + (n - 1) as f64 * conv_flops(3, c, c, side);
+        let conv = b.conv(&deps, 3, cin, c, side, 1, n);
+        b.set_flops(conv, flops);
+        b.set_params(
+            conv,
+            9.0 * (cin as f64 * c as f64 + (n - 1) as f64 * (c as f64).powi(2)),
+        );
+        let relu = b.elemwise(&[conv], OpKind::Relu, c as f64 * (side as f64).powi(2), 0.0);
+        prev = Some(b.pool(&[relu], c, side / 2, 2));
+        cin = c;
+    }
+    let f1 = b.dense(&[prev.unwrap()], 512 * 7 * 7, 4096);
+    let r1 = b.elemwise(&[f1], OpKind::Relu, 4096.0, 0.0);
+    let f2 = b.dense(&[r1], 4096, 4096);
+    let r2 = b.elemwise(&[f2], OpKind::Relu, 4096.0, 0.0);
+    b.dense(&[r2], 4096, 1000);
+    b.build()
+}
+
+/// ConvNeXt-Tiny at 224²: 7×7 depthwise + pointwise MLP stages with
+/// LayerNorm/GELU — the Fig. 5 case-study model (4.5 GFLOPs, 28 M params).
+fn convnext_tiny() -> OpGraph {
+    let mut b = GraphBuilder::new("convnext_tiny", "convnext");
+    let stem = b.conv(&[], 4, 3, 96, 56, 4, 1);
+    let mut prev = b.elemwise(&[stem], OpKind::LayerNorm, 96.0 * 56.0 * 56.0, 192.0);
+    let stages: [(u32, u32, u32); 4] = [(96, 56, 3), (192, 28, 3), (384, 14, 9), (768, 7, 3)];
+    let mut cin = 96u32;
+    for &(c, side, n) in &stages {
+        // Block: 7x7 depthwise + LN + 1x1 (c->4c) + GELU + 1x1 (4c->c) + add.
+        let flops = n as f64
+            * (2.0 * 49.0 * c as f64 * (side as f64).powi(2)
+                + conv_flops(1, c, 4 * c, side)
+                + conv_flops(1, 4 * c, c, side));
+        let deps = [prev];
+        let conv = b.conv(&deps, 7, cin, c, side, 1, n);
+        b.set_flops(conv, flops);
+        b.set_params(
+            conv,
+            n as f64 * (49.0 * c as f64 + 8.0 * (c as f64).powi(2)),
+        );
+        b.set_kernels(conv, 3 * n); // dw 7x7 + two pointwise per block
+        let elems = c as f64 * (side as f64).powi(2) * n as f64;
+        let ln = b.elemwise(&[conv], OpKind::LayerNorm, elems, 2.0 * c as f64);
+        b.set_kernels(ln, n);
+        let gelu = b.elemwise(&[ln], OpKind::Gelu, elems * 4.0, 0.0);
+        b.set_kernels(gelu, n);
+        let add = b.elemwise(&[prev, gelu], OpKind::Add, elems, 0.0);
+        b.set_kernels(add, n);
+        prev = add;
+        cin = c;
+    }
+    let gap = b.pool(&[prev], 768, 1, 7);
+    b.dense(&[gap], 768, 1000);
+    b.build()
+}
+
+/// BERT-Tiny-ish encoder (4 layers, dim 312, seq 128) — the zoo's NLP
+/// function; attention + GEMM mix exercises non-CNN feature paths.
+fn bert_tiny() -> OpGraph {
+    let (layers, dim, seq, vocab) = (4u32, 312u32, 128u32, 30522u32);
+    let mut b = GraphBuilder::new("bert_tiny", "bert");
+    let emb = b.embed(&[], vocab, dim, seq);
+    let mut prev = b.elemwise(&[emb], OpKind::LayerNorm, (seq * dim) as f64, 2.0 * dim as f64);
+    for _ in 0..layers {
+        let att = b.attention(&[prev], seq, dim);
+        let ln1 = b.elemwise(
+            &[prev, att],
+            OpKind::LayerNorm,
+            (seq * dim) as f64,
+            2.0 * dim as f64,
+        );
+        // FFN: dim -> 4dim -> dim over seq tokens, as a MatMul stage node.
+        let ffn_flops = 2.0 * 2.0 * seq as f64 * dim as f64 * 4.0 * dim as f64;
+        let ffn = b.push(
+            super::OpNode {
+                kind: OpKind::MatMul,
+                flops: ffn_flops,
+                bytes: 4.0 * (seq as f64 * dim as f64 * 5.0),
+                params: 8.0 * (dim as f64).powi(2),
+                kernels: 2,
+                kernel: 0,
+                stride: 0,
+                cin: dim,
+                cout: dim,
+                spatial: seq,
+            },
+            &[ln1],
+        );
+        let gelu = b.elemwise(&[ffn], OpKind::Gelu, (seq * 4 * dim) as f64, 0.0);
+        prev = b.elemwise(
+            &[ln1, gelu],
+            OpKind::LayerNorm,
+            (seq * dim) as f64,
+            2.0 * dim as f64,
+        );
+    }
+    b.dense(&[prev], dim, 2); // classifier head
+    b.build()
+}
+
+/// Small DLRM: embedding-dominated recommender (bandwidth-bound lookups +
+/// small MLPs) — the zoo's memory-bound outlier.
+fn dlrm_small() -> OpGraph {
+    let mut b = GraphBuilder::new("dlrm_small", "dlrm");
+    let dense_in = b.dense(&[], 13, 512);
+    let r1 = b.elemwise(&[dense_in], OpKind::Relu, 512.0, 0.0);
+    let bot = b.dense(&[r1], 512, 64);
+    // 26 sparse features, each a lookup in a 100k x 64 table; aggregate node.
+    let emb = b.embed(&[], 100_000, 64, 26);
+    // Feature interaction: pairwise dots of 27 vectors of dim 64.
+    let inter = b.push(
+        super::OpNode {
+            kind: OpKind::MatMul,
+            flops: 2.0 * 27.0 * 27.0 * 64.0,
+            bytes: 4.0 * (27.0 * 64.0 + 27.0 * 27.0),
+            params: 0.0,
+            kernels: 1,
+            kernel: 0,
+            stride: 0,
+            cin: 64,
+            cout: 64,
+            spatial: 27,
+        },
+        &[bot, emb],
+    );
+    let top1 = b.dense(&[inter], 512, 512);
+    let r2 = b.elemwise(&[top1], OpKind::Relu, 512.0, 0.0);
+    let top2 = b.dense(&[r2], 512, 256);
+    let r3 = b.elemwise(&[top2], OpKind::Relu, 256.0, 0.0);
+    let out = b.dense(&[r3], 256, 1);
+    b.elemwise(&[out], OpKind::Softmax, 1.0, 0.0);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_builds_and_validates() {
+        for m in ALL_ZOO {
+            let g = zoo_graph(m);
+            g.validate().unwrap();
+            assert!(g.nodes.len() <= super::super::builders::MAX_NODES);
+            assert_eq!(ZooModel::from_name(g.name.as_str()), Some(m));
+        }
+    }
+
+    #[test]
+    fn resnet50_flops_and_params_near_reference() {
+        let g = zoo_graph(ZooModel::ResNet50);
+        let gflops = g.total_flops(1) / 1e9;
+        let mparams = g.total_params() / 1e6;
+        // Reference: ~4.1 GFLOPs (2·MACs), ~25.6 M params. Stage-level
+        // aggregation tolerates ±30%.
+        assert!((5.8..10.6).contains(&gflops), "resnet50 {gflops} GFLOPs (2*MACs)");
+        assert!((18.0..33.0).contains(&mparams), "resnet50 {mparams} M params");
+    }
+
+    #[test]
+    fn resnet152_heavier_than_resnet50() {
+        let r50 = zoo_graph(ZooModel::ResNet50);
+        let r152 = zoo_graph(ZooModel::ResNet152);
+        let ratio = r152.total_flops(1) / r50.total_flops(1);
+        // Reference ratio ≈ 11.6/4.1 ≈ 2.8.
+        assert!((2.0..4.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn vgg16_is_the_flops_heavyweight() {
+        let vgg = zoo_graph(ZooModel::Vgg16);
+        let gflops = vgg.total_flops(1) / 1e9;
+        assert!((24.0..38.0).contains(&gflops), "vgg16 {gflops} GFLOPs (2*MACs)");
+        let mparams = vgg.total_params() / 1e6;
+        assert!((110.0..160.0).contains(&mparams), "vgg16 {mparams} M params");
+    }
+
+    #[test]
+    fn mobilenet_is_light() {
+        let g = zoo_graph(ZooModel::MobileNetV2);
+        assert!(g.total_flops(1) / 1e9 < 2.0);
+        assert!(g.total_params() / 1e6 < 8.0);
+    }
+
+    #[test]
+    fn convnext_tiny_near_reference() {
+        let g = zoo_graph(ZooModel::ConvNextTiny);
+        let gflops = g.total_flops(1) / 1e9;
+        assert!((6.0..13.0).contains(&gflops), "convnext {gflops} GFLOPs (2*MACs)");
+    }
+
+    #[test]
+    fn bert_has_attention_nodes() {
+        let g = zoo_graph(ZooModel::BertTiny);
+        assert_eq!(g.count_kind(OpKind::Attention), 4);
+        assert!(g.total_params() / 1e6 > 9.0); // embedding table dominates
+    }
+
+    #[test]
+    fn dlrm_is_memory_bound() {
+        let g = zoo_graph(ZooModel::DlrmSmall);
+        // Arithmetic intensity (flops/byte) far below CNNs.
+        let ai = g.total_flops(1) / g.total_bytes(1);
+        let cnn_ai =
+            zoo_graph(ZooModel::ResNet50).total_flops(1) / zoo_graph(ZooModel::ResNet50).total_bytes(1);
+        assert!(ai < cnn_ai / 5.0, "dlrm ai={ai} cnn ai={cnn_ai}");
+    }
+}

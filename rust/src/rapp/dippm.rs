@@ -1,0 +1,57 @@
+//! DIPPM baseline (Panner Selvam & Brorsson 2023) — the comparator of
+//! Fig. 5: a GNN latency predictor over **static** model features only.
+//!
+//! Per the paper's comparison protocol, the resource configuration (batch,
+//! sm, quota) *is* given to DIPPM as extra static inputs and the model is
+//! retrained — what it lacks is the operator/graph **runtime priors** (the
+//! profiled latencies under the 6 SM / 5 quota probe points). The
+//! architecture and training budget are identical to RaPP's, so Fig. 5
+//! isolates exactly the contribution of runtime features.
+
+use super::{LatencyPredictor, RappPredictor, RappWeights};
+use crate::model::OpGraph;
+use crate::perf::PerfModel;
+use crate::rapp::features::FeatureMode;
+
+/// DIPPM is RaPP's architecture restricted to `FeatureMode::StaticOnly`.
+pub struct DippmPredictor(pub RappPredictor);
+
+impl DippmPredictor {
+    pub fn new(weights: RappWeights, perf: PerfModel) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            weights.mode == FeatureMode::StaticOnly,
+            "DIPPM weights must be trained in static-only mode"
+        );
+        Ok(DippmPredictor(RappPredictor::new(weights, perf)))
+    }
+
+    pub fn load(path: &std::path::Path, perf: PerfModel) -> anyhow::Result<Self> {
+        Self::new(RappWeights::load(path)?, perf)
+    }
+}
+
+impl LatencyPredictor for DippmPredictor {
+    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+        self.0.latency(g, batch, sm, quota)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+
+    #[test]
+    fn rejects_full_mode_weights() {
+        let w = RappWeights::random(FeatureMode::Full, 8, 1);
+        assert!(DippmPredictor::new(w, PerfModel::default()).is_err());
+    }
+
+    #[test]
+    fn static_only_forward_runs() {
+        let w = RappWeights::random(FeatureMode::StaticOnly, 8, 1);
+        let d = DippmPredictor::new(w, PerfModel::default()).unwrap();
+        let g = zoo_graph(ZooModel::MobileNetV2);
+        assert!(d.latency(&g, 4, 0.5, 0.5).is_finite());
+    }
+}

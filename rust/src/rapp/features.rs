@@ -1,0 +1,283 @@
+//! RaPP feature extraction (paper §3.2, Fig. 3).
+//!
+//! Two feature sets per (model, batch, sm, quota) query:
+//!
+//! * **operator features** `[n_nodes × F_OP]` — one-hot op kind, static shape
+//!   descriptors, and *runtime priors*: the op's profiled kernel time under
+//!   [`PerfModel::PROFILE_SMS`] (6 SM configurations at full quota — quota
+//!   does not affect individual operators, only the whole graph);
+//! * **graph features** `[F_G]` — static totals (FLOPs, bytes, params, op
+//!   counts, depth), *runtime priors*: whole-graph latency under
+//!   [`PerfModel::PROFILE_QUOTAS`] (5 quota configurations at full SM), and
+//!   the query configuration (batch, sm, quota).
+//!
+//! The numeric layout is a **cross-language contract** with
+//! `python/compile/features.py`; `artifacts/golden/perf_golden.json` pins
+//! both sides (see `tests/artifact_parity.rs`).
+//!
+//! The DIPPM baseline ([`FeatureMode::StaticOnly`]) strips every runtime-prior
+//! column but keeps the query configuration appended to the static features —
+//! the paper's "for comparison, we incorporated this information into its
+//! static features same as RaPP and retrained the model".
+
+use crate::model::{OpGraph, OpKind, NUM_OP_KINDS};
+use crate::perf::PerfModel;
+
+/// Full RaPP features vs. the static-only DIPPM ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureMode {
+    Full,
+    StaticOnly,
+}
+
+/// Static operator columns (one-hot + shape descriptors + batch).
+pub const F_OP_STATIC: usize = NUM_OP_KINDS + 9; // 21
+/// Runtime-prior operator columns.
+pub const F_OP_RUNTIME: usize = PerfModel::PROFILE_SMS.len(); // 6
+/// Static graph columns (totals + counts + depth + batch + sm + quota).
+pub const F_G_STATIC: usize = 10;
+/// Runtime-prior graph columns: whole-graph latency at the 5 quota probes
+/// (full SM) and raw graph time at the 6 SM probes (full quota) — the
+/// paper's two graph-level profiling passes.
+/// … plus one derived **anchor** column (separable analytic estimate —
+/// see [`anchor`]).
+pub const F_G_RUNTIME: usize =
+    PerfModel::PROFILE_QUOTAS.len() + PerfModel::PROFILE_SMS.len() + 1; // 12
+
+impl FeatureMode {
+    pub fn f_op(self) -> usize {
+        match self {
+            FeatureMode::Full => F_OP_STATIC + F_OP_RUNTIME,
+            FeatureMode::StaticOnly => F_OP_STATIC,
+        }
+    }
+
+    pub fn f_g(self) -> usize {
+        match self {
+            FeatureMode::Full => F_G_STATIC + F_G_RUNTIME,
+            FeatureMode::StaticOnly => F_G_STATIC,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FeatureMode::Full => "rapp",
+            FeatureMode::StaticOnly => "dippm",
+        }
+    }
+}
+
+/// Extracted features for one query.
+#[derive(Clone, Debug)]
+pub struct Features {
+    /// Row-major `[n_nodes][f_op]`.
+    pub op_feats: Vec<Vec<f32>>,
+    /// `[f_g]`.
+    pub graph_feats: Vec<f32>,
+    /// Directed edges (src, dst) — the GAT symmetrises + adds self-loops.
+    pub edges: Vec<(usize, usize)>,
+}
+
+/// Extract features for (graph, batch, sm, quota).
+pub fn extract(
+    g: &OpGraph,
+    batch: u32,
+    sm: f64,
+    quota: f64,
+    perf: &PerfModel,
+    mode: FeatureMode,
+) -> Features {
+    let b = batch as f64;
+    let mut op_feats = Vec::with_capacity(g.nodes.len());
+    for op in &g.nodes {
+        let mut f = Vec::with_capacity(mode.f_op());
+        // One-hot kind.
+        for k in 0..NUM_OP_KINDS {
+            f.push(if op.kind.index() == k { 1.0 } else { 0.0 });
+        }
+        // Static shape descriptors (normalised to O(1) ranges).
+        f.push(ln1p(op.flops * b / 1e6) as f32);
+        f.push(ln1p((op.bytes * b + 4.0 * op.params) / 1e6) as f32);
+        f.push(ln1p(op.params / 1e6) as f32);
+        f.push(op.kernel as f32 / 7.0);
+        f.push(op.stride as f32 / 4.0);
+        f.push(op.cin as f32 / 1024.0);
+        f.push(op.cout as f32 / 1024.0);
+        f.push(op.spatial as f32 / 256.0);
+        f.push((b.log2() / 5.0) as f32);
+        // Runtime priors: profiled op time at the 6 SM points, full quota.
+        if mode == FeatureMode::Full {
+            for &sm_p in PerfModel::PROFILE_SMS.iter() {
+                f.push(ln1p(perf.op_time(op, batch, sm_p) * 1e3) as f32);
+            }
+        }
+        debug_assert_eq!(f.len(), mode.f_op());
+        op_feats.push(f);
+    }
+
+    let mut gf = Vec::with_capacity(mode.f_g());
+    gf.push(ln1p(g.total_flops(batch) / 1e9) as f32);
+    gf.push(ln1p(g.total_bytes(batch) / 1e9) as f32);
+    gf.push(ln1p(g.total_params() / 1e6) as f32);
+    gf.push(g.nodes.len() as f32 / 64.0);
+    gf.push(g.count_kind(OpKind::Conv2d) as f32 / 32.0);
+    gf.push(
+        (g.count_kind(OpKind::Dense) + g.count_kind(OpKind::MatMul)) as f32 / 32.0,
+    );
+    gf.push(g.depth() as f32 / 64.0);
+    gf.push((b.log2() / 5.0) as f32);
+    gf.push(sm as f32);
+    gf.push(quota as f32);
+    // Runtime priors: graph latency at the 5 quota points (full SM), then
+    // raw graph time at the 6 SM points (full quota).
+    if mode == FeatureMode::Full {
+        for &q_p in PerfModel::PROFILE_QUOTAS.iter() {
+            gf.push(ln1p(perf.latency(g, batch, 1.0, q_p) * 1e3) as f32);
+        }
+        for &sm_p in PerfModel::PROFILE_SMS.iter() {
+            gf.push(ln1p(perf.raw_graph_time(g, batch, sm_p) * 1e3) as f32);
+        }
+        let a = anchor(g, &op_feats, sm, quota, perf.dev.window);
+        gf.push(a);
+    }
+    debug_assert_eq!(gf.len(), mode.f_g());
+
+    Features {
+        op_feats,
+        graph_feats: gf,
+        edges: g.edges.clone(),
+    }
+}
+
+#[inline]
+fn ln1p(x: f64) -> f64 {
+    (1.0 + x).ln()
+}
+
+/// Piecewise-linear interpolation with end clamping (mirrors python).
+fn interp(xs: &[f64], ys: &[f32], x: f64) -> f64 {
+    if x <= xs[0] {
+        return ys[0] as f64;
+    }
+    if x >= xs[xs.len() - 1] {
+        return ys[ys.len() - 1] as f64;
+    }
+    for i in 0..xs.len() - 1 {
+        if x <= xs[i + 1] {
+            let t = (x - xs[i]) / (xs[i + 1] - xs[i]);
+            return ys[i] as f64 * (1.0 - t) + ys[i + 1] as f64 * t;
+        }
+    }
+    ys[ys.len() - 1] as f64
+}
+
+/// Probe-based analytic latency estimate: interpolate each op's profiled
+/// time (the 6 SM probes, op-feature columns 21..27) to the query SM in
+/// ln-ln space, then replay the scheduler's own token-window mechanics
+/// (no-debt, kernel granularity). The GNN head regresses the residual
+/// against this anchor. Contract: python features.anchor.
+pub fn anchor(g: &OpGraph, op_feats: &[Vec<f32>], sm: f64, quota: f64, window: f64) -> f32 {
+    let ln_sms: Vec<f64> = PerfModel::PROFILE_SMS.iter().map(|s| s.ln()).collect();
+    let ln_sm = sm.clamp(1e-3, 1.0).ln();
+    let mut now = 0.0f64;
+    let mut budget = quota * window;
+    let mut boundary = window;
+    for (i, node) in g.nodes.iter().enumerate() {
+        let ln_t = interp(&ln_sms, &op_feats[i][F_OP_STATIC..F_OP_STATIC + 6], ln_sm);
+        let t_est = ln_t.exp_m1() / 1e3; // invert ln1p(ms)
+        let k = node.kernels.max(1);
+        let d = t_est / k as f64;
+        for _ in 0..k {
+            if boundary <= now {
+                let skipped = ((now - boundary) / window).floor() + 1.0;
+                boundary += skipped * window;
+                budget = quota * window;
+            }
+            if budget <= 0.0 {
+                now = boundary;
+                boundary += window;
+                budget = quota * window;
+            }
+            now += d;
+            budget -= d;
+        }
+    }
+    // ln(ms), matching the regression target's transform exactly.
+    (now * 1e3).max(1e-9).ln() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+
+    #[test]
+    fn dims_match_mode() {
+        let g = zoo_graph(ZooModel::ResNet50);
+        let pm = PerfModel::default();
+        let full = extract(&g, 8, 0.5, 0.5, &pm, FeatureMode::Full);
+        assert_eq!(full.op_feats[0].len(), 27);
+        assert_eq!(full.graph_feats.len(), 22);
+        let stat = extract(&g, 8, 0.5, 0.5, &pm, FeatureMode::StaticOnly);
+        assert_eq!(stat.op_feats[0].len(), 21);
+        assert_eq!(stat.graph_feats.len(), 10);
+        assert_eq!(full.op_feats.len(), g.nodes.len());
+        assert_eq!(full.edges.len(), g.edges.len());
+    }
+
+    #[test]
+    fn config_columns_present() {
+        let g = zoo_graph(ZooModel::BertTiny);
+        let pm = PerfModel::default();
+        let f = extract(&g, 4, 0.35, 0.7, &pm, FeatureMode::Full);
+        assert!((f.graph_feats[8] - 0.35).abs() < 1e-6);
+        assert!((f.graph_feats[9] - 0.7).abs() < 1e-6);
+        // Runtime priors are monotone: more quota ⇒ lower profiled latency.
+        let rt = &f.graph_feats[10..15];
+        let rt_sm = &f.graph_feats[15..21];
+        for w in rt_sm.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{rt_sm:?}");
+        }
+        for w in rt.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{rt:?}");
+        }
+    }
+
+    #[test]
+    fn op_runtime_priors_decrease_with_sm_for_big_ops() {
+        let g = zoo_graph(ZooModel::Vgg16);
+        let pm = PerfModel::default();
+        let f = extract(&g, 16, 1.0, 1.0, &pm, FeatureMode::Full);
+        // The heaviest conv node: runtime-prior columns 21..27 decrease.
+        let conv_row = f
+            .op_feats
+            .iter()
+            .max_by(|a, b| a[12].partial_cmp(&b[12]).unwrap())
+            .unwrap();
+        let rt = &conv_row[21..27];
+        for w in rt.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{rt:?}");
+        }
+    }
+
+    #[test]
+    fn one_hot_is_exclusive() {
+        let g = zoo_graph(ZooModel::ConvNextTiny);
+        let pm = PerfModel::default();
+        let f = extract(&g, 1, 1.0, 1.0, &pm, FeatureMode::Full);
+        for row in &f.op_feats {
+            let ones = row[..12].iter().filter(|&&x| x == 1.0).count();
+            assert_eq!(ones, 1);
+        }
+    }
+
+    #[test]
+    fn features_depend_on_batch() {
+        let g = zoo_graph(ZooModel::ResNet50);
+        let pm = PerfModel::default();
+        let f1 = extract(&g, 1, 0.5, 0.5, &pm, FeatureMode::Full);
+        let f8 = extract(&g, 8, 0.5, 0.5, &pm, FeatureMode::Full);
+        assert!(f8.graph_feats[0] > f1.graph_feats[0]);
+        assert!(f8.op_feats[0][12] >= f1.op_feats[0][12]);
+    }
+}

@@ -1,0 +1,378 @@
+//! RaPP — the Resource-aware Performance Predictor (paper §3.2) — and the
+//! DIPPM static-feature baseline it is evaluated against (Fig. 5).
+//!
+//! Two interchangeable forwards share one set of trained weights
+//! (`artifacts/rapp_weights.json`, produced by `python/compile/train_rapp.py`):
+//!
+//! * [`RappPredictor`] — the native Rust forward in [`nn`], used on the
+//!   autoscaler's decision path (allocation-light, ~µs per query, memoised);
+//! * `runtime::PjrtRapp` — the AOT-compiled HLO forward executed through
+//!   PJRT, proving the L1/L2/L3 pipeline; parity-tested against this one.
+//!
+//! [`LatencyPredictor`] is the interface the autoscaler programs against;
+//! [`OraclePredictor`] wraps the ground-truth [`PerfModel`] directly (used by
+//! tests and as the "perfectly profiled" upper bound in ablations).
+
+pub mod dippm;
+pub mod features;
+pub mod nn;
+
+use crate::model::OpGraph;
+use crate::perf::PerfModel;
+use crate::util::json::Json;
+use features::{extract, FeatureMode};
+use nn::{Dense, GatLayer};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Latency prediction interface used by the auto-scalers.
+pub trait LatencyPredictor: Send + Sync {
+    /// Predicted end-to-end inference latency (seconds) of one batch.
+    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64;
+
+    /// Throughput capability C = batch · quota / t_raw (items/s), where
+    /// t_raw is the predicted latency at full quota (paper: C = Batch/Latency
+    /// under saturated time-sharing).
+    fn capacity(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+        let t_raw = self.latency(g, batch, sm, 1.0);
+        batch as f64 * quota / t_raw
+    }
+}
+
+/// Ground-truth oracle (the perf model itself).
+#[derive(Default)]
+pub struct OraclePredictor {
+    pub perf: PerfModel,
+}
+
+impl LatencyPredictor for OraclePredictor {
+    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+        self.perf.latency(g, batch, sm, quota)
+    }
+}
+
+/// Trained GAT + MLP weights (schema shared with train_rapp.py).
+#[derive(Clone, Debug)]
+pub struct RappWeights {
+    pub mode: FeatureMode,
+    pub hidden: usize,
+    /// Residual anchor: raw graph-feature column added to the head output
+    /// (ln1p of the full-SM, full-quota profiled latency). None for DIPPM.
+    pub residual_col: Option<usize>,
+    pub op_mean: Vec<f32>,
+    pub op_std: Vec<f32>,
+    pub g_mean: Vec<f32>,
+    pub g_std: Vec<f32>,
+    pub gat1: GatLayer,
+    pub gat2: GatLayer,
+    pub mlp_g: Dense,
+    pub head1: Dense,
+    pub head2: Dense,
+}
+
+fn dense_from_json(j: &Json, n_in: usize, n_out: usize) -> anyhow::Result<Dense> {
+    let w = j.get("w")?.as_f32_vec()?;
+    let b = j.get("b")?.as_f32_vec()?;
+    anyhow::ensure!(
+        w.len() == n_in * n_out && b.len() == n_out,
+        "dense shape mismatch: w={} b={} expect [{n_in}x{n_out}]",
+        w.len(),
+        b.len()
+    );
+    Ok(Dense { n_in, n_out, w, b })
+}
+
+fn gat_from_json(j: &Json, n_in: usize, n_out: usize) -> anyhow::Result<GatLayer> {
+    Ok(GatLayer {
+        lin: dense_from_json(j, n_in, n_out)?,
+        a_src: j.get("a_src")?.as_f32_vec()?,
+        a_dst: j.get("a_dst")?.as_f32_vec()?,
+    })
+}
+
+impl RappWeights {
+    /// Load weights JSON (see train_rapp.py for the writer).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let arch = j.get("arch")?;
+        let mode = match arch.get("mode")?.as_str()? {
+            "rapp" => FeatureMode::Full,
+            "dippm" => FeatureMode::StaticOnly,
+            other => anyhow::bail!("unknown feature mode '{other}'"),
+        };
+        let hidden = arch.get("hidden")?.as_usize()?;
+        let f_op = arch.get("f_op")?.as_usize()?;
+        let f_g = arch.get("f_g")?.as_usize()?;
+        let residual_col = match arch.opt("residual_col").map(|v| v.as_f64()) {
+            Some(Ok(c)) if c >= 0.0 => Some(c as usize),
+            _ => None,
+        };
+        anyhow::ensure!(
+            f_op == mode.f_op() && f_g == mode.f_g(),
+            "feature dims in weights ({f_op},{f_g}) disagree with contract ({},{})",
+            mode.f_op(),
+            mode.f_g()
+        );
+        let norm = j.get("norm")?;
+        Ok(RappWeights {
+            mode,
+            hidden,
+            residual_col,
+            op_mean: norm.get("op_mean")?.as_f32_vec()?,
+            op_std: norm.get("op_std")?.as_f32_vec()?,
+            g_mean: norm.get("g_mean")?.as_f32_vec()?,
+            g_std: norm.get("g_std")?.as_f32_vec()?,
+            gat1: gat_from_json(j.get("gat1")?, f_op, hidden)?,
+            gat2: gat_from_json(j.get("gat2")?, hidden, hidden)?,
+            mlp_g: dense_from_json(j.get("mlp_g")?, f_g, hidden)?,
+            head1: dense_from_json(j.get("head1")?, 2 * hidden, hidden)?,
+            head2: dense_from_json(j.get("head2")?, hidden, 1)?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_json(&crate::util::json::parse_file(path)?)
+    }
+
+    /// Random weights for tests/benches (deterministic; NOT trained).
+    pub fn random(mode: FeatureMode, hidden: usize, seed: u64) -> Self {
+        let mut rng = crate::util::prng::Pcg64::new(seed, 9);
+        fn dense(rng: &mut crate::util::prng::Pcg64, n_in: usize, n_out: usize) -> Dense {
+            Dense {
+                n_in,
+                n_out,
+                w: (0..n_in * n_out)
+                    .map(|_| rng.normal_ms(0.0, (2.0 / n_in as f64).sqrt()) as f32)
+                    .collect(),
+                b: vec![0.0; n_out],
+            }
+        }
+        fn gat(rng: &mut crate::util::prng::Pcg64, n_in: usize, n_out: usize) -> GatLayer {
+            GatLayer {
+                lin: dense(rng, n_in, n_out),
+                a_src: (0..n_out).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect(),
+                a_dst: (0..n_out).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect(),
+            }
+        }
+        let gat1 = gat(&mut rng, mode.f_op(), hidden);
+        let gat2 = gat(&mut rng, hidden, hidden);
+        RappWeights {
+            mode,
+            hidden,
+            residual_col: None,
+            op_mean: vec![0.0; mode.f_op()],
+            op_std: vec![1.0; mode.f_op()],
+            g_mean: vec![0.0; mode.f_g()],
+            g_std: vec![1.0; mode.f_g()],
+            gat1,
+            gat2,
+            mlp_g: dense(&mut rng, mode.f_g(), hidden),
+            head1: dense(&mut rng, 2 * hidden, hidden),
+            head2: dense(&mut rng, hidden, 1),
+        }
+    }
+}
+
+/// The native RaPP predictor with a per-(model,config) memo cache.
+pub struct RappPredictor {
+    pub weights: RappWeights,
+    pub perf: PerfModel,
+    cache: Mutex<HashMap<(String, u32, u32, u32), f64>>,
+}
+
+impl RappPredictor {
+    pub fn new(weights: RappWeights, perf: PerfModel) -> Self {
+        RappPredictor {
+            weights,
+            perf,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Load from `artifacts/rapp_weights.json`.
+    pub fn load(path: &std::path::Path, perf: PerfModel) -> anyhow::Result<Self> {
+        Ok(Self::new(RappWeights::load(path)?, perf))
+    }
+
+    /// Raw forward pass: returns predicted ln(latency_ms).
+    pub fn forward(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f32 {
+        let w = &self.weights;
+        let f = extract(g, batch, sm, quota, &self.perf, w.mode);
+        let n = f.op_feats.len();
+        let f_op = w.mode.f_op();
+        // Standardise + flatten.
+        let mut x = vec![0.0f32; n * f_op];
+        for (i, row) in f.op_feats.iter().enumerate() {
+            for (k, &v) in row.iter().enumerate() {
+                x[i * f_op + k] = (v - w.op_mean[k]) / w.op_std[k];
+            }
+        }
+        let nbrs = nn::neighbour_lists(n, &f.edges);
+        let h1 = w.gat1.forward(&x, n, &nbrs);
+        let h2 = w.gat2.forward(&h1, n, &nbrs);
+        let pooled = nn::mean_pool(&h2, n, w.hidden);
+
+        let mut gx = vec![0.0f32; w.mode.f_g()];
+        for (k, &v) in f.graph_feats.iter().enumerate() {
+            gx[k] = (v - w.g_mean[k]) / w.g_std[k];
+        }
+        let mut gh = vec![0.0f32; w.hidden];
+        w.mlp_g.forward(&gx, &mut gh);
+        for v in gh.iter_mut() {
+            *v = nn::relu(*v);
+        }
+
+        let mut cat = Vec::with_capacity(2 * w.hidden);
+        cat.extend_from_slice(&pooled);
+        cat.extend_from_slice(&gh);
+        let mut hh = vec![0.0f32; w.hidden];
+        w.head1.forward(&cat, &mut hh);
+        for v in hh.iter_mut() {
+            *v = nn::relu(*v);
+        }
+        let mut out = [0.0f32];
+        w.head2.forward(&hh, &mut out);
+        if let Some(c) = w.residual_col {
+            out[0] += f.graph_feats[c]; // raw (unnormalised) anchor
+        }
+        out[0]
+    }
+
+    fn cache_key(g: &OpGraph, batch: u32, sm: f64, quota: f64) -> (String, u32, u32, u32) {
+        (
+            g.name.clone(),
+            batch,
+            (sm * 1000.0).round() as u32,
+            (quota * 1000.0).round() as u32,
+        )
+    }
+}
+
+impl LatencyPredictor for RappPredictor {
+    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+        let key = Self::cache_key(g, batch, sm, quota);
+        if let Some(&v) = self.cache.lock().unwrap().get(&key) {
+            return v;
+        }
+        let ln_ms = self.forward(g, batch, sm, quota) as f64;
+        // Guard the exponent: an untrained/corrupt model must not produce
+        // Inf/NaN latencies that would wedge the autoscaler.
+        let ms = ln_ms.clamp(-10.0, 15.0).exp();
+        let secs = ms / 1e3;
+        self.cache.lock().unwrap().insert(key, secs);
+        secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+
+    #[test]
+    fn oracle_matches_perf_model() {
+        let o = OraclePredictor::default();
+        let g = zoo_graph(ZooModel::ResNet50);
+        let l = o.latency(&g, 8, 0.5, 0.5);
+        assert!((l - PerfModel::default().latency(&g, 8, 0.5, 0.5)).abs() < 1e-15);
+        let c = o.capacity(&g, 8, 0.5, 0.5);
+        assert!((c - PerfModel::default().capacity(&g, 8, 0.5, 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_weights_forward_is_finite_and_deterministic() {
+        let p = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 32, 5),
+            PerfModel::default(),
+        );
+        let g = zoo_graph(ZooModel::ConvNextTiny);
+        let a = p.latency(&g, 8, 0.5, 0.5);
+        let b = p.latency(&g, 8, 0.5, 0.5); // cached path
+        assert!(a.is_finite() && a > 0.0);
+        assert_eq!(a, b);
+        let p2 = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 32, 5),
+            PerfModel::default(),
+        );
+        assert_eq!(p2.latency(&g, 8, 0.5, 0.5), a);
+    }
+
+    #[test]
+    fn weights_json_roundtrip() {
+        // Serialise random weights to JSON the way train_rapp.py does, then load.
+        let w = RappWeights::random(FeatureMode::Full, 8, 3);
+        let to_dense = |d: &Dense| {
+            Json::obj(vec![
+                ("w", Json::num_arr(&d.w.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+                ("b", Json::num_arr(&d.b.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            ])
+        };
+        let to_gat = |g: &GatLayer| {
+            let mut obj = to_dense(&g.lin);
+            if let Json::Obj(fields) = &mut obj {
+                fields.push((
+                    "a_src".into(),
+                    Json::num_arr(&g.a_src.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+                ));
+                fields.push((
+                    "a_dst".into(),
+                    Json::num_arr(&g.a_dst.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+                ));
+            }
+            obj
+        };
+        let j = Json::obj(vec![
+            (
+                "arch",
+                Json::obj(vec![
+                    ("mode", Json::Str("rapp".into())),
+                    ("hidden", Json::Num(8.0)),
+                    ("f_op", Json::Num(w.mode.f_op() as f64)),
+                    ("f_g", Json::Num(w.mode.f_g() as f64)),
+                ]),
+            ),
+            (
+                "norm",
+                Json::obj(vec![
+                    ("op_mean", Json::num_arr(&vec![0.0; w.mode.f_op()])),
+                    ("op_std", Json::num_arr(&vec![1.0; w.mode.f_op()])),
+                    ("g_mean", Json::num_arr(&vec![0.0; w.mode.f_g()])),
+                    ("g_std", Json::num_arr(&vec![1.0; w.mode.f_g()])),
+                ]),
+            ),
+            ("gat1", to_gat(&w.gat1)),
+            ("gat2", to_gat(&w.gat2)),
+            ("mlp_g", to_dense(&w.mlp_g)),
+            ("head1", to_dense(&w.head1)),
+            ("head2", to_dense(&w.head2)),
+        ]);
+        let loaded = RappWeights::from_json(&j).unwrap();
+        // Same weights ⇒ same predictions.
+        let g = zoo_graph(ZooModel::BertTiny);
+        let p1 = RappPredictor::new(w, PerfModel::default());
+        let p2 = RappPredictor::new(loaded, PerfModel::default());
+        assert!((p1.forward(&g, 4, 0.3, 0.7) - p2.forward(&g, 4, 0.3, 0.7)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weights_dim_mismatch_rejected() {
+        let j = crate::util::json::parse(
+            r#"{"arch": {"mode": "rapp", "hidden": 8, "f_op": 5, "f_g": 15}}"#,
+        )
+        .unwrap();
+        assert!(RappWeights::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn latency_guard_clamps_extremes() {
+        // Random weights can emit large logits; latency must stay finite.
+        for seed in 0..5 {
+            let p = RappPredictor::new(
+                RappWeights::random(FeatureMode::StaticOnly, 16, seed),
+                PerfModel::default(),
+            );
+            let g = zoo_graph(ZooModel::Vgg16);
+            let l = p.latency(&g, 32, 0.05, 0.05);
+            assert!(l.is_finite() && l > 0.0);
+        }
+    }
+}

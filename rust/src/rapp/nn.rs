@@ -1,0 +1,260 @@
+//! Native neural-network forward pass for the RaPP predictor.
+//!
+//! The autoscaler evaluates RaPP O(pods × quota-steps) times per tick, so the
+//! decision loop uses this dependency-free f32 implementation (same weights as
+//! the AOT-compiled HLO forward, parity-tested against it). Architecture —
+//! mirrored in `python/compile/train_rapp.py`:
+//!
+//! ```text
+//! op_feats [N,F] ─ GAT(F→H) ─ GAT(H→H) ─ masked-mean ─┐
+//!                                                     concat → ReLU dense H
+//! graph_feats [G] ─ dense(G→H) + ReLU ────────────────┘        → dense 1
+//! ```
+//!
+//! GAT layer (Veličković et al. 2018, single head): `e_ij =
+//! LeakyReLU(a_src·Wh_i + a_dst·Wh_j)`, attention softmax over in-neighbours
+//! of the *symmetrised* edge set plus self-loops, ELU output activation.
+
+/// A dense layer: `y = W^T x + b`, with `w` stored row-major `[n_in][n_out]`.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Dense {
+    pub fn forward(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.n_in);
+        debug_assert_eq!(out.len(), self.n_out);
+        out.copy_from_slice(&self.b);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.w[i * self.n_out..(i + 1) * self.n_out];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xi * wv;
+            }
+        }
+    }
+}
+
+/// One single-head GAT layer.
+#[derive(Clone, Debug)]
+pub struct GatLayer {
+    pub lin: Dense,
+    /// Attention vectors over the transformed features, length `n_out`.
+    pub a_src: Vec<f32>,
+    pub a_dst: Vec<f32>,
+}
+
+#[inline]
+fn leaky_relu(x: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        0.2 * x
+    }
+}
+
+#[inline]
+fn elu(x: f32) -> f32 {
+    if x >= 0.0 {
+        x
+    } else {
+        x.exp() - 1.0
+    }
+}
+
+#[inline]
+pub fn relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+impl GatLayer {
+    /// `x`: `[n][n_in]` row-major; `nbrs[i]`: in-neighbour lists (must include
+    /// the self-loop). Returns `[n][n_out]`.
+    pub fn forward(&self, x: &[f32], n: usize, nbrs: &[Vec<usize>]) -> Vec<f32> {
+        let h = self.lin.n_out;
+        // h_i = W x_i for all nodes.
+        let mut hx = vec![0.0f32; n * h];
+        for i in 0..n {
+            let (src, dst) = (&x[i * self.lin.n_in..(i + 1) * self.lin.n_in], i * h);
+            self.lin.forward(src, &mut hx[dst..dst + h]);
+        }
+        // Pre-compute a_src·h_i and a_dst·h_j.
+        let mut s_src = vec![0.0f32; n];
+        let mut s_dst = vec![0.0f32; n];
+        for i in 0..n {
+            let hi = &hx[i * h..(i + 1) * h];
+            s_src[i] = dot(&self.a_src, hi);
+            s_dst[i] = dot(&self.a_dst, hi);
+        }
+        let mut out = vec![0.0f32; n * h];
+        let mut weights: Vec<f32> = Vec::new();
+        for i in 0..n {
+            let ns = &nbrs[i];
+            debug_assert!(!ns.is_empty(), "node {i} lacks self-loop");
+            // Attention logits + stable softmax.
+            weights.clear();
+            weights.extend(ns.iter().map(|&j| leaky_relu(s_src[i] + s_dst[j])));
+            let m = weights.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for w in weights.iter_mut() {
+                *w = (*w - m).exp();
+                z += *w;
+            }
+            let oi = &mut out[i * h..(i + 1) * h];
+            for (&j, &w) in ns.iter().zip(weights.iter()) {
+                let hj = &hx[j * h..(j + 1) * h];
+                let a = w / z;
+                for (o, &v) in oi.iter_mut().zip(hj) {
+                    *o += a * v;
+                }
+            }
+            for o in oi.iter_mut() {
+                *o = elu(*o);
+            }
+        }
+        out
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Symmetrise directed edges and add self-loops → in-neighbour lists.
+pub fn neighbour_lists(n: usize, edges: &[(usize, usize)]) -> Vec<Vec<usize>> {
+    let mut nbrs: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    for &(s, d) in edges {
+        nbrs[d].push(s);
+        nbrs[s].push(d);
+    }
+    nbrs
+}
+
+/// Masked mean-pool over node embeddings `[n][h]`.
+pub fn mean_pool(x: &[f32], n: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; h];
+    if n == 0 {
+        return out;
+    }
+    for i in 0..n {
+        for (o, &v) in out.iter_mut().zip(&x[i * h..(i + 1) * h]) {
+            *o += v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= n as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn rand_dense(rng: &mut Pcg64, n_in: usize, n_out: usize) -> Dense {
+        Dense {
+            n_in,
+            n_out,
+            w: (0..n_in * n_out)
+                .map(|_| rng.normal_ms(0.0, 0.3) as f32)
+                .collect(),
+            b: (0..n_out).map(|_| rng.normal_ms(0.0, 0.1) as f32).collect(),
+        }
+    }
+
+    fn rand_gat(rng: &mut Pcg64, n_in: usize, n_out: usize) -> GatLayer {
+        GatLayer {
+            lin: rand_dense(rng, n_in, n_out),
+            a_src: (0..n_out).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect(),
+            a_dst: (0..n_out).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect(),
+        }
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        let d = Dense {
+            n_in: 2,
+            n_out: 2,
+            w: vec![1.0, 2.0, 3.0, 4.0], // rows: x0 -> [1,2], x1 -> [3,4]
+            b: vec![0.5, -0.5],
+        };
+        let mut out = vec![0.0; 2];
+        d.forward(&[2.0, 1.0], &mut out);
+        assert_eq!(out, vec![2.0 + 3.0 + 0.5, 4.0 + 4.0 - 0.5]);
+    }
+
+    #[test]
+    fn gat_attention_sums_to_one() {
+        // With identical neighbour features, output = transformed feature
+        // (softmax convexity) — checks normalisation.
+        let mut rng = Pcg64::seeded(1);
+        let gat = rand_gat(&mut rng, 3, 4);
+        let x: Vec<f32> = [0.3f32, -0.2, 0.9].repeat(3);
+        let nbrs = neighbour_lists(3, &[(0, 1), (1, 2)]);
+        let out = gat.forward(&x, 3, &nbrs);
+        // All nodes have identical inputs ⇒ identical outputs.
+        assert_eq!(out[0..4], out[4..8]);
+        assert_eq!(out[4..8], out[8..12]);
+    }
+
+    #[test]
+    fn gat_permutation_equivariance() {
+        // Relabelling nodes (and edges) permutes outputs accordingly.
+        let mut rng = Pcg64::seeded(2);
+        let gat = rand_gat(&mut rng, 3, 4);
+        let x = vec![
+            0.1f32, 0.2, 0.3, // node 0
+            -0.5, 0.4, 0.0, // node 1
+            0.9, -0.1, 0.7, // node 2
+        ];
+        let edges = vec![(0, 1), (1, 2)];
+        let out = gat.forward(&x, 3, &neighbour_lists(3, &edges));
+        // Permutation: 0->2, 1->0, 2->1 (i.e. new[perm[i]] = old[i]).
+        let perm = [2usize, 0, 1];
+        let mut px = vec![0.0f32; 9];
+        for i in 0..3 {
+            px[perm[i] * 3..(perm[i] + 1) * 3].copy_from_slice(&x[i * 3..(i + 1) * 3]);
+        }
+        let pedges: Vec<(usize, usize)> = edges.iter().map(|&(s, d)| (perm[s], perm[d])).collect();
+        let pout = gat.forward(&px, 3, &neighbour_lists(3, &pedges));
+        for i in 0..3 {
+            for k in 0..4 {
+                let a = out[i * 4 + k];
+                let b = pout[perm[i] * 4 + k];
+                assert!((a - b).abs() < 1e-5, "node {i} dim {k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_pool_averages() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 nodes × 2 dims
+        assert_eq!(mean_pool(&x, 2, 2), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn neighbour_lists_symmetric_with_self_loops() {
+        let nbrs = neighbour_lists(3, &[(0, 2)]);
+        assert!(nbrs[0].contains(&0) && nbrs[0].contains(&2));
+        assert!(nbrs[2].contains(&2) && nbrs[2].contains(&0));
+        assert_eq!(nbrs[1], vec![1]);
+    }
+
+    #[test]
+    fn activations() {
+        assert_eq!(leaky_relu(1.0), 1.0);
+        assert_eq!(leaky_relu(-1.0), -0.2);
+        assert_eq!(elu(2.0), 2.0);
+        assert!((elu(-1.0) - (f32::exp(-1.0) - 1.0)).abs() < 1e-7);
+        assert_eq!(relu(-3.0), 0.0);
+    }
+}

@@ -1,0 +1,322 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py` from the JAX/Pallas layers) and executes them from
+//! the Rust request path. Python is never on this path.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto` — jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! The runtime keeps one PJRT CPU client and a compiled-executable cache
+//! keyed by artifact path; `infer` is thread-safe (PJRT CPU execution is
+//! internally synchronized; we additionally serialise calls per executable to
+//! model one physical accelerator per node).
+
+use crate::util::json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Metadata for one servable model artifact (from `artifacts/manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub batch: usize,
+    /// Flat input length per item (the L2 models take one `[batch, dim]` input).
+    pub input_dim: usize,
+    /// Flat output length per item.
+    pub output_dim: usize,
+}
+
+/// The artifact manifest written by `python/compile/aot.py`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: Vec<ModelArtifact>,
+    /// RaPP artifact paths, if present.
+    pub rapp_hlo: Option<PathBuf>,
+    pub rapp_weights: Option<PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = json::parse_file(&dir.join("manifest.json"))?;
+        let mut models = Vec::new();
+        for m in j.get("models")?.as_arr()? {
+            models.push(ModelArtifact {
+                name: m.get("name")?.as_str()?.to_string(),
+                path: dir.join(m.get("path")?.as_str()?),
+                batch: m.get("batch")?.as_usize()?,
+                input_dim: m.get("input_dim")?.as_usize()?,
+                output_dim: m.get("output_dim")?.as_usize()?,
+            });
+        }
+        let opt_path = |key: &str| -> Option<PathBuf> {
+            j.opt(key)
+                .and_then(|v| v.as_str().ok())
+                .map(|s| dir.join(s))
+        };
+        Ok(Manifest {
+            models,
+            rapp_hlo: opt_path("rapp_hlo"),
+            rapp_weights: opt_path("rapp_weights"),
+        })
+    }
+
+    /// Artifacts for `model` at any batch, smallest batch first.
+    pub fn variants(&self, model: &str) -> Vec<&ModelArtifact> {
+        let mut v: Vec<&ModelArtifact> =
+            self.models.iter().filter(|m| m.name == model).collect();
+        v.sort_by_key(|m| m.batch);
+        v
+    }
+
+    /// The artifact for `model` with batch ≥ `batch` (or the largest).
+    pub fn for_batch(&self, model: &str, batch: usize) -> Option<&ModelArtifact> {
+        let vs = self.variants(model);
+        vs.iter()
+            .find(|m| m.batch >= batch)
+            .copied()
+            .or_else(|| vs.last().copied())
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// PJRT CPU executables are not re-entrant across our pods; one lock per
+    /// executable models one accelerator per node anyway.
+    lock: Mutex<()>,
+}
+
+/// The PJRT runtime with an executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Compiled>>>,
+}
+
+// SAFETY: the xla crate wraps C++ PJRT objects behind pointers without Send/
+// Sync markers; the PJRT CPU client is thread-safe for compilation, and we
+// serialise execution through `Compiled::lock`.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+/// Result of one inference execution.
+#[derive(Clone, Debug)]
+pub struct InferOutput {
+    pub values: Vec<f32>,
+    /// Pure execution time (excludes queueing/token waits).
+    pub exec_time: std::time::Duration,
+}
+
+impl PjrtRuntime {
+    pub fn new() -> Result<Self> {
+        Ok(PjrtRuntime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    fn compiled(&self, path: &Path) -> Result<Arc<Compiled>> {
+        if let Some(c) = self.cache.lock().unwrap().get(path) {
+            return Ok(Arc::clone(c));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let c = Arc::new(Compiled {
+            exe,
+            lock: Mutex::new(()),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), Arc::clone(&c));
+        Ok(c)
+    }
+
+    /// Pre-compile an artifact (warm-up; keeps first-request latency flat).
+    pub fn warmup(&self, path: &Path) -> Result<()> {
+        self.compiled(path).map(|_| ())
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute an artifact on f32 inputs. Each input is (flat values, dims).
+    /// The computation must return a 1-tuple (jax lowered with
+    /// `return_tuple=True`); returns the flattened f32 output.
+    pub fn infer(&self, path: &Path, inputs: &[(&[f32], &[i64])]) -> Result<InferOutput> {
+        let compiled = self.compiled(path)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (vals, dims) in inputs {
+            let lit = xla::Literal::vec1(vals)
+                .reshape(dims)
+                .with_context(|| format!("reshaping input to {dims:?}"))?;
+            lits.push(lit);
+        }
+        let _guard = compiled.lock.lock().unwrap();
+        let t0 = Instant::now();
+        let result = compiled.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let exec_time = t0.elapsed();
+        let out = result.to_tuple1().context("expected 1-tuple output")?;
+        Ok(InferOutput {
+            values: out.to_vec::<f32>()?,
+            exec_time,
+        })
+    }
+}
+
+/// RaPP's AOT-compiled forward (the L1+L2 artifact executed via PJRT).
+///
+/// Inputs (padded to `MAX_NODES` = 64, matching
+/// `python/compile/features.py`): op features `[64, F_OP]`, symmetrised
+/// adjacency-with-self-loops mask `[64, 64]`, node mask `[64]`, graph
+/// features `[F_G]`. Output: `[1]` predicted ln(latency_ms).
+pub struct PjrtRapp {
+    runtime: Arc<PjrtRuntime>,
+    path: PathBuf,
+    pub f_op: usize,
+    pub f_g: usize,
+}
+
+pub const RAPP_MAX_NODES: usize = 64;
+
+impl PjrtRapp {
+    pub fn new(runtime: Arc<PjrtRuntime>, path: PathBuf, f_op: usize, f_g: usize) -> Self {
+        PjrtRapp {
+            runtime,
+            path,
+            f_op,
+            f_g,
+        }
+    }
+
+    /// Predict ln(latency_ms) from extracted features (normalisation is baked
+    /// into the python-side graph, so raw features go in).
+    pub fn forward(&self, feats: &crate::rapp::features::Features) -> Result<f32> {
+        let n = feats.op_feats.len();
+        anyhow::ensure!(
+            n <= RAPP_MAX_NODES,
+            "graph has {n} nodes > RAPP_MAX_NODES"
+        );
+        let mut x = vec![0.0f32; RAPP_MAX_NODES * self.f_op];
+        for (i, row) in feats.op_feats.iter().enumerate() {
+            anyhow::ensure!(row.len() == self.f_op, "op feature dim mismatch");
+            x[i * self.f_op..(i + 1) * self.f_op].copy_from_slice(row);
+        }
+        let mut adj = vec![0.0f32; RAPP_MAX_NODES * RAPP_MAX_NODES];
+        // Self-loops on every row, including padding (contract with
+        // python/compile/features.py::pad_for_hlo).
+        for i in 0..RAPP_MAX_NODES {
+            adj[i * RAPP_MAX_NODES + i] = 1.0;
+        }
+        for &(s, d) in &feats.edges {
+            adj[d * RAPP_MAX_NODES + s] = 1.0;
+            adj[s * RAPP_MAX_NODES + d] = 1.0;
+        }
+        let mut mask = vec![0.0f32; RAPP_MAX_NODES];
+        for m in mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+        anyhow::ensure!(feats.graph_feats.len() == self.f_g, "graph feature dim mismatch");
+        let out = self.runtime.infer(
+            &self.path,
+            &[
+                (&x, &[RAPP_MAX_NODES as i64, self.f_op as i64]),
+                (&adj, &[RAPP_MAX_NODES as i64, RAPP_MAX_NODES as i64]),
+                (&mask, &[RAPP_MAX_NODES as i64]),
+                (feats.graph_feats.as_slice(), &[self.f_g as i64]),
+            ],
+        )?;
+        anyhow::ensure!(!out.values.is_empty(), "empty RaPP output");
+        Ok(out.values[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Write a tiny HLO-text module equivalent to what aot.py emits and run
+    /// it through the full load-compile-execute path.
+    fn write_test_hlo(dir: &Path) -> PathBuf {
+        // f(x, y) = (x @ y + 2.0,) over f32[2,2] — matches the reference
+        // round-trip from /opt/xla-example.
+        let hlo = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.7 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+        let path = dir.join("test_fn.hlo.txt");
+        std::fs::write(&path, hlo).unwrap();
+        path
+    }
+
+    #[test]
+    fn load_execute_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hasgpu-rt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_test_hlo(&dir);
+        let rt = PjrtRuntime::new().unwrap();
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let y = [1f32, 1.0, 1.0, 1.0];
+        let out = rt
+            .infer(&path, &[(&x, &[2, 2]), (&y, &[2, 2])])
+            .unwrap();
+        assert_eq!(out.values, vec![5.0, 5.0, 9.0, 9.0]);
+        assert!(out.exec_time.as_nanos() > 0);
+        // Second call hits the cache.
+        assert_eq!(rt.cache_len(), 1);
+        let out2 = rt.infer(&path, &[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+        assert_eq!(out2.values, out.values);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let rt = PjrtRuntime::new().unwrap();
+        let err = rt.infer(Path::new("/nonexistent/model.hlo.txt"), &[]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("hasgpu-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": [
+                {"name": "cnn_s", "path": "models/cnn_s_b4.hlo.txt", "batch": 4, "input_dim": 3072, "output_dim": 10},
+                {"name": "cnn_s", "path": "models/cnn_s_b1.hlo.txt", "batch": 1, "input_dim": 3072, "output_dim": 10}
+            ], "rapp_hlo": "rapp.hlo.txt", "rapp_weights": "rapp_weights.json"}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert_eq!(m.variants("cnn_s")[0].batch, 1);
+        assert_eq!(m.for_batch("cnn_s", 3).unwrap().batch, 4);
+        assert_eq!(m.for_batch("cnn_s", 100).unwrap().batch, 4);
+        assert!(m.rapp_hlo.is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

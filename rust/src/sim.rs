@@ -1,0 +1,522 @@
+//! Discrete-event simulation harness: runs a scaling policy against a
+//! workload trace on the vGPU substrate at paper scale (10 GPUs, hours of
+//! trace, multiple functions) and produces the Fig. 6 / Fig. 7 data.
+//!
+//! The serving model per pod is the paper's: requests enter a per-function
+//! FIFO; an idle, ready pod pulls up to its batch size and serves the batch in
+//! `PerfModel::latency(g, b_actual, sm, quota)` seconds (current quota —
+//! vertical re-writes apply from the next batch, the window-boundary
+//! semantics of Fig. 2). Pods are billed for their slice while they hold it;
+//! whole-GPU pods (KServe) are billed for the full GPU. Cold-starting pods
+//! hold (and pay for) their slice but serve nothing until ready — which is
+//! exactly why horizontal-only scaling hurts under bursts.
+
+use crate::autoscaler::ScalingPolicy;
+use crate::cluster::{
+    Applied, ClusterState, FunctionSpec, PodId, PodPhase, Reconfigurator, ScalingAction,
+};
+use crate::metrics::{Outcome, RunReport};
+use crate::perf::PerfModel;
+use crate::rapp::LatencyPredictor;
+use crate::simclock::EventQueue;
+use crate::util::prng::Pcg64;
+use crate::workload::Trace;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Simulation tunables.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_gpus: usize,
+    pub seed: u64,
+    /// Autoscaler tick interval (seconds).
+    pub tick: f64,
+    /// Per-function queue cap; beyond it arrivals are dropped.
+    pub max_queue: usize,
+    /// Requests older than this at dispatch are dropped (client timeout).
+    pub timeout: f64,
+    /// Drain period after the trace ends.
+    pub drain: f64,
+    /// Backlog compensation: queued requests are folded into the demand
+    /// signal as `queue_len / horizon` extra RPS (concurrency-based scaling,
+    /// à la Knative; applied identically to every platform).
+    pub backlog_horizon: f64,
+    /// Bill whole GPU for every pod (KServe-style exclusive allocation).
+    pub bill_whole_gpu: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_gpus: 10,
+            seed: 42,
+            tick: 1.0,
+            max_queue: 10_000,
+            timeout: 30.0,
+            drain: 60.0,
+            backlog_horizon: 2.0,
+            bill_whole_gpu: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Request {
+    arrival: f64,
+}
+
+#[derive(Clone, Debug)]
+enum Ev {
+    Arrival { f_idx: usize, req: Request },
+    PodReady { pod: PodId },
+    ServiceDone { pod: PodId, f_idx: usize, batch: Vec<Request> },
+    Tick,
+    End,
+}
+
+/// Run one policy × trace experiment end-to-end; returns the report.
+pub fn run_sim(
+    policy: &mut dyn ScalingPolicy,
+    functions: &[FunctionSpec],
+    trace: &Trace,
+    predictor: &dyn LatencyPredictor,
+    perf: &PerfModel,
+    cfg: &SimConfig,
+) -> RunReport {
+    let mut cluster = ClusterState::new(cfg.n_gpus, perf.dev.mem_cap);
+    for f in functions {
+        cluster.register_function(f.clone());
+    }
+    let mut recon = Reconfigurator::new(&cluster, cfg.seed);
+    let mut report = RunReport::new(policy.name());
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut rng = Pcg64::new(cfg.seed, 77);
+
+    // Pre-schedule all arrivals from the trace.
+    let duration = trace.duration();
+    for (f_idx, f) in functions.iter().enumerate() {
+        for sec in 0..duration {
+            for t in trace.arrivals(&f.name, sec, &mut rng) {
+                q.push_at(t, Ev::Arrival { f_idx, req: Request { arrival: t } });
+            }
+        }
+    }
+    // Scaler ticks + end-of-run.
+    let end_t = duration as f64 + cfg.drain;
+    let mut t = cfg.tick;
+    while t < end_t {
+        q.push_at(t, Ev::Tick);
+        t += cfg.tick;
+    }
+    q.push_at(end_t, Ev::End);
+
+    // Warm bootstrap: every platform deploys pods sized for the trace's
+    // initial rate (the paper's platforms are warm when measurement starts;
+    // at idle this degenerates to "one instance with minimal resources").
+    for f in functions {
+        let initial_rate = trace.rps_at(&f.name, 0).max(1.0);
+        let actions = policy.plan(f, initial_rate, &cluster, predictor, 0.0);
+        for a in &actions {
+            apply_action(&mut cluster, &mut recon, perf, a, 0.0, &mut report);
+        }
+        // Bootstrap pods start warm (deployment-time, not a runtime cold start).
+        let ids: Vec<PodId> = cluster.pods_of(&f.name).iter().map(|p| p.id).collect();
+        for id in ids {
+            if let Some(p) = cluster.pod_mut(id) {
+                p.phase = PodPhase::Running;
+            }
+        }
+    }
+
+    // Per-function FIFO queues + per-pod busy state.
+    let mut queues: Vec<VecDeque<Request>> = functions.iter().map(|_| VecDeque::new()).collect();
+    let mut busy: BTreeSet<PodId> = BTreeSet::new();
+    let mut pending_remove: BTreeSet<PodId> = BTreeSet::new();
+    let mut arrivals_this_tick: Vec<u64> = vec![0; functions.len()];
+    // PodReady events are scheduled lazily at creation time.
+
+    while let Some((now, ev)) = q.pop() {
+        match ev {
+            Ev::Arrival { f_idx, req } => {
+                arrivals_this_tick[f_idx] += 1;
+                if queues[f_idx].len() >= cfg.max_queue {
+                    report
+                        .function(&functions[f_idx].name)
+                        .record(req.arrival, 0.0, Outcome::Dropped);
+                } else {
+                    queues[f_idx].push_back(req);
+                    try_dispatch(
+                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        cfg, &mut report,
+                    );
+                }
+            }
+            Ev::PodReady { pod } => {
+                if let Some(p) = cluster.pod_mut(pod) {
+                    if matches!(p.phase, PodPhase::ColdStarting { .. }) {
+                        p.phase = PodPhase::Running;
+                    }
+                    let f_idx = functions
+                        .iter()
+                        .position(|f| f.name == p.function)
+                        .expect("known function");
+                    try_dispatch(
+                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        cfg, &mut report,
+                    );
+                }
+            }
+            Ev::ServiceDone { pod, f_idx, batch } => {
+                busy.remove(&pod);
+                for r in &batch {
+                    report
+                        .function(&functions[f_idx].name)
+                        .record(r.arrival, now - r.arrival, Outcome::Ok);
+                }
+                if pending_remove.remove(&pod) {
+                    bill_pod(&mut cluster, &mut report, perf, cfg, pod, now);
+                    let _ = recon.apply(
+                        &mut cluster,
+                        perf,
+                        &ScalingAction::RemovePod { pod },
+                        now,
+                    );
+                } else {
+                    try_dispatch(
+                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        cfg, &mut report,
+                    );
+                }
+            }
+            Ev::Tick => {
+                // Billing first (pre-scaling slice sizes), then policy.
+                bill_all(&mut cluster, &mut report, perf, cfg, now);
+                for (f_idx, f) in functions.iter().enumerate() {
+                    let observed = arrivals_this_tick[f_idx] as f64 / cfg.tick
+                        + queues[f_idx].len() as f64 / cfg.backlog_horizon;
+                    arrivals_this_tick[f_idx] = 0;
+                    let actions = policy.plan(f, observed, &cluster, predictor, now);
+                    for a in &actions {
+                        match a {
+                            ScalingAction::RemovePod { pod } if busy.contains(pod) => {
+                                // Defer: drain in-flight batch first.
+                                if let Some(p) = cluster.pod_mut(*pod) {
+                                    p.phase = PodPhase::Draining;
+                                }
+                                pending_remove.insert(*pod);
+                                report.horizontal_downs += 1;
+                            }
+                            _ => {
+                                if let Some(applied) = apply_action(
+                                    &mut cluster, &mut recon, perf, a, now, &mut report,
+                                ) {
+                                    if let Applied::PodCreated { pod, ready_at } = applied {
+                                        q.push_at(ready_at, Ev::PodReady { pod });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // New capacity may unblock the queue.
+                    try_dispatch(
+                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        cfg, &mut report,
+                    );
+                }
+            }
+            Ev::End => {
+                bill_all(&mut cluster, &mut report, perf, cfg, now);
+                // Drain queues: anything still waiting is a drop.
+                for (f_idx, f) in functions.iter().enumerate() {
+                    while let Some(r) = queues[f_idx].pop_front() {
+                        report.function(&f.name).record(r.arrival, 0.0, Outcome::Dropped);
+                    }
+                }
+                report.duration = now;
+                break;
+            }
+        }
+    }
+    debug_assert!(cluster.check_invariants().is_ok());
+    report
+}
+
+/// Bill one pod's slice up to `now`.
+fn bill_pod(
+    cluster: &mut ClusterState,
+    report: &mut RunReport,
+    perf: &PerfModel,
+    cfg: &SimConfig,
+    pod: PodId,
+    now: f64,
+) {
+    if let Some(p) = cluster.pod_mut(pod) {
+        let dur = (now - p.billed_until).max(0.0);
+        let (sm, quota) = if cfg.bill_whole_gpu {
+            (1.0, 1.0)
+        } else {
+            (
+                crate::vgpu::sm_to_f64(p.sm),
+                crate::vgpu::quota_to_f64(p.quota),
+            )
+        };
+        let fname = p.function.clone();
+        p.billed_until = now;
+        report
+            .costs
+            .bill_slice(&fname, sm, quota, dur, perf.dev.price_per_hour);
+    }
+}
+
+fn bill_all(
+    cluster: &mut ClusterState,
+    report: &mut RunReport,
+    perf: &PerfModel,
+    cfg: &SimConfig,
+    now: f64,
+) {
+    let ids: Vec<PodId> = cluster.pods().map(|p| p.id).collect();
+    for id in ids {
+        bill_pod(cluster, report, perf, cfg, id, now);
+    }
+}
+
+/// Apply an action through the Re-configurator, with metrics accounting.
+fn apply_action(
+    cluster: &mut ClusterState,
+    recon: &mut Reconfigurator,
+    perf: &PerfModel,
+    action: &ScalingAction,
+    now: f64,
+    report: &mut RunReport,
+) -> Option<Applied> {
+    // Bill at the old slice before resizing.
+    match action {
+        ScalingAction::SetQuota { pod, .. } | ScalingAction::RemovePod { pod } => {
+            // billed in caller via bill_pod where needed; bill here for safety.
+            let _ = pod;
+        }
+        _ => {}
+    }
+    if let ScalingAction::SetQuota { pod, quota } = action {
+        if let Some(p) = cluster.pod(*pod) {
+            let old = p.quota;
+            let dur_pod = *pod;
+            let _ = dur_pod;
+            if *quota > old {
+                report.vertical_ups += 1;
+            } else {
+                report.vertical_downs += 1;
+            }
+        }
+    }
+    match action {
+        ScalingAction::CreatePod { .. } => report.horizontal_ups += 1,
+        ScalingAction::RemovePod { .. } => report.horizontal_downs += 1,
+        _ => {}
+    }
+    // Bill the pod at its pre-change slice before the mutation.
+    if let ScalingAction::SetQuota { pod, .. } | ScalingAction::RemovePod { pod } = action {
+        bill_pod(
+            cluster,
+            report,
+            perf,
+            &SimConfig {
+                bill_whole_gpu: false,
+                ..SimConfig::default()
+            },
+            *pod,
+            now,
+        );
+    }
+    match recon.apply(cluster, perf, action, now) {
+        Ok(applied) => Some(applied),
+        Err(_e) => {
+            // Allocation race (policy planned on a snapshot): drop the action.
+            None
+        }
+    }
+}
+
+/// Dispatch work to every idle, ready pod of `f_idx`.
+#[allow(clippy::too_many_arguments)]
+fn try_dispatch(
+    f_idx: usize,
+    now: f64,
+    queues: &mut [VecDeque<Request>],
+    busy: &mut BTreeSet<PodId>,
+    cluster: &ClusterState,
+    perf: &PerfModel,
+    functions: &[FunctionSpec],
+    q: &mut EventQueue<Ev>,
+    cfg: &SimConfig,
+    report: &mut RunReport,
+) {
+    let f = &functions[f_idx];
+    // Idle + ready pods, largest capacity first (capacity-weighted routing).
+    let mut pods: Vec<(&crate::cluster::Pod, f64)> = cluster
+        .pods_of(&f.name)
+        .into_iter()
+        .filter(|p| p.is_ready(now) && !busy.contains(&p.id))
+        .map(|p| {
+            let cap = crate::vgpu::sm_to_f64(p.sm) * crate::vgpu::quota_to_f64(p.quota);
+            (p, cap)
+        })
+        .collect();
+    pods.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    for (pod, _) in pods {
+        // Expire timed-out requests first.
+        while let Some(r) = queues[f_idx].front() {
+            if now - r.arrival > cfg.timeout {
+                let r = queues[f_idx].pop_front().unwrap();
+                report
+                    .function(&f.name)
+                    .record(r.arrival, now - r.arrival, Outcome::Dropped);
+            } else {
+                break;
+            }
+        }
+        if queues[f_idx].is_empty() {
+            return;
+        }
+        let take = (pod.batch as usize).min(queues[f_idx].len());
+        let batch: Vec<Request> = queues[f_idx].drain(..take).collect();
+        let service = perf.latency(
+            &f.graph,
+            take as u32,
+            crate::vgpu::sm_to_f64(pod.sm),
+            crate::vgpu::quota_to_f64(pod.quota),
+        );
+        busy.insert(pod.id);
+        q.push_at(
+            now + service,
+            Ev::ServiceDone {
+                pod: pod.id,
+                f_idx,
+                batch,
+            },
+        );
+    }
+}
+
+/// A BTreeMap keyed summary of multiple runs (used by benches).
+pub fn summarize_costs(reports: &[RunReport]) -> BTreeMap<String, Vec<(String, f64)>> {
+    let mut out = BTreeMap::new();
+    for r in reports {
+        let entries: Vec<(String, f64)> = r
+            .functions
+            .iter()
+            .map(|(f, m)| (f.clone(), r.costs.cost_per_1k(f, m.served())))
+            .collect();
+        out.insert(r.platform.clone(), entries);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscaler::{HybridAutoscaler, HybridConfig};
+    use crate::baselines::{FastGSharePolicy, KServePolicy};
+    use crate::model::zoo::{zoo_graph, ZooModel};
+    use crate::rapp::OraclePredictor;
+    use crate::workload::{Preset, TraceGen};
+
+    fn test_functions() -> Vec<FunctionSpec> {
+        let perf = PerfModel::default();
+        [ZooModel::ResNet50, ZooModel::MobileNetV2]
+            .iter()
+            .map(|&m| {
+                let graph = zoo_graph(m);
+                let baseline = perf.latency(&graph, 1, 1.0, 1.0);
+                FunctionSpec {
+                    name: graph.name.clone(),
+                    slo: baseline * 5.0,
+                    batch: 8,
+                    graph,
+                    artifact: None,
+                }
+            })
+            .collect()
+    }
+
+    fn small_trace(functions: &[FunctionSpec]) -> Trace {
+        let names: Vec<&str> = functions.iter().map(|f| f.name.as_str()).collect();
+        TraceGen::preset(Preset::Standard, 3, 120, 150.0).generate(&names)
+    }
+
+    fn run(policy: &mut dyn ScalingPolicy, whole_gpu: bool) -> RunReport {
+        let fns = test_functions();
+        let trace = small_trace(&fns);
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        let cfg = SimConfig {
+            n_gpus: 8,
+            bill_whole_gpu: whole_gpu,
+            ..SimConfig::default()
+        };
+        run_sim(policy, &fns, &trace, &pred, &perf, &cfg)
+    }
+
+    #[test]
+    fn hasgpu_serves_most_requests() {
+        let mut p = HybridAutoscaler::new(HybridConfig::default());
+        let r = run(&mut p, false);
+        let total = r.total_served() + r.total_dropped();
+        assert!(total > 1000, "trace produced {total} requests");
+        let drop_rate = r.total_dropped() as f64 / total as f64;
+        assert!(drop_rate < 0.05, "drop rate {drop_rate}");
+        assert!(r.vertical_ups > 0, "hybrid scaler must use vertical scaling");
+    }
+
+    #[test]
+    fn kserve_runs_and_costs_more_than_hasgpu() {
+        let mut has = HybridAutoscaler::new(HybridConfig::default());
+        let r_has = run(&mut has, false);
+        let mut ks = KServePolicy::default();
+        let r_ks = run(&mut ks, true);
+        // Same workload, so compare per-1k cost over all functions.
+        let c_has: f64 = r_has.costs.total_cost();
+        let c_ks: f64 = r_ks.costs.total_cost();
+        // The full paper-factor comparison lives in tests/sim_experiments.rs
+        // (6 functions, duty-cycled trace); this smoke run only pins the
+        // ordering.
+        assert!(c_ks > c_has, "kserve ${c_ks} should exceed has-gpu ${c_has}");
+    }
+
+    #[test]
+    fn fastgshare_runs_without_vertical_scaling() {
+        let mut fg = FastGSharePolicy::default();
+        let r = run(&mut fg, false);
+        assert_eq!(r.vertical_ups, 0);
+        assert_eq!(r.vertical_downs, 0);
+        assert!(r.total_served() > 500);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let mut a = HybridAutoscaler::new(HybridConfig::default());
+        let mut b = HybridAutoscaler::new(HybridConfig::default());
+        let ra = run(&mut a, false);
+        let rb = run(&mut b, false);
+        assert_eq!(ra.total_served(), rb.total_served());
+        assert!((ra.costs.total_cost() - rb.costs.total_cost()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_serves_nothing_but_keeps_min_pods() {
+        let fns = test_functions();
+        let mut trace = Trace::default();
+        for f in &fns {
+            trace.series.insert(f.name.clone(), vec![0.0; 30]);
+        }
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        let mut p = HybridAutoscaler::new(HybridConfig::default());
+        let r = run_sim(&mut p, &fns, &trace, &pred, &perf, &SimConfig::default());
+        assert_eq!(r.total_served(), 0);
+        // Keep-alive still accrues (small) cost.
+        assert!(r.costs.total_cost() > 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Simulation time and the discrete-event engine.
+//!
+//! Experiments at paper scale (10 GPUs, hours of Azure trace, three platforms)
+//! run in **sim mode**: a discrete-event loop over virtual seconds driven by a
+//! binary-heap event queue. Small-scale end-to-end runs use **real mode**
+//! (wall clock + actual PJRT execution); both share the same component code by
+//! programming against [`Clock`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// Time source abstraction: virtual (simulation) or wall (serving).
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Wall clock anchored at creation.
+    Wall(Instant),
+    /// Virtual time in seconds, advanced explicitly by the event loop.
+    Virtual(f64),
+}
+
+impl Clock {
+    pub fn wall() -> Self {
+        Clock::Wall(Instant::now())
+    }
+
+    pub fn virtual_at(t: f64) -> Self {
+        Clock::Virtual(t)
+    }
+
+    /// Seconds since the epoch of this clock.
+    pub fn now(&self) -> f64 {
+        match self {
+            Clock::Wall(t0) => t0.elapsed().as_secs_f64(),
+            Clock::Virtual(t) => *t,
+        }
+    }
+
+    /// Advance a virtual clock (no-op error on wall clocks).
+    pub fn advance_to(&mut self, t: f64) {
+        if let Clock::Virtual(cur) = self {
+            debug_assert!(t >= *cur, "time moved backwards: {t} < {cur}");
+            *cur = t;
+        }
+    }
+}
+
+/// An event scheduled at virtual time `at` with an opaque payload.
+struct Scheduled<E> {
+    at: f64,
+    seq: u64, // FIFO tie-break for simultaneous events (determinism)
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic discrete-event queue.
+///
+/// Events with equal timestamps pop in insertion order, which makes whole
+/// simulation runs bit-reproducible for a given seed.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: f64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now).
+    pub fn push_at(&mut self, at: f64, event: E) {
+        let at = if at < self.now { self.now } else { at };
+        self.heap.push(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after `delay` seconds.
+    pub fn push_after(&mut self, delay: f64, event: E) {
+        debug_assert!(delay >= 0.0);
+        self.push_at(self.now + delay, event);
+    }
+
+    /// Pop the earliest event, advancing virtual time to its timestamp.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|s| {
+            debug_assert!(s.at >= self.now);
+            self.now = s.at;
+            (s.at, s.event)
+        })
+    }
+
+    /// Peek at the next event time without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(3.0, "c");
+        q.push_at(1.0, "a");
+        q.push_at(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push_at(5.0, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop().unwrap().1, i);
+        }
+    }
+
+    #[test]
+    fn time_advances_with_pop() {
+        let mut q = EventQueue::new();
+        q.push_at(1.5, ());
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 1.5);
+        q.push_after(0.5, ());
+        assert_eq!(q.peek_time(), Some(2.0));
+    }
+
+    #[test]
+    fn past_events_clamped_to_now() {
+        let mut q = EventQueue::new();
+        q.push_at(2.0, "late");
+        q.pop();
+        q.push_at(1.0, "early"); // in the past: clamp to now=2.0
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let mut c = Clock::virtual_at(0.0);
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(10.0);
+        assert_eq!(c.now(), 10.0);
+    }
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = Clock::wall();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,243 @@
+//! Mini-criterion: a statistically honest micro/end-to-end bench harness.
+//!
+//! Criterion is unavailable offline; this reproduces the parts the project
+//! needs — warm-up, adaptive iteration counts targeting a fixed measurement
+//! time, outlier-robust statistics (median + MAD), and stable text output
+//! consumed by `EXPERIMENTS.md` — with `harness = false` bench binaries.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:>9.2} Melem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>9.2} Kelem/s", t / 1e3),
+            Some(t) => format!("  {t:>9.2} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<48} {:>12} median  {:>12} mean  ±{:>10} mad  ({} iters){}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.mad),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench harness: groups cases, prints a criterion-like report.
+pub struct Harness {
+    group: String,
+    measure_time: Duration,
+    warmup_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    pub fn new(group: &str) -> Self {
+        // Benches accept HAS_BENCH_FAST=1 to run quickly in CI/tests.
+        let fast = std::env::var("HAS_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        println!("\n=== bench group: {group} ===");
+        Harness {
+            group: group.to_string(),
+            measure_time: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            warmup_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_times(mut self, warmup: Duration, measure: Duration) -> Self {
+        self.warmup_time = warmup;
+        self.measure_time = measure;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_elems(name, None, f)
+    }
+
+    /// Benchmark with a throughput denominator.
+    pub fn bench_elems<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warm-up and per-call cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose batch size so each sample is >= ~50µs (amortise timer cost)
+        // and aim for ~60 samples in the measurement window.
+        let batch = ((5e-5 / per_call).ceil() as u64).max(1);
+        let target_samples = 60u64;
+        let est_sample = per_call * batch as f64;
+        let samples = ((self.measure_time.as_secs_f64() / est_sample) as u64)
+            .clamp(5, target_samples);
+
+        let mut times: Vec<f64> = Vec::with_capacity(samples as usize);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+        times.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let result = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: samples * batch,
+            median: Duration::from_secs_f64(median),
+            mean: Duration::from_secs_f64(mean),
+            mad: Duration::from_secs_f64(mad),
+            min: Duration::from_secs_f64(times[0]),
+            max: Duration::from_secs_f64(*times.last().unwrap()),
+            elements,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimiser from eliding a computed value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a fixed-width ASCII table — benches print paper-style tables with it.
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        out.push('+');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('+');
+        }
+        out.push('\n');
+    };
+    sep(&mut out);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:<w$} |"));
+    }
+    out.push('\n');
+    sep(&mut out);
+    for row in rows {
+        out.push('|');
+        for (c, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {c:>w$} |"));
+        }
+        out.push('\n');
+    }
+    sep(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("HAS_BENCH_FAST", "1");
+        let mut h = Harness::new("test").with_times(
+            Duration::from_millis(10),
+            Duration::from_millis(50),
+        );
+        let r = h.bench("spin", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = ascii_table(
+            &["model", "lat"],
+            &[vec!["resnet50".into(), "12.3".into()]],
+        );
+        assert!(t.contains("resnet50"));
+        assert!(t.lines().count() >= 5);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(500)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,237 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help` text. Used by `main.rs` and every
+//! example binary.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option specification for help text + validation.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative CLI definition.
+pub struct Cli {
+    bin: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli {
+            bin,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.bin, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if !o.is_flag => " [required]".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind:<10}  {}{def}\n", o.name, o.help));
+        }
+        s.push_str("  --help        show this message\n");
+        s
+    }
+
+    /// Parse `std::env::args()`. Prints usage and exits on `--help` or error.
+    pub fn parse(self) -> Args {
+        self.parse_from(std::env::args().skip(1).collect())
+            .unwrap_or_else(|e| {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            })
+    }
+
+    /// Parse an explicit vector (testable).
+    pub fn parse_from(&self, argv: Vec<String>) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.opts.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a flag, takes no value"));
+                    }
+                    args.flags.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    args.opts.insert(name, val);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        // Check required.
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !args.opts.contains_key(o.name) {
+                return Err(format!("missing required option --{}", o.name));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.opts
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("seed", "42", "rng seed")
+            .req("model", "model name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = cli()
+            .parse_from(vec![
+                "--model".into(),
+                "resnet50".into(),
+                "--seed=7".into(),
+                "--verbose".into(),
+                "pos1".into(),
+            ])
+            .unwrap();
+        assert_eq!(a.get("model"), "resnet50");
+        assert_eq!(a.get_u64("seed"), 7);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli()
+            .parse_from(vec!["--model".into(), "x".into()])
+            .unwrap();
+        assert_eq!(a.get("seed"), "42");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cli().parse_from(vec![]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli()
+            .parse_from(vec!["--model".into(), "x".into(), "--nope".into()])
+            .is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli()
+            .parse_from(vec!["--model".into(), "x".into(), "--verbose=1".into()])
+            .is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained substrate utilities.
+//!
+//! The reproduction environment is fully offline, so everything that a typical
+//! serving stack would pull from crates.io (RNGs and samplers, JSON, a thread
+//! pool, a benchmark harness, a property-testing loop) is implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;

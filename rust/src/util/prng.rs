@@ -1,0 +1,355 @@
+//! Deterministic pseudo-random number generation and distribution samplers.
+//!
+//! Every stochastic component of the system (trace synthesis, arrival
+//! thinning, cold-start jitter, measurement noise, dataset sampling) draws
+//! from a seeded [`Pcg64`] so simulation runs, tests and benches are
+//! bit-reproducible. The generator is PCG-XSL-RR 128/64 (O'Neill 2014), which
+//! passes PractRand and is fast enough for the event-loop hot path.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Distinct stream ids
+    /// give statistically independent sequences for the same seed, which lets
+    /// subsystems share one experiment seed without correlating.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Default stream (0) constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean / std deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Used for Poisson-process
+    /// inter-arrival gaps in the open-loop workload driver.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        // 1 - U avoids ln(0).
+        -(1.0 - self.next_f64()).ln() / lambda
+    }
+
+    /// Poisson-distributed count with mean `lambda`.
+    ///
+    /// Knuth's product method for small lambda; for lambda > 30 the PTRS
+    /// transformed-rejection sampler (Hörmann 1993) keeps it O(1).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // PTRS
+        let b = 0.931 + 2.53 * lambda.sqrt();
+        let a = -0.059 + 0.02483 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = self.next_f64() - 0.5;
+            let v = self.next_f64();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            let log_v = v.ln();
+            let lhs = log_v + (inv_alpha / (a / (us * us) + b)).ln();
+            let rhs = -lambda + k * lambda.ln() - ln_factorial(k as u64);
+            if lhs <= rhs {
+                return k as u64;
+            }
+        }
+    }
+
+    /// Gamma(shape, scale) via Marsaglia–Tsang; used for heavy-tailed
+    /// per-function invocation rates in the Azure-style trace synthesiser.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0, 1.0);
+            return g * self.next_f64().powf(1.0 / shape) * scale;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v * scale;
+            }
+        }
+    }
+
+    /// Pareto (heavy tail) with scale `x_m` and shape `alpha`.
+    #[inline]
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        x_m / (1.0 - self.next_f64()).powf(1.0 / alpha)
+    }
+
+    /// Log-normal with underlying normal (mu, sigma).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.next_below(xs.len() as u64) as usize]
+    }
+}
+
+/// ln(k!) via Stirling's series for the PTRS sampler.
+fn ln_factorial(k: u64) -> f64 {
+    // Exact for small k, Stirling beyond.
+    const TABLE: [f64; 10] = [
+        0.0,
+        0.0,
+        0.6931471805599453,
+        1.791759469228055,
+        3.1780538303479458,
+        4.787491742782046,
+        6.579251212010101,
+        8.525161361065415,
+        10.60460290274525,
+        12.801827480081469,
+    ];
+    if (k as usize) < TABLE.len() {
+        return TABLE[k as usize];
+    }
+    let x = (k + 1) as f64;
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Pcg64::seeded(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_is_unbiased_enough() {
+        let mut rng = Pcg64::seeded(3);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9000..11000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large_lambda() {
+        let mut rng = Pcg64::seeded(13);
+        for &lambda in &[0.5, 3.0, 12.0, 45.0, 200.0] {
+            let n = 50_000;
+            let mut sum = 0u64;
+            for _ in 0..n {
+                sum += rng.poisson(lambda);
+            }
+            let mean = sum as f64 / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::seeded(17);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += rng.exponential(4.0);
+        }
+        assert!((sum / n as f64 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn gamma_mean_variance() {
+        let mut rng = Pcg64::seeded(19);
+        let (shape, scale) = (2.5, 1.5);
+        let n = 100_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.gamma(shape, scale);
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - shape * scale).abs() < 0.05, "mean={mean}");
+        assert!((var - shape * scale * scale).abs() < 0.2, "var={var}");
+    }
+
+    #[test]
+    fn gamma_shape_below_one() {
+        let mut rng = Pcg64::seeded(23);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.gamma(0.4, 2.0);
+            assert!(x >= 0.0);
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.8).abs() < 0.03);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(29);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let direct: f64 = (1..=20).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(20) - direct).abs() < 1e-9);
+    }
+}

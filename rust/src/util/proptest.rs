@@ -1,0 +1,108 @@
+//! Property-based testing loop (proptest is unavailable offline).
+//!
+//! [`run_prop`] drives a property over many seeded random cases and, on
+//! failure, reports the failing seed so the case can be replayed exactly.
+//! Shrinking is by seed replay with reduced size hints rather than structural
+//! shrinking — adequate for the invariants tested here (allocator alignment,
+//! scheduler conservation, Kalman stability).
+
+use crate::util::prng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. sequence length).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 256,
+            seed: 0xC0FFEE,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop(rng, size)` for `config.cases` random cases. The property returns
+/// `Err(msg)` to signal a violation. Panics with seed + size on first failure
+/// (after trying smaller sizes with the same seed for a more minimal report).
+pub fn run_prop<F>(name: &str, config: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let case_seed = config.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // Grow size with case index so early failures are small.
+        let size = 1 + (case as usize * config.max_size) / config.cases.max(1) as usize;
+        let mut rng = Pcg64::new(case_seed, 17);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Attempt to reproduce at smaller sizes for a tighter report.
+            let mut min_size = size;
+            let mut min_msg = msg;
+            for s in 1..size {
+                let mut rng = Pcg64::new(case_seed, 17);
+                if let Err(m) = prop(&mut rng, s) {
+                    min_size = s;
+                    min_msg = m;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (replay: seed={case_seed:#x}, size={min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", PropConfig::default(), |rng, size| {
+            count += 1;
+            let v = rng.next_below(size as u64 + 1);
+            if v <= size as u64 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, PropConfig::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must_fail' failed")]
+    fn failing_property_panics_with_seed() {
+        run_prop(
+            "must_fail",
+            PropConfig {
+                cases: 10,
+                ..Default::default()
+            },
+            |_rng, size| {
+                if size >= 3 {
+                    Err(format!("size {size} too big"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,346 @@
+//! Streaming statistics: percentiles, histograms, MAPE, online mean/variance.
+//!
+//! The metrics plane records hundreds of thousands of per-request latencies in
+//! a simulation run; [`Summary`] keeps exact values (the experiment scale fits
+//! in memory) while [`Histogram`] provides a fixed-footprint log-bucketed
+//! alternative for the serving hot path.
+
+/// Exact-sample summary with lazily-sorted percentile queries.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.values.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Percentile in [0, 100] with linear interpolation between ranks.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        if !self.sorted {
+            self.values
+                .sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+            self.sorted = true;
+        }
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fraction of samples strictly above `threshold` — the SLO-violation rate
+    /// for a given latency bound.
+    pub fn frac_above(&self, threshold: f64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().filter(|&&v| v > threshold).count() as f64 / self.values.len() as f64
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+}
+
+/// Log-bucketed histogram: fixed memory, ~2.5% relative error per bucket.
+/// Covers [1e-7, ~1e5) seconds with 12 buckets/decade.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const HIST_BUCKETS_PER_DECADE: f64 = 12.0;
+const HIST_LO: f64 = 1e-7;
+const HIST_N: usize = 145; // 12 decades * 12 + 1
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; HIST_N],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    fn index(v: f64) -> usize {
+        if v <= HIST_LO {
+            return 0;
+        }
+        let idx = ((v / HIST_LO).log10() * HIST_BUCKETS_PER_DECADE) as usize;
+        idx.min(HIST_N - 1)
+    }
+
+    #[inline]
+    pub fn add(&mut self, v: f64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile estimate from bucket boundaries (upper edge interpolation).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                let edge = HIST_LO * 10f64.powf((i as f64 + 0.5) / HIST_BUCKETS_PER_DECADE);
+                return edge.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Online mean/variance (Welford) — used by the Kalman filter's measurement
+/// noise estimator and by streaming throughput meters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+/// Mean absolute percentage error — the paper's RaPP accuracy metric (Fig. 5).
+pub fn mape(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    assert!(!truth.is_empty());
+    let mut acc = 0.0;
+    for (&t, &p) in truth.iter().zip(pred) {
+        debug_assert!(t > 0.0, "MAPE needs positive ground truth");
+        acc += ((t - p) / t).abs();
+    }
+    acc / truth.len() as f64 * 100.0
+}
+
+/// Root-mean-square error.
+pub fn rmse(truth: &[f64], pred: &[f64]) -> f64 {
+    assert_eq!(truth.len(), pred.len());
+    let mse = truth
+        .iter()
+        .zip(pred)
+        .map(|(&t, &p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / truth.len() as f64;
+    mse.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.01);
+        assert_eq!(s.len(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_single_value() {
+        let mut s = Summary::new();
+        s.add(3.0);
+        assert_eq!(s.p99(), 3.0);
+        assert_eq!(s.p50(), 3.0);
+    }
+
+    #[test]
+    fn summary_frac_above() {
+        let mut s = Summary::new();
+        for i in 0..10 {
+            s.add(i as f64);
+        }
+        assert!((s.frac_above(6.5) - 0.3).abs() < 1e-9);
+        assert_eq!(s.frac_above(100.0), 0.0);
+    }
+
+    #[test]
+    fn summary_interleaved_add_and_query() {
+        let mut s = Summary::new();
+        s.add(1.0);
+        s.add(2.0);
+        let _ = s.p50();
+        s.add(0.0); // must re-sort
+        assert!((s.p50() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentile_accuracy() {
+        let mut h = Histogram::new();
+        let mut s = Summary::new();
+        let mut rng = crate::util::prng::Pcg64::seeded(5);
+        for _ in 0..100_000 {
+            let v = rng.lognormal(-4.0, 1.0); // latency-like, ~18ms median
+            h.add(v);
+            s.add(v);
+        }
+        for p in [50.0, 90.0, 99.0] {
+            let exact = s.percentile(p);
+            let est = h.percentile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.15, "p{p}: exact={exact} est={est}");
+        }
+        assert!((h.mean() - s.mean()).abs() / s.mean() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert!(h.percentile(50.0).is_nan());
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        assert!((w.mean() - 6.2).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 6.2f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.variance() - naive_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_basic() {
+        let t = [10.0, 20.0];
+        let p = [11.0, 18.0];
+        // (0.1 + 0.1)/2 * 100 = 10%
+        assert!((mape(&t, &p) - 10.0).abs() < 1e-9);
+        assert!(rmse(&t, &p) > 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! The per-vGPU resource-configuration "device files".
+//!
+//! In the paper each vGPU is associated with two configuration device files in
+//! the host filesystem: the GPU Re-configurator writes fine-grained resource
+//! allocation instructions into them, and the HAS-GPU-Scheduler picks the
+//! changes up at runtime (§3, Fig. 1). We reproduce the same decoupling with
+//! an in-process versioned store that can optionally be mirrored to real
+//! files (useful for debugging and for the `has-gpu serve --state-dir` CLI).
+
+use super::{ClientId, QuotaMille, SmMille};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Contents of the **partition file**: SM partition per client.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PartitionConfig {
+    pub entries: BTreeMap<ClientId, SmMille>,
+}
+
+/// Contents of the **quota file**: time-window length + quota per client.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuotaConfig {
+    pub window_secs: f64,
+    pub entries: BTreeMap<ClientId, QuotaMille>,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig {
+            window_secs: 0.025,
+            entries: BTreeMap::new(),
+        }
+    }
+}
+
+struct Inner {
+    partition: PartitionConfig,
+    quota: QuotaConfig,
+    version: u64,
+    mirror_dir: Option<PathBuf>,
+}
+
+/// The pair of device files for one vGPU.
+#[derive(Clone)]
+pub struct DeviceFile {
+    gpu_uuid: String,
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl DeviceFile {
+    pub fn new(gpu_uuid: &str) -> Self {
+        DeviceFile {
+            gpu_uuid: gpu_uuid.to_string(),
+            inner: Arc::new(Mutex::new(Inner {
+                partition: PartitionConfig::default(),
+                quota: QuotaConfig::default(),
+                version: 0,
+                mirror_dir: None,
+            })),
+        }
+    }
+
+    /// Mirror every write to `<dir>/<uuid>.partition.json` and
+    /// `<dir>/<uuid>.quota.json`.
+    pub fn with_mirror(self, dir: &std::path::Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        self.inner.lock().unwrap().mirror_dir = Some(dir.to_path_buf());
+        self.flush()?;
+        Ok(self)
+    }
+
+    pub fn gpu_uuid(&self) -> &str {
+        &self.gpu_uuid
+    }
+
+    /// Monotone version counter; bumps on every write. The scheduler polls it
+    /// to detect reconfiguration.
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Write a client's full configuration (re-configurator side).
+    pub fn write_client(&self, id: ClientId, sm: SmMille, quota: QuotaMille) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.partition.entries.insert(id, sm);
+        inner.quota.entries.insert(id, quota);
+        inner.version += 1;
+        Self::mirror(&inner, &self.gpu_uuid);
+    }
+
+    /// Update only the quota entry (vertical scaling re-write).
+    pub fn write_quota(&self, id: ClientId, quota: QuotaMille) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.quota.entries.insert(id, quota);
+        inner.version += 1;
+        Self::mirror(&inner, &self.gpu_uuid);
+    }
+
+    /// Remove a client from both files.
+    pub fn remove_client(&self, id: ClientId) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.partition.entries.remove(&id);
+        inner.quota.entries.remove(&id);
+        inner.version += 1;
+        Self::mirror(&inner, &self.gpu_uuid);
+    }
+
+    pub fn set_window(&self, window_secs: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.quota.window_secs = window_secs;
+        inner.version += 1;
+        Self::mirror(&inner, &self.gpu_uuid);
+    }
+
+    /// Read both files (scheduler side).
+    pub fn read(&self) -> (PartitionConfig, QuotaConfig, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.partition.clone(), inner.quota.clone(), inner.version)
+    }
+
+    fn mirror(inner: &Inner, uuid: &str) {
+        if let Some(dir) = &inner.mirror_dir {
+            let part = Json::obj(vec![(
+                "clients",
+                Json::Arr(
+                    inner
+                        .partition
+                        .entries
+                        .iter()
+                        .map(|(c, &sm)| {
+                            Json::obj(vec![
+                                ("client", Json::Num(c.0 as f64)),
+                                ("sm_mille", Json::Num(sm as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]);
+            let quota = Json::obj(vec![
+                ("window_secs", Json::Num(inner.quota.window_secs)),
+                (
+                    "clients",
+                    Json::Arr(
+                        inner
+                            .quota
+                            .entries
+                            .iter()
+                            .map(|(c, &q)| {
+                                Json::obj(vec![
+                                    ("client", Json::Num(c.0 as f64)),
+                                    ("quota_mille", Json::Num(q as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]);
+            let _ = std::fs::write(
+                dir.join(format!("{uuid}.partition.json")),
+                part.to_string_pretty(),
+            );
+            let _ = std::fs::write(
+                dir.join(format!("{uuid}.quota.json")),
+                quota.to_string_pretty(),
+            );
+        }
+    }
+
+    fn flush(&self) -> std::io::Result<()> {
+        let inner = self.inner.lock().unwrap();
+        Self::mirror(&inner, &self.gpu_uuid);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_bump_on_writes() {
+        let df = DeviceFile::new("GPU-0");
+        assert_eq!(df.version(), 0);
+        df.write_client(ClientId(1), 500, 300);
+        assert_eq!(df.version(), 1);
+        df.write_quota(ClientId(1), 600);
+        assert_eq!(df.version(), 2);
+        let (p, q, v) = df.read();
+        assert_eq!(p.entries[&ClientId(1)], 500);
+        assert_eq!(q.entries[&ClientId(1)], 600);
+        assert_eq!(v, 2);
+        df.remove_client(ClientId(1));
+        assert!(df.read().0.entries.is_empty());
+    }
+
+    #[test]
+    fn mirror_writes_real_files() {
+        let dir = std::env::temp_dir().join(format!("hasgpu-df-{}", std::process::id()));
+        let df = DeviceFile::new("GPU-7").with_mirror(&dir).unwrap();
+        df.write_client(ClientId(3), 250, 750);
+        let text = std::fs::read_to_string(dir.join("GPU-7.quota.json")).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let clients = parsed.get("clients").unwrap().as_arr().unwrap();
+        assert_eq!(clients.len(), 1);
+        assert_eq!(
+            clients[0].get("quota_mille").unwrap().as_f64().unwrap(),
+            750.0
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_handle_sees_writes() {
+        let df = DeviceFile::new("GPU-1");
+        let df2 = df.clone();
+        df.write_client(ClientId(9), 100, 100);
+        assert_eq!(df2.read().0.entries[&ClientId(9)], 100);
+    }
+}

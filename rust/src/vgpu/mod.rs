@@ -1,0 +1,544 @@
+//! The fine-grained spatio-temporal GPU allocation substrate.
+//!
+//! This is the reproduction of the paper's node-level machinery
+//! (HAS-GPU-Scheduler + `libhas` + device files, §3.1):
+//!
+//! * [`VGpu`] — spatial accounting: a physical GPU abstracted into SM
+//!   partition **slots**; pods inside one slot time-share it via quotas
+//!   (Σ quota ≤ 1 per slot, Σ slot SM ≤ 1 per GPU). Slot sizes obey the
+//!   **SM-alignment** rule of Fig. 2 (bounded number of distinct partition
+//!   classes, 5%-granular) so fine-grained allocation cannot fragment the GPU.
+//! * [`tokens::TokenScheduler`] — temporal enforcement: the real-mode analogue
+//!   of gating `cuLaunchKernel` on time tokens inside a scheduling window,
+//!   with runtime quota re-writes taking effect at the next window boundary
+//!   (the vertical-scaling mechanism).
+//! * [`device_file::DeviceFile`] — the two per-vGPU resource-configuration
+//!   "device files" the GPU Re-configurator writes and the scheduler reads.
+
+pub mod device_file;
+pub mod tokens;
+
+use std::collections::BTreeMap;
+
+/// SM fractions are tracked in integer **per-mille** to keep alignment
+/// arithmetic exact (no f64 drift in Σ checks).
+pub type SmMille = u32;
+
+pub const SM_FULL: SmMille = 1000;
+/// Allocation granularity: 5% of the GPU (paper: "arbitrary granularity";
+/// we quantise at the V100's finest MPS step — 1/20 ≈ one SM pair of 80).
+pub const SM_STEP: SmMille = 50;
+/// Maximum distinct partition classes per GPU (SM alignment, Fig. 2).
+pub const MAX_SM_CLASSES: usize = 3;
+
+/// Quota is also per-mille of the time window.
+pub type QuotaMille = u32;
+pub const QUOTA_FULL: QuotaMille = 1000;
+/// Default vertical-scaling step ΔI_q (10% of the window).
+pub const QUOTA_STEP: QuotaMille = 100;
+
+pub fn sm_to_f64(sm: SmMille) -> f64 {
+    sm as f64 / SM_FULL as f64
+}
+
+pub fn quota_to_f64(q: QuotaMille) -> f64 {
+    q as f64 / QUOTA_FULL as f64
+}
+
+/// Unique id of a GPU client (one per pod attached to a vGPU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ClientId(pub u64);
+
+/// A pod's placement on a vGPU: which slot, and how much of its time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Placement {
+    pub slot: usize,
+    pub sm: SmMille,
+    pub quota: QuotaMille,
+}
+
+/// One SM partition slot: a fixed spatial share hosting time-sharing clients.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub sm: SmMille,
+    /// client → quota (per-mille of this slot's time window).
+    pub clients: BTreeMap<ClientId, QuotaMille>,
+}
+
+impl Slot {
+    pub fn quota_used(&self) -> QuotaMille {
+        self.clients.values().sum()
+    }
+
+    pub fn quota_free(&self) -> QuotaMille {
+        QUOTA_FULL - self.quota_used()
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AllocError {
+    #[error("SM request {0}‰ not a multiple of {SM_STEP}‰")]
+    Misaligned(SmMille),
+    #[error("not enough free SM: need {need}‰, free {free}‰")]
+    NoSm { need: SmMille, free: SmMille },
+    #[error("alignment classes exhausted ({MAX_SM_CLASSES} in use, {0}‰ is a new size)")]
+    ClassLimit(SmMille),
+    #[error("no quota headroom in slot: need {need}‰, free {free}‰")]
+    NoQuota { need: QuotaMille, free: QuotaMille },
+    #[error("unknown client {0:?}")]
+    UnknownClient(ClientId),
+    #[error("not enough device memory: need {need:.2e} B, free {free:.2e} B")]
+    NoMemory { need: f64, free: f64 },
+}
+
+/// Spatial + temporal accounting for one physical GPU.
+#[derive(Clone, Debug)]
+pub struct VGpu {
+    pub uuid: String,
+    slots: Vec<Slot>,
+    /// Device memory accounting (bytes).
+    mem_cap: f64,
+    mem_used: f64,
+    clients: BTreeMap<ClientId, Placement>,
+}
+
+impl VGpu {
+    pub fn new(uuid: &str, mem_cap: f64) -> Self {
+        VGpu {
+            uuid: uuid.to_string(),
+            slots: Vec::new(),
+            mem_cap,
+            mem_used: 0.0,
+            clients: BTreeMap::new(),
+        }
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    pub fn clients(&self) -> &BTreeMap<ClientId, Placement> {
+        &self.clients
+    }
+
+    pub fn mem_free(&self) -> f64 {
+        self.mem_cap - self.mem_used
+    }
+
+    /// Total SM allocated to slots (whether or not their quota is full).
+    pub fn sm_allocated(&self) -> SmMille {
+        self.slots.iter().map(|s| s.sm).sum()
+    }
+
+    pub fn sm_free(&self) -> SmMille {
+        SM_FULL - self.sm_allocated()
+    }
+
+    /// Distinct partition sizes currently in use.
+    pub fn sm_classes(&self) -> Vec<SmMille> {
+        let mut v: Vec<SmMille> = self.slots.iter().map(|s| s.sm).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// HAS GPU Occupancy: H_G = Σ_pods sm_i × q_i (paper Algorithm 1 line 11),
+    /// in [0,1].
+    pub fn hgo(&self) -> f64 {
+        self.slots
+            .iter()
+            .map(|s| sm_to_f64(s.sm) * quota_to_f64(s.quota_used()))
+            .sum()
+    }
+
+    /// Is the GPU completely empty (scale-down reclaims it, line 25-26)?
+    pub fn is_idle(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    /// Can a new client with `sm` be admitted under the alignment rule —
+    /// either an existing slot of this exact class has quota headroom, or a
+    /// new slot fits in free SM without exceeding the class limit?
+    pub fn admissible(&self, sm: SmMille, quota: QuotaMille) -> Result<(), AllocError> {
+        if sm == 0 || sm % SM_STEP != 0 || sm > SM_FULL {
+            return Err(AllocError::Misaligned(sm));
+        }
+        // Existing slot of the same class with room?
+        if self
+            .slots
+            .iter()
+            .any(|s| s.sm == sm && s.quota_free() >= quota)
+        {
+            return Ok(());
+        }
+        // New slot.
+        if self.sm_free() < sm {
+            return Err(AllocError::NoSm {
+                need: sm,
+                free: self.sm_free(),
+            });
+        }
+        let mut classes = self.sm_classes();
+        if !classes.contains(&sm) {
+            classes.push(sm);
+            if classes.len() > MAX_SM_CLASSES {
+                return Err(AllocError::ClassLimit(sm));
+            }
+        }
+        Ok(())
+    }
+
+    /// Attach a client: reuse an aligned slot with quota headroom, else open a
+    /// new slot. `mem` bytes are reserved on the device.
+    pub fn attach(
+        &mut self,
+        id: ClientId,
+        sm: SmMille,
+        quota: QuotaMille,
+        mem: f64,
+    ) -> Result<Placement, AllocError> {
+        self.admissible(sm, quota)?;
+        if mem > self.mem_free() {
+            return Err(AllocError::NoMemory {
+                need: mem,
+                free: self.mem_free(),
+            });
+        }
+        assert!(
+            !self.clients.contains_key(&id),
+            "client {id:?} already attached to {}",
+            self.uuid
+        );
+        // Prefer the existing aligned slot with the MOST free quota (leaves
+        // the tightest slots free for vertical scaling of their tenants).
+        let slot_idx = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.sm == sm && s.quota_free() >= quota)
+            .max_by_key(|(_, s)| s.quota_free())
+            .map(|(i, _)| i);
+        let slot = match slot_idx {
+            Some(i) => i,
+            None => {
+                self.slots.push(Slot {
+                    sm,
+                    clients: BTreeMap::new(),
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.slots[slot].clients.insert(id, quota);
+        self.mem_used += mem;
+        let placement = Placement { slot, sm, quota };
+        self.clients.insert(id, placement);
+        Ok(placement)
+    }
+
+    /// Detach a client, freeing its quota, memory, and — if the slot empties —
+    /// the slot's SM partition.
+    pub fn detach(&mut self, id: ClientId, mem: f64) -> Result<(), AllocError> {
+        let placement = self
+            .clients
+            .remove(&id)
+            .ok_or(AllocError::UnknownClient(id))?;
+        self.slots[placement.slot].clients.remove(&id);
+        self.mem_used = (self.mem_used - mem).max(0.0);
+        // Reclaim empty slots (keep indices stable: mark by zero SM and sweep).
+        if self.slots[placement.slot].clients.is_empty() {
+            self.slots[placement.slot].sm = 0;
+            // Compact trailing empty slots; interior ones are reused by size-0
+            // filtering in sm_allocated / sm_classes.
+            while matches!(self.slots.last(), Some(s) if s.sm == 0 && s.clients.is_empty()) {
+                self.slots.pop();
+            }
+            self.remap_placements();
+        }
+        Ok(())
+    }
+
+    fn remap_placements(&mut self) {
+        // Drop zero-SM interior slots and rebuild placements.
+        let mut new_slots: Vec<Slot> = Vec::with_capacity(self.slots.len());
+        for s in self.slots.drain(..) {
+            if s.sm > 0 || !s.clients.is_empty() {
+                new_slots.push(s);
+            }
+        }
+        self.slots = new_slots;
+        let mut placements = BTreeMap::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            for (&c, &q) in &s.clients {
+                placements.insert(
+                    c,
+                    Placement {
+                        slot: i,
+                        sm: s.sm,
+                        quota: q,
+                    },
+                );
+            }
+        }
+        self.clients = placements;
+    }
+
+    /// Maximum quota this client could scale up to in-place
+    /// (`RetriveMaxAvailQuotaForPod`, Algorithm 1 line 5): its current quota
+    /// plus the slot's free headroom.
+    pub fn max_avail_quota(&self, id: ClientId) -> Result<QuotaMille, AllocError> {
+        let p = self.clients.get(&id).ok_or(AllocError::UnknownClient(id))?;
+        Ok(p.quota + self.slots[p.slot].quota_free())
+    }
+
+    /// Re-write a client's quota (vertical scaling). Fails if the slot lacks
+    /// headroom. Returns the old quota.
+    pub fn set_quota(&mut self, id: ClientId, quota: QuotaMille) -> Result<QuotaMille, AllocError> {
+        let p = *self.clients.get(&id).ok_or(AllocError::UnknownClient(id))?;
+        let slot = &mut self.slots[p.slot];
+        let others: QuotaMille = slot
+            .clients
+            .iter()
+            .filter(|(&c, _)| c != id)
+            .map(|(_, &q)| q)
+            .sum();
+        if others + quota > QUOTA_FULL {
+            return Err(AllocError::NoQuota {
+                need: quota,
+                free: QUOTA_FULL - others,
+            });
+        }
+        let old = slot.clients.insert(id, quota).expect("client in slot");
+        self.clients.insert(
+            id,
+            Placement {
+                slot: p.slot,
+                sm: p.sm,
+                quota,
+            },
+        );
+        Ok(old)
+    }
+
+    /// Best (sm, quota) a *new* pod could get on this GPU
+    /// (`RetriveMaxAvailQuotaAndSM`, Algorithm 1 line 12): considers reusing
+    /// each existing class and opening a new maximal slot. Returns the option
+    /// with the largest sm×quota product (capacity-proportional).
+    pub fn max_avail_sm_quota(&self) -> Option<(SmMille, QuotaMille)> {
+        let mut best: Option<(SmMille, QuotaMille)> = None;
+        let mut consider = |sm: SmMille, q: QuotaMille| {
+            if sm == 0 || q == 0 {
+                return;
+            }
+            let better = match best {
+                None => true,
+                Some((bs, bq)) => (sm as u64 * q as u64) > (bs as u64 * bq as u64),
+            };
+            if better {
+                best = Some((sm, q));
+            }
+        };
+        for s in &self.slots {
+            consider(s.sm, s.quota_free());
+        }
+        // New slot: largest aligned free chunk, if a class is available.
+        let free = (self.sm_free() / SM_STEP) * SM_STEP;
+        if free > 0 {
+            let classes = self.sm_classes();
+            if classes.len() < MAX_SM_CLASSES {
+                consider(free, QUOTA_FULL);
+            } else {
+                // Must reuse an existing class size that fits in free SM.
+                for &c in &classes {
+                    if c <= free {
+                        consider(c, QUOTA_FULL);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Invariant check used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.sm_allocated() > SM_FULL {
+            return Err(format!("SM over-allocated: {}‰", self.sm_allocated()));
+        }
+        if self.sm_classes().len() > MAX_SM_CLASSES {
+            return Err(format!("too many classes: {:?}", self.sm_classes()));
+        }
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.quota_used() > QUOTA_FULL {
+                return Err(format!("slot {i} quota over-subscribed: {}‰", s.quota_used()));
+            }
+            if s.sm % SM_STEP != 0 {
+                return Err(format!("slot {i} misaligned: {}‰", s.sm));
+            }
+        }
+        for (&c, p) in &self.clients {
+            let in_slot = self
+                .slots
+                .get(p.slot)
+                .and_then(|s| s.clients.get(&c))
+                .copied();
+            if in_slot != Some(p.quota) {
+                return Err(format!("client {c:?} placement desync: {p:?} vs {in_slot:?}"));
+            }
+            if self.slots[p.slot].sm != p.sm {
+                return Err(format!("client {c:?} sm desync"));
+            }
+        }
+        if self.mem_used > self.mem_cap + 1.0 {
+            return Err("memory over-committed".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> VGpu {
+        VGpu::new("GPU-test-0", 16e9)
+    }
+
+    #[test]
+    fn attach_detach_roundtrip() {
+        let mut g = gpu();
+        let p = g.attach(ClientId(1), 500, 600, 1e9).unwrap();
+        assert_eq!(p.sm, 500);
+        assert_eq!(g.sm_allocated(), 500);
+        assert!((g.hgo() - 0.3).abs() < 1e-9);
+        g.detach(ClientId(1), 1e9).unwrap();
+        assert_eq!(g.sm_allocated(), 0);
+        assert!(g.is_idle());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn same_class_pods_share_slot() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 250, 400, 1e9).unwrap();
+        g.attach(ClientId(2), 250, 400, 1e9).unwrap();
+        // Same class, combined quota 800‰ ≤ 1000‰ ⇒ one slot.
+        assert_eq!(g.slots().len(), 1);
+        assert_eq!(g.sm_allocated(), 250);
+        g.attach(ClientId(3), 250, 400, 1e9).unwrap();
+        // 400+400+400 > 1000 ⇒ needs a second slot of the same class.
+        assert_eq!(g.slots().len(), 2);
+        assert_eq!(g.sm_allocated(), 500);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alignment_class_limit_enforced() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 100, 1000, 1e8).unwrap();
+        g.attach(ClientId(2), 200, 1000, 1e8).unwrap();
+        g.attach(ClientId(3), 300, 1000, 1e8).unwrap();
+        // A fourth distinct size must be rejected even though SM is free.
+        assert_eq!(
+            g.attach(ClientId(4), 150, 1000, 1e8),
+            Err(AllocError::ClassLimit(150))
+        );
+        // But reusing an existing class is fine.
+        g.attach(ClientId(5), 100, 1000, 1e8).unwrap();
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn misaligned_sm_rejected() {
+        let mut g = gpu();
+        assert_eq!(
+            g.attach(ClientId(1), 123, 500, 1e8),
+            Err(AllocError::Misaligned(123))
+        );
+        assert_eq!(
+            g.attach(ClientId(1), 0, 500, 1e8),
+            Err(AllocError::Misaligned(0))
+        );
+    }
+
+    #[test]
+    fn sm_exhaustion_rejected() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 800, 1000, 1e8).unwrap();
+        assert!(matches!(
+            g.attach(ClientId(2), 800, 500, 1e8),
+            Err(AllocError::NoSm { .. })
+        ));
+    }
+
+    #[test]
+    fn memory_exhaustion_rejected() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 500, 500, 12e9).unwrap();
+        assert!(matches!(
+            g.attach(ClientId(2), 500, 500, 8e9),
+            Err(AllocError::NoMemory { .. })
+        ));
+    }
+
+    #[test]
+    fn vertical_scaling_quota() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 500, 300, 1e9).unwrap();
+        g.attach(ClientId(2), 500, 300, 1e9).unwrap();
+        assert_eq!(g.max_avail_quota(ClientId(1)).unwrap(), 700);
+        g.set_quota(ClientId(1), 700).unwrap();
+        assert!((g.hgo() - 0.5 * 1.0).abs() < 1e-9);
+        // Now slot is full: client 2 cannot exceed 300.
+        assert!(matches!(
+            g.set_quota(ClientId(2), 400),
+            Err(AllocError::NoQuota { .. })
+        ));
+        // Scale down frees headroom.
+        g.set_quota(ClientId(1), 100).unwrap();
+        g.set_quota(ClientId(2), 900).unwrap();
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn max_avail_prefers_largest_capacity() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 200, 900, 1e8).unwrap();
+        // Options: reuse 200‰-slot with 100‰ quota, or open a new slot with
+        // the remaining 800‰ SM at full quota ⇒ the latter wins.
+        let (sm, q) = g.max_avail_sm_quota().unwrap();
+        assert_eq!((sm, q), (800, 1000));
+    }
+
+    #[test]
+    fn max_avail_respects_class_limit() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 300, 1000, 1e8).unwrap();
+        g.attach(ClientId(2), 200, 1000, 1e8).unwrap();
+        g.attach(ClientId(3), 100, 1000, 1e8).unwrap();
+        // 400‰ free but classes exhausted: best new-slot option must reuse an
+        // existing class (300‰ fits).
+        let (sm, q) = g.max_avail_sm_quota().unwrap();
+        assert_eq!((sm, q), (300, 1000));
+    }
+
+    #[test]
+    fn detach_reclaims_slot_and_class() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 300, 1000, 1e8).unwrap();
+        g.attach(ClientId(2), 200, 1000, 1e8).unwrap();
+        g.detach(ClientId(1), 1e8).unwrap();
+        assert_eq!(g.sm_classes(), vec![200]);
+        assert_eq!(g.sm_free(), 800);
+        // Class freed: a new size is admissible again.
+        g.attach(ClientId(3), 450, 500, 1e8).unwrap();
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hgo_sums_over_slots() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 500, 400, 1e8).unwrap();
+        g.attach(ClientId(2), 250, 800, 1e8).unwrap();
+        let expect = 0.5 * 0.4 + 0.25 * 0.8;
+        assert!((g.hgo() - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,334 @@
+//! Real-mode temporal enforcement: the time-window token scheduler.
+//!
+//! In the paper, a pod's `cuLaunchKernel` calls are intercepted by `libhas`
+//! and each launch must obtain a **time token** from the pod's GPU client in
+//! the HAS-GPU-Scheduler; a pod holding quota `q` receives `q·W` seconds of
+//! execution budget per scheduling window `W` (Fig. 2). Vertical scaling
+//! re-writes the quota; the change takes effect at the next window boundary.
+//!
+//! Here the interception point is the pod executor's call to PJRT `execute`
+//! (on TPU-style hardware there is no per-kernel launch to gate — see
+//! DESIGN.md §Hardware-Adaptation), which requests a token for its estimated
+//! kernel time before running. Kernels are non-preemptible, so a grant may
+//! overdraw the current window; the debt is charged against future windows —
+//! exactly the behaviour that makes long kernels insensitive to extra quota
+//! (Fig. 4's SM-starved regime).
+
+use super::{ClientId, QuotaMille, QUOTA_FULL};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct ClientState {
+    quota: QuotaMille,
+    /// Quota re-write staged by vertical scaling; applied at window rollover.
+    pending_quota: Option<QuotaMille>,
+    /// Remaining execution budget in this window, seconds. May be negative
+    /// (non-preemptible overdraw).
+    budget: f64,
+    /// Lifetime token-seconds granted (metrics / cost accounting).
+    granted_total: f64,
+}
+
+struct State {
+    window: f64,
+    window_start: Instant,
+    epoch: u64,
+    clients: BTreeMap<ClientId, ClientState>,
+}
+
+impl State {
+    /// Roll windows forward if wall time passed one or more boundaries.
+    /// Budgets refill by quota per elapsed window (capped at one window's
+    /// worth above zero so idle pods don't hoard unbounded credit).
+    fn refill(&mut self, now: Instant) {
+        let elapsed = now.duration_since(self.window_start).as_secs_f64();
+        if elapsed < self.window {
+            return;
+        }
+        let windows = (elapsed / self.window) as u64;
+        self.window_start += Duration::from_secs_f64(windows as f64 * self.window);
+        self.epoch += windows;
+        let _ = windows;
+        for c in self.clients.values_mut() {
+            if let Some(q) = c.pending_quota.take() {
+                c.quota = q;
+            }
+            // No-debt, no-banking semantics (cgroups-CFS style, and the same
+            // rule as PerfModel::latency): the budget RESETS to one window's
+            // grant at each boundary. Overruns by non-preemptible kernels are
+            // forgiven; idle windows don't accumulate credit.
+            c.budget = c.quota as f64 / QUOTA_FULL as f64 * self.window;
+        }
+    }
+}
+
+/// Per-vGPU token scheduler shared by that GPU's clients.
+#[derive(Clone)]
+pub struct TokenScheduler {
+    inner: Arc<(Mutex<State>, Condvar)>,
+}
+
+impl TokenScheduler {
+    pub fn new(window_secs: f64) -> Self {
+        TokenScheduler {
+            inner: Arc::new((
+                Mutex::new(State {
+                    window: window_secs,
+                    window_start: Instant::now(),
+                    epoch: 0,
+                    clients: BTreeMap::new(),
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn window(&self) -> f64 {
+        self.inner.0.lock().unwrap().window
+    }
+
+    /// Register a client with an initial quota. Its first window's budget is
+    /// granted immediately (a cold-started pod can run right away).
+    pub fn register(&self, id: ClientId, quota: QuotaMille) {
+        let (m, _) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        let per_window = quota as f64 / QUOTA_FULL as f64 * st.window;
+        st.clients.insert(
+            id,
+            ClientState {
+                quota,
+                pending_quota: None,
+                budget: per_window,
+                granted_total: 0.0,
+            },
+        );
+    }
+
+    pub fn deregister(&self, id: ClientId) {
+        let (m, cv) = &*self.inner;
+        m.lock().unwrap().clients.remove(&id);
+        cv.notify_all();
+    }
+
+    /// Stage a quota re-write (vertical scaling). Takes effect at the next
+    /// window boundary, per Fig. 2. Returns the previous (target) quota.
+    pub fn set_quota(&self, id: ClientId, quota: QuotaMille) -> Option<QuotaMille> {
+        let (m, cv) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        let c = st.clients.get_mut(&id)?;
+        let old = c.pending_quota.unwrap_or(c.quota);
+        c.pending_quota = Some(quota);
+        cv.notify_all();
+        Some(old)
+    }
+
+    /// Current effective quota.
+    pub fn quota(&self, id: ClientId) -> Option<QuotaMille> {
+        self.inner.0.lock().unwrap().clients.get(&id).map(|c| c.quota)
+    }
+
+    /// Total token-seconds granted to a client so far.
+    pub fn granted_total(&self, id: ClientId) -> Option<f64> {
+        self.inner
+            .0
+            .lock()
+            .unwrap()
+            .clients
+            .get(&id)
+            .map(|c| c.granted_total)
+    }
+
+    /// Block until `cost` seconds of execution budget are available, then
+    /// debit them. Non-preemptible semantics: the grant succeeds as soon as
+    /// the budget is **positive**; `cost` may push it negative (overdraw
+    /// repaid by future refills).
+    ///
+    /// Returns the time spent waiting for tokens.
+    pub fn acquire(&self, id: ClientId, cost: f64) -> Result<Duration, TokenError> {
+        let t0 = Instant::now();
+        let (m, cv) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            st.refill(now);
+            let window = st.window;
+            let window_start = st.window_start;
+            match st.clients.get_mut(&id) {
+                None => return Err(TokenError::Deregistered(id)),
+                Some(c) => {
+                    if c.quota == 0 && c.pending_quota.is_none() {
+                        return Err(TokenError::ZeroQuota(id));
+                    }
+                    if c.budget > 0.0 {
+                        c.budget -= cost;
+                        c.granted_total += cost;
+                        return Ok(t0.elapsed());
+                    }
+                }
+            }
+            // Sleep until the next window boundary (plus a hair) or a notify.
+            let until_next = window - now.duration_since(window_start).as_secs_f64();
+            let wait = Duration::from_secs_f64(until_next.max(1e-4));
+            let (guard, _timeout) = cv.wait_timeout(st, wait).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Non-blocking variant: try to debit; Err(wait hint) if no budget.
+    pub fn try_acquire(&self, id: ClientId, cost: f64) -> Result<(), TokenError> {
+        let (m, _) = &*self.inner;
+        let mut st = m.lock().unwrap();
+        st.refill(Instant::now());
+        match st.clients.get_mut(&id) {
+            None => Err(TokenError::Deregistered(id)),
+            Some(c) if c.budget > 0.0 => {
+                c.budget -= cost;
+                c.granted_total += cost;
+                Ok(())
+            }
+            Some(_) => Err(TokenError::WouldBlock),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TokenError {
+    #[error("client {0:?} deregistered")]
+    Deregistered(ClientId),
+    #[error("client {0:?} has zero quota")]
+    ZeroQuota(ClientId),
+    #[error("no budget available")]
+    WouldBlock,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W: f64 = 0.005; // 5 ms windows keep tests fast
+
+    #[test]
+    fn full_quota_never_blocks_much() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), QUOTA_FULL);
+        let mut total_wait = 0.0;
+        for _ in 0..50 {
+            let waited = ts.acquire(ClientId(1), W * 0.5).unwrap();
+            total_wait += waited.as_secs_f64();
+        }
+        // Full quota admits ~2 grants per window; the average wait stays
+        // well under a window (averaged to tolerate scheduler jitter).
+        assert!(
+            total_wait / 50.0 < W * 2.0,
+            "avg wait {}",
+            total_wait / 50.0
+        );
+    }
+
+    #[test]
+    fn half_quota_dilates_execution() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), 500);
+        let t0 = Instant::now();
+        // Consume 10 windows' worth of full-GPU time at 50% quota: should
+        // take ≈ 2× the raw time.
+        let raw = 10.0 * W;
+        let mut consumed = 0.0;
+        while consumed < raw {
+            let step = W * 0.25;
+            ts.acquire(ClientId(1), step).unwrap();
+            consumed += step;
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert!(
+            elapsed > raw * 1.5 && elapsed < raw * 3.5,
+            "expected ~2x dilation, elapsed {elapsed} vs raw {raw}"
+        );
+    }
+
+    #[test]
+    fn quota_rewrite_takes_effect_next_window() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), 100);
+        // Drain the initial budget.
+        ts.acquire(ClientId(1), W).unwrap();
+        ts.set_quota(ClientId(1), QUOTA_FULL);
+        assert_eq!(ts.quota(ClientId(1)), Some(100)); // not yet applied
+        std::thread::sleep(Duration::from_secs_f64(W * 1.5));
+        ts.acquire(ClientId(1), W * 0.1).unwrap();
+        assert_eq!(ts.quota(ClientId(1)), Some(QUOTA_FULL));
+    }
+
+    #[test]
+    fn zero_quota_rejected() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), 0);
+        assert_eq!(
+            ts.acquire(ClientId(1), 0.001),
+            Err(TokenError::ZeroQuota(ClientId(1)))
+        );
+    }
+
+    #[test]
+    fn deregistered_client_unblocks() {
+        // Long window so the blocked acquire cannot be released by a
+        // boundary before the deregister lands.
+        let wl = 0.5;
+        let ts = TokenScheduler::new(wl);
+        ts.register(ClientId(1), 10);
+        // Drain this window's budget (no-debt: resets only at the boundary).
+        ts.acquire(ClientId(1), wl).unwrap();
+        let ts2 = ts.clone();
+        let h = std::thread::spawn(move || ts2.acquire(ClientId(1), wl * 0.1));
+        std::thread::sleep(Duration::from_millis(50));
+        ts.deregister(ClientId(1));
+        let r = h.join().unwrap();
+        assert_eq!(r, Err(TokenError::Deregistered(ClientId(1))));
+    }
+
+    #[test]
+    fn two_clients_share_proportionally() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), 750);
+        ts.register(ClientId(2), 250);
+        let run = |id: ClientId, ts: TokenScheduler| {
+            std::thread::spawn(move || {
+                let mut consumed = 0.0;
+                let t0 = Instant::now();
+                while consumed < 5.0 * W {
+                    ts.acquire(id, W * 0.25).unwrap();
+                    consumed += W * 0.25;
+                }
+                t0.elapsed().as_secs_f64()
+            })
+        };
+        let h1 = run(ClientId(1), ts.clone());
+        let h2 = run(ClientId(2), ts.clone());
+        let t1 = h1.join().unwrap();
+        let t2 = h2.join().unwrap();
+        // 750‰ client finishes distinctly faster than the 250‰ client.
+        assert!(t1 < t2, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn try_acquire_would_block_when_drained() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), 500);
+        ts.try_acquire(ClientId(1), W * 10.0).unwrap(); // overdraw deeply
+        assert_eq!(
+            ts.try_acquire(ClientId(1), 0.0001),
+            Err(TokenError::WouldBlock)
+        );
+    }
+
+    #[test]
+    fn granted_total_accumulates() {
+        let ts = TokenScheduler::new(W);
+        ts.register(ClientId(1), QUOTA_FULL);
+        ts.acquire(ClientId(1), 0.001).unwrap();
+        ts.acquire(ClientId(1), 0.002).unwrap();
+        assert!((ts.granted_total(ClientId(1)).unwrap() - 0.003).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,304 @@
+//! Workload synthesis and open-loop driving.
+//!
+//! The paper drives its evaluation with "practical application workloads from
+//! Microsoft Azure Trace" (Zhang et al., SOSP'21) replayed by Grafana k6. The
+//! trace itself is not redistributable at this scale, so [`TraceGen`]
+//! synthesises series with the same published structure: a diurnal base, heavy
+//! multiplicative noise, Poisson-arriving bursts with Pareto magnitudes, and
+//! long low-utilisation valleys. Two presets reproduce the paper's
+//! **standard** and **stress** workloads (Fig. 7).
+//!
+//! A [`Trace`] is a per-function vector of per-second request rates; the
+//! driver thins each second into Poisson arrival timestamps (open-loop, like
+//! k6's constant-arrival-rate executor).
+
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Workload intensity preset (paper Fig. 7: standard vs. stress).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    Standard,
+    Stress,
+}
+
+/// Per-function request-rate series (1-second buckets).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// function → RPS per second-bucket.
+    pub series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Trace {
+    pub fn duration(&self) -> usize {
+        self.series.values().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    pub fn rps_at(&self, function: &str, t: usize) -> f64 {
+        self.series
+            .get(function)
+            .and_then(|v| v.get(t))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    pub fn peak(&self, function: &str) -> f64 {
+        self.series
+            .get(function)
+            .map(|v| v.iter().copied().fold(0.0, f64::max))
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_requests(&self, function: &str) -> f64 {
+        self.series
+            .get(function)
+            .map(|v| v.iter().sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Poisson arrival timestamps inside bucket `t` for `function`.
+    pub fn arrivals(&self, function: &str, t: usize, rng: &mut Pcg64) -> Vec<f64> {
+        let rate = self.rps_at(function, t);
+        if rate <= 0.0 {
+            return Vec::new();
+        }
+        let n = rng.poisson(rate);
+        let mut out: Vec<f64> = (0..n).map(|_| t as f64 + rng.next_f64()).collect();
+        out.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num_arr(v)))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut series = BTreeMap::new();
+        for (k, v) in j.as_obj()? {
+            series.insert(k.clone(), v.as_f64_vec()?);
+        }
+        Ok(Trace { series })
+    }
+}
+
+/// Azure-style trace synthesiser.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    pub seed: u64,
+    /// Trace length in seconds.
+    pub duration: usize,
+    /// Mean request rate around which the diurnal base oscillates.
+    pub base_rps: f64,
+    /// Compressed "day" period in seconds (experiments compress 24 h).
+    pub day_period: f64,
+    /// Burst events per second (Poisson).
+    pub burst_rate: f64,
+    /// Pareto shape for burst magnitude (smaller ⇒ heavier tail).
+    pub burst_alpha: f64,
+    /// Cap on burst magnitude (multiples of the base rate) — the Azure trace
+    /// is heavy-tailed but bounded by upstream client limits.
+    pub burst_cap: f64,
+    /// Burst duration range in seconds.
+    pub burst_len: (usize, usize),
+    /// Multiplicative noise sigma (lognormal).
+    pub noise_sigma: f64,
+    /// Fraction of the day a function receives traffic at all (Azure
+    /// functions are idle most of the time; scale-to-near-zero is where
+    /// fine-grained keep-alive pays off).
+    pub duty_cycle: f64,
+}
+
+impl TraceGen {
+    pub fn preset(preset: Preset, seed: u64, duration: usize, base_rps: f64) -> Self {
+        match preset {
+            Preset::Standard => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 / 2.0,
+                burst_rate: 1.0 / 120.0,
+                burst_alpha: 2.5,
+                burst_cap: 5.0,
+                burst_len: (10, 30),
+                noise_sigma: 0.25,
+                duty_cycle: 0.45,
+            },
+            Preset::Stress => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 / 4.0,
+                burst_rate: 1.0 / 40.0,
+                burst_alpha: 1.6,
+                burst_cap: 9.0,
+                burst_len: (15, 50),
+                noise_sigma: 0.45,
+                duty_cycle: 0.7,
+            },
+        }
+    }
+
+    /// Generate series for the named functions. Each function gets its own
+    /// RNG stream (adding a function never perturbs the others) and its own
+    /// per-function scale drawn from a Gamma (the Azure trace's heavy
+    /// cross-function skew).
+    pub fn generate(&self, functions: &[&str]) -> Trace {
+        let mut trace = Trace::default();
+        for (fi, f) in functions.iter().enumerate() {
+            let mut rng = Pcg64::new(self.seed, 100 + fi as u64);
+            let scale = rng.gamma(2.0, 0.5); // mean 1, heavy-ish
+            let phase = rng.next_f64() * std::f64::consts::TAU;
+            let mut series = vec![0.0f64; self.duration];
+            // Diurnal base + noise.
+            for (t, slot) in series.iter_mut().enumerate() {
+                // Deep diurnal valleys: serverless functions are near-idle
+                // through much of the day (Azure-trace structure).
+                let day = (1.0
+                    + 0.95
+                        * (std::f64::consts::TAU * t as f64 / self.day_period + phase).sin())
+                .max(0.0);
+                let noise = rng.lognormal(-self.noise_sigma * self.noise_sigma / 2.0, self.noise_sigma);
+                // Duty cycling: traffic only while the day-phase is inside
+                // the active window.
+                let day_pos = (t as f64 / self.day_period + phase / std::f64::consts::TAU).fract();
+                let active = day_pos < self.duty_cycle;
+                *slot = if active {
+                    (self.base_rps * scale * day * noise).max(0.0)
+                } else {
+                    0.0
+                };
+            }
+            // Bursts.
+            let mut t = 0usize;
+            loop {
+                let gap = rng.exponential(self.burst_rate);
+                t += gap.ceil() as usize;
+                if t >= self.duration {
+                    break;
+                }
+                let magnitude = rng.pareto(2.0, self.burst_alpha).min(self.burst_cap);
+                let len = self.burst_len.0
+                    + rng.next_below((self.burst_len.1 - self.burst_len.0).max(1) as u64) as usize;
+                for dt in 0..len.min(self.duration - t) {
+                    // Ramp up over ~3 s, then decay linearly (client
+                    // populations grow fast but not instantaneously).
+                    let ramp = ((dt as f64 + 1.0) / 3.0).min(1.0);
+                    let env = ramp * (1.0 - dt as f64 / len as f64);
+                    series[t + dt] += self.base_rps * scale * magnitude * env;
+                }
+                t += len;
+            }
+            trace.series.insert(f.to_string(), series);
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(preset: Preset) -> Trace {
+        TraceGen::preset(preset, 7, 600, 20.0).generate(&["resnet50", "bert_tiny"])
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = gen(Preset::Standard);
+        let b = gen(Preset::Standard);
+        assert_eq!(a.series["resnet50"], b.series["resnet50"]);
+    }
+
+    #[test]
+    fn functions_are_independent_streams() {
+        let solo = TraceGen::preset(Preset::Standard, 7, 600, 20.0).generate(&["resnet50"]);
+        let duo = gen(Preset::Standard);
+        assert_eq!(solo.series["resnet50"], duo.series["resnet50"]);
+    }
+
+    #[test]
+    fn rates_positive_and_fluctuating() {
+        let t = gen(Preset::Standard);
+        let s = &t.series["resnet50"];
+        assert_eq!(s.len(), 600);
+        assert!(s.iter().all(|&x| x >= 0.0));
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        let max = s.iter().copied().fold(0.0, f64::max);
+        assert!(mean > 1.0, "mean {mean}");
+        // Bursty: peak well above mean.
+        assert!(max > 2.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn stress_is_heavier_than_standard() {
+        // Average peak-to-mean over several seeds (single seeds are noisy).
+        let mut std_ratio = 0.0;
+        let mut stress_ratio = 0.0;
+        for seed in 0..8 {
+            for (preset, acc) in [
+                (Preset::Standard, &mut std_ratio),
+                (Preset::Stress, &mut stress_ratio),
+            ] {
+                let t = TraceGen::preset(preset, seed, 600, 20.0).generate(&["f"]);
+                // Burstiness over ACTIVE seconds (duty cycling idles both
+                // presets for different fractions of the day).
+                let s: Vec<f64> = t.series["f"].iter().copied().filter(|&x| x > 0.0).collect();
+                let mean = s.iter().sum::<f64>() / s.len() as f64;
+                *acc += t.peak("f") / mean;
+            }
+        }
+        assert!(
+            stress_ratio > std_ratio,
+            "stress {stress_ratio} vs standard {std_ratio}"
+        );
+    }
+
+    #[test]
+    fn arrivals_match_rate() {
+        let t = gen(Preset::Standard);
+        let mut rng = Pcg64::seeded(3);
+        let mut total = 0usize;
+        for sec in 0..600 {
+            let a = t.arrivals("resnet50", sec, &mut rng);
+            // Sorted within the bucket and inside it.
+            for w in a.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            for &ts in &a {
+                assert!(ts >= sec as f64 && ts < (sec + 1) as f64);
+            }
+            total += a.len();
+        }
+        let expected = t.total_requests("resnet50");
+        let rel = (total as f64 - expected).abs() / expected;
+        assert!(rel < 0.1, "total {total} vs expected {expected}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = gen(Preset::Stress);
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back.series.len(), t.series.len());
+        let (a, b) = (&t.series["bert_tiny"], &back.series["bert_tiny"]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_rate_bucket_no_arrivals() {
+        let mut t = Trace::default();
+        t.series.insert("f".into(), vec![0.0, 5.0]);
+        let mut rng = Pcg64::seeded(1);
+        assert!(t.arrivals("f", 0, &mut rng).is_empty());
+        assert!(t.arrivals("missing", 0, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-language parity: the Python build pipeline and the Rust runtime
+//! must agree on (1) the perf-model surface, (2) the RaPP feature layout,
+//! (3) the trained predictor's output — native Rust forward vs. the
+//! python reference vs. the AOT-compiled HLO executed through PJRT.
+//!
+//! Requires `make artifacts`. Tests skip (with a notice) if absent so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use has_gpu::model::OpGraph;
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::features::{extract, FeatureMode};
+use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::runtime::{PjrtRapp, PjrtRuntime};
+use has_gpu::util::json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("golden/perf_golden.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_golden(dir: &std::path::Path) -> (json::Json, OpGraph) {
+    let doc = json::parse_file(&dir.join("golden/perf_golden.json")).unwrap();
+    let graph = OpGraph::from_json(doc.get("graph").unwrap()).unwrap();
+    (doc, graph)
+}
+
+#[test]
+fn perf_model_matches_python_to_1e9() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (doc, graph) = load_golden(&dir);
+    let pm = PerfModel::default();
+    for cfg in doc.get("configs").unwrap().as_arr().unwrap() {
+        let batch = cfg.get("batch").unwrap().as_usize().unwrap() as u32;
+        let sm = cfg.get("sm").unwrap().as_f64().unwrap();
+        let quota = cfg.get("quota").unwrap().as_f64().unwrap();
+        let want_lat = cfg.get("latency").unwrap().as_f64().unwrap();
+        let want_raw = cfg.get("raw_time").unwrap().as_f64().unwrap();
+        let want_cap = cfg.get("capacity").unwrap().as_f64().unwrap();
+        let lat = pm.latency(&graph, batch, sm, quota);
+        let raw = pm.raw_graph_time(&graph, batch, sm);
+        let cap = pm.capacity(&graph, batch, sm, quota);
+        assert!(
+            (lat - want_lat).abs() / want_lat < 1e-9,
+            "latency b{batch} sm{sm} q{quota}: rust {lat} vs python {want_lat}"
+        );
+        assert!((raw - want_raw).abs() / want_raw < 1e-9);
+        assert!((cap - want_cap).abs() / want_cap < 1e-9);
+    }
+}
+
+#[test]
+fn op_times_match_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (doc, graph) = load_golden(&dir);
+    let pm = PerfModel::default();
+    let batch = doc.get("profile_batch").unwrap().as_usize().unwrap() as u32;
+    let rows = doc.get("op_times").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), graph.nodes.len());
+    for (node, row) in graph.nodes.iter().zip(rows) {
+        let want = row.as_f64_vec().unwrap();
+        for (&sm, &w) in PerfModel::PROFILE_SMS.iter().zip(&want) {
+            let got = pm.op_time(node, batch, sm);
+            assert!((got - w).abs() / w < 1e-9, "op_time {got} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn features_match_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (doc, graph) = load_golden(&dir);
+    let pm = PerfModel::default();
+    let cfg = doc.get("features_config").unwrap();
+    let batch = cfg.get("batch").unwrap().as_usize().unwrap() as u32;
+    let sm = cfg.get("sm").unwrap().as_f64().unwrap();
+    let quota = cfg.get("quota").unwrap().as_f64().unwrap();
+    let feats = extract(&graph, batch, sm, quota, &pm, FeatureMode::Full);
+    let want_op = doc.get("op_features").unwrap().as_arr().unwrap();
+    assert_eq!(want_op.len(), feats.op_feats.len());
+    for (row, want_row) in feats.op_feats.iter().zip(want_op) {
+        let want = want_row.as_f64_vec().unwrap();
+        assert_eq!(row.len(), want.len());
+        for (i, (&g, &w)) in row.iter().zip(&want).enumerate() {
+            assert!(
+                (g as f64 - w).abs() < 1e-5 + w.abs() * 1e-5,
+                "op feature col {i}: rust {g} vs python {w}"
+            );
+        }
+    }
+    let want_g = doc.get("graph_features").unwrap().as_f64_vec().unwrap();
+    assert_eq!(feats.graph_feats.len(), want_g.len());
+    for (i, (&g, &w)) in feats.graph_feats.iter().zip(&want_g).enumerate() {
+        assert!(
+            (g as f64 - w).abs() < 1e-5 + w.abs() * 1e-5,
+            "graph feature col {i}: rust {g} vs python {w}"
+        );
+    }
+}
+
+#[test]
+fn native_forward_matches_python_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (doc, graph) = load_golden(&dir);
+    let preds = doc.get("rapp_preds").unwrap().as_arr().unwrap();
+    assert!(!preds.is_empty());
+    let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), PerfModel::default()).unwrap();
+    for p in preds {
+        let batch = p.get("batch").unwrap().as_usize().unwrap() as u32;
+        let sm = p.get("sm").unwrap().as_f64().unwrap();
+        let quota = p.get("quota").unwrap().as_f64().unwrap();
+        let want = p.get("ln_latency_ms").unwrap().as_f64().unwrap();
+        let got = rapp.forward(&graph, batch, sm, quota) as f64;
+        assert!(
+            (got - want).abs() < 1e-3,
+            "native fwd {got} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_hlo_forward_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (_doc, graph) = load_golden(&dir);
+    let pm = PerfModel::default();
+    let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone()).unwrap();
+    let runtime = Arc::new(PjrtRuntime::new().unwrap());
+    let f_op = rapp.weights.mode.f_op();
+    let f_g = rapp.weights.mode.f_g();
+    let pjrt = PjrtRapp::new(runtime, dir.join("rapp.hlo.txt"), f_op, f_g);
+    for &(batch, sm, quota) in &[(1u32, 1.0f64, 1.0f64), (4, 0.5, 0.6), (16, 0.2, 0.3)] {
+        let feats = extract(&graph, batch, sm, quota, &pm, FeatureMode::Full);
+        let hlo = pjrt.forward(&feats).unwrap() as f64;
+        let native = rapp.forward(&graph, batch, sm, quota) as f64;
+        assert!(
+            (hlo - native).abs() < 1e-3,
+            "b{batch} sm{sm} q{quota}: HLO {hlo} vs native {native}"
+        );
+    }
+}
+
+#[test]
+fn trained_rapp_accurate_on_unseen_zoo_models() {
+    // The Rust zoo graphs were never in the training corpus — this is the
+    // paper's "unseen models" test (Fig. 5 right) executed end-to-end in Rust.
+    let Some(dir) = artifacts_dir() else { return };
+    let pm = PerfModel::default();
+    let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone()).unwrap();
+    let mut errs = Vec::new();
+    for m in has_gpu::model::zoo::ALL_ZOO {
+        let g = has_gpu::model::zoo::zoo_graph(m);
+        for &(batch, sm, quota) in &[(1u32, 0.3f64, 0.5f64), (8, 0.6, 0.8), (16, 0.15, 0.25)] {
+            let truth = pm.latency(&g, batch, sm, quota);
+            let pred = rapp.latency(&g, batch, sm, quota);
+            errs.push((truth - pred).abs() / truth);
+        }
+    }
+    let mape = 100.0 * errs.iter().sum::<f64>() / errs.len() as f64;
+    assert!(mape < 15.0, "zoo-model MAPE {mape:.2}%");
+}
+
+#[test]
+fn servable_artifacts_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = has_gpu::runtime::Manifest::load(&dir).unwrap();
+    assert!(!manifest.models.is_empty());
+    let rt = PjrtRuntime::new().unwrap();
+    for art in manifest.models.iter().filter(|m| m.batch <= 4) {
+        let input = vec![0.1f32; art.batch * art.input_dim];
+        let out = rt
+            .infer(
+                &art.path,
+                &[(&input, &[art.batch as i64, art.input_dim as i64])],
+            )
+            .unwrap();
+        assert_eq!(out.values.len(), art.batch * art.output_dim, "{}", art.name);
+        assert!(out.values.iter().all(|v| v.is_finite()), "{}", art.name);
+    }
+}

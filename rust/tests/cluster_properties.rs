@@ -1,0 +1,267 @@
+//! Property-based tests over the allocation substrate and the scaling
+//! policies: no operation sequence may break the vGPU/cluster invariants
+//! (SM ≤ 100%, alignment-class bound, per-slot quota ≤ 100%, placement
+//! consistency), and the hybrid autoscaler must converge rather than
+//! oscillate on steady workloads.
+
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, KalmanFilter, ScalingPolicy};
+use has_gpu::cluster::{ClusterState, FunctionSpec, GpuId, Reconfigurator, ScalingAction};
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::OraclePredictor;
+use has_gpu::util::proptest::{run_prop, PropConfig};
+use has_gpu::vgpu::{ClientId, VGpu, QUOTA_FULL, SM_FULL, SM_STEP};
+
+#[test]
+fn prop_vgpu_invariants_hold_under_random_ops() {
+    run_prop("vgpu-random-ops", PropConfig::default(), |rng, size| {
+        let mut gpu = VGpu::new("GPU-prop", 16e9);
+        let mut live: Vec<ClientId> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..size * 4 {
+            match rng.next_below(4) {
+                0 | 1 => {
+                    // Attach with random aligned/unaligned sm + quota.
+                    let sm = (rng.next_below(21) as u32) * SM_STEP;
+                    let quota = (rng.next_below(10) as u32 + 1) * 100;
+                    let mem = rng.uniform(0.1e9, 2.0e9);
+                    next_id += 1;
+                    let id = ClientId(next_id);
+                    if gpu.attach(id, sm, quota, mem).is_ok() {
+                        live.push(id);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let idx = rng.next_below(live.len() as u64) as usize;
+                        let id = live.swap_remove(idx);
+                        gpu.detach(id, 0.5e9).map_err(|e| e.to_string())?;
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = rng.next_below(live.len() as u64) as usize;
+                        let quota = (rng.next_below(10) as u32 + 1) * 100;
+                        let _ = gpu.set_quota(live[idx], quota);
+                    }
+                }
+            }
+            gpu.check_invariants()?;
+            // HGO stays in [0, 1].
+            let hgo = gpu.hgo();
+            if !(0.0..=1.0 + 1e-9).contains(&hgo) {
+                return Err(format!("hgo out of range: {hgo}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_false_negative_admission() {
+    // If admissible() said yes, attach() must succeed (no fragmentation traps).
+    run_prop("admission-consistent", PropConfig::default(), |rng, size| {
+        let mut gpu = VGpu::new("GPU-adm", 16e9);
+        let mut next_id = 0u64;
+        for _ in 0..size * 3 {
+            let sm = (rng.next_below(20) as u32 + 1) * SM_STEP;
+            let quota = (rng.next_below(10) as u32 + 1) * 100;
+            let ok = gpu.admissible(sm, quota).is_ok();
+            next_id += 1;
+            let attached = gpu.attach(ClientId(next_id), sm, quota, 0.0).is_ok();
+            if ok != attached {
+                return Err(format!(
+                    "admissible={ok} but attach={attached} (sm={sm} q={quota})"
+                ));
+            }
+            gpu.check_invariants()?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_max_avail_quota_is_actually_available() {
+    run_prop("max-avail-quota", PropConfig::default(), |rng, size| {
+        let mut gpu = VGpu::new("GPU-q", 16e9);
+        let mut live = Vec::new();
+        for i in 0..size as u64 {
+            let sm = (rng.next_below(4) as u32 + 1) * 250;
+            let quota = (rng.next_below(5) as u32 + 1) * 100;
+            if gpu.attach(ClientId(i), sm, quota, 0.0).is_ok() {
+                live.push(ClientId(i));
+            }
+        }
+        for &id in &live {
+            let max_q = gpu.max_avail_quota(id).map_err(|e| e.to_string())?;
+            if max_q > QUOTA_FULL {
+                return Err(format!("max quota {max_q} > 1000"));
+            }
+            gpu.set_quota(id, max_q).map_err(|e| e.to_string())?;
+            gpu.check_invariants()?;
+            // One step above must fail.
+            if max_q + 100 <= QUOTA_FULL && gpu.set_quota(id, max_q + 100).is_ok() {
+                return Err("set_quota above max succeeded".into());
+            }
+            gpu.set_quota(id, 100).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+fn spec() -> FunctionSpec {
+    FunctionSpec {
+        name: "resnet50".into(),
+        graph: zoo_graph(ZooModel::ResNet50),
+        slo: 0.25,
+        batch: 8,
+        artifact: None,
+    }
+}
+
+#[test]
+fn prop_autoscaler_actions_always_applicable() {
+    // Whatever demand sequence arrives, the actions the hybrid scaler plans
+    // against a consistent snapshot must apply cleanly and keep invariants.
+    run_prop(
+        "autoscaler-applicable",
+        PropConfig {
+            cases: 64,
+            ..Default::default()
+        },
+        |rng, size| {
+            let mut cluster = ClusterState::new(4, 16e9);
+            cluster.register_function(spec());
+            let mut recon = Reconfigurator::new(&cluster, 9);
+            let pm = PerfModel::default();
+            let pred = OraclePredictor::default();
+            let mut scaler = HybridAutoscaler::new(HybridConfig::default());
+            let mut now = 0.0;
+            for _ in 0..size * 2 {
+                now += 1.0;
+                let demand = rng.uniform(0.0, 600.0);
+                let actions = scaler.plan(&spec(), demand, &cluster, &pred, now);
+                for a in &actions {
+                    recon
+                        .apply(&mut cluster, &pm, a, now)
+                        .map_err(|e| format!("action {a:?} failed: {e}"))?;
+                }
+                cluster.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kalman_estimate_bounded_by_signal_range() {
+    run_prop("kalman-bounded", PropConfig::default(), |rng, size| {
+        let mut kf = KalmanFilter::new(2.0, 9.0);
+        let lo = rng.uniform(0.0, 50.0);
+        let hi = lo + rng.uniform(1.0, 100.0);
+        for _ in 0..size * 5 {
+            let obs = rng.uniform(lo, hi);
+            let est = kf.update(obs);
+            if est < 0.0 || est > hi * 1.05 + 1.0 {
+                return Err(format!("estimate {est} outside [{lo},{hi}]"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn autoscaler_converges_on_steady_load() {
+    // Steady demand ⇒ after warm-up the scaler should go quiet (hysteresis),
+    // not thrash between up and down.
+    let mut cluster = ClusterState::new(6, 16e9);
+    cluster.register_function(spec());
+    let mut recon = Reconfigurator::new(&cluster, 5);
+    let pm = PerfModel::default();
+    let pred = OraclePredictor::default();
+    let mut scaler = HybridAutoscaler::new(HybridConfig::default());
+    let demand = 120.0;
+    let mut actions_late = 0;
+    for t in 0..300 {
+        let actions = scaler.plan(&spec(), demand, &cluster, &pred, t as f64);
+        for a in &actions {
+            let _ = recon.apply(&mut cluster, &pm, a, t as f64);
+        }
+        if t > 100 {
+            actions_late += actions.len();
+        }
+    }
+    cluster.check_invariants().unwrap();
+    assert!(
+        actions_late <= 4,
+        "scaler still thrashing after warm-up: {actions_late} actions"
+    );
+    // And capacity covers demand.
+    let cap: f64 = cluster
+        .pods_of("resnet50")
+        .iter()
+        .map(|p| {
+            pred_capacity(&pred, p.batch, p.sm, p.quota)
+        })
+        .sum();
+    assert!(cap >= demand, "converged capacity {cap} < demand {demand}");
+}
+
+fn pred_capacity(
+    pred: &OraclePredictor,
+    batch: u32,
+    sm: has_gpu::vgpu::SmMille,
+    quota: has_gpu::vgpu::QuotaMille,
+) -> f64 {
+    use has_gpu::rapp::LatencyPredictor;
+    pred.capacity(
+        &zoo_graph(ZooModel::ResNet50),
+        batch,
+        has_gpu::vgpu::sm_to_f64(sm),
+        has_gpu::vgpu::quota_to_f64(quota),
+    )
+}
+
+#[test]
+fn sm_alignment_prevents_fragmentation_scenario() {
+    // Fig. 2's fragmentation scenario: interleaved odd-size allocations.
+    // With alignment, the GPU either packs them into existing classes or
+    // rejects cleanly — free SM stays allocatable for any existing class.
+    let mut gpu = VGpu::new("GPU-frag", 16e9);
+    let mut id = 0u64;
+    let mut attach = |gpu: &mut VGpu, sm: u32, q: u32| {
+        id += 1;
+        gpu.attach(ClientId(id), sm, q, 0.0)
+    };
+    attach(&mut gpu, 300, 500).unwrap();
+    attach(&mut gpu, 200, 500).unwrap();
+    attach(&mut gpu, 100, 500).unwrap();
+    // 400‰ free; any *existing* class must still fit.
+    for class in gpu.sm_classes() {
+        assert!(
+            gpu.admissible(class, 400).is_ok(),
+            "class {class} not placeable despite {}‰ free",
+            gpu.sm_free()
+        );
+    }
+    gpu.check_invariants().unwrap();
+}
+
+#[test]
+fn scaling_action_counts_match_cluster_mutation() {
+    let mut cluster = ClusterState::new(2, 16e9);
+    cluster.register_function(spec());
+    let mut recon = Reconfigurator::new(&cluster, 5);
+    let pm = PerfModel::default();
+    let a = ScalingAction::CreatePod {
+        function: "resnet50".into(),
+        gpu: GpuId(0),
+        sm: 500,
+        quota: 500,
+        batch: 8,
+        new_gpu: true,
+    };
+    recon.apply(&mut cluster, &pm, &a, 0.0).unwrap();
+    assert_eq!(cluster.pods_of("resnet50").len(), 1);
+    assert_eq!(cluster.gpus_in_use(), 1);
+}
