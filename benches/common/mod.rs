@@ -1,4 +1,5 @@
 //! Shared experiment setup for the paper-figure benches.
+#![allow(dead_code)] // each bench binary uses its own subset of the helpers
 
 use has_gpu::cluster::FunctionSpec;
 use has_gpu::model::zoo::{zoo_graph, ZooModel};

@@ -84,8 +84,13 @@ fn main() -> anyhow::Result<()> {
     // Synthesize a compressed Azure-style trace and replay it open-loop.
     let seconds = args.get_usize("seconds");
     let names: Vec<&str> = functions.iter().map(|f| f.name.as_str()).collect();
-    let trace = TraceGen::preset(Preset::Standard, args.get_u64("seed"), seconds, args.get_f64("rps"))
-        .generate(&names);
+    let trace = TraceGen::preset(
+        Preset::Standard,
+        args.get_u64("seed"),
+        seconds,
+        args.get_f64("rps"),
+    )
+    .generate(&names);
     println!("replaying {seconds}s trace (open loop)…");
     let mut rng = Pcg64::seeded(args.get_u64("seed"));
     let t0 = Instant::now();

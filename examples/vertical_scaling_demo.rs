@@ -71,7 +71,10 @@ fn main() -> anyhow::Result<()> {
     let mut next_id = 1000u64;
     for &(sm, expect) in &[(250u32, true), (100, true), (150, false), (250, true)] {
         let ok = g.admissible(sm, 100).is_ok();
-        println!("  request sm={sm:4} permille -> {}", if ok { "admit" } else { "REJECT (class limit)" });
+        println!(
+            "  request sm={sm:4} permille -> {}",
+            if ok { "admit" } else { "REJECT (class limit)" }
+        );
         assert_eq!(ok, expect);
         if ok {
             next_id += 1;

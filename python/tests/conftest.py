@@ -1,5 +1,14 @@
+import importlib.util
 import pathlib
 import sys
 
 # Run from python/ or repo root: make `compile` importable.
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+# The whole suite exercises the JAX/Pallas build pipeline; without JAX the
+# test modules cannot even import. Skip collection cleanly instead of
+# erroring (the CI python job is non-blocking, but a tidy skip keeps local
+# `pytest` usable on machines without JAX).
+if importlib.util.find_spec("jax") is None:
+    collect_ignore_glob = ["test_*.py"]
+    print("JAX not installed - skipping the python/tests suite", file=sys.stderr)

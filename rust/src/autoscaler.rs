@@ -222,7 +222,10 @@ impl HybridAutoscaler {
                 // runway (quota ≤ headroom cap) — larger partitions at
                 // moderate quota can absorb the next burst by a quota
                 // re-write alone.
-                if cap >= delta_r && lat <= f.slo * self.cfg.slo_margin && q <= self.cfg.headroom_quota {
+                if cap >= delta_r
+                    && lat <= f.slo * self.cfg.slo_margin
+                    && q <= self.cfg.headroom_quota
+                {
                     let cost = smf * qf;
                     if best.map_or(true, |(c, _, _)| cost < c) {
                         best = Some((cost, sm, q));
@@ -511,7 +514,8 @@ mod tests {
     #[test]
     fn scale_up_prefers_vertical() {
         let (mut c, mut recon, pm, spec) = setup();
-        let pod = place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let pod =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
         let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
@@ -584,7 +588,8 @@ mod tests {
     #[test]
     fn scale_down_reduces_quota_then_respects_cooldown() {
         let (mut c, mut recon, pm, spec) = setup();
-        let pod = place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let pod =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
         let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
@@ -606,7 +611,8 @@ mod tests {
     #[test]
     fn last_pod_is_kept_alive() {
         let (mut c, mut recon, pm, spec) = setup();
-        let pod = place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 200, 8, 0.0).unwrap();
+        let pod =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 200, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
         for t in 0..50 {

@@ -1,0 +1,870 @@
+//! `expt` — the scenario-matrix experiment runner.
+//!
+//! The paper's headline numbers (10.8x cost vs. mainstream serverless,
+//! 4.8x fewer SLO violations vs. spatio-temporal sharing) are not single
+//! simulations but **grids** of `platform × workload preset × seed` runs.
+//! This module makes that grid a first-class artifact:
+//!
+//! * [`ScenarioMatrix`] declares the grid (platforms, presets, seeds,
+//!   trace length, cluster size, base rate);
+//! * [`ScenarioMatrix::run`] shards the cells across
+//!   [`ThreadPool::scope_for`] — each cell is an independent, fully-seeded
+//!   [`run_sim`] invocation, so results are **bit-identical for any
+//!   `--jobs` setting**;
+//! * [`MatrixReport`] aggregates per-cell [`CellResult`]s into paper-style
+//!   comparison tables (SLO-violation rate, P99 latency, GPU-seconds,
+//!   $/1K requests, baseline-over-HAS ratios) and serialises the whole
+//!   grid to `BENCH_sim.json` through [`crate::util::json`] — the
+//!   machine-readable perf trajectory later PRs regress against.
+//!
+//! The `has-gpu expt` subcommand is the CLI entry point; `has-gpu simulate`
+//! is a single-cell special case of the same path.
+
+use crate::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use crate::baselines::{FastGSharePolicy, KServePolicy};
+use crate::cluster::FunctionSpec;
+use crate::metrics::RunReport;
+use crate::model::zoo::{zoo_graph, ZooModel};
+use crate::perf::PerfModel;
+use crate::rapp::OraclePredictor;
+use crate::sim::{run_sim, SimConfig};
+use crate::util::bench::ascii_table;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::{Preset, TraceGen, ALL_PRESETS};
+use std::sync::Mutex;
+
+/// A serving platform under comparison (paper §4.3's A/B design: identical
+/// substrate, workload, and metrics — only the scaling policy differs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Platform {
+    HasGpu,
+    KServe,
+    FastGShare,
+}
+
+/// Every platform, in the canonical matrix order.
+pub const ALL_PLATFORMS: [Platform; 3] = [Platform::HasGpu, Platform::KServe, Platform::FastGShare];
+
+impl Platform {
+    pub fn name(self) -> &'static str {
+        match self {
+            Platform::HasGpu => "has-gpu",
+            Platform::KServe => "kserve",
+            Platform::FastGShare => "fast-gshare",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        ALL_PLATFORMS.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// A fresh scaling policy for one cell (policies are stateful; every
+    /// cell gets its own instance so cells stay independent).
+    pub fn policy(self) -> Box<dyn ScalingPolicy> {
+        match self {
+            Platform::HasGpu => Box::new(HybridAutoscaler::new(HybridConfig::default())),
+            Platform::KServe => Box::new(KServePolicy::default()),
+            Platform::FastGShare => Box::new(FastGSharePolicy::default()),
+        }
+    }
+
+    /// KServe bills whole GPUs (exclusive allocation); the shared platforms
+    /// bill the sm×quota slice.
+    pub fn bill_whole_gpu(self) -> bool {
+        matches!(self, Platform::KServe)
+    }
+}
+
+/// The benchmark function set shared by every cell (paper §4: MLPerf-style
+/// zoo minus ResNet-152, which stays the Fig. 4 profiling subject).
+pub fn experiment_functions() -> Vec<FunctionSpec> {
+    let perf = PerfModel::default();
+    crate::model::zoo::ALL_ZOO
+        .iter()
+        .filter(|m| !matches!(m, ZooModel::ResNet152))
+        .map(|&m| {
+            let graph = zoo_graph(m);
+            let baseline = perf.latency(&graph, 1, 1.0, 1.0);
+            let slo = baseline * 3.0;
+            let batch = [16u32, 8, 4, 2, 1]
+                .into_iter()
+                .find(|&b| perf.latency(&graph, b, 1.0, 1.0) <= slo * 0.5)
+                .unwrap_or(1);
+            FunctionSpec {
+                name: graph.name.clone(),
+                slo,
+                batch,
+                graph,
+                artifact: None,
+            }
+        })
+        .collect()
+}
+
+/// One grid cell: a platform run against one preset instance at one seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScenarioCell {
+    pub platform: Platform,
+    pub preset: Preset,
+    pub seed: u64,
+}
+
+/// Declarative description of the experiment grid.
+#[derive(Clone, Debug)]
+pub struct ScenarioMatrix {
+    pub platforms: Vec<Platform>,
+    pub presets: Vec<Preset>,
+    pub seeds: Vec<u64>,
+    /// Trace length per cell in virtual seconds.
+    pub seconds: usize,
+    /// Cluster size per cell.
+    pub gpus: usize,
+    /// Mean request rate the trace synthesiser oscillates around.
+    pub rps: f64,
+}
+
+impl Default for ScenarioMatrix {
+    fn default() -> Self {
+        ScenarioMatrix {
+            platforms: ALL_PLATFORMS.to_vec(),
+            presets: vec![Preset::Standard],
+            seeds: vec![11],
+            seconds: 300,
+            gpus: 10,
+            rps: 150.0,
+        }
+    }
+}
+
+impl ScenarioMatrix {
+    /// The grid cells in canonical (preset-major, then platform, then seed)
+    /// order. The order is part of the output contract: aggregation and
+    /// serialisation walk it deterministically.
+    pub fn cells(&self) -> Vec<ScenarioCell> {
+        let mut out =
+            Vec::with_capacity(self.presets.len() * self.platforms.len() * self.seeds.len());
+        for &preset in &self.presets {
+            for &platform in &self.platforms {
+                for &seed in &self.seeds {
+                    out.push(ScenarioCell { platform, preset, seed });
+                }
+            }
+        }
+        out
+    }
+
+    /// Run one cell end-to-end. Everything a cell touches (trace, policy,
+    /// predictor, cluster, RNG streams) is constructed locally from the
+    /// cell's coordinates, so a cell's result is a pure function of
+    /// `(platform, preset, seed, matrix config)` — the property behind the
+    /// `--jobs`-independence guarantee.
+    pub fn run_cell(&self, cell: &ScenarioCell) -> (RunReport, CellResult) {
+        let fns = experiment_functions();
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
+            .generate(&names);
+        let perf = PerfModel::default();
+        let predictor = OraclePredictor::default();
+        let mut policy = cell.platform.policy();
+        let report = run_sim(
+            policy.as_mut(),
+            &fns,
+            &trace,
+            &predictor,
+            &perf,
+            &SimConfig::for_experiment(self.gpus, cell.seed, cell.platform.bill_whole_gpu()),
+        );
+        let result = CellResult::from_report(cell, &fns, &report);
+        (report, result)
+    }
+
+    /// Run the whole grid, sharding cells across `jobs` worker threads
+    /// (`0` = available parallelism). Results land in per-cell slots, so
+    /// the aggregate is identical for every `jobs` value.
+    pub fn run(&self, jobs: usize) -> MatrixReport {
+        let cells = self.cells();
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            jobs
+        };
+        let slots: Vec<Mutex<Option<CellResult>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        ThreadPool::scope_for(jobs, cells.len(), |i| {
+            let (_report, result) = self.run_cell(&cells[i]);
+            *slots[i].lock().unwrap() = Some(result);
+        });
+        let results = slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("cell executed"))
+            .collect();
+        MatrixReport {
+            seconds: self.seconds,
+            gpus: self.gpus,
+            rps: self.rps,
+            cells: results,
+        }
+    }
+}
+
+/// Parse a seed specification: a bare count `"4"` expands to
+/// `base..base+4`; a comma list `"3,17,99"` is taken verbatim.
+pub fn parse_seeds(spec: &str, base: u64) -> anyhow::Result<Vec<u64>> {
+    let parse_one = |s: &str| -> anyhow::Result<u64> {
+        s.trim()
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("bad seed '{s}'"))
+    };
+    if spec.contains(',') {
+        let seeds: Vec<u64> = spec
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(parse_one)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(!seeds.is_empty(), "need at least one seed");
+        return Ok(seeds);
+    }
+    let n = parse_one(spec)?;
+    anyhow::ensure!(n > 0, "need at least one seed");
+    Ok((0..n).map(|i| base + i).collect())
+}
+
+/// Parse a platform selection (one `--platforms` list entry per element):
+/// `["all"]` or platform names.
+pub fn parse_platforms(specs: &[String]) -> anyhow::Result<Vec<Platform>> {
+    if specs.len() == 1 && specs[0] == "all" {
+        return Ok(ALL_PLATFORMS.to_vec());
+    }
+    anyhow::ensure!(!specs.is_empty(), "need at least one platform");
+    specs
+        .iter()
+        .map(|s| {
+            Platform::from_name(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown platform '{s}' (expected one of: has-gpu, kserve, fast-gshare, all)"
+                )
+            })
+        })
+        .collect()
+}
+
+/// Parse a preset selection (one `--preset` list entry per element):
+/// `["all"]` or preset names.
+pub fn parse_presets(specs: &[String]) -> anyhow::Result<Vec<Preset>> {
+    if specs.len() == 1 && specs[0] == "all" {
+        return Ok(ALL_PRESETS.to_vec());
+    }
+    anyhow::ensure!(!specs.is_empty(), "need at least one preset");
+    specs
+        .iter()
+        .map(|s| {
+            Preset::from_name(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown preset '{s}' (expected one of: standard, stress, diurnal, \
+                     spiky-burst, all)"
+                )
+            })
+        })
+        .collect()
+}
+
+/// Per-function slice of one cell's result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FunctionCellMetrics {
+    pub name: String,
+    pub slo: f64,
+    pub served: usize,
+    pub dropped: usize,
+    pub p50: f64,
+    pub p99: f64,
+    pub violation_rate: f64,
+    pub cost: f64,
+    pub gpu_seconds: f64,
+    /// $ per 1000 served requests; `0.0` when nothing was served (kept
+    /// finite so the JSON export round-trips losslessly).
+    pub cost_per_1k: f64,
+}
+
+impl FunctionCellMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("slo", Json::Num(self.slo)),
+            ("served", Json::Num(self.served as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("p50", Json::Num(self.p50)),
+            ("p99", Json::Num(self.p99)),
+            ("violation_rate", Json::Num(self.violation_rate)),
+            ("cost", Json::Num(self.cost)),
+            ("gpu_seconds", Json::Num(self.gpu_seconds)),
+            ("cost_per_1k", Json::Num(self.cost_per_1k)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(FunctionCellMetrics {
+            name: j.get("name")?.as_str()?.to_string(),
+            slo: j.get("slo")?.as_f64()?,
+            served: j.get("served")?.as_usize()?,
+            dropped: j.get("dropped")?.as_usize()?,
+            p50: j.get("p50")?.as_f64()?,
+            p99: j.get("p99")?.as_f64()?,
+            violation_rate: j.get("violation_rate")?.as_f64()?,
+            cost: j.get("cost")?.as_f64()?,
+            gpu_seconds: j.get("gpu_seconds")?.as_f64()?,
+            cost_per_1k: j.get("cost_per_1k")?.as_f64()?,
+        })
+    }
+}
+
+/// Aggregated metrics of one grid cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellResult {
+    pub platform: Platform,
+    pub preset: Preset,
+    pub seed: u64,
+    pub served: usize,
+    pub dropped: usize,
+    /// Request-weighted violation rate, each function judged at its own SLO.
+    pub slo_violation_rate: f64,
+    /// P99 end-to-end latency merged across all functions (seconds; `0.0`
+    /// when nothing was served).
+    pub p99_latency: f64,
+    /// sm×quota-weighted GPU-seconds billed over the run.
+    pub gpu_seconds: f64,
+    pub total_cost: f64,
+    /// $ per 1000 served requests across all functions (`0.0` if none).
+    pub cost_per_1k: f64,
+    pub vertical_ups: usize,
+    pub vertical_downs: usize,
+    pub horizontal_ups: usize,
+    pub horizontal_downs: usize,
+    pub functions: Vec<FunctionCellMetrics>,
+}
+
+impl CellResult {
+    /// Distil one run's report into the grid row for its cell.
+    pub fn from_report(cell: &ScenarioCell, fns: &[FunctionSpec], report: &RunReport) -> Self {
+        let mut merged = report.merged_latency_summary();
+        let p99_latency = if merged.is_empty() { 0.0 } else { merged.p99() };
+        let served = report.total_served();
+        let slo_violation_rate =
+            report.slo_violation_rate(fns.iter().map(|f| (f.name.as_str(), f.slo)));
+        let functions = fns
+            .iter()
+            .map(|f| {
+                let (srv, drp, p50, p99, violation_rate) = match report.functions.get(&f.name) {
+                    Some(m) => {
+                        let mut s = m.latency_summary();
+                        let (p50, p99) = if s.is_empty() {
+                            (0.0, 0.0)
+                        } else {
+                            (s.p50(), s.p99())
+                        };
+                        (m.served(), m.dropped(), p50, p99, m.violation_rate(f.slo))
+                    }
+                    None => (0, 0, 0.0, 0.0, 0.0),
+                };
+                let cost = report.costs.cost_of(&f.name);
+                FunctionCellMetrics {
+                    name: f.name.clone(),
+                    slo: f.slo,
+                    served: srv,
+                    dropped: drp,
+                    p50,
+                    p99,
+                    violation_rate,
+                    cost,
+                    gpu_seconds: report.costs.gpu_seconds_of(&f.name),
+                    cost_per_1k: if srv == 0 { 0.0 } else { cost * 1000.0 / srv as f64 },
+                }
+            })
+            .collect();
+        CellResult {
+            platform: cell.platform,
+            preset: cell.preset,
+            seed: cell.seed,
+            served,
+            dropped: report.total_dropped(),
+            slo_violation_rate,
+            p99_latency,
+            gpu_seconds: report.costs.total_gpu_seconds(),
+            total_cost: report.costs.total_cost(),
+            cost_per_1k: if served == 0 {
+                0.0
+            } else {
+                report.costs.total_cost() * 1000.0 / served as f64
+            },
+            vertical_ups: report.vertical_ups,
+            vertical_downs: report.vertical_downs,
+            horizontal_ups: report.horizontal_ups,
+            horizontal_downs: report.horizontal_downs,
+            functions,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("platform", Json::Str(self.platform.name().to_string())),
+            ("preset", Json::Str(self.preset.name().to_string())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("slo_violation_rate", Json::Num(self.slo_violation_rate)),
+            ("p99_latency", Json::Num(self.p99_latency)),
+            ("gpu_seconds", Json::Num(self.gpu_seconds)),
+            ("total_cost", Json::Num(self.total_cost)),
+            ("cost_per_1k", Json::Num(self.cost_per_1k)),
+            ("vertical_ups", Json::Num(self.vertical_ups as f64)),
+            ("vertical_downs", Json::Num(self.vertical_downs as f64)),
+            ("horizontal_ups", Json::Num(self.horizontal_ups as f64)),
+            ("horizontal_downs", Json::Num(self.horizontal_downs as f64)),
+            ("functions", Json::Arr(self.functions.iter().map(|f| f.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let platform_name = j.get("platform")?.as_str()?;
+        let platform = Platform::from_name(platform_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown platform '{platform_name}'"))?;
+        let preset_name = j.get("preset")?.as_str()?;
+        let preset = Preset::from_name(preset_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset_name}'"))?;
+        Ok(CellResult {
+            platform,
+            preset,
+            seed: j.get("seed")?.as_f64()? as u64,
+            served: j.get("served")?.as_usize()?,
+            dropped: j.get("dropped")?.as_usize()?,
+            slo_violation_rate: j.get("slo_violation_rate")?.as_f64()?,
+            p99_latency: j.get("p99_latency")?.as_f64()?,
+            gpu_seconds: j.get("gpu_seconds")?.as_f64()?,
+            total_cost: j.get("total_cost")?.as_f64()?,
+            cost_per_1k: j.get("cost_per_1k")?.as_f64()?,
+            vertical_ups: j.get("vertical_ups")?.as_usize()?,
+            vertical_downs: j.get("vertical_downs")?.as_usize()?,
+            horizontal_ups: j.get("horizontal_ups")?.as_usize()?,
+            horizontal_downs: j.get("horizontal_downs")?.as_usize()?,
+            functions: j
+                .get("functions")?
+                .as_arr()?
+                .iter()
+                .map(FunctionCellMetrics::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// One aggregated row of the comparison table: a (preset, platform) group
+/// averaged over its seeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SummaryRow {
+    pub preset: Preset,
+    pub platform: Platform,
+    pub cells: usize,
+    pub slo_violation_rate: f64,
+    pub p99_latency: f64,
+    pub gpu_seconds: f64,
+    pub cost_per_1k: f64,
+}
+
+/// The paper's headline comparison for one (preset, baseline) pair:
+/// baseline ÷ HAS-GPU ratios, seeds averaged first. A ratio is `None` when
+/// HAS-GPU's own mean is zero (the ratio is undefined, not huge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeadlineRatio {
+    pub preset: Preset,
+    pub platform: Platform,
+    /// baseline $/1k over HAS-GPU $/1k (paper: 10.8x for KServe).
+    pub cost_ratio: Option<f64>,
+    /// baseline violation rate over HAS-GPU's (paper: 4.8x for FaST-GShare).
+    pub violation_ratio: Option<f64>,
+}
+
+/// Everything one `has-gpu expt` invocation produces: config echo, per-cell
+/// results, and the derived summary. Serialises to `BENCH_sim.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixReport {
+    pub seconds: usize,
+    pub gpus: usize,
+    pub rps: f64,
+    pub cells: Vec<CellResult>,
+}
+
+pub const BENCH_SIM_SCHEMA: &str = "has-gpu/bench-sim/v1";
+
+impl MatrixReport {
+    /// Seed-averaged rows per (preset, platform), in first-appearance order
+    /// (which is the canonical cell order when produced by `run`).
+    pub fn summary(&self) -> Vec<SummaryRow> {
+        let mut order: Vec<(Preset, Platform)> = Vec::new();
+        for c in &self.cells {
+            if !order.contains(&(c.preset, c.platform)) {
+                order.push((c.preset, c.platform));
+            }
+        }
+        order
+            .into_iter()
+            .map(|(preset, platform)| {
+                let group: Vec<&CellResult> = self
+                    .cells
+                    .iter()
+                    .filter(|c| c.preset == preset && c.platform == platform)
+                    .collect();
+                let n = group.len() as f64;
+                SummaryRow {
+                    preset,
+                    platform,
+                    cells: group.len(),
+                    slo_violation_rate: group.iter().map(|c| c.slo_violation_rate).sum::<f64>()
+                        / n,
+                    p99_latency: group.iter().map(|c| c.p99_latency).sum::<f64>() / n,
+                    gpu_seconds: group.iter().map(|c| c.gpu_seconds).sum::<f64>() / n,
+                    cost_per_1k: group.iter().map(|c| c.cost_per_1k).sum::<f64>() / n,
+                }
+            })
+            .collect()
+    }
+
+    /// Baseline ÷ HAS-GPU ratios per preset. A zero HAS-GPU denominator
+    /// yields `None` (undefined) rather than an absurd finite number.
+    pub fn ratios_vs_has_gpu(&self) -> Vec<HeadlineRatio> {
+        let summary = self.summary();
+        let ratio = |num: f64, den: f64| if den > 0.0 { Some(num / den) } else { None };
+        let mut out = Vec::new();
+        for row in &summary {
+            if row.platform == Platform::HasGpu {
+                continue;
+            }
+            let Some(has) = summary
+                .iter()
+                .find(|r| r.preset == row.preset && r.platform == Platform::HasGpu)
+            else {
+                continue;
+            };
+            out.push(HeadlineRatio {
+                preset: row.preset,
+                platform: row.platform,
+                cost_ratio: ratio(row.cost_per_1k, has.cost_per_1k),
+                violation_ratio: ratio(row.slo_violation_rate, has.slo_violation_rate),
+            });
+        }
+        out
+    }
+
+    /// The paper-style comparison table, rendered as ASCII.
+    pub fn table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .summary()
+            .iter()
+            .map(|r| {
+                vec![
+                    r.preset.name().to_string(),
+                    r.platform.name().to_string(),
+                    format!("{}", r.cells),
+                    format!("{:.4}", r.slo_violation_rate),
+                    format!("{:.1}", r.p99_latency * 1e3),
+                    format!("{:.1}", r.gpu_seconds),
+                    format!("{:.4}", r.cost_per_1k),
+                ]
+            })
+            .collect();
+        ascii_table(
+            &["preset", "platform", "seeds", "slo-viol", "p99 (ms)", "gpu-sec", "$/1k"],
+            &rows,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let summary = Json::Arr(
+            self.summary()
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("preset", Json::Str(r.preset.name().to_string())),
+                        ("platform", Json::Str(r.platform.name().to_string())),
+                        ("cells", Json::Num(r.cells as f64)),
+                        ("slo_violation_rate", Json::Num(r.slo_violation_rate)),
+                        ("p99_latency", Json::Num(r.p99_latency)),
+                        ("gpu_seconds", Json::Num(r.gpu_seconds)),
+                        ("cost_per_1k", Json::Num(r.cost_per_1k)),
+                    ])
+                })
+                .collect(),
+        );
+        let opt_num = |v: Option<f64>| v.map_or(Json::Null, Json::Num);
+        let ratios = Json::Arr(
+            self.ratios_vs_has_gpu()
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("preset", Json::Str(r.preset.name().to_string())),
+                        ("platform", Json::Str(r.platform.name().to_string())),
+                        ("cost_ratio", opt_num(r.cost_ratio)),
+                        ("violation_ratio", opt_num(r.violation_ratio)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str(BENCH_SIM_SCHEMA.to_string())),
+            (
+                "config",
+                Json::obj(vec![
+                    ("seconds", Json::Num(self.seconds as f64)),
+                    ("gpus", Json::Num(self.gpus as f64)),
+                    ("rps", Json::Num(self.rps)),
+                ]),
+            ),
+            ("cells", Json::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
+            ("summary", summary),
+            ("ratios_vs_has_gpu", ratios),
+        ])
+    }
+
+    /// Load a report back from its JSON form. `summary` and
+    /// `ratios_vs_has_gpu` are derived, so only config + cells are read;
+    /// re-serialising the result reproduces the input byte-for-byte.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let schema = j.get("schema")?.as_str()?;
+        anyhow::ensure!(
+            schema == BENCH_SIM_SCHEMA,
+            "unsupported BENCH_sim schema '{schema}' (expected '{BENCH_SIM_SCHEMA}')"
+        );
+        let config = j.get("config")?;
+        Ok(MatrixReport {
+            seconds: config.get("seconds")?.as_usize()?,
+            gpus: config.get("gpus")?.as_usize()?,
+            rps: config.get("rps")?.as_f64()?,
+            cells: j
+                .get("cells")?
+                .as_arr()?
+                .iter()
+                .map(CellResult::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_names_roundtrip_and_match_policies() {
+        for p in ALL_PLATFORMS {
+            assert_eq!(Platform::from_name(p.name()), Some(p));
+            // The policy self-reports the same platform name the matrix uses.
+            assert_eq!(p.policy().name(), p.name());
+        }
+        assert_eq!(Platform::from_name("nope"), None);
+        assert!(Platform::KServe.bill_whole_gpu());
+        assert!(!Platform::HasGpu.bill_whole_gpu());
+    }
+
+    #[test]
+    fn cells_enumerate_in_canonical_order() {
+        let m = ScenarioMatrix {
+            platforms: vec![Platform::HasGpu, Platform::KServe],
+            presets: vec![Preset::Standard, Preset::Stress],
+            seeds: vec![1, 2],
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        assert_eq!(cells.len(), 8);
+        // Preset-major, then platform, then seed.
+        assert_eq!(cells[0].preset, Preset::Standard);
+        assert_eq!(cells[0].platform, Platform::HasGpu);
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[1].seed, 2);
+        assert_eq!(cells[2].platform, Platform::KServe);
+        assert_eq!(cells[4].preset, Preset::Stress);
+    }
+
+    #[test]
+    fn seed_spec_parsing() {
+        assert_eq!(parse_seeds("3", 11).unwrap(), vec![11, 12, 13]);
+        assert_eq!(parse_seeds("4,8,15", 0).unwrap(), vec![4, 8, 15]);
+        assert_eq!(parse_seeds("5,", 0).unwrap(), vec![5]);
+        assert!(parse_seeds("0", 11).is_err());
+        assert!(parse_seeds("x", 11).is_err());
+        assert!(parse_seeds(",", 11).is_err(), "all-empty list must not run 0 cells");
+    }
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn platform_and_preset_spec_parsing() {
+        assert_eq!(parse_platforms(&strs(&["all"])).unwrap(), ALL_PLATFORMS.to_vec());
+        assert_eq!(
+            parse_platforms(&strs(&["kserve", "has-gpu"])).unwrap(),
+            vec![Platform::KServe, Platform::HasGpu]
+        );
+        assert!(parse_platforms(&strs(&["gke"])).is_err());
+        assert!(parse_platforms(&[]).is_err());
+        assert_eq!(parse_presets(&strs(&["all"])).unwrap(), ALL_PRESETS.to_vec());
+        assert_eq!(
+            parse_presets(&strs(&["diurnal", "spiky-burst"])).unwrap(),
+            vec![Preset::Diurnal, Preset::SpikyBurst]
+        );
+        assert!(parse_presets(&strs(&["weekend"])).is_err());
+        assert!(parse_presets(&[]).is_err());
+    }
+
+    #[test]
+    fn single_cell_run_populates_metrics() {
+        let m = ScenarioMatrix {
+            platforms: vec![Platform::HasGpu],
+            presets: vec![Preset::Standard],
+            seeds: vec![7],
+            seconds: 60,
+            gpus: 6,
+            rps: 60.0,
+        };
+        let cell = m.cells()[0];
+        let (report, result) = m.run_cell(&cell);
+        assert_eq!(result.platform, Platform::HasGpu);
+        assert_eq!(result.seed, 7);
+        assert!(result.served > 100, "served {}", result.served);
+        assert_eq!(result.served, report.total_served());
+        assert!(result.total_cost > 0.0);
+        assert!(result.gpu_seconds > 0.0);
+        assert!(result.p99_latency > 0.0 && result.p99_latency.is_finite());
+        assert!((0.0..=1.0).contains(&result.slo_violation_rate));
+        // Per-function rows cover the whole experiment set and sum to totals.
+        assert_eq!(result.functions.len(), experiment_functions().len());
+        let fn_served: usize = result.functions.iter().map(|f| f.served).sum();
+        assert_eq!(fn_served, result.served);
+    }
+
+    #[test]
+    fn summary_and_ratios_from_synthetic_cells() {
+        let mk = |platform, seed, viol: f64, cost_per_1k: f64| CellResult {
+            platform,
+            preset: Preset::Standard,
+            seed,
+            served: 1000,
+            dropped: 0,
+            slo_violation_rate: viol,
+            p99_latency: 0.1,
+            gpu_seconds: 50.0,
+            total_cost: cost_per_1k,
+            cost_per_1k,
+            vertical_ups: 0,
+            vertical_downs: 0,
+            horizontal_ups: 0,
+            horizontal_downs: 0,
+            functions: Vec::new(),
+        };
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            cells: vec![
+                mk(Platform::HasGpu, 1, 0.01, 1.0),
+                mk(Platform::HasGpu, 2, 0.03, 3.0),
+                mk(Platform::KServe, 1, 0.10, 20.0),
+                mk(Platform::KServe, 2, 0.10, 24.0),
+            ],
+        };
+        let summary = report.summary();
+        assert_eq!(summary.len(), 2);
+        assert!((summary[0].slo_violation_rate - 0.02).abs() < 1e-12);
+        assert!((summary[1].cost_per_1k - 22.0).abs() < 1e-12);
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios.len(), 1);
+        assert_eq!(ratios[0].platform, Platform::KServe);
+        assert!((ratios[0].cost_ratio.unwrap() - 11.0).abs() < 1e-9);
+        assert!((ratios[0].violation_ratio.unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_denominator_ratio_is_undefined_not_huge() {
+        let mk = |platform, viol: f64| CellResult {
+            platform,
+            preset: Preset::Diurnal,
+            seed: 1,
+            served: 100,
+            dropped: 0,
+            slo_violation_rate: viol,
+            p99_latency: 0.05,
+            gpu_seconds: 10.0,
+            total_cost: 1.0,
+            cost_per_1k: 10.0,
+            vertical_ups: 0,
+            vertical_downs: 0,
+            horizontal_ups: 0,
+            horizontal_downs: 0,
+            functions: Vec::new(),
+        };
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            cells: vec![mk(Platform::HasGpu, 0.0), mk(Platform::KServe, 0.02)],
+        };
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios[0].violation_ratio, None);
+        assert_eq!(ratios[0].cost_ratio, Some(1.0));
+        // And the JSON export writes null, which still parses back.
+        let j = report.to_json();
+        let back = MatrixReport::from_json(&j).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+    }
+
+    #[test]
+    fn synthetic_report_json_roundtrips() {
+        let report = MatrixReport {
+            seconds: 30,
+            gpus: 2,
+            rps: 10.0,
+            cells: vec![CellResult {
+                platform: Platform::FastGShare,
+                preset: Preset::SpikyBurst,
+                seed: 42,
+                served: 10,
+                dropped: 1,
+                slo_violation_rate: 0.25,
+                p99_latency: 0.125,
+                gpu_seconds: 1.5,
+                total_cost: 0.0125,
+                cost_per_1k: 1.25,
+                vertical_ups: 0,
+                vertical_downs: 0,
+                horizontal_ups: 2,
+                horizontal_downs: 1,
+                functions: vec![FunctionCellMetrics {
+                    name: "resnet50".into(),
+                    slo: 0.05,
+                    served: 10,
+                    dropped: 1,
+                    p50: 0.02,
+                    p99: 0.125,
+                    violation_rate: 0.25,
+                    cost: 0.0125,
+                    gpu_seconds: 1.5,
+                    cost_per_1k: 1.25,
+                }],
+            }],
+        };
+        let j = report.to_json();
+        let back = MatrixReport::from_json(&j).unwrap();
+        assert_eq!(back, report);
+        assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+        // Table renders every summary row.
+        assert!(report.table().contains("spiky-burst"));
+        assert!(report.table().contains("fast-gshare"));
+    }
+
+    #[test]
+    fn bad_schema_rejected() {
+        let j = Json::obj(vec![("schema", Json::Str("something/else".into()))]);
+        assert!(MatrixReport::from_json(&j).is_err());
+    }
+}

@@ -21,6 +21,9 @@
 //! * [`workload`] — Azure-trace-style workload synthesis and open-loop driving;
 //! * [`sim`] — a discrete-event simulation harness reproducing the paper's
 //!   cluster-scale experiments (Figs. 6 and 7);
+//! * [`expt`] — the scenario-matrix experiment runner: platform × preset ×
+//!   seed grids sharded over a thread pool, aggregated into paper-style
+//!   comparison tables and exported as `BENCH_sim.json`;
 //! * [`perf`] — the calibrated roofline performance model (ground truth);
 //! * [`metrics`] — SLO-violation curves, tail latency, and cost accounting.
 //!
@@ -30,6 +33,7 @@
 pub mod autoscaler;
 pub mod baselines;
 pub mod cluster;
+pub mod expt;
 pub mod gateway;
 pub mod metrics;
 pub mod model;

@@ -1,13 +1,15 @@
-//! `has-gpu` — the leader binary: simulate (cluster scale), predict (RaPP
-//! CLI), trace-gen, and zoo inventory subcommands.
+//! `has-gpu` — the leader binary: the scenario-matrix experiment runner
+//! (`expt`), its single-cell special case (`simulate`), RaPP prediction
+//! (`predict`), trace synthesis (`trace-gen`), and the zoo inventory.
 
-use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
-use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
-use has_gpu::cluster::FunctionSpec;
+use has_gpu::expt::{
+    experiment_functions, parse_platforms, parse_presets, parse_seeds, Platform, ScenarioMatrix,
+};
 use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
 use has_gpu::perf::PerfModel;
-use has_gpu::rapp::{LatencyPredictor, OraclePredictor, RappPredictor};
-use has_gpu::sim::{run_sim, SimConfig};
+use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::util::cli::Cli;
+use has_gpu::util::json;
 use has_gpu::workload::{Preset, TraceGen};
 use std::path::PathBuf;
 
@@ -16,21 +18,29 @@ const USAGE: &str = "has-gpu — Hybrid Auto-scaling Serverless GPU inference (r
 USAGE: has-gpu <COMMAND> [options]
 
 COMMANDS:
-  simulate   run a platform-vs-platform cluster simulation and print the report
-             [--platform has-gpu|kserve|fast-gshare] [--preset standard|stress]
+  expt       run a platform × preset × seed scenario matrix in parallel and
+             export the comparison grid as JSON
+             [--platforms all|csv] [--preset standard|stress|diurnal|spiky-burst|all]
+             [--seeds N|csv] [--seed-base S] [--seconds N] [--gpus N] [--rps R]
+             [--jobs N] [--out PATH]
+  simulate   run a single platform-vs-workload cell and print the report
+             [--platform has-gpu|kserve|fast-gshare] [--preset NAME]
              [--seconds N] [--gpus N] [--rps R] [--seed S] [--json]
   predict    RaPP latency prediction (requires artifacts)
              [--model NAME] [--batch B] [--sm F] [--quota F]
   trace-gen  synthesise an Azure-style workload trace as JSON to stdout
-             [--preset standard|stress] [--seconds N] [--rps R] [--seed S]
+             [--preset NAME] [--seconds N] [--rps R] [--seed S]
   zoo        list benchmark models with FLOPs/params/baseline latency
   help       this message
+
+Run `has-gpu <COMMAND> --help` for per-command details.
 ";
 
 fn main() -> anyhow::Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     match cmd.as_str() {
+        "expt" => expt(argv),
         "simulate" => simulate(argv),
         "predict" => predict(argv),
         "trace-gen" => trace_gen(argv),
@@ -56,63 +66,90 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn opt(argv: &[String], name: &str, default: &str) -> String {
-    argv.iter()
-        .position(|a| a == &format!("--{name}"))
-        .and_then(|i| argv.get(i + 1))
-        .cloned()
-        .unwrap_or_else(|| default.to_string())
-}
-
-fn experiment_functions() -> Vec<FunctionSpec> {
-    let perf = PerfModel::default();
-    has_gpu::model::zoo::ALL_ZOO
-        .iter()
-        .filter(|m| !matches!(m, ZooModel::ResNet152)) // the Fig.4 subject stays out
-        .map(|&m| {
-            let graph = zoo_graph(m);
-            let baseline = perf.latency(&graph, 1, 1.0, 1.0);
-            let slo = baseline * 3.0;
-            let batch = [16u32, 8, 4, 2, 1]
-                .into_iter()
-                .find(|&b| perf.latency(&graph, b, 1.0, 1.0) <= slo * 0.5)
-                .unwrap_or(1);
-            FunctionSpec { name: graph.name.clone(), slo, batch, graph, artifact: None }
-        })
-        .collect()
-}
-
-fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
-    let platform = opt(&argv, "platform", "has-gpu");
-    let preset = match opt(&argv, "preset", "standard").as_str() {
-        "stress" => Preset::Stress,
-        _ => Preset::Standard,
+/// The scenario-matrix runner: shard `platform × preset × seed` cells over a
+/// thread pool, print the paper-style comparison table, export the grid.
+fn expt(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Cli::new("has-gpu expt", "scenario-matrix experiment runner")
+        .opt("platforms", "all", "comma list of platforms, or 'all'")
+        .opt("preset", "standard", "comma list of workload presets, or 'all'")
+        .opt("seeds", "2", "seed count (expands from --seed-base) or comma list")
+        .opt("seed-base", "11", "first seed when --seeds is a count")
+        .opt("seconds", "300", "trace length per cell (virtual seconds)")
+        .opt("gpus", "10", "cluster size per cell")
+        .opt("rps", "150", "mean request rate per function")
+        .opt("jobs", "0", "worker threads (0 = available parallelism)")
+        .opt("out", "BENCH_sim.json", "output path for the JSON grid")
+        .parse_from_or_exit(argv);
+    let matrix = ScenarioMatrix {
+        platforms: parse_platforms(&args.get_list("platforms"))?,
+        presets: parse_presets(&args.get_list("preset"))?,
+        seeds: parse_seeds(args.get("seeds"), args.get_u64("seed-base"))?,
+        seconds: args.get_usize("seconds"),
+        gpus: args.get_usize("gpus"),
+        rps: args.get_f64("rps"),
     };
-    let seconds: usize = opt(&argv, "seconds", "300").parse()?;
-    let gpus: usize = opt(&argv, "gpus", "10").parse()?;
-    let rps: f64 = opt(&argv, "rps", "150").parse()?;
-    let seed: u64 = opt(&argv, "seed", "11").parse()?;
-
-    let fns = experiment_functions();
-    let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
-    let trace = TraceGen::preset(preset, seed, seconds, rps).generate(&names);
-    let perf = PerfModel::default();
-    let pred = OraclePredictor::default();
-
-    let (mut policy, whole): (Box<dyn ScalingPolicy>, bool) = match platform.as_str() {
-        "kserve" => (Box::new(KServePolicy::default()), true),
-        "fast-gshare" => (Box::new(FastGSharePolicy::default()), false),
-        _ => (Box::new(HybridAutoscaler::new(HybridConfig::default())), false),
-    };
-    let report = run_sim(
-        policy.as_mut(),
-        &fns,
-        &trace,
-        &pred,
-        &perf,
-        &SimConfig { n_gpus: gpus, seed, bill_whole_gpu: whole, ..SimConfig::default() },
+    let jobs = args.get_usize("jobs");
+    eprintln!(
+        "running {} cells ({} platforms × {} presets × {} seeds) with jobs={}…",
+        matrix.cells().len(),
+        matrix.platforms.len(),
+        matrix.presets.len(),
+        matrix.seeds.len(),
+        if jobs == 0 { "auto".to_string() } else { jobs.to_string() }
     );
-    if argv.iter().any(|a| a == "--json") {
+    let report = matrix.run(jobs);
+    print!("{}", report.table());
+    let fmt_ratio = |r: Option<f64>| match r {
+        Some(v) => format!("{v:.2}x"),
+        None => "n/a (has-gpu baseline is 0)".to_string(),
+    };
+    for r in report.ratios_vs_has_gpu() {
+        println!(
+            "{} vs has-gpu @ {}: cost {}, slo-violations {}",
+            r.platform.name(),
+            r.preset.name(),
+            fmt_ratio(r.cost_ratio),
+            fmt_ratio(r.violation_ratio)
+        );
+    }
+    let out = PathBuf::from(args.get("out"));
+    json::write_file(&out, &report.to_json())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Single-cell special case of the matrix path: one platform, one preset,
+/// one seed, full per-function report.
+fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Cli::new("has-gpu simulate", "single-cell cluster simulation")
+        .opt("platform", "has-gpu", "has-gpu | kserve | fast-gshare")
+        .opt("preset", "standard", "standard | stress | diurnal | spiky-burst")
+        .opt("seconds", "300", "trace length (virtual seconds)")
+        .opt("gpus", "10", "cluster size")
+        .opt("rps", "150", "mean request rate per function")
+        .opt("seed", "11", "workload + simulation seed")
+        .flag("json", "emit the full RunReport as JSON")
+        .parse_from_or_exit(argv);
+    let platform = Platform::from_name(args.get("platform")).ok_or_else(|| {
+        anyhow::anyhow!("unknown platform '{}' (has-gpu|kserve|fast-gshare)", args.get("platform"))
+    })?;
+    let preset = Preset::from_name(args.get("preset")).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown preset '{}' (standard|stress|diurnal|spiky-burst)",
+            args.get("preset")
+        )
+    })?;
+    let matrix = ScenarioMatrix {
+        platforms: vec![platform],
+        presets: vec![preset],
+        seeds: vec![args.get_u64("seed")],
+        seconds: args.get_usize("seconds"),
+        gpus: args.get_usize("gpus"),
+        rps: args.get_f64("rps"),
+    };
+    let cell = matrix.cells()[0];
+    let (report, _cell_result) = matrix.run_cell(&cell);
+    if args.has_flag("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         println!(
@@ -144,12 +181,18 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
 }
 
 fn predict(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Cli::new("has-gpu predict", "RaPP latency prediction (requires artifacts)")
+        .opt("model", "resnet50", "zoo model name")
+        .opt("batch", "8", "batch size")
+        .opt("sm", "0.5", "SM partition fraction (0..1]")
+        .opt("quota", "0.6", "time quota fraction (0..1]")
+        .parse_from_or_exit(argv);
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let model = opt(&argv, "model", "resnet50");
-    let batch: u32 = opt(&argv, "batch", "8").parse()?;
-    let sm: f64 = opt(&argv, "sm", "0.5").parse()?;
-    let quota: f64 = opt(&argv, "quota", "0.6").parse()?;
-    let Some(zoo) = ZooModel::from_name(&model) else {
+    let model = args.get("model");
+    let batch = args.get_usize("batch") as u32;
+    let sm = args.get_f64("sm");
+    let quota = args.get_f64("quota");
+    let Some(zoo) = ZooModel::from_name(model) else {
         anyhow::bail!("unknown model '{model}'; available: {:?}", zoo_names());
     };
     let g = zoo_graph(zoo);
@@ -172,16 +215,26 @@ fn predict(argv: Vec<String>) -> anyhow::Result<()> {
 }
 
 fn trace_gen(argv: Vec<String>) -> anyhow::Result<()> {
-    let preset = match opt(&argv, "preset", "standard").as_str() {
-        "stress" => Preset::Stress,
-        _ => Preset::Standard,
-    };
-    let seconds: usize = opt(&argv, "seconds", "300").parse()?;
-    let rps: f64 = opt(&argv, "rps", "150").parse()?;
-    let seed: u64 = opt(&argv, "seed", "11").parse()?;
+    let args = Cli::new("has-gpu trace-gen", "synthesise an Azure-style workload trace")
+        .opt("preset", "standard", "standard | stress | diurnal | spiky-burst")
+        .opt("seconds", "300", "trace length in seconds")
+        .opt("rps", "150", "mean request rate per function")
+        .opt("seed", "11", "trace seed")
+        .parse_from_or_exit(argv);
+    let preset = Preset::from_name(args.get("preset")).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown preset '{}' (standard|stress|diurnal|spiky-burst)",
+            args.get("preset")
+        )
+    })?;
     let fns = experiment_functions();
     let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
-    let trace = TraceGen::preset(preset, seed, seconds, rps).generate(&names);
-    println!("{}", trace.to_json().to_string_pretty());
+    let tg = TraceGen::preset(
+        preset,
+        args.get_u64("seed"),
+        args.get_usize("seconds"),
+        args.get_f64("rps"),
+    );
+    println!("{}", tg.generate(&names).to_json().to_string_pretty());
     Ok(())
 }

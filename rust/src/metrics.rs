@@ -138,6 +138,12 @@ impl CostMeter {
         self.cost.values().sum()
     }
 
+    /// Total sm×quota-weighted GPU-seconds across every function — the
+    /// scenario-matrix cost axis (cheaper than $ for cross-device compares).
+    pub fn total_gpu_seconds(&self) -> f64 {
+        self.gpu_seconds.values().sum()
+    }
+
     /// The Fig. 7 metric: $ per 1000 served requests.
     pub fn cost_per_1k(&self, function: &str, served: usize) -> f64 {
         if served == 0 {
@@ -182,6 +188,46 @@ impl RunReport {
         self.functions.values().map(|f| f.dropped()).sum()
     }
 
+    /// Latency summary merged over every function's served requests — the
+    /// grid aggregation behind the scenario matrix's per-cell P99 column.
+    pub fn merged_latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for m in self.functions.values() {
+            for r in &m.records {
+                if r.outcome == Outcome::Ok {
+                    s.add(r.latency);
+                }
+            }
+        }
+        s
+    }
+
+    /// Request-weighted SLO-violation rate across functions, each request
+    /// judged against its own function's SLO bound. Dropped requests always
+    /// count as violations; functions absent from `slos` are skipped.
+    pub fn slo_violation_rate<'a, I>(&self, slos: I) -> f64
+    where
+        I: IntoIterator<Item = (&'a str, f64)>,
+    {
+        let mut viol = 0usize;
+        let mut total = 0usize;
+        for (name, slo) in slos {
+            if let Some(m) = self.functions.get(name) {
+                total += m.records.len();
+                viol += m
+                    .records
+                    .iter()
+                    .filter(|r| r.outcome == Outcome::Dropped || r.latency > slo)
+                    .count();
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            viol as f64 / total as f64
+        }
+    }
+
     /// Export as JSON for EXPERIMENTS.md tooling.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
@@ -200,6 +246,7 @@ impl RunReport {
                         ("p95", Json::Num(if lat.is_empty() { 0.0 } else { lat.p95() })),
                         ("p99", Json::Num(if lat.is_empty() { 0.0 } else { lat.p99() })),
                         ("cost", Json::Num(self.costs.cost_of(name))),
+                        ("gpu_seconds", Json::Num(self.costs.gpu_seconds_of(name))),
                         (
                             "cost_per_1k",
                             Json::Num(self.costs.cost_per_1k(name, m.served())),
@@ -263,6 +310,31 @@ mod tests {
         assert!((cm.cost_per_1k("g", 500) - 4.96).abs() < 1e-9);
         assert!(cm.cost_per_1k("g", 0).is_infinite());
         assert!(cm.gpu_seconds_of("f") > 0.0);
+    }
+
+    #[test]
+    fn merged_summary_and_grid_violation_rate() {
+        let mut r = RunReport::new("has-gpu");
+        r.function("a").record(0.0, 0.010, Outcome::Ok);
+        r.function("a").record(1.0, 0.100, Outcome::Ok);
+        r.function("b").record(2.0, 0.050, Outcome::Ok);
+        r.function("b").record(3.0, 0.0, Outcome::Dropped);
+        let mut s = r.merged_latency_summary();
+        assert_eq!(s.len(), 3);
+        assert!((s.percentile(100.0) - 0.100).abs() < 1e-12);
+        // a's SLO 0.05 (one slow), b's SLO 1.0 (one drop): 2 of 4 violate.
+        let v = r.slo_violation_rate([("a", 0.05), ("b", 1.0)]);
+        assert!((v - 0.5).abs() < 1e-12);
+        // No matching functions ⇒ defined as zero.
+        assert_eq!(r.slo_violation_rate([("missing", 0.1)]), 0.0);
+    }
+
+    #[test]
+    fn total_gpu_seconds_sums_functions() {
+        let mut cm = CostMeter::new();
+        cm.bill_slice("f", 0.5, 0.5, 100.0, 2.48);
+        cm.bill_slice("g", 1.0, 1.0, 10.0, 2.48);
+        assert!((cm.total_gpu_seconds() - (0.25 * 100.0 + 10.0)).abs() < 1e-9);
     }
 
     #[test]

@@ -383,8 +383,8 @@ mod tests {
         let g = zoo_graph(ZooModel::DlrmSmall);
         // Arithmetic intensity (flops/byte) far below CNNs.
         let ai = g.total_flops(1) / g.total_bytes(1);
-        let cnn_ai =
-            zoo_graph(ZooModel::ResNet50).total_flops(1) / zoo_graph(ZooModel::ResNet50).total_bytes(1);
+        let cnn_ai = zoo_graph(ZooModel::ResNet50).total_flops(1)
+            / zoo_graph(ZooModel::ResNet50).total_bytes(1);
         assert!(ai < cnn_ai / 5.0, "dlrm ai={ai} cnn ai={cnn_ai}");
     }
 }

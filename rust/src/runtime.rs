@@ -10,13 +10,20 @@
 //! keyed by artifact path; `infer` is thread-safe (PJRT CPU execution is
 //! internally synchronized; we additionally serialise calls per executable to
 //! model one physical accelerator per node).
+//!
+//! ## Feature gate
+//!
+//! The actual PJRT backend needs the `xla` bindings crate, which is not
+//! available in the offline reproduction environment. It is therefore gated
+//! behind the `pjrt` cargo feature: with the feature off (the default),
+//! [`PjrtRuntime`] is an API-compatible stub whose `infer`/`warmup` return a
+//! clear "built without the `pjrt` feature" error, so the control plane, the
+//! simulator, and every non-execution test build and pass unchanged.
 
 use crate::util::json;
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+use anyhow::Result;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
 /// Metadata for one servable model artifact (from `artifacts/manifest.json`).
 #[derive(Clone, Debug)]
@@ -82,25 +89,6 @@ impl Manifest {
     }
 }
 
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    /// PJRT CPU executables are not re-entrant across our pods; one lock per
-    /// executable models one accelerator per node anyway.
-    lock: Mutex<()>,
-}
-
-/// The PJRT runtime with an executable cache.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Arc<Compiled>>>,
-}
-
-// SAFETY: the xla crate wraps C++ PJRT objects behind pointers without Send/
-// Sync markers; the PJRT CPU client is thread-safe for compilation, and we
-// serialise execution through `Compiled::lock`.
-unsafe impl Send for PjrtRuntime {}
-unsafe impl Sync for PjrtRuntime {}
-
 /// Result of one inference execution.
 #[derive(Clone, Debug)]
 pub struct InferOutput {
@@ -109,73 +97,153 @@ pub struct InferOutput {
     pub exec_time: std::time::Duration,
 }
 
-impl PjrtRuntime {
-    pub fn new() -> Result<Self> {
-        Ok(PjrtRuntime {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            cache: Mutex::new(HashMap::new()),
-        })
+pub use backend::PjrtRuntime;
+
+/// The real PJRT backend (requires the `xla` bindings crate).
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::InferOutput;
+    use anyhow::{Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        /// PJRT CPU executables are not re-entrant across our pods; one lock
+        /// per executable models one accelerator per node anyway.
+        lock: Mutex<()>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The PJRT runtime with an executable cache.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, Arc<Compiled>>>,
     }
 
-    /// Load + compile an HLO-text artifact (cached).
-    fn compiled(&self, path: &Path) -> Result<Arc<Compiled>> {
-        if let Some(c) = self.cache.lock().unwrap().get(path) {
-            return Ok(Arc::clone(c));
+    // SAFETY: the xla crate wraps C++ PJRT objects behind pointers without
+    // Send/Sync markers; the PJRT CPU client is thread-safe for compilation,
+    // and we serialise execution through `Compiled::lock`.
+    unsafe impl Send for PjrtRuntime {}
+    unsafe impl Sync for PjrtRuntime {}
+
+    impl PjrtRuntime {
+        pub fn new() -> Result<Self> {
+            Ok(PjrtRuntime {
+                client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact (cached).
+        fn compiled(&self, path: &Path) -> Result<Arc<Compiled>> {
+            if let Some(c) = self.cache.lock().unwrap().get(path) {
+                return Ok(Arc::clone(c));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            let c = Arc::new(Compiled {
+                exe,
+                lock: Mutex::new(()),
+            });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(path.to_path_buf(), Arc::clone(&c));
+            Ok(c)
+        }
+
+        /// Pre-compile an artifact (warm-up; keeps first-request latency flat).
+        pub fn warmup(&self, path: &Path) -> Result<()> {
+            self.compiled(path).map(|_| ())
+        }
+
+        pub fn cache_len(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        /// Execute an artifact on f32 inputs. Each input is (flat values,
+        /// dims). The computation must return a 1-tuple (jax lowered with
+        /// `return_tuple=True`); returns the flattened f32 output.
+        pub fn infer(&self, path: &Path, inputs: &[(&[f32], &[i64])]) -> Result<InferOutput> {
+            let compiled = self.compiled(path)?;
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (vals, dims) in inputs {
+                let lit = xla::Literal::vec1(vals)
+                    .reshape(dims)
+                    .with_context(|| format!("reshaping input to {dims:?}"))?;
+                lits.push(lit);
+            }
+            let _guard = compiled.lock.lock().unwrap();
+            let t0 = Instant::now();
+            let result = compiled.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let exec_time = t0.elapsed();
+            let out = result.to_tuple1().context("expected 1-tuple output")?;
+            Ok(InferOutput {
+                values: out.to_vec::<f32>()?,
+                exec_time,
+            })
+        }
+    }
+}
+
+/// Offline stub backend: same API surface, no execution capability.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::InferOutput;
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// API-compatible stand-in for the PJRT runtime. Construction succeeds
+    /// (callers hold it behind `Arc` long before first execution); any
+    /// attempt to compile or execute an artifact reports the missing
+    /// feature instead of aborting the process.
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    fn unavailable(path: &Path) -> anyhow::Error {
+        anyhow::anyhow!(
+            "PJRT execution unavailable: has_gpu was built without the `pjrt` feature \
+             (artifact: {})",
+            path.display()
         )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let c = Arc::new(Compiled {
-            exe,
-            lock: Mutex::new(()),
-        });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), Arc::clone(&c));
-        Ok(c)
     }
 
-    /// Pre-compile an artifact (warm-up; keeps first-request latency flat).
-    pub fn warmup(&self, path: &Path) -> Result<()> {
-        self.compiled(path).map(|_| ())
-    }
-
-    pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-
-    /// Execute an artifact on f32 inputs. Each input is (flat values, dims).
-    /// The computation must return a 1-tuple (jax lowered with
-    /// `return_tuple=True`); returns the flattened f32 output.
-    pub fn infer(&self, path: &Path, inputs: &[(&[f32], &[i64])]) -> Result<InferOutput> {
-        let compiled = self.compiled(path)?;
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (vals, dims) in inputs {
-            let lit = xla::Literal::vec1(vals)
-                .reshape(dims)
-                .with_context(|| format!("reshaping input to {dims:?}"))?;
-            lits.push(lit);
+    impl PjrtRuntime {
+        pub fn new() -> Result<Self> {
+            Ok(PjrtRuntime { _priv: () })
         }
-        let _guard = compiled.lock.lock().unwrap();
-        let t0 = Instant::now();
-        let result = compiled.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let exec_time = t0.elapsed();
-        let out = result.to_tuple1().context("expected 1-tuple output")?;
-        Ok(InferOutput {
-            values: out.to_vec::<f32>()?,
-            exec_time,
-        })
+
+        pub fn platform(&self) -> String {
+            "pjrt-stub (feature disabled)".to_string()
+        }
+
+        /// Stub: always fails — surfacing the configuration problem at server
+        /// start-up instead of silently dropping every request later.
+        pub fn warmup(&self, path: &Path) -> Result<()> {
+            Err(unavailable(path))
+        }
+
+        pub fn cache_len(&self) -> usize {
+            0
+        }
+
+        pub fn infer(&self, path: &Path, _inputs: &[(&[f32], &[i64])]) -> Result<InferOutput> {
+            Err(unavailable(path))
+        }
     }
 }
 
@@ -251,7 +319,8 @@ mod tests {
     use super::*;
 
     /// Write a tiny HLO-text module equivalent to what aot.py emits and run
-    /// it through the full load-compile-execute path.
+    /// it through the full load-compile-execute path (real backend only).
+    #[cfg(feature = "pjrt")]
     fn write_test_hlo(dir: &Path) -> PathBuf {
         // f(x, y) = (x @ y + 2.0,) over f32[2,2] — matches the reference
         // round-trip from /opt/xla-example.
@@ -272,6 +341,7 @@ ENTRY main.7 {
         path
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn load_execute_roundtrip() {
         let dir = std::env::temp_dir().join(format!("hasgpu-rt-{}", std::process::id()));
@@ -297,6 +367,16 @@ ENTRY main.7 {
         let rt = PjrtRuntime::new().unwrap();
         let err = rt.infer(Path::new("/nonexistent/model.hlo.txt"), &[]);
         assert!(err.is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_missing_feature() {
+        let rt = PjrtRuntime::new().unwrap();
+        assert_eq!(rt.cache_len(), 0);
+        assert!(rt.platform().contains("stub"));
+        let err = rt.warmup(Path::new("whatever.hlo.txt")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     #[test]

@@ -59,6 +59,19 @@ impl Default for SimConfig {
     }
 }
 
+impl SimConfig {
+    /// The standard configuration for one scenario-matrix cell: default
+    /// serving knobs, cell-specific cluster size / seed / billing mode.
+    pub fn for_experiment(n_gpus: usize, seed: u64, bill_whole_gpu: bool) -> Self {
+        SimConfig {
+            n_gpus,
+            seed,
+            bill_whole_gpu,
+            ..SimConfig::default()
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 struct Request {
     arrival: f64,

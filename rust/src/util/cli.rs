@@ -85,11 +85,17 @@ impl Cli {
 
     /// Parse `std::env::args()`. Prints usage and exits on `--help` or error.
     pub fn parse(self) -> Args {
-        self.parse_from(std::env::args().skip(1).collect())
-            .unwrap_or_else(|e| {
-                eprintln!("error: {e}\n\n{}", self.usage());
-                std::process::exit(2);
-            })
+        self.parse_from_or_exit(std::env::args().skip(1).collect())
+    }
+
+    /// Parse an explicit argv (subcommand style: the caller has already
+    /// stripped the binary name and the subcommand token). Prints usage and
+    /// exits on `--help` or error.
+    pub fn parse_from_or_exit(self, argv: Vec<String>) -> Args {
+        self.parse_from(argv).unwrap_or_else(|e| {
+            eprintln!("error: {e}\n\n{}", self.usage());
+            std::process::exit(2);
+        })
     }
 
     /// Parse an explicit vector (testable).
@@ -170,6 +176,12 @@ impl Args {
             .unwrap_or_else(|_| panic!("--{name} must be an integer"))
     }
 
+    /// Comma-separated list value (`--x a,b,c`); empty segments are dropped
+    /// and surrounding whitespace is trimmed.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name).split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -205,6 +217,20 @@ mod tests {
         assert_eq!(a.get_u64("seed"), 7);
         assert!(a.has_flag("verbose"));
         assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn list_values_split_on_commas() {
+        let a = Cli::new("t", "test")
+            .opt("names", "a,b", "comma list")
+            .parse_from(vec!["--names".into(), " x, y ,,z".into()])
+            .unwrap();
+        assert_eq!(a.get_list("names"), vec!["x", "y", "z"]);
+        let d = Cli::new("t", "test")
+            .opt("names", "a,b", "comma list")
+            .parse_from(vec![])
+            .unwrap();
+        assert_eq!(d.get_list("names"), vec!["a", "b"]);
     }
 
     #[test]

@@ -122,6 +122,7 @@ impl Json {
 
     // ---- serialisation ---------------------------------------------------
 
+    #[allow(clippy::inherent_to_string)] // deliberate: no Display detour for a serialiser
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
@@ -242,10 +243,18 @@ pub fn parse(input: &str) -> Result<Json, JsonError> {
 pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-    Ok(parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?)
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
 }
 
-impl<'a> Parser<'a> {
+/// Serialise `v` pretty-printed to `path` (created or truncated). The pretty
+/// form is deterministic — object key order is preserved — so repeated runs
+/// with identical inputs produce byte-identical files.
+pub fn write_file(path: &std::path::Path, v: &Json) -> anyhow::Result<()> {
+    std::fs::write(path, v.to_string_pretty())
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+impl Parser<'_> {
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len() {
             match self.bytes[self.pos] {
@@ -382,7 +391,9 @@ impl<'a> Parser<'a> {
                                     return Err(self.err("lone surrogate"));
                                 }
                             } else {
-                                s.push(char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?);
+                                s.push(
+                                    char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?,
+                                );
                             }
                         }
                         _ => return Err(self.err("bad escape")),
@@ -506,6 +517,16 @@ mod tests {
         assert!(parse("[1,2,]").is_err());
         assert!(parse("{\"a\":1} x").is_err());
         assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn write_file_then_parse_file_roundtrip() {
+        let path = std::env::temp_dir().join(format!("hasgpu-json-{}.json", std::process::id()));
+        let v = parse(r#"{"a": [1, 2.5], "b": "x"}"#).unwrap();
+        write_file(&path, &v).unwrap();
+        let back = parse_file(&path).unwrap();
+        assert_eq!(v, back);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -16,11 +16,41 @@ use crate::util::json::Json;
 use crate::util::prng::Pcg64;
 use std::collections::BTreeMap;
 
-/// Workload intensity preset (paper Fig. 7: standard vs. stress).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Workload shape preset. `Standard` and `Stress` reproduce the paper's
+/// Fig. 7 workloads; `Diurnal` and `SpikyBurst` extend the scenario matrix
+/// with the two Azure-trace regimes the paper presets average away — a
+/// clean day/night cycle with rare bursts, and a flat base hammered by
+/// frequent heavy-tailed spikes (the worst case for horizontal-only
+/// scaling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Preset {
     Standard,
     Stress,
+    Diurnal,
+    SpikyBurst,
+}
+
+/// Every preset, in the canonical matrix order.
+pub const ALL_PRESETS: [Preset; 4] = [
+    Preset::Standard,
+    Preset::Stress,
+    Preset::Diurnal,
+    Preset::SpikyBurst,
+];
+
+impl Preset {
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::Standard => "standard",
+            Preset::Stress => "stress",
+            Preset::Diurnal => "diurnal",
+            Preset::SpikyBurst => "spiky-burst",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        ALL_PRESETS.iter().copied().find(|p| p.name() == s)
+    }
 }
 
 /// Per-function request-rate series (1-second buckets).
@@ -141,6 +171,35 @@ impl TraceGen {
                 noise_sigma: 0.45,
                 duty_cycle: 0.7,
             },
+            // One clean compressed day across the trace: deep valleys, long
+            // active plateaus, almost no bursts — rewards vertical scaling
+            // and keep-alive (scale-to-near-zero over the night half).
+            Preset::Diurnal => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64,
+                burst_rate: 1.0 / 300.0,
+                burst_alpha: 3.0,
+                burst_cap: 3.0,
+                burst_len: (20, 40),
+                noise_sigma: 0.15,
+                duty_cycle: 0.6,
+            },
+            // Near-flat base with frequent, short, heavy-tailed spikes — the
+            // regime where cold starts dominate horizontal-only platforms.
+            Preset::SpikyBurst => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 * 4.0,
+                burst_rate: 1.0 / 25.0,
+                burst_alpha: 1.3,
+                burst_cap: 12.0,
+                burst_len: (5, 15),
+                noise_sigma: 0.35,
+                duty_cycle: 0.9,
+            },
         }
     }
 
@@ -163,7 +222,8 @@ impl TraceGen {
                     + 0.95
                         * (std::f64::consts::TAU * t as f64 / self.day_period + phase).sin())
                 .max(0.0);
-                let noise = rng.lognormal(-self.noise_sigma * self.noise_sigma / 2.0, self.noise_sigma);
+                let noise =
+                    rng.lognormal(-self.noise_sigma * self.noise_sigma / 2.0, self.noise_sigma);
                 // Duty cycling: traffic only while the day-phase is inside
                 // the active window.
                 let day_pos = (t as f64 / self.day_period + phase / std::f64::consts::TAU).fract();
@@ -257,6 +317,51 @@ mod tests {
             stress_ratio > std_ratio,
             "stress {stress_ratio} vs standard {std_ratio}"
         );
+    }
+
+    #[test]
+    fn preset_names_roundtrip() {
+        for p in ALL_PRESETS {
+            assert_eq!(Preset::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Preset::from_name("spiky-burst"), Some(Preset::SpikyBurst));
+        assert_eq!(Preset::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn every_preset_generates_traffic() {
+        for p in ALL_PRESETS {
+            let t = TraceGen::preset(p, 3, 600, 20.0).generate(&["f", "g"]);
+            assert!(t.total_requests("f") > 100.0, "{p:?} too quiet");
+            assert_eq!(t.duration(), 600);
+            assert!(t.series["f"].iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn spiky_burst_is_burstier_than_diurnal() {
+        // Peak-to-mean over active seconds, averaged across seeds.
+        let ratio = |preset: Preset| {
+            let mut acc = 0.0;
+            for seed in 0..8 {
+                let t = TraceGen::preset(preset, seed, 600, 20.0).generate(&["f"]);
+                let s: Vec<f64> = t.series["f"].iter().copied().filter(|&x| x > 0.0).collect();
+                let mean = s.iter().sum::<f64>() / s.len() as f64;
+                acc += t.peak("f") / mean;
+            }
+            acc / 8.0
+        };
+        let spiky = ratio(Preset::SpikyBurst);
+        let diurnal = ratio(Preset::Diurnal);
+        assert!(spiky > diurnal, "spiky {spiky} vs diurnal {diurnal}");
+    }
+
+    #[test]
+    fn diurnal_has_idle_valley() {
+        // The night half of the compressed day must be (near-)silent.
+        let t = TraceGen::preset(Preset::Diurnal, 5, 600, 20.0).generate(&["f"]);
+        let idle = t.series["f"].iter().filter(|&&x| x == 0.0).count();
+        assert!(idle > 120, "only {idle} idle seconds");
     }
 
     #[test]

@@ -1,0 +1,70 @@
+//! Scenario-matrix integration tests: the `expt` runner must produce
+//! identical grids regardless of `--jobs`, and its `BENCH_sim.json` export
+//! must round-trip losslessly through `util::json`.
+
+use has_gpu::expt::{MatrixReport, Platform, ScenarioMatrix};
+use has_gpu::util::json;
+use has_gpu::workload::Preset;
+
+/// 2 platforms × 1 preset × 2 seeds on a short trace — small enough for
+/// `cargo test -q`, big enough to exercise sharding and aggregation.
+fn small_matrix() -> ScenarioMatrix {
+    ScenarioMatrix {
+        platforms: vec![Platform::HasGpu, Platform::KServe],
+        presets: vec![Preset::Standard],
+        seeds: vec![5, 6],
+        seconds: 60,
+        gpus: 6,
+        rps: 60.0,
+    }
+}
+
+#[test]
+fn deterministic_across_job_counts() {
+    let matrix = small_matrix();
+    let serial = matrix.run(1);
+    let parallel = matrix.run(4);
+    // The whole export — per-cell metrics, summary, ratios — must be
+    // byte-identical: cells are pure functions of their coordinates.
+    assert_eq!(
+        serial.to_json().to_string_pretty(),
+        parallel.to_json().to_string_pretty()
+    );
+}
+
+#[test]
+fn grid_covers_every_cell_with_live_metrics() {
+    let matrix = small_matrix();
+    let report = matrix.run(2);
+    assert_eq!(report.cells.len(), 4);
+    for cell in &report.cells {
+        assert!(cell.served > 0, "{:?} seed {} served nothing", cell.platform, cell.seed);
+        assert!(cell.total_cost > 0.0);
+        assert!(cell.p99_latency.is_finite());
+    }
+    // Both platforms present, and KServe's whole-GPU billing costs more in
+    // aggregate (the Fig. 7 ordering).
+    let cost = |p: Platform| -> f64 {
+        report
+            .cells
+            .iter()
+            .filter(|c| c.platform == p)
+            .map(|c| c.total_cost)
+            .sum()
+    };
+    assert!(cost(Platform::KServe) > cost(Platform::HasGpu));
+    // Summary has one row per (preset, platform) and averages both seeds.
+    let summary = report.summary();
+    assert_eq!(summary.len(), 2);
+    assert!(summary.iter().all(|r| r.cells == 2));
+}
+
+#[test]
+fn bench_sim_json_roundtrips_through_util_json() {
+    let report = small_matrix().run(2);
+    let text = report.to_json().to_string_pretty();
+    let parsed = json::parse(&text).expect("export is valid JSON");
+    let back = MatrixReport::from_json(&parsed).expect("schema round-trips");
+    assert_eq!(back, report);
+    assert_eq!(back.to_json().to_string_pretty(), text);
+}

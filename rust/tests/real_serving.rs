@@ -14,6 +14,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: real-mode serving needs the `pjrt` feature (--features pjrt)");
+        return None;
+    }
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
         Some(dir)

@@ -155,7 +155,7 @@ fn fig6_fastgshare_has_worst_tail_blowup() {
 
 #[test]
 fn stress_workload_amplifies_cost_gap() {
-    let (has_std, ks_std, _)= all_three(Preset::Standard);
+    let (has_std, ks_std, _) = all_three(Preset::Standard);
     let (has_str, ks_str, _) = all_three(Preset::Stress);
     let ratio = |h: &RunReport, k: &RunReport| k.costs.total_cost() / h.costs.total_cost();
     let std_ratio = ratio(&has_std, &ks_std);
@@ -251,7 +251,10 @@ fn diag_latency_timeline() {
 fn diag_platform_reports() {
     let (has, ks, fg) = all_three(Preset::Standard);
     for r in [&has, &ks, &fg] {
-        println!("== {} vups={} hups={} hdowns={}", r.platform, r.vertical_ups, r.horizontal_ups, r.horizontal_downs);
+        println!(
+            "== {} vups={} hups={} hdowns={}",
+            r.platform, r.vertical_ups, r.horizontal_ups, r.horizontal_downs
+        );
         for (f, m) in &r.functions {
             let mut s = m.latency_summary();
             println!("  {f}: served={} dropped={} p50={:.1}ms p99={:.1}ms cost={:.4}",
