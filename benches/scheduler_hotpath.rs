@@ -11,7 +11,9 @@ use has_gpu::cluster::{ClusterState, GpuId, Reconfigurator};
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::features::{extract, FeatureMode};
-use has_gpu::rapp::{LatencyPredictor, OraclePredictor, RappPredictor};
+use has_gpu::rapp::{
+    CachedPredictor, CountingPredictor, LatencyPredictor, OraclePredictor, RappPredictor,
+};
 use has_gpu::simclock::EventQueue;
 use has_gpu::util::bench::{black_box, Harness};
 use has_gpu::vgpu::tokens::TokenScheduler;
@@ -82,6 +84,45 @@ fn main() {
         t += 1.0;
         black_box(scaler.plan(&fns[0], 120.0, &cluster, &pred, t));
     });
+
+    // The same tick through the quantized capacity cache — the sim's actual
+    // configuration (DESIGN.md target: < 1 ms at 10 GPUs / ~40 pods).
+    let cached_oracle = CachedPredictor::new(&pred);
+    let mut scaler_cached = HybridAutoscaler::new(HybridConfig::default());
+    let mut tc = 0.0;
+    h.bench("autoscaler_plan_40pods_cached", || {
+        tc += 1.0;
+        black_box(scaler_cached.plan(&fns[0], 120.0, &cluster, &cached_oracle, tc));
+    });
+
+    // Predictor-invocation accounting (ISSUE acceptance): over a run of
+    // identical plan ticks, the cache must cut underlying predictor forwards
+    // by ≥ 5x versus the uncached path.
+    {
+        let ticks = 50;
+        let raw = CountingPredictor::new(OraclePredictor::default());
+        let mut s1 = HybridAutoscaler::new(HybridConfig::default());
+        for t in 0..ticks {
+            black_box(s1.plan(&fns[0], 120.0, &cluster, &raw, t as f64));
+        }
+        let uncached = raw.invocations();
+        let counted = CountingPredictor::new(OraclePredictor::default());
+        let cache = CachedPredictor::new(&counted);
+        let mut s2 = HybridAutoscaler::new(HybridConfig::default());
+        for t in 0..ticks {
+            black_box(s2.plan(&fns[0], 120.0, &cluster, &cache, t as f64));
+        }
+        let cached = counted.invocations();
+        println!(
+            "predictor invocations over {ticks} plan ticks: uncached={uncached} \
+             cached={cached} ({:.1}x fewer)",
+            uncached as f64 / cached.max(1) as f64
+        );
+        assert!(
+            uncached >= 5 * cached.max(1),
+            "capacity cache must cut predictor invocations ≥5x: {uncached} vs {cached}"
+        );
+    }
 
     // vGPU allocation round-trip.
     let mut vg = has_gpu::vgpu::VGpu::new("GPU-bench", 16e9);

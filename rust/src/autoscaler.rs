@@ -18,7 +18,7 @@
 //! The scaler emits [`ScalingAction`]s; the GPU Re-configurator applies them.
 
 use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, ScalingAction};
-use crate::rapp::LatencyPredictor;
+use crate::rapp::{min_feasible_quota, LatencyPredictor};
 use crate::vgpu::{QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
 use std::collections::BTreeMap;
 
@@ -57,7 +57,7 @@ impl KalmanFilter {
     /// as the prediction for the next interval.
     pub fn update(&mut self, r_t: f64) -> f64 {
         if !self.initialized {
-            self.x = r_t;
+            self.x = r_t.max(0.0);
             self.p = self.d;
             self.initialized = true;
             return self.x;
@@ -65,11 +65,14 @@ impl KalmanFilter {
         // Predict.
         let x_pred = self.a * self.x;
         let p_pred = self.a * self.p * self.a + self.q;
-        // Update.
+        // Update. A rate is non-negative: clamp the *stored* state, not just
+        // the returned value, or a downward spike leaves `estimate()`
+        // reporting a negative RPS until enough upward measurements drag the
+        // hidden state back above zero.
         let k = p_pred * self.h / (self.h * p_pred * self.h + self.d);
-        self.x = x_pred + k * (r_t - self.h * x_pred);
+        self.x = (x_pred + k * (r_t - self.h * x_pred)).max(0.0);
         self.p = (1.0 - k * self.h) * p_pred;
-        self.x.max(0.0)
+        self.x
     }
 
     pub fn estimate(&self) -> f64 {
@@ -142,6 +145,12 @@ impl Default for HybridConfig {
     }
 }
 
+/// Below this predicted rate the function is considered idle: the keep-alive
+/// scale-down floor relaxes its SLO margin to exactly the SLO (1.0) so the
+/// retained pod holds minimal resources without risking the first
+/// reactivation request.
+const NEAR_ZERO_RPS: f64 = 1e-3;
+
 /// The paper's hybrid auto-scaler.
 pub struct HybridAutoscaler {
     pub cfg: HybridConfig,
@@ -175,7 +184,10 @@ impl HybridAutoscaler {
     /// Smallest quota (in steps) at which a pod of partition `sm` meets the
     /// function SLO — the floor for vertical scale-down and the starting
     /// point for new-pod quota sizing. Falls back to full quota when the
-    /// partition cannot meet the SLO at all.
+    /// partition cannot meet the SLO at all. Latency is monotone
+    /// non-increasing in quota, so this is a bisection over the quota
+    /// lattice rather than the seed's linear sweep: O(log) predictor
+    /// lookups, all served from the run's capacity cache.
     fn min_slo_quota(
         &self,
         f: &FunctionSpec,
@@ -184,54 +196,64 @@ impl HybridAutoscaler {
         margin: f64,
     ) -> QuotaMille {
         let smf = crate::vgpu::sm_to_f64(sm);
-        let mut q = self.cfg.quota_step;
-        while q <= QUOTA_FULL {
-            let lat = predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q));
-            if lat <= f.slo * margin {
-                return q;
-            }
-            q += self.cfg.quota_step;
-        }
-        QUOTA_FULL
+        min_feasible_quota(self.cfg.quota_step, QUOTA_FULL, |q| {
+            predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q))
+                <= f.slo * margin
+        })
+        .unwrap_or(QUOTA_FULL)
     }
 
     /// The most efficient (sm, quota) for a required rate ΔR on an empty GPU
     /// (`RaPPbyThroughput`, line 19): the cheapest slice (sm×quota) whose
     /// capacity covers ΔR and whose latency meets the function SLO; falls
     /// back to the highest-capacity slice if ΔR is unreachable.
+    ///
+    /// Capacity is monotone non-decreasing and latency monotone
+    /// non-increasing in quota, so per SM class the cheapest feasible quota
+    /// is `max(min quota covering ΔR, min SLO-feasible quota)` — two
+    /// bisections instead of the seed's full O(sm × quota) grid sweep.
     fn most_efficient_slice(
         &self,
         f: &FunctionSpec,
         delta_r: f64,
         predictor: &dyn LatencyPredictor,
     ) -> (SmMille, QuotaMille) {
+        let step = self.cfg.quota_step;
         let mut best: Option<(f64, SmMille, QuotaMille)> = None; // (cost, sm, q)
         let mut fallback: (f64, SmMille, QuotaMille) = (0.0, SM_FULL, QUOTA_FULL);
         let mut sm = SM_STEP * 2; // 10% minimum sensible partition
         while sm <= SM_FULL {
-            let mut q = self.cfg.quota_step;
-            while q <= QUOTA_FULL {
-                let smf = crate::vgpu::sm_to_f64(sm);
+            let smf = crate::vgpu::sm_to_f64(sm);
+            let cap_full =
+                predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(QUOTA_FULL));
+            if cap_full > fallback.0 {
+                fallback = (cap_full, sm, QUOTA_FULL);
+            }
+            let q_cap = min_feasible_quota(step, QUOTA_FULL, |q| {
+                predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q)) >= delta_r
+            });
+            let q_slo = min_feasible_quota(step, QUOTA_FULL, |q| {
+                predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q))
+                    <= f.slo * self.cfg.slo_margin
+            });
+            // Prefer slices that meet ΔR + SLO while keeping vertical runway
+            // (quota ≤ headroom cap) — larger partitions at moderate quota
+            // can absorb the next burst by a quota re-write alone.
+            if let (Some(qc), Some(qs)) = (q_cap, q_slo) {
+                let q = qc.max(qs);
                 let qf = crate::vgpu::quota_to_f64(q);
-                let cap = predictor.capacity(&f.graph, f.batch, smf, qf);
-                let lat = predictor.latency(&f.graph, f.batch, smf, qf);
-                if cap > fallback.0 {
-                    fallback = (cap, sm, q);
-                }
-                // Prefer slices that meet ΔR + SLO while keeping vertical
-                // runway (quota ≤ headroom cap) — larger partitions at
-                // moderate quota can absorb the next burst by a quota
-                // re-write alone.
-                if cap >= delta_r
-                    && lat <= f.slo * self.cfg.slo_margin
-                    && q <= self.cfg.headroom_quota
+                // Re-verify the SLO at the quota actually selected: a learned
+                // predictor's surface need not be perfectly monotone, and q
+                // can exceed the bisected SLO point (capacity needs no
+                // re-check — it is linear in quota by construction).
+                if q <= self.cfg.headroom_quota
+                    && predictor.latency(&f.graph, f.batch, smf, qf) <= f.slo * self.cfg.slo_margin
                 {
                     let cost = smf * qf;
                     if best.map_or(true, |(c, _, _)| cost < c) {
                         best = Some((cost, sm, q));
                     }
                 }
-                q += self.cfg.quota_step;
             }
             sm += SM_STEP * 2;
         }
@@ -328,22 +350,23 @@ impl ScalingPolicy for HybridAutoscaler {
                         );
                         if c_max > delta_r {
                             // Find the smallest quota step covering ΔR (lines
-                            // 15-17), starting from the SLO-feasible floor.
+                            // 15-17), never below the SLO-feasible floor —
+                            // a bisection over the monotone capacity axis.
                             let floor = self.min_slo_quota(f, s_max, predictor, cfg.slo_margin);
-                            let mut n = (floor / cfg.quota_step).max(1);
-                            while cfg.quota_step * n <= q_max {
-                                let cap = predictor.capacity(
+                            let q_need = min_feasible_quota(cfg.quota_step, q_max, |q| {
+                                predictor.capacity(
                                     &f.graph,
                                     f.batch,
                                     smf,
-                                    crate::vgpu::quota_to_f64(cfg.quota_step * n),
-                                );
-                                if cap >= delta_r {
-                                    break;
-                                }
-                                n += 1;
-                            }
-                            let quota = (cfg.quota_step * n).min(q_max);
+                                    crate::vgpu::quota_to_f64(q),
+                                ) >= delta_r
+                            });
+                            let quota = match q_need {
+                                Some(q) => q.max(floor).min(q_max),
+                                // No lattice quota under q_max covers ΔR:
+                                // take everything available.
+                                None => q_max,
+                            };
                             actions.push(ScalingAction::CreatePod {
                                 function: f.name.clone(),
                                 gpu,
@@ -405,8 +428,9 @@ impl ScalingPolicy for HybridAutoscaler {
                 // violations). When traffic is (near-)zero the margin is
                 // relaxed to exactly the SLO — minimal keep-alive resources
                 // without risking the first request.
+                let margin = if r < NEAR_ZERO_RPS { 1.0 } else { cfg.slo_margin };
                 let floor = self
-                    .min_slo_quota(f, pod.sm, predictor, cfg.slo_margin)
+                    .min_slo_quota(f, pod.sm, predictor, margin)
                     .max(cfg.min_quota);
                 // Reduce stepwise while capacity stays above target (line 22).
                 let mut n = 0u32;
@@ -494,6 +518,27 @@ mod tests {
         }
         // Tracks a ramp with bounded lag.
         assert!(last > 185.0 && last < 200.0, "est {last}");
+    }
+
+    #[test]
+    fn kalman_state_never_goes_negative_on_downward_spike() {
+        // Regression: update() used to clamp only the *returned* value, so a
+        // downward spike left the stored state negative and estimate()
+        // reported a negative RPS afterwards.
+        let mut kf = KalmanFilter::new(16.0, 4.0); // responsive: gain ≈ 0.8
+        for _ in 0..5 {
+            kf.update(10.0);
+        }
+        let spiked = kf.update(-500.0); // pathological measurement
+        assert_eq!(spiked, 0.0, "clamped at the spike itself");
+        assert!(
+            kf.estimate() >= 0.0,
+            "stored state must persist the clamp, got {}",
+            kf.estimate()
+        );
+        // Recovery resumes from 0, not from a hidden negative state.
+        let next = kf.update(10.0);
+        assert!(next > 0.0 && next <= 10.0, "recovery estimate {next}");
     }
 
     #[test]
@@ -626,6 +671,81 @@ mod tests {
                 "{actions:?}"
             );
         }
+    }
+
+    #[test]
+    fn idle_keep_alive_floor_relaxes_margin_to_exact_slo() {
+        // At (near-)zero predicted traffic the scale-down floor uses margin
+        // 1.0 (exactly the SLO) instead of cfg.slo_margin — the keep-alive
+        // pod pins the minimal SLO-feasible quota.
+        let (mut c, mut recon, pm, mut spec) = setup();
+        let pod =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        // Pick an SLO between the q=0.3 and q=0.4 latencies so the margin-1.0
+        // floor and the default-margin floor land on different lattice steps.
+        spec.slo = pred.latency(&spec.graph, 8, 0.5, 0.35);
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let relaxed_floor = hs.min_slo_quota(&spec, 500, &pred, 1.0).max(hs.cfg.min_quota);
+        let strict_floor = hs
+            .min_slo_quota(&spec, 500, &pred, hs.cfg.slo_margin)
+            .max(hs.cfg.min_quota);
+        assert!(
+            relaxed_floor < strict_floor,
+            "setup must distinguish margins: relaxed {relaxed_floor} strict {strict_floor}"
+        );
+        // Converge the filter to zero, wait out the cooldown, then scale down.
+        let mut quota = 1000;
+        for t in 0..60 {
+            for a in hs.plan(&spec, 0.0, &c, &pred, t as f64 * 40.0) {
+                if let ScalingAction::SetQuota { pod: p, quota: q } = a {
+                    assert_eq!(p, pod);
+                    recon
+                        .apply(&mut c, &pm, &ScalingAction::SetQuota { pod: p, quota: q }, 0.0)
+                        .unwrap();
+                    quota = q;
+                }
+            }
+        }
+        assert_eq!(
+            quota, relaxed_floor,
+            "keep-alive quota must settle at the margin-1.0 floor"
+        );
+    }
+
+    #[test]
+    fn cached_plan_invokes_predictor_5x_less() {
+        // ISSUE acceptance: the quantized capacity cache must cut underlying
+        // predictor invocations on the plan tick by ≥5x. Identical demand
+        // each tick ⇒ the uncached path re-runs its sweeps every tick while
+        // the cached path serves them from the lattice table.
+        use crate::rapp::{CachedPredictor, CountingPredictor};
+        let (mut c, mut recon, pm, spec) = setup();
+        // Full-quota pod: vertical scale-up is exhausted, so each tick walks
+        // the horizontal paths (min_slo_quota + most_efficient_slice).
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let demand = OraclePredictor::default().capacity(&spec.graph, 8, 0.5, 1.0) * 40.0;
+        let ticks = 20;
+
+        let raw = CountingPredictor::new(OraclePredictor::default());
+        let mut s1 = HybridAutoscaler::new(HybridConfig::default());
+        for t in 0..ticks {
+            let _ = s1.plan(&spec, demand, &c, &raw, t as f64);
+        }
+        let uncached = raw.invocations();
+
+        let counted = CountingPredictor::new(OraclePredictor::default());
+        let cache = CachedPredictor::new(&counted);
+        let mut s2 = HybridAutoscaler::new(HybridConfig::default());
+        for t in 0..ticks {
+            let _ = s2.plan(&spec, demand, &c, &cache, t as f64);
+        }
+        let cached = counted.invocations();
+        assert!(cached > 0, "the cache must still consult the predictor once");
+        assert!(
+            uncached >= 5 * cached,
+            "cache saves too little: uncached {uncached} vs cached {cached}"
+        );
     }
 
     #[test]

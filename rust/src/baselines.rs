@@ -14,7 +14,7 @@
 
 use crate::autoscaler::ScalingPolicy;
 use crate::cluster::{ClusterState, FunctionSpec, GpuId, Pod, PodPhase, ScalingAction};
-use crate::rapp::LatencyPredictor;
+use crate::rapp::{min_feasible_quota, LatencyPredictor};
 use crate::vgpu::{QuotaMille, SmMille, QUOTA_FULL, SM_FULL};
 use std::collections::BTreeMap;
 
@@ -133,9 +133,14 @@ impl Default for FastGSharePolicy {
 }
 
 impl FastGSharePolicy {
-    /// The offline "most efficient configuration" search: cheapest slice
-    /// whose SLO holds and whose capacity is a reasonable scaling unit
-    /// (≥ `min_cap_rps`).
+    /// The offline "most efficient configuration" search: the slice
+    /// maximising throughput-per-GPU-share subject to the SLO.
+    ///
+    /// Efficiency `cap/(sm×quota)` is quota-invariant (capacity is linear in
+    /// quota), so per SM class the winner is the *smallest* SLO-feasible
+    /// quota — found by bisection over the monotone quota axis instead of
+    /// the seed's full grid sweep. Runs once per function; lookups go
+    /// through the run's shared capacity cache.
     fn slice_for(
         &mut self,
         f: &FunctionSpec,
@@ -147,24 +152,26 @@ impl FastGSharePolicy {
         let mut best: Option<(f64, SmMille, QuotaMille)> = None;
         let mut fallback = (0.0f64, SM_FULL, QUOTA_FULL);
         for sm in (100..=SM_FULL).step_by(100) {
-            for q in (100..=QUOTA_FULL).step_by(100) {
-                let smf = crate::vgpu::sm_to_f64(sm);
-                let qf = crate::vgpu::quota_to_f64(q);
-                let lat = predictor.latency(&f.graph, f.batch, smf, qf);
-                let cap = predictor.capacity(&f.graph, f.batch, smf, qf);
-                if cap > fallback.0 {
-                    fallback = (cap, sm, q);
-                }
-                // FaST-GShare maximises throughput-per-GPU-share subject to
-                // the SLO — it runs with latency close to the bound and no
-                // headroom (the source of its persistent violations under
-                // fluctuation, paper §4.3).
-                if lat <= f.slo {
-                    let eff = cap / (smf * qf);
-                    if best.map_or(true, |(e, _, _)| eff > e) {
-                        best = Some((eff, sm, q));
-                    }
-                }
+            let smf = crate::vgpu::sm_to_f64(sm);
+            let cap_full =
+                predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(QUOTA_FULL));
+            if cap_full > fallback.0 {
+                fallback = (cap_full, sm, QUOTA_FULL);
+            }
+            // FaST-GShare maximises throughput-per-GPU-share subject to the
+            // SLO — it runs with latency close to the bound and no headroom
+            // (the source of its persistent violations under fluctuation,
+            // paper §4.3).
+            let Some(q) = min_feasible_quota(100, QUOTA_FULL, |q| {
+                predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q)) <= f.slo
+            }) else {
+                continue;
+            };
+            let qf = crate::vgpu::quota_to_f64(q);
+            let cap = predictor.capacity(&f.graph, f.batch, smf, qf);
+            let eff = cap / (smf * qf);
+            if best.map_or(true, |(e, _, _)| eff > e) {
+                best = Some((eff, sm, q));
             }
         }
         let slice = best

@@ -81,8 +81,6 @@ pub struct Pod {
     pub batch: u32,
     pub phase: PodPhase,
     pub created_at: f64,
-    /// Cost accounting: time up to which this pod's GPU slice has been billed.
-    pub billed_until: f64,
 }
 
 impl Pod {
@@ -284,7 +282,6 @@ mod tests {
             batch: 4,
             phase: PodPhase::ColdStarting { ready_at: 5.0 },
             created_at: 0.0,
-            billed_until: 0.0,
         };
         assert!(!pod.is_ready(4.9));
         assert!(pod.is_ready(5.0));

@@ -134,7 +134,6 @@ impl Reconfigurator {
                     batch: *batch,
                     phase: PodPhase::ColdStarting { ready_at },
                     created_at: now,
-                    billed_until: now,
                 };
                 cluster.insert_pod(pod);
                 self.device_files[gpu.0].write_client(client, *sm, *quota);

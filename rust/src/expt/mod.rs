@@ -284,8 +284,9 @@ pub struct FunctionCellMetrics {
     pub violation_rate: f64,
     pub cost: f64,
     pub gpu_seconds: f64,
-    /// $ per 1000 served requests; `0.0` when nothing was served (kept
-    /// finite so the JSON export round-trips losslessly).
+    /// $ per 1000 served requests; `0.0` when nothing was served — the same
+    /// convention as [`crate::metrics::CostMeter::cost_per_1k`], kept finite
+    /// so the JSON export round-trips losslessly.
     pub cost_per_1k: f64,
 }
 
@@ -380,7 +381,7 @@ impl CellResult {
                     violation_rate,
                     cost,
                     gpu_seconds: report.costs.gpu_seconds_of(&f.name),
-                    cost_per_1k: if srv == 0 { 0.0 } else { cost * 1000.0 / srv as f64 },
+                    cost_per_1k: report.costs.cost_per_1k(&f.name, srv),
                 }
             })
             .collect();

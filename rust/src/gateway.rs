@@ -19,10 +19,8 @@
 //! ```
 
 use crate::autoscaler::ScalingPolicy;
-use crate::cluster::{
-    Applied, ClusterState, FunctionSpec, PodId, PodPhase, Reconfigurator, ScalingAction,
-};
-use crate::metrics::{Outcome, RunReport};
+use crate::cluster::{Applied, ClusterState, FunctionSpec, PodId, PodPhase, Reconfigurator};
+use crate::metrics::{BillingLedger, BillingMode, Outcome, RunReport};
 use crate::perf::PerfModel;
 use crate::rapp::LatencyPredictor;
 use crate::runtime::{Manifest, PjrtRuntime};
@@ -67,6 +65,9 @@ struct Shared {
     queues: HashMap<String, Arc<FunctionQueue>>,
     arrivals: HashMap<String, AtomicU64>,
     report: Mutex<RunReport>,
+    /// The transactional billing engine (shared with sim mode — see
+    /// `metrics::ledger`). Real mode always bills the fine-grained slice.
+    ledger: Mutex<BillingLedger>,
     shutdown: AtomicBool,
     epoch: Instant,
     /// Dynamic batching max-wait.
@@ -146,6 +147,7 @@ impl Server {
             );
             arrivals.insert(f.name.clone(), AtomicU64::new(0));
         }
+        let price_per_hour = perf.dev.price_per_hour;
         let shared = Arc::new(Shared {
             cluster: Mutex::new(cluster),
             recon: Mutex::new(recon),
@@ -155,6 +157,7 @@ impl Server {
             queues,
             arrivals,
             report: Mutex::new(RunReport::new(policy.name())),
+            ledger: Mutex::new(BillingLedger::new(BillingMode::FineGrained, price_per_hour)),
             shutdown: AtomicBool::new(false),
             epoch: Instant::now(),
             batch_wait: cfg.batch_wait,
@@ -180,13 +183,14 @@ impl Server {
             for f in &functions {
                 let actions = policy.plan(f, 1.0, &cl, predictor.as_ref(), now);
                 for a in &actions {
-                    if let Ok(Applied::PodCreated { pod, .. }) =
-                        rc.apply(&mut cl, &shared.perf, a, now)
-                    {
-                        if let Some(p) = cl.pod_mut(pod) {
-                            p.phase = PodPhase::Running; // deployment-time warm
+                    if let Ok(applied) = rc.apply(&mut cl, &shared.perf, a, now) {
+                        Self::record_applied(&shared, &cl, &applied, now);
+                        if let Applied::PodCreated { pod, .. } = applied {
+                            if let Some(p) = cl.pod_mut(pod) {
+                                p.phase = PodPhase::Running; // deployment-time warm
+                            }
+                            server.spawn_executor(pod, f.clone());
                         }
-                        server.spawn_executor(pod, f.clone());
                     }
                 }
             }
@@ -217,9 +221,14 @@ impl Server {
                                 let applied = {
                                     let mut cl = shared2.cluster.lock().unwrap();
                                     let mut rc = shared2.recon.lock().unwrap();
-                                    Self::bill(&shared2, &mut cl, a, now);
-                                    Self::count(&shared2, a);
-                                    rc.apply(&mut cl, &shared2.perf, a, now).ok()
+                                    let applied = rc.apply(&mut cl, &shared2.perf, a, now).ok();
+                                    // Ledger + counters only after the
+                                    // mutation succeeds: rejected actions
+                                    // bill nothing and count nothing.
+                                    if let Some(applied) = &applied {
+                                        Self::record_applied(&shared2, &cl, applied, now);
+                                    }
+                                    applied
                                 };
                                 if let Some(Applied::PodCreated { pod, .. }) = applied {
                                     if let Some(srv) = server2.upgrade() {
@@ -236,32 +245,16 @@ impl Server {
         Ok(server)
     }
 
-    fn count(shared: &Shared, a: &ScalingAction) {
+    /// Record a successfully applied scaling action (never called for
+    /// rejected ones) via the shared `Applied` → accounting mapping in
+    /// `metrics::ledger`. Lock order is report → ledger; `report()` takes
+    /// them sequentially (never nested), so no ordering cycle exists.
+    /// Note: bootstrap pod creations count as `horizontal_ups` too — same
+    /// semantics as sim mode's warm bootstrap.
+    fn record_applied(shared: &Shared, cl: &ClusterState, applied: &Applied, now: f64) {
         let mut rep = shared.report.lock().unwrap();
-        match a {
-            ScalingAction::SetQuota { .. } => rep.vertical_ups += 1,
-            ScalingAction::CreatePod { .. } => rep.horizontal_ups += 1,
-            ScalingAction::RemovePod { .. } => rep.horizontal_downs += 1,
-        }
-    }
-
-    fn bill(shared: &Shared, cl: &mut ClusterState, a: &ScalingAction, now: f64) {
-        if let ScalingAction::SetQuota { pod, .. } | ScalingAction::RemovePod { pod } = a {
-            if let Some(p) = cl.pod_mut(*pod) {
-                let dur = (now - p.billed_until).max(0.0);
-                let sm = crate::vgpu::sm_to_f64(p.sm);
-                let q = crate::vgpu::quota_to_f64(p.quota);
-                let fname = p.function.clone();
-                p.billed_until = now;
-                shared.report.lock().unwrap().costs.bill_slice(
-                    &fname,
-                    sm,
-                    q,
-                    dur,
-                    shared.perf.dev.price_per_hour,
-                );
-            }
-        }
+        let mut ledger = shared.ledger.lock().unwrap();
+        crate::metrics::ledger::record_applied(&mut rep, &mut ledger, cl, applied, now);
     }
 
     fn now_of(shared: &Shared) -> f64 {
@@ -298,29 +291,16 @@ impl Server {
 
     /// Snapshot of the metrics report.
     pub fn report(&self) -> RunReport {
-        // Final billing flush for live pods.
+        // Settle every open pod account up to `now` (idempotent), then copy
+        // the meter into the report snapshot.
         let now = self.shared.now();
-        {
-            let mut cl = self.shared.cluster.lock().unwrap();
-            let ids: Vec<PodId> = cl.pods().map(|p| p.id).collect();
-            for id in ids {
-                if let Some(p) = cl.pod_mut(id) {
-                    let dur = (now - p.billed_until).max(0.0);
-                    let sm = crate::vgpu::sm_to_f64(p.sm);
-                    let q = crate::vgpu::quota_to_f64(p.quota);
-                    let fname = p.function.clone();
-                    p.billed_until = now;
-                    self.shared.report.lock().unwrap().costs.bill_slice(
-                        &fname,
-                        sm,
-                        q,
-                        dur,
-                        self.shared.perf.dev.price_per_hour,
-                    );
-                }
-            }
-        }
+        let costs = {
+            let mut ledger = self.shared.ledger.lock().unwrap();
+            ledger.settle(now);
+            ledger.meter().clone()
+        };
         let mut r = self.shared.report.lock().unwrap().clone();
+        r.costs = costs;
         r.duration = now;
         r
     }

@@ -1,0 +1,265 @@
+//! The transactional billing ledger — the single cost-accounting engine.
+//!
+//! **Invariant: every pod-second is billed exactly once, at the slice the pod
+//! held during that second** (see DESIGN.md §Billing ledger). The ledger owns
+//! `billed_until` for every open pod; callers report lifecycle boundaries
+//! (`open` / `resize` / `close` / `settle`) and the ledger integrates
+//! `sm × quota × wall-time` between them under the run's [`BillingMode`].
+//!
+//! This replaces the seed's scattered billing call sites, which re-billed at
+//! resize/remove boundaries with a hard-coded fine-grained mode — silently
+//! under-billing whole-GPU platforms at every boundary event and biasing the
+//! baseline÷HAS cost ratios the scenario matrix exports (Fig. 7). Both the
+//! simulator ([`crate::sim`]) and the real-mode gateway
+//! ([`crate::gateway`]) drive this one engine.
+
+use super::{CostMeter, RunReport};
+use crate::cluster::{Applied, ClusterState, PodId};
+use crate::vgpu::{quota_to_f64, sm_to_f64, QuotaMille, SmMille};
+use std::collections::BTreeMap;
+
+/// How a pod-second is priced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BillingMode {
+    /// Bill the `sm × quota` slice actually held (shared-GPU platforms).
+    FineGrained,
+    /// Bill the full GPU regardless of slice (KServe-style exclusive
+    /// allocation: the whole device is reserved even if the pod is smaller).
+    WholeGpu,
+}
+
+impl BillingMode {
+    pub fn from_whole_gpu(bill_whole_gpu: bool) -> Self {
+        if bill_whole_gpu {
+            BillingMode::WholeGpu
+        } else {
+            BillingMode::FineGrained
+        }
+    }
+
+    /// The (sm, quota) fractions billed for a pod holding `(sm, quota)`.
+    fn billed_fractions(self, sm: SmMille, quota: QuotaMille) -> (f64, f64) {
+        match self {
+            BillingMode::FineGrained => (sm_to_f64(sm), quota_to_f64(quota)),
+            BillingMode::WholeGpu => (1.0, 1.0),
+        }
+    }
+}
+
+/// One open pod account: the slice currently held and the time up to which
+/// it has been billed.
+#[derive(Clone, Debug)]
+struct Account {
+    function: String,
+    sm: SmMille,
+    quota: QuotaMille,
+    billed_until: f64,
+}
+
+/// The transactional billing engine. See the module docs for the invariant.
+#[derive(Clone, Debug)]
+pub struct BillingLedger {
+    mode: BillingMode,
+    price_per_hour: f64,
+    accounts: BTreeMap<PodId, Account>,
+    meter: CostMeter,
+}
+
+impl BillingLedger {
+    pub fn new(mode: BillingMode, price_per_hour: f64) -> Self {
+        BillingLedger {
+            mode,
+            price_per_hour,
+            accounts: BTreeMap::new(),
+            meter: CostMeter::new(),
+        }
+    }
+
+    pub fn mode(&self) -> BillingMode {
+        self.mode
+    }
+
+    /// Number of pods with open accounts.
+    pub fn open_accounts(&self) -> usize {
+        self.accounts.len()
+    }
+
+    /// Bill one account forward to `now` at its current slice.
+    fn accrue(meter: &mut CostMeter, mode: BillingMode, price: f64, acct: &mut Account, now: f64) {
+        let dur = now - acct.billed_until;
+        if dur <= 0.0 {
+            return;
+        }
+        let (sm, quota) = mode.billed_fractions(acct.sm, acct.quota);
+        meter.bill_slice(&acct.function, sm, quota, dur, price);
+        acct.billed_until = now;
+    }
+
+    /// A pod started holding its slice at `now` (billing begins immediately:
+    /// cold-starting pods hold — and pay for — their slice before readiness).
+    pub fn open(&mut self, pod: PodId, function: &str, sm: SmMille, quota: QuotaMille, now: f64) {
+        let prev = self.accounts.insert(
+            pod,
+            Account {
+                function: function.to_string(),
+                sm,
+                quota,
+                billed_until: now,
+            },
+        );
+        debug_assert!(prev.is_none(), "double-open of {pod:?}");
+    }
+
+    /// The pod's quota changed at `now`: bill the elapsed interval at the
+    /// **old** slice, then switch the account to the new one. This is the
+    /// boundary the seed got wrong — it re-billed here with a hard-coded
+    /// fine-grained mode regardless of the run's billing mode.
+    pub fn resize(&mut self, pod: PodId, quota: QuotaMille, now: f64) {
+        let Some(acct) = self.accounts.get_mut(&pod) else {
+            debug_assert!(false, "resize of unopened {pod:?}");
+            return;
+        };
+        Self::accrue(&mut self.meter, self.mode, self.price_per_hour, acct, now);
+        acct.quota = quota;
+    }
+
+    /// The pod released its slice at `now`: bill the final interval and
+    /// retire the account.
+    pub fn close(&mut self, pod: PodId, now: f64) {
+        let Some(mut acct) = self.accounts.remove(&pod) else {
+            debug_assert!(false, "close of unopened {pod:?}");
+            return;
+        };
+        Self::accrue(&mut self.meter, self.mode, self.price_per_hour, &mut acct, now);
+    }
+
+    /// Bill every open account forward to `now` (end-of-run / report
+    /// snapshots). Idempotent: a second settle at the same time bills zero.
+    pub fn settle(&mut self, now: f64) {
+        for acct in self.accounts.values_mut() {
+            Self::accrue(&mut self.meter, self.mode, self.price_per_hour, acct, now);
+        }
+    }
+
+    /// The accumulated meter (costs are current as of the last boundary
+    /// event; call [`Self::settle`] first for up-to-`now` totals).
+    pub fn meter(&self) -> &CostMeter {
+        &self.meter
+    }
+
+    /// Settle at `now` and hand the meter to the caller (end of run).
+    pub fn into_meter(mut self, now: f64) -> CostMeter {
+        self.settle(now);
+        self.meter
+    }
+}
+
+/// Record a **successfully applied** scaling action: the matching
+/// action-counter increment plus the ledger boundary event. This is the one
+/// `Applied` → accounting mapping, shared by sim mode
+/// (`sim::apply_action`) and real mode (`gateway`) so the two reports
+/// cannot drift. Never call this for rejected actions — rejections must
+/// neither bill nor count.
+pub fn record_applied(
+    report: &mut RunReport,
+    ledger: &mut BillingLedger,
+    cluster: &ClusterState,
+    applied: &Applied,
+    now: f64,
+) {
+    match applied {
+        Applied::QuotaSet { pod, old, new } => {
+            if new > old {
+                report.vertical_ups += 1;
+            } else {
+                report.vertical_downs += 1;
+            }
+            // Bills the elapsed interval at the *old* slice, then switches.
+            ledger.resize(*pod, *new, now);
+        }
+        Applied::PodCreated { pod, .. } => {
+            report.horizontal_ups += 1;
+            if let Some(p) = cluster.pod(*pod) {
+                ledger.open(*pod, &p.function, p.sm, p.quota, now);
+            } else {
+                debug_assert!(false, "created pod {pod:?} missing from cluster");
+            }
+        }
+        Applied::PodRemoved { pod } => {
+            report.horizontal_downs += 1;
+            ledger.close(*pod, now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PRICE: f64 = 3600.0; // $1 per slice-second: costs read as gpu-seconds
+
+    #[test]
+    fn record_applied_maps_counters_and_boundary_events() {
+        let cluster = ClusterState::new(1, 16e9);
+        let mut report = RunReport::new("t");
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        l.open(PodId(1), "f", 500, 200, 0.0);
+        let up = Applied::QuotaSet { pod: PodId(1), old: 200, new: 400 };
+        record_applied(&mut report, &mut l, &cluster, &up, 5.0);
+        assert_eq!((report.vertical_ups, report.vertical_downs), (1, 0));
+        let down = Applied::QuotaSet { pod: PodId(1), old: 400, new: 300 };
+        record_applied(&mut report, &mut l, &cluster, &down, 8.0);
+        assert_eq!((report.vertical_ups, report.vertical_downs), (1, 1));
+        record_applied(&mut report, &mut l, &cluster, &Applied::PodRemoved { pod: PodId(1) }, 10.0);
+        assert_eq!(report.horizontal_downs, 1);
+        // 5 s at 0.5×0.2, 3 s at 0.5×0.4, 2 s at 0.5×0.3.
+        let expect = 0.5 * (0.2 * 5.0 + 0.4 * 3.0 + 0.3 * 2.0);
+        assert!((l.meter().cost_of("f") - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fine_grained_bills_slice_time_integral() {
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        l.open(PodId(1), "f", 500, 400, 0.0);
+        l.resize(PodId(1), 800, 10.0); // 10 s at 0.5×0.4
+        l.close(PodId(1), 25.0); // 15 s at 0.5×0.8
+        let expect = 0.5 * 0.4 * 10.0 + 0.5 * 0.8 * 15.0;
+        assert!((l.meter().cost_of("f") - expect).abs() < 1e-9);
+        assert!((l.meter().gpu_seconds_of("f") - expect).abs() < 1e-9);
+        assert_eq!(l.open_accounts(), 0);
+    }
+
+    #[test]
+    fn whole_gpu_mode_respected_at_every_boundary() {
+        // The seed bug: resize/remove boundaries billed fine-grained even for
+        // whole-GPU runs. Each boundary must bill 1×1×dur.
+        let mut l = BillingLedger::new(BillingMode::WholeGpu, PRICE);
+        l.open(PodId(1), "f", 250, 300, 0.0);
+        l.resize(PodId(1), 900, 7.0);
+        l.settle(10.0);
+        l.close(PodId(1), 12.0);
+        assert!((l.meter().cost_of("f") - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settle_is_idempotent_and_time_monotone() {
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        l.open(PodId(3), "g", 1000, 1000, 0.0);
+        l.settle(5.0);
+        l.settle(5.0); // same instant: no double billing
+        let at5 = l.meter().cost_of("g");
+        assert!((at5 - 5.0).abs() < 1e-9);
+        l.close(PodId(3), 5.0); // close at the settled time bills zero more
+        assert!((l.meter().cost_of("g") - at5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_pods_bill_independently() {
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        l.open(PodId(1), "a", 500, 1000, 0.0);
+        l.open(PodId(2), "b", 250, 400, 2.0);
+        let meter = l.into_meter(10.0);
+        assert!((meter.cost_of("a") - 0.5 * 10.0).abs() < 1e-9);
+        assert!((meter.cost_of("b") - 0.25 * 0.4 * 8.0).abs() < 1e-9);
+    }
+}

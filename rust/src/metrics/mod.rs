@@ -11,6 +11,10 @@
 //!   fine-grained allocation, a pod is billed for `sm × quota × wall-time`;
 //!   whole-GPU platforms are billed for the full GPU (Fig. 7, $/1K requests).
 
+pub mod ledger;
+
+pub use ledger::{BillingLedger, BillingMode};
+
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 
@@ -144,10 +148,13 @@ impl CostMeter {
         self.gpu_seconds.values().sum()
     }
 
-    /// The Fig. 7 metric: $ per 1000 served requests.
+    /// The Fig. 7 metric: $ per 1000 served requests. A function that served
+    /// nothing reports `0.0` — kept finite so the JSON export round-trips
+    /// losslessly (`Json::Num(INFINITY)` serialises as `null`, which breaks
+    /// `as_f64`) and so the `expt` grid and this meter agree.
     pub fn cost_per_1k(&self, function: &str, served: usize) -> f64 {
         if served == 0 {
-            return f64::INFINITY;
+            return 0.0;
         }
         self.cost_of(function) * 1000.0 / served as f64
     }
@@ -308,7 +315,8 @@ mod tests {
         assert!((cm.cost_of("g") - 2.48).abs() < 1e-9);
         assert!((cm.total_cost() - 2.48 * 1.125).abs() < 1e-9);
         assert!((cm.cost_per_1k("g", 500) - 4.96).abs() < 1e-9);
-        assert!(cm.cost_per_1k("g", 0).is_infinite());
+        // Zero-served is defined as 0.0 (finite), matching the expt grid.
+        assert_eq!(cm.cost_per_1k("g", 0), 0.0);
         assert!(cm.gpu_seconds_of("f") > 0.0);
     }
 
@@ -335,6 +343,32 @@ mod tests {
         cm.bill_slice("f", 0.5, 0.5, 100.0, 2.48);
         cm.bill_slice("g", 1.0, 1.0, 10.0, 2.48);
         assert!((cm.total_gpu_seconds() - (0.25 * 100.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_served_cost_per_1k_roundtrips_through_json() {
+        // Regression: INFINITY serialised as JSON `null`, breaking `as_f64`
+        // round-trips; zero-served must export a readable finite number.
+        let mut r = RunReport::new("has-gpu");
+        r.function("idle").record(0.0, 0.0, Outcome::Dropped); // 0 served
+        r.costs.bill_slice("idle", 0.5, 0.5, 10.0, 2.48);
+        let j = r.to_json();
+        let f = j.get("functions").unwrap().get("idle").unwrap();
+        let v = f.get("cost_per_1k").unwrap().as_f64().unwrap();
+        assert_eq!(v, 0.0);
+        // And the textual form parses back to the same number.
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        let v2 = back
+            .get("functions")
+            .unwrap()
+            .get("idle")
+            .unwrap()
+            .get("cost_per_1k")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(v2, 0.0);
     }
 
     #[test]

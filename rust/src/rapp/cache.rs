@@ -1,0 +1,220 @@
+//! The quantized capacity cache — memoized predictor lookups on the
+//! per-mille (sm, quota) lattice, plus the monotone-quota bisection that
+//! turns the autoscaler's O(sm × quota) grid sweeps into O(sm × log quota)
+//! table lookups.
+//!
+//! Every allocation the substrate can express lives on the per-mille lattice
+//! ([`crate::vgpu::SmMille`] / [`crate::vgpu::QuotaMille`]), so predictor
+//! queries from the scaling hot path only ever hit lattice points.
+//! [`CachedPredictor`] keys on `(graph, batch, sm‰, quota‰)` and evaluates
+//! the inner predictor **at the quantized point**, so a cached run is
+//! bit-identical to an uncached one for lattice inputs (the `--jobs`
+//! byte-identical export guarantee is preserved). The cache is shared by
+//! [`crate::autoscaler::HybridAutoscaler`], the [`crate::baselines`]
+//! policies, and the simulator's dispatch path — one table per run.
+
+use super::LatencyPredictor;
+use crate::model::OpGraph;
+use crate::vgpu::QuotaMille;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Quantize a fraction to the per-mille lattice.
+fn mille(x: f64) -> u32 {
+    (x * 1000.0).round() as u32
+}
+
+/// Memoizing wrapper: latency predictions cached per
+/// `(graph, batch, sm‰, quota‰)`. Capacity queries go through the default
+/// [`LatencyPredictor::capacity`] (one full-quota latency lookup), so a whole
+/// quota sweep at fixed sm costs a single underlying predictor invocation.
+///
+/// The table is two-level (graph name → lattice point → latency) so a cache
+/// hit — the steady state of the dispatch and plan hot paths — costs one
+/// lock and two hash probes with **no allocation**; the graph-name `String`
+/// is cloned only when a graph's first lattice point is inserted.
+///
+/// Wrapping a predictor that already memoizes internally (e.g.
+/// [`super::RappPredictor`]) is harmless but redundant — this wrapper is the
+/// designated memo layer for predictors without one (the oracle / perf
+/// surface).
+pub struct CachedPredictor<'a> {
+    inner: &'a dyn LatencyPredictor,
+    #[allow(clippy::type_complexity)]
+    cache: Mutex<HashMap<String, HashMap<(u32, u32, u32), f64>>>,
+}
+
+impl<'a> CachedPredictor<'a> {
+    pub fn new(inner: &'a dyn LatencyPredictor) -> Self {
+        CachedPredictor {
+            inner,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Number of distinct lattice points evaluated so far.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().values().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl LatencyPredictor for CachedPredictor<'_> {
+    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+        let (sm_m, q_m) = (mille(sm), mille(quota));
+        let key = (batch, sm_m, q_m);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(&v) = cache.get(g.name.as_str()).and_then(|m| m.get(&key)) {
+                return v;
+            }
+        }
+        // Evaluate at the quantized point (lock released during the forward)
+        // so the cached value is a pure function of the key — sub-mille
+        // inputs alias to their lattice cell.
+        let v = self
+            .inner
+            .latency(g, batch, sm_m as f64 / 1000.0, q_m as f64 / 1000.0);
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(g.name.clone())
+            .or_default()
+            .insert(key, v);
+        v
+    }
+}
+
+/// Counting wrapper for benches/tests: how many times does a code path
+/// actually invoke the underlying predictor? (Capacity queries route through
+/// `latency`, so this counts every predictor forward.)
+pub struct CountingPredictor<P> {
+    pub inner: P,
+    count: AtomicU64,
+}
+
+impl<P> CountingPredictor<P> {
+    pub fn new(inner: P) -> Self {
+        CountingPredictor {
+            inner,
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn invocations(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+impl<P: LatencyPredictor> LatencyPredictor for CountingPredictor<P> {
+    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.latency(g, batch, sm, quota)
+    }
+}
+
+/// Smallest quota on the lattice `{step, 2·step, …, ⌊full/step⌋·step}` for
+/// which `feasible` holds, assuming the predicate is monotone in quota
+/// (false below some threshold, true above — latency is non-increasing and
+/// capacity non-decreasing in quota, so both hot-path predicates qualify).
+/// Returns `None` when even the largest lattice quota is infeasible. The
+/// returned quota is always one the predicate was actually evaluated at, so
+/// tiny non-monotonicities in the surface can shift the answer by a step but
+/// never yield an infeasible result. O(log(full/step)) predicate calls.
+pub fn min_feasible_quota(
+    step: QuotaMille,
+    full: QuotaMille,
+    mut feasible: impl FnMut(QuotaMille) -> bool,
+) -> Option<QuotaMille> {
+    let n = full / step;
+    if n == 0 || !feasible(step * n) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1u32, n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(step * mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(step * hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{zoo_graph, ZooModel};
+    use crate::rapp::OraclePredictor;
+
+    #[test]
+    fn cached_matches_uncached_on_lattice_points() {
+        let oracle = OraclePredictor::default();
+        let cached = CachedPredictor::new(&oracle);
+        let g = zoo_graph(ZooModel::ResNet50);
+        for &(sm, q) in &[(0.05, 0.1), (0.25, 0.3), (0.5, 0.5), (1.0, 1.0)] {
+            let a = cached.latency(&g, 8, sm, q);
+            let b = oracle.latency(&g, 8, sm, q);
+            assert_eq!(a, b, "sm={sm} q={q}");
+            // Second query hits the cache and returns the identical value.
+            assert_eq!(cached.latency(&g, 8, sm, q), a);
+        }
+        assert_eq!(cached.len(), 4);
+        let ca = cached.capacity(&g, 8, 0.5, 0.7);
+        let cb = oracle.capacity(&g, 8, 0.5, 0.7);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn counting_predictor_counts_underlying_forwards() {
+        let counting = CountingPredictor::new(OraclePredictor::default());
+        let cached = CachedPredictor::new(&counting);
+        let g = zoo_graph(ZooModel::MobileNetV2);
+        for _ in 0..10 {
+            cached.latency(&g, 4, 0.5, 0.6);
+        }
+        assert_eq!(counting.invocations(), 1, "9 of 10 queries must hit cache");
+        // A capacity sweep over the quota axis costs one underlying forward.
+        for q in 1..=10u32 {
+            cached.capacity(&g, 4, 0.5, q as f64 / 10.0);
+        }
+        assert_eq!(counting.invocations(), 2);
+    }
+
+    #[test]
+    fn bisection_finds_smallest_feasible_step() {
+        // Threshold predicate: feasible at q >= 380 ⇒ smallest lattice hit
+        // with step 100 is 400.
+        assert_eq!(min_feasible_quota(100, 1000, |q| q >= 380), Some(400));
+        assert_eq!(min_feasible_quota(100, 1000, |q| q >= 100), Some(100));
+        assert_eq!(min_feasible_quota(100, 1000, |q| q >= 1000), Some(1000));
+        assert_eq!(min_feasible_quota(100, 1000, |q| q > 1000), None);
+        assert_eq!(min_feasible_quota(250, 1000, |q| q >= 300), Some(500));
+        // Degenerate lattices.
+        assert_eq!(min_feasible_quota(1000, 1000, |_| true), Some(1000));
+        assert_eq!(min_feasible_quota(2000, 1000, |_| true), None);
+    }
+
+    #[test]
+    fn bisection_matches_linear_scan_on_latency_surface() {
+        // The predicate the autoscaler actually uses: predicted latency under
+        // an SLO bound. Bisection must agree with the seed's linear scan.
+        let oracle = OraclePredictor::default();
+        let g = zoo_graph(ZooModel::ResNet50);
+        for &sm in &[0.2, 0.5, 1.0] {
+            for &bound_ms in &[20.0, 60.0, 200.0] {
+                let bound = bound_ms / 1e3;
+                let feasible =
+                    |q: QuotaMille| oracle.latency(&g, 8, sm, q as f64 / 1000.0) <= bound;
+                let linear = (1..=10).map(|n| n * 100).find(|&q| feasible(q));
+                let bisect = min_feasible_quota(100, 1000, feasible);
+                assert_eq!(bisect, linear, "sm={sm} bound={bound_ms}ms");
+            }
+        }
+    }
+}

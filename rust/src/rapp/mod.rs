@@ -13,9 +13,12 @@
 //! [`OraclePredictor`] wraps the ground-truth [`PerfModel`] directly (used by
 //! tests and as the "perfectly profiled" upper bound in ablations).
 
+pub mod cache;
 pub mod dippm;
 pub mod features;
 pub mod nn;
+
+pub use cache::{min_feasible_quota, CachedPredictor, CountingPredictor};
 
 use crate::model::OpGraph;
 use crate::perf::PerfModel;

@@ -15,9 +15,9 @@ use crate::autoscaler::ScalingPolicy;
 use crate::cluster::{
     Applied, ClusterState, FunctionSpec, PodId, PodPhase, Reconfigurator, ScalingAction,
 };
-use crate::metrics::{Outcome, RunReport};
+use crate::metrics::{BillingLedger, BillingMode, Outcome, RunReport};
 use crate::perf::PerfModel;
-use crate::rapp::LatencyPredictor;
+use crate::rapp::{CachedPredictor, LatencyPredictor, OraclePredictor};
 use crate::simclock::EventQueue;
 use crate::util::prng::Pcg64;
 use crate::workload::Trace;
@@ -101,6 +101,20 @@ pub fn run_sim(
     }
     let mut recon = Reconfigurator::new(&cluster, cfg.seed);
     let mut report = RunReport::new(policy.name());
+    // One accounting engine for the whole run: every pod-second is billed
+    // exactly once, at the slice held during that second, under the run's
+    // real billing mode (see metrics::ledger).
+    let mut ledger = BillingLedger::new(
+        BillingMode::from_whole_gpu(cfg.bill_whole_gpu),
+        perf.dev.price_per_hour,
+    );
+    // Quantized capacity caches: one for the policy's predictor (the
+    // autoscaler hot path), one for the ground-truth service-time surface
+    // the dispatch path evaluates per batch. Pod slices live on the
+    // per-mille lattice, so cached results are bit-identical to uncached.
+    let predictor = CachedPredictor::new(predictor);
+    let serve_oracle = OraclePredictor { perf: perf.clone() };
+    let serve = CachedPredictor::new(&serve_oracle);
 
     let mut q: EventQueue<Ev> = EventQueue::new();
     let mut rng = Pcg64::new(cfg.seed, 77);
@@ -128,9 +142,9 @@ pub fn run_sim(
     // at idle this degenerates to "one instance with minimal resources").
     for f in functions {
         let initial_rate = trace.rps_at(&f.name, 0).max(1.0);
-        let actions = policy.plan(f, initial_rate, &cluster, predictor, 0.0);
+        let actions = policy.plan(f, initial_rate, &cluster, &predictor, 0.0);
         for a in &actions {
-            apply_action(&mut cluster, &mut recon, perf, a, 0.0, &mut report);
+            apply_action(&mut cluster, &mut recon, &mut ledger, perf, a, 0.0, &mut report);
         }
         // Bootstrap pods start warm (deployment-time, not a runtime cold start).
         let ids: Vec<PodId> = cluster.pods_of(&f.name).iter().map(|p| p.id).collect();
@@ -153,13 +167,16 @@ pub fn run_sim(
             Ev::Arrival { f_idx, req } => {
                 arrivals_this_tick[f_idx] += 1;
                 if queues[f_idx].len() >= cfg.max_queue {
+                    // Overflow drop at arrival: time-in-queue is zero, but
+                    // record it through the same now-arrival formula as every
+                    // other drop path.
                     report
                         .function(&functions[f_idx].name)
-                        .record(req.arrival, 0.0, Outcome::Dropped);
+                        .record(req.arrival, now - req.arrival, Outcome::Dropped);
                 } else {
                     queues[f_idx].push_back(req);
                     try_dispatch(
-                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
                         cfg, &mut report,
                     );
                 }
@@ -174,7 +191,7 @@ pub fn run_sim(
                         .position(|f| f.name == p.function)
                         .expect("known function");
                     try_dispatch(
-                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
                         cfg, &mut report,
                     );
                 }
@@ -187,41 +204,46 @@ pub fn run_sim(
                         .record(r.arrival, now - r.arrival, Outcome::Ok);
                 }
                 if pending_remove.remove(&pod) {
-                    bill_pod(&mut cluster, &mut report, perf, cfg, pod, now);
-                    let _ = recon.apply(
+                    // Deferred horizontal scale-down: the drained pod leaves
+                    // now; the ledger bills its final slice-seconds and the
+                    // action counts only on successful application.
+                    apply_action(
                         &mut cluster,
+                        &mut recon,
+                        &mut ledger,
                         perf,
                         &ScalingAction::RemovePod { pod },
                         now,
+                        &mut report,
                     );
                 } else {
                     try_dispatch(
-                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
                         cfg, &mut report,
                     );
                 }
             }
             Ev::Tick => {
-                // Billing first (pre-scaling slice sizes), then policy.
-                bill_all(&mut cluster, &mut report, perf, cfg, now);
                 for (f_idx, f) in functions.iter().enumerate() {
                     let observed = arrivals_this_tick[f_idx] as f64 / cfg.tick
                         + queues[f_idx].len() as f64 / cfg.backlog_horizon;
                     arrivals_this_tick[f_idx] = 0;
-                    let actions = policy.plan(f, observed, &cluster, predictor, now);
+                    let actions = policy.plan(f, observed, &cluster, &predictor, now);
                     for a in &actions {
                         match a {
                             ScalingAction::RemovePod { pod } if busy.contains(pod) => {
-                                // Defer: drain in-flight batch first.
+                                // Defer: drain in-flight batch first. Billing
+                                // and the action counter happen when the
+                                // removal actually applies.
                                 if let Some(p) = cluster.pod_mut(*pod) {
                                     p.phase = PodPhase::Draining;
                                 }
                                 pending_remove.insert(*pod);
-                                report.horizontal_downs += 1;
                             }
                             _ => {
                                 if let Some(applied) = apply_action(
-                                    &mut cluster, &mut recon, perf, a, now, &mut report,
+                                    &mut cluster, &mut recon, &mut ledger, perf, a, now,
+                                    &mut report,
                                 ) {
                                     if let Applied::PodCreated { pod, ready_at } = applied {
                                         q.push_at(ready_at, Ev::PodReady { pod });
@@ -232,17 +254,20 @@ pub fn run_sim(
                     }
                     // New capacity may unblock the queue.
                     try_dispatch(
-                        f_idx, now, &mut queues, &mut busy, &cluster, perf, functions, &mut q,
+                        f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
                         cfg, &mut report,
                     );
                 }
             }
             Ev::End => {
-                bill_all(&mut cluster, &mut report, perf, cfg, now);
-                // Drain queues: anything still waiting is a drop.
+                // Drain queues: anything still waiting is a drop, recorded
+                // with its real time-in-queue (not 0.0) so drop records are
+                // comparable across the three drop paths.
                 for (f_idx, f) in functions.iter().enumerate() {
                     while let Some(r) = queues[f_idx].pop_front() {
-                        report.function(&f.name).record(r.arrival, 0.0, Outcome::Dropped);
+                        report
+                            .function(&f.name)
+                            .record(r.arrival, now - r.arrival, Outcome::Dropped);
                     }
                 }
                 report.duration = now;
@@ -251,107 +276,32 @@ pub fn run_sim(
         }
     }
     debug_assert!(cluster.check_invariants().is_ok());
+    // Final settlement: bill every still-open pod account to end-of-run.
+    report.costs = ledger.into_meter(report.duration);
     report
 }
 
-/// Bill one pod's slice up to `now`.
-fn bill_pod(
-    cluster: &mut ClusterState,
-    report: &mut RunReport,
-    perf: &PerfModel,
-    cfg: &SimConfig,
-    pod: PodId,
-    now: f64,
-) {
-    if let Some(p) = cluster.pod_mut(pod) {
-        let dur = (now - p.billed_until).max(0.0);
-        let (sm, quota) = if cfg.bill_whole_gpu {
-            (1.0, 1.0)
-        } else {
-            (
-                crate::vgpu::sm_to_f64(p.sm),
-                crate::vgpu::quota_to_f64(p.quota),
-            )
-        };
-        let fname = p.function.clone();
-        p.billed_until = now;
-        report
-            .costs
-            .bill_slice(&fname, sm, quota, dur, perf.dev.price_per_hour);
-    }
-}
-
-fn bill_all(
-    cluster: &mut ClusterState,
-    report: &mut RunReport,
-    perf: &PerfModel,
-    cfg: &SimConfig,
-    now: f64,
-) {
-    let ids: Vec<PodId> = cluster.pods().map(|p| p.id).collect();
-    for id in ids {
-        bill_pod(cluster, report, perf, cfg, id, now);
-    }
-}
-
-/// Apply an action through the Re-configurator, with metrics accounting.
+/// Apply an action through the Re-configurator, with ledger + counter
+/// accounting **after** the mutation succeeds: rejected actions (allocation
+/// races — the policy planned on a snapshot) bill nothing and count nothing.
 fn apply_action(
     cluster: &mut ClusterState,
     recon: &mut Reconfigurator,
+    ledger: &mut BillingLedger,
     perf: &PerfModel,
     action: &ScalingAction,
     now: f64,
     report: &mut RunReport,
 ) -> Option<Applied> {
-    // Bill at the old slice before resizing.
-    match action {
-        ScalingAction::SetQuota { pod, .. } | ScalingAction::RemovePod { pod } => {
-            // billed in caller via bill_pod where needed; bill here for safety.
-            let _ = pod;
-        }
-        _ => {}
-    }
-    if let ScalingAction::SetQuota { pod, quota } = action {
-        if let Some(p) = cluster.pod(*pod) {
-            let old = p.quota;
-            let dur_pod = *pod;
-            let _ = dur_pod;
-            if *quota > old {
-                report.vertical_ups += 1;
-            } else {
-                report.vertical_downs += 1;
-            }
-        }
-    }
-    match action {
-        ScalingAction::CreatePod { .. } => report.horizontal_ups += 1,
-        ScalingAction::RemovePod { .. } => report.horizontal_downs += 1,
-        _ => {}
-    }
-    // Bill the pod at its pre-change slice before the mutation.
-    if let ScalingAction::SetQuota { pod, .. } | ScalingAction::RemovePod { pod } = action {
-        bill_pod(
-            cluster,
-            report,
-            perf,
-            &SimConfig {
-                bill_whole_gpu: false,
-                ..SimConfig::default()
-            },
-            *pod,
-            now,
-        );
-    }
-    match recon.apply(cluster, perf, action, now) {
-        Ok(applied) => Some(applied),
-        Err(_e) => {
-            // Allocation race (policy planned on a snapshot): drop the action.
-            None
-        }
-    }
+    let applied = recon.apply(cluster, perf, action, now).ok()?;
+    crate::metrics::ledger::record_applied(report, ledger, cluster, &applied, now);
+    Some(applied)
 }
 
-/// Dispatch work to every idle, ready pod of `f_idx`.
+/// Dispatch work to every idle, ready pod of `f_idx`. Service times come
+/// from `serve` — the run's quantized cache over the ground-truth latency
+/// surface (pod slices live on the per-mille lattice, so cached lookups are
+/// exact).
 #[allow(clippy::too_many_arguments)]
 fn try_dispatch(
     f_idx: usize,
@@ -359,7 +309,7 @@ fn try_dispatch(
     queues: &mut [VecDeque<Request>],
     busy: &mut BTreeSet<PodId>,
     cluster: &ClusterState,
-    perf: &PerfModel,
+    serve: &dyn LatencyPredictor,
     functions: &[FunctionSpec],
     q: &mut EventQueue<Ev>,
     cfg: &SimConfig,
@@ -395,7 +345,7 @@ fn try_dispatch(
         }
         let take = (pod.batch as usize).min(queues[f_idx].len());
         let batch: Vec<Request> = queues[f_idx].drain(..take).collect();
-        let service = perf.latency(
+        let service = serve.latency(
             &f.graph,
             take as u32,
             crate::vgpu::sm_to_f64(pod.sm),
@@ -515,6 +465,95 @@ mod tests {
         let rb = run(&mut b, false);
         assert_eq!(ra.total_served(), rb.total_served());
         assert!((ra.costs.total_cost() - rb.costs.total_cost()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejected_actions_leave_counters_and_ledger_untouched() {
+        // ISSUE acceptance: plan onto a full GPU and assert scaling counters
+        // stay flat on rejection (the seed counted before recon.apply).
+        let fns = test_functions();
+        let perf = PerfModel::default();
+        let mut cluster = ClusterState::new(1, perf.dev.mem_cap);
+        cluster.register_function(fns[0].clone());
+        let mut recon = Reconfigurator::new(&cluster, 1);
+        let mut ledger = BillingLedger::new(BillingMode::FineGrained, perf.dev.price_per_hour);
+        let mut report = RunReport::new("test");
+        let create = |sm, quota| ScalingAction::CreatePod {
+            function: fns[0].name.clone(),
+            gpu: crate::cluster::GpuId(0),
+            sm,
+            quota,
+            batch: fns[0].batch,
+            new_gpu: true,
+        };
+        // Fill the only GPU.
+        let applied = apply_action(
+            &mut cluster, &mut recon, &mut ledger, &perf, &create(1000, 1000), 0.0, &mut report,
+        );
+        assert!(applied.is_some());
+        assert_eq!(report.horizontal_ups, 1);
+        assert_eq!(ledger.open_accounts(), 1);
+        // A second pod cannot fit: the action is rejected and must not count
+        // or bill.
+        let rejected = apply_action(
+            &mut cluster, &mut recon, &mut ledger, &perf, &create(1000, 1000), 5.0, &mut report,
+        );
+        assert!(rejected.is_none());
+        assert_eq!(report.horizontal_ups, 1, "rejected create must not count");
+        assert_eq!(report.vertical_ups + report.vertical_downs, 0);
+        assert_eq!(report.horizontal_downs, 0);
+        assert_eq!(ledger.open_accounts(), 1, "rejected create must not open an account");
+        // A SetQuota on a nonexistent pod is likewise a no-op.
+        let bad = apply_action(
+            &mut cluster,
+            &mut recon,
+            &mut ledger,
+            &perf,
+            &ScalingAction::SetQuota { pod: PodId(999), quota: 500 },
+            6.0,
+            &mut report,
+        );
+        assert!(bad.is_none());
+        assert_eq!(report.vertical_ups + report.vertical_downs, 0);
+    }
+
+    #[test]
+    fn end_of_run_drops_record_real_time_in_queue() {
+        // The seed recorded latency 0.0 for end-of-run drops while timeout
+        // drops recorded the real wait. All drop paths now record actual
+        // time-in-queue.
+        let fns = test_functions();
+        let trace = {
+            let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+            TraceGen::preset(Preset::Standard, 3, 30, 400.0).generate(&names)
+        };
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        // One GPU + huge timeout + huge queue: the overloaded functions pile
+        // up a backlog that can only die as end-of-run drops.
+        let cfg = SimConfig {
+            n_gpus: 1,
+            timeout: 1e9,
+            max_queue: usize::MAX,
+            drain: 5.0,
+            ..SimConfig::default()
+        };
+        let mut ks = KServePolicy::default();
+        let r = run_sim(&mut ks, &fns, &trace, &pred, &perf, &cfg);
+        let dropped: Vec<f64> = r
+            .functions
+            .values()
+            .flat_map(|m| m.records.iter())
+            .filter(|rec| rec.outcome == Outcome::Dropped)
+            .map(|rec| rec.latency)
+            .collect();
+        assert!(!dropped.is_empty(), "overload run must drop requests at end-of-run");
+        assert!(
+            dropped.iter().all(|&l| l > 0.0),
+            "every end-of-run drop must carry its real wait"
+        );
+        // The waits are bounded by the run duration.
+        assert!(dropped.iter().all(|&l| l <= r.duration));
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Billing-parity property test (ISSUE acceptance, CI-run via `cargo test`):
+//! for any random scaling-action sequence applied through the
+//! Re-configurator, the [`BillingLedger`] total equals the analytic
+//! slice-time integral in **both** billing modes —
+//!
+//! * fine-grained: Σ over held intervals of `sm × quota × dur`;
+//! * whole-GPU:    Σ over held intervals of `1 × 1 × dur`
+//!   (the analytic whole-GPU cost a KServe run would pay);
+//!
+//! and `bill_whole_gpu` is respected at resize/remove boundaries (the seed's
+//! `apply_action` path hard-coded fine-grained there).
+
+use has_gpu::cluster::{
+    Applied, ClusterState, FunctionSpec, GpuId, PodId, Reconfigurator, ScalingAction,
+};
+use has_gpu::metrics::{BillingLedger, BillingMode};
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::prop_assert;
+use has_gpu::util::proptest::{run_prop, PropConfig};
+use has_gpu::vgpu::{quota_to_f64, sm_to_f64, QUOTA_STEP, SM_STEP};
+
+/// $/h chosen so that 1 slice-second == $1: ledger costs read directly as
+/// the analytic integral.
+const PRICE: f64 = 3600.0;
+
+#[test]
+fn ledger_total_matches_analytic_slice_time_integral() {
+    run_prop(
+        "billing-parity",
+        PropConfig {
+            cases: 96,
+            max_size: 48,
+            ..PropConfig::default()
+        },
+        |rng, size| {
+            let spec = FunctionSpec {
+                name: "mobilenetv2".into(),
+                graph: zoo_graph(ZooModel::MobileNetV2),
+                slo: 0.1,
+                batch: 1,
+                artifact: None,
+            };
+            let perf = PerfModel::default();
+            let mut cluster = ClusterState::new(2, perf.dev.mem_cap);
+            cluster.register_function(spec.clone());
+            let mut recon = Reconfigurator::new(&cluster, 7);
+            let mut fine = BillingLedger::new(BillingMode::FineGrained, PRICE);
+            let mut whole = BillingLedger::new(BillingMode::WholeGpu, PRICE);
+
+            // Live pods and the independent analytic accumulators.
+            let mut live: Vec<(PodId, u32, u32)> = Vec::new(); // (pod, sm‰, q‰)
+            let mut fine_ref = 0.0f64;
+            let mut whole_ref = 0.0f64;
+            let mut now = 0.0f64;
+
+            for step in 0..size {
+                // Advance virtual time; every live pod accrues slice-time.
+                let dt = rng.next_f64() * 3.0;
+                for &(_, sm, q) in &live {
+                    fine_ref += sm_to_f64(sm) * quota_to_f64(q) * dt;
+                    whole_ref += dt;
+                }
+                now += dt;
+
+                // One random scaling action; Err (alignment/capacity races)
+                // must leave both ledgers untouched.
+                let action = match rng.next_below(3) {
+                    0 => ScalingAction::CreatePod {
+                        function: spec.name.clone(),
+                        gpu: GpuId(rng.next_below(2) as usize),
+                        sm: SM_STEP * (1 + rng.next_below(8) as u32),
+                        quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
+                        batch: spec.batch,
+                        new_gpu: false,
+                    },
+                    1 if !live.is_empty() => {
+                        let (pod, _, _) = live[rng.next_below(live.len() as u64) as usize];
+                        ScalingAction::SetQuota {
+                            pod,
+                            quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
+                        }
+                    }
+                    _ if !live.is_empty() => {
+                        let (pod, _, _) = live[rng.next_below(live.len() as u64) as usize];
+                        ScalingAction::RemovePod { pod }
+                    }
+                    _ => continue,
+                };
+                match recon.apply(&mut cluster, &perf, &action, now) {
+                    Ok(Applied::PodCreated { pod, .. }) => {
+                        let p = cluster.pod(pod).expect("created");
+                        fine.open(pod, &p.function, p.sm, p.quota, now);
+                        whole.open(pod, &p.function, p.sm, p.quota, now);
+                        live.push((pod, p.sm, p.quota));
+                    }
+                    Ok(Applied::QuotaSet { pod, new, .. }) => {
+                        fine.resize(pod, new, now);
+                        whole.resize(pod, new, now);
+                        let entry = live.iter_mut().find(|(id, _, _)| *id == pod).unwrap();
+                        entry.2 = new;
+                    }
+                    Ok(Applied::PodRemoved { pod }) => {
+                        fine.close(pod, now);
+                        whole.close(pod, now);
+                        live.retain(|(id, _, _)| *id != pod);
+                    }
+                    Err(_) => {}
+                }
+                prop_assert!(
+                    fine.open_accounts() == live.len(),
+                    "step {step}: ledger tracks {} accounts, {} pods live",
+                    fine.open_accounts(),
+                    live.len()
+                );
+            }
+
+            // Final settlement, then compare against the analytic integrals.
+            let t_end = now + rng.next_f64() * 2.0;
+            for &(_, sm, q) in &live {
+                fine_ref += sm_to_f64(sm) * quota_to_f64(q) * (t_end - now);
+                whole_ref += t_end - now;
+            }
+            let fine_total = fine.into_meter(t_end).total_cost();
+            let whole_total = whole.into_meter(t_end).total_cost();
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs()));
+            prop_assert!(
+                close(fine_total, fine_ref),
+                "fine-grained: ledger {fine_total} vs analytic {fine_ref}"
+            );
+            prop_assert!(
+                close(whole_total, whole_ref),
+                "whole-GPU: ledger {whole_total} vs analytic {whole_ref}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn whole_gpu_mode_bills_full_device_through_resize_boundaries() {
+    // Direct pin of the seed bug: a whole-GPU run whose pod is resized
+    // mid-run must bill 1×1 for every second, not the fine-grained slice
+    // before the boundary.
+    let spec = FunctionSpec {
+        name: "mobilenetv2".into(),
+        graph: zoo_graph(ZooModel::MobileNetV2),
+        slo: 0.1,
+        batch: 1,
+        artifact: None,
+    };
+    let perf = PerfModel::default();
+    let mut cluster = ClusterState::new(1, perf.dev.mem_cap);
+    cluster.register_function(spec.clone());
+    let mut recon = Reconfigurator::new(&cluster, 3);
+    let mut ledger = BillingLedger::new(BillingMode::WholeGpu, PRICE);
+
+    let Applied::PodCreated { pod, .. } = recon
+        .apply(
+            &mut cluster,
+            &perf,
+            &ScalingAction::CreatePod {
+                function: spec.name.clone(),
+                gpu: GpuId(0),
+                sm: 250,
+                quota: 200,
+                batch: 1,
+                new_gpu: true,
+            },
+            0.0,
+        )
+        .unwrap()
+    else {
+        panic!("create failed")
+    };
+    ledger.open(pod, &spec.name, 250, 200, 0.0);
+    recon
+        .apply(&mut cluster, &perf, &ScalingAction::SetQuota { pod, quota: 800 }, 10.0)
+        .unwrap();
+    ledger.resize(pod, 800, 10.0);
+    recon
+        .apply(&mut cluster, &perf, &ScalingAction::RemovePod { pod }, 25.0)
+        .unwrap();
+    ledger.close(pod, 25.0);
+    let total = ledger.meter().total_cost();
+    assert!(
+        (total - 25.0).abs() < 1e-9,
+        "whole-GPU must bill 25 GPU-seconds, got {total}"
+    );
+}

@@ -90,7 +90,8 @@ fn fig7_cost_ratios_match_paper_shape() {
         for (f, m) in &den.functions {
             let c_den = den.costs.cost_per_1k(f, m.served());
             let c_num = num.costs.cost_per_1k(f, num.functions[f].served());
-            if c_den.is_finite() && c_num > 0.0 {
+            // Zero-served functions report 0.0 (not INFINITY): skip them.
+            if c_den > 0.0 && c_num > 0.0 {
                 acc += c_num / c_den;
                 n += 1;
             }
