@@ -10,15 +10,18 @@ use has_gpu::cluster::reconfigurator::place_pod;
 use has_gpu::cluster::{ClusterState, GpuId, Reconfigurator};
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
-use has_gpu::rapp::features::{extract, FeatureMode};
+use has_gpu::rapp::features::{extract, FeatureMode, FeaturePlan};
 use has_gpu::rapp::{
     CachedPredictor, CountingPredictor, LatencyPredictor, OraclePredictor, RappPredictor,
+    RappWeights,
 };
+use has_gpu::sim::{run_sim, SimConfig};
 use has_gpu::simclock::EventQueue;
-use has_gpu::util::bench::{black_box, Harness};
+use has_gpu::util::bench::{black_box, Harness, BENCH_HOTPATH_SCHEMA};
 use has_gpu::vgpu::tokens::TokenScheduler;
 use has_gpu::vgpu::ClientId;
-use std::path::PathBuf;
+use has_gpu::workload::Preset;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let mut h = Harness::new("scheduler_hotpath");
@@ -37,12 +40,84 @@ fn main() {
         black_box(pm.latency(&g, 8, 0.5, 0.6));
     });
 
-    // Feature extraction (full RaPP features incl. 11 probe evaluations).
+    // One-shot feature extraction (full RaPP features incl. the 11 probe
+    // evaluations) vs. the cached split: plan build once, dynamic fill per
+    // query.
     h.bench("rapp_feature_extract", || {
         black_box(extract(&g, 8, 0.5, 0.6, &pm, FeatureMode::Full));
     });
+    h.bench("rapp_feature_plan_build", || {
+        black_box(FeaturePlan::new(&g, 8, &pm, FeatureMode::Full));
+    });
+    {
+        let plan = FeaturePlan::new(&g, 8, &pm, FeatureMode::Full);
+        let mut gf = Vec::new();
+        let mut qi = 0u32;
+        h.bench("rapp_feature_fill_dynamic", || {
+            qi = qi % 997 + 1;
+            plan.fill_graph_feats(0.5, qi as f64 / 1000.0, &mut gf);
+            black_box(gf.last().copied());
+        });
+    }
 
-    // Native RaPP forward (uncached + cached).
+    // Native RaPP forward: plan-cached miss (the autoscaler's cache-miss
+    // cost) vs. the pre-FeaturePlan cost of re-deriving the plan per query,
+    // plus the row-batched lattice pass. Deterministic random weights so the
+    // bench runs without trained artifacts.
+    {
+        let rapp = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 32, 5),
+            PerfModel::default(),
+        );
+        let mut qi = 0u32;
+        let miss = h
+            .bench("rapp_forward_plan_cached_miss", || {
+                // Non-repeating sub-mille quotas: every call misses RaPP's
+                // memo but hits the (graph, batch) plan.
+                qi = qi % 9973 + 1;
+                black_box(rapp.forward(&g, 8, 0.5, qi as f64 / 10007.0));
+            })
+            .median;
+        let mut qj = 0u32;
+        let replan = h
+            .bench("rapp_forward_replan_each_query", || {
+                qj = qj % 9973 + 1;
+                rapp.reset_plan_cache();
+                black_box(rapp.forward(&g, 8, 0.5, qj as f64 / 10007.0));
+            })
+            .median;
+        let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        let mut out = Vec::new();
+        h.bench_elems("rapp_forward_batch_lattice10", Some(10), || {
+            rapp.forward_batch(&g, 8, 0.5, &quotas, &mut out);
+            black_box(out.last().copied());
+        });
+        println!(
+            "cached-miss forward speedup vs per-query replan: {:.1}x",
+            replan.as_secs_f64() / miss.as_secs_f64()
+        );
+        // ISSUE acceptance: ≥3x. Enforced in full runs; smoke mode (200 ms
+        // windows on shared CI runners) only warns, so timing noise never
+        // gates a merge — the non-blocking CI budget step reads the JSON.
+        let ok = replan.as_secs_f64() >= 3.0 * miss.as_secs_f64();
+        if has_gpu::util::bench::fast_mode() {
+            if !ok {
+                println!(
+                    "WARNING: cached-miss ratio below 3x in smoke mode \
+                     (replan {replan:?} vs miss {miss:?})"
+                );
+            }
+        } else {
+            assert!(
+                ok,
+                "FeaturePlan must make cached-miss forwards ≥3x faster than \
+                 re-deriving the plan per query: replan {replan:?} vs miss {miss:?}"
+            );
+        }
+    }
+
+    // Trained-artifact forwards when available (kept for trajectory
+    // comparability with earlier BENCH entries).
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("rapp_weights.json").exists() {
         let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone()).unwrap();
@@ -150,6 +225,48 @@ fn main() {
     h.bench("predictor_capacity_dyn", || {
         black_box(pred_dyn.capacity(&g, 8, 0.5, 0.6));
     });
+
+    // End-to-end sim event rate on the standard preset: requests processed
+    // per second of wall clock through the streaming event core (arrival
+    // cursor + pooled batch buffers). The queue's high-water mark is printed
+    // so the O(in-flight) claim is visible in bench logs.
+    {
+        let seconds = if has_gpu::util::bench::fast_mode() { 60 } else { 180 };
+        let fns = functions();
+        let trace = common::trace(&fns, Preset::Standard, seconds);
+        let perf = PerfModel::default();
+        let requests: u64 = fns
+            .iter()
+            .map(|f| trace.total_requests(&f.name) as u64)
+            .sum();
+        let mut peak = 0usize;
+        h.bench_elems("sim_standard_requests", Some(requests), || {
+            let mut policy = HybridAutoscaler::new(HybridConfig::default());
+            let pred = OraclePredictor::default();
+            let r = run_sim(
+                &mut policy,
+                &fns,
+                &trace,
+                &pred,
+                &perf,
+                &SimConfig::for_experiment(10, 11, false),
+            );
+            peak = r.event_queue_peak;
+            black_box(r.total_served());
+        });
+        println!(
+            "sim event-queue high water: {peak} (trace carries {requests} requests)"
+        );
+    }
+
+    // First BENCH_hotpath.json trajectory point (schema
+    // has-gpu/bench-hotpath/v1); CI uploads it as an artifact. `cargo bench`
+    // runs with the package dir as cwd, so HAS_BENCH_OUT lets CI pin an
+    // absolute destination.
+    let out = std::env::var("HAS_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let out = Path::new(&out);
+    h.write_json(out, BENCH_HOTPATH_SCHEMA).expect("write BENCH_hotpath.json");
+    println!("wrote {}", out.display());
 
     println!("scheduler_hotpath done");
 }

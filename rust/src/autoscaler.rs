@@ -156,6 +156,11 @@ pub struct HybridAutoscaler {
     pub cfg: HybridConfig,
     filters: BTreeMap<String, KalmanFilter>,
     last_scale_down: BTreeMap<String, f64>,
+    /// Reusable quota-lattice sweep buffers (quotas, latencies) — the
+    /// candidate sweeps evaluate a whole lattice level per predictor pass
+    /// without allocating per tick.
+    q_buf: Vec<f64>,
+    lat_buf: Vec<f64>,
 }
 
 impl HybridAutoscaler {
@@ -164,7 +169,30 @@ impl HybridAutoscaler {
             cfg,
             filters: BTreeMap::new(),
             last_scale_down: BTreeMap::new(),
+            q_buf: Vec::new(),
+            lat_buf: Vec::new(),
         }
+    }
+
+    /// Evaluate the whole quota lattice `{step, 2·step, …}` for one
+    /// (function, sm) in a single [`LatencyPredictor::latency_batch`] pass
+    /// (one matmul-shaped sweep for plan-cached predictors, one table probe
+    /// per level for the run cache), filling `self.lat_buf` so the
+    /// bisections below read prewarmed values. The decision procedure stays
+    /// [`min_feasible_quota`] over exactly these values, so answers are
+    /// identical to per-point queries even off the monotone ideal.
+    fn fill_latency_lattice(
+        &mut self,
+        f: &FunctionSpec,
+        smf: f64,
+        predictor: &dyn LatencyPredictor,
+    ) {
+        let step = self.cfg.quota_step.max(1);
+        let n = (QUOTA_FULL / step) as usize;
+        self.q_buf.clear();
+        self.q_buf
+            .extend((1..=n).map(|i| crate::vgpu::quota_to_f64(step * i as u32)));
+        predictor.latency_batch(&f.graph, f.batch, smf, &self.q_buf, &mut self.lat_buf);
     }
 
     /// Pod capacity C_{P_i} = RaPP(f, b_i, s_i, q_i) (items/s).
@@ -184,23 +212,24 @@ impl HybridAutoscaler {
     /// Smallest quota (in steps) at which a pod of partition `sm` meets the
     /// function SLO — the floor for vertical scale-down and the starting
     /// point for new-pod quota sizing. Falls back to full quota when the
-    /// partition cannot meet the SLO at all. Latency is monotone
-    /// non-increasing in quota, so this is a bisection over the quota
-    /// lattice rather than the seed's linear sweep: O(log) predictor
-    /// lookups, all served from the run's capacity cache.
+    /// partition cannot meet the SLO at all. The whole lattice level is
+    /// evaluated in one batched predictor pass, then the monotone-quota
+    /// bisection runs over the prewarmed values — one row-batched forward
+    /// per (function, sm) instead of O(log) scattered lookups.
     fn min_slo_quota(
-        &self,
+        &mut self,
         f: &FunctionSpec,
         sm: SmMille,
         predictor: &dyn LatencyPredictor,
         margin: f64,
     ) -> QuotaMille {
         let smf = crate::vgpu::sm_to_f64(sm);
-        min_feasible_quota(self.cfg.quota_step, QUOTA_FULL, |q| {
-            predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q))
-                <= f.slo * margin
-        })
-        .unwrap_or(QUOTA_FULL)
+        self.fill_latency_lattice(f, smf, predictor);
+        let step = self.cfg.quota_step.max(1);
+        let bound = f.slo * margin;
+        let lat = &self.lat_buf;
+        min_feasible_quota(step, QUOTA_FULL, |q| lat[(q / step - 1) as usize] <= bound)
+            .unwrap_or(QUOTA_FULL)
     }
 
     /// The most efficient (sm, quota) for a required rate ΔR on an empty GPU
@@ -210,20 +239,25 @@ impl HybridAutoscaler {
     ///
     /// Capacity is monotone non-decreasing and latency monotone
     /// non-increasing in quota, so per SM class the cheapest feasible quota
-    /// is `max(min quota covering ΔR, min SLO-feasible quota)` — two
-    /// bisections instead of the seed's full O(sm × quota) grid sweep.
+    /// is `max(min quota covering ΔR, min SLO-feasible quota)` — one batched
+    /// lattice pass + two bisections instead of the seed's full
+    /// O(sm × quota) grid sweep.
     fn most_efficient_slice(
-        &self,
+        &mut self,
         f: &FunctionSpec,
         delta_r: f64,
         predictor: &dyn LatencyPredictor,
     ) -> (SmMille, QuotaMille) {
-        let step = self.cfg.quota_step;
+        let step = self.cfg.quota_step.max(1);
         let mut best: Option<(f64, SmMille, QuotaMille)> = None; // (cost, sm, q)
         let mut fallback: (f64, SmMille, QuotaMille) = (0.0, SM_FULL, QUOTA_FULL);
         let mut sm = SM_STEP * 2; // 10% minimum sensible partition
         while sm <= SM_FULL {
             let smf = crate::vgpu::sm_to_f64(sm);
+            // One row-batched pass evaluates this SM class's whole quota
+            // lattice; the bisections below read the prewarmed values.
+            self.fill_latency_lattice(f, smf, predictor);
+            let lat = &self.lat_buf;
             let cap_full =
                 predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(QUOTA_FULL));
             if cap_full > fallback.0 {
@@ -232,9 +266,9 @@ impl HybridAutoscaler {
             let q_cap = min_feasible_quota(step, QUOTA_FULL, |q| {
                 predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q)) >= delta_r
             });
+            let bound = f.slo * self.cfg.slo_margin;
             let q_slo = min_feasible_quota(step, QUOTA_FULL, |q| {
-                predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q))
-                    <= f.slo * self.cfg.slo_margin
+                lat[(q / step - 1) as usize] <= bound
             });
             // Prefer slices that meet ΔR + SLO while keeping vertical runway
             // (quota ≤ headroom cap) — larger partitions at moderate quota
@@ -749,10 +783,31 @@ mod tests {
     }
 
     #[test]
+    fn lattice_prewarmed_floor_matches_pointwise_bisection() {
+        // min_slo_quota now evaluates the lattice in one batched pass and
+        // bisects the prewarmed values; the answer must equal the seed's
+        // per-point bisection for any margin and SM class.
+        let (_c, _r, _pm, spec) = setup();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        for &sm in &[200u32, 500, 1000] {
+            let smf = crate::vgpu::sm_to_f64(sm);
+            for &margin in &[0.75, 1.0] {
+                let want = min_feasible_quota(hs.cfg.quota_step, QUOTA_FULL, |q| {
+                    pred.latency(&spec.graph, spec.batch, smf, crate::vgpu::quota_to_f64(q))
+                        <= spec.slo * margin
+                })
+                .unwrap_or(QUOTA_FULL);
+                assert_eq!(hs.min_slo_quota(&spec, sm, &pred, margin), want, "sm={sm}");
+            }
+        }
+    }
+
+    #[test]
     fn most_efficient_slice_meets_demand_cheaply() {
         let (_c, _r, _pm, spec) = setup();
         let pred = OraclePredictor::default();
-        let hs = HybridAutoscaler::new(HybridConfig::default());
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
         let small = hs.most_efficient_slice(&spec, 5.0, &pred);
         let big = hs.most_efficient_slice(&spec, 300.0, &pred);
         let cost = |s: (SmMille, QuotaMille)| (s.0 as u64) * (s.1 as u64);

@@ -173,6 +173,11 @@ pub struct RunReport {
     pub vertical_downs: usize,
     pub horizontal_ups: usize,
     pub horizontal_downs: usize,
+    /// Deepest the simulator's event queue ever got (sim-mode runs only).
+    /// With streaming arrival cursors this is O(duration/tick + in-flight)
+    /// — pre-pushed ticks dominate — instead of the seed's O(total
+    /// requests); `0` for real-mode runs, which have no event queue.
+    pub event_queue_peak: usize,
 }
 
 impl RunReport {
@@ -270,6 +275,7 @@ impl RunReport {
             ("vertical_downs", Json::Num(self.vertical_downs as f64)),
             ("horizontal_ups", Json::Num(self.horizontal_ups as f64)),
             ("horizontal_downs", Json::Num(self.horizontal_downs as f64)),
+            ("event_queue_peak", Json::Num(self.event_queue_peak as f64)),
         ])
     }
 }

@@ -286,6 +286,77 @@ impl OpGraph {
         g.validate()?;
         Ok(g)
     }
+
+    /// Symmetrised in-neighbour adjacency (self-loops included) in CSR form —
+    /// the structure every GAT pass walks. Built once per model (the zoo
+    /// memoises it; [`crate::rapp::features::FeaturePlan`] carries it) instead
+    /// of re-allocating nested `Vec<Vec<usize>>` lists per forward.
+    pub fn adjacency(&self) -> Adjacency {
+        Adjacency::from_edges(self.nodes.len(), &self.edges)
+    }
+}
+
+/// CSR in-neighbour lists over a symmetrised edge set with self-loops.
+///
+/// Per-node neighbour **order is part of the numeric contract**: attention
+/// weights are accumulated in list order, and f32 summation order must match
+/// the historical nested-list construction exactly (self-loop first, then
+/// partners appended in edge-declaration order, `dst`-side before `src`-side
+/// for each directed edge).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Adjacency {
+    n: usize,
+    offsets: Vec<u32>,
+    nbrs: Vec<u32>,
+}
+
+impl Adjacency {
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        // Pass 1: degree = 1 (self-loop) + symmetrised incidences.
+        let mut deg = vec![1u32; n];
+        for &(s, d) in edges {
+            deg[d] += 1;
+            deg[s] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        offsets.push(0);
+        for &d in &deg {
+            acc += d;
+            offsets.push(acc);
+        }
+        // Pass 2: fill preserving the legacy append order.
+        let mut nbrs = vec![0u32; acc as usize];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for (i, c) in cursor.iter_mut().enumerate() {
+            nbrs[*c as usize] = i as u32;
+            *c += 1;
+        }
+        for &(s, d) in edges {
+            nbrs[cursor[d] as usize] = s as u32;
+            cursor[d] += 1;
+            nbrs[cursor[s] as usize] = d as u32;
+            cursor[s] += 1;
+        }
+        Adjacency { n, offsets, nbrs }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// In-neighbours of node `i` (self-loop first).
+    pub fn neighbours(&self, i: usize) -> &[u32] {
+        &self.nbrs[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Largest in-degree — sizes the attention-weight scratch buffer.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n)
+            .map(|i| (self.offsets[i + 1] - self.offsets[i]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -338,5 +409,42 @@ mod tests {
         assert!(g.memory_bytes(32) > g.memory_bytes(1));
         // resnet152 fits a 16GB V100 at batch 32 (it does in practice).
         assert!(g.memory_bytes(32) < 16e9);
+    }
+
+    #[test]
+    fn adjacency_matches_nested_list_construction() {
+        // The CSR fill must reproduce the legacy nested-list neighbour order
+        // exactly (self-loop first, then symmetrised appends in edge order) —
+        // attention sums in list order, so order is a numeric contract.
+        let reference = |n: usize, edges: &[(usize, usize)]| -> Vec<Vec<usize>> {
+            let mut nbrs: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+            for &(s, d) in edges {
+                nbrs[d].push(s);
+                nbrs[s].push(d);
+            }
+            nbrs
+        };
+        for g in [
+            zoo::zoo_graph(zoo::ZooModel::ResNet50),
+            zoo::zoo_graph(zoo::ZooModel::BertTiny),
+            zoo::zoo_graph(zoo::ZooModel::DlrmSmall),
+        ] {
+            let adj = g.adjacency();
+            let want = reference(g.nodes.len(), &g.edges);
+            assert_eq!(adj.n(), g.nodes.len());
+            for (i, row) in want.iter().enumerate() {
+                let got: Vec<usize> = adj.neighbours(i).iter().map(|&x| x as usize).collect();
+                assert_eq!(&got, row, "node {i} of {}", g.name);
+            }
+            assert_eq!(adj.max_degree(), want.iter().map(|r| r.len()).max().unwrap());
+        }
+    }
+
+    #[test]
+    fn adjacency_isolated_nodes_have_self_loops() {
+        let adj = Adjacency::from_edges(3, &[(0, 2)]);
+        assert_eq!(adj.neighbours(0), &[0, 2]);
+        assert_eq!(adj.neighbours(1), &[1]);
+        assert_eq!(adj.neighbours(2), &[2, 0]);
     }
 }

@@ -68,6 +68,24 @@ pub fn zoo_graph(model: ZooModel) -> OpGraph {
     }
 }
 
+/// The memoised GAT adjacency of a zoo model — computed once per model per
+/// process and shared by reference count. Graph topology is deterministic
+/// per [`ZooModel`], so [`crate::rapp::features::FeaturePlan`] (and any
+/// other hot path) clones this `Arc` instead of re-deriving neighbour lists
+/// per (graph, batch) plan.
+pub fn zoo_adjacency(model: ZooModel) -> std::sync::Arc<crate::model::Adjacency> {
+    use std::sync::{Arc, OnceLock};
+    static CACHE: OnceLock<Vec<Arc<crate::model::Adjacency>>> = OnceLock::new();
+    let all = CACHE.get_or_init(|| {
+        ALL_ZOO
+            .iter()
+            .map(|&m| Arc::new(zoo_graph(m).adjacency()))
+            .collect()
+    });
+    let idx = ALL_ZOO.iter().position(|&m| m == model).expect("zoo model");
+    Arc::clone(&all[idx])
+}
+
 /// ResNet-d for d ∈ {50, 152}: bottleneck stages at 224² input.
 fn resnet(depth: u32) -> OpGraph {
     // blocks per stage for the two depths we serve.
@@ -325,6 +343,16 @@ mod tests {
             g.validate().unwrap();
             assert!(g.nodes.len() <= super::super::builders::MAX_NODES);
             assert_eq!(ZooModel::from_name(g.name.as_str()), Some(m));
+        }
+    }
+
+    #[test]
+    fn zoo_adjacency_memoises_per_model() {
+        for m in ALL_ZOO {
+            let adj = zoo_adjacency(m);
+            assert_eq!(*adj, zoo_graph(m).adjacency(), "{m:?}");
+            // Same shared instance on repeat lookups.
+            assert!(std::sync::Arc::ptr_eq(&adj, &zoo_adjacency(m)));
         }
     }
 

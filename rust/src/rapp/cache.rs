@@ -87,6 +87,44 @@ impl LatencyPredictor for CachedPredictor<'_> {
             .insert(key, v);
         v
     }
+
+    /// Sweep-aware lookup: hits come from the lattice table, misses are
+    /// forwarded to the inner predictor **as one batch** (at the quantized
+    /// points, preserving the pure-function-of-the-key invariant). The steady
+    /// state — every point cached — allocates nothing.
+    fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
+        let sm_m = mille(sm);
+        out.clear();
+        out.resize(quotas.len(), f64::NAN);
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_q: Vec<f64> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            let table = cache.get(g.name.as_str());
+            for (i, &q) in quotas.iter().enumerate() {
+                let key = (batch, sm_m, mille(q));
+                match table.and_then(|m| m.get(&key)) {
+                    Some(&v) => out[i] = v,
+                    None => {
+                        miss_idx.push(i);
+                        miss_q.push(mille(q) as f64 / 1000.0);
+                    }
+                }
+            }
+        }
+        if miss_idx.is_empty() {
+            return;
+        }
+        let mut fresh = Vec::new();
+        self.inner
+            .latency_batch(g, batch, sm_m as f64 / 1000.0, &miss_q, &mut fresh);
+        let mut cache = self.cache.lock().unwrap();
+        let table = cache.entry(g.name.clone()).or_default();
+        for ((&i, &q), &v) in miss_idx.iter().zip(&miss_q).zip(&fresh) {
+            table.insert((batch, sm_m, mille(q)), v);
+            out[i] = v;
+        }
+    }
 }
 
 /// Counting wrapper for benches/tests: how many times does a code path
@@ -198,6 +236,32 @@ mod tests {
         // Degenerate lattices.
         assert_eq!(min_feasible_quota(1000, 1000, |_| true), Some(1000));
         assert_eq!(min_feasible_quota(2000, 1000, |_| true), None);
+    }
+
+    #[test]
+    fn latency_batch_agrees_with_scalar_and_batches_misses() {
+        let counting = CountingPredictor::new(OraclePredictor::default());
+        let cached = CachedPredictor::new(&counting);
+        let g = zoo_graph(ZooModel::ResNet50);
+        let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        // Prime one point through the scalar path.
+        let primed = cached.latency(&g, 8, 0.5, 0.4);
+        let mut out = Vec::new();
+        cached.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        assert_eq!(counting.invocations(), 10, "9 misses + 1 primed forward");
+        assert_eq!(out[3], primed);
+        let oracle = OraclePredictor::default();
+        for (&q, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, oracle.latency(&g, 8, 0.5, q), "q={q}");
+            assert_eq!(v, cached.latency(&g, 8, 0.5, q), "q={q}");
+        }
+        // A second sweep is all hits: no further underlying forwards.
+        cached.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        assert_eq!(counting.invocations(), 10);
+        // Sub-mille inputs alias to their lattice cell, batched or scalar.
+        cached.latency_batch(&g, 8, 0.5, &[0.4004], &mut out);
+        assert_eq!(out[0], primed);
+        assert_eq!(counting.invocations(), 10);
     }
 
     #[test]

@@ -19,9 +19,24 @@
 //! column but keeps the query configuration appended to the static features —
 //! the paper's "for comparison, we incorporated this information into its
 //! static features same as RaPP and retrained the model".
+//!
+//! ## FeaturePlan: the cached split
+//!
+//! Of the whole feature tensor, only **three scalars depend on (sm, quota)**:
+//! the two query-configuration columns and the derived anchor. Everything
+//! else — op rows (including all 6 SM runtime-prior probes), graph statics,
+//! and the 11 graph-level probe evaluations — is a pure function of
+//! (graph, batch). [`FeaturePlan`] computes that expensive part **once** and
+//! [`FeaturePlan::fill_graph_feats`] produces any (sm, quota) query with a
+//! memcpy plus the anchor replay: the predictor's cached-miss cost drops from
+//! a full re-extraction (11 perf-model probes + GAT input rebuild) to a
+//! dynamic fill. [`extract`] is the same computation packaged per query, so
+//! plan-based and fresh extraction are bit-identical by construction.
 
-use crate::model::{OpGraph, OpKind, NUM_OP_KINDS};
+use crate::model::zoo::{zoo_adjacency, ZooModel};
+use crate::model::{Adjacency, OpGraph, OpKind, NUM_OP_KINDS};
 use crate::perf::PerfModel;
+use std::sync::Arc;
 
 /// Full RaPP features vs. the static-only DIPPM ablation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +58,14 @@ pub const F_G_STATIC: usize = 10;
 /// see [`anchor`]).
 pub const F_G_RUNTIME: usize =
     PerfModel::PROFILE_QUOTAS.len() + PerfModel::PROFILE_SMS.len() + 1; // 12
+
+/// Graph-feature column holding the query SM fraction.
+pub const G_COL_SM: usize = 8;
+/// Graph-feature column holding the query quota fraction.
+pub const G_COL_QUOTA: usize = 9;
+/// Graph-feature column holding the anchor (Full mode only).
+pub const G_COL_ANCHOR: usize =
+    F_G_STATIC + PerfModel::PROFILE_QUOTAS.len() + PerfModel::PROFILE_SMS.len(); // 21
 
 impl FeatureMode {
     pub fn f_op(self) -> usize {
@@ -78,7 +101,171 @@ pub struct Features {
     pub edges: Vec<(usize, usize)>,
 }
 
-/// Extract features for (graph, batch, sm, quota).
+/// The cached, (sm, quota)-independent part of feature extraction for one
+/// (graph, batch, mode): raw op rows, the static + probe graph columns, and
+/// the GAT adjacency. Build once, then [`FeaturePlan::fill_graph_feats`] per
+/// query.
+#[derive(Clone, Debug)]
+pub struct FeaturePlan {
+    pub mode: FeatureMode,
+    pub batch: u32,
+    n_nodes: usize,
+    f_op: usize,
+    /// Raw (unstandardised) op features, row-major `[n_nodes × f_op]`.
+    op_feats: Vec<f32>,
+    /// Full-length graph-feature template; the dynamic columns
+    /// ([`G_COL_SM`], [`G_COL_QUOTA`], [`G_COL_ANCHOR`]) hold placeholders.
+    graph_template: Vec<f32>,
+    /// Kernel-launch counts per node (drives the anchor's window replay).
+    kernels: Vec<u32>,
+    /// Directed edge list (kept for the [`Features`] contract / HLO path).
+    pub edges: Vec<(usize, usize)>,
+    /// Symmetrised in-neighbour CSR with self-loops. Zoo graphs share the
+    /// per-model [`zoo_adjacency`] memo (adjacency depends only on the
+    /// graph, so plans for different batches hold the same `Arc`); unknown
+    /// graphs build their own.
+    pub adj: Arc<Adjacency>,
+    /// Token-window length for the anchor replay.
+    window: f64,
+}
+
+impl FeaturePlan {
+    pub fn new(g: &OpGraph, batch: u32, perf: &PerfModel, mode: FeatureMode) -> Self {
+        let b = batch as f64;
+        let f_op = mode.f_op();
+        let mut op_feats = Vec::with_capacity(g.nodes.len() * f_op);
+        for op in &g.nodes {
+            // One-hot kind.
+            for k in 0..NUM_OP_KINDS {
+                op_feats.push(if op.kind.index() == k { 1.0 } else { 0.0 });
+            }
+            // Static shape descriptors (normalised to O(1) ranges).
+            op_feats.push(ln1p(op.flops * b / 1e6) as f32);
+            op_feats.push(ln1p((op.bytes * b + 4.0 * op.params) / 1e6) as f32);
+            op_feats.push(ln1p(op.params / 1e6) as f32);
+            op_feats.push(op.kernel as f32 / 7.0);
+            op_feats.push(op.stride as f32 / 4.0);
+            op_feats.push(op.cin as f32 / 1024.0);
+            op_feats.push(op.cout as f32 / 1024.0);
+            op_feats.push(op.spatial as f32 / 256.0);
+            op_feats.push((b.log2() / 5.0) as f32);
+            // Runtime priors: profiled op time at the 6 SM points, full quota.
+            if mode == FeatureMode::Full {
+                for &sm_p in PerfModel::PROFILE_SMS.iter() {
+                    op_feats.push(ln1p(perf.op_time(op, batch, sm_p) * 1e3) as f32);
+                }
+            }
+        }
+        debug_assert_eq!(op_feats.len(), g.nodes.len() * f_op);
+
+        let mut gf = Vec::with_capacity(mode.f_g());
+        gf.push(ln1p(g.total_flops(batch) / 1e9) as f32);
+        gf.push(ln1p(g.total_bytes(batch) / 1e9) as f32);
+        gf.push(ln1p(g.total_params() / 1e6) as f32);
+        gf.push(g.nodes.len() as f32 / 64.0);
+        gf.push(g.count_kind(OpKind::Conv2d) as f32 / 32.0);
+        gf.push(
+            (g.count_kind(OpKind::Dense) + g.count_kind(OpKind::MatMul)) as f32 / 32.0,
+        );
+        gf.push(g.depth() as f32 / 64.0);
+        gf.push((b.log2() / 5.0) as f32);
+        gf.push(0.0); // G_COL_SM — dynamic
+        gf.push(0.0); // G_COL_QUOTA — dynamic
+        // Runtime priors: graph latency at the 5 quota points (full SM), then
+        // raw graph time at the 6 SM points (full quota).
+        if mode == FeatureMode::Full {
+            for &q_p in PerfModel::PROFILE_QUOTAS.iter() {
+                gf.push(ln1p(perf.latency(g, batch, 1.0, q_p) * 1e3) as f32);
+            }
+            for &sm_p in PerfModel::PROFILE_SMS.iter() {
+                gf.push(ln1p(perf.raw_graph_time(g, batch, sm_p) * 1e3) as f32);
+            }
+            gf.push(0.0); // G_COL_ANCHOR — dynamic
+        }
+        debug_assert_eq!(gf.len(), mode.f_g());
+
+        FeaturePlan {
+            mode,
+            batch,
+            n_nodes: g.nodes.len(),
+            f_op,
+            op_feats,
+            graph_template: gf,
+            kernels: g.nodes.iter().map(|n| n.kernels).collect(),
+            edges: g.edges.clone(),
+            // Graph names are identity across every cache layer (the
+            // predictor memo and plan caches key on `g.name` already), so a
+            // zoo-named graph shares the per-model adjacency memo. The
+            // node-count filter downgrades a stale/foreign graph that merely
+            // borrowed a zoo name from an out-of-bounds GAT walk to a
+            // private (correct) build.
+            adj: ZooModel::from_name(&g.name)
+                .map(zoo_adjacency)
+                .filter(|a| a.n() == g.nodes.len())
+                .unwrap_or_else(|| Arc::new(g.adjacency())),
+            window: perf.dev.window,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn f_op(&self) -> usize {
+        self.f_op
+    }
+
+    pub fn f_g(&self) -> usize {
+        self.graph_template.len()
+    }
+
+    /// Raw op-feature row of node `i`.
+    pub fn op_row(&self, i: usize) -> &[f32] {
+        &self.op_feats[i * self.f_op..(i + 1) * self.f_op]
+    }
+
+    /// The flat raw op-feature matrix `[n_nodes × f_op]`.
+    pub fn op_feats(&self) -> &[f32] {
+        &self.op_feats
+    }
+
+    /// Produce the full graph-feature vector for one (sm, quota) query:
+    /// template memcpy + the three dynamic columns. Bit-identical to what a
+    /// fresh [`extract`] computes (the anchor replay runs the same code over
+    /// the same cached op rows).
+    pub fn fill_graph_feats(&self, sm: f64, quota: f64, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.graph_template);
+        out[G_COL_SM] = sm as f32;
+        out[G_COL_QUOTA] = quota as f32;
+        if self.mode == FeatureMode::Full {
+            out[G_COL_ANCHOR] = anchor_flat(
+                &self.kernels,
+                &self.op_feats,
+                self.f_op,
+                sm,
+                quota,
+                self.window,
+            );
+        }
+    }
+
+    /// Materialise the per-query [`Features`] view (compat path for the HLO
+    /// forward and the cross-language golden tests).
+    pub fn to_features(&self, sm: f64, quota: f64) -> Features {
+        let mut gf = Vec::new();
+        self.fill_graph_feats(sm, quota, &mut gf);
+        Features {
+            op_feats: (0..self.n_nodes).map(|i| self.op_row(i).to_vec()).collect(),
+            graph_feats: gf,
+            edges: self.edges.clone(),
+        }
+    }
+}
+
+/// Extract features for (graph, batch, sm, quota) — one-shot convenience
+/// over [`FeaturePlan`]; repeated queries against the same (graph, batch)
+/// should build the plan once instead.
 pub fn extract(
     g: &OpGraph,
     batch: u32,
@@ -87,66 +274,7 @@ pub fn extract(
     perf: &PerfModel,
     mode: FeatureMode,
 ) -> Features {
-    let b = batch as f64;
-    let mut op_feats = Vec::with_capacity(g.nodes.len());
-    for op in &g.nodes {
-        let mut f = Vec::with_capacity(mode.f_op());
-        // One-hot kind.
-        for k in 0..NUM_OP_KINDS {
-            f.push(if op.kind.index() == k { 1.0 } else { 0.0 });
-        }
-        // Static shape descriptors (normalised to O(1) ranges).
-        f.push(ln1p(op.flops * b / 1e6) as f32);
-        f.push(ln1p((op.bytes * b + 4.0 * op.params) / 1e6) as f32);
-        f.push(ln1p(op.params / 1e6) as f32);
-        f.push(op.kernel as f32 / 7.0);
-        f.push(op.stride as f32 / 4.0);
-        f.push(op.cin as f32 / 1024.0);
-        f.push(op.cout as f32 / 1024.0);
-        f.push(op.spatial as f32 / 256.0);
-        f.push((b.log2() / 5.0) as f32);
-        // Runtime priors: profiled op time at the 6 SM points, full quota.
-        if mode == FeatureMode::Full {
-            for &sm_p in PerfModel::PROFILE_SMS.iter() {
-                f.push(ln1p(perf.op_time(op, batch, sm_p) * 1e3) as f32);
-            }
-        }
-        debug_assert_eq!(f.len(), mode.f_op());
-        op_feats.push(f);
-    }
-
-    let mut gf = Vec::with_capacity(mode.f_g());
-    gf.push(ln1p(g.total_flops(batch) / 1e9) as f32);
-    gf.push(ln1p(g.total_bytes(batch) / 1e9) as f32);
-    gf.push(ln1p(g.total_params() / 1e6) as f32);
-    gf.push(g.nodes.len() as f32 / 64.0);
-    gf.push(g.count_kind(OpKind::Conv2d) as f32 / 32.0);
-    gf.push(
-        (g.count_kind(OpKind::Dense) + g.count_kind(OpKind::MatMul)) as f32 / 32.0,
-    );
-    gf.push(g.depth() as f32 / 64.0);
-    gf.push((b.log2() / 5.0) as f32);
-    gf.push(sm as f32);
-    gf.push(quota as f32);
-    // Runtime priors: graph latency at the 5 quota points (full SM), then
-    // raw graph time at the 6 SM points (full quota).
-    if mode == FeatureMode::Full {
-        for &q_p in PerfModel::PROFILE_QUOTAS.iter() {
-            gf.push(ln1p(perf.latency(g, batch, 1.0, q_p) * 1e3) as f32);
-        }
-        for &sm_p in PerfModel::PROFILE_SMS.iter() {
-            gf.push(ln1p(perf.raw_graph_time(g, batch, sm_p) * 1e3) as f32);
-        }
-        let a = anchor(g, &op_feats, sm, quota, perf.dev.window);
-        gf.push(a);
-    }
-    debug_assert_eq!(gf.len(), mode.f_g());
-
-    Features {
-        op_feats,
-        graph_feats: gf,
-        edges: g.edges.clone(),
-    }
+    FeaturePlan::new(g, batch, perf, mode).to_features(sm, quota)
 }
 
 #[inline]
@@ -176,16 +304,27 @@ fn interp(xs: &[f64], ys: &[f32], x: f64) -> f64 {
 /// ln-ln space, then replay the scheduler's own token-window mechanics
 /// (no-debt, kernel granularity). The GNN head regresses the residual
 /// against this anchor. Contract: python features.anchor.
-pub fn anchor(g: &OpGraph, op_feats: &[Vec<f32>], sm: f64, quota: f64, window: f64) -> f32 {
-    let ln_sms: Vec<f64> = PerfModel::PROFILE_SMS.iter().map(|s| s.ln()).collect();
+///
+/// `kernels[i]` is node `i`'s launch count; `op_feats` is the flat raw
+/// `[n × f_op]` matrix. Allocation-free.
+pub fn anchor_flat(
+    kernels: &[u32],
+    op_feats: &[f32],
+    f_op: usize,
+    sm: f64,
+    quota: f64,
+    window: f64,
+) -> f32 {
+    let ln_sms: [f64; F_OP_RUNTIME] = PerfModel::PROFILE_SMS.map(|s| s.ln());
     let ln_sm = sm.clamp(1e-3, 1.0).ln();
     let mut now = 0.0f64;
     let mut budget = quota * window;
     let mut boundary = window;
-    for (i, node) in g.nodes.iter().enumerate() {
-        let ln_t = interp(&ln_sms, &op_feats[i][F_OP_STATIC..F_OP_STATIC + 6], ln_sm);
+    for (i, &n_kernels) in kernels.iter().enumerate() {
+        let row = &op_feats[i * f_op + F_OP_STATIC..i * f_op + F_OP_STATIC + 6];
+        let ln_t = interp(&ln_sms, row, ln_sm);
         let t_est = ln_t.exp_m1() / 1e3; // invert ln1p(ms)
-        let k = node.kernels.max(1);
+        let k = n_kernels.max(1);
         let d = t_est / k as f64;
         for _ in 0..k {
             if boundary <= now {
@@ -204,6 +343,16 @@ pub fn anchor(g: &OpGraph, op_feats: &[Vec<f32>], sm: f64, quota: f64, window: f
     }
     // ln(ms), matching the regression target's transform exactly.
     (now * 1e3).max(1e-9).ln() as f32
+}
+
+/// [`anchor_flat`] over nested per-node rows (legacy signature; the rows must
+/// be Full-mode op features).
+pub fn anchor(g: &OpGraph, op_feats: &[Vec<f32>], sm: f64, quota: f64, window: f64) -> f32 {
+    let f_op = FeatureMode::Full.f_op();
+    debug_assert!(op_feats.iter().all(|r| r.len() == f_op));
+    let flat: Vec<f32> = op_feats.iter().flatten().copied().collect();
+    let kernels: Vec<u32> = g.nodes.iter().map(|n| n.kernels).collect();
+    anchor_flat(&kernels, &flat, f_op, sm, quota, window)
 }
 
 #[cfg(test)]
@@ -279,5 +428,56 @@ mod tests {
         let f8 = extract(&g, 8, 0.5, 0.5, &pm, FeatureMode::Full);
         assert!(f8.graph_feats[0] > f1.graph_feats[0]);
         assert!(f8.op_feats[0][12] >= f1.op_feats[0][12]);
+    }
+
+    #[test]
+    fn plan_fill_matches_fresh_extract_bitwise() {
+        // The cached plan's dynamic fill must reproduce a fresh extraction
+        // bit-for-bit at every probe-lattice point (the exhaustive all-model
+        // sweep lives in tests/rapp_plan_parity.rs).
+        let g = zoo_graph(ZooModel::ConvNextTiny);
+        let pm = PerfModel::default();
+        for mode in [FeatureMode::Full, FeatureMode::StaticOnly] {
+            let plan = FeaturePlan::new(&g, 8, &pm, mode);
+            let mut gf = Vec::new();
+            for &(sm, quota) in &[(0.1, 0.2), (0.5, 0.5), (0.35, 0.9), (1.0, 1.0)] {
+                let fresh = extract(&g, 8, sm, quota, &pm, mode);
+                plan.fill_graph_feats(sm, quota, &mut gf);
+                assert_eq!(gf.len(), fresh.graph_feats.len());
+                for (a, b) in gf.iter().zip(&fresh.graph_feats) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "sm={sm} q={quota}");
+                }
+                for (i, row) in fresh.op_feats.iter().enumerate() {
+                    assert_eq!(plan.op_row(i), row.as_slice());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plans_share_adjacency_across_batches() {
+        // Adjacency depends only on the graph: zoo-named plans for different
+        // batches must hold the same memoised Arc, not per-batch CSR copies.
+        let g = zoo_graph(ZooModel::ResNet50);
+        let pm = PerfModel::default();
+        let p1 = FeaturePlan::new(&g, 1, &pm, FeatureMode::Full);
+        let p8 = FeaturePlan::new(&g, 8, &pm, FeatureMode::Full);
+        assert!(Arc::ptr_eq(&p1.adj, &p8.adj));
+        assert_eq!(*p1.adj, g.adjacency());
+        // Non-zoo names fall back to a private build.
+        let mut custom = g.clone();
+        custom.name = "custom_net".into();
+        let pc = FeaturePlan::new(&custom, 1, &pm, FeatureMode::Full);
+        assert!(!Arc::ptr_eq(&p1.adj, &pc.adj));
+        assert_eq!(*pc.adj, g.adjacency());
+    }
+
+    #[test]
+    fn anchor_nested_and_flat_agree() {
+        let g = zoo_graph(ZooModel::ResNet50);
+        let pm = PerfModel::default();
+        let f = extract(&g, 8, 0.4, 0.6, &pm, FeatureMode::Full);
+        let nested = anchor(&g, &f.op_feats, 0.4, 0.6, pm.dev.window);
+        assert_eq!(nested.to_bits(), f.graph_feats[G_COL_ANCHOR].to_bits());
     }
 }

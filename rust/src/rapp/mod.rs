@@ -23,10 +23,10 @@ pub use cache::{min_feasible_quota, CachedPredictor, CountingPredictor};
 use crate::model::OpGraph;
 use crate::perf::PerfModel;
 use crate::util::json::Json;
-use features::{extract, FeatureMode};
-use nn::{Dense, GatLayer};
+use features::{FeatureMode, FeaturePlan};
+use nn::{Dense, GatLayer, GatScratch};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Latency prediction interface used by the auto-scalers.
 pub trait LatencyPredictor: Send + Sync {
@@ -39,6 +39,17 @@ pub trait LatencyPredictor: Send + Sync {
     fn capacity(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
         let t_raw = self.latency(g, batch, sm, 1.0);
         batch as f64 * quota / t_raw
+    }
+
+    /// Latency at each quota in `quotas` (same sm), written into `out`.
+    /// Implementations with a row-batched forward override this to evaluate
+    /// a whole lattice level in one matmul-shaped pass; the default loops
+    /// [`LatencyPredictor::latency`]. Every element must equal the scalar
+    /// query bit-for-bit — callers (the autoscaler's candidate sweeps) rely
+    /// on batched and scalar paths being interchangeable.
+    fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(quotas.iter().map(|&q| self.latency(g, batch, sm, q)));
     }
 }
 
@@ -175,11 +186,54 @@ impl RappWeights {
     }
 }
 
-/// The native RaPP predictor with a per-(model,config) memo cache.
+/// One cached (graph, batch) plan: the raw feature plan plus the pooled GAT
+/// embedding — everything upstream of the (sm, quota) columns. With the plan
+/// warm, a cache-miss forward is a graph-feature fill + two small dense
+/// layers instead of a full re-extraction and two GAT passes.
+struct PlanEntry {
+    plan: FeaturePlan,
+    /// masked-mean of GAT-2 node embeddings over the standardised op
+    /// features, length `hidden` — (sm, quota)-independent.
+    pooled: Vec<f32>,
+}
+
+/// Reusable forward buffers (one per predictor, serialised by a mutex: the
+/// decision loop is effectively single-threaded per run, and contention only
+/// costs a short wait, never wrong numbers).
+#[derive(Default)]
+struct ForwardScratch {
+    /// Standardised op features / GAT activations (plan build only).
+    x: Vec<f32>,
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+    gat: GatScratch,
+    /// Per-query buffers.
+    gfeats: Vec<f32>,
+    gx: Vec<f32>,
+    gh: Vec<f32>,
+    cat: Vec<f32>,
+    hh: Vec<f32>,
+    /// Row-batched buffers (`[rows × …]`).
+    gfeats_rows: Vec<f32>,
+    gx_rows: Vec<f32>,
+    gh_rows: Vec<f32>,
+    cat_rows: Vec<f32>,
+    hh_rows: Vec<f32>,
+    out_rows: Vec<f32>,
+}
+
+/// The native RaPP predictor with a per-(model,config) memo cache and a
+/// per-(model,batch) [`FeaturePlan`] + pooled-embedding cache.
 pub struct RappPredictor {
     pub weights: RappWeights,
     pub perf: PerfModel,
     cache: Mutex<HashMap<(String, u32, u32, u32), f64>>,
+    /// Two-level (graph name → batch → entry) so the steady-state probe
+    /// costs two hash lookups and **no allocation**; the name `String` is
+    /// cloned only when a graph's first plan is inserted.
+    #[allow(clippy::type_complexity)]
+    plans: Mutex<HashMap<String, HashMap<u32, Arc<PlanEntry>>>>,
+    scratch: Mutex<ForwardScratch>,
 }
 
 impl RappPredictor {
@@ -188,6 +242,8 @@ impl RappPredictor {
             weights,
             perf,
             cache: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
+            scratch: Mutex::new(ForwardScratch::default()),
         }
     }
 
@@ -196,48 +252,176 @@ impl RappPredictor {
         Ok(Self::new(RappWeights::load(path)?, perf))
     }
 
-    /// Raw forward pass: returns predicted ln(latency_ms).
-    pub fn forward(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f32 {
-        let w = &self.weights;
-        let f = extract(g, batch, sm, quota, &self.perf, w.mode);
-        let n = f.op_feats.len();
-        let f_op = w.mode.f_op();
-        // Standardise + flatten.
-        let mut x = vec![0.0f32; n * f_op];
-        for (i, row) in f.op_feats.iter().enumerate() {
-            for (k, &v) in row.iter().enumerate() {
-                x[i * f_op + k] = (v - w.op_mean[k]) / w.op_std[k];
-            }
-        }
-        let nbrs = nn::neighbour_lists(n, &f.edges);
-        let h1 = w.gat1.forward(&x, n, &nbrs);
-        let h2 = w.gat2.forward(&h1, n, &nbrs);
-        let pooled = nn::mean_pool(&h2, n, w.hidden);
+    /// Drop every cached plan (benches use this to measure the plan-rebuild
+    /// cost — the per-forward price the predictor paid before plans existed).
+    pub fn reset_plan_cache(&self) {
+        self.plans.lock().unwrap().clear();
+    }
 
-        let mut gx = vec![0.0f32; w.mode.f_g()];
-        for (k, &v) in f.graph_feats.iter().enumerate() {
+    /// Fetch or build the (graph, batch) plan + pooled embedding.
+    fn plan_entry(&self, g: &OpGraph, batch: u32) -> Arc<PlanEntry> {
+        if let Some(e) = self
+            .plans
+            .lock()
+            .unwrap()
+            .get(g.name.as_str())
+            .and_then(|m| m.get(&batch))
+        {
+            return Arc::clone(e);
+        }
+        let w = &self.weights;
+        let plan = FeaturePlan::new(g, batch, &self.perf, w.mode);
+        let n = plan.n_nodes();
+        let f_op = plan.f_op();
+        let mut pooled = Vec::new();
+        {
+            let mut st = self.scratch.lock().unwrap();
+            let st = &mut *st;
+            // Standardise the raw op rows.
+            st.x.clear();
+            st.x.resize(n * f_op, 0.0);
+            for i in 0..n {
+                let row = plan.op_row(i);
+                for (k, &v) in row.iter().enumerate() {
+                    st.x[i * f_op + k] = (v - w.op_mean[k]) / w.op_std[k];
+                }
+            }
+            w.gat1.forward_into(&st.x, n, &plan.adj, &mut st.gat, &mut st.h1);
+            w.gat2.forward_into(&st.h1, n, &plan.adj, &mut st.gat, &mut st.h2);
+            nn::mean_pool_into(&st.h2, n, w.hidden, &mut pooled);
+        }
+        let entry = Arc::new(PlanEntry { plan, pooled });
+        self.plans
+            .lock()
+            .unwrap()
+            .entry(g.name.clone())
+            .or_default()
+            .entry(batch)
+            .or_insert_with(|| Arc::clone(&entry))
+            .clone()
+    }
+
+    /// The query tail shared by scalar and batched forwards: standardise the
+    /// filled graph features, run the graph MLP and the two head layers, add
+    /// the residual anchor. `gfeats` is the raw per-query graph vector.
+    #[inline]
+    fn head_from_gfeats(
+        w: &RappWeights,
+        pooled: &[f32],
+        gfeats: &[f32],
+        gx: &mut Vec<f32>,
+        gh: &mut Vec<f32>,
+        cat: &mut Vec<f32>,
+        hh: &mut Vec<f32>,
+    ) -> f32 {
+        gx.clear();
+        gx.resize(w.mode.f_g(), 0.0);
+        for (k, &v) in gfeats.iter().enumerate() {
             gx[k] = (v - w.g_mean[k]) / w.g_std[k];
         }
-        let mut gh = vec![0.0f32; w.hidden];
-        w.mlp_g.forward(&gx, &mut gh);
+        gh.clear();
+        gh.resize(w.hidden, 0.0);
+        w.mlp_g.forward(gx, gh);
         for v in gh.iter_mut() {
             *v = nn::relu(*v);
         }
-
-        let mut cat = Vec::with_capacity(2 * w.hidden);
-        cat.extend_from_slice(&pooled);
-        cat.extend_from_slice(&gh);
-        let mut hh = vec![0.0f32; w.hidden];
-        w.head1.forward(&cat, &mut hh);
+        cat.clear();
+        cat.extend_from_slice(pooled);
+        cat.extend_from_slice(gh);
+        hh.clear();
+        hh.resize(w.hidden, 0.0);
+        w.head1.forward(cat, hh);
         for v in hh.iter_mut() {
             *v = nn::relu(*v);
         }
         let mut out = [0.0f32];
-        w.head2.forward(&hh, &mut out);
+        w.head2.forward(hh, &mut out);
         if let Some(c) = w.residual_col {
-            out[0] += f.graph_feats[c]; // raw (unnormalised) anchor
+            out[0] += gfeats[c]; // raw (unnormalised) anchor
         }
         out[0]
+    }
+
+    /// Raw forward pass: returns predicted ln(latency_ms). Allocation-free
+    /// once the (graph, batch) plan is warm.
+    pub fn forward(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f32 {
+        let entry = self.plan_entry(g, batch);
+        let w = &self.weights;
+        let mut st = self.scratch.lock().unwrap();
+        let st = &mut *st;
+        entry.plan.fill_graph_feats(sm, quota, &mut st.gfeats);
+        Self::head_from_gfeats(
+            w,
+            &entry.pooled,
+            &st.gfeats,
+            &mut st.gx,
+            &mut st.gh,
+            &mut st.cat,
+            &mut st.hh,
+        )
+    }
+
+    /// Row-batched forward over a quota sweep at fixed (graph, batch, sm):
+    /// one matmul-shaped pass per layer over all rows. Each output is
+    /// bit-identical to the scalar [`RappPredictor::forward`] at the same
+    /// point ([`Dense::forward_rows`] preserves per-row accumulation order).
+    pub fn forward_batch(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        out: &mut Vec<f32>,
+    ) {
+        let rows = quotas.len();
+        out.clear();
+        if rows == 0 {
+            return;
+        }
+        let entry = self.plan_entry(g, batch);
+        let w = &self.weights;
+        let (f_g, h) = (w.mode.f_g(), w.hidden);
+        let mut st = self.scratch.lock().unwrap();
+        let st = &mut *st;
+        // Assemble the raw + standardised graph-feature matrices [rows × f_g].
+        st.gfeats_rows.clear();
+        st.gx_rows.clear();
+        for &q in quotas {
+            entry.plan.fill_graph_feats(sm, q, &mut st.gfeats);
+            st.gfeats_rows.extend_from_slice(&st.gfeats);
+            for (k, &v) in st.gfeats.iter().enumerate() {
+                st.gx_rows.push((v - w.g_mean[k]) / w.g_std[k]);
+            }
+        }
+        // Graph MLP over all rows, ReLU.
+        st.gh_rows.clear();
+        st.gh_rows.resize(rows * h, 0.0);
+        w.mlp_g.forward_rows(&st.gx_rows, rows, &mut st.gh_rows);
+        for v in st.gh_rows.iter_mut() {
+            *v = nn::relu(*v);
+        }
+        // Concat [pooled | gh] per row, then the two heads.
+        st.cat_rows.clear();
+        for r in 0..rows {
+            st.cat_rows.extend_from_slice(&entry.pooled);
+            st.cat_rows.extend_from_slice(&st.gh_rows[r * h..(r + 1) * h]);
+        }
+        st.hh_rows.clear();
+        st.hh_rows.resize(rows * h, 0.0);
+        w.head1.forward_rows(&st.cat_rows, rows, &mut st.hh_rows);
+        for v in st.hh_rows.iter_mut() {
+            *v = nn::relu(*v);
+        }
+        st.out_rows.clear();
+        st.out_rows.resize(rows, 0.0);
+        w.head2.forward_rows(&st.hh_rows, rows, &mut st.out_rows);
+        for (r, &o) in st.out_rows.iter().enumerate() {
+            let mut v = o;
+            if let Some(c) = w.residual_col {
+                v += st.gfeats_rows[r * f_g + c];
+            }
+            out.push(v);
+        }
     }
 
     fn cache_key(g: &OpGraph, batch: u32, sm: f64, quota: f64) -> (String, u32, u32, u32) {
@@ -248,6 +432,14 @@ impl RappPredictor {
             (quota * 1000.0).round() as u32,
         )
     }
+
+    /// ln(latency_ms) → seconds with the anti-wedge exponent guard.
+    #[inline]
+    fn ln_ms_to_secs(ln_ms: f64) -> f64 {
+        // Guard the exponent: an untrained/corrupt model must not produce
+        // Inf/NaN latencies that would wedge the autoscaler.
+        ln_ms.clamp(-10.0, 15.0).exp() / 1e3
+    }
 }
 
 impl LatencyPredictor for RappPredictor {
@@ -256,13 +448,59 @@ impl LatencyPredictor for RappPredictor {
         if let Some(&v) = self.cache.lock().unwrap().get(&key) {
             return v;
         }
-        let ln_ms = self.forward(g, batch, sm, quota) as f64;
-        // Guard the exponent: an untrained/corrupt model must not produce
-        // Inf/NaN latencies that would wedge the autoscaler.
-        let ms = ln_ms.clamp(-10.0, 15.0).exp();
-        let secs = ms / 1e3;
+        let secs = Self::ln_ms_to_secs(self.forward(g, batch, sm, quota) as f64);
         self.cache.lock().unwrap().insert(key, secs);
         secs
+    }
+
+    /// Whole-sweep latency: memo hits are served from the cache; the missing
+    /// rows run through one [`RappPredictor::forward_batch`] pass. Values are
+    /// bit-identical to the equivalent scalar-query sequence: the memo keys
+    /// on the per-mille lattice while forwards run at the raw quota (the
+    /// scalar contract), so quotas aliasing to one lattice cell within a
+    /// sweep are deduped — the first occurrence computes, later aliases
+    /// reuse its value, exactly as back-to-back `latency` calls would.
+    fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(quotas.len(), f64::NAN);
+        let mut miss_keys: Vec<(String, u32, u32, u32)> = Vec::new();
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_q: Vec<f64> = Vec::new();
+        // (out position, miss slot) for quotas aliasing an earlier miss.
+        let mut aliases: Vec<(usize, usize)> = Vec::new();
+        {
+            let cache = self.cache.lock().unwrap();
+            for (i, &q) in quotas.iter().enumerate() {
+                let key = Self::cache_key(g, batch, sm, q);
+                if let Some(&v) = cache.get(&key) {
+                    out[i] = v;
+                } else if let Some(slot) = miss_keys.iter().position(|k| *k == key) {
+                    aliases.push((i, slot));
+                } else {
+                    miss_keys.push(key);
+                    miss_idx.push(i);
+                    miss_q.push(q);
+                }
+            }
+        }
+        if miss_idx.is_empty() {
+            return;
+        }
+        let mut fresh = Vec::new();
+        self.forward_batch(g, batch, sm, &miss_q, &mut fresh);
+        let mut secs_by_slot = Vec::with_capacity(fresh.len());
+        {
+            let mut cache = self.cache.lock().unwrap();
+            for ((&i, key), &ln_ms) in miss_idx.iter().zip(miss_keys).zip(&fresh) {
+                let secs = Self::ln_ms_to_secs(ln_ms as f64);
+                cache.insert(key, secs);
+                out[i] = secs;
+                secs_by_slot.push(secs);
+            }
+        }
+        for (i, slot) in aliases {
+            out[i] = secs_by_slot[slot];
+        }
     }
 }
 
@@ -376,6 +614,85 @@ mod tests {
             let g = zoo_graph(ZooModel::Vgg16);
             let l = p.latency(&g, 32, 0.05, 0.05);
             assert!(l.is_finite() && l > 0.0);
+        }
+    }
+
+    #[test]
+    fn plan_cached_forward_bitwise_matches_cold_forward() {
+        // A warm (graph, batch) plan must change nothing numerically: the
+        // same query through a cold predictor and through one with a warm
+        // plan yields identical bits.
+        let g = zoo_graph(ZooModel::ResNet50);
+        for mode in [FeatureMode::Full, FeatureMode::StaticOnly] {
+            let p = RappPredictor::new(RappWeights::random(mode, 32, 7), PerfModel::default());
+            let warmup = p.forward(&g, 8, 0.75, 0.25); // builds the plan
+            let warm = p.forward(&g, 8, 0.3, 0.9);
+            p.reset_plan_cache();
+            let cold = p.forward(&g, 8, 0.3, 0.9);
+            assert_eq!(warm.to_bits(), cold.to_bits(), "{mode:?}");
+            assert_eq!(warmup.to_bits(), p.forward(&g, 8, 0.75, 0.25).to_bits());
+        }
+    }
+
+    #[test]
+    fn batched_forward_bitwise_matches_scalar() {
+        let g = zoo_graph(ZooModel::BertTiny);
+        let p = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 32, 11),
+            PerfModel::default(),
+        );
+        let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        let mut batched = Vec::new();
+        p.forward_batch(&g, 4, 0.5, &quotas, &mut batched);
+        assert_eq!(batched.len(), quotas.len());
+        for (&q, &b) in quotas.iter().zip(&batched) {
+            assert_eq!(p.forward(&g, 4, 0.5, q).to_bits(), b.to_bits(), "q={q}");
+        }
+        // Empty sweep is a no-op.
+        p.forward_batch(&g, 4, 0.5, &[], &mut batched);
+        assert!(batched.is_empty());
+    }
+
+    #[test]
+    fn latency_batch_dedupes_lattice_aliases_like_scalar_sequence() {
+        // 0.4 and 0.4004 share one per-mille memo cell: the batch must
+        // behave exactly like back-to-back scalar calls — first occurrence
+        // computes (at its raw quota), the alias reuses that value.
+        let g = zoo_graph(ZooModel::ResNet50);
+        let p = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 16, 9),
+            PerfModel::default(),
+        );
+        let mut out = Vec::new();
+        p.latency_batch(&g, 8, 0.5, &[0.4, 0.4004], &mut out);
+        assert_eq!(out[0], out[1], "alias must reuse the first occurrence");
+        let q = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 16, 9),
+            PerfModel::default(),
+        );
+        assert_eq!(out[0], q.latency(&g, 8, 0.5, 0.4));
+        assert_eq!(out[1], q.latency(&g, 8, 0.5, 0.4004));
+    }
+
+    #[test]
+    fn latency_batch_mixes_hits_and_misses_identically() {
+        let g = zoo_graph(ZooModel::MobileNetV2);
+        let p = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 16, 3),
+            PerfModel::default(),
+        );
+        // Prime two points via the scalar path, then sweep across them.
+        let a = p.latency(&g, 8, 0.5, 0.3);
+        let b = p.latency(&g, 8, 0.5, 0.7);
+        let quotas = [0.1, 0.3, 0.5, 0.7, 0.9];
+        let mut out = Vec::new();
+        p.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[1], a);
+        assert_eq!(out[3], b);
+        for (&q, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, p.latency(&g, 8, 0.5, q), "q={q}");
+            assert!(v.is_finite() && v > 0.0);
         }
     }
 }

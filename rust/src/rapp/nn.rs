@@ -14,6 +14,14 @@
 //! GAT layer (Veličković et al. 2018, single head): `e_ij =
 //! LeakyReLU(a_src·Wh_i + a_dst·Wh_j)`, attention softmax over in-neighbours
 //! of the *symmetrised* edge set plus self-loops, ELU output activation.
+//!
+//! Every forward writes into caller-provided buffers ([`GatScratch`] and
+//! plain `&mut Vec<f32>` outputs): the decision hot path performs **zero
+//! allocations** once the scratch is warm. Graph structure comes in as
+//! [`Adjacency`] (CSR, hoisted to the model/zoo layer) instead of per-call
+//! `Vec<Vec<usize>>` neighbour lists.
+
+use crate::model::Adjacency;
 
 /// A dense layer: `y = W^T x + b`, with `w` stored row-major `[n_in][n_out]`.
 #[derive(Clone, Debug)]
@@ -37,6 +45,21 @@ impl Dense {
             for (o, &wv) in out.iter_mut().zip(row) {
                 *o += xi * wv;
             }
+        }
+    }
+
+    /// Row-batched forward: `x` is `[rows][n_in]` row-major, `out` is
+    /// `[rows][n_out]`. Each row is computed exactly as [`Dense::forward`]
+    /// would (same accumulation order ⇒ bit-identical per row); the batching
+    /// is a cache-friendly matmul-shaped sweep over a whole lattice level.
+    pub fn forward_rows(&self, x: &[f32], rows: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), rows * self.n_in);
+        debug_assert_eq!(out.len(), rows * self.n_out);
+        for r in 0..rows {
+            self.forward(
+                &x[r * self.n_in..(r + 1) * self.n_in],
+                &mut out[r * self.n_out..(r + 1) * self.n_out],
+            );
         }
     }
 }
@@ -73,33 +96,61 @@ pub fn relu(x: f32) -> f32 {
     x.max(0.0)
 }
 
+/// Reusable buffers for GAT forwards: transformed features, attention
+/// pre-products, and the per-node softmax weights. One instance serves any
+/// number of forwards; nothing is allocated once capacities are warm.
+#[derive(Clone, Debug, Default)]
+pub struct GatScratch {
+    hx: Vec<f32>,
+    s_src: Vec<f32>,
+    s_dst: Vec<f32>,
+    weights: Vec<f32>,
+}
+
 impl GatLayer {
-    /// `x`: `[n][n_in]` row-major; `nbrs[i]`: in-neighbour lists (must include
-    /// the self-loop). Returns `[n][n_out]`.
-    pub fn forward(&self, x: &[f32], n: usize, nbrs: &[Vec<usize>]) -> Vec<f32> {
+    /// `x`: `[n][n_in]` row-major; `adj`: symmetrised in-neighbour CSR (must
+    /// include self-loops). Writes `[n][n_out]` into `out`.
+    pub fn forward_into(
+        &self,
+        x: &[f32],
+        n: usize,
+        adj: &Adjacency,
+        scratch: &mut GatScratch,
+        out: &mut Vec<f32>,
+    ) {
         let h = self.lin.n_out;
+        debug_assert_eq!(adj.n(), n);
         // h_i = W x_i for all nodes.
-        let mut hx = vec![0.0f32; n * h];
+        scratch.hx.clear();
+        scratch.hx.resize(n * h, 0.0);
+        let hx = &mut scratch.hx;
         for i in 0..n {
             let (src, dst) = (&x[i * self.lin.n_in..(i + 1) * self.lin.n_in], i * h);
             self.lin.forward(src, &mut hx[dst..dst + h]);
         }
         // Pre-compute a_src·h_i and a_dst·h_j.
-        let mut s_src = vec![0.0f32; n];
-        let mut s_dst = vec![0.0f32; n];
+        scratch.s_src.clear();
+        scratch.s_src.resize(n, 0.0);
+        scratch.s_dst.clear();
+        scratch.s_dst.resize(n, 0.0);
         for i in 0..n {
             let hi = &hx[i * h..(i + 1) * h];
-            s_src[i] = dot(&self.a_src, hi);
-            s_dst[i] = dot(&self.a_dst, hi);
+            scratch.s_src[i] = dot(&self.a_src, hi);
+            scratch.s_dst[i] = dot(&self.a_dst, hi);
         }
-        let mut out = vec![0.0f32; n * h];
-        let mut weights: Vec<f32> = Vec::new();
+        out.clear();
+        out.resize(n * h, 0.0);
+        let (s_src, s_dst) = (&scratch.s_src, &scratch.s_dst);
+        let weights = &mut scratch.weights;
         for i in 0..n {
-            let ns = &nbrs[i];
+            let ns = adj.neighbours(i);
             debug_assert!(!ns.is_empty(), "node {i} lacks self-loop");
             // Attention logits + stable softmax.
             weights.clear();
-            weights.extend(ns.iter().map(|&j| leaky_relu(s_src[i] + s_dst[j])));
+            weights.extend(
+                ns.iter()
+                    .map(|&j| leaky_relu(s_src[i] + s_dst[j as usize])),
+            );
             let m = weights.iter().copied().fold(f32::NEG_INFINITY, f32::max);
             let mut z = 0.0f32;
             for w in weights.iter_mut() {
@@ -108,7 +159,7 @@ impl GatLayer {
             }
             let oi = &mut out[i * h..(i + 1) * h];
             for (&j, &w) in ns.iter().zip(weights.iter()) {
-                let hj = &hx[j * h..(j + 1) * h];
+                let hj = &hx[j as usize * h..(j as usize + 1) * h];
                 let a = w / z;
                 for (o, &v) in oi.iter_mut().zip(hj) {
                     *o += a * v;
@@ -118,6 +169,13 @@ impl GatLayer {
                 *o = elu(*o);
             }
         }
+    }
+
+    /// Allocating convenience wrapper around [`GatLayer::forward_into`].
+    pub fn forward(&self, x: &[f32], n: usize, adj: &Adjacency) -> Vec<f32> {
+        let mut scratch = GatScratch::default();
+        let mut out = Vec::new();
+        self.forward_into(x, n, adj, &mut scratch, &mut out);
         out
     }
 }
@@ -128,21 +186,12 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// Symmetrise directed edges and add self-loops → in-neighbour lists.
-pub fn neighbour_lists(n: usize, edges: &[(usize, usize)]) -> Vec<Vec<usize>> {
-    let mut nbrs: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
-    for &(s, d) in edges {
-        nbrs[d].push(s);
-        nbrs[s].push(d);
-    }
-    nbrs
-}
-
-/// Masked mean-pool over node embeddings `[n][h]`.
-pub fn mean_pool(x: &[f32], n: usize, h: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; h];
+/// Masked mean-pool over node embeddings `[n][h]`, into a reusable buffer.
+pub fn mean_pool_into(x: &[f32], n: usize, h: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(h, 0.0);
     if n == 0 {
-        return out;
+        return;
     }
     for i in 0..n {
         for (o, &v) in out.iter_mut().zip(&x[i * h..(i + 1) * h]) {
@@ -152,6 +201,12 @@ pub fn mean_pool(x: &[f32], n: usize, h: usize) -> Vec<f32> {
     for o in out.iter_mut() {
         *o /= n as f32;
     }
+}
+
+/// Allocating convenience wrapper around [`mean_pool_into`].
+pub fn mean_pool(x: &[f32], n: usize, h: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    mean_pool_into(x, n, h, &mut out);
     out
 }
 
@@ -193,14 +248,30 @@ mod tests {
     }
 
     #[test]
+    fn dense_rows_bitwise_match_scalar() {
+        let mut rng = Pcg64::seeded(9);
+        let d = rand_dense(&mut rng, 7, 5);
+        let x: Vec<f32> = (0..4 * 7).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        let mut batched = vec![0.0f32; 4 * 5];
+        d.forward_rows(&x, 4, &mut batched);
+        for r in 0..4 {
+            let mut one = vec![0.0f32; 5];
+            d.forward(&x[r * 7..(r + 1) * 7], &mut one);
+            for k in 0..5 {
+                assert_eq!(one[k].to_bits(), batched[r * 5 + k].to_bits(), "row {r} col {k}");
+            }
+        }
+    }
+
+    #[test]
     fn gat_attention_sums_to_one() {
         // With identical neighbour features, output = transformed feature
         // (softmax convexity) — checks normalisation.
         let mut rng = Pcg64::seeded(1);
         let gat = rand_gat(&mut rng, 3, 4);
         let x: Vec<f32> = [0.3f32, -0.2, 0.9].repeat(3);
-        let nbrs = neighbour_lists(3, &[(0, 1), (1, 2)]);
-        let out = gat.forward(&x, 3, &nbrs);
+        let adj = Adjacency::from_edges(3, &[(0, 1), (1, 2)]);
+        let out = gat.forward(&x, 3, &adj);
         // All nodes have identical inputs ⇒ identical outputs.
         assert_eq!(out[0..4], out[4..8]);
         assert_eq!(out[4..8], out[8..12]);
@@ -217,7 +288,7 @@ mod tests {
             0.9, -0.1, 0.7, // node 2
         ];
         let edges = vec![(0, 1), (1, 2)];
-        let out = gat.forward(&x, 3, &neighbour_lists(3, &edges));
+        let out = gat.forward(&x, 3, &Adjacency::from_edges(3, &edges));
         // Permutation: 0->2, 1->0, 2->1 (i.e. new[perm[i]] = old[i]).
         let perm = [2usize, 0, 1];
         let mut px = vec![0.0f32; 9];
@@ -225,7 +296,7 @@ mod tests {
             px[perm[i] * 3..(perm[i] + 1) * 3].copy_from_slice(&x[i * 3..(i + 1) * 3]);
         }
         let pedges: Vec<(usize, usize)> = edges.iter().map(|&(s, d)| (perm[s], perm[d])).collect();
-        let pout = gat.forward(&px, 3, &neighbour_lists(3, &pedges));
+        let pout = gat.forward(&px, 3, &Adjacency::from_edges(3, &pedges));
         for i in 0..3 {
             for k in 0..4 {
                 let a = out[i * 4 + k];
@@ -236,17 +307,34 @@ mod tests {
     }
 
     #[test]
-    fn mean_pool_averages() {
-        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 nodes × 2 dims
-        assert_eq!(mean_pool(&x, 2, 2), vec![2.0, 3.0]);
+    fn gat_scratch_reuse_is_bit_identical() {
+        // The same scratch driven through different graphs must not leak
+        // state between forwards.
+        let mut rng = Pcg64::seeded(4);
+        let gat = rand_gat(&mut rng, 3, 4);
+        let xa: Vec<f32> = (0..9).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        let xb: Vec<f32> = (0..15).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+        let adj_a = Adjacency::from_edges(3, &[(0, 2)]);
+        let adj_b = Adjacency::from_edges(5, &[(0, 1), (1, 4), (2, 3)]);
+        let fresh_a = gat.forward(&xa, 3, &adj_a);
+        let fresh_b = gat.forward(&xb, 5, &adj_b);
+        let mut scratch = GatScratch::default();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            gat.forward_into(&xa, 3, &adj_a, &mut scratch, &mut out);
+            assert_eq!(out, fresh_a);
+            gat.forward_into(&xb, 5, &adj_b, &mut scratch, &mut out);
+            assert_eq!(out, fresh_b);
+        }
     }
 
     #[test]
-    fn neighbour_lists_symmetric_with_self_loops() {
-        let nbrs = neighbour_lists(3, &[(0, 2)]);
-        assert!(nbrs[0].contains(&0) && nbrs[0].contains(&2));
-        assert!(nbrs[2].contains(&2) && nbrs[2].contains(&0));
-        assert_eq!(nbrs[1], vec![1]);
+    fn mean_pool_averages() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 nodes × 2 dims
+        assert_eq!(mean_pool(&x, 2, 2), vec![2.0, 3.0]);
+        let mut buf = vec![9.0f32; 7]; // stale content must be overwritten
+        mean_pool_into(&x, 2, 2, &mut buf);
+        assert_eq!(buf, vec![2.0, 3.0]);
     }
 
     #[test]

@@ -82,6 +82,7 @@ pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
     seq: u64,
     now: f64,
+    high_water: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -92,10 +93,18 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Pre-size the heap: the streaming simulator keeps the queue at
+    /// O(in-flight), so one up-front reservation eliminates re-allocation
+    /// churn on the event hot path.
+    pub fn with_capacity(cap: usize) -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            heap: BinaryHeap::with_capacity(cap),
             seq: 0,
             now: 0.0,
+            high_water: 0,
         }
     }
 
@@ -112,6 +121,12 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
+    /// Deepest the queue has ever been — the observable footprint of the
+    /// streaming-arrival rework (O(in-flight), not O(total requests)).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
     /// Schedule `event` at absolute time `at` (clamped to now).
     pub fn push_at(&mut self, at: f64, event: E) {
         let at = if at < self.now { self.now } else { at };
@@ -121,6 +136,9 @@ impl<E> EventQueue<E> {
             event,
         });
         self.seq += 1;
+        if self.heap.len() > self.high_water {
+            self.high_water = self.heap.len();
+        }
     }
 
     /// Schedule `event` after `delay` seconds.
@@ -190,6 +208,25 @@ mod tests {
         q.push_at(1.0, "early"); // in the past: clamp to now=2.0
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_depth() {
+        let mut q = EventQueue::with_capacity(8);
+        assert_eq!(q.high_water(), 0);
+        for i in 0..5 {
+            q.push_at(i as f64, i);
+        }
+        assert_eq!(q.high_water(), 5);
+        q.pop();
+        q.pop();
+        assert_eq!(q.len(), 3);
+        // Draining never lowers the peak; pushing past it raises it.
+        assert_eq!(q.high_water(), 5);
+        for i in 0..4 {
+            q.push_at(10.0 + i as f64, i);
+        }
+        assert_eq!(q.high_water(), 7);
     }
 
     #[test]

@@ -5,7 +5,19 @@
 //! time, outlier-robust statistics (median + MAD), and stable text output
 //! consumed by `EXPERIMENTS.md` — with `harness = false` bench binaries.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
+
+/// Schema tag of the machine-readable hot-path bench export
+/// (`BENCH_hotpath.json`) — the perf trajectory later PRs regress against.
+pub const BENCH_HOTPATH_SCHEMA: &str = "has-gpu/bench-hotpath/v1";
+
+/// One parser for the `HAS_BENCH_FAST=1` smoke-mode contract: short
+/// measurement windows and shortened bench workloads (CI). Benches and the
+/// [`Harness`] must agree on this, so neither parses the env var itself.
+pub fn fast_mode() -> bool {
+    std::env::var("HAS_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -25,6 +37,29 @@ impl BenchResult {
     pub fn throughput(&self) -> Option<f64> {
         self.elements
             .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+
+    /// Machine-readable form (durations in nanoseconds; `throughput` in
+    /// elements/second when an element count was given).
+    pub fn to_json(&self) -> Json {
+        let ns = |d: Duration| Json::Num(d.as_nanos() as f64);
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("median_ns", ns(self.median)),
+            ("mean_ns", ns(self.mean)),
+            ("mad_ns", ns(self.mad)),
+            ("min_ns", ns(self.min)),
+            ("max_ns", ns(self.max)),
+            (
+                "elements",
+                self.elements.map_or(Json::Null, |e| Json::Num(e as f64)),
+            ),
+            (
+                "throughput",
+                self.throughput().map_or(Json::Null, Json::Num),
+            ),
+        ])
     }
 
     pub fn report(&self) -> String {
@@ -70,7 +105,7 @@ pub struct Harness {
 impl Harness {
     pub fn new(group: &str) -> Self {
         // Benches accept HAS_BENCH_FAST=1 to run quickly in CI/tests.
-        let fast = std::env::var("HAS_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        let fast = fast_mode();
         println!("\n=== bench group: {group} ===");
         Harness {
             group: group.to_string(),
@@ -159,6 +194,24 @@ impl Harness {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// The whole group as JSON under `schema` (e.g.
+    /// [`BENCH_HOTPATH_SCHEMA`]): `{schema, group, results: [...]}`.
+    pub fn to_json(&self, schema: &str) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(schema.to_string())),
+            ("group", Json::Str(self.group.clone())),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Export the group through [`crate::util::json::write_file`].
+    pub fn write_json(&self, path: &std::path::Path, schema: &str) -> anyhow::Result<()> {
+        crate::util::json::write_file(path, &self.to_json(schema))
+    }
 }
 
 /// Prevent the optimiser from eliding a computed value (stable-rust black_box).
@@ -221,6 +274,39 @@ mod tests {
         assert!(r.median.as_nanos() > 0);
         assert!(r.min <= r.median && r.median <= r.max);
         assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn bench_json_export_roundtrips() {
+        std::env::set_var("HAS_BENCH_FAST", "1");
+        let mut h = Harness::new("jsontest")
+            .with_times(Duration::from_millis(5), Duration::from_millis(20));
+        h.bench_elems("spin", Some(100), || {
+            black_box((0..100).sum::<u64>());
+        });
+        let j = h.to_json(BENCH_HOTPATH_SCHEMA);
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), BENCH_HOTPATH_SCHEMA);
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.get("name").unwrap().as_str().unwrap(), "jsontest/spin");
+        assert!(r.get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("throughput").unwrap().as_f64().unwrap() > 0.0);
+        // Serialised text parses back with the same result count.
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 1);
+        // And the file writer lands it on disk.
+        let dir = std::env::temp_dir().join("has_gpu_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_hotpath.json");
+        h.write_json(&path, BENCH_HOTPATH_SCHEMA).unwrap();
+        let loaded = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(
+            loaded.get("schema").unwrap().as_str().unwrap(),
+            BENCH_HOTPATH_SCHEMA
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! FeaturePlan / batched-forward parity: the cached extraction split and the
+//! row-batched lattice forward must be **bit-identical** to fresh per-query
+//! extraction and scalar forwards for every zoo model across the full probe
+//! lattice. This is the contract that lets the autoscaler and the sim share
+//! plan-cached predictors without perturbing the byte-identical
+//! `BENCH_sim.json` export.
+
+use has_gpu::model::zoo::{zoo_graph, ALL_ZOO};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::features::{extract, FeatureMode, FeaturePlan};
+use has_gpu::rapp::{CachedPredictor, LatencyPredictor, RappPredictor, RappWeights};
+
+/// The seed's feature extraction, frozen **verbatim** (modulo imports) from
+/// the pre-FeaturePlan `rapp::features::extract`. This is the independent
+/// reference that pins the historical f32 operation order: the production
+/// `extract` now delegates to `FeaturePlan`, so comparing plan output against
+/// production `extract` alone would be tautological. Do not "clean this up" —
+/// its sole job is to stay byte-for-byte faithful to the seed arithmetic.
+mod seed_reference {
+    use has_gpu::model::{OpGraph, OpKind, NUM_OP_KINDS};
+    use has_gpu::perf::PerfModel;
+    use has_gpu::rapp::features::{FeatureMode, F_OP_STATIC};
+
+    pub struct SeedFeatures {
+        pub op_feats: Vec<Vec<f32>>,
+        pub graph_feats: Vec<f32>,
+        pub edges: Vec<(usize, usize)>,
+    }
+
+    pub fn extract(
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quota: f64,
+        perf: &PerfModel,
+        mode: FeatureMode,
+    ) -> SeedFeatures {
+        let b = batch as f64;
+        let mut op_feats = Vec::with_capacity(g.nodes.len());
+        for op in &g.nodes {
+            let mut f = Vec::with_capacity(mode.f_op());
+            // One-hot kind.
+            for k in 0..NUM_OP_KINDS {
+                f.push(if op.kind.index() == k { 1.0 } else { 0.0 });
+            }
+            // Static shape descriptors (normalised to O(1) ranges).
+            f.push(ln1p(op.flops * b / 1e6) as f32);
+            f.push(ln1p((op.bytes * b + 4.0 * op.params) / 1e6) as f32);
+            f.push(ln1p(op.params / 1e6) as f32);
+            f.push(op.kernel as f32 / 7.0);
+            f.push(op.stride as f32 / 4.0);
+            f.push(op.cin as f32 / 1024.0);
+            f.push(op.cout as f32 / 1024.0);
+            f.push(op.spatial as f32 / 256.0);
+            f.push((b.log2() / 5.0) as f32);
+            // Runtime priors: profiled op time at the 6 SM points, full quota.
+            if mode == FeatureMode::Full {
+                for &sm_p in PerfModel::PROFILE_SMS.iter() {
+                    f.push(ln1p(perf.op_time(op, batch, sm_p) * 1e3) as f32);
+                }
+            }
+            op_feats.push(f);
+        }
+
+        let mut gf = Vec::with_capacity(mode.f_g());
+        gf.push(ln1p(g.total_flops(batch) / 1e9) as f32);
+        gf.push(ln1p(g.total_bytes(batch) / 1e9) as f32);
+        gf.push(ln1p(g.total_params() / 1e6) as f32);
+        gf.push(g.nodes.len() as f32 / 64.0);
+        gf.push(g.count_kind(OpKind::Conv2d) as f32 / 32.0);
+        gf.push((g.count_kind(OpKind::Dense) + g.count_kind(OpKind::MatMul)) as f32 / 32.0);
+        gf.push(g.depth() as f32 / 64.0);
+        gf.push((b.log2() / 5.0) as f32);
+        gf.push(sm as f32);
+        gf.push(quota as f32);
+        // Runtime priors: graph latency at the 5 quota points (full SM), then
+        // raw graph time at the 6 SM points (full quota).
+        if mode == FeatureMode::Full {
+            for &q_p in PerfModel::PROFILE_QUOTAS.iter() {
+                gf.push(ln1p(perf.latency(g, batch, 1.0, q_p) * 1e3) as f32);
+            }
+            for &sm_p in PerfModel::PROFILE_SMS.iter() {
+                gf.push(ln1p(perf.raw_graph_time(g, batch, sm_p) * 1e3) as f32);
+            }
+            let a = anchor(g, &op_feats, sm, quota, perf.dev.window);
+            gf.push(a);
+        }
+
+        SeedFeatures {
+            op_feats,
+            graph_feats: gf,
+            edges: g.edges.clone(),
+        }
+    }
+
+    #[inline]
+    fn ln1p(x: f64) -> f64 {
+        (1.0 + x).ln()
+    }
+
+    /// Seed's piecewise-linear interpolation, frozen verbatim.
+    fn interp(xs: &[f64], ys: &[f32], x: f64) -> f64 {
+        if x <= xs[0] {
+            return ys[0] as f64;
+        }
+        if x >= xs[xs.len() - 1] {
+            return ys[ys.len() - 1] as f64;
+        }
+        for i in 0..xs.len() - 1 {
+            if x <= xs[i + 1] {
+                let t = (x - xs[i]) / (xs[i + 1] - xs[i]);
+                return ys[i] as f64 * (1.0 - t) + ys[i + 1] as f64 * t;
+            }
+        }
+        ys[ys.len() - 1] as f64
+    }
+
+    /// Seed's anchor (probe-interpolated token-window replay), frozen
+    /// verbatim — including the `Vec`-built ln-SM axis.
+    fn anchor(g: &OpGraph, op_feats: &[Vec<f32>], sm: f64, quota: f64, window: f64) -> f32 {
+        let ln_sms: Vec<f64> = PerfModel::PROFILE_SMS.iter().map(|s| s.ln()).collect();
+        let ln_sm = sm.clamp(1e-3, 1.0).ln();
+        let mut now = 0.0f64;
+        let mut budget = quota * window;
+        let mut boundary = window;
+        for (i, node) in g.nodes.iter().enumerate() {
+            let ln_t = interp(&ln_sms, &op_feats[i][F_OP_STATIC..F_OP_STATIC + 6], ln_sm);
+            let t_est = ln_t.exp_m1() / 1e3; // invert ln1p(ms)
+            let k = node.kernels.max(1);
+            let d = t_est / k as f64;
+            for _ in 0..k {
+                if boundary <= now {
+                    let skipped = ((now - boundary) / window).floor() + 1.0;
+                    boundary += skipped * window;
+                    budget = quota * window;
+                }
+                if budget <= 0.0 {
+                    now = boundary;
+                    boundary += window;
+                    budget = quota * window;
+                }
+                now += d;
+                budget -= d;
+            }
+        }
+        // ln(ms), matching the regression target's transform exactly.
+        (now * 1e3).max(1e-9).ln() as f32
+    }
+}
+
+/// The (sm, quota) probe lattice the scaling sweeps walk: every per-mille
+/// decile on both axes.
+fn lattice() -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    for smi in [1u32, 2, 4, 7, 10] {
+        for qi in 1..=10u32 {
+            out.push((smi as f64 / 10.0, qi as f64 / 10.0));
+        }
+    }
+    out
+}
+
+#[test]
+fn plan_cached_extraction_bit_identical_to_seed_extract() {
+    // Three-way pin across the full probe lattice: the frozen SEED extraction
+    // (the independent reference — production `extract` now delegates to
+    // FeaturePlan, so comparing only those two would be tautological), the
+    // production one-shot `extract`, and a single cached plan reused across
+    // every query.
+    let pm = PerfModel::default();
+    for m in ALL_ZOO {
+        let g = zoo_graph(m);
+        for mode in [FeatureMode::Full, FeatureMode::StaticOnly] {
+            for batch in [1u32, 8] {
+                let plan = FeaturePlan::new(&g, batch, &pm, mode);
+                let mut gf = Vec::new();
+                for (sm, quota) in lattice() {
+                    let seed = seed_reference::extract(&g, batch, sm, quota, &pm, mode);
+                    let fresh = extract(&g, batch, sm, quota, &pm, mode);
+                    plan.fill_graph_feats(sm, quota, &mut gf);
+                    assert_eq!(gf.len(), seed.graph_feats.len());
+                    assert_eq!(fresh.graph_feats.len(), seed.graph_feats.len());
+                    for (c, ((a, b), s)) in gf
+                        .iter()
+                        .zip(&fresh.graph_feats)
+                        .zip(&seed.graph_feats)
+                        .enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            s.to_bits(),
+                            "{m:?} {mode:?} b{batch} sm={sm} q={quota} graph col {c}: plan vs seed"
+                        );
+                        assert_eq!(
+                            b.to_bits(),
+                            s.to_bits(),
+                            "{m:?} {mode:?} b{batch} sm={sm} q={quota} graph col {c}: extract vs seed"
+                        );
+                    }
+                    for (i, seed_row) in seed.op_feats.iter().enumerate() {
+                        let plan_row = plan.op_row(i);
+                        assert_eq!(plan_row.len(), seed_row.len());
+                        assert_eq!(fresh.op_feats[i].len(), seed_row.len());
+                        for (c, (a, s)) in plan_row.iter().zip(seed_row).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                s.to_bits(),
+                                "{m:?} {mode:?} b{batch} node {i} op col {c}: plan vs seed"
+                            );
+                            assert_eq!(
+                                fresh.op_feats[i][c].to_bits(),
+                                s.to_bits(),
+                                "{m:?} {mode:?} b{batch} node {i} op col {c}: extract vs seed"
+                            );
+                        }
+                    }
+                    assert_eq!(seed.edges, plan.edges);
+                    assert_eq!(fresh.edges, plan.edges);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_forward_bit_identical_to_scalar_across_lattice() {
+    let pm = PerfModel::default();
+    let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    for mode in [FeatureMode::Full, FeatureMode::StaticOnly] {
+        // Shared predictor (warm plans) and a twin that stays cold per query:
+        // plan reuse must not change a single bit.
+        let warm = RappPredictor::new(RappWeights::random(mode, 32, 17), pm.clone());
+        let cold = RappPredictor::new(RappWeights::random(mode, 32, 17), pm.clone());
+        for m in ALL_ZOO {
+            let g = zoo_graph(m);
+            for &sm in &[0.2, 0.5, 1.0] {
+                let mut batched = Vec::new();
+                warm.forward_batch(&g, 8, sm, &quotas, &mut batched);
+                assert_eq!(batched.len(), quotas.len());
+                for (&q, &b) in quotas.iter().zip(&batched) {
+                    let scalar = warm.forward(&g, 8, sm, q);
+                    assert_eq!(
+                        scalar.to_bits(),
+                        b.to_bits(),
+                        "{m:?} {mode:?} sm={sm} q={q}: batched vs scalar"
+                    );
+                    cold.reset_plan_cache();
+                    let fresh = cold.forward(&g, 8, sm, q);
+                    assert_eq!(
+                        scalar.to_bits(),
+                        fresh.to_bits(),
+                        "{m:?} {mode:?} sm={sm} q={q}: warm plan vs cold plan"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_predictor_lattice_sweep_matches_scalar_latencies() {
+    let pm = PerfModel::default();
+    let rapp = RappPredictor::new(
+        RappWeights::random(FeatureMode::Full, 32, 23),
+        pm.clone(),
+    );
+    let reference = RappPredictor::new(
+        RappWeights::random(FeatureMode::Full, 32, 23),
+        pm.clone(),
+    );
+    let cached = CachedPredictor::new(&rapp);
+    let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    let mut out = Vec::new();
+    for m in ALL_ZOO {
+        let g = zoo_graph(m);
+        cached.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        for (&q, &v) in quotas.iter().zip(&out) {
+            assert_eq!(
+                v,
+                reference.latency(&g, 8, 0.5, q),
+                "{m:?} q={q}: cached sweep vs fresh scalar latency"
+            );
+            // Re-query scalar through the same cache: identical.
+            assert_eq!(v, cached.latency(&g, 8, 0.5, q));
+        }
+    }
+}
