@@ -6,7 +6,7 @@ mod common;
 use common::{functions, trace};
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
 use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
-use has_gpu::metrics::RunReport;
+use has_gpu::metrics::{BillingMode, RunReport};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::OraclePredictor;
 use has_gpu::sim::{run_sim, SimConfig};
@@ -27,7 +27,7 @@ fn run_all(preset: Preset, seconds: usize) -> Vec<RunReport> {
     for (policy, whole) in policies.iter_mut() {
         let cfg = SimConfig {
             n_gpus: 10,
-            bill_whole_gpu: *whole,
+            billing: BillingMode::from_whole_gpu(*whole),
             ..SimConfig::default()
         };
         out.push(run_sim(policy.as_mut(), &fns, &tr, &pred, &perf, &cfg));

@@ -8,6 +8,7 @@ use common::functions;
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
 use has_gpu::cluster::reconfigurator::place_pod;
 use has_gpu::cluster::{ClusterState, GpuId, Reconfigurator};
+use has_gpu::metrics::BillingMode;
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::features::{extract, FeatureMode, FeaturePlan};
@@ -249,7 +250,7 @@ fn main() {
                 &trace,
                 &pred,
                 &perf,
-                &SimConfig::for_experiment(10, 11, false),
+                &SimConfig::for_experiment(10, 11, BillingMode::FineGrained),
             );
             peak = r.event_queue_peak;
             black_box(r.total_served());

@@ -87,7 +87,10 @@ impl KalmanFilter {
 
 /// Scaling policy interface shared by HAS-GPU and the baseline platforms.
 pub trait ScalingPolicy: Send {
-    fn name(&self) -> &'static str;
+    /// The platform name this policy serves under — for registry-built
+    /// policies this is the `PlatformSpec` name, so run reports key on the
+    /// same strings as the scenario-matrix export.
+    fn name(&self) -> &str;
 
     /// Plan scaling actions for one function given the *observed* RPS of the
     /// last interval. The harness applies the actions via the Re-configurator.
@@ -99,6 +102,34 @@ pub trait ScalingPolicy: Send {
         predictor: &dyn LatencyPredictor,
         now: f64,
     ) -> Vec<ScalingAction>;
+}
+
+/// Which scaling axes Algorithm 1 may exercise. `Both` is the paper's
+/// hybrid algorithm; the single-axis restrictions power the
+/// `has-vertical-only` / `has-horizontal-only` ablation platforms in the
+/// scenario matrix — the *same* policy code under a config restriction,
+/// never a fork, so ablation deltas measure exactly the removed axis.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScalingAxes {
+    /// Vertical quota re-writes + horizontal replica scaling (Algorithm 1).
+    #[default]
+    Both,
+    /// Quota re-writes only. A function with zero pods cannot scale
+    /// vertically, so the bootstrap pod may still be created; after that no
+    /// replica is ever added or removed.
+    VerticalOnly,
+    /// Replica adds/removes only; pod quotas are frozen at creation.
+    HorizontalOnly,
+}
+
+impl ScalingAxes {
+    pub fn vertical(self) -> bool {
+        matches!(self, ScalingAxes::Both | ScalingAxes::VerticalOnly)
+    }
+
+    pub fn horizontal(self) -> bool {
+        matches!(self, ScalingAxes::Both | ScalingAxes::HorizontalOnly)
+    }
 }
 
 /// Tunables of Algorithm 1.
@@ -125,6 +156,9 @@ pub struct HybridConfig {
     /// New pods start at most at this quota so they retain vertical runway
     /// for the next burst (the whole point of quota-based vertical scaling).
     pub headroom_quota: QuotaMille,
+    /// Which scaling axes the algorithm may exercise (`Both` = Algorithm 1;
+    /// the single-axis values express the ablation platforms).
+    pub scaling_axes: ScalingAxes,
 }
 
 impl Default for HybridConfig {
@@ -141,6 +175,7 @@ impl Default for HybridConfig {
             kalman: (16.0, 4.0),
             slo_margin: 0.75,
             headroom_quota: 600,
+            scaling_axes: ScalingAxes::Both,
         }
     }
 }
@@ -154,6 +189,9 @@ const NEAR_ZERO_RPS: f64 = 1e-3;
 /// The paper's hybrid auto-scaler.
 pub struct HybridAutoscaler {
     pub cfg: HybridConfig,
+    /// Platform name this instance serves under ("has-gpu" for the stock
+    /// policy; ablation platforms set their registry name via [`Self::named`]).
+    name: String,
     filters: BTreeMap<String, KalmanFilter>,
     last_scale_down: BTreeMap<String, f64>,
     /// Reusable quota-lattice sweep buffers (quotas, latencies) — the
@@ -165,8 +203,15 @@ pub struct HybridAutoscaler {
 
 impl HybridAutoscaler {
     pub fn new(cfg: HybridConfig) -> Self {
+        Self::named("has-gpu", cfg)
+    }
+
+    /// A hybrid scaler that self-reports `name` (the platform registry uses
+    /// this so ablation variants report their own registry names).
+    pub fn named(name: impl Into<String>, cfg: HybridConfig) -> Self {
         HybridAutoscaler {
             cfg,
+            name: name.into(),
             filters: BTreeMap::new(),
             last_scale_down: BTreeMap::new(),
             q_buf: Vec::new(),
@@ -299,8 +344,8 @@ impl HybridAutoscaler {
 }
 
 impl ScalingPolicy for HybridAutoscaler {
-    fn name(&self) -> &'static str {
-        "has-gpu"
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn plan(
@@ -327,6 +372,11 @@ impl ScalingPolicy for HybridAutoscaler {
             .into_iter()
             .filter(|p| p.phase != PodPhase::Draining)
             .collect();
+        // Axis restrictions (ablation platforms). A function with zero pods
+        // cannot scale vertically, so the bootstrap pod is always allowed —
+        // vertical-only platforms still come up, then never add replicas.
+        let vertical = cfg.scaling_axes.vertical();
+        let horizontal = cfg.scaling_axes.horizontal() || pods.is_empty();
         // Line 1: C_f = Σ C_{P_i}.
         let caps: BTreeMap<_, _> = pods
             .iter()
@@ -340,7 +390,8 @@ impl ScalingPolicy for HybridAutoscaler {
             // Line 3: pods with more SMs first.
             pods.sort_by(|a, b| b.sm.cmp(&a.sm).then(a.id.0.cmp(&b.id.0)));
             // Vertical scale-up (lines 4-9).
-            for pod in &pods {
+            let vertical_pods: &[&Pod] = if vertical { &pods } else { &[] };
+            for pod in vertical_pods {
                 if delta_r <= 0.0 {
                     break;
                 }
@@ -372,7 +423,7 @@ impl ScalingPolicy for HybridAutoscaler {
                 }
             }
             // Horizontal scale-up to the least-occupied used GPU (lines 10-17).
-            if delta_r > 0.0 {
+            if delta_r > 0.0 && horizontal {
                 if let Some(gpu) = cluster.least_occupied_used_gpu() {
                     if let Some((s_max, q_max)) = cluster.gpu(gpu).max_avail_sm_quota() {
                         let smf = crate::vgpu::sm_to_f64(s_max);
@@ -420,7 +471,7 @@ impl ScalingPolicy for HybridAutoscaler {
                 }
             }
             // Horizontal scale-up to a new GPU (lines 18-19).
-            if delta_r > 0.0 {
+            if delta_r > 0.0 && horizontal {
                 if let Some(gpu) = cluster.idle_gpu() {
                     let (sm, quota) = self.most_efficient_slice(f, delta_r, predictor);
                     actions.push(ScalingAction::CreatePod {
@@ -463,13 +514,18 @@ impl ScalingPolicy for HybridAutoscaler {
                 // relaxed to exactly the SLO — minimal keep-alive resources
                 // without risking the first request.
                 let margin = if r < NEAR_ZERO_RPS { 1.0 } else { cfg.slo_margin };
-                let floor = self
-                    .min_slo_quota(f, pod.sm, predictor, margin)
-                    .max(cfg.min_quota);
+                // The quota floor only matters when vertical scaling may
+                // shrink quotas; horizontal-only skips the lattice sweep.
+                let floor = if vertical {
+                    self.min_slo_quota(f, pod.sm, predictor, margin)
+                        .max(cfg.min_quota)
+                } else {
+                    cfg.min_quota
+                };
                 // Reduce stepwise while capacity stays above target (line 22).
                 let mut n = 0u32;
                 let mut freed = 0.0;
-                while pod.quota >= floor + cfg.quota_step * (n + 1) {
+                while vertical && pod.quota >= floor + cfg.quota_step * (n + 1) {
                     let q_new = pod.quota - cfg.quota_step * (n + 1);
                     let cap_new = predictor.capacity(
                         &f.graph,
@@ -486,7 +542,11 @@ impl ScalingPolicy for HybridAutoscaler {
                 // At least one pod is always retained (keep-alive: avoids the
                 // cold start of scaling from zero, line 20's R_min clause).
                 let keep_alive = remaining_pods == 1;
-                if pod.quota <= floor && !keep_alive {
+                // With vertical scaling a pod must sit at its floor before
+                // removal; horizontal-only cannot shrink quotas, so any
+                // surplus pod is a removal candidate.
+                let at_removal_gate = if vertical { pod.quota <= floor } else { true };
+                if horizontal && at_removal_gate && !keep_alive {
                     // Quota would hit zero: horizontal scale-down (lines 23-24)
                     // — but only if capacity after removal still covers r.
                     if c_remaining - base_cap >= r.max(0.0) || base_cap <= 0.0 {
@@ -801,6 +861,127 @@ mod tests {
                 assert_eq!(hs.min_slo_quota(&spec, sm, &pred, margin), want, "sm={sm}");
             }
         }
+    }
+
+    #[test]
+    fn vertical_only_bootstraps_then_never_goes_horizontal() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pred = OraclePredictor::default();
+        let cfg = HybridConfig {
+            scaling_axes: ScalingAxes::VerticalOnly,
+            ..HybridConfig::default()
+        };
+        let mut hs = HybridAutoscaler::named("has-vertical-only", cfg);
+        assert_eq!(hs.name(), "has-vertical-only");
+        // Zero pods: the bootstrap pod is the one permitted horizontal act.
+        let boot = hs.plan(&spec, 20.0, &c, &pred, 0.0);
+        assert!(
+            boot.iter().any(|a| matches!(a, ScalingAction::CreatePod { .. })),
+            "bootstrap must create the first pod: {boot:?}"
+        );
+        // With a pod at full quota (vertical runway exhausted), even huge
+        // demand must not add replicas.
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
+        for t in 1..20 {
+            let actions = hs.plan(&spec, cap * 10.0, &c, &pred, t as f64);
+            assert!(
+                !actions.iter().any(|a| matches!(a, ScalingAction::CreatePod { .. })),
+                "{actions:?}"
+            );
+            assert!(
+                !actions.iter().any(|a| matches!(a, ScalingAction::RemovePod { .. })),
+                "{actions:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn vertical_only_still_scales_quota_up() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pod =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let cfg = HybridConfig {
+            scaling_axes: ScalingAxes::VerticalOnly,
+            ..HybridConfig::default()
+        };
+        let mut hs = HybridAutoscaler::new(cfg);
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
+        let actions = hs.plan(&spec, cap * 1.3, &c, &pred, 10.0);
+        assert!(
+            matches!(actions.as_slice(), [ScalingAction::SetQuota { pod: p, quota }] if *p == pod && *quota > 300),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn horizontal_only_never_rewrites_quota() {
+        let (mut c, mut recon, pm, spec) = setup();
+        // Pod with vertical headroom a hybrid scaler would use first.
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let cfg = HybridConfig {
+            scaling_axes: ScalingAxes::HorizontalOnly,
+            ..HybridConfig::default()
+        };
+        let mut hs = HybridAutoscaler::named("has-horizontal-only", cfg);
+        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
+        let actions = hs.plan(&spec, cap * 1.5, &c, &pred, 10.0);
+        assert!(
+            !actions.iter().any(|a| matches!(a, ScalingAction::SetQuota { .. })),
+            "{actions:?}"
+        );
+        assert!(
+            actions.iter().any(|a| matches!(a, ScalingAction::CreatePod { .. })),
+            "must scale out instead: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn horizontal_only_scale_down_removes_surplus_pods_without_quota_writes() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let p1 =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 400, 8, 0.0).unwrap();
+        let p2 =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 400, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let cfg = HybridConfig {
+            scaling_axes: ScalingAxes::HorizontalOnly,
+            ..HybridConfig::default()
+        };
+        let mut hs = HybridAutoscaler::new(cfg);
+        // Converge the filter to idle, then let the cooldown expire.
+        let mut removed = Vec::new();
+        for t in 0..60 {
+            for a in hs.plan(&spec, 0.0, &c, &pred, t as f64 * 40.0) {
+                match a {
+                    ScalingAction::RemovePod { pod } => {
+                        recon
+                            .apply(&mut c, &pm, &ScalingAction::RemovePod { pod }, 0.0)
+                            .unwrap();
+                        removed.push(pod);
+                    }
+                    ScalingAction::SetQuota { .. } => {
+                        panic!("horizontal-only must not rewrite quotas")
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+        // Exactly one of the two pods goes; keep-alive retains the other.
+        assert_eq!(removed.len(), 1, "{removed:?}");
+        assert!(removed[0] == p1 || removed[0] == p2);
+    }
+
+    #[test]
+    fn both_axes_config_is_the_default_and_permits_everything() {
+        let cfg = HybridConfig::default();
+        assert_eq!(cfg.scaling_axes, ScalingAxes::Both);
+        assert!(ScalingAxes::Both.vertical() && ScalingAxes::Both.horizontal());
+        assert!(ScalingAxes::VerticalOnly.vertical() && !ScalingAxes::VerticalOnly.horizontal());
+        assert!(!ScalingAxes::HorizontalOnly.vertical());
+        assert!(ScalingAxes::HorizontalOnly.horizontal());
     }
 
     #[test]

@@ -45,7 +45,7 @@ impl Default for KServePolicy {
 }
 
 impl ScalingPolicy for KServePolicy {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "kserve"
     }
 
@@ -194,7 +194,7 @@ impl FastGSharePolicy {
 }
 
 impl ScalingPolicy for FastGSharePolicy {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "fast-gshare"
     }
 

@@ -5,8 +5,12 @@
 //! simulations but **grids** of `platform × workload preset × seed` runs.
 //! This module makes that grid a first-class artifact:
 //!
-//! * [`ScenarioMatrix`] declares the grid (platforms, presets, seeds,
-//!   trace length, cluster size, base rate);
+//! * [`PlatformRegistry`] (see [`platform`]) describes the comparison
+//!   surface as open [`PlatformSpec`] descriptors — the stock trio, the
+//!   single-axis / static-predictor ablations, and any caller-registered
+//!   comparator;
+//! * [`ScenarioMatrix`] declares the grid (platform names resolved against
+//!   the registry, presets, seeds, trace length, cluster size, base rate);
 //! * [`ScenarioMatrix::run`] shards the cells across
 //!   [`ThreadPool::scope_for`] — each cell is an independent, fully-seeded
 //!   [`run_sim`] invocation, so results are **bit-identical for any
@@ -18,15 +22,21 @@
 //!   machine-readable perf trajectory later PRs regress against.
 //!
 //! The `has-gpu expt` subcommand is the CLI entry point; `has-gpu simulate`
-//! is a single-cell special case of the same path.
+//! is a single-cell special case of the same path. For stock-trio grids the
+//! export is byte-identical to the pre-registry (closed-enum) output —
+//! pinned by `rust/tests/expt_golden.rs`; ablation platforms extend the
+//! grid without perturbing existing cells.
 
-use crate::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
-use crate::baselines::{FastGSharePolicy, KServePolicy};
+pub mod platform;
+
+pub use platform::{
+    billing_label, PlatformGroup, PlatformRegistry, PlatformSpec, PolicyFactory, PredictorSel,
+};
+
 use crate::cluster::FunctionSpec;
 use crate::metrics::RunReport;
 use crate::model::zoo::{zoo_graph, ZooModel};
 use crate::perf::PerfModel;
-use crate::rapp::OraclePredictor;
 use crate::sim::{run_sim, SimConfig};
 use crate::util::bench::ascii_table;
 use crate::util::json::Json;
@@ -34,47 +44,9 @@ use crate::util::threadpool::ThreadPool;
 use crate::workload::{Preset, TraceGen, ALL_PRESETS};
 use std::sync::Mutex;
 
-/// A serving platform under comparison (paper §4.3's A/B design: identical
-/// substrate, workload, and metrics — only the scaling policy differs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-pub enum Platform {
-    HasGpu,
-    KServe,
-    FastGShare,
-}
-
-/// Every platform, in the canonical matrix order.
-pub const ALL_PLATFORMS: [Platform; 3] = [Platform::HasGpu, Platform::KServe, Platform::FastGShare];
-
-impl Platform {
-    pub fn name(self) -> &'static str {
-        match self {
-            Platform::HasGpu => "has-gpu",
-            Platform::KServe => "kserve",
-            Platform::FastGShare => "fast-gshare",
-        }
-    }
-
-    pub fn from_name(s: &str) -> Option<Self> {
-        ALL_PLATFORMS.iter().copied().find(|p| p.name() == s)
-    }
-
-    /// A fresh scaling policy for one cell (policies are stateful; every
-    /// cell gets its own instance so cells stay independent).
-    pub fn policy(self) -> Box<dyn ScalingPolicy> {
-        match self {
-            Platform::HasGpu => Box::new(HybridAutoscaler::new(HybridConfig::default())),
-            Platform::KServe => Box::new(KServePolicy::default()),
-            Platform::FastGShare => Box::new(FastGSharePolicy::default()),
-        }
-    }
-
-    /// KServe bills whole GPUs (exclusive allocation); the shared platforms
-    /// bill the sm×quota slice.
-    pub fn bill_whole_gpu(self) -> bool {
-        matches!(self, Platform::KServe)
-    }
-}
+/// The registry name of the paper's own platform — the denominator of every
+/// headline ratio.
+pub const HAS_GPU: &str = "has-gpu";
 
 /// The benchmark function set shared by every cell (paper §4: MLPerf-style
 /// zoo minus ResNet-152, which stays the Fig. 4 profiling subject).
@@ -102,18 +74,23 @@ pub fn experiment_functions() -> Vec<FunctionSpec> {
         .collect()
 }
 
-/// One grid cell: a platform run against one preset instance at one seed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// One grid cell: a platform (by registry name) run against one preset
+/// instance at one seed.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ScenarioCell {
-    pub platform: Platform,
+    pub platform: String,
     pub preset: Preset,
     pub seed: u64,
 }
 
-/// Declarative description of the experiment grid.
+/// Declarative description of the experiment grid. `platforms` holds
+/// canonical registry names (use [`parse_platforms`] /
+/// [`PlatformRegistry::resolve`] to produce them); `registry` supplies the
+/// descriptors [`ScenarioMatrix::run_cell`] builds each cell from.
 #[derive(Clone, Debug)]
 pub struct ScenarioMatrix {
-    pub platforms: Vec<Platform>,
+    pub platforms: Vec<String>,
+    pub registry: PlatformRegistry,
     pub presets: Vec<Preset>,
     pub seeds: Vec<u64>,
     /// Trace length per cell in virtual seconds.
@@ -126,8 +103,15 @@ pub struct ScenarioMatrix {
 
 impl Default for ScenarioMatrix {
     fn default() -> Self {
+        let registry = PlatformRegistry::default();
+        let platforms = registry
+            .group_names(PlatformGroup::Stock)
+            .into_iter()
+            .map(str::to_string)
+            .collect();
         ScenarioMatrix {
-            platforms: ALL_PLATFORMS.to_vec(),
+            platforms,
+            registry,
             presets: vec![Preset::Standard],
             seeds: vec![11],
             seconds: 300,
@@ -145,9 +129,13 @@ impl ScenarioMatrix {
         let mut out =
             Vec::with_capacity(self.presets.len() * self.platforms.len() * self.seeds.len());
         for &preset in &self.presets {
-            for &platform in &self.platforms {
+            for platform in &self.platforms {
                 for &seed in &self.seeds {
-                    out.push(ScenarioCell { platform, preset, seed });
+                    out.push(ScenarioCell {
+                        platform: platform.clone(),
+                        preset,
+                        seed,
+                    });
                 }
             }
         }
@@ -155,27 +143,46 @@ impl ScenarioMatrix {
     }
 
     /// Run one cell end-to-end. Everything a cell touches (trace, policy,
-    /// predictor, cluster, RNG streams) is constructed locally from the
-    /// cell's coordinates, so a cell's result is a pure function of
-    /// `(platform, preset, seed, matrix config)` — the property behind the
-    /// `--jobs`-independence guarantee.
+    /// predictor, cluster, RNG streams) is built locally from the cell's
+    /// coordinates through its [`PlatformSpec`], so a cell's result is a
+    /// pure function of `(platform, preset, seed, matrix config)` — the
+    /// property behind the `--jobs`-independence guarantee.
+    ///
+    /// Panics if `cell.platform` is not in `self.registry` — construct the
+    /// platform list through [`parse_platforms`] / `registry.resolve` to
+    /// guarantee membership.
     pub fn run_cell(&self, cell: &ScenarioCell) -> (RunReport, CellResult) {
+        let spec = self.registry.get(&cell.platform).unwrap_or_else(|| {
+            panic!(
+                "platform '{}' not in registry (known: {})",
+                cell.platform,
+                self.registry.names().join(", ")
+            )
+        });
+        // Lookup is case-insensitive; the *result* always keys on the
+        // canonical registry name so summaries, ratios, and the policy's
+        // self-reported name agree regardless of the caller's casing.
+        let canonical = ScenarioCell {
+            platform: spec.name.clone(),
+            preset: cell.preset,
+            seed: cell.seed,
+        };
         let fns = experiment_functions();
         let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
         let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
             .generate(&names);
         let perf = PerfModel::default();
-        let predictor = OraclePredictor::default();
-        let mut policy = cell.platform.policy();
+        let predictor = spec.build_predictor();
+        let mut policy = spec.policy();
         let report = run_sim(
             policy.as_mut(),
             &fns,
             &trace,
-            &predictor,
+            predictor.as_ref(),
             &perf,
-            &SimConfig::for_experiment(self.gpus, cell.seed, cell.platform.bill_whole_gpu()),
+            &SimConfig::for_experiment(self.gpus, cell.seed, spec.billing),
         );
-        let result = CellResult::from_report(cell, &fns, &report);
+        let result = CellResult::from_report(&canonical, &fns, &report);
         (report, result)
     }
 
@@ -233,43 +240,46 @@ pub fn parse_seeds(spec: &str, base: u64) -> anyhow::Result<Vec<u64>> {
     Ok((0..n).map(|i| base + i).collect())
 }
 
-/// Parse a platform selection (one `--platforms` list entry per element):
-/// `["all"]` or platform names.
-pub fn parse_platforms(specs: &[String]) -> anyhow::Result<Vec<Platform>> {
-    if specs.len() == 1 && specs[0] == "all" {
-        return Ok(ALL_PLATFORMS.to_vec());
-    }
-    anyhow::ensure!(!specs.is_empty(), "need at least one platform");
-    specs
-        .iter()
-        .map(|s| {
-            Platform::from_name(s).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "unknown platform '{s}' (expected one of: has-gpu, kserve, fast-gshare, all)"
-                )
-            })
-        })
-        .collect()
+/// Parse a platform selection (one `--platforms` list entry per element)
+/// against the registry: names and the group tokens `all` (stock trio) /
+/// `ablations`, case-insensitive, deduplicated in first-appearance order.
+/// Unknown names error with the full registry menu.
+pub fn parse_platforms(
+    specs: &[String],
+    registry: &PlatformRegistry,
+) -> anyhow::Result<Vec<String>> {
+    registry.resolve(specs)
 }
 
 /// Parse a preset selection (one `--preset` list entry per element):
-/// `["all"]` or preset names.
+/// preset names and the `all` group token, case-insensitive, deduplicated
+/// in first-appearance order.
 pub fn parse_presets(specs: &[String]) -> anyhow::Result<Vec<Preset>> {
-    if specs.len() == 1 && specs[0] == "all" {
-        return Ok(ALL_PRESETS.to_vec());
-    }
     anyhow::ensure!(!specs.is_empty(), "need at least one preset");
-    specs
-        .iter()
-        .map(|s| {
-            Preset::from_name(s).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "unknown preset '{s}' (expected one of: standard, stress, diurnal, \
-                     spiky-burst, all)"
-                )
-            })
-        })
-        .collect()
+    let mut out: Vec<Preset> = Vec::new();
+    let mut push = |p: Preset, out: &mut Vec<Preset>| {
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    };
+    for s in specs {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("all") {
+            for p in ALL_PRESETS {
+                push(p, &mut out);
+            }
+        } else if let Some(p) = Preset::from_name(t) {
+            push(p, &mut out);
+        } else {
+            let valid: Vec<&str> = ALL_PRESETS.iter().map(|p| p.name()).collect();
+            anyhow::bail!(
+                "unknown preset '{t}' (expected one of: {}, or 'all')",
+                valid.join(", ")
+            );
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "need at least one preset");
+    Ok(out)
 }
 
 /// Per-function slice of one cell's result.
@@ -322,10 +332,10 @@ impl FunctionCellMetrics {
     }
 }
 
-/// Aggregated metrics of one grid cell.
+/// Aggregated metrics of one grid cell, keyed by registry platform name.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellResult {
-    pub platform: Platform,
+    pub platform: String,
     pub preset: Preset,
     pub seed: u64,
     pub served: usize,
@@ -386,7 +396,7 @@ impl CellResult {
             })
             .collect();
         CellResult {
-            platform: cell.platform,
+            platform: cell.platform.clone(),
             preset: cell.preset,
             seed: cell.seed,
             served,
@@ -410,7 +420,7 @@ impl CellResult {
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("platform", Json::Str(self.platform.name().to_string())),
+            ("platform", Json::Str(self.platform.clone())),
             ("preset", Json::Str(self.preset.name().to_string())),
             ("seed", Json::Num(self.seed as f64)),
             ("served", Json::Num(self.served as f64)),
@@ -429,9 +439,11 @@ impl CellResult {
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
-        let platform_name = j.get("platform")?.as_str()?;
-        let platform = Platform::from_name(platform_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown platform '{platform_name}'"))?;
+        // Platform names are open registry keys, not a closed enum: any
+        // non-empty name parses, so grids with ablation or caller-registered
+        // platforms round-trip.
+        let platform = j.get("platform")?.as_str()?.to_string();
+        anyhow::ensure!(!platform.is_empty(), "cell platform name must be non-empty");
         let preset_name = j.get("preset")?.as_str()?;
         let preset = Preset::from_name(preset_name)
             .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset_name}'"))?;
@@ -465,7 +477,7 @@ impl CellResult {
 #[derive(Clone, Debug, PartialEq)]
 pub struct SummaryRow {
     pub preset: Preset,
-    pub platform: Platform,
+    pub platform: String,
     pub cells: usize,
     pub slo_violation_rate: f64,
     pub p99_latency: f64,
@@ -475,11 +487,12 @@ pub struct SummaryRow {
 
 /// The paper's headline comparison for one (preset, baseline) pair:
 /// baseline ÷ HAS-GPU ratios, seeds averaged first. A ratio is `None` when
-/// HAS-GPU's own mean is zero (the ratio is undefined, not huge).
+/// HAS-GPU's own mean is zero (the ratio is undefined, not huge). Ablation
+/// platforms get ratio rows too — that is the hybrid-vs-single-axis table.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HeadlineRatio {
     pub preset: Preset,
-    pub platform: Platform,
+    pub platform: String,
     /// baseline $/1k over HAS-GPU $/1k (paper: 10.8x for KServe).
     pub cost_ratio: Option<f64>,
     /// baseline violation rate over HAS-GPU's (paper: 4.8x for FaST-GShare).
@@ -502,10 +515,10 @@ impl MatrixReport {
     /// Seed-averaged rows per (preset, platform), in first-appearance order
     /// (which is the canonical cell order when produced by `run`).
     pub fn summary(&self) -> Vec<SummaryRow> {
-        let mut order: Vec<(Preset, Platform)> = Vec::new();
+        let mut order: Vec<(Preset, &str)> = Vec::new();
         for c in &self.cells {
-            if !order.contains(&(c.preset, c.platform)) {
-                order.push((c.preset, c.platform));
+            if !order.contains(&(c.preset, c.platform.as_str())) {
+                order.push((c.preset, c.platform.as_str()));
             }
         }
         order
@@ -519,7 +532,7 @@ impl MatrixReport {
                 let n = group.len() as f64;
                 SummaryRow {
                     preset,
-                    platform,
+                    platform: platform.to_string(),
                     cells: group.len(),
                     slo_violation_rate: group.iter().map(|c| c.slo_violation_rate).sum::<f64>()
                         / n,
@@ -538,18 +551,18 @@ impl MatrixReport {
         let ratio = |num: f64, den: f64| if den > 0.0 { Some(num / den) } else { None };
         let mut out = Vec::new();
         for row in &summary {
-            if row.platform == Platform::HasGpu {
+            if row.platform == HAS_GPU {
                 continue;
             }
             let Some(has) = summary
                 .iter()
-                .find(|r| r.preset == row.preset && r.platform == Platform::HasGpu)
+                .find(|r| r.preset == row.preset && r.platform == HAS_GPU)
             else {
                 continue;
             };
             out.push(HeadlineRatio {
                 preset: row.preset,
-                platform: row.platform,
+                platform: row.platform.clone(),
                 cost_ratio: ratio(row.cost_per_1k, has.cost_per_1k),
                 violation_ratio: ratio(row.slo_violation_rate, has.slo_violation_rate),
             });
@@ -565,7 +578,7 @@ impl MatrixReport {
             .map(|r| {
                 vec![
                     r.preset.name().to_string(),
-                    r.platform.name().to_string(),
+                    r.platform.clone(),
                     format!("{}", r.cells),
                     format!("{:.4}", r.slo_violation_rate),
                     format!("{:.1}", r.p99_latency * 1e3),
@@ -587,7 +600,7 @@ impl MatrixReport {
                 .map(|r| {
                     Json::obj(vec![
                         ("preset", Json::Str(r.preset.name().to_string())),
-                        ("platform", Json::Str(r.platform.name().to_string())),
+                        ("platform", Json::Str(r.platform.clone())),
                         ("cells", Json::Num(r.cells as f64)),
                         ("slo_violation_rate", Json::Num(r.slo_violation_rate)),
                         ("p99_latency", Json::Num(r.p99_latency)),
@@ -604,7 +617,7 @@ impl MatrixReport {
                 .map(|r| {
                     Json::obj(vec![
                         ("preset", Json::Str(r.preset.name().to_string())),
-                        ("platform", Json::Str(r.platform.name().to_string())),
+                        ("platform", Json::Str(r.platform.clone())),
                         ("cost_ratio", opt_num(r.cost_ratio)),
                         ("violation_ratio", opt_num(r.violation_ratio)),
                     ])
@@ -655,22 +668,37 @@ impl MatrixReport {
 mod tests {
     use super::*;
 
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn trio() -> Vec<String> {
+        strs(&["has-gpu", "kserve", "fast-gshare"])
+    }
+
     #[test]
-    fn platform_names_roundtrip_and_match_policies() {
-        for p in ALL_PLATFORMS {
-            assert_eq!(Platform::from_name(p.name()), Some(p));
+    fn registry_names_resolve_and_match_policies() {
+        let reg = PlatformRegistry::default();
+        for spec in reg.specs() {
+            assert_eq!(reg.get(&spec.name).unwrap().name, spec.name);
             // The policy self-reports the same platform name the matrix uses.
-            assert_eq!(p.policy().name(), p.name());
+            assert_eq!(spec.policy().name(), spec.name);
         }
-        assert_eq!(Platform::from_name("nope"), None);
-        assert!(Platform::KServe.bill_whole_gpu());
-        assert!(!Platform::HasGpu.bill_whole_gpu());
+        assert!(reg.get("nope").is_none());
+        assert_eq!(
+            reg.get("kserve").unwrap().billing,
+            crate::metrics::BillingMode::WholeGpu
+        );
+        assert_eq!(
+            reg.get("has-gpu").unwrap().billing,
+            crate::metrics::BillingMode::FineGrained
+        );
     }
 
     #[test]
     fn cells_enumerate_in_canonical_order() {
         let m = ScenarioMatrix {
-            platforms: vec![Platform::HasGpu, Platform::KServe],
+            platforms: strs(&["has-gpu", "kserve"]),
             presets: vec![Preset::Standard, Preset::Stress],
             seeds: vec![1, 2],
             ..ScenarioMatrix::default()
@@ -679,10 +707,10 @@ mod tests {
         assert_eq!(cells.len(), 8);
         // Preset-major, then platform, then seed.
         assert_eq!(cells[0].preset, Preset::Standard);
-        assert_eq!(cells[0].platform, Platform::HasGpu);
+        assert_eq!(cells[0].platform, "has-gpu");
         assert_eq!(cells[0].seed, 1);
         assert_eq!(cells[1].seed, 2);
-        assert_eq!(cells[2].platform, Platform::KServe);
+        assert_eq!(cells[2].platform, "kserve");
         assert_eq!(cells[4].preset, Preset::Stress);
     }
 
@@ -696,41 +724,57 @@ mod tests {
         assert!(parse_seeds(",", 11).is_err(), "all-empty list must not run 0 cells");
     }
 
-    fn strs(xs: &[&str]) -> Vec<String> {
-        xs.iter().map(|s| s.to_string()).collect()
-    }
-
     #[test]
     fn platform_and_preset_spec_parsing() {
-        assert_eq!(parse_platforms(&strs(&["all"])).unwrap(), ALL_PLATFORMS.to_vec());
+        let reg = PlatformRegistry::default();
+        assert_eq!(parse_platforms(&strs(&["all"]), &reg).unwrap(), trio());
         assert_eq!(
-            parse_platforms(&strs(&["kserve", "has-gpu"])).unwrap(),
-            vec![Platform::KServe, Platform::HasGpu]
+            parse_platforms(&strs(&["kserve", "has-gpu"]), &reg).unwrap(),
+            strs(&["kserve", "has-gpu"])
         );
-        assert!(parse_platforms(&strs(&["gke"])).is_err());
-        assert!(parse_platforms(&[]).is_err());
+        // Case-insensitive, and groups compose.
+        assert_eq!(
+            parse_platforms(&strs(&["KServe"]), &reg).unwrap(),
+            strs(&["kserve"])
+        );
+        assert_eq!(
+            parse_platforms(&strs(&["all", "ablations"]), &reg).unwrap().len(),
+            6
+        );
+        // Unknown names list the registry.
+        let err = parse_platforms(&strs(&["gke"]), &reg).unwrap_err().to_string();
+        assert!(err.contains("fast-gshare") && err.contains("has-vertical-only"), "{err}");
+        assert!(parse_platforms(&[], &reg).is_err());
+
         assert_eq!(parse_presets(&strs(&["all"])).unwrap(), ALL_PRESETS.to_vec());
         assert_eq!(
             parse_presets(&strs(&["diurnal", "spiky-burst"])).unwrap(),
             vec![Preset::Diurnal, Preset::SpikyBurst]
         );
-        assert!(parse_presets(&strs(&["weekend"])).is_err());
+        assert_eq!(
+            parse_presets(&strs(&["STANDARD"])).unwrap(),
+            vec![Preset::Standard],
+            "preset names are case-insensitive"
+        );
+        let err = parse_presets(&strs(&["weekend"])).unwrap_err().to_string();
+        assert!(err.contains("standard") && err.contains("spiky-burst"), "{err}");
         assert!(parse_presets(&[]).is_err());
     }
 
     #[test]
     fn single_cell_run_populates_metrics() {
         let m = ScenarioMatrix {
-            platforms: vec![Platform::HasGpu],
+            platforms: strs(&["has-gpu"]),
             presets: vec![Preset::Standard],
             seeds: vec![7],
             seconds: 60,
             gpus: 6,
             rps: 60.0,
+            ..ScenarioMatrix::default()
         };
-        let cell = m.cells()[0];
+        let cell = m.cells()[0].clone();
         let (report, result) = m.run_cell(&cell);
-        assert_eq!(result.platform, Platform::HasGpu);
+        assert_eq!(result.platform, "has-gpu");
         assert_eq!(result.seed, 7);
         assert!(result.served > 100, "served {}", result.served);
         assert_eq!(result.served, report.total_served());
@@ -745,10 +789,48 @@ mod tests {
     }
 
     #[test]
-    fn summary_and_ratios_from_synthetic_cells() {
-        let mk = |platform, seed, viol: f64, cost_per_1k: f64| CellResult {
-            platform,
+    fn run_cell_canonicalizes_the_platform_name() {
+        // The matrix fields are pub, so a caller can bypass parse_platforms
+        // with non-canonical casing; the result must still key on the
+        // registry name or summaries/ratios would split on case.
+        let m = ScenarioMatrix {
+            platforms: strs(&["HAS-GPU"]),
+            presets: vec![Preset::Standard],
+            seeds: vec![2],
+            seconds: 30,
+            gpus: 4,
+            rps: 20.0,
+            ..ScenarioMatrix::default()
+        };
+        let cell = m.cells()[0].clone();
+        assert_eq!(cell.platform, "HAS-GPU");
+        let (report, result) = m.run_cell(&cell);
+        assert_eq!(result.platform, "has-gpu");
+        assert_eq!(report.platform, "has-gpu");
+    }
+
+    #[test]
+    #[should_panic(expected = "not in registry")]
+    fn run_cell_panics_on_unregistered_platform() {
+        let m = ScenarioMatrix::default();
+        let cell = ScenarioCell {
+            platform: "not-a-platform".into(),
             preset: Preset::Standard,
+            seed: 1,
+        };
+        let _ = m.run_cell(&cell);
+    }
+
+    fn mk_cell(
+        platform: &str,
+        preset: Preset,
+        seed: u64,
+        viol: f64,
+        cost_per_1k: f64,
+    ) -> CellResult {
+        CellResult {
+            platform: platform.to_string(),
+            preset,
             seed,
             served: 1000,
             dropped: 0,
@@ -762,16 +844,20 @@ mod tests {
             horizontal_ups: 0,
             horizontal_downs: 0,
             functions: Vec::new(),
-        };
+        }
+    }
+
+    #[test]
+    fn summary_and_ratios_from_synthetic_cells() {
         let report = MatrixReport {
             seconds: 60,
             gpus: 4,
             rps: 50.0,
             cells: vec![
-                mk(Platform::HasGpu, 1, 0.01, 1.0),
-                mk(Platform::HasGpu, 2, 0.03, 3.0),
-                mk(Platform::KServe, 1, 0.10, 20.0),
-                mk(Platform::KServe, 2, 0.10, 24.0),
+                mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
+                mk_cell("has-gpu", Preset::Standard, 2, 0.03, 3.0),
+                mk_cell("kserve", Preset::Standard, 1, 0.10, 20.0),
+                mk_cell("kserve", Preset::Standard, 2, 0.10, 24.0),
             ],
         };
         let summary = report.summary();
@@ -780,15 +866,37 @@ mod tests {
         assert!((summary[1].cost_per_1k - 22.0).abs() < 1e-12);
         let ratios = report.ratios_vs_has_gpu();
         assert_eq!(ratios.len(), 1);
-        assert_eq!(ratios[0].platform, Platform::KServe);
+        assert_eq!(ratios[0].platform, "kserve");
         assert!((ratios[0].cost_ratio.unwrap() - 11.0).abs() < 1e-9);
         assert!((ratios[0].violation_ratio.unwrap() - 5.0).abs() < 1e-9);
     }
 
     #[test]
+    fn ablation_platforms_get_ratio_rows_too() {
+        // The hybrid-vs-single-axis table is the same ratio machinery: any
+        // non-has-gpu platform in the grid gets a baseline÷HAS row.
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            cells: vec![
+                mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
+                mk_cell("has-vertical-only", Preset::Standard, 1, 0.08, 1.5),
+                mk_cell("has-horizontal-only", Preset::Standard, 1, 0.04, 2.0),
+            ],
+        };
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios.len(), 2);
+        assert_eq!(ratios[0].platform, "has-vertical-only");
+        assert!((ratios[0].violation_ratio.unwrap() - 8.0).abs() < 1e-9);
+        assert_eq!(ratios[1].platform, "has-horizontal-only");
+        assert!((ratios[1].cost_ratio.unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn zero_denominator_ratio_is_undefined_not_huge() {
-        let mk = |platform, viol: f64| CellResult {
-            platform,
+        let mk = |platform: &str, viol: f64| CellResult {
+            platform: platform.to_string(),
             preset: Preset::Diurnal,
             seed: 1,
             served: 100,
@@ -808,7 +916,7 @@ mod tests {
             seconds: 60,
             gpus: 4,
             rps: 50.0,
-            cells: vec![mk(Platform::HasGpu, 0.0), mk(Platform::KServe, 0.02)],
+            cells: vec![mk("has-gpu", 0.0), mk("kserve", 0.02)],
         };
         let ratios = report.ratios_vs_has_gpu();
         assert_eq!(ratios[0].violation_ratio, None);
@@ -826,7 +934,7 @@ mod tests {
             gpus: 2,
             rps: 10.0,
             cells: vec![CellResult {
-                platform: Platform::FastGShare,
+                platform: "fast-gshare".to_string(),
                 preset: Preset::SpikyBurst,
                 seed: 42,
                 served: 10,
@@ -861,6 +969,24 @@ mod tests {
         // Table renders every summary row.
         assert!(report.table().contains("spiky-burst"));
         assert!(report.table().contains("fast-gshare"));
+    }
+
+    #[test]
+    fn custom_platform_cells_roundtrip_through_json() {
+        // Open registry ⇒ open export: a caller-registered platform's cells
+        // parse back without any enum to amend.
+        let report = MatrixReport {
+            seconds: 10,
+            gpus: 1,
+            rps: 1.0,
+            cells: vec![mk_cell("esg-pipeline", Preset::Standard, 1, 0.5, 9.0)],
+        };
+        let j = report.to_json();
+        let back = MatrixReport::from_json(&j).unwrap();
+        assert_eq!(back, report);
+        // Empty platform names are still rejected.
+        let bad = Json::obj(vec![("platform", Json::Str(String::new()))]);
+        assert!(CellResult::from_json(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,656 @@
+//! The open platform registry: [`PlatformSpec`] descriptors replace the old
+//! closed `Platform` enum.
+//!
+//! A *platform* is everything the scenario matrix varies between cells of
+//! one (preset, seed) column: the scaling policy, the billing mode, and the
+//! latency predictor the policy plans with. The seed hard-coded three
+//! variants in `match` arms; the registry makes the comparison surface
+//! data — the stock trio and the paper's ablation platforms ship
+//! pre-registered, and callers can [`PlatformRegistry::register`] their own
+//! comparators (an ESG-style pipeline scheduler, a Torpor-style SLO-aware
+//! policy, …) without touching `expt` internals.
+//!
+//! **Name stability contract:** a spec's `name` is the key used in
+//! `BENCH_sim.json` cells, summary rows, and headline ratios. Names of
+//! registered platforms are part of the export schema and must never be
+//! reused for a different configuration; renaming one is a schema change.
+//! The stock trio (`has-gpu`, `kserve`, `fast-gshare`) keeps its exact
+//! enum-era output bytes — pinned by `rust/tests/expt_golden.rs`.
+
+use crate::autoscaler::{HybridAutoscaler, HybridConfig, ScalingAxes, ScalingPolicy};
+use crate::baselines::{FastGSharePolicy, KServePolicy};
+use crate::metrics::BillingMode;
+use crate::perf::PerfModel;
+use crate::rapp::dippm::DippmPredictor;
+use crate::rapp::features::FeatureMode;
+use crate::rapp::{LatencyPredictor, OraclePredictor, RappPredictor, RappWeights};
+use crate::util::bench::ascii_table;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+/// Which latency predictor drives a platform's scaling decisions (the serve
+/// path always uses the ground-truth surface; this selects the *planning*
+/// model, paper Fig. 5's comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorSel {
+    /// The ground-truth `PerfModel` ("perfectly profiled" upper bound).
+    Oracle,
+    /// The trained RaPP GAT+MLP (runtime-prior features).
+    Rapp,
+    /// The DIPPM static-feature baseline from [`crate::rapp::dippm`].
+    Dippm,
+}
+
+/// Deterministic weight seeds for the no-artifacts fallback (see
+/// [`PredictorSel::build`]).
+const RAPP_FALLBACK_SEED: u64 = 0x4A;
+const DIPPM_FALLBACK_SEED: u64 = 0xD1;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Resolve one learned-weights source exactly once per process: trained
+/// weights from `rust/artifacts/<file>` when present, the deterministic
+/// seeded fallback when absent. Caching here (a) avoids re-reading and
+/// re-parsing the JSON for every grid cell and (b) guarantees every cell
+/// of a run sees the *same* weights even if the artifacts file appears or
+/// vanishes mid-run — cells stay pure functions of their coordinates.
+///
+/// A file that exists but fails to load is a hard error (panic): silently
+/// degrading a trained platform to untrained weights would export garbage
+/// under the same registry name, violating the name stability contract.
+fn cached_weights(
+    slot: &'static OnceLock<RappWeights>,
+    file: &str,
+    fallback_mode: FeatureMode,
+    fallback_seed: u64,
+) -> RappWeights {
+    slot.get_or_init(|| {
+        let path = artifacts_dir().join(file);
+        if path.exists() {
+            match RappWeights::load(&path) {
+                Ok(w) => w,
+                Err(e) => panic!(
+                    "weights at {} are present but unloadable (refusing to \
+                     silently fall back to untrained weights): {e}",
+                    path.display()
+                ),
+            }
+        } else {
+            RappWeights::random(fallback_mode, 32, fallback_seed)
+        }
+    })
+    .clone()
+}
+
+static RAPP_WEIGHTS: OnceLock<RappWeights> = OnceLock::new();
+static DIPPM_WEIGHTS: OnceLock<RappWeights> = OnceLock::new();
+
+impl PredictorSel {
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorSel::Oracle => "oracle",
+            PredictorSel::Rapp => "rapp",
+            PredictorSel::Dippm => "dippm",
+        }
+    }
+
+    /// Build a fresh predictor instance for one cell. Learned predictors
+    /// take their trained weights from `rust/artifacts/` when present (read
+    /// and parsed once per process, see [`cached_weights`]); when the file
+    /// is absent they fall back to *deterministic* seeded random weights —
+    /// decision quality degrades (which is exactly what the predictor
+    /// ablation measures against the oracle), but every cell remains a pure
+    /// function of its coordinates, preserving the `--jobs`-independence
+    /// and cross-run reproducibility guarantees. A present-but-unloadable
+    /// weights file panics rather than degrading silently.
+    pub fn build(self) -> Box<dyn LatencyPredictor> {
+        match self {
+            PredictorSel::Oracle => Box::new(OraclePredictor::default()),
+            PredictorSel::Rapp => Box::new(RappPredictor::new(
+                cached_weights(
+                    &RAPP_WEIGHTS,
+                    "rapp_weights.json",
+                    FeatureMode::Full,
+                    RAPP_FALLBACK_SEED,
+                ),
+                PerfModel::default(),
+            )),
+            PredictorSel::Dippm => Box::new(
+                DippmPredictor::new(
+                    cached_weights(
+                        &DIPPM_WEIGHTS,
+                        "dippm_weights.json",
+                        FeatureMode::StaticOnly,
+                        DIPPM_FALLBACK_SEED,
+                    ),
+                    PerfModel::default(),
+                )
+                .expect("dippm weights must be static-only mode"),
+            ),
+        }
+    }
+}
+
+/// Registry grouping, used by the CLI group tokens (`all`, `ablations`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlatformGroup {
+    /// The paper's §4.3 comparison trio. The `all` group token.
+    Stock,
+    /// Single-axis / static-predictor ablations. The `ablations` group token.
+    Ablation,
+    /// Caller-registered comparators.
+    Custom,
+}
+
+impl PlatformGroup {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlatformGroup::Stock => "stock",
+            PlatformGroup::Ablation => "ablation",
+            PlatformGroup::Custom => "custom",
+        }
+    }
+}
+
+/// A fresh, stateful scaling policy per cell (cells stay independent).
+pub type PolicyFactory = Arc<dyn Fn() -> Box<dyn ScalingPolicy> + Send + Sync>;
+
+/// Descriptor of one serving platform under comparison: stable name, policy
+/// factory, billing mode, predictor selector, and (for hybrid-family
+/// platforms) the `HybridConfig` the factory instantiates — the ablations
+/// are config restrictions of the same policy, never forks.
+#[derive(Clone)]
+pub struct PlatformSpec {
+    /// Stable registry key; exported verbatim in `BENCH_sim.json` (see the
+    /// name stability contract in the module docs).
+    pub name: String,
+    /// One-line description for `--help` and the `platforms` subcommand.
+    pub about: String,
+    pub group: PlatformGroup,
+    pub billing: BillingMode,
+    pub predictor: PredictorSel,
+    /// Present on hybrid-family platforms: the exact config the factory
+    /// builds, introspectable so tests can assert ablations differ from the
+    /// stock policy *only* in the intended knob.
+    pub hybrid: Option<HybridConfig>,
+    factory: PolicyFactory,
+}
+
+impl fmt::Debug for PlatformSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PlatformSpec")
+            .field("name", &self.name)
+            .field("group", &self.group)
+            .field("billing", &self.billing)
+            .field("predictor", &self.predictor)
+            .field("hybrid", &self.hybrid)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Human label for a billing mode (CLI tables and error messages).
+pub fn billing_label(mode: BillingMode) -> &'static str {
+    match mode {
+        BillingMode::FineGrained => "fine-grained",
+        BillingMode::WholeGpu => "whole-gpu",
+    }
+}
+
+impl PlatformSpec {
+    /// Fully custom descriptor. `factory` must return a *fresh* policy on
+    /// every call (policies are stateful and cells must stay independent)
+    /// whose [`ScalingPolicy::name`] equals the spec name —
+    /// [`PlatformRegistry::register`] enforces the agreement.
+    pub fn new<F>(
+        name: impl Into<String>,
+        about: impl Into<String>,
+        billing: BillingMode,
+        predictor: PredictorSel,
+        factory: F,
+    ) -> Self
+    where
+        F: Fn() -> Box<dyn ScalingPolicy> + Send + Sync + 'static,
+    {
+        PlatformSpec {
+            name: name.into(),
+            about: about.into(),
+            group: PlatformGroup::Custom,
+            billing,
+            predictor,
+            hybrid: None,
+            factory: Arc::new(factory),
+        }
+    }
+
+    /// A hybrid-family platform: `HybridAutoscaler` under `cfg`, billed
+    /// fine-grained, planning with the oracle predictor by default. The
+    /// policy self-reports the platform name (so `RunReport.platform`
+    /// matches the registry key even for ablation variants).
+    pub fn hybrid(name: impl Into<String>, about: impl Into<String>, cfg: HybridConfig) -> Self {
+        let name = name.into();
+        let factory_name = name.clone();
+        let factory_cfg = cfg.clone();
+        PlatformSpec {
+            name,
+            about: about.into(),
+            group: PlatformGroup::Custom,
+            billing: BillingMode::FineGrained,
+            predictor: PredictorSel::Oracle,
+            hybrid: Some(cfg),
+            factory: Arc::new(move || {
+                Box::new(HybridAutoscaler::named(factory_name.clone(), factory_cfg.clone()))
+                    as Box<dyn ScalingPolicy>
+            }),
+        }
+    }
+
+    pub fn with_group(mut self, group: PlatformGroup) -> Self {
+        self.group = group;
+        self
+    }
+
+    pub fn with_predictor(mut self, predictor: PredictorSel) -> Self {
+        self.predictor = predictor;
+        self
+    }
+
+    pub fn with_billing(mut self, billing: BillingMode) -> Self {
+        self.billing = billing;
+        self
+    }
+
+    /// A fresh scaling policy for one cell.
+    pub fn policy(&self) -> Box<dyn ScalingPolicy> {
+        (self.factory)()
+    }
+
+    /// A fresh planning predictor for one cell.
+    pub fn build_predictor(&self) -> Box<dyn LatencyPredictor> {
+        self.predictor.build()
+    }
+}
+
+/// Ordered collection of [`PlatformSpec`]s. Registration order is the
+/// canonical matrix order: group tokens (`all`, `ablations`) expand in this
+/// order, so the stock trio enumerates exactly as the old enum's
+/// `ALL_PLATFORMS` did.
+#[derive(Clone, Debug)]
+pub struct PlatformRegistry {
+    specs: Vec<PlatformSpec>,
+}
+
+impl Default for PlatformRegistry {
+    /// The stock trio plus the paper-motivated ablations, in canonical
+    /// order: `has-gpu`, `kserve`, `fast-gshare`, `has-vertical-only`,
+    /// `has-horizontal-only`, `has-dippm`.
+    fn default() -> Self {
+        let mut reg = PlatformRegistry::empty();
+        let stock = |s: PlatformSpec| s.with_group(PlatformGroup::Stock);
+        let ablation = |s: PlatformSpec| s.with_group(PlatformGroup::Ablation);
+        reg.register(stock(PlatformSpec::hybrid(
+            "has-gpu",
+            "hybrid vertical+horizontal auto-scaling (paper Algorithm 1)",
+            HybridConfig::default(),
+        )))
+        .unwrap();
+        reg.register(stock(PlatformSpec::new(
+            "kserve",
+            "whole-GPU pods, horizontal-only (mainstream GPU serverless)",
+            BillingMode::WholeGpu,
+            PredictorSel::Oracle,
+            || Box::new(KServePolicy::default()),
+        )))
+        .unwrap();
+        reg.register(stock(PlatformSpec::new(
+            "fast-gshare",
+            "fixed fine-grained slice per function, horizontal-only",
+            BillingMode::FineGrained,
+            PredictorSel::Oracle,
+            || Box::new(FastGSharePolicy::default()),
+        )))
+        .unwrap();
+        reg.register(ablation(PlatformSpec::hybrid(
+            "has-vertical-only",
+            "HAS-GPU restricted to quota re-writes (no replica scaling)",
+            HybridConfig {
+                scaling_axes: ScalingAxes::VerticalOnly,
+                ..HybridConfig::default()
+            },
+        )))
+        .unwrap();
+        reg.register(ablation(PlatformSpec::hybrid(
+            "has-horizontal-only",
+            "HAS-GPU restricted to replica scaling (quotas frozen at creation)",
+            HybridConfig {
+                scaling_axes: ScalingAxes::HorizontalOnly,
+                ..HybridConfig::default()
+            },
+        )))
+        .unwrap();
+        reg.register(ablation(
+            PlatformSpec::hybrid(
+                "has-dippm",
+                "HAS-GPU planning with the static-feature DIPPM predictor",
+                HybridConfig::default(),
+            )
+            .with_predictor(PredictorSel::Dippm),
+        ))
+        .unwrap();
+        reg
+    }
+}
+
+impl PlatformRegistry {
+    /// An empty registry (build your own comparison surface from scratch).
+    pub fn empty() -> Self {
+        PlatformRegistry { specs: Vec::new() }
+    }
+
+    /// Append a spec. Names are case-insensitive keys; duplicates are
+    /// rejected (the name stability contract forbids silent redefinition),
+    /// as are names the CLI could never select: the reserved group tokens
+    /// (`all`, `ablations`) and names containing the list separator `,`.
+    pub fn register(&mut self, spec: PlatformSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(!spec.name.is_empty(), "platform name must be non-empty");
+        anyhow::ensure!(
+            spec.name.trim() == spec.name,
+            "platform name '{}' must not have surrounding whitespace \
+             (lookups trim their query, so the entry would be unreachable)",
+            spec.name
+        );
+        anyhow::ensure!(
+            !["all", "ablations"]
+                .iter()
+                .any(|r| spec.name.eq_ignore_ascii_case(r)),
+            "platform name '{}' is a reserved group token",
+            spec.name
+        );
+        anyhow::ensure!(
+            !spec.name.contains(','),
+            "platform name '{}' must not contain ',' (the CLI list separator)",
+            spec.name
+        );
+        anyhow::ensure!(
+            self.get(&spec.name).is_none(),
+            "platform '{}' is already registered",
+            spec.name
+        );
+        // RunReport keys on the policy's self-reported name while the grid
+        // keys on the registry name; they must agree or a run's report and
+        // its cell would claim different platforms.
+        let reported = spec.policy().name().to_string();
+        anyhow::ensure!(
+            reported == spec.name,
+            "platform '{}': its policy factory self-reports '{reported}' — wrap the policy so \
+             `ScalingPolicy::name()` returns the registry key",
+            spec.name
+        );
+        self.specs.push(spec);
+        Ok(())
+    }
+
+    /// Case-insensitive lookup.
+    pub fn get(&self, name: &str) -> Option<&PlatformSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name.trim()))
+    }
+
+    pub fn specs(&self) -> &[PlatformSpec] {
+        &self.specs
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn group_names(&self, group: PlatformGroup) -> Vec<&str> {
+        self.specs
+            .iter()
+            .filter(|s| s.group == group)
+            .map(|s| s.name.as_str())
+            .collect()
+    }
+
+    /// Expand a `--platforms` token list into canonical registry names:
+    /// each token is a platform name or a group (`all` = stock, `ablations`
+    /// = ablation entries), matched case-insensitively; duplicates collapse
+    /// to their first occurrence. Unknown tokens error with the full menu.
+    pub fn resolve(&self, tokens: &[String]) -> anyhow::Result<Vec<String>> {
+        anyhow::ensure!(!tokens.is_empty(), "need at least one platform");
+        let mut out: Vec<String> = Vec::new();
+        let mut push = |name: &str, out: &mut Vec<String>| {
+            if !out.iter().any(|n| n == name) {
+                out.push(name.to_string());
+            }
+        };
+        for tok in tokens {
+            let t = tok.trim();
+            if t.eq_ignore_ascii_case("all") {
+                for n in self.group_names(PlatformGroup::Stock) {
+                    push(n, &mut out);
+                }
+            } else if t.eq_ignore_ascii_case("ablations") {
+                for n in self.group_names(PlatformGroup::Ablation) {
+                    push(n, &mut out);
+                }
+            } else if let Some(spec) = self.get(t) {
+                let name = spec.name.clone();
+                push(&name, &mut out);
+            } else {
+                anyhow::bail!(
+                    "unknown platform '{t}' (expected one of: {}, or groups: all = stock trio, \
+                     ablations = ablation set)",
+                    self.names().join(", ")
+                );
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "need at least one platform");
+        Ok(out)
+    }
+
+    /// One-line inventory for `--help` text.
+    pub fn cli_help(&self) -> String {
+        format!(
+            "comma list of platform names/groups; names: {}; groups: all = {}, ablations = {}",
+            self.names().join(", "),
+            self.group_names(PlatformGroup::Stock).join("+"),
+            self.group_names(PlatformGroup::Ablation).join("+"),
+        )
+    }
+
+    /// The `has-gpu platforms` inventory table.
+    pub fn table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .specs
+            .iter()
+            .map(|s| {
+                vec![
+                    s.name.clone(),
+                    s.group.name().to_string(),
+                    billing_label(s.billing).to_string(),
+                    s.predictor.name().to_string(),
+                    s.about.clone(),
+                ]
+            })
+            .collect();
+        ascii_table(&["platform", "group", "billing", "predictor", "description"], &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_registry_has_stock_trio_then_ablations_in_canonical_order() {
+        let reg = PlatformRegistry::default();
+        assert_eq!(
+            reg.names(),
+            vec![
+                "has-gpu",
+                "kserve",
+                "fast-gshare",
+                "has-vertical-only",
+                "has-horizontal-only",
+                "has-dippm"
+            ]
+        );
+        assert_eq!(
+            reg.group_names(PlatformGroup::Stock),
+            vec!["has-gpu", "kserve", "fast-gshare"]
+        );
+        assert_eq!(
+            reg.group_names(PlatformGroup::Ablation),
+            vec!["has-vertical-only", "has-horizontal-only", "has-dippm"]
+        );
+    }
+
+    #[test]
+    fn stock_specs_reproduce_the_enum_era_configuration() {
+        let reg = PlatformRegistry::default();
+        let has = reg.get("has-gpu").unwrap();
+        assert_eq!(has.billing, BillingMode::FineGrained);
+        assert_eq!(has.predictor, PredictorSel::Oracle);
+        assert_eq!(has.hybrid.as_ref().unwrap().scaling_axes, ScalingAxes::Both);
+        let ks = reg.get("kserve").unwrap();
+        assert_eq!(ks.billing, BillingMode::WholeGpu);
+        assert_eq!(ks.predictor, PredictorSel::Oracle);
+        assert!(ks.hybrid.is_none());
+        let fg = reg.get("fast-gshare").unwrap();
+        assert_eq!(fg.billing, BillingMode::FineGrained);
+        // Policies self-report their registry names.
+        for s in reg.specs() {
+            assert_eq!(s.policy().name(), s.name, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn ablations_differ_from_stock_only_in_the_intended_knob() {
+        let reg = PlatformRegistry::default();
+        let stock = reg.get("has-gpu").unwrap().hybrid.clone().unwrap();
+        let vert = reg.get("has-vertical-only").unwrap().hybrid.clone().unwrap();
+        let horiz = reg.get("has-horizontal-only").unwrap().hybrid.clone().unwrap();
+        assert_eq!(vert.scaling_axes, ScalingAxes::VerticalOnly);
+        assert_eq!(horiz.scaling_axes, ScalingAxes::HorizontalOnly);
+        // Every other knob matches the stock config.
+        for cfg in [&vert, &horiz] {
+            assert_eq!(cfg.alpha, stock.alpha);
+            assert_eq!(cfg.beta, stock.beta);
+            assert_eq!(cfg.quota_step, stock.quota_step);
+            assert_eq!(cfg.cooldown, stock.cooldown);
+            assert_eq!(cfg.min_quota, stock.min_quota);
+            assert_eq!(cfg.default_sm, stock.default_sm);
+            assert_eq!(cfg.kalman, stock.kalman);
+            assert_eq!(cfg.slo_margin, stock.slo_margin);
+            assert_eq!(cfg.headroom_quota, stock.headroom_quota);
+        }
+        let dippm = reg.get("has-dippm").unwrap();
+        assert_eq!(dippm.predictor, PredictorSel::Dippm);
+        assert_eq!(dippm.hybrid.as_ref().unwrap().scaling_axes, ScalingAxes::Both);
+    }
+
+    #[test]
+    fn lookup_and_resolution_are_case_insensitive() {
+        let reg = PlatformRegistry::default();
+        assert_eq!(reg.get("KServe").unwrap().name, "kserve");
+        assert_eq!(reg.get(" HAS-GPU ").unwrap().name, "has-gpu");
+        let names = reg.resolve(&["ALL".to_string()]).unwrap();
+        assert_eq!(names, vec!["has-gpu", "kserve", "fast-gshare"]);
+        let one = reg.resolve(&["Has-Vertical-Only".to_string()]).unwrap();
+        assert_eq!(one, vec!["has-vertical-only"]);
+    }
+
+    #[test]
+    fn resolve_expands_groups_and_dedupes_preserving_order() {
+        let reg = PlatformRegistry::default();
+        let full = reg
+            .resolve(&["all".to_string(), "ablations".to_string()])
+            .unwrap();
+        assert_eq!(full.len(), 6, "{full:?}");
+        assert_eq!(full[0], "has-gpu");
+        assert_eq!(full[3], "has-vertical-only");
+        // Duplicates collapse to first occurrence.
+        let dup = reg
+            .resolve(&["kserve".to_string(), "all".to_string()])
+            .unwrap();
+        assert_eq!(dup, vec!["kserve", "has-gpu", "fast-gshare"]);
+    }
+
+    #[test]
+    fn unknown_platform_error_lists_the_registry() {
+        let reg = PlatformRegistry::default();
+        let err = reg.resolve(&["gke".to_string()]).unwrap_err().to_string();
+        for name in reg.names() {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        assert!(err.contains("all"), "{err}");
+        assert!(err.contains("ablations"), "{err}");
+        assert!(reg.resolve(&[]).is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_rejected_case_insensitively() {
+        let mut reg = PlatformRegistry::default();
+        let dup = PlatformSpec::hybrid("HAS-GPU", "shadow", HybridConfig::default());
+        assert!(reg.register(dup).is_err());
+        // Reserved group tokens and CLI-unreachable names are rejected too.
+        for bad in ["all", "Ablations", " all ", "a,b", "padded ", ""] {
+            let spec = PlatformSpec::hybrid(bad, "unreachable", HybridConfig::default());
+            assert!(reg.register(spec).is_err(), "'{bad}' must be rejected");
+        }
+        // A factory whose policy self-reports a different name is rejected:
+        // RunReport would otherwise claim another platform's key.
+        let mismatch = PlatformSpec::new(
+            "shadow-kserve",
+            "mislabelled comparator",
+            BillingMode::WholeGpu,
+            PredictorSel::Oracle,
+            || Box::new(KServePolicy::default()),
+        );
+        assert!(reg.register(mismatch).is_err());
+        // A self-consistent custom platform registers and resolves.
+        let custom = PlatformSpec::hybrid(
+            "my-platform",
+            "caller-registered comparator",
+            HybridConfig {
+                alpha: 0.9,
+                ..HybridConfig::default()
+            },
+        );
+        reg.register(custom).unwrap();
+        assert_eq!(reg.get("my-platform").unwrap().group, PlatformGroup::Custom);
+        assert_eq!(
+            reg.resolve(&["my-platform".to_string()]).unwrap(),
+            vec!["my-platform"]
+        );
+    }
+
+    #[test]
+    fn predictor_selectors_build_working_predictors() {
+        use crate::model::zoo::{zoo_graph, ZooModel};
+        let g = zoo_graph(ZooModel::MobileNetV2);
+        for sel in [PredictorSel::Oracle, PredictorSel::Rapp, PredictorSel::Dippm] {
+            let p = sel.build();
+            let l = p.latency(&g, 4, 0.5, 0.5);
+            assert!(l.is_finite() && l > 0.0, "{sel:?} latency {l}");
+            // Deterministic across fresh builds (artifacts or seeded fallback).
+            assert_eq!(sel.build().latency(&g, 4, 0.5, 0.5), l, "{sel:?}");
+        }
+    }
+
+    #[test]
+    fn registry_table_and_help_cover_every_platform() {
+        let reg = PlatformRegistry::default();
+        let table = reg.table();
+        let help = reg.cli_help();
+        for name in reg.names() {
+            assert!(table.contains(name), "table missing {name}");
+            assert!(help.contains(name), "help missing {name}");
+        }
+        assert!(table.contains("whole-gpu"));
+    }
+}

@@ -1,16 +1,18 @@
 //! `has-gpu` — the leader binary: the scenario-matrix experiment runner
-//! (`expt`), its single-cell special case (`simulate`), RaPP prediction
-//! (`predict`), trace synthesis (`trace-gen`), and the zoo inventory.
+//! (`expt`), its single-cell special case (`simulate`), the platform
+//! registry inventory (`platforms`), RaPP prediction (`predict`), trace
+//! synthesis (`trace-gen`), and the zoo inventory.
 
 use has_gpu::expt::{
-    experiment_functions, parse_platforms, parse_presets, parse_seeds, Platform, ScenarioMatrix,
+    experiment_functions, parse_platforms, parse_presets, parse_seeds, PlatformRegistry,
+    ScenarioMatrix,
 };
 use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::{LatencyPredictor, RappPredictor};
 use has_gpu::util::cli::Cli;
 use has_gpu::util::json;
-use has_gpu::workload::{Preset, TraceGen};
+use has_gpu::workload::TraceGen;
 use std::path::PathBuf;
 
 const USAGE: &str = "has-gpu — Hybrid Auto-scaling Serverless GPU inference (reproduction)
@@ -20,12 +22,13 @@ USAGE: has-gpu <COMMAND> [options]
 COMMANDS:
   expt       run a platform × preset × seed scenario matrix in parallel and
              export the comparison grid as JSON
-             [--platforms all|csv] [--preset standard|stress|diurnal|spiky-burst|all]
+             [--platforms all|ablations|csv of names] [--preset all|csv]
              [--seeds N|csv] [--seed-base S] [--seconds N] [--gpus N] [--rps R]
              [--jobs N] [--out PATH]
   simulate   run a single platform-vs-workload cell and print the report
-             [--platform has-gpu|kserve|fast-gshare] [--preset NAME]
+             [--platform NAME] [--preset NAME]
              [--seconds N] [--gpus N] [--rps R] [--seed S] [--json]
+  platforms  list the platform registry (names, groups, billing, predictor)
   predict    RaPP latency prediction (requires artifacts)
              [--model NAME] [--batch B] [--sm F] [--quota F]
   trace-gen  synthesise an Azure-style workload trace as JSON to stdout
@@ -33,7 +36,8 @@ COMMANDS:
   zoo        list benchmark models with FLOPs/params/baseline latency
   help       this message
 
-Run `has-gpu <COMMAND> --help` for per-command details.
+Platform and preset names are case-insensitive; `has-gpu platforms` prints
+the full registry. Run `has-gpu <COMMAND> --help` for per-command details.
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -42,6 +46,10 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "expt" => expt(argv),
         "simulate" => simulate(argv),
+        "platforms" => {
+            print!("{}", PlatformRegistry::default().table());
+            Ok(())
+        }
         "predict" => predict(argv),
         "trace-gen" => trace_gen(argv),
         "zoo" => {
@@ -69,8 +77,9 @@ fn main() -> anyhow::Result<()> {
 /// The scenario-matrix runner: shard `platform × preset × seed` cells over a
 /// thread pool, print the paper-style comparison table, export the grid.
 fn expt(argv: Vec<String>) -> anyhow::Result<()> {
+    let registry = PlatformRegistry::default();
     let args = Cli::new("has-gpu expt", "scenario-matrix experiment runner")
-        .opt("platforms", "all", "comma list of platforms, or 'all'")
+        .opt_dyn("platforms", "all", registry.cli_help())
         .opt("preset", "standard", "comma list of workload presets, or 'all'")
         .opt("seeds", "2", "seed count (expands from --seed-base) or comma list")
         .opt("seed-base", "11", "first seed when --seeds is a count")
@@ -80,8 +89,10 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("jobs", "0", "worker threads (0 = available parallelism)")
         .opt("out", "BENCH_sim.json", "output path for the JSON grid")
         .parse_from_or_exit(argv);
+    let platforms = parse_platforms(&args.get_list("platforms"), &registry)?;
     let matrix = ScenarioMatrix {
-        platforms: parse_platforms(&args.get_list("platforms"))?,
+        platforms,
+        registry,
         presets: parse_presets(&args.get_list("preset"))?,
         seeds: parse_seeds(args.get("seeds"), args.get_u64("seed-base"))?,
         seconds: args.get_usize("seconds"),
@@ -106,48 +117,58 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
     for r in report.ratios_vs_has_gpu() {
         println!(
             "{} vs has-gpu @ {}: cost {}, slo-violations {}",
-            r.platform.name(),
+            r.platform,
             r.preset.name(),
             fmt_ratio(r.cost_ratio),
             fmt_ratio(r.violation_ratio)
         );
     }
     let out = PathBuf::from(args.get("out"));
-    json::write_file(&out, &report.to_json())?;
-    println!("wrote {}", out.display());
+    let hash = json::write_file_fingerprinted(&out, &report.to_json())?;
+    println!("wrote {} (fnv1a64 {hash:016x})", out.display());
     Ok(())
 }
 
 /// Single-cell special case of the matrix path: one platform, one preset,
 /// one seed, full per-function report.
 fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
+    let registry = PlatformRegistry::default();
     let args = Cli::new("has-gpu simulate", "single-cell cluster simulation")
-        .opt("platform", "has-gpu", "has-gpu | kserve | fast-gshare")
-        .opt("preset", "standard", "standard | stress | diurnal | spiky-burst")
+        .opt_dyn(
+            "platform",
+            "has-gpu",
+            format!("one platform name; registered: {}", registry.names().join(", ")),
+        )
+        .opt("preset", "standard", "one workload preset name")
         .opt("seconds", "300", "trace length (virtual seconds)")
         .opt("gpus", "10", "cluster size")
         .opt("rps", "150", "mean request rate per function")
         .opt("seed", "11", "workload + simulation seed")
         .flag("json", "emit the full RunReport as JSON")
         .parse_from_or_exit(argv);
-    let platform = Platform::from_name(args.get("platform")).ok_or_else(|| {
-        anyhow::anyhow!("unknown platform '{}' (has-gpu|kserve|fast-gshare)", args.get("platform"))
-    })?;
-    let preset = Preset::from_name(args.get("preset")).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown preset '{}' (standard|stress|diurnal|spiky-burst)",
-            args.get("preset")
-        )
-    })?;
+    let platforms = parse_platforms(&[args.get("platform").to_string()], &registry)?;
+    anyhow::ensure!(
+        platforms.len() == 1,
+        "simulate runs one platform; '{}' expands to {}",
+        args.get("platform"),
+        platforms.join(", ")
+    );
+    let presets = parse_presets(&[args.get("preset").to_string()])?;
+    anyhow::ensure!(
+        presets.len() == 1,
+        "simulate runs one preset; '{}' expands to several",
+        args.get("preset")
+    );
     let matrix = ScenarioMatrix {
-        platforms: vec![platform],
-        presets: vec![preset],
+        platforms,
+        registry,
+        presets,
         seeds: vec![args.get_u64("seed")],
         seconds: args.get_usize("seconds"),
         gpus: args.get_usize("gpus"),
         rps: args.get_f64("rps"),
     };
-    let cell = matrix.cells()[0];
+    let cell = matrix.cells()[0].clone();
     let (report, _cell_result) = matrix.run_cell(&cell);
     if args.has_flag("json") {
         println!("{}", report.to_json().to_string_pretty());
@@ -216,21 +237,21 @@ fn predict(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn trace_gen(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Cli::new("has-gpu trace-gen", "synthesise an Azure-style workload trace")
-        .opt("preset", "standard", "standard | stress | diurnal | spiky-burst")
+        .opt("preset", "standard", "one workload preset name")
         .opt("seconds", "300", "trace length in seconds")
         .opt("rps", "150", "mean request rate per function")
         .opt("seed", "11", "trace seed")
         .parse_from_or_exit(argv);
-    let preset = Preset::from_name(args.get("preset")).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown preset '{}' (standard|stress|diurnal|spiky-burst)",
-            args.get("preset")
-        )
-    })?;
+    let presets = parse_presets(&[args.get("preset").to_string()])?;
+    anyhow::ensure!(
+        presets.len() == 1,
+        "trace-gen takes one preset; '{}' expands to several",
+        args.get("preset")
+    );
     let fns = experiment_functions();
     let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
     let tg = TraceGen::preset(
-        preset,
+        presets[0],
         args.get_u64("seed"),
         args.get_usize("seconds"),
         args.get_f64("rps"),

@@ -21,7 +21,7 @@ use crate::rapp::{CachedPredictor, LatencyPredictor, OraclePredictor};
 use crate::simclock::EventQueue;
 use crate::util::prng::Pcg64;
 use crate::workload::Trace;
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 
 /// Simulation tunables.
 #[derive(Clone, Debug)]
@@ -40,8 +40,10 @@ pub struct SimConfig {
     /// signal as `queue_len / horizon` extra RPS (concurrency-based scaling,
     /// à la Knative; applied identically to every platform).
     pub backlog_horizon: f64,
-    /// Bill whole GPU for every pod (KServe-style exclusive allocation).
-    pub bill_whole_gpu: bool,
+    /// Billing mode applied by the run's ledger — [`BillingMode::WholeGpu`]
+    /// for KServe-style exclusive allocation, [`BillingMode::FineGrained`]
+    /// for the sm×quota slice. Platform registry specs carry this directly.
+    pub billing: BillingMode,
 }
 
 impl Default for SimConfig {
@@ -54,7 +56,7 @@ impl Default for SimConfig {
             timeout: 30.0,
             drain: 60.0,
             backlog_horizon: 2.0,
-            bill_whole_gpu: false,
+            billing: BillingMode::FineGrained,
         }
     }
 }
@@ -62,11 +64,11 @@ impl Default for SimConfig {
 impl SimConfig {
     /// The standard configuration for one scenario-matrix cell: default
     /// serving knobs, cell-specific cluster size / seed / billing mode.
-    pub fn for_experiment(n_gpus: usize, seed: u64, bill_whole_gpu: bool) -> Self {
+    pub fn for_experiment(n_gpus: usize, seed: u64, billing: BillingMode) -> Self {
         SimConfig {
             n_gpus,
             seed,
-            bill_whole_gpu,
+            billing,
             ..SimConfig::default()
         }
     }
@@ -142,10 +144,7 @@ pub fn run_sim(
     // One accounting engine for the whole run: every pod-second is billed
     // exactly once, at the slice held during that second, under the run's
     // real billing mode (see metrics::ledger).
-    let mut ledger = BillingLedger::new(
-        BillingMode::from_whole_gpu(cfg.bill_whole_gpu),
-        perf.dev.price_per_hour,
-    );
+    let mut ledger = BillingLedger::new(cfg.billing, perf.dev.price_per_hour);
     // Quantized capacity caches: one for the policy's predictor (the
     // autoscaler hot path), one for the ground-truth service-time surface
     // the dispatch path evaluates per batch. Pod slices live on the
@@ -433,20 +432,6 @@ fn try_dispatch(
     }
 }
 
-/// A BTreeMap keyed summary of multiple runs (used by benches).
-pub fn summarize_costs(reports: &[RunReport]) -> BTreeMap<String, Vec<(String, f64)>> {
-    let mut out = BTreeMap::new();
-    for r in reports {
-        let entries: Vec<(String, f64)> = r
-            .functions
-            .iter()
-            .map(|(f, m)| (f.clone(), r.costs.cost_per_1k(f, m.served())))
-            .collect();
-        out.insert(r.platform.clone(), entries);
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,7 +471,7 @@ mod tests {
         let pred = OraclePredictor::default();
         let cfg = SimConfig {
             n_gpus: 8,
-            bill_whole_gpu: whole_gpu,
+            billing: BillingMode::from_whole_gpu(whole_gpu),
             ..SimConfig::default()
         };
         run_sim(policy, &fns, &trace, &pred, &perf, &cfg)

@@ -14,10 +14,12 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-/// Option specification for help text + validation.
+/// Option specification for help text + validation. Help text is owned so
+/// subcommands can surface runtime inventories (e.g. the platform registry)
+/// in `--help`.
 pub struct OptSpec {
     pub name: &'static str,
-    pub help: &'static str,
+    pub help: String,
     pub default: Option<&'static str>,
     pub is_flag: bool,
 }
@@ -38,10 +40,22 @@ impl Cli {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+    pub fn opt(self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opt_dyn(name, default, help)
+    }
+
+    /// Like [`Cli::opt`] but with a runtime-built help string — used when
+    /// the help text enumerates a dynamic inventory (the platform registry,
+    /// the preset list) rather than a literal.
+    pub fn opt_dyn(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: impl Into<String>,
+    ) -> Self {
         self.opts.push(OptSpec {
             name,
-            help,
+            help: help.into(),
             default: Some(default),
             is_flag: false,
         });
@@ -51,7 +65,7 @@ impl Cli {
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec {
             name,
-            help,
+            help: help.to_string(),
             default: None,
             is_flag: false,
         });
@@ -61,7 +75,7 @@ impl Cli {
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec {
             name,
-            help,
+            help: help.to_string(),
             default: None,
             is_flag: true,
         });
@@ -231,6 +245,16 @@ mod tests {
             .parse_from(vec![])
             .unwrap();
         assert_eq!(d.get_list("names"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn dynamic_help_text_lands_in_usage() {
+        let inventory = ["alpha", "beta", "gamma"].join(", ");
+        let c = Cli::new("t", "test").opt_dyn("which", "alpha", format!("one of: {inventory}"));
+        let u = c.usage();
+        assert!(u.contains("one of: alpha, beta, gamma"), "{u}");
+        let a = c.parse_from(vec!["--which".into(), "beta".into()]).unwrap();
+        assert_eq!(a.get("which"), "beta");
     }
 
     #[test]

@@ -250,8 +250,37 @@ pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
 /// form is deterministic — object key order is preserved — so repeated runs
 /// with identical inputs produce byte-identical files.
 pub fn write_file(path: &std::path::Path, v: &Json) -> anyhow::Result<()> {
-    std::fs::write(path, v.to_string_pretty())
-        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    write_file_fingerprinted(path, v).map(|_| ())
+}
+
+/// Like [`write_file`], but also return the [`fnv1a64`] fingerprint of
+/// exactly the bytes written — one serialisation feeds both the file and
+/// the hash, so the two can never disagree (`has-gpu expt` prints this).
+pub fn write_file_fingerprinted(path: &std::path::Path, v: &Json) -> anyhow::Result<u64> {
+    let text = v.to_string_pretty();
+    std::fs::write(path, &text)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(fnv1a64(text.as_bytes()))
+}
+
+/// FNV-1a 64-bit hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable fingerprint of a JSON value: FNV-1a over its canonical pretty
+/// form (the exact bytes [`write_file`] emits). Because the writer is
+/// order-preserving and deterministic, equal fingerprints ⇔ byte-identical
+/// exports — `has-gpu expt` prints this so CI and operators can assert grid
+/// stability (e.g. `--jobs` independence, stock-cell invariance under
+/// ablation extension) without shipping fixture bytes.
+pub fn fingerprint(v: &Json) -> u64 {
+    fnv1a64(v.to_string_pretty().as_bytes())
 }
 
 impl Parser<'_> {
@@ -517,6 +546,20 @@ mod tests {
         assert!(parse("[1,2,]").is_err());
         assert!(parse("{\"a\":1} x").is_err());
         assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Fingerprint equality tracks byte equality of the pretty form.
+        let a = Json::obj(vec![("x", Json::Num(1.0)), ("y", Json::Str("z".into()))]);
+        let b = Json::obj(vec![("x", Json::Num(1.0)), ("y", Json::Str("z".into()))]);
+        let c = Json::obj(vec![("y", Json::Str("z".into())), ("x", Json::Num(1.0))]);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&a), fingerprint(&c), "key order is significant");
     }
 
     #[test]

@@ -48,8 +48,13 @@ impl Preset {
         }
     }
 
+    /// Case-insensitive name lookup (CLI surfaces accept `STANDARD`,
+    /// `Spiky-Burst`, …; the canonical lowercase form is what exports use).
     pub fn from_name(s: &str) -> Option<Self> {
-        ALL_PRESETS.iter().copied().find(|p| p.name() == s)
+        ALL_PRESETS
+            .iter()
+            .copied()
+            .find(|p| p.name().eq_ignore_ascii_case(s.trim()))
     }
 }
 
@@ -325,6 +330,8 @@ mod tests {
             assert_eq!(Preset::from_name(p.name()), Some(p));
         }
         assert_eq!(Preset::from_name("spiky-burst"), Some(Preset::SpikyBurst));
+        assert_eq!(Preset::from_name("Spiky-Burst"), Some(Preset::SpikyBurst));
+        assert_eq!(Preset::from_name(" STANDARD "), Some(Preset::Standard));
         assert_eq!(Preset::from_name("bogus"), None);
     }
 

@@ -1,0 +1,134 @@
+//! Platform-registry ablation tests: every registered platform — stock
+//! trio, single-axis variants, static-predictor variant — runs end-to-end
+//! through the matrix path and round-trips its cell JSON, and the paper's
+//! design argument (hybrid scaling beats either axis alone) holds on the
+//! standard preset.
+
+use has_gpu::expt::{CellResult, PlatformRegistry, ScenarioMatrix};
+use has_gpu::workload::Preset;
+
+#[test]
+fn registry_roundtrip_covers_every_platform_including_ablations() {
+    let registry = PlatformRegistry::default();
+    assert!(registry.specs().len() >= 6, "stock trio + 3 ablations minimum");
+    for spec in registry.specs() {
+        // name → spec → cell run → CellResult::to_json → from_json.
+        let matrix = ScenarioMatrix {
+            platforms: vec![spec.name.clone()],
+            presets: vec![Preset::Standard],
+            seeds: vec![3],
+            seconds: 30,
+            gpus: 4,
+            rps: 30.0,
+            ..ScenarioMatrix::default()
+        };
+        let cell = matrix.cells()[0].clone();
+        assert_eq!(cell.platform, spec.name);
+        let (report, result) = matrix.run_cell(&cell);
+        assert_eq!(result.platform, spec.name);
+        assert_eq!(
+            report.platform, spec.name,
+            "the policy must self-report its registry name"
+        );
+        let j = result.to_json();
+        let back = CellResult::from_json(&j).expect(&spec.name);
+        assert_eq!(back, result, "{}", spec.name);
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            j.to_string_pretty(),
+            "{} cell JSON must round-trip byte-identically",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn single_axis_ablations_express_their_restriction_in_the_grid() {
+    // Vertical-only never scales horizontally after bootstrap; horizontal-
+    // only never re-writes quotas. The scaling-action counters in the cell
+    // results make the restriction observable from the export alone.
+    let matrix = ScenarioMatrix {
+        platforms: vec![
+            "has-vertical-only".to_string(),
+            "has-horizontal-only".to_string(),
+        ],
+        presets: vec![Preset::Standard],
+        seeds: vec![3],
+        seconds: 120,
+        gpus: 8,
+        rps: 150.0,
+        ..ScenarioMatrix::default()
+    };
+    let report = matrix.run(2);
+    let cell = |name: &str| report.cells.iter().find(|c| c.platform == name).unwrap();
+    let vert = cell("has-vertical-only");
+    // Bootstrap creates the initial pods before measurement; after that no
+    // replica is ever added or removed, and quota re-writes do happen.
+    assert_eq!(vert.horizontal_downs, 0, "{vert:?}");
+    assert!(
+        vert.vertical_ups + vert.vertical_downs > 0,
+        "vertical-only must actually use its one axis: {vert:?}"
+    );
+    let horiz = cell("has-horizontal-only");
+    assert_eq!(
+        horiz.vertical_ups + horiz.vertical_downs,
+        0,
+        "horizontal-only must never re-write quotas: {horiz:?}"
+    );
+    assert!(
+        horiz.horizontal_ups > 0,
+        "horizontal-only must actually scale out: {horiz:?}"
+    );
+    assert!(vert.served > 0 && horiz.served > 0);
+}
+
+#[test]
+fn hybrid_beats_both_single_axis_ablations_on_slo_violations() {
+    // Paper §4 design argument: hybrid vertical+horizontal scaling beats
+    // either axis alone. Seed-averaged SLO-violation rate on the standard
+    // preset (drops count as violations), hybrid ≤ each single-axis variant.
+    let matrix = ScenarioMatrix {
+        platforms: vec![
+            "has-gpu".to_string(),
+            "has-vertical-only".to_string(),
+            "has-horizontal-only".to_string(),
+        ],
+        presets: vec![Preset::Standard],
+        seeds: vec![11, 12],
+        seconds: 240,
+        gpus: 10,
+        rps: 150.0,
+        ..ScenarioMatrix::default()
+    };
+    let report = matrix.run(0);
+    let summary = report.summary();
+    let rate = |name: &str| {
+        summary
+            .iter()
+            .find(|r| r.platform == name)
+            .unwrap()
+            .slo_violation_rate
+    };
+    let (has, vert, horiz) = (
+        rate("has-gpu"),
+        rate("has-vertical-only"),
+        rate("has-horizontal-only"),
+    );
+    assert!(
+        has <= vert,
+        "hybrid {has:.4} must not exceed vertical-only {vert:.4}"
+    );
+    assert!(
+        has <= horiz,
+        "hybrid {has:.4} must not exceed horizontal-only {horiz:.4}"
+    );
+    // And the export's ratio table carries the same story: every ablation
+    // row reports its violation ratio vs has-gpu (≥ 1 when defined).
+    let ratios = report.ratios_vs_has_gpu();
+    assert_eq!(ratios.len(), 2);
+    for r in &ratios {
+        if let Some(v) = r.violation_ratio {
+            assert!(v >= 1.0, "{}: {v}", r.platform);
+        }
+    }
+}

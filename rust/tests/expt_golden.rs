@@ -1,0 +1,181 @@
+//! Golden byte-identity for the platform-registry redesign.
+//!
+//! The registry replaced the closed `expt::Platform` enum; the hard API
+//! contract is that for the stock trio (`has-gpu`, `kserve`, `fast-gshare`)
+//! the `BENCH_sim.json` export stays **byte-identical** to the enum-based
+//! output. This test freezes the pre-redesign construction verbatim — the
+//! enum's `match` arms for policy, billing mode, and predictor, and the
+//! canonical preset-major cell walk — runs both paths on the same grid, and
+//! compares the full pretty-printed export byte for byte.
+//!
+//! A second contract rides along: ablation platforms *extend* the grid
+//! without perturbing the stock cells they share it with.
+
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
+use has_gpu::expt::{
+    experiment_functions, CellResult, MatrixReport, ScenarioCell, ScenarioMatrix,
+};
+use has_gpu::metrics::BillingMode;
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::OraclePredictor;
+use has_gpu::sim::{run_sim, SimConfig};
+use has_gpu::util::json;
+use has_gpu::workload::{Preset, TraceGen};
+
+const SECONDS: usize = 60;
+const GPUS: usize = 6;
+const RPS: f64 = 60.0;
+const SEEDS: [u64; 2] = [5, 6];
+
+/// Verbatim freeze of the closed enum the registry replaced: name table,
+/// policy `match`, and billing rule exactly as `expt::Platform` had them.
+#[derive(Clone, Copy)]
+enum FrozenPlatform {
+    HasGpu,
+    KServe,
+    FastGShare,
+}
+
+const FROZEN_ALL: [FrozenPlatform; 3] = [
+    FrozenPlatform::HasGpu,
+    FrozenPlatform::KServe,
+    FrozenPlatform::FastGShare,
+];
+
+impl FrozenPlatform {
+    fn name(self) -> &'static str {
+        match self {
+            FrozenPlatform::HasGpu => "has-gpu",
+            FrozenPlatform::KServe => "kserve",
+            FrozenPlatform::FastGShare => "fast-gshare",
+        }
+    }
+
+    fn policy(self) -> Box<dyn ScalingPolicy> {
+        match self {
+            FrozenPlatform::HasGpu => Box::new(HybridAutoscaler::new(HybridConfig::default())),
+            FrozenPlatform::KServe => Box::new(KServePolicy::default()),
+            FrozenPlatform::FastGShare => Box::new(FastGSharePolicy::default()),
+        }
+    }
+
+    fn bill_whole_gpu(self) -> bool {
+        matches!(self, FrozenPlatform::KServe)
+    }
+}
+
+/// The pre-redesign grid runner: canonical preset-major / platform / seed
+/// order, per-cell construction exactly as the enum-era `run_cell` had it
+/// (oracle predictor, fresh policy from the `match`, billing from the
+/// enum's whole-GPU rule).
+fn frozen_run(presets: &[Preset]) -> MatrixReport {
+    let mut cells = Vec::new();
+    for &preset in presets {
+        for platform in FROZEN_ALL {
+            for &seed in &SEEDS {
+                let fns = experiment_functions();
+                let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+                let trace = TraceGen::preset(preset, seed, SECONDS, RPS).generate(&names);
+                let perf = PerfModel::default();
+                let predictor = OraclePredictor::default();
+                let mut policy = platform.policy();
+                let report = run_sim(
+                    policy.as_mut(),
+                    &fns,
+                    &trace,
+                    &predictor,
+                    &perf,
+                    &SimConfig::for_experiment(
+                        GPUS,
+                        seed,
+                        BillingMode::from_whole_gpu(platform.bill_whole_gpu()),
+                    ),
+                );
+                let cell = ScenarioCell {
+                    platform: platform.name().to_string(),
+                    preset,
+                    seed,
+                };
+                cells.push(CellResult::from_report(&cell, &fns, &report));
+            }
+        }
+    }
+    MatrixReport {
+        seconds: SECONDS,
+        gpus: GPUS,
+        rps: RPS,
+        cells,
+    }
+}
+
+fn registry_matrix(platforms: &[&str]) -> ScenarioMatrix {
+    ScenarioMatrix {
+        platforms: platforms.iter().map(|s| s.to_string()).collect(),
+        presets: vec![Preset::Standard],
+        seeds: SEEDS.to_vec(),
+        seconds: SECONDS,
+        gpus: GPUS,
+        rps: RPS,
+        ..ScenarioMatrix::default()
+    }
+}
+
+#[test]
+fn stock_trio_export_is_byte_identical_to_the_enum_era_path() {
+    let golden = frozen_run(&[Preset::Standard]).to_json().to_string_pretty();
+    let via_registry = registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+        .run(2)
+        .to_json()
+        .to_string_pretty();
+    assert_eq!(
+        golden, via_registry,
+        "stock-trio BENCH_sim.json must not change under the registry redesign"
+    );
+}
+
+#[test]
+fn ablation_platforms_extend_the_grid_without_perturbing_stock_cells() {
+    let trio = registry_matrix(&["has-gpu", "kserve", "fast-gshare"]).run(2);
+    let extended =
+        registry_matrix(&["has-gpu", "kserve", "fast-gshare", "has-vertical-only"]).run(2);
+    // The ablation rides along…
+    assert_eq!(extended.cells.len(), trio.cells.len() + SEEDS.len());
+    assert!(extended
+        .cells
+        .iter()
+        .any(|c| c.platform == "has-vertical-only"));
+    // …and every stock cell it shares with the trio grid is identical,
+    // byte for byte, in the canonical order.
+    let stock: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.platform != "has-vertical-only")
+        .collect();
+    assert_eq!(stock.len(), trio.cells.len());
+    for (a, b) in trio.cells.iter().zip(stock) {
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "stock cell ({}, {}, {}) perturbed by ablation extension",
+            a.platform,
+            a.preset.name(),
+            a.seed
+        );
+    }
+    // Stock summary rows are identical too (the ablation only appends).
+    let trio_summary = trio.summary();
+    let ext_summary: Vec<_> = extended
+        .summary()
+        .into_iter()
+        .filter(|r| r.platform != "has-vertical-only")
+        .collect();
+    assert_eq!(trio_summary, ext_summary);
+    // And the trio fingerprint is reproducible run-to-run (what the CI
+    // smoke job asserts across --jobs values).
+    let again = registry_matrix(&["has-gpu", "kserve", "fast-gshare"]).run(1);
+    assert_eq!(
+        json::fingerprint(&trio.to_json()),
+        json::fingerprint(&again.to_json())
+    );
+}

@@ -7,7 +7,7 @@
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
 use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
 use has_gpu::cluster::FunctionSpec;
-use has_gpu::metrics::RunReport;
+use has_gpu::metrics::{BillingMode, RunReport};
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::OraclePredictor;
@@ -62,7 +62,7 @@ fn run(policy: &mut dyn ScalingPolicy, preset: Preset, whole_gpu: bool) -> RunRe
         &PerfModel::default(),
         &SimConfig {
             n_gpus: 10,
-            bill_whole_gpu: whole_gpu,
+            billing: BillingMode::from_whole_gpu(whole_gpu),
             ..SimConfig::default()
         },
     )
