@@ -171,6 +171,58 @@ fn main() {
         black_box(scaler_cached.plan(&fns[0], 120.0, &cluster, &cached_oracle, tc));
     });
 
+    // GPU-occupancy scans the plan tick runs per function per tick: the
+    // iterator-based used/idle walks and the HGO argmin must stay
+    // allocation-free and far under the plan budget (the seed allocated a
+    // fresh Vec per call — this entry pins the fix).
+    h.bench("cluster_used_gpus_scan", || {
+        black_box(cluster.used_gpus().count());
+        black_box(cluster.least_occupied_used_gpu());
+        black_box(cluster.idle_gpu());
+    });
+
+    // Class-aware planning on a mixed fleet (cheapest-feasible-class
+    // placement + per-pod class factors) — same shape as the 40-pod tick so
+    // the heterogeneity overhead is directly readable from the two entries.
+    {
+        use has_gpu::vgpu::GpuClass;
+        let fleet: Vec<GpuClass> = (0..10)
+            .map(|i| match i % 4 {
+                0 => GpuClass::a100(),
+                1 | 2 => GpuClass::v100(),
+                _ => GpuClass::t4(),
+            })
+            .collect();
+        let mut mixed = ClusterState::from_classes(&fleet);
+        for f in &fns {
+            mixed.register_function(f.clone());
+        }
+        let mut recon_m = Reconfigurator::new(&mixed, 4);
+        let mut placed = 0;
+        'outer_m: for gpu in 0..10 {
+            for slot in 0..4 {
+                let f = &fns[(gpu + slot) % fns.len()];
+                if place_pod(
+                    &mut recon_m, &mut mixed, &pm, &f.name, GpuId(gpu), 250, 250, f.batch, 0.0,
+                )
+                .is_ok()
+                {
+                    placed += 1;
+                }
+                if placed >= 40 {
+                    break 'outer_m;
+                }
+            }
+        }
+        let cached_mixed = CachedPredictor::new(&pred);
+        let mut scaler_mixed = HybridAutoscaler::new(HybridConfig::default());
+        let mut tm = 0.0;
+        h.bench("autoscaler_plan_40pods_mixed_fleet", || {
+            tm += 1.0;
+            black_box(scaler_mixed.plan(&fns[0], 120.0, &mixed, &cached_mixed, tm));
+        });
+    }
+
     // Predictor-invocation accounting (ISSUE acceptance): over a run of
     // identical plan ticks, the cache must cut underlying predictor forwards
     // by ≥ 5x versus the uncached path.

@@ -24,6 +24,10 @@ from .opgraph import MAX_NODES, OpGraph, sample_graph
 from .perfsim import PerfModel
 
 BATCH_CHOICES = [1, 2, 4, 8, 16, 32]
+# GPU-class throughput factors sampled into the corpus (the built-in
+# catalog: t4, v100 reference, a100) — the trailing class feature column
+# must vary during training or trained weights cannot respond to it.
+CLASS_FACTORS = [0.4, 1.0, 2.0]
 SM_GRID = [round(0.05 * i, 2) for i in range(1, 21)]
 QUOTA_GRID = [round(0.05 * i, 2) for i in range(1, 21)]
 
@@ -81,15 +85,20 @@ def build_corpus(
             batch = rng.choice(BATCH_CHOICES)
             sm = rng.choice(SM_GRID)
             quota = rng.choice(QUOTA_GRID)
+            class_factor = rng.choice(CLASS_FACTORS)
             key = (gi, batch)
             if key not in block_of:
                 of, _, _ = extract(g, batch, sm, quota, perf, "rapp", op_cache, graph_cache)
                 x, _, _ = pad_for_hlo(of, edges, F_OP_FULL)
                 block_of[key] = len(corpus.op_feats)
                 corpus.op_feats.append(x)
-            # Graph features depend on (batch, sm, quota).
-            _, gf, _ = extract(g, batch, sm, quota, perf, "rapp", op_cache, graph_cache)
-            latency = perf.latency(g, batch, sm, quota)
+            # Graph features depend on (batch, sm, quota, class factor);
+            # labels come from the class clock so the trained model learns
+            # the trailing class column instead of seeing a constant 1.0.
+            _, gf, _ = extract(
+                g, batch, sm, quota, perf, "rapp", op_cache, graph_cache, class_factor
+            )
+            latency = perf.latency_class(g, batch, sm, quota, class_factor)
             noisy = latency * math.exp(nrng.normal(0.0, noise_sigma))
             corpus.sample_block.append(block_of[key])
             corpus.sample_graph.append(gi)

@@ -32,15 +32,20 @@ F_G_STATIC = 10
 # the probes. The predictor head regresses the residual against this anchor.
 F_G_RUNTIME = len(PROFILE_QUOTAS) + len(PROFILE_SMS) + 1  # 12
 
+# Trailing dynamic column: the GPU-class throughput factor of the query
+# (1.0 = the reference V100). Appended LAST in both modes so every
+# pre-catalog column keeps its historical index (mirrors rust F_G_CLASS).
+F_G_CLASS = 1
+
 F_OP_FULL = F_OP_STATIC + F_OP_RUNTIME  # 27
-F_G_FULL = F_G_STATIC + F_G_RUNTIME  # 22
+F_G_FULL = F_G_STATIC + F_G_RUNTIME + F_G_CLASS  # 23
 
 
 def f_dims(mode: str) -> tuple[int, int]:
     if mode == "rapp":
         return F_OP_FULL, F_G_FULL
     if mode == "dippm":
-        return F_OP_STATIC, F_G_STATIC
+        return F_OP_STATIC, F_G_STATIC + F_G_CLASS
     raise ValueError(mode)
 
 
@@ -53,6 +58,7 @@ def extract(
     mode: str = "rapp",
     op_profile_cache: dict | None = None,
     graph_profile_cache: dict | None = None,
+    class_factor: float = 1.0,
 ):
     """Returns (op_feats [n, F_OP] f32, graph_feats [F_G] f32, edges)."""
     full = mode == "rapp"
@@ -112,7 +118,8 @@ def extract(
             if graph_profile_cache is not None:
                 graph_profile_cache[key] = gprof
         gf[10:21] = gprof
-        gf[21] = anchor(g, op[:, 21:27], sm, quota, perf.dev.window)
+        gf[21] = anchor(g, op[:, 21:27], sm, quota, perf.dev.window, class_factor)
+    gf[-1] = class_factor  # class column (last in both modes)
     return op, gf, list(g.edges)
 
 
@@ -129,7 +136,9 @@ def _interp(xs, ys, x: float) -> float:
     return ys[-1]
 
 
-def anchor(g: OpGraph, op_prof, sm: float, quota: float, window: float) -> float:
+def anchor(
+    g: OpGraph, op_prof, sm: float, quota: float, window: float, class_factor: float = 1.0
+) -> float:
     """Probe-based analytic latency estimate: interpolate each op's profiled
     time (the 6 SM probes, columns 21..27 of the op features) to the query
     SM in ln-ln space, then replay the scheduler's own token-window
@@ -145,7 +154,7 @@ def anchor(g: OpGraph, op_prof, sm: float, quota: float, window: float) -> float
     boundary = window
     for i, node in enumerate(g.nodes):
         ln_t = _interp(ln_sms, [float(v) for v in op_prof[i]], ln_sm)
-        t_est = math.expm1(ln_t) / 1e3  # invert ln1p(ms)
+        t_est = math.expm1(ln_t) / 1e3 / class_factor  # invert ln1p(ms), class clock
         k = max(node.kernels, 1)
         d = t_est / k
         for _ in range(k):

@@ -65,14 +65,23 @@ class PerfModel:
 
     def latency(self, g: OpGraph, batch: int, sm: float, q: float) -> float:
         """Token-window simulation at kernel granularity, no-debt semantics —
-        statement-for-statement mirror of rust PerfModel::latency."""
+        statement-for-statement mirror of rust PerfModel::latency (the
+        reference-class surface: latency_class at factor 1.0)."""
+        return self.latency_class(g, batch, sm, q, 1.0)
+
+    def latency_class(
+        self, g: OpGraph, batch: int, sm: float, q: float, factor: float
+    ) -> float:
+        """Latency on a GPU class with relative throughput `factor` —
+        kernels run on the class clock, the window is a scheduler constant.
+        Mirrors rust PerfModel::latency_class (factor 1.0 is exact)."""
         w = self.dev.window
         now = 0.0
         budget = q * w
         boundary = w
         for op in g.nodes:
             k = max(op.kernels, 1)
-            d = self.op_time(op, batch, sm) / k
+            d = self.op_time(op, batch, sm) / k / factor
             for _ in range(k):
                 if boundary <= now:
                     skipped = (now - boundary) // w + 1.0

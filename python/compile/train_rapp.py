@@ -21,21 +21,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import dataset as ds
-from .features import F_G_FULL, F_G_STATIC, F_OP_FULL, F_OP_STATIC
+from .features import F_G_CLASS, F_G_FULL, F_G_STATIC, F_OP_FULL, F_OP_STATIC
 from .model import rapp_forward, rapp_init
 from .perfsim import PerfModel
 
 HIDDEN = 48
 # Anchor column for the residual target: the separable analytic estimate
-# (features.anchor) — last graph-feature column.
+# (features.anchor) — graph column 21 (the class-factor column sits after
+# it, at the very end).
 RESIDUAL_COL = 21
 
 
 def _slice_mode(x, g, mode: str):
-    """Full features → mode-specific views (DIPPM drops runtime columns)."""
+    """Full features → mode-specific views (DIPPM drops runtime columns but
+    keeps the query configuration, incl. the trailing class column)."""
     if mode == "rapp":
         return x, g
-    return x[..., :F_OP_STATIC], g[..., :F_G_STATIC]
+    g_static = jnp.concatenate([g[..., :F_G_STATIC], g[..., -F_G_CLASS:]], axis=-1)
+    return x[..., :F_OP_STATIC], g_static
 
 
 def batched_forward(params, x, adj, mask, g, residual_col):
@@ -100,14 +103,19 @@ def mape_latency(params, corpus, idx, mode):
 
 def train_model(mode: str, corpus, train_idx, val_idx, epochs, seed, log):
     f_op = F_OP_FULL if mode == "rapp" else F_OP_STATIC
-    f_g = F_G_FULL if mode == "rapp" else F_G_STATIC
+    f_g = F_G_FULL if mode == "rapp" else F_G_STATIC + F_G_CLASS
     params = rapp_init(f_op, f_g, HIDDEN, seed=seed)
-    # Bake normalisation (over train split features, mode-sliced).
+    # Bake normalisation (over train split features, mode-sliced; DIPPM
+    # keeps the trailing class column alongside the static prefix).
     op_mean, op_std, g_mean, g_std = ds.normalization(corpus)
+    def _g_view(v):
+        if mode == "rapp":
+            return v[:f_g]
+        return np.concatenate([v[:F_G_STATIC], v[-F_G_CLASS:]])
     params["op_mean"] = jnp.array(op_mean[:f_op])
     params["op_std"] = jnp.array(op_std[:f_op])
-    params["g_mean"] = jnp.array(g_mean[:f_g])
-    params["g_std"] = jnp.array(g_std[:f_g])
+    params["g_mean"] = jnp.array(_g_view(g_mean))
+    params["g_std"] = jnp.array(_g_view(g_std))
 
     residual_col = _residual_of(mode)
     step = jax.jit(

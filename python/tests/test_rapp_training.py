@@ -35,7 +35,9 @@ def test_feature_dims(perf):
     assert gf.shape == (feat.F_G_FULL,)
     op_s, gf_s, _ = feat.extract(g, 4, 0.5, 0.6, perf, "dippm")
     assert op_s.shape == (len(g.nodes), feat.F_OP_STATIC)
-    assert gf_s.shape == (feat.F_G_STATIC,)
+    assert gf_s.shape == (feat.F_G_STATIC + feat.F_G_CLASS,)
+    # The trailing class column defaults to the reference factor.
+    assert gf[-1] == 1.0 and gf_s[-1] == 1.0
     assert len(edges) == len(g.edges)
 
 

@@ -19,7 +19,7 @@
 
 use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, ScalingAction};
 use crate::rapp::{min_feasible_quota, LatencyPredictor};
-use crate::vgpu::{QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
+use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
 use std::collections::BTreeMap;
 
 /// Scalar Kalman filter for short-term RPS estimation (paper §3.3 equations,
@@ -220,16 +220,18 @@ impl HybridAutoscaler {
     }
 
     /// Evaluate the whole quota lattice `{step, 2·step, …}` for one
-    /// (function, sm) in a single [`LatencyPredictor::latency_batch`] pass
-    /// (one matmul-shaped sweep for plan-cached predictors, one table probe
-    /// per level for the run cache), filling `self.lat_buf` so the
-    /// bisections below read prewarmed values. The decision procedure stays
-    /// [`min_feasible_quota`] over exactly these values, so answers are
-    /// identical to per-point queries even off the monotone ideal.
+    /// (function, sm, class factor) in a single
+    /// [`LatencyPredictor::latency_batch_at`] pass (one matmul-shaped sweep
+    /// for plan-cached predictors, one table probe per level for the run
+    /// cache), filling `self.lat_buf` so the bisections below read prewarmed
+    /// values. The decision procedure stays [`min_feasible_quota`] over
+    /// exactly these values, so answers are identical to per-point queries
+    /// even off the monotone ideal.
     fn fill_latency_lattice(
         &mut self,
         f: &FunctionSpec,
         smf: f64,
+        factor: f64,
         predictor: &dyn LatencyPredictor,
     ) {
         let step = self.cfg.quota_step.max(1);
@@ -237,39 +239,44 @@ impl HybridAutoscaler {
         self.q_buf.clear();
         self.q_buf
             .extend((1..=n).map(|i| crate::vgpu::quota_to_f64(step * i as u32)));
-        predictor.latency_batch(&f.graph, f.batch, smf, &self.q_buf, &mut self.lat_buf);
+        predictor.latency_batch_at(&f.graph, f.batch, smf, &self.q_buf, factor, &mut self.lat_buf);
     }
 
-    /// Pod capacity C_{P_i} = RaPP(f, b_i, s_i, q_i) (items/s).
+    /// Pod capacity C_{P_i} = RaPP(f, b_i, s_i, q_i) (items/s) on the pod's
+    /// GPU class (`factor` = the hosting device's throughput factor).
     fn pod_capacity(
         f: &FunctionSpec,
         pod: &Pod,
+        factor: f64,
         predictor: &dyn LatencyPredictor,
     ) -> f64 {
-        predictor.capacity(
+        predictor.capacity_at(
             &f.graph,
             pod.batch,
             crate::vgpu::sm_to_f64(pod.sm),
             crate::vgpu::quota_to_f64(pod.quota),
+            factor,
         )
     }
 
-    /// Smallest quota (in steps) at which a pod of partition `sm` meets the
-    /// function SLO — the floor for vertical scale-down and the starting
-    /// point for new-pod quota sizing. Falls back to full quota when the
-    /// partition cannot meet the SLO at all. The whole lattice level is
-    /// evaluated in one batched predictor pass, then the monotone-quota
-    /// bisection runs over the prewarmed values — one row-batched forward
-    /// per (function, sm) instead of O(log) scattered lookups.
+    /// Smallest quota (in steps) at which a pod of partition `sm` on a GPU
+    /// class with throughput `factor` meets the function SLO — the floor
+    /// for vertical scale-down and the starting point for new-pod quota
+    /// sizing. Falls back to full quota when the partition cannot meet the
+    /// SLO at all. The whole lattice level is evaluated in one batched
+    /// predictor pass, then the monotone-quota bisection runs over the
+    /// prewarmed values — one row-batched forward per (function, sm, class)
+    /// instead of O(log) scattered lookups.
     fn min_slo_quota(
         &mut self,
         f: &FunctionSpec,
         sm: SmMille,
         predictor: &dyn LatencyPredictor,
         margin: f64,
+        factor: f64,
     ) -> QuotaMille {
         let smf = crate::vgpu::sm_to_f64(sm);
-        self.fill_latency_lattice(f, smf, predictor);
+        self.fill_latency_lattice(f, smf, factor, predictor);
         let step = self.cfg.quota_step.max(1);
         let bound = f.slo * margin;
         let lat = &self.lat_buf;
@@ -277,10 +284,11 @@ impl HybridAutoscaler {
             .unwrap_or(QUOTA_FULL)
     }
 
-    /// The most efficient (sm, quota) for a required rate ΔR on an empty GPU
-    /// (`RaPPbyThroughput`, line 19): the cheapest slice (sm×quota) whose
-    /// capacity covers ΔR and whose latency meets the function SLO; falls
-    /// back to the highest-capacity slice if ΔR is unreachable.
+    /// The most efficient (sm, quota) for a required rate ΔR on an empty
+    /// GPU of class throughput `factor` (`RaPPbyThroughput`, line 19): the
+    /// cheapest slice (sm×quota) whose capacity covers ΔR and whose latency
+    /// meets the function SLO; falls back to the highest-capacity slice if
+    /// ΔR is unreachable.
     ///
     /// Capacity is monotone non-decreasing and latency monotone
     /// non-increasing in quota, so per SM class the cheapest feasible quota
@@ -292,6 +300,7 @@ impl HybridAutoscaler {
         f: &FunctionSpec,
         delta_r: f64,
         predictor: &dyn LatencyPredictor,
+        factor: f64,
     ) -> (SmMille, QuotaMille) {
         let step = self.cfg.quota_step.max(1);
         let mut best: Option<(f64, SmMille, QuotaMille)> = None; // (cost, sm, q)
@@ -301,15 +310,26 @@ impl HybridAutoscaler {
             let smf = crate::vgpu::sm_to_f64(sm);
             // One row-batched pass evaluates this SM class's whole quota
             // lattice; the bisections below read the prewarmed values.
-            self.fill_latency_lattice(f, smf, predictor);
+            self.fill_latency_lattice(f, smf, factor, predictor);
             let lat = &self.lat_buf;
-            let cap_full =
-                predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(QUOTA_FULL));
+            let cap_full = predictor.capacity_at(
+                &f.graph,
+                f.batch,
+                smf,
+                crate::vgpu::quota_to_f64(QUOTA_FULL),
+                factor,
+            );
             if cap_full > fallback.0 {
                 fallback = (cap_full, sm, QUOTA_FULL);
             }
             let q_cap = min_feasible_quota(step, QUOTA_FULL, |q| {
-                predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q)) >= delta_r
+                predictor.capacity_at(
+                    &f.graph,
+                    f.batch,
+                    smf,
+                    crate::vgpu::quota_to_f64(q),
+                    factor,
+                ) >= delta_r
             });
             let bound = f.slo * self.cfg.slo_margin;
             let q_slo = min_feasible_quota(step, QUOTA_FULL, |q| {
@@ -326,7 +346,8 @@ impl HybridAutoscaler {
                 // can exceed the bisected SLO point (capacity needs no
                 // re-check — it is linear in quota by construction).
                 if q <= self.cfg.headroom_quota
-                    && predictor.latency(&f.graph, f.batch, smf, qf) <= f.slo * self.cfg.slo_margin
+                    && predictor.latency_at(&f.graph, f.batch, smf, qf, factor)
+                        <= f.slo * self.cfg.slo_margin
                 {
                     let cost = smf * qf;
                     if best.map_or(true, |(c, _, _)| cost < c) {
@@ -377,12 +398,36 @@ impl ScalingPolicy for HybridAutoscaler {
         // vertical-only platforms still come up, then never add replicas.
         let vertical = cfg.scaling_axes.vertical();
         let horizontal = cfg.scaling_axes.horizontal() || pods.is_empty();
-        // Line 1: C_f = Σ C_{P_i}.
+        // Line 1: C_f = Σ C_{P_i}, each pod judged on its own GPU class.
         let caps: BTreeMap<_, _> = pods
             .iter()
-            .map(|p| (p.id, Self::pod_capacity(f, p, predictor)))
+            .map(|p| {
+                let factor = cluster.gpu(p.gpu).throughput();
+                (p.id, Self::pod_capacity(f, p, factor, predictor))
+            })
             .collect();
         let c_f: f64 = caps.values().sum();
+
+        // Class feasibility for NEW pods of f (heterogeneous fleets): the
+        // device must fit the model in memory and meet the SLO at full
+        // resources under the class clock (judged at this policy's planning
+        // margin). The cluster pickers fall back to the homogeneous rules
+        // when no class qualifies, so on a uniform fleet this gate never
+        // changes the choice. Feasibility depends only on the class — not
+        // the GPU — so it is memoised per class name and the per-GPU scans
+        // cost a tiny probe, not a predictor query per device.
+        let mem_need = f.graph.memory_bytes(f.batch);
+        let slo_bound = f.slo * cfg.slo_margin;
+        let mut feas_cache: Vec<(String, bool)> = Vec::new();
+        let mut class_ok = |c: &GpuClass| {
+            if let Some((_, ok)) = feas_cache.iter().find(|(n, _)| n == &c.name) {
+                return *ok;
+            }
+            let ok = mem_need <= c.mem_cap
+                && predictor.latency_at(&f.graph, f.batch, 1.0, 1.0, c.throughput) <= slo_bound;
+            feas_cache.push((c.name.clone(), ok));
+            ok
+        };
 
         // ---- Scaling up (lines 2-19) ----------------------------------
         if r > c_f * cfg.alpha {
@@ -401,16 +446,18 @@ impl ScalingPolicy for HybridAutoscaler {
                     .unwrap_or(pod.quota);
                 let base_cap = caps[&pod.id];
                 let smf = crate::vgpu::sm_to_f64(pod.sm);
+                let pod_factor = cluster.gpu(pod.gpu).throughput();
                 let mut n = 0u32;
                 let mut gained = 0.0;
                 while pod.quota + cfg.quota_step * (n + 1) <= a_q && delta_r - gained > 0.0 {
                     n += 1;
                     let q_new = pod.quota + cfg.quota_step * n;
-                    let cap_new = predictor.capacity(
+                    let cap_new = predictor.capacity_at(
                         &f.graph,
                         pod.batch,
                         smf,
                         crate::vgpu::quota_to_f64(q_new),
+                        pod_factor,
                     );
                     gained = cap_new - base_cap;
                 }
@@ -422,28 +469,52 @@ impl ScalingPolicy for HybridAutoscaler {
                     delta_r -= gained;
                 }
             }
-            // Horizontal scale-up to the least-occupied used GPU (lines 10-17).
+            // Horizontal scale-up to a used GPU (lines 10-17), extended for
+            // heterogeneous fleets: cheapest feasible class first, tie-broken
+            // by the lowest HGO — which on a uniform fleet degenerates to
+            // exactly Algorithm 1's least-occupied choice.
             if delta_r > 0.0 && horizontal {
-                if let Some(gpu) = cluster.least_occupied_used_gpu() {
-                    if let Some((s_max, q_max)) = cluster.gpu(gpu).max_avail_sm_quota() {
+                if let Some(gpu) = cluster.cheapest_feasible_used_gpu(&mut class_ok) {
+                    // The picker falls back to an infeasible used GPU when no
+                    // used class qualifies. If a *feasible idle* device
+                    // exists, skip the doomed in-place create (it would eat
+                    // ΔR, get rejected by the Re-configurator, and starve the
+                    // new-GPU branch forever) and let the idle branch take
+                    // it. Single-class fleets can never hit this: an
+                    // infeasible chosen class means the idle GPUs share the
+                    // same infeasible class, so the homogeneous behaviour is
+                    // untouched.
+                    let chosen_ok = class_ok(cluster.gpu(gpu).class());
+                    let feasible_idle_waiting = !chosen_ok
+                        && cluster.idle_gpus().any(|g| class_ok(cluster.gpu(g).class()));
+                    let factor = cluster.gpu(gpu).throughput();
+                    let slot = if feasible_idle_waiting {
+                        None // fall through to the new-GPU branch
+                    } else {
+                        cluster.gpu(gpu).max_avail_sm_quota()
+                    };
+                    if let Some((s_max, q_max)) = slot {
                         let smf = crate::vgpu::sm_to_f64(s_max);
-                        let c_max = predictor.capacity(
+                        let c_max = predictor.capacity_at(
                             &f.graph,
                             f.batch,
                             smf,
                             crate::vgpu::quota_to_f64(q_max),
+                            factor,
                         );
                         if c_max > delta_r {
                             // Find the smallest quota step covering ΔR (lines
                             // 15-17), never below the SLO-feasible floor —
                             // a bisection over the monotone capacity axis.
-                            let floor = self.min_slo_quota(f, s_max, predictor, cfg.slo_margin);
+                            let floor =
+                                self.min_slo_quota(f, s_max, predictor, cfg.slo_margin, factor);
                             let q_need = min_feasible_quota(cfg.quota_step, q_max, |q| {
-                                predictor.capacity(
+                                predictor.capacity_at(
                                     &f.graph,
                                     f.batch,
                                     smf,
                                     crate::vgpu::quota_to_f64(q),
+                                    factor,
                                 ) >= delta_r
                             });
                             let quota = match q_need {
@@ -460,20 +531,24 @@ impl ScalingPolicy for HybridAutoscaler {
                                 batch: f.batch,
                                 new_gpu: false,
                             });
-                            delta_r -= predictor.capacity(
+                            delta_r -= predictor.capacity_at(
                                 &f.graph,
                                 f.batch,
                                 smf,
                                 crate::vgpu::quota_to_f64(quota),
+                                factor,
                             );
                         }
                     }
                 }
             }
-            // Horizontal scale-up to a new GPU (lines 18-19).
+            // Horizontal scale-up to a new GPU (lines 18-19): cheapest
+            // feasible idle class, sized by the class-aware efficiency
+            // search (uniform fleet: first idle GPU, reference surface).
             if delta_r > 0.0 && horizontal {
-                if let Some(gpu) = cluster.idle_gpu() {
-                    let (sm, quota) = self.most_efficient_slice(f, delta_r, predictor);
+                if let Some(gpu) = cluster.cheapest_feasible_idle_gpu(&mut class_ok) {
+                    let factor = cluster.gpu(gpu).throughput();
+                    let (sm, quota) = self.most_efficient_slice(f, delta_r, predictor, factor);
                     actions.push(ScalingAction::CreatePod {
                         function: f.name.clone(),
                         gpu,
@@ -505,6 +580,7 @@ impl ScalingPolicy for HybridAutoscaler {
                 }
                 let base_cap = caps[&pod.id];
                 let smf = crate::vgpu::sm_to_f64(pod.sm);
+                let pod_factor = cluster.gpu(pod.gpu).throughput();
                 // SLO feasibility floor: never shrink a pod into a config
                 // whose service latency would breach the function SLO.
                 // The floor stays SLO-feasible even when idle: a keep-alive
@@ -517,7 +593,7 @@ impl ScalingPolicy for HybridAutoscaler {
                 // The quota floor only matters when vertical scaling may
                 // shrink quotas; horizontal-only skips the lattice sweep.
                 let floor = if vertical {
-                    self.min_slo_quota(f, pod.sm, predictor, margin)
+                    self.min_slo_quota(f, pod.sm, predictor, margin, pod_factor)
                         .max(cfg.min_quota)
                 } else {
                     cfg.min_quota
@@ -527,11 +603,12 @@ impl ScalingPolicy for HybridAutoscaler {
                 let mut freed = 0.0;
                 while vertical && pod.quota >= floor + cfg.quota_step * (n + 1) {
                     let q_new = pod.quota - cfg.quota_step * (n + 1);
-                    let cap_new = predictor.capacity(
+                    let cap_new = predictor.capacity_at(
                         &f.graph,
                         pod.batch,
                         smf,
                         crate::vgpu::quota_to_f64(q_new),
+                        pod_factor,
                     );
                     if c_remaining - (base_cap - cap_new) < target {
                         break;
@@ -780,9 +857,9 @@ mod tests {
         // floor and the default-margin floor land on different lattice steps.
         spec.slo = pred.latency(&spec.graph, 8, 0.5, 0.35);
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let relaxed_floor = hs.min_slo_quota(&spec, 500, &pred, 1.0).max(hs.cfg.min_quota);
+        let relaxed_floor = hs.min_slo_quota(&spec, 500, &pred, 1.0, 1.0).max(hs.cfg.min_quota);
         let strict_floor = hs
-            .min_slo_quota(&spec, 500, &pred, hs.cfg.slo_margin)
+            .min_slo_quota(&spec, 500, &pred, hs.cfg.slo_margin, 1.0)
             .max(hs.cfg.min_quota);
         assert!(
             relaxed_floor < strict_floor,
@@ -858,7 +935,7 @@ mod tests {
                         <= spec.slo * margin
                 })
                 .unwrap_or(QUOTA_FULL);
-                assert_eq!(hs.min_slo_quota(&spec, sm, &pred, margin), want, "sm={sm}");
+                assert_eq!(hs.min_slo_quota(&spec, sm, &pred, margin, 1.0), want, "sm={sm}");
             }
         }
     }
@@ -985,12 +1062,150 @@ mod tests {
     }
 
     #[test]
+    fn min_slo_quota_floor_rises_on_slower_classes() {
+        // A slower class clock needs more quota to make the same SLO; a
+        // faster one needs less (or equal, on the lattice).
+        let (_c, _r, _pm, spec) = setup();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let f_t4 = hs.min_slo_quota(&spec, 500, &pred, 1.0, 0.4);
+        let f_ref = hs.min_slo_quota(&spec, 500, &pred, 1.0, 1.0);
+        let f_a100 = hs.min_slo_quota(&spec, 500, &pred, 1.0, 2.0);
+        assert!(f_t4 >= f_ref && f_ref >= f_a100, "{f_t4} {f_ref} {f_a100}");
+        assert!(f_t4 > f_a100, "the class clock must move the floor");
+    }
+
+    #[test]
+    fn new_gpu_placement_prefers_cheapest_feasible_class() {
+        use crate::cluster::ClusterState;
+        use crate::vgpu::GpuClass;
+        let mut c = ClusterState::from_classes(&[GpuClass::a100(), GpuClass::t4()]);
+        let mut spec = setup().3;
+        c.register_function(spec.clone());
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        // Loose SLO: every class is feasible — the T4 wins on price.
+        spec.slo = 10.0;
+        let actions = hs.plan(&spec, 20.0, &c, &pred, 0.0);
+        match actions.as_slice() {
+            [ScalingAction::CreatePod { gpu, new_gpu, .. }] => {
+                assert_eq!(*gpu, GpuId(1), "cheapest feasible class is the t4");
+                assert!(new_gpu);
+            }
+            other => panic!("{other:?}"),
+        }
+        // SLO between the two class clocks: the T4 cannot meet it even at
+        // full resources, so placement pays up for the A100.
+        let lat_a100 = pred.latency_at(&spec.graph, spec.batch, 1.0, 1.0, 2.0);
+        let lat_t4 = pred.latency_at(&spec.graph, spec.batch, 1.0, 1.0, 0.4);
+        assert!(lat_t4 > lat_a100);
+        spec.slo = (lat_a100 + lat_t4) / 2.0 / hs.cfg.slo_margin;
+        let mut hs2 = HybridAutoscaler::new(HybridConfig::default());
+        let actions = hs2.plan(&spec, 20.0, &c, &pred, 0.0);
+        match actions.as_slice() {
+            [ScalingAction::CreatePod { gpu, .. }] => {
+                assert_eq!(*gpu, GpuId(0), "slo-infeasible t4 must be skipped");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_used_class_defers_to_feasible_idle_gpu() {
+        // Regression: when every used GPU's class is SLO-infeasible but a
+        // feasible idle device exists, the used-GPU fallback must not eat
+        // ΔR with a doomed in-place create — the new pod belongs on the
+        // feasible idle GPU.
+        use crate::cluster::ClusterState;
+        use crate::vgpu::GpuClass;
+        let mut slug = GpuClass::t4();
+        slug.name = "slug".into();
+        slug.throughput = 0.01; // cannot meet any sane SLO even at full GPU
+        let mut c = ClusterState::from_classes(&[slug, GpuClass::v100()]);
+        let spec = setup().3; // slo 0.25
+        c.register_function(spec.clone());
+        let mut recon = Reconfigurator::new(&c, 1);
+        let pm = PerfModel::default();
+        // The only running pod sits on the infeasible class at full quota
+        // (vertical runway exhausted), so scale-up must go horizontal.
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let actions = hs.plan(&spec, 500.0, &c, &pred, 10.0);
+        let (gpu, new_gpu) = actions
+            .iter()
+            .find_map(|a| match a {
+                ScalingAction::CreatePod { gpu, new_gpu, .. } => Some((*gpu, *new_gpu)),
+                _ => None,
+            })
+            .expect("must scale out somewhere");
+        assert_eq!(gpu, GpuId(1), "the feasible idle v100 must win: {actions:?}");
+        assert!(new_gpu);
+    }
+
+    #[test]
+    fn class_memory_gate_skips_devices_too_small_for_the_model() {
+        use crate::cluster::ClusterState;
+        use crate::vgpu::GpuClass;
+        // A "tiny" class that cannot even hold the model: memory feasibility
+        // must route placement to the bigger class despite the lower price.
+        let mut tiny = GpuClass::t4();
+        tiny.name = "tiny".into();
+        tiny.mem_cap = 1e6; // 1 MB
+        let mut c = ClusterState::from_classes(&[GpuClass::v100(), tiny]);
+        let mut spec = setup().3;
+        spec.slo = 10.0; // loose: only memory separates the classes
+        c.register_function(spec.clone());
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let actions = hs.plan(&spec, 20.0, &c, &pred, 0.0);
+        match actions.as_slice() {
+            [ScalingAction::CreatePod { gpu, .. }] => assert_eq!(*gpu, GpuId(0)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn uniform_fleet_plans_are_identical_through_the_class_aware_path() {
+        // The byte-identity keystone at the decision level: a cluster built
+        // from an explicit uniform-v100 fleet must produce exactly the same
+        // actions as the homogeneous constructor, tick for tick.
+        use crate::cluster::ClusterState;
+        use crate::vgpu::GpuClass;
+        let (mut c_old, mut r_old, pm, spec) = setup();
+        let mut c_new = ClusterState::from_classes(&vec![GpuClass::v100(); 6]);
+        c_new.register_function(spec.clone());
+        let mut r_new = Reconfigurator::new(&c_new, 1);
+        let pred = OraclePredictor::default();
+        let mut hs_old = HybridAutoscaler::new(HybridConfig::default());
+        let mut hs_new = HybridAutoscaler::new(HybridConfig::default());
+        for t in 0..60 {
+            // A demand sweep that exercises bootstrap, vertical, horizontal
+            // up and the scale-down path.
+            let demand = match t % 12 {
+                0..=3 => 40.0 * (t as f64 + 1.0),
+                4..=7 => 900.0,
+                _ => 0.0,
+            };
+            let a_old = hs_old.plan(&spec, demand, &c_old, &pred, t as f64);
+            let a_new = hs_new.plan(&spec, demand, &c_new, &pred, t as f64);
+            assert_eq!(a_old, a_new, "tick {t}");
+            for a in &a_old {
+                let _ = r_old.apply(&mut c_old, &pm, a, t as f64);
+            }
+            for a in &a_new {
+                let _ = r_new.apply(&mut c_new, &pm, a, t as f64);
+            }
+        }
+    }
+
+    #[test]
     fn most_efficient_slice_meets_demand_cheaply() {
         let (_c, _r, _pm, spec) = setup();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let small = hs.most_efficient_slice(&spec, 5.0, &pred);
-        let big = hs.most_efficient_slice(&spec, 300.0, &pred);
+        let small = hs.most_efficient_slice(&spec, 5.0, &pred, 1.0);
+        let big = hs.most_efficient_slice(&spec, 300.0, &pred, 1.0);
         let cost = |s: (SmMille, QuotaMille)| (s.0 as u64) * (s.1 as u64);
         assert!(cost(small) < cost(big), "small {small:?} big {big:?}");
         // The small slice really covers 5 rps.

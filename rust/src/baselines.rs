@@ -15,8 +15,56 @@
 use crate::autoscaler::ScalingPolicy;
 use crate::cluster::{ClusterState, FunctionSpec, GpuId, Pod, PodPhase, ScalingAction};
 use crate::rapp::{min_feasible_quota, LatencyPredictor};
-use crate::vgpu::{QuotaMille, SmMille, QUOTA_FULL, SM_FULL};
+use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, SM_FULL};
 use std::collections::BTreeMap;
+
+/// Class feasibility for a new pod of `f` holding `(sm, quota)`: the model
+/// fits the device and the slice meets the SLO under the class clock. Both
+/// baselines gate heterogeneous placement on this — the same *shape* of
+/// rule the hybrid scaler uses (memory + SLO under the class factor), so
+/// no baseline is handicapped by blindly landing on an SLO-infeasible
+/// class. Each platform keeps its own SLO discipline, though: the
+/// baselines judge at their bare SLO (neither has a planning margin —
+/// FaST-GShare's offline slice search already runs flush against the
+/// bound), while HAS-GPU judges at `slo × slo_margin`, consistent with
+/// its own placement maths.
+fn class_feasible(
+    f: &FunctionSpec,
+    sm: SmMille,
+    quota: QuotaMille,
+    predictor: &dyn LatencyPredictor,
+    class: &GpuClass,
+) -> bool {
+    f.graph.memory_bytes(f.batch) <= class.mem_cap
+        && predictor.latency_at(
+            &f.graph,
+            f.batch,
+            crate::vgpu::sm_to_f64(sm),
+            crate::vgpu::quota_to_f64(quota),
+            class.throughput,
+        ) <= f.slo
+}
+
+/// Per-plan-tick memo over [`class_feasible`]: feasibility depends only on
+/// the class (catalog-sized set), never the individual GPU, so the per-GPU
+/// ordering scans probe a tiny Vec instead of re-querying the predictor
+/// per device.
+fn class_feasible_memo<'a>(
+    f: &'a FunctionSpec,
+    sm: SmMille,
+    quota: QuotaMille,
+    predictor: &'a dyn LatencyPredictor,
+) -> impl FnMut(&GpuClass) -> bool + 'a {
+    let mut cache: Vec<(String, bool)> = Vec::new();
+    move |c: &GpuClass| {
+        if let Some((_, ok)) = cache.iter().find(|(n, _)| n == &c.name) {
+            return *ok;
+        }
+        let ok = class_feasible(f, sm, quota, predictor, c);
+        cache.push((c.name.clone(), ok));
+        ok
+    }
+}
 
 /// KServe-like: whole-GPU pods, horizontal-only.
 pub struct KServePolicy {
@@ -67,17 +115,35 @@ impl ScalingPolicy for KServePolicy {
             .into_iter()
             .filter(|p| p.phase != PodPhase::Draining)
             .collect();
-        // Full-GPU pod capacity.
-        let cap = predictor.capacity(&f.graph, f.batch, 1.0, 1.0);
+        // Heterogeneous fleets: order idle GPUs so `pop()` takes the
+        // cheapest *feasible* class first (memory + SLO under the class
+        // clock), LIFO-by-index inside a class — which on a uniform fleet
+        // is exactly the seed's highest-index-first pop, feasible or not.
+        let mut idle: Vec<GpuId> = (0..cluster.n_gpus())
+            .map(GpuId)
+            .filter(|&g| cluster.gpu(g).is_idle())
+            .collect();
+        let mut feas = class_feasible_memo(f, SM_FULL, QUOTA_FULL, predictor);
+        idle.sort_by_key(|&g| {
+            let c = cluster.gpu(g).class();
+            let feasible = feas(c);
+            // Ascending sort; pop() takes the maximum: feasible beats
+            // infeasible, then cheaper price (reversed into the ordering),
+            // then higher index.
+            (feasible, std::cmp::Reverse((c.price_per_hour * 1e6) as u64), g.0)
+        });
+        // Full-GPU pod capacity, judged at the class the next pod would
+        // land on (reference class when the fleet is exhausted).
+        let next_factor = idle
+            .last()
+            .map(|&g| cluster.gpu(g).throughput())
+            .unwrap_or(1.0);
+        let cap = predictor.capacity_at(&f.graph, f.batch, 1.0, 1.0, next_factor);
         let desired = ((rate / (cap * self.target_util)).ceil() as usize).max(1);
         let current = pods.len();
         let mut actions = Vec::new();
         if desired > current {
             // Each new pod needs its own idle GPU (exclusive allocation).
-            let mut idle: Vec<GpuId> = (0..cluster.n_gpus())
-                .map(GpuId)
-                .filter(|&g| cluster.gpu(g).is_idle())
-                .collect();
             for _ in current..desired {
                 let Some(gpu) = idle.pop() else { break };
                 actions.push(ScalingAction::CreatePod {
@@ -182,14 +248,35 @@ impl FastGSharePolicy {
     }
 
     /// First-fit GPU for a slice, respecting SM alignment; used GPUs first
-    /// (FaST-GShare packs functions to raise utilisation).
-    fn find_gpu(cluster: &ClusterState, sm: SmMille, quota: QuotaMille) -> Option<(GpuId, bool)> {
-        for g in cluster.used_gpus() {
+    /// (FaST-GShare packs functions to raise utilisation). Heterogeneous
+    /// fleets: within each tier (used, then idle) candidates are visited
+    /// feasible-classes-first (slice meets the SLO under the class clock,
+    /// model fits), price ascending, index ascending — infeasible classes
+    /// stay at the back as a last resort, so a uniform fleet (one class)
+    /// keeps the seed's plain index-order first-fit exactly.
+    fn find_gpu(
+        cluster: &ClusterState,
+        f: &FunctionSpec,
+        predictor: &dyn LatencyPredictor,
+        sm: SmMille,
+        quota: QuotaMille,
+    ) -> Option<(GpuId, bool)> {
+        let mut feas = class_feasible_memo(f, sm, quota, predictor);
+        let mut rank = |g: GpuId| {
+            let c = cluster.gpu(g).class();
+            let feasible = feas(c);
+            (!feasible, (c.price_per_hour * 1e6) as u64, g.0)
+        };
+        let mut used: Vec<GpuId> = cluster.used_gpus().collect();
+        used.sort_by_key(|&g| rank(g));
+        for g in used {
             if cluster.gpu(g).admissible(sm, quota).is_ok() {
                 return Some((g, false));
             }
         }
-        cluster.idle_gpu().map(|g| (g, true))
+        let mut idle: Vec<GpuId> = cluster.idle_gpus().collect();
+        idle.sort_by_key(|&g| rank(g));
+        idle.first().map(|&g| (g, true))
     }
 }
 
@@ -211,6 +298,9 @@ impl ScalingPolicy for FastGSharePolicy {
             *e = (1.0 - self.ewma_alpha) * *e + self.ewma_alpha * observed_rps;
             *e
         };
+        // The slice (and its capacity, which sizes the replica count) stays
+        // profiled on the reference class — FaST-GShare's offline step knows
+        // one device; mixed fleets only reorder *where* replicas land.
         let (sm, quota) = self.slice_for(f, predictor);
         let slice_cap = predictor.capacity(
             &f.graph,
@@ -228,7 +318,8 @@ impl ScalingPolicy for FastGSharePolicy {
         let mut actions = Vec::new();
         if desired > current {
             for _ in current..desired {
-                let Some((gpu, new_gpu)) = Self::find_gpu(cluster, sm, quota) else {
+                let Some((gpu, new_gpu)) = Self::find_gpu(cluster, f, predictor, sm, quota)
+                else {
                     break;
                 };
                 actions.push(ScalingAction::CreatePod {
@@ -394,6 +485,71 @@ mod tests {
                 }
             }
             other => panic!("expected CreatePod, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kserve_pops_cheapest_feasible_class_first() {
+        use crate::cluster::ClusterState;
+        use crate::vgpu::GpuClass;
+        let mut c = ClusterState::from_classes(&[
+            GpuClass::a100(),
+            GpuClass::t4(),
+            GpuClass::v100(),
+        ]);
+        let mut spec = setup().3;
+        spec.slo = 10.0; // loose: all classes feasible
+        c.register_function(spec.clone());
+        let pred = OraclePredictor::default();
+        let mut ks = KServePolicy::default();
+        let actions = ks.plan(&spec, 10.0, &c, &pred, 0.0);
+        match actions.as_slice() {
+            [ScalingAction::CreatePod { gpu, .. }] => {
+                assert_eq!(*gpu, GpuId(1), "t4 is the cheapest feasible whole GPU");
+            }
+            other => panic!("{other:?}"),
+        }
+        // SLO the T4 cannot meet even as a whole GPU: next-cheapest class.
+        let lat_t4 = pred.latency_at(&spec.graph, spec.batch, 1.0, 1.0, 0.4);
+        let lat_v100 = pred.latency(&spec.graph, spec.batch, 1.0, 1.0);
+        spec.slo = (lat_v100 + lat_t4) / 2.0;
+        let mut ks2 = KServePolicy::default();
+        let actions = ks2.plan(&spec, 10.0, &c, &pred, 0.0);
+        match actions.as_slice() {
+            [ScalingAction::CreatePod { gpu, .. }] => {
+                assert_eq!(*gpu, GpuId(2), "v100 beats a100 on price once t4 is out");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fastgshare_places_slice_on_cheapest_feasible_class() {
+        use crate::cluster::ClusterState;
+        use crate::vgpu::GpuClass;
+        let mut c = ClusterState::from_classes(&[GpuClass::v100(), GpuClass::t4()]);
+        let spec = setup().3; // slo 0.25: reference slice is comfortably feasible
+        c.register_function(spec.clone());
+        let pred = OraclePredictor::default();
+        let mut fg = FastGSharePolicy::default();
+        let actions = fg.plan(&spec, 5.0, &c, &pred, 0.0);
+        let (sm, quota) = fg.slices[&spec.name];
+        match actions.as_slice() {
+            [ScalingAction::CreatePod { gpu, .. }] => {
+                let class = c.gpu(*gpu).class().clone();
+                // Wherever it landed, the slice must meet the SLO under that
+                // class's clock (the shared feasibility rule).
+                assert!(
+                    class_feasible(&spec, sm, quota, &pred, &class),
+                    "placed on an SLO-infeasible class {}",
+                    class.name
+                );
+                // And if the cheap class is feasible, it must have won.
+                if class_feasible(&spec, sm, quota, &pred, &GpuClass::t4()) {
+                    assert_eq!(*gpu, GpuId(1));
+                }
+            }
+            other => panic!("{other:?}"),
         }
     }
 

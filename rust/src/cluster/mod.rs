@@ -11,7 +11,7 @@ pub mod reconfigurator;
 pub use reconfigurator::{Applied, Reconfigurator, ScalingAction};
 
 use crate::model::OpGraph;
-use crate::vgpu::{ClientId, QuotaMille, SmMille, VGpu};
+use crate::vgpu::{ClientId, GpuClass, QuotaMille, SmMille, VGpu};
 use std::collections::BTreeMap;
 
 /// Cold-start latencies (seconds) — paper §4.3: KServe's GPU-instance
@@ -107,11 +107,31 @@ pub struct ClusterState {
 }
 
 impl ClusterState {
-    /// A cluster of `n_gpus` identical GPUs with `mem_cap` bytes each.
+    /// A cluster of `n_gpus` identical reference-class (V100) GPUs with
+    /// `mem_cap` bytes each — the homogeneous pre-catalog constructor.
     pub fn new(n_gpus: usize, mem_cap: f64) -> Self {
         ClusterState {
             gpus: (0..n_gpus)
                 .map(|i| VGpu::new(&format!("GPU-{i:04x}"), mem_cap))
+                .collect(),
+            pods: BTreeMap::new(),
+            functions: BTreeMap::new(),
+            next_pod: 1,
+            coldstart: ColdStartSpec::default(),
+        }
+    }
+
+    /// A heterogeneous cluster: one GPU per entry of `classes`, in order
+    /// (fleet declaration order — GPU index is a placement tie-break, so
+    /// the order is part of a fleet's deterministic identity). UUIDs keep
+    /// the homogeneous `GPU-{i:04x}` format; each device's memory capacity
+    /// comes from its class descriptor.
+    pub fn from_classes(classes: &[GpuClass]) -> Self {
+        ClusterState {
+            gpus: classes
+                .iter()
+                .enumerate()
+                .map(|(i, c)| VGpu::with_class(&format!("GPU-{i:04x}"), c.clone()))
                 .collect(),
             pods: BTreeMap::new(),
             functions: BTreeMap::new(),
@@ -164,36 +184,93 @@ impl ClusterState {
             .collect()
     }
 
-    /// GPUs currently hosting at least one pod.
-    pub fn used_gpus(&self) -> Vec<GpuId> {
-        (0..self.gpus.len())
-            .map(GpuId)
-            .filter(|&g| !self.gpus[g.0].is_idle())
-            .collect()
+    /// GPUs currently hosting at least one pod, in index order. An
+    /// iterator — the plan tick scans this every function every tick, so
+    /// no `Vec` is allocated (pinned in `benches/scheduler_hotpath.rs`).
+    pub fn used_gpus(&self) -> impl Iterator<Item = GpuId> + '_ {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| !g.is_idle())
+            .map(|(i, _)| GpuId(i))
+    }
+
+    /// Idle GPUs in index order (allocation-free scan).
+    pub fn idle_gpus(&self) -> impl Iterator<Item = GpuId> + '_ {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.is_idle())
+            .map(|(i, _)| GpuId(i))
     }
 
     /// An idle GPU, if any (horizontal scale-up to a "new GPU", line 18-19).
     pub fn idle_gpu(&self) -> Option<GpuId> {
-        (0..self.gpus.len())
-            .map(GpuId)
-            .find(|&g| self.gpus[g.0].is_idle())
+        self.idle_gpus().next()
     }
 
-    /// Used GPU with the lowest HGO (Algorithm 1, line 11).
+    /// Used GPU with the lowest HGO (Algorithm 1, line 11). First-wins on
+    /// HGO ties (index order), as the seed's `min_by` did.
     pub fn least_occupied_used_gpu(&self) -> Option<GpuId> {
-        self.used_gpus()
-            .into_iter()
-            .min_by(|&a, &b| {
-                self.gpus[a.0]
-                    .hgo()
-                    .partial_cmp(&self.gpus[b.0].hgo())
-                    .unwrap()
-            })
+        self.used_gpus().min_by(|&a, &b| {
+            self.gpus[a.0]
+                .hgo()
+                .partial_cmp(&self.gpus[b.0].hgo())
+                .unwrap()
+        })
+    }
+
+    /// Used GPU for a new pod under heterogeneous fleets: cheapest feasible
+    /// class first (`feasible` judges a *class* — memory + SLO under its
+    /// throughput factor), price ascending, tie-broken by lowest HGO then
+    /// index. When no used GPU's class is feasible, falls back to the pure
+    /// lowest-HGO rule — so on a uniform fleet (one class) the choice is
+    /// *exactly* [`ClusterState::least_occupied_used_gpu`], feasible or not
+    /// (the byte-identity contract for `uniform-v100`).
+    pub fn cheapest_feasible_used_gpu(
+        &self,
+        mut feasible: impl FnMut(&GpuClass) -> bool,
+    ) -> Option<GpuId> {
+        let mut best: Option<(f64, f64, GpuId)> = None; // (price, hgo, id)
+        for id in self.used_gpus() {
+            let g = &self.gpus[id.0];
+            if !feasible(g.class()) {
+                continue;
+            }
+            let key = (g.class().price_per_hour, g.hgo());
+            if best.map_or(true, |(p, h, _)| key < (p, h)) {
+                best = Some((key.0, key.1, id));
+            }
+        }
+        best.map(|(_, _, id)| id)
+            .or_else(|| self.least_occupied_used_gpu())
+    }
+
+    /// Idle GPU for a new pod under heterogeneous fleets: cheapest feasible
+    /// class, price ascending, tie-broken by index. Falls back to the first
+    /// idle GPU (index order) when no idle GPU's class is feasible — the
+    /// uniform-fleet choice is exactly [`ClusterState::idle_gpu`].
+    pub fn cheapest_feasible_idle_gpu(
+        &self,
+        mut feasible: impl FnMut(&GpuClass) -> bool,
+    ) -> Option<GpuId> {
+        let mut best: Option<(f64, GpuId)> = None; // (price, id)
+        for id in self.idle_gpus() {
+            let g = &self.gpus[id.0];
+            if !feasible(g.class()) {
+                continue;
+            }
+            let price = g.class().price_per_hour;
+            if best.map_or(true, |(p, _)| price < p) {
+                best = Some((price, id));
+            }
+        }
+        best.map(|(_, id)| id).or_else(|| self.idle_gpu())
     }
 
     /// Number of GPUs with at least one pod (cost reporting).
     pub fn gpus_in_use(&self) -> usize {
-        self.used_gpus().len()
+        self.used_gpus().count()
     }
 
     /// Allocate a pod id (the Re-configurator performs the actual placement).
@@ -265,10 +342,70 @@ mod tests {
     fn gpu_inventory() {
         let c = test_cluster();
         assert_eq!(c.n_gpus(), 4);
-        assert_eq!(c.used_gpus().len(), 0);
+        assert_eq!(c.used_gpus().count(), 0);
         assert_eq!(c.idle_gpu(), Some(GpuId(0)));
+        assert_eq!(c.idle_gpus().count(), 4);
         assert!(c.function("resnet50").is_some());
         assert!(c.function("nope").is_none());
+    }
+
+    #[test]
+    fn from_classes_builds_one_gpu_per_entry_in_order() {
+        let classes = vec![GpuClass::a100(), GpuClass::v100(), GpuClass::t4()];
+        let c = ClusterState::from_classes(&classes);
+        assert_eq!(c.n_gpus(), 3);
+        assert_eq!(c.gpu(GpuId(0)).class().name, "a100");
+        assert_eq!(c.gpu(GpuId(1)).class().name, "v100");
+        assert_eq!(c.gpu(GpuId(2)).class().name, "t4");
+        assert_eq!(c.gpu(GpuId(0)).uuid, "GPU-0000");
+        assert_eq!(c.gpu(GpuId(0)).mem_free(), GpuClass::a100().mem_cap);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cheapest_feasible_idle_gpu_orders_by_price_then_index() {
+        let classes = vec![GpuClass::a100(), GpuClass::t4(), GpuClass::v100(), GpuClass::t4()];
+        let c = ClusterState::from_classes(&classes);
+        // All feasible: the first (lowest-index) T4 wins on price.
+        assert_eq!(c.cheapest_feasible_idle_gpu(|_| true), Some(GpuId(1)));
+        // T4 infeasible (e.g. SLO too tight for a slow class): next-cheapest.
+        assert_eq!(
+            c.cheapest_feasible_idle_gpu(|cl| cl.name != "t4"),
+            Some(GpuId(2))
+        );
+        // Nothing feasible: fall back to the first idle GPU — exactly the
+        // homogeneous rule, so a uniform fleet is never perturbed.
+        assert_eq!(c.cheapest_feasible_idle_gpu(|_| false), c.idle_gpu());
+    }
+
+    #[test]
+    fn cheapest_feasible_used_gpu_breaks_price_ties_by_hgo() {
+        let mut c = ClusterState::from_classes(&[
+            GpuClass::v100(),
+            GpuClass::v100(),
+            GpuClass::t4(),
+        ]);
+        c.gpu_mut(GpuId(0))
+            .attach(crate::vgpu::ClientId(1), 500, 800, 1e9)
+            .unwrap();
+        c.gpu_mut(GpuId(1))
+            .attach(crate::vgpu::ClientId(2), 250, 400, 1e9)
+            .unwrap();
+        c.gpu_mut(GpuId(2))
+            .attach(crate::vgpu::ClientId(3), 500, 1000, 1e9)
+            .unwrap();
+        // T4 is cheapest and feasible: wins despite the highest HGO.
+        assert_eq!(c.cheapest_feasible_used_gpu(|_| true), Some(GpuId(2)));
+        // T4 filtered out: among the V100s the lower-HGO one wins.
+        assert_eq!(
+            c.cheapest_feasible_used_gpu(|cl| cl.name != "t4"),
+            Some(GpuId(1))
+        );
+        // None feasible: the homogeneous lowest-HGO rule decides.
+        assert_eq!(
+            c.cheapest_feasible_used_gpu(|_| false),
+            c.least_occupied_used_gpu()
+        );
     }
 
     #[test]

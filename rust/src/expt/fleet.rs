@@ -1,0 +1,317 @@
+//! Fleet presets: named GPU-class compositions the scenario matrix can
+//! resolve by name, exactly like platforms.
+//!
+//! A **fleet** declares *what mix of device classes* a cell's cluster is
+//! built from; the matrix's `--gpus` knob still sets the device count, and
+//! [`FleetSpec::classes_for`] distributes it across the declared classes
+//! deterministically (largest-remainder over the declared weights, ties by
+//! declaration order, devices emitted grouped in declaration order — GPU
+//! index is a placement tie-break, so the ordering is part of the fleet's
+//! identity).
+//!
+//! **Name stability:** fleet names are export keys (`BENCH_sim.json` cells
+//! carry their fleet; summary/ratio rows group by it). The default
+//! [`DEFAULT_FLEET`] (`uniform-v100`) is special: it reproduces the
+//! pre-fleet homogeneous cluster byte-for-byte and is *omitted* from the
+//! export, so stock grids never change a byte (pinned by
+//! `rust/tests/expt_golden.rs`).
+
+use crate::util::bench::ascii_table;
+use crate::vgpu::GpuClass;
+
+/// The fleet every pre-fleet grid implicitly ran on. Cells on this fleet
+/// export no `fleet` key — byte-stability of the stock schema.
+pub const DEFAULT_FLEET: &str = "uniform-v100";
+
+/// A named GPU-class composition.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Stable registry key (export schema; see module docs).
+    pub name: String,
+    /// One-line description for `--help` and the `fleets` subcommand.
+    pub about: String,
+    /// (class, weight) in declaration order; `classes_for` splits the
+    /// device count proportionally to the weights.
+    pub groups: Vec<(GpuClass, u32)>,
+}
+
+impl FleetSpec {
+    /// A single-class fleet.
+    pub fn uniform(name: impl Into<String>, about: impl Into<String>, class: GpuClass) -> Self {
+        FleetSpec {
+            name: name.into(),
+            about: about.into(),
+            groups: vec![(class, 1)],
+        }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.groups.len() == 1
+    }
+
+    /// Does this fleet reproduce the pre-fleet homogeneous cluster?
+    pub fn is_reference_uniform(&self) -> bool {
+        self.is_uniform() && self.groups[0].0.is_reference()
+    }
+
+    /// Deterministic composition for `n_gpus` devices: floor the
+    /// proportional share per class, hand the remainder out by largest
+    /// fractional part (ties → declaration order), emit devices grouped in
+    /// declaration order. Always returns exactly `n_gpus` entries.
+    pub fn classes_for(&self, n_gpus: usize) -> Vec<GpuClass> {
+        let total_w: u64 = self.groups.iter().map(|(_, w)| *w as u64).sum();
+        debug_assert!(total_w > 0, "fleet '{}' has zero total weight", self.name);
+        let n = n_gpus as u64;
+        let mut counts: Vec<u64> = Vec::with_capacity(self.groups.len());
+        let mut fracs: Vec<(u64, usize)> = Vec::with_capacity(self.groups.len()); // (remainder numerator, idx)
+        let mut assigned = 0u64;
+        for (i, (_, w)) in self.groups.iter().enumerate() {
+            let num = n * *w as u64;
+            counts.push(num / total_w);
+            fracs.push((num % total_w, i));
+            assigned += num / total_w;
+        }
+        // Largest remainder first; equal remainders in declaration order.
+        fracs.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut leftover = n - assigned;
+        for &(_, i) in &fracs {
+            if leftover == 0 {
+                break;
+            }
+            counts[i] += 1;
+            leftover -= 1;
+        }
+        let mut out = Vec::with_capacity(n_gpus);
+        for (i, (class, _)) in self.groups.iter().enumerate() {
+            for _ in 0..counts[i] {
+                out.push(class.clone());
+            }
+        }
+        debug_assert_eq!(out.len(), n_gpus);
+        out
+    }
+
+    /// Device count per class name for `n_gpus` (per-class occupancy
+    /// columns), in declaration order, zero-count classes included.
+    pub fn class_counts(&self, n_gpus: usize) -> Vec<(String, usize)> {
+        let classes = self.classes_for(n_gpus);
+        self.groups
+            .iter()
+            .map(|(c, _)| {
+                let n = classes.iter().filter(|x| x.name == c.name).count();
+                (c.name.clone(), n)
+            })
+            .collect()
+    }
+}
+
+/// Ordered collection of [`FleetSpec`]s; registration order is listing
+/// order. Mirrors [`super::PlatformRegistry`]'s contract: case-insensitive
+/// lookup, duplicate and CLI-unreachable names rejected, unknown names
+/// error with the full menu.
+#[derive(Clone, Debug)]
+pub struct FleetRegistry {
+    specs: Vec<FleetSpec>,
+}
+
+impl Default for FleetRegistry {
+    /// `uniform-v100` (the byte-stable default) plus the mixed
+    /// A100/V100/T4 fleet (1:2:1 by weight) the heterogeneity experiments
+    /// run on.
+    fn default() -> Self {
+        let mut reg = FleetRegistry::empty();
+        reg.register(FleetSpec::uniform(
+            DEFAULT_FLEET,
+            "homogeneous V100 rack (the paper's testbed; byte-stable default)",
+            GpuClass::v100(),
+        ))
+        .unwrap();
+        reg.register(FleetSpec {
+            name: "mixed-a100-v100-t4".into(),
+            about: "heterogeneous rack: A100 : V100 : T4 at 1 : 2 : 1".into(),
+            groups: vec![
+                (GpuClass::a100(), 1),
+                (GpuClass::v100(), 2),
+                (GpuClass::t4(), 1),
+            ],
+        })
+        .unwrap();
+        reg
+    }
+}
+
+impl FleetRegistry {
+    pub fn empty() -> Self {
+        FleetRegistry { specs: Vec::new() }
+    }
+
+    /// Append a spec; names are case-insensitive keys with the same
+    /// reachability rules as platform names.
+    pub fn register(&mut self, spec: FleetSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(!spec.name.is_empty(), "fleet name must be non-empty");
+        anyhow::ensure!(
+            spec.name.trim() == spec.name,
+            "fleet name '{}' must not have surrounding whitespace",
+            spec.name
+        );
+        anyhow::ensure!(
+            !spec.name.contains(','),
+            "fleet name '{}' must not contain ',' (the CLI list separator)",
+            spec.name
+        );
+        anyhow::ensure!(
+            !spec.groups.is_empty() && spec.groups.iter().any(|(_, w)| *w > 0),
+            "fleet '{}' needs at least one positively-weighted class",
+            spec.name
+        );
+        anyhow::ensure!(
+            self.get(&spec.name).is_none(),
+            "fleet '{}' is already registered",
+            spec.name
+        );
+        self.specs.push(spec);
+        Ok(())
+    }
+
+    /// Case-insensitive lookup.
+    pub fn get(&self, name: &str) -> Option<&FleetSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name.trim()))
+    }
+
+    pub fn specs(&self) -> &[FleetSpec] {
+        &self.specs
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Expand a `--fleets` token list into canonical registry names,
+    /// deduplicated in first-appearance order.
+    pub fn resolve(&self, tokens: &[String]) -> anyhow::Result<Vec<String>> {
+        anyhow::ensure!(!tokens.is_empty(), "need at least one fleet");
+        let mut out: Vec<String> = Vec::new();
+        for tok in tokens {
+            let t = tok.trim();
+            let Some(spec) = self.get(t) else {
+                anyhow::bail!(
+                    "unknown fleet '{t}' (expected one of: {})",
+                    self.names().join(", ")
+                );
+            };
+            if !out.iter().any(|n| n == &spec.name) {
+                out.push(spec.name.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// One-line inventory for `--help` text.
+    pub fn cli_help(&self) -> String {
+        format!("comma list of fleet names; names: {}", self.names().join(", "))
+    }
+
+    /// The `has-gpu fleets` inventory table.
+    pub fn table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .specs
+            .iter()
+            .map(|s| {
+                let mix = s
+                    .groups
+                    .iter()
+                    .map(|(c, w)| format!("{}:{w}", c.name))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                vec![s.name.clone(), mix, s.about.clone()]
+            })
+            .collect();
+        ascii_table(&["fleet", "class:weight", "description"], &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_registry_has_byte_stable_default_first() {
+        let reg = FleetRegistry::default();
+        assert_eq!(reg.names(), vec![DEFAULT_FLEET, "mixed-a100-v100-t4"]);
+        assert!(reg.get(DEFAULT_FLEET).unwrap().is_reference_uniform());
+        assert!(!reg.get("mixed-a100-v100-t4").unwrap().is_uniform());
+        assert!(reg.get("Uniform-V100").is_some(), "lookup is case-insensitive");
+    }
+
+    #[test]
+    fn classes_for_distributes_exactly_n_deterministically() {
+        let reg = FleetRegistry::default();
+        let mixed = reg.get("mixed-a100-v100-t4").unwrap();
+        for n in [1usize, 2, 3, 4, 6, 10, 17, 100] {
+            let classes = mixed.classes_for(n);
+            assert_eq!(classes.len(), n, "n={n}");
+            assert_eq!(classes, mixed.classes_for(n), "must be deterministic");
+        }
+        // 10 devices at 1:2:1 → remainders tie between a100 and t4; the
+        // declaration order hands the spare to the a100.
+        let counts = mixed.class_counts(10);
+        assert_eq!(
+            counts,
+            vec![
+                ("a100".to_string(), 3),
+                ("v100".to_string(), 5),
+                ("t4".to_string(), 2)
+            ]
+        );
+        // Devices come out grouped in declaration order.
+        let classes = mixed.classes_for(10);
+        assert_eq!(classes[0].name, "a100");
+        assert_eq!(classes[3].name, "v100");
+        assert_eq!(classes[8].name, "t4");
+        // The uniform default is all reference class.
+        let uni = reg.get(DEFAULT_FLEET).unwrap().classes_for(4);
+        assert!(uni.iter().all(|c| c.is_reference()));
+    }
+
+    #[test]
+    fn resolve_dedupes_and_errors_with_menu() {
+        let reg = FleetRegistry::default();
+        assert_eq!(
+            reg.resolve(&["MIXED-A100-V100-T4".to_string(), DEFAULT_FLEET.to_string()])
+                .unwrap(),
+            vec!["mixed-a100-v100-t4".to_string(), DEFAULT_FLEET.to_string()]
+        );
+        assert_eq!(
+            reg.resolve(&[DEFAULT_FLEET.to_string(), DEFAULT_FLEET.to_string()])
+                .unwrap()
+                .len(),
+            1
+        );
+        let err = reg.resolve(&["gpu-zoo".to_string()]).unwrap_err().to_string();
+        assert!(err.contains(DEFAULT_FLEET) && err.contains("mixed-a100-v100-t4"), "{err}");
+        assert!(reg.resolve(&[]).is_err());
+    }
+
+    #[test]
+    fn registration_rejects_unreachable_and_duplicate_names() {
+        let mut reg = FleetRegistry::default();
+        for bad in ["", " padded", "a,b", DEFAULT_FLEET, "UNIFORM-V100"] {
+            let spec = FleetSpec::uniform(bad, "bad", GpuClass::v100());
+            assert!(reg.register(spec).is_err(), "'{bad}' must be rejected");
+        }
+        let zero = FleetSpec {
+            name: "zero-weight".into(),
+            about: "no classes".into(),
+            groups: vec![(GpuClass::v100(), 0)],
+        };
+        assert!(reg.register(zero).is_err());
+        // A fresh custom fleet registers, resolves, and lists.
+        reg.register(FleetSpec::uniform("uniform-t4", "budget rack", GpuClass::t4()))
+            .unwrap();
+        assert_eq!(reg.resolve(&["uniform-t4".into()]).unwrap(), vec!["uniform-t4"]);
+        assert!(reg.table().contains("uniform-t4"));
+        assert!(reg.cli_help().contains("uniform-t4"));
+    }
+}

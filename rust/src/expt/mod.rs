@@ -10,7 +10,8 @@
 //!   single-axis / static-predictor ablations, and any caller-registered
 //!   comparator;
 //! * [`ScenarioMatrix`] declares the grid (platform names resolved against
-//!   the registry, presets, seeds, trace length, cluster size, base rate);
+//!   the registry, fleet names against the [`FleetRegistry`], presets,
+//!   seeds, trace length, cluster size, base rate);
 //! * [`ScenarioMatrix::run`] shards the cells across
 //!   [`ThreadPool::scope_for`] — each cell is an independent, fully-seeded
 //!   [`run_sim`] invocation, so results are **bit-identical for any
@@ -24,11 +25,14 @@
 //! The `has-gpu expt` subcommand is the CLI entry point; `has-gpu simulate`
 //! is a single-cell special case of the same path. For stock-trio grids the
 //! export is byte-identical to the pre-registry (closed-enum) output —
-//! pinned by `rust/tests/expt_golden.rs`; ablation platforms extend the
-//! grid without perturbing existing cells.
+//! pinned by `rust/tests/expt_golden.rs`; ablation platforms and
+//! non-default fleets extend the grid without perturbing existing cells
+//! (the default `uniform-v100` fleet exports no fleet keys at all).
 
+pub mod fleet;
 pub mod platform;
 
+pub use fleet::{FleetRegistry, FleetSpec, DEFAULT_FLEET};
 pub use platform::{
     billing_label, PlatformGroup, PlatformRegistry, PlatformSpec, PolicyFactory, PredictorSel,
 };
@@ -75,18 +79,22 @@ pub fn experiment_functions() -> Vec<FunctionSpec> {
 }
 
 /// One grid cell: a platform (by registry name) run against one preset
-/// instance at one seed.
+/// instance at one seed, on one named fleet.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ScenarioCell {
     pub platform: String,
     pub preset: Preset,
     pub seed: u64,
+    /// Fleet registry name ([`DEFAULT_FLEET`] = the pre-fleet homogeneous
+    /// V100 cluster; omitted from the export for byte-stability).
+    pub fleet: String,
 }
 
 /// Declarative description of the experiment grid. `platforms` holds
 /// canonical registry names (use [`parse_platforms`] /
 /// [`PlatformRegistry::resolve`] to produce them); `registry` supplies the
-/// descriptors [`ScenarioMatrix::run_cell`] builds each cell from.
+/// descriptors [`ScenarioMatrix::run_cell`] builds each cell from;
+/// `fleets` holds canonical [`FleetRegistry`] names resolved the same way.
 #[derive(Clone, Debug)]
 pub struct ScenarioMatrix {
     pub platforms: Vec<String>,
@@ -95,10 +103,14 @@ pub struct ScenarioMatrix {
     pub seeds: Vec<u64>,
     /// Trace length per cell in virtual seconds.
     pub seconds: usize,
-    /// Cluster size per cell.
+    /// Cluster size per cell (split across a fleet's classes by weight).
     pub gpus: usize,
     /// Mean request rate the trace synthesiser oscillates around.
     pub rps: f64,
+    /// Fleet names per cell column; default `[uniform-v100]` — the
+    /// byte-stable pre-fleet grid.
+    pub fleets: Vec<String>,
+    pub fleet_registry: FleetRegistry,
 }
 
 impl Default for ScenarioMatrix {
@@ -117,25 +129,33 @@ impl Default for ScenarioMatrix {
             seconds: 300,
             gpus: 10,
             rps: 150.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
+            fleet_registry: FleetRegistry::default(),
         }
     }
 }
 
 impl ScenarioMatrix {
-    /// The grid cells in canonical (preset-major, then platform, then seed)
-    /// order. The order is part of the output contract: aggregation and
-    /// serialisation walk it deterministically.
+    /// The grid cells in canonical (preset-major, then fleet, then
+    /// platform, then seed) order. The order is part of the output
+    /// contract: aggregation and serialisation walk it deterministically,
+    /// and with the single default fleet it is exactly the pre-fleet
+    /// (preset, platform, seed) walk.
     pub fn cells(&self) -> Vec<ScenarioCell> {
-        let mut out =
-            Vec::with_capacity(self.presets.len() * self.platforms.len() * self.seeds.len());
+        let mut out = Vec::with_capacity(
+            self.presets.len() * self.fleets.len() * self.platforms.len() * self.seeds.len(),
+        );
         for &preset in &self.presets {
-            for platform in &self.platforms {
-                for &seed in &self.seeds {
-                    out.push(ScenarioCell {
-                        platform: platform.clone(),
-                        preset,
-                        seed,
-                    });
+            for fleet in &self.fleets {
+                for platform in &self.platforms {
+                    for &seed in &self.seeds {
+                        out.push(ScenarioCell {
+                            platform: platform.clone(),
+                            preset,
+                            seed,
+                            fleet: fleet.clone(),
+                        });
+                    }
                 }
             }
         }
@@ -159,13 +179,21 @@ impl ScenarioMatrix {
                 self.registry.names().join(", ")
             )
         });
+        let fleet = self.fleet_registry.get(&cell.fleet).unwrap_or_else(|| {
+            panic!(
+                "fleet '{}' not in registry (known: {})",
+                cell.fleet,
+                self.fleet_registry.names().join(", ")
+            )
+        });
         // Lookup is case-insensitive; the *result* always keys on the
-        // canonical registry name so summaries, ratios, and the policy's
+        // canonical registry names so summaries, ratios, and the policy's
         // self-reported name agree regardless of the caller's casing.
         let canonical = ScenarioCell {
             platform: spec.name.clone(),
             preset: cell.preset,
             seed: cell.seed,
+            fleet: fleet.name.clone(),
         };
         let fns = experiment_functions();
         let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
@@ -174,13 +202,17 @@ impl ScenarioMatrix {
         let perf = PerfModel::default();
         let predictor = spec.build_predictor();
         let mut policy = spec.policy();
+        // Every cell runs through the fleet-built cluster — for the default
+        // uniform-v100 fleet this is the homogeneous construction to the
+        // bit (pinned by tests/expt_golden.rs and the sim identity test).
         let report = run_sim(
             policy.as_mut(),
             &fns,
             &trace,
             predictor.as_ref(),
             &perf,
-            &SimConfig::for_experiment(self.gpus, cell.seed, spec.billing),
+            &SimConfig::for_experiment(self.gpus, cell.seed, spec.billing)
+                .with_fleet(fleet.classes_for(self.gpus)),
         );
         let result = CellResult::from_report(&canonical, &fns, &report);
         (report, result)
@@ -212,9 +244,17 @@ impl ScenarioMatrix {
             seconds: self.seconds,
             gpus: self.gpus,
             rps: self.rps,
+            fleets: self.fleets.clone(),
             cells: results,
         }
     }
+}
+
+/// Parse a fleet selection (one `--fleets` list entry per element) against
+/// the fleet registry: names only, case-insensitive, deduplicated in
+/// first-appearance order. Unknown names error with the full registry menu.
+pub fn parse_fleets(specs: &[String], registry: &FleetRegistry) -> anyhow::Result<Vec<String>> {
+    registry.resolve(specs)
 }
 
 /// Parse a seed specification: a bare count `"4"` expands to
@@ -332,10 +372,57 @@ impl FunctionCellMetrics {
     }
 }
 
+/// Per-GPU-class slice of one heterogeneous cell's result: the mixed-fleet
+/// grid columns ($/1k per class, per-class occupancy). Only populated —
+/// and only exported — for cells on non-reference fleets, so uniform-v100
+/// grids keep their pre-fleet bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassCellMetrics {
+    pub class: String,
+    /// Devices of this class in the cell's fleet.
+    pub gpus: usize,
+    /// sm×quota-weighted GPU-seconds billed on this class.
+    pub gpu_seconds: f64,
+    /// $ billed on this class.
+    pub cost: f64,
+    /// Class $ per 1000 served requests (cell-wide served; `0.0` when
+    /// nothing was served, the [`crate::metrics::CostMeter`] convention).
+    pub cost_per_1k: f64,
+    /// Mean billed occupancy of this class's devices over the run:
+    /// gpu_seconds / (gpus × duration); `0.0` for an empty class.
+    pub occupancy: f64,
+}
+
+impl ClassCellMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("class", Json::Str(self.class.clone())),
+            ("gpus", Json::Num(self.gpus as f64)),
+            ("gpu_seconds", Json::Num(self.gpu_seconds)),
+            ("cost", Json::Num(self.cost)),
+            ("cost_per_1k", Json::Num(self.cost_per_1k)),
+            ("occupancy", Json::Num(self.occupancy)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(ClassCellMetrics {
+            class: j.get("class")?.as_str()?.to_string(),
+            gpus: j.get("gpus")?.as_usize()?,
+            gpu_seconds: j.get("gpu_seconds")?.as_f64()?,
+            cost: j.get("cost")?.as_f64()?,
+            cost_per_1k: j.get("cost_per_1k")?.as_f64()?,
+            occupancy: j.get("occupancy")?.as_f64()?,
+        })
+    }
+}
+
 /// Aggregated metrics of one grid cell, keyed by registry platform name.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellResult {
     pub platform: String,
+    /// Fleet the cell ran on; [`DEFAULT_FLEET`] cells omit the key in JSON.
+    pub fleet: String,
     pub preset: Preset,
     pub seed: u64,
     pub served: usize,
@@ -355,6 +442,8 @@ pub struct CellResult {
     pub horizontal_ups: usize,
     pub horizontal_downs: usize,
     pub functions: Vec<FunctionCellMetrics>,
+    /// Per-class columns; empty (and unexported) on reference-uniform cells.
+    pub classes: Vec<ClassCellMetrics>,
 }
 
 impl CellResult {
@@ -395,8 +484,44 @@ impl CellResult {
                 }
             })
             .collect();
+        // Per-class columns only for heterogeneous runs: a reference-uniform
+        // fleet must produce the exact pre-fleet row.
+        let heterogeneous = report
+            .fleet_gpus
+            .keys()
+            .any(|c| c != crate::vgpu::REFERENCE_CLASS)
+            || report.fleet_gpus.len() > 1;
+        let classes = if heterogeneous {
+            report
+                .fleet_gpus
+                .iter()
+                .map(|(class, &gpus)| {
+                    let gpu_seconds = report.costs.class_gpu_seconds_of(class);
+                    let cost = report.costs.class_cost_of(class);
+                    ClassCellMetrics {
+                        class: class.clone(),
+                        gpus,
+                        gpu_seconds,
+                        cost,
+                        cost_per_1k: if served == 0 {
+                            0.0
+                        } else {
+                            cost * 1000.0 / served as f64
+                        },
+                        occupancy: if gpus > 0 && report.duration > 0.0 {
+                            gpu_seconds / (gpus as f64 * report.duration)
+                        } else {
+                            0.0
+                        },
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         CellResult {
             platform: cell.platform.clone(),
+            fleet: cell.fleet.clone(),
             preset: cell.preset,
             seed: cell.seed,
             served,
@@ -415,12 +540,19 @@ impl CellResult {
             horizontal_ups: report.horizontal_ups,
             horizontal_downs: report.horizontal_downs,
             functions,
+            classes,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("platform", Json::Str(self.platform.clone())),
+        let mut fields = vec![("platform", Json::Str(self.platform.clone()))];
+        // Byte-stability rule: reference-uniform cells (the pre-fleet
+        // schema) export no fleet/classes keys; everything else carries
+        // both.
+        if self.fleet != DEFAULT_FLEET {
+            fields.push(("fleet", Json::Str(self.fleet.clone())));
+        }
+        fields.extend([
             ("preset", Json::Str(self.preset.name().to_string())),
             ("seed", Json::Num(self.seed as f64)),
             ("served", Json::Num(self.served as f64)),
@@ -435,7 +567,14 @@ impl CellResult {
             ("horizontal_ups", Json::Num(self.horizontal_ups as f64)),
             ("horizontal_downs", Json::Num(self.horizontal_downs as f64)),
             ("functions", Json::Arr(self.functions.iter().map(|f| f.to_json()).collect())),
-        ])
+        ]);
+        if !self.classes.is_empty() {
+            fields.push((
+                "classes",
+                Json::Arr(self.classes.iter().map(|c| c.to_json()).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
@@ -447,8 +586,26 @@ impl CellResult {
         let preset_name = j.get("preset")?.as_str()?;
         let preset = Preset::from_name(preset_name)
             .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset_name}'"))?;
+        // Absent fleet key ⇒ the pre-fleet schema ⇒ the default fleet.
+        let fleet = match j.opt("fleet") {
+            Some(v) => {
+                let name = v.as_str()?.to_string();
+                anyhow::ensure!(!name.is_empty(), "cell fleet name must be non-empty");
+                name
+            }
+            None => DEFAULT_FLEET.to_string(),
+        };
+        let classes = match j.opt("classes") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(ClassCellMetrics::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(CellResult {
             platform,
+            fleet,
             preset,
             seed: j.get("seed")?.as_f64()? as u64,
             served: j.get("served")?.as_usize()?,
@@ -468,15 +625,18 @@ impl CellResult {
                 .iter()
                 .map(FunctionCellMetrics::from_json)
                 .collect::<anyhow::Result<Vec<_>>>()?,
+            classes,
         })
     }
 }
 
-/// One aggregated row of the comparison table: a (preset, platform) group
-/// averaged over its seeds.
+/// One aggregated row of the comparison table: a (preset, fleet, platform)
+/// group averaged over its seeds.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SummaryRow {
     pub preset: Preset,
+    /// Fleet of the group ([`DEFAULT_FLEET`] rows omit the key in JSON).
+    pub fleet: String,
     pub platform: String,
     pub cells: usize,
     pub slo_violation_rate: f64,
@@ -485,13 +645,16 @@ pub struct SummaryRow {
     pub cost_per_1k: f64,
 }
 
-/// The paper's headline comparison for one (preset, baseline) pair:
-/// baseline ÷ HAS-GPU ratios, seeds averaged first. A ratio is `None` when
-/// HAS-GPU's own mean is zero (the ratio is undefined, not huge). Ablation
-/// platforms get ratio rows too — that is the hybrid-vs-single-axis table.
+/// The paper's headline comparison for one (preset, fleet, baseline) pair:
+/// baseline ÷ HAS-GPU ratios, seeds averaged first, always within one
+/// fleet (cross-fleet ratios would compare different hardware). A ratio is
+/// `None` when HAS-GPU's own mean is zero (the ratio is undefined, not
+/// huge). Ablation platforms get ratio rows too — that is the
+/// hybrid-vs-single-axis table.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HeadlineRatio {
     pub preset: Preset,
+    pub fleet: String,
     pub platform: String,
     /// baseline $/1k over HAS-GPU $/1k (paper: 10.8x for KServe).
     pub cost_ratio: Option<f64>,
@@ -506,32 +669,36 @@ pub struct MatrixReport {
     pub seconds: usize,
     pub gpus: usize,
     pub rps: f64,
+    /// Fleet names of the grid, in cell-column order. `[uniform-v100]`
+    /// (the default) is omitted from the config echo for byte-stability.
+    pub fleets: Vec<String>,
     pub cells: Vec<CellResult>,
 }
 
 pub const BENCH_SIM_SCHEMA: &str = "has-gpu/bench-sim/v1";
 
 impl MatrixReport {
-    /// Seed-averaged rows per (preset, platform), in first-appearance order
-    /// (which is the canonical cell order when produced by `run`).
+    /// Seed-averaged rows per (preset, fleet, platform), in first-appearance
+    /// order (which is the canonical cell order when produced by `run`).
     pub fn summary(&self) -> Vec<SummaryRow> {
-        let mut order: Vec<(Preset, &str)> = Vec::new();
+        let mut order: Vec<(Preset, &str, &str)> = Vec::new();
         for c in &self.cells {
-            if !order.contains(&(c.preset, c.platform.as_str())) {
-                order.push((c.preset, c.platform.as_str()));
+            if !order.contains(&(c.preset, c.fleet.as_str(), c.platform.as_str())) {
+                order.push((c.preset, c.fleet.as_str(), c.platform.as_str()));
             }
         }
         order
             .into_iter()
-            .map(|(preset, platform)| {
+            .map(|(preset, fleet, platform)| {
                 let group: Vec<&CellResult> = self
                     .cells
                     .iter()
-                    .filter(|c| c.preset == preset && c.platform == platform)
+                    .filter(|c| c.preset == preset && c.fleet == fleet && c.platform == platform)
                     .collect();
                 let n = group.len() as f64;
                 SummaryRow {
                     preset,
+                    fleet: fleet.to_string(),
                     platform: platform.to_string(),
                     cells: group.len(),
                     slo_violation_rate: group.iter().map(|c| c.slo_violation_rate).sum::<f64>()
@@ -544,8 +711,9 @@ impl MatrixReport {
             .collect()
     }
 
-    /// Baseline ÷ HAS-GPU ratios per preset. A zero HAS-GPU denominator
-    /// yields `None` (undefined) rather than an absurd finite number.
+    /// Baseline ÷ HAS-GPU ratios per (preset, fleet) — cross-fleet ratios
+    /// would compare different hardware. A zero HAS-GPU denominator yields
+    /// `None` (undefined) rather than an absurd finite number.
     pub fn ratios_vs_has_gpu(&self) -> Vec<HeadlineRatio> {
         let summary = self.summary();
         let ratio = |num: f64, den: f64| if den > 0.0 { Some(num / den) } else { None };
@@ -554,14 +722,14 @@ impl MatrixReport {
             if row.platform == HAS_GPU {
                 continue;
             }
-            let Some(has) = summary
-                .iter()
-                .find(|r| r.preset == row.preset && r.platform == HAS_GPU)
-            else {
+            let Some(has) = summary.iter().find(|r| {
+                r.preset == row.preset && r.fleet == row.fleet && r.platform == HAS_GPU
+            }) else {
                 continue;
             };
             out.push(HeadlineRatio {
                 preset: row.preset,
+                fleet: row.fleet.clone(),
                 platform: row.platform.clone(),
                 cost_ratio: ratio(row.cost_per_1k, has.cost_per_1k),
                 violation_ratio: ratio(row.slo_violation_rate, has.slo_violation_rate),
@@ -570,27 +738,42 @@ impl MatrixReport {
         out
     }
 
-    /// The paper-style comparison table, rendered as ASCII.
+    /// Does this grid contain any non-default-fleet cells (⇒ the export
+    /// carries fleet keys and the table a fleet column)?
+    fn has_fleet_cells(&self) -> bool {
+        self.cells.iter().any(|c| c.fleet != DEFAULT_FLEET)
+    }
+
+    /// The paper-style comparison table, rendered as ASCII. Grids with a
+    /// non-default fleet gain a `fleet` column; stock grids keep the
+    /// familiar shape.
     pub fn table(&self) -> String {
+        let with_fleet = self.has_fleet_cells();
         let rows: Vec<Vec<String>> = self
             .summary()
             .iter()
             .map(|r| {
-                vec![
-                    r.preset.name().to_string(),
+                let mut row = vec![r.preset.name().to_string()];
+                if with_fleet {
+                    row.push(r.fleet.clone());
+                }
+                row.extend([
                     r.platform.clone(),
                     format!("{}", r.cells),
                     format!("{:.4}", r.slo_violation_rate),
                     format!("{:.1}", r.p99_latency * 1e3),
                     format!("{:.1}", r.gpu_seconds),
                     format!("{:.4}", r.cost_per_1k),
-                ]
+                ]);
+                row
             })
             .collect();
-        ascii_table(
-            &["preset", "platform", "seeds", "slo-viol", "p99 (ms)", "gpu-sec", "$/1k"],
-            &rows,
-        )
+        let mut headers = vec!["preset"];
+        if with_fleet {
+            headers.push("fleet");
+        }
+        headers.extend(["platform", "seeds", "slo-viol", "p99 (ms)", "gpu-sec", "$/1k"]);
+        ascii_table(&headers, &rows)
     }
 
     pub fn to_json(&self) -> Json {
@@ -598,15 +781,19 @@ impl MatrixReport {
             self.summary()
                 .iter()
                 .map(|r| {
-                    Json::obj(vec![
-                        ("preset", Json::Str(r.preset.name().to_string())),
+                    let mut fields = vec![("preset", Json::Str(r.preset.name().to_string()))];
+                    if r.fleet != DEFAULT_FLEET {
+                        fields.push(("fleet", Json::Str(r.fleet.clone())));
+                    }
+                    fields.extend([
                         ("platform", Json::Str(r.platform.clone())),
                         ("cells", Json::Num(r.cells as f64)),
                         ("slo_violation_rate", Json::Num(r.slo_violation_rate)),
                         ("p99_latency", Json::Num(r.p99_latency)),
                         ("gpu_seconds", Json::Num(r.gpu_seconds)),
                         ("cost_per_1k", Json::Num(r.cost_per_1k)),
-                    ])
+                    ]);
+                    Json::obj(fields)
                 })
                 .collect(),
         );
@@ -615,25 +802,35 @@ impl MatrixReport {
             self.ratios_vs_has_gpu()
                 .iter()
                 .map(|r| {
-                    Json::obj(vec![
-                        ("preset", Json::Str(r.preset.name().to_string())),
+                    let mut fields = vec![("preset", Json::Str(r.preset.name().to_string()))];
+                    if r.fleet != DEFAULT_FLEET {
+                        fields.push(("fleet", Json::Str(r.fleet.clone())));
+                    }
+                    fields.extend([
                         ("platform", Json::Str(r.platform.clone())),
                         ("cost_ratio", opt_num(r.cost_ratio)),
                         ("violation_ratio", opt_num(r.violation_ratio)),
-                    ])
+                    ]);
+                    Json::obj(fields)
                 })
                 .collect(),
         );
+        let mut config = vec![
+            ("seconds", Json::Num(self.seconds as f64)),
+            ("gpus", Json::Num(self.gpus as f64)),
+            ("rps", Json::Num(self.rps)),
+        ];
+        // Config echoes the fleet axis only when it departs from the
+        // pre-fleet default (byte-stability of stock grids).
+        if self.fleets != [DEFAULT_FLEET.to_string()] {
+            config.push((
+                "fleets",
+                Json::Arr(self.fleets.iter().map(|f| Json::Str(f.clone())).collect()),
+            ));
+        }
         Json::obj(vec![
             ("schema", Json::Str(BENCH_SIM_SCHEMA.to_string())),
-            (
-                "config",
-                Json::obj(vec![
-                    ("seconds", Json::Num(self.seconds as f64)),
-                    ("gpus", Json::Num(self.gpus as f64)),
-                    ("rps", Json::Num(self.rps)),
-                ]),
-            ),
+            ("config", Json::obj(config)),
             ("cells", Json::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
             ("summary", summary),
             ("ratios_vs_has_gpu", ratios),
@@ -650,10 +847,19 @@ impl MatrixReport {
             "unsupported BENCH_sim schema '{schema}' (expected '{BENCH_SIM_SCHEMA}')"
         );
         let config = j.get("config")?;
+        let fleets = match config.opt("fleets") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|f| Ok(f.as_str()?.to_string()))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![DEFAULT_FLEET.to_string()],
+        };
         Ok(MatrixReport {
             seconds: config.get("seconds")?.as_usize()?,
             gpus: config.get("gpus")?.as_usize()?,
             rps: config.get("rps")?.as_f64()?,
+            fleets,
             cells: j
                 .get("cells")?
                 .as_arr()?
@@ -712,6 +918,106 @@ mod tests {
         assert_eq!(cells[1].seed, 2);
         assert_eq!(cells[2].platform, "kserve");
         assert_eq!(cells[4].preset, Preset::Stress);
+    }
+
+    #[test]
+    fn fleet_axis_enumerates_between_preset_and_platform() {
+        let m = ScenarioMatrix {
+            platforms: strs(&["has-gpu", "kserve"]),
+            presets: vec![Preset::Standard],
+            seeds: vec![1, 2],
+            fleets: strs(&["uniform-v100", "mixed-a100-v100-t4"]),
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        assert_eq!(cells.len(), 8);
+        // fleet-major inside each preset: all uniform cells first.
+        assert!(cells[..4].iter().all(|c| c.fleet == DEFAULT_FLEET));
+        assert!(cells[4..].iter().all(|c| c.fleet == "mixed-a100-v100-t4"));
+        assert_eq!(cells[4].platform, "has-gpu");
+        assert_eq!(cells[6].platform, "kserve");
+    }
+
+    #[test]
+    fn uniform_cells_export_no_fleet_keys_and_mixed_cells_do() {
+        let m = ScenarioMatrix {
+            platforms: strs(&["has-gpu"]),
+            presets: vec![Preset::Standard],
+            seeds: vec![3],
+            seconds: 30,
+            gpus: 4,
+            rps: 20.0,
+            fleets: strs(&["uniform-v100", "mixed-a100-v100-t4"]),
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        let (_r0, uniform) = m.run_cell(&cells[0]);
+        let (_r1, mixed) = m.run_cell(&cells[1]);
+        // Uniform: pre-fleet schema — no fleet, no classes.
+        assert!(uniform.classes.is_empty());
+        assert!(uniform.to_json().opt("fleet").is_none());
+        assert!(uniform.to_json().opt("classes").is_none());
+        // Mixed: fleet key + one class row per catalog class in the fleet.
+        assert_eq!(mixed.fleet, "mixed-a100-v100-t4");
+        assert_eq!(
+            mixed.to_json().opt("fleet").and_then(|v| v.as_str().ok()),
+            Some("mixed-a100-v100-t4")
+        );
+        assert_eq!(mixed.classes.len(), 3, "{:?}", mixed.classes);
+        let class_cost: f64 = mixed.classes.iter().map(|c| c.cost).sum();
+        assert!((class_cost - mixed.total_cost).abs() < 1e-9);
+        let gpus: usize = mixed.classes.iter().map(|c| c.gpus).sum();
+        assert_eq!(gpus, 4);
+        for c in &mixed.classes {
+            assert!((0.0..=1.0 + 1e-9).contains(&c.occupancy), "{c:?}");
+        }
+        // Mixed cells round-trip through JSON losslessly.
+        let back = CellResult::from_json(&mixed.to_json()).unwrap();
+        assert_eq!(back, mixed);
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            mixed.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn mixed_fleet_report_groups_summary_and_ratios_per_fleet() {
+        let mut cells = vec![
+            mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
+            mk_cell("kserve", Preset::Standard, 1, 0.05, 10.0),
+        ];
+        let mut mixed_has = mk_cell("has-gpu", Preset::Standard, 1, 0.02, 2.0);
+        mixed_has.fleet = "mixed-a100-v100-t4".into();
+        let mut mixed_ks = mk_cell("kserve", Preset::Standard, 1, 0.06, 30.0);
+        mixed_ks.fleet = "mixed-a100-v100-t4".into();
+        cells.push(mixed_has);
+        cells.push(mixed_ks);
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            fleets: strs(&["uniform-v100", "mixed-a100-v100-t4"]),
+            cells,
+        };
+        let summary = report.summary();
+        assert_eq!(summary.len(), 4);
+        // Ratios pair baselines with HAS-GPU *within* each fleet.
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios.len(), 2);
+        assert_eq!(ratios[0].fleet, DEFAULT_FLEET);
+        assert!((ratios[0].cost_ratio.unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(ratios[1].fleet, "mixed-a100-v100-t4");
+        assert!((ratios[1].cost_ratio.unwrap() - 15.0).abs() < 1e-9);
+        // The table gains a fleet column only for fleet grids.
+        assert!(report.table().contains("fleet"));
+        assert!(report.table().contains("mixed-a100-v100-t4"));
+        // And the whole report round-trips.
+        let back = MatrixReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            report.to_json().to_string_pretty()
+        );
     }
 
     #[test]
@@ -817,6 +1123,7 @@ mod tests {
             platform: "not-a-platform".into(),
             preset: Preset::Standard,
             seed: 1,
+            fleet: DEFAULT_FLEET.into(),
         };
         let _ = m.run_cell(&cell);
     }
@@ -830,6 +1137,7 @@ mod tests {
     ) -> CellResult {
         CellResult {
             platform: platform.to_string(),
+            fleet: DEFAULT_FLEET.to_string(),
             preset,
             seed,
             served: 1000,
@@ -844,6 +1152,7 @@ mod tests {
             horizontal_ups: 0,
             horizontal_downs: 0,
             functions: Vec::new(),
+            classes: Vec::new(),
         }
     }
 
@@ -853,6 +1162,7 @@ mod tests {
             seconds: 60,
             gpus: 4,
             rps: 50.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
             cells: vec![
                 mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
                 mk_cell("has-gpu", Preset::Standard, 2, 0.03, 3.0),
@@ -879,6 +1189,7 @@ mod tests {
             seconds: 60,
             gpus: 4,
             rps: 50.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
             cells: vec![
                 mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
                 mk_cell("has-vertical-only", Preset::Standard, 1, 0.08, 1.5),
@@ -897,6 +1208,7 @@ mod tests {
     fn zero_denominator_ratio_is_undefined_not_huge() {
         let mk = |platform: &str, viol: f64| CellResult {
             platform: platform.to_string(),
+            fleet: DEFAULT_FLEET.to_string(),
             preset: Preset::Diurnal,
             seed: 1,
             served: 100,
@@ -911,11 +1223,13 @@ mod tests {
             horizontal_ups: 0,
             horizontal_downs: 0,
             functions: Vec::new(),
+            classes: Vec::new(),
         };
         let report = MatrixReport {
             seconds: 60,
             gpus: 4,
             rps: 50.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
             cells: vec![mk("has-gpu", 0.0), mk("kserve", 0.02)],
         };
         let ratios = report.ratios_vs_has_gpu();
@@ -933,8 +1247,10 @@ mod tests {
             seconds: 30,
             gpus: 2,
             rps: 10.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
             cells: vec![CellResult {
                 platform: "fast-gshare".to_string(),
+                fleet: DEFAULT_FLEET.to_string(),
                 preset: Preset::SpikyBurst,
                 seed: 42,
                 served: 10,
@@ -960,6 +1276,7 @@ mod tests {
                     gpu_seconds: 1.5,
                     cost_per_1k: 1.25,
                 }],
+                classes: Vec::new(),
             }],
         };
         let j = report.to_json();
@@ -979,6 +1296,7 @@ mod tests {
             seconds: 10,
             gpus: 1,
             rps: 1.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
             cells: vec![mk_cell("esg-pipeline", Preset::Standard, 1, 0.5, 9.0)],
         };
         let j = report.to_json();

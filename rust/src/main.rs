@@ -4,8 +4,8 @@
 //! synthesis (`trace-gen`), and the zoo inventory.
 
 use has_gpu::expt::{
-    experiment_functions, parse_platforms, parse_presets, parse_seeds, PlatformRegistry,
-    ScenarioMatrix,
+    experiment_functions, parse_fleets, parse_platforms, parse_presets, parse_seeds,
+    FleetRegistry, PlatformRegistry, ScenarioMatrix,
 };
 use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
 use has_gpu::perf::PerfModel;
@@ -20,15 +20,16 @@ const USAGE: &str = "has-gpu — Hybrid Auto-scaling Serverless GPU inference (r
 USAGE: has-gpu <COMMAND> [options]
 
 COMMANDS:
-  expt       run a platform × preset × seed scenario matrix in parallel and
-             export the comparison grid as JSON
+  expt       run a platform × fleet × preset × seed scenario matrix in
+             parallel and export the comparison grid as JSON
              [--platforms all|ablations|csv of names] [--preset all|csv]
-             [--seeds N|csv] [--seed-base S] [--seconds N] [--gpus N] [--rps R]
-             [--jobs N] [--out PATH]
+             [--fleets csv of fleet names] [--seeds N|csv] [--seed-base S]
+             [--seconds N] [--gpus N] [--rps R] [--jobs N] [--out PATH]
   simulate   run a single platform-vs-workload cell and print the report
-             [--platform NAME] [--preset NAME]
+             [--platform NAME] [--preset NAME] [--fleet NAME]
              [--seconds N] [--gpus N] [--rps R] [--seed S] [--json]
   platforms  list the platform registry (names, groups, billing, predictor)
+  fleets     list the fleet registry (GPU-class compositions)
   predict    RaPP latency prediction (requires artifacts)
              [--model NAME] [--batch B] [--sm F] [--quota F]
   trace-gen  synthesise an Azure-style workload trace as JSON to stdout
@@ -48,6 +49,10 @@ fn main() -> anyhow::Result<()> {
         "simulate" => simulate(argv),
         "platforms" => {
             print!("{}", PlatformRegistry::default().table());
+            Ok(())
+        }
+        "fleets" => {
+            print!("{}", FleetRegistry::default().table());
             Ok(())
         }
         "predict" => predict(argv),
@@ -78,8 +83,10 @@ fn main() -> anyhow::Result<()> {
 /// thread pool, print the paper-style comparison table, export the grid.
 fn expt(argv: Vec<String>) -> anyhow::Result<()> {
     let registry = PlatformRegistry::default();
+    let fleet_registry = FleetRegistry::default();
     let args = Cli::new("has-gpu expt", "scenario-matrix experiment runner")
         .opt_dyn("platforms", "all", registry.cli_help())
+        .opt_dyn("fleets", "uniform-v100", fleet_registry.cli_help())
         .opt("preset", "standard", "comma list of workload presets, or 'all'")
         .opt("seeds", "2", "seed count (expands from --seed-base) or comma list")
         .opt("seed-base", "11", "first seed when --seeds is a count")
@@ -90,6 +97,7 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("out", "BENCH_sim.json", "output path for the JSON grid")
         .parse_from_or_exit(argv);
     let platforms = parse_platforms(&args.get_list("platforms"), &registry)?;
+    let fleets = parse_fleets(&args.get_list("fleets"), &fleet_registry)?;
     let matrix = ScenarioMatrix {
         platforms,
         registry,
@@ -98,12 +106,15 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         seconds: args.get_usize("seconds"),
         gpus: args.get_usize("gpus"),
         rps: args.get_f64("rps"),
+        fleets,
+        fleet_registry,
     };
     let jobs = args.get_usize("jobs");
     eprintln!(
-        "running {} cells ({} platforms × {} presets × {} seeds) with jobs={}…",
+        "running {} cells ({} platforms × {} fleets × {} presets × {} seeds) with jobs={}…",
         matrix.cells().len(),
         matrix.platforms.len(),
+        matrix.fleets.len(),
         matrix.presets.len(),
         matrix.seeds.len(),
         if jobs == 0 { "auto".to_string() } else { jobs.to_string() }
@@ -116,9 +127,10 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
     };
     for r in report.ratios_vs_has_gpu() {
         println!(
-            "{} vs has-gpu @ {}: cost {}, slo-violations {}",
+            "{} vs has-gpu @ {} [{}]: cost {}, slo-violations {}",
             r.platform,
             r.preset.name(),
+            r.fleet,
             fmt_ratio(r.cost_ratio),
             fmt_ratio(r.violation_ratio)
         );
@@ -133,11 +145,17 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
 /// one seed, full per-function report.
 fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
     let registry = PlatformRegistry::default();
+    let fleet_registry = FleetRegistry::default();
     let args = Cli::new("has-gpu simulate", "single-cell cluster simulation")
         .opt_dyn(
             "platform",
             "has-gpu",
             format!("one platform name; registered: {}", registry.names().join(", ")),
+        )
+        .opt_dyn(
+            "fleet",
+            "uniform-v100",
+            format!("one fleet name; registered: {}", fleet_registry.names().join(", ")),
         )
         .opt("preset", "standard", "one workload preset name")
         .opt("seconds", "300", "trace length (virtual seconds)")
@@ -159,6 +177,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         "simulate runs one preset; '{}' expands to several",
         args.get("preset")
     );
+    let fleets = parse_fleets(&[args.get("fleet").to_string()], &fleet_registry)?;
     let matrix = ScenarioMatrix {
         platforms,
         registry,
@@ -167,6 +186,8 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         seconds: args.get_usize("seconds"),
         gpus: args.get_usize("gpus"),
         rps: args.get_f64("rps"),
+        fleets,
+        fleet_registry,
     };
     let cell = matrix.cells()[0].clone();
     let (report, _cell_result) = matrix.run_cell(&cell);

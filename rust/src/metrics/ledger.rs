@@ -46,14 +46,20 @@ impl BillingMode {
     }
 }
 
-/// One open pod account: the slice currently held and the time up to which
-/// it has been billed.
+/// One open pod account: the slice currently held, the hosting GPU class
+/// and its effective price, and the time up to which it has been billed.
 #[derive(Clone, Debug)]
 struct Account {
     function: String,
     sm: SmMille,
     quota: QuotaMille,
     billed_until: f64,
+    /// GPU class hosting the pod (per-class cost breakdown).
+    class: String,
+    /// Effective $/hr for this pod: the run's configured reference price
+    /// scaled by the class's catalog price ratio. Exactly the configured
+    /// price on the reference class (`× 1.0` is exact).
+    price_per_hour: f64,
 }
 
 /// The transactional billing engine. See the module docs for the invariant.
@@ -84,20 +90,41 @@ impl BillingLedger {
         self.accounts.len()
     }
 
-    /// Bill one account forward to `now` at its current slice.
-    fn accrue(meter: &mut CostMeter, mode: BillingMode, price: f64, acct: &mut Account, now: f64) {
+    /// Bill one account forward to `now` at its current slice, class, and
+    /// effective class price.
+    fn accrue(meter: &mut CostMeter, mode: BillingMode, acct: &mut Account, now: f64) {
         let dur = now - acct.billed_until;
         if dur <= 0.0 {
             return;
         }
         let (sm, quota) = mode.billed_fractions(acct.sm, acct.quota);
-        meter.bill_slice(&acct.function, sm, quota, dur, price);
+        meter.bill_slice_class(&acct.function, &acct.class, sm, quota, dur, acct.price_per_hour);
         acct.billed_until = now;
     }
 
     /// A pod started holding its slice at `now` (billing begins immediately:
     /// cold-starting pods hold — and pay for — their slice before readiness).
+    /// The reference-class shorthand for [`BillingLedger::open_on`] at the
+    /// ledger's configured price.
     pub fn open(&mut self, pod: PodId, function: &str, sm: SmMille, quota: QuotaMille, now: f64) {
+        let price = self.price_per_hour;
+        self.open_on(pod, function, sm, quota, crate::vgpu::REFERENCE_CLASS, price, now);
+    }
+
+    /// Open a pod account on a specific GPU class at an explicit effective
+    /// price (heterogeneous fleets — see [`record_applied`] for the one
+    /// class-price derivation both drivers share).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open_on(
+        &mut self,
+        pod: PodId,
+        function: &str,
+        sm: SmMille,
+        quota: QuotaMille,
+        class: &str,
+        price_per_hour: f64,
+        now: f64,
+    ) {
         let prev = self.accounts.insert(
             pod,
             Account {
@@ -105,6 +132,8 @@ impl BillingLedger {
                 sm,
                 quota,
                 billed_until: now,
+                class: class.to_string(),
+                price_per_hour,
             },
         );
         debug_assert!(prev.is_none(), "double-open of {pod:?}");
@@ -119,7 +148,7 @@ impl BillingLedger {
             debug_assert!(false, "resize of unopened {pod:?}");
             return;
         };
-        Self::accrue(&mut self.meter, self.mode, self.price_per_hour, acct, now);
+        Self::accrue(&mut self.meter, self.mode, acct, now);
         acct.quota = quota;
     }
 
@@ -130,14 +159,14 @@ impl BillingLedger {
             debug_assert!(false, "close of unopened {pod:?}");
             return;
         };
-        Self::accrue(&mut self.meter, self.mode, self.price_per_hour, &mut acct, now);
+        Self::accrue(&mut self.meter, self.mode, &mut acct, now);
     }
 
     /// Bill every open account forward to `now` (end-of-run / report
     /// snapshots). Idempotent: a second settle at the same time bills zero.
     pub fn settle(&mut self, now: f64) {
         for acct in self.accounts.values_mut() {
-            Self::accrue(&mut self.meter, self.mode, self.price_per_hour, acct, now);
+            Self::accrue(&mut self.meter, self.mode, acct, now);
         }
     }
 
@@ -180,7 +209,14 @@ pub fn record_applied(
         Applied::PodCreated { pod, .. } => {
             report.horizontal_ups += 1;
             if let Some(p) = cluster.pod(*pod) {
-                ledger.open(*pod, &p.function, p.sm, p.quota, now);
+                // The one class-price derivation: the run's configured price
+                // is the *reference-class* rate; other classes scale by the
+                // catalog ratio. On the reference class the multiplier is
+                // exactly 1.0, so uniform fleets bill the configured price
+                // to the bit.
+                let class = cluster.gpu(p.gpu).class();
+                let price = ledger.price_per_hour * class.price_relative();
+                ledger.open_on(*pod, &p.function, p.sm, p.quota, &class.name, price, now);
             } else {
                 debug_assert!(false, "created pod {pod:?} missing from cluster");
             }
@@ -251,6 +287,68 @@ mod tests {
         assert!((at5 - 5.0).abs() < 1e-9);
         l.close(PodId(3), 5.0); // close at the settled time bills zero more
         assert!((l.meter().cost_of("g") - at5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_accounts_bill_at_their_effective_price_and_tag_the_class() {
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        // Reference shorthand and explicit reference open are equivalent.
+        l.open(PodId(1), "f", 500, 1000, 0.0);
+        l.open_on(PodId(2), "f", 500, 1000, "t4", PRICE * 0.5, 0.0);
+        let meter = l.into_meter(10.0);
+        // Pod 1: 0.5 slice × 10 s × $1/slice-s; pod 2 at half the rate.
+        assert!((meter.class_cost_of("v100") - 5.0).abs() < 1e-9);
+        assert!((meter.class_cost_of("t4") - 2.5).abs() < 1e-9);
+        assert!((meter.cost_of("f") - 7.5).abs() < 1e-9);
+        // GPU-seconds are price-independent.
+        assert!((meter.class_gpu_seconds_of("t4") - 5.0).abs() < 1e-9);
+        assert!((meter.total_gpu_seconds() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_applied_prices_pods_by_their_gpu_class() {
+        use crate::cluster::{GpuId, Reconfigurator, ScalingAction};
+        use crate::cluster::FunctionSpec;
+        use crate::model::zoo::{zoo_graph, ZooModel};
+        use crate::perf::PerfModel;
+        use crate::vgpu::GpuClass;
+        let perf = PerfModel::default();
+        let mut cluster = ClusterState::from_classes(&[GpuClass::v100(), GpuClass::t4()]);
+        cluster.register_function(FunctionSpec {
+            name: "mobilenetv2".into(),
+            graph: zoo_graph(ZooModel::MobileNetV2),
+            slo: 0.1,
+            batch: 1,
+            artifact: None,
+        });
+        let mut recon = Reconfigurator::new(&cluster, 5);
+        let mut report = RunReport::new("t");
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        for gpu in [GpuId(0), GpuId(1)] {
+            let applied = recon
+                .apply(
+                    &mut cluster,
+                    &perf,
+                    &ScalingAction::CreatePod {
+                        function: "mobilenetv2".into(),
+                        gpu,
+                        sm: 500,
+                        quota: 1000,
+                        batch: 1,
+                        new_gpu: true,
+                    },
+                    0.0,
+                )
+                .unwrap();
+            record_applied(&mut report, &mut l, &cluster, &applied, 0.0);
+        }
+        let meter = l.into_meter(10.0);
+        // v100 bills the configured reference rate; t4 scales by catalog
+        // ratio (0.95 / 2.48).
+        let t4_ratio = GpuClass::t4().price_relative();
+        assert!((meter.class_cost_of("v100") - 0.5 * 10.0).abs() < 1e-9);
+        assert!((meter.class_cost_of("t4") - 0.5 * 10.0 * t4_ratio).abs() < 1e-9);
+        assert_eq!(report.horizontal_ups, 2);
     }
 
     #[test]

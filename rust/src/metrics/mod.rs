@@ -99,13 +99,20 @@ impl FunctionMetrics {
     }
 }
 
-/// Billing meter: accumulates $-cost per function from GPU-slice usage.
+/// Billing meter: accumulates $-cost per function from GPU-slice usage,
+/// with a per-GPU-class breakdown riding along (heterogeneous fleets; on a
+/// uniform fleet everything lands under the reference class and the
+/// breakdown is simply never exported).
 #[derive(Clone, Debug, Default)]
 pub struct CostMeter {
     /// function → accumulated cost in $.
     cost: BTreeMap<String, f64>,
     /// function → accumulated GPU-seconds (sm×quota-weighted).
     gpu_seconds: BTreeMap<String, f64>,
+    /// GPU class → accumulated cost in $.
+    class_cost: BTreeMap<String, f64>,
+    /// GPU class → accumulated GPU-seconds (sm×quota-weighted).
+    class_gpu_seconds: BTreeMap<String, f64>,
 }
 
 impl CostMeter {
@@ -114,7 +121,8 @@ impl CostMeter {
     }
 
     /// Bill `function` for holding an (sm, quota) slice over `dur` seconds.
-    /// Whole-GPU platforms pass sm = quota = 1.
+    /// Whole-GPU platforms pass sm = quota = 1. The reference-class shorthand
+    /// for [`CostMeter::bill_slice_class`].
     pub fn bill_slice(
         &mut self,
         function: &str,
@@ -123,11 +131,48 @@ impl CostMeter {
         dur: f64,
         price_per_hour: f64,
     ) {
+        self.bill_slice_class(
+            function,
+            crate::vgpu::REFERENCE_CLASS,
+            sm,
+            quota,
+            dur,
+            price_per_hour,
+        );
+    }
+
+    /// Bill a slice held on a GPU of `class` at that class's effective
+    /// hourly price. Function totals and the per-class breakdown accrue
+    /// together, so Σ class cost == Σ function cost by construction.
+    pub fn bill_slice_class(
+        &mut self,
+        function: &str,
+        class: &str,
+        sm: f64,
+        quota: f64,
+        dur: f64,
+        price_per_hour: f64,
+    ) {
         debug_assert!(dur >= 0.0);
         let gpu_sec = sm * quota * dur;
-        *self.cost.entry(function.to_string()).or_insert(0.0) +=
-            price_per_hour / 3600.0 * gpu_sec;
+        let cost = price_per_hour / 3600.0 * gpu_sec;
+        *self.cost.entry(function.to_string()).or_insert(0.0) += cost;
         *self.gpu_seconds.entry(function.to_string()).or_insert(0.0) += gpu_sec;
+        *self.class_cost.entry(class.to_string()).or_insert(0.0) += cost;
+        *self.class_gpu_seconds.entry(class.to_string()).or_insert(0.0) += gpu_sec;
+    }
+
+    pub fn class_cost_of(&self, class: &str) -> f64 {
+        self.class_cost.get(class).copied().unwrap_or(0.0)
+    }
+
+    pub fn class_gpu_seconds_of(&self, class: &str) -> f64 {
+        self.class_gpu_seconds.get(class).copied().unwrap_or(0.0)
+    }
+
+    /// GPU classes that accrued any billing, in name order.
+    pub fn billed_classes(&self) -> impl Iterator<Item = &str> {
+        self.class_cost.keys().map(String::as_str)
     }
 
     pub fn cost_of(&self, function: &str) -> f64 {
@@ -178,6 +223,9 @@ pub struct RunReport {
     /// — pre-pushed ticks dominate — instead of the seed's O(total
     /// requests); `0` for real-mode runs, which have no event queue.
     pub event_queue_peak: usize,
+    /// Fleet composition of the run: GPU class → device count. Empty for
+    /// runs that never declared a fleet (homogeneous constructors).
+    pub fleet_gpus: BTreeMap<String, usize>,
 }
 
 impl RunReport {
@@ -267,7 +315,7 @@ impl RunReport {
                 )
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("platform", Json::Str(self.platform.clone())),
             ("duration", Json::Num(self.duration)),
             ("functions", Json::Obj(fns)),
@@ -276,7 +324,46 @@ impl RunReport {
             ("horizontal_ups", Json::Num(self.horizontal_ups as f64)),
             ("horizontal_downs", Json::Num(self.horizontal_downs as f64)),
             ("event_queue_peak", Json::Num(self.event_queue_peak as f64)),
-        ])
+        ];
+        // Heterogeneous runs export the fleet composition and the per-class
+        // billing breakdown; uniform reference-class runs stay byte-stable.
+        let heterogeneous = self
+            .fleet_gpus
+            .keys()
+            .any(|c| c != crate::vgpu::REFERENCE_CLASS)
+            || self.fleet_gpus.len() > 1;
+        if heterogeneous {
+            fields.push((
+                "fleet_gpus",
+                Json::Obj(
+                    self.fleet_gpus
+                        .iter()
+                        .map(|(c, &n)| (c.clone(), Json::Num(n as f64)))
+                        .collect(),
+                ),
+            ));
+            fields.push((
+                "class_costs",
+                Json::Obj(
+                    self.costs
+                        .billed_classes()
+                        .map(|c| {
+                            (
+                                c.to_string(),
+                                Json::obj(vec![
+                                    ("cost", Json::Num(self.costs.class_cost_of(c))),
+                                    (
+                                        "gpu_seconds",
+                                        Json::Num(self.costs.class_gpu_seconds_of(c)),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -349,6 +436,23 @@ mod tests {
         cm.bill_slice("f", 0.5, 0.5, 100.0, 2.48);
         cm.bill_slice("g", 1.0, 1.0, 10.0, 2.48);
         assert!((cm.total_gpu_seconds() - (0.25 * 100.0 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_breakdown_accrues_alongside_function_totals() {
+        let mut cm = CostMeter::new();
+        cm.bill_slice_class("f", "a100", 0.5, 1.0, 10.0, 10.0);
+        cm.bill_slice_class("f", "t4", 1.0, 1.0, 10.0, 1.0);
+        cm.bill_slice("g", 1.0, 1.0, 5.0, 2.48); // reference shorthand
+        // Σ class cost == Σ function cost, always.
+        let class_total: f64 = cm.billed_classes().map(|c| cm.class_cost_of(c)).sum();
+        assert!((class_total - cm.total_cost()).abs() < 1e-12);
+        assert!((cm.class_cost_of("a100") - 10.0 / 3600.0 * 5.0).abs() < 1e-12);
+        assert!((cm.class_gpu_seconds_of("t4") - 10.0).abs() < 1e-12);
+        assert!((cm.class_gpu_seconds_of("v100") - 5.0).abs() < 1e-12);
+        assert_eq!(cm.class_cost_of("h100"), 0.0);
+        let names: Vec<&str> = cm.billed_classes().collect();
+        assert_eq!(names, vec!["a100", "t4", "v100"]);
     }
 
     #[test]

@@ -115,26 +115,47 @@ impl PerfModel {
 
     /// End-to-end inference latency under a time quota `q`: simulate the
     /// token window at kernel granularity (no-debt semantics — see module
-    /// docs). `q = 1` ⇒ latency = raw time.
+    /// docs). `q = 1` ⇒ latency = raw time. Delegates to the class surface
+    /// at factor 1.0 — `d / 1.0` is exact in IEEE 754, so this is the
+    /// historical reference surface to the bit (pinned by
+    /// `class_factor_one_is_bit_identical_to_reference_surface`), and the
+    /// window-replay mechanics live in exactly one place.
     pub fn latency(&self, g: &OpGraph, batch: u32, sm: f64, q: f64) -> f64 {
+        self.latency_class(g, batch, sm, q, 1.0)
+    }
+
+    /// Steady-state throughput capacity (items/s) of a pod running
+    /// back-to-back batches: the pod holds fraction `q` of its partition's
+    /// time, so capacity = batch · q / t_raw.
+    pub fn capacity(&self, g: &OpGraph, batch: u32, sm: f64, q: f64) -> f64 {
+        let t_raw = self.raw_graph_time(g, batch, sm);
+        batch as f64 * q / t_raw
+    }
+
+    /// [`PerfModel::latency`] on a device class with relative throughput
+    /// `factor` (see [`crate::vgpu::GpuClass`]): every kernel's execution
+    /// time scales by `1/factor` while the token **window stays the
+    /// scheduler constant** — so quota dilation mechanics are identical on
+    /// every class, only the kernel clock changes. `factor = 1.0` is
+    /// bit-identical to [`PerfModel::latency`] (`d / 1.0` is exact),
+    /// pinned by test.
+    pub fn latency_class(&self, g: &OpGraph, batch: u32, sm: f64, q: f64, factor: f64) -> f64 {
         debug_assert!((0.0..=1.0).contains(&q) && q > 0.0);
+        debug_assert!(factor > 0.0);
         let w = self.dev.window;
         let mut now = 0.0f64;
         let mut budget = q * w;
         let mut boundary = w;
         for op in &g.nodes {
             let k = op.kernels.max(1);
-            let d = self.op_time(op, batch, sm) / k as f64;
+            let d = self.op_time(op, batch, sm) / k as f64 / factor;
             for _ in 0..k {
-                // Window boundaries passed during the previous kernel refresh
-                // the budget (no carry-over in either direction).
                 if boundary <= now {
                     let skipped = ((now - boundary) / w).floor() + 1.0;
                     boundary += skipped * w;
                     budget = q * w;
                 }
                 if budget <= 0.0 {
-                    // Out of tokens: launch blocked until the next window.
                     now = boundary;
                     boundary += w;
                     budget = q * w;
@@ -146,17 +167,27 @@ impl PerfModel {
         now
     }
 
-    /// Steady-state throughput capacity (items/s) of a pod running
-    /// back-to-back batches: the pod holds fraction `q` of its partition's
-    /// time, so capacity = batch · q / t_raw.
-    pub fn capacity(&self, g: &OpGraph, batch: u32, sm: f64, q: f64) -> f64 {
-        let t_raw = self.raw_graph_time(g, batch, sm);
+    /// Raw graph time on a class with throughput `factor` (all kernels
+    /// scale uniformly, so this is exactly the reference time / factor).
+    pub fn raw_graph_time_class(&self, g: &OpGraph, batch: u32, sm: f64, factor: f64) -> f64 {
+        self.raw_graph_time(g, batch, sm) / factor
+    }
+
+    /// [`PerfModel::capacity`] on a class with throughput `factor`.
+    pub fn capacity_class(&self, g: &OpGraph, batch: u32, sm: f64, q: f64, factor: f64) -> f64 {
+        let t_raw = self.raw_graph_time_class(g, batch, sm, factor);
         batch as f64 * q / t_raw
     }
 
     /// Device-memory check for placing (model, batch) on a GPU.
     pub fn fits_memory(&self, g: &OpGraph, batch: u32, free_bytes: f64) -> bool {
         g.memory_bytes(batch) <= free_bytes.min(self.dev.mem_cap)
+    }
+
+    /// Memory check against an explicit device capacity (heterogeneous
+    /// fleets: each [`crate::vgpu::GpuClass`] carries its own `mem_cap`).
+    pub fn fits_memory_cap(&self, g: &OpGraph, batch: u32, free_bytes: f64, cap: f64) -> bool {
+        g.memory_bytes(batch) <= free_bytes.min(cap)
     }
 
     /// $-cost of running a (sm, q) slice for `dur` seconds (§4.3 accounting:
@@ -300,6 +331,61 @@ mod tests {
         let g = zoo_graph(ZooModel::ResNet50);
         let ms = pm().latency(&g, 1, 1.0, 1.0) * 1e3;
         assert!((1.0..25.0).contains(&ms), "resnet50 b1 full GPU = {ms} ms");
+    }
+
+    #[test]
+    fn class_factor_one_is_bit_identical_to_reference_surface() {
+        // The uniform-fleet byte-identity contract: factor 1.0 must be the
+        // *same bits* as the factor-less surface at every lattice point.
+        let pm = pm();
+        for m in [ZooModel::ResNet50, ZooModel::BertTiny, ZooModel::MobileNetV2] {
+            let g = zoo_graph(m);
+            for &(b, sm, q) in &[(1u32, 1.0f64, 1.0f64), (8, 0.5, 0.6), (32, 0.2, 0.3)] {
+                assert_eq!(
+                    pm.latency_class(&g, b, sm, q, 1.0).to_bits(),
+                    pm.latency(&g, b, sm, q).to_bits(),
+                    "{m:?} b{b} sm{sm} q{q}"
+                );
+                assert_eq!(
+                    pm.raw_graph_time_class(&g, b, sm, 1.0).to_bits(),
+                    pm.raw_graph_time(&g, b, sm).to_bits()
+                );
+                assert_eq!(
+                    pm.capacity_class(&g, b, sm, q, 1.0).to_bits(),
+                    pm.capacity(&g, b, sm, q).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn class_factor_scales_latency_and_capacity_monotonically() {
+        let pm = pm();
+        let g = zoo_graph(ZooModel::ResNet50);
+        let slow = pm.latency_class(&g, 8, 0.5, 0.6, 0.4); // T4-like
+        let base = pm.latency_class(&g, 8, 0.5, 0.6, 1.0);
+        let fast = pm.latency_class(&g, 8, 0.5, 0.6, 2.0); // A100-like
+        assert!(slow > base && base > fast, "{slow} {base} {fast}");
+        // At full quota there is no window blocking, so scaling is exact.
+        let raw = pm.latency_class(&g, 8, 0.5, 1.0, 1.0);
+        let raw2 = pm.latency_class(&g, 8, 0.5, 1.0, 2.0);
+        assert!((raw2 - raw / 2.0).abs() / raw < 1e-9);
+        assert!(
+            pm.capacity_class(&g, 8, 0.5, 0.6, 2.0) > pm.capacity_class(&g, 8, 0.5, 0.6, 1.0)
+        );
+        // Low quota + slow class: window dilation still bounds below by raw/q.
+        let dilated = pm.latency_class(&g, 8, 0.5, 0.2, 0.4);
+        assert!(dilated >= pm.raw_graph_time_class(&g, 8, 0.5, 0.4) - 1e-12);
+    }
+
+    #[test]
+    fn fits_memory_cap_respects_class_capacity() {
+        let pm = pm();
+        let g = zoo_graph(ZooModel::Vgg16);
+        let need = g.memory_bytes(8);
+        assert!(pm.fits_memory_cap(&g, 8, 40e9, 40e9));
+        assert!(!pm.fits_memory_cap(&g, 8, 40e9, need / 2.0));
+        assert!(!pm.fits_memory_cap(&g, 8, need / 2.0, 40e9));
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub struct CachedPredictor<'a> {
     inner: &'a dyn LatencyPredictor,
     #[allow(clippy::type_complexity)]
     cache: Mutex<HashMap<String, HashMap<(u32, u32, u32), f64>>>,
+    /// Class-factor side table: `(batch, sm‰, quota‰, factor‰)` → latency,
+    /// for non-reference GPU classes (heterogeneous fleets). Kept separate
+    /// so the reference-class table — and every byte it feeds — is
+    /// untouched by class-aware callers.
+    #[allow(clippy::type_complexity)]
+    cache_class: Mutex<HashMap<String, HashMap<(u32, u32, u32, u32), f64>>>,
 }
 
 impl<'a> CachedPredictor<'a> {
@@ -50,12 +56,14 @@ impl<'a> CachedPredictor<'a> {
         CachedPredictor {
             inner,
             cache: Mutex::new(HashMap::new()),
+            cache_class: Mutex::new(HashMap::new()),
         }
     }
 
-    /// Number of distinct lattice points evaluated so far.
+    /// Number of distinct lattice points evaluated so far (both tables).
     pub fn len(&self) -> usize {
-        self.cache.lock().unwrap().values().map(|m| m.len()).sum()
+        self.cache.lock().unwrap().values().map(|m| m.len()).sum::<usize>()
+            + self.cache_class.lock().unwrap().values().map(|m| m.len()).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -125,6 +133,91 @@ impl LatencyPredictor for CachedPredictor<'_> {
             out[i] = v;
         }
     }
+
+    /// Class-aware lookup: factor 1.0 routes through the reference table
+    /// verbatim; other factors memoise in the class side table, evaluating
+    /// the inner predictor's class surface at the quantized point.
+    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.latency(g, batch, sm, quota);
+        }
+        let (sm_m, q_m, f_m) = (mille(sm), mille(quota), mille(factor));
+        let key = (batch, sm_m, q_m, f_m);
+        {
+            let cache = self.cache_class.lock().unwrap();
+            if let Some(&v) = cache.get(g.name.as_str()).and_then(|m| m.get(&key)) {
+                return v;
+            }
+        }
+        let v = self.inner.latency_at(
+            g,
+            batch,
+            sm_m as f64 / 1000.0,
+            q_m as f64 / 1000.0,
+            f_m as f64 / 1000.0,
+        );
+        self.cache_class
+            .lock()
+            .unwrap()
+            .entry(g.name.clone())
+            .or_default()
+            .insert(key, v);
+        v
+    }
+
+    /// Class-aware sweep: factor 1.0 is the reference sweep verbatim;
+    /// otherwise misses batch through the inner class surface at quantized
+    /// points, mirroring [`CachedPredictor::latency_batch`].
+    fn latency_batch_at(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
+        out: &mut Vec<f64>,
+    ) {
+        if factor == 1.0 {
+            return self.latency_batch(g, batch, sm, quotas, out);
+        }
+        let (sm_m, f_m) = (mille(sm), mille(factor));
+        out.clear();
+        out.resize(quotas.len(), f64::NAN);
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_q: Vec<f64> = Vec::new();
+        {
+            let cache = self.cache_class.lock().unwrap();
+            let table = cache.get(g.name.as_str());
+            for (i, &q) in quotas.iter().enumerate() {
+                let key = (batch, sm_m, mille(q), f_m);
+                match table.and_then(|m| m.get(&key)) {
+                    Some(&v) => out[i] = v,
+                    None => {
+                        miss_idx.push(i);
+                        miss_q.push(mille(q) as f64 / 1000.0);
+                    }
+                }
+            }
+        }
+        if miss_idx.is_empty() {
+            return;
+        }
+        let mut fresh = Vec::new();
+        self.inner.latency_batch_at(
+            g,
+            batch,
+            sm_m as f64 / 1000.0,
+            &miss_q,
+            f_m as f64 / 1000.0,
+            &mut fresh,
+        );
+        let mut cache = self.cache_class.lock().unwrap();
+        let table = cache.entry(g.name.clone()).or_default();
+        for ((&i, &q), &v) in miss_idx.iter().zip(&miss_q).zip(&fresh) {
+            table.insert((batch, sm_m, mille(q), f_m), v);
+            out[i] = v;
+        }
+    }
 }
 
 /// Counting wrapper for benches/tests: how many times does a code path
@@ -152,6 +245,13 @@ impl<P: LatencyPredictor> LatencyPredictor for CountingPredictor<P> {
     fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.inner.latency(g, batch, sm, quota)
+    }
+
+    /// Count, then delegate so the inner predictor's exact class surface
+    /// (not the `1/factor` default) is what gets measured.
+    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.latency_at(g, batch, sm, quota, factor)
     }
 }
 
@@ -262,6 +362,36 @@ mod tests {
         cached.latency_batch(&g, 8, 0.5, &[0.4004], &mut out);
         assert_eq!(out[0], primed);
         assert_eq!(counting.invocations(), 10);
+    }
+
+    #[test]
+    fn class_factor_queries_use_a_distinct_table_and_exact_class_surface() {
+        let oracle = OraclePredictor::default();
+        let cached = CachedPredictor::new(&oracle);
+        let g = zoo_graph(ZooModel::ResNet50);
+        // factor 1.0 routes through the reference table verbatim.
+        let reference = cached.latency_at(&g, 8, 0.5, 0.5, 1.0);
+        assert_eq!(reference, oracle.latency(&g, 8, 0.5, 0.5));
+        assert_eq!(cached.len(), 1);
+        // A non-reference factor is a new lattice point with the oracle's
+        // window-exact class value (not reference/factor).
+        let t4 = cached.latency_at(&g, 8, 0.5, 0.5, 0.4);
+        assert_eq!(t4, oracle.perf.latency_class(&g, 8, 0.5, 0.5, 0.4));
+        assert_eq!(cached.len(), 2);
+        // Cached hit returns the identical value; no growth.
+        assert_eq!(cached.latency_at(&g, 8, 0.5, 0.5, 0.4), t4);
+        assert_eq!(cached.len(), 2);
+        // Class sweeps agree with scalar class queries and hit the table.
+        let quotas = [0.2, 0.5, 1.0];
+        let mut out = Vec::new();
+        cached.latency_batch_at(&g, 8, 0.5, &quotas, 0.4, &mut out);
+        for (&q, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, cached.latency_at(&g, 8, 0.5, q, 0.4), "q={q}");
+            assert_eq!(v, oracle.perf.latency_class(&g, 8, 0.5, q, 0.4), "q={q}");
+        }
+        // And a factor-1.0 sweep is the reference sweep.
+        cached.latency_batch_at(&g, 8, 0.5, &quotas, 1.0, &mut out);
+        assert_eq!(out[1], reference);
     }
 
     #[test]

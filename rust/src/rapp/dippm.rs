@@ -34,6 +34,24 @@ impl LatencyPredictor for DippmPredictor {
     fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
         self.0.latency(g, batch, sm, quota)
     }
+
+    /// Class queries flow through the underlying class feature column (the
+    /// factor is part of DIPPM's static query configuration, like sm/quota).
+    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        self.0.latency_at(g, batch, sm, quota, factor)
+    }
+
+    fn latency_batch_at(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
+        out: &mut Vec<f64>,
+    ) {
+        self.0.latency_batch_at(g, batch, sm, quotas, factor, out)
+    }
 }
 
 #[cfg(test)]

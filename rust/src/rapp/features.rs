@@ -22,16 +22,19 @@
 //!
 //! ## FeaturePlan: the cached split
 //!
-//! Of the whole feature tensor, only **three scalars depend on (sm, quota)**:
-//! the two query-configuration columns and the derived anchor. Everything
-//! else — op rows (including all 6 SM runtime-prior probes), graph statics,
-//! and the 11 graph-level probe evaluations — is a pure function of
-//! (graph, batch). [`FeaturePlan`] computes that expensive part **once** and
-//! [`FeaturePlan::fill_graph_feats`] produces any (sm, quota) query with a
-//! memcpy plus the anchor replay: the predictor's cached-miss cost drops from
-//! a full re-extraction (11 perf-model probes + GAT input rebuild) to a
-//! dynamic fill. [`extract`] is the same computation packaged per query, so
-//! plan-based and fresh extraction are bit-identical by construction.
+//! Of the whole feature tensor, only **four scalars depend on the query**:
+//! the (sm, quota) configuration columns, the trailing GPU-class throughput
+//! factor column (heterogeneous fleets; 1.0 = reference V100), and the
+//! derived anchor. Everything else — op rows (including all 6 SM
+//! runtime-prior probes), graph statics, and the 11 graph-level probe
+//! evaluations — is a pure function of (graph, batch). [`FeaturePlan`]
+//! computes that expensive part **once** and
+//! [`FeaturePlan::fill_graph_feats_at`] produces any (sm, quota, class)
+//! query with a memcpy plus the anchor replay: the predictor's cached-miss
+//! cost drops from a full re-extraction (11 perf-model probes + GAT input
+//! rebuild) to a dynamic fill. [`extract`] is the same computation packaged
+//! per query, so plan-based and fresh extraction are bit-identical by
+//! construction.
 
 use crate::model::zoo::{zoo_adjacency, ZooModel};
 use crate::model::{Adjacency, OpGraph, OpKind, NUM_OP_KINDS};
@@ -58,6 +61,10 @@ pub const F_G_STATIC: usize = 10;
 /// see [`anchor`]).
 pub const F_G_RUNTIME: usize =
     PerfModel::PROFILE_QUOTAS.len() + PerfModel::PROFILE_SMS.len() + 1; // 12
+/// Trailing dynamic column: the GPU-class throughput factor of the query
+/// (1.0 = the reference V100). Appended **last** in both modes so every
+/// pre-catalog column keeps its historical index (and bits).
+pub const F_G_CLASS: usize = 1;
 
 /// Graph-feature column holding the query SM fraction.
 pub const G_COL_SM: usize = 8;
@@ -77,9 +84,14 @@ impl FeatureMode {
 
     pub fn f_g(self) -> usize {
         match self {
-            FeatureMode::Full => F_G_STATIC + F_G_RUNTIME,
-            FeatureMode::StaticOnly => F_G_STATIC,
+            FeatureMode::Full => F_G_STATIC + F_G_RUNTIME + F_G_CLASS,
+            FeatureMode::StaticOnly => F_G_STATIC + F_G_CLASS,
         }
+    }
+
+    /// Index of the class-factor column: always the last graph column.
+    pub fn g_col_class(self) -> usize {
+        self.f_g() - 1
     }
 
     pub fn name(self) -> &'static str {
@@ -182,6 +194,7 @@ impl FeaturePlan {
             }
             gf.push(0.0); // G_COL_ANCHOR — dynamic
         }
+        gf.push(0.0); // class-factor column (g_col_class) — dynamic
         debug_assert_eq!(gf.len(), mode.f_g());
 
         FeaturePlan {
@@ -229,11 +242,19 @@ impl FeaturePlan {
         &self.op_feats
     }
 
-    /// Produce the full graph-feature vector for one (sm, quota) query:
-    /// template memcpy + the three dynamic columns. Bit-identical to what a
-    /// fresh [`extract`] computes (the anchor replay runs the same code over
-    /// the same cached op rows).
+    /// Produce the full graph-feature vector for one reference-class
+    /// (sm, quota) query — [`FeaturePlan::fill_graph_feats_at`] with class
+    /// factor 1.0.
     pub fn fill_graph_feats(&self, sm: f64, quota: f64, out: &mut Vec<f32>) {
+        self.fill_graph_feats_at(sm, quota, 1.0, out);
+    }
+
+    /// Produce the full graph-feature vector for one (sm, quota, class
+    /// factor) query: template memcpy + the dynamic columns. Bit-identical
+    /// to what a fresh [`extract`] computes at factor 1.0 (the anchor
+    /// replay runs the same code over the same cached op rows; `/ 1.0` is
+    /// exact).
+    pub fn fill_graph_feats_at(&self, sm: f64, quota: f64, factor: f64, out: &mut Vec<f32>) {
         out.clear();
         out.extend_from_slice(&self.graph_template);
         out[G_COL_SM] = sm as f32;
@@ -246,12 +267,14 @@ impl FeaturePlan {
                 sm,
                 quota,
                 self.window,
+                factor,
             );
         }
+        out[self.mode.g_col_class()] = factor as f32;
     }
 
     /// Materialise the per-query [`Features`] view (compat path for the HLO
-    /// forward and the cross-language golden tests).
+    /// forward and the cross-language golden tests). Reference class.
     pub fn to_features(&self, sm: f64, quota: f64) -> Features {
         let mut gf = Vec::new();
         self.fill_graph_feats(sm, quota, &mut gf);
@@ -301,12 +324,16 @@ fn interp(xs: &[f64], ys: &[f32], x: f64) -> f64 {
 
 /// Probe-based analytic latency estimate: interpolate each op's profiled
 /// time (the 6 SM probes, op-feature columns 21..27) to the query SM in
-/// ln-ln space, then replay the scheduler's own token-window mechanics
-/// (no-debt, kernel granularity). The GNN head regresses the residual
-/// against this anchor. Contract: python features.anchor.
+/// ln-ln space, scale kernels by the class throughput `factor` (the probes
+/// are reference-class times; the window is a scheduler constant), then
+/// replay the scheduler's own token-window mechanics (no-debt, kernel
+/// granularity). The GNN head regresses the residual against this anchor.
+/// Contract: python features.anchor. `factor = 1.0` reproduces the
+/// pre-catalog anchor bit-for-bit (`/ 1.0` is exact).
 ///
 /// `kernels[i]` is node `i`'s launch count; `op_feats` is the flat raw
 /// `[n × f_op]` matrix. Allocation-free.
+#[allow(clippy::too_many_arguments)]
 pub fn anchor_flat(
     kernels: &[u32],
     op_feats: &[f32],
@@ -314,6 +341,7 @@ pub fn anchor_flat(
     sm: f64,
     quota: f64,
     window: f64,
+    factor: f64,
 ) -> f32 {
     let ln_sms: [f64; F_OP_RUNTIME] = PerfModel::PROFILE_SMS.map(|s| s.ln());
     let ln_sm = sm.clamp(1e-3, 1.0).ln();
@@ -323,7 +351,7 @@ pub fn anchor_flat(
     for (i, &n_kernels) in kernels.iter().enumerate() {
         let row = &op_feats[i * f_op + F_OP_STATIC..i * f_op + F_OP_STATIC + 6];
         let ln_t = interp(&ln_sms, row, ln_sm);
-        let t_est = ln_t.exp_m1() / 1e3; // invert ln1p(ms)
+        let t_est = ln_t.exp_m1() / 1e3 / factor; // invert ln1p(ms), class clock
         let k = n_kernels.max(1);
         let d = t_est / k as f64;
         for _ in 0..k {
@@ -346,13 +374,13 @@ pub fn anchor_flat(
 }
 
 /// [`anchor_flat`] over nested per-node rows (legacy signature; the rows must
-/// be Full-mode op features).
+/// be Full-mode op features). Reference class.
 pub fn anchor(g: &OpGraph, op_feats: &[Vec<f32>], sm: f64, quota: f64, window: f64) -> f32 {
     let f_op = FeatureMode::Full.f_op();
     debug_assert!(op_feats.iter().all(|r| r.len() == f_op));
     let flat: Vec<f32> = op_feats.iter().flatten().copied().collect();
     let kernels: Vec<u32> = g.nodes.iter().map(|n| n.kernels).collect();
-    anchor_flat(&kernels, &flat, f_op, sm, quota, window)
+    anchor_flat(&kernels, &flat, f_op, sm, quota, window, 1.0)
 }
 
 #[cfg(test)]
@@ -366,12 +394,49 @@ mod tests {
         let pm = PerfModel::default();
         let full = extract(&g, 8, 0.5, 0.5, &pm, FeatureMode::Full);
         assert_eq!(full.op_feats[0].len(), 27);
-        assert_eq!(full.graph_feats.len(), 22);
+        assert_eq!(full.graph_feats.len(), 23);
         let stat = extract(&g, 8, 0.5, 0.5, &pm, FeatureMode::StaticOnly);
         assert_eq!(stat.op_feats[0].len(), 21);
-        assert_eq!(stat.graph_feats.len(), 10);
+        assert_eq!(stat.graph_feats.len(), 11);
         assert_eq!(full.op_feats.len(), g.nodes.len());
         assert_eq!(full.edges.len(), g.edges.len());
+        // The class-factor column is always last, in both modes.
+        assert_eq!(FeatureMode::Full.g_col_class(), 22);
+        assert_eq!(FeatureMode::StaticOnly.g_col_class(), 10);
+        assert_eq!(*full.graph_feats.last().unwrap(), 1.0);
+        assert_eq!(*stat.graph_feats.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn class_factor_column_is_dynamic_and_factor_one_is_bit_identical() {
+        let g = zoo_graph(ZooModel::ResNet50);
+        let pm = PerfModel::default();
+        for mode in [FeatureMode::Full, FeatureMode::StaticOnly] {
+            let plan = FeaturePlan::new(&g, 8, &pm, mode);
+            let (mut ref_gf, mut at_gf, mut fast_gf) = (Vec::new(), Vec::new(), Vec::new());
+            plan.fill_graph_feats(0.5, 0.6, &mut ref_gf);
+            plan.fill_graph_feats_at(0.5, 0.6, 1.0, &mut at_gf);
+            for (a, b) in ref_gf.iter().zip(&at_gf) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?}: factor 1.0 must be identity");
+            }
+            // A non-reference factor only moves the class column — and, in
+            // Full mode, the anchor (the replayed kernels run on the class
+            // clock); every template column stays put.
+            plan.fill_graph_feats_at(0.5, 0.6, 2.0, &mut fast_gf);
+            assert_eq!(fast_gf[mode.g_col_class()], 2.0);
+            for (c, (a, b)) in ref_gf.iter().zip(&fast_gf).enumerate() {
+                if c == mode.g_col_class() || (mode == FeatureMode::Full && c == G_COL_ANCHOR) {
+                    continue;
+                }
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} col {c} must not move");
+            }
+            if mode == FeatureMode::Full {
+                assert!(
+                    fast_gf[G_COL_ANCHOR] < ref_gf[G_COL_ANCHOR],
+                    "faster class ⇒ smaller ln-latency anchor"
+                );
+            }
+        }
     }
 
     #[test]

@@ -51,6 +51,52 @@ pub trait LatencyPredictor: Send + Sync {
         out.clear();
         out.extend(quotas.iter().map(|&q| self.latency(g, batch, sm, q)));
     }
+
+    /// Latency on a GPU class with relative throughput `factor`
+    /// ([`crate::vgpu::GpuClass::throughput`]; 1.0 = the reference V100).
+    /// **Contract:** `factor == 1.0` must be bit-identical to
+    /// [`LatencyPredictor::latency`] — the default takes that exact path, so
+    /// uniform reference-class fleets are byte-identical to the pre-catalog
+    /// pipeline by construction. The default scales the reference
+    /// prediction by `1/factor` (exact for raw execution; approximate
+    /// around token-window boundaries); the oracle overrides with the
+    /// window-exact class surface, and RaPP feeds the factor through its
+    /// class feature column.
+    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.latency(g, batch, sm, quota);
+        }
+        self.latency(g, batch, sm, quota) / factor
+    }
+
+    /// Throughput capability on a class with relative throughput `factor`.
+    /// `factor == 1.0` is bit-identical to [`LatencyPredictor::capacity`].
+    fn capacity_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.capacity(g, batch, sm, quota);
+        }
+        let t_raw = self.latency_at(g, batch, sm, 1.0, factor);
+        batch as f64 * quota / t_raw
+    }
+
+    /// [`LatencyPredictor::latency_batch`] on a class with relative
+    /// throughput `factor`; same bit-for-bit interchangeability contract,
+    /// and `factor == 1.0` routes through `latency_batch` unchanged.
+    fn latency_batch_at(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
+        out: &mut Vec<f64>,
+    ) {
+        if factor == 1.0 {
+            return self.latency_batch(g, batch, sm, quotas, out);
+        }
+        out.clear();
+        out.extend(quotas.iter().map(|&q| self.latency_at(g, batch, sm, q, factor)));
+    }
 }
 
 /// Ground-truth oracle (the perf model itself).
@@ -62,6 +108,24 @@ pub struct OraclePredictor {
 impl LatencyPredictor for OraclePredictor {
     fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
         self.perf.latency(g, batch, sm, quota)
+    }
+
+    /// The oracle knows the class surface exactly: token-window replay on
+    /// the class clock, not the `1/factor` approximation. `factor == 1.0`
+    /// takes the reference path verbatim (byte-identity contract).
+    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.perf.latency(g, batch, sm, quota);
+        }
+        self.perf.latency_class(g, batch, sm, quota, factor)
+    }
+
+    fn capacity_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.capacity(g, batch, sm, quota);
+        }
+        let t_raw = self.latency_at(g, batch, sm, 1.0, factor);
+        batch as f64 * quota / t_raw
     }
 }
 
@@ -227,7 +291,8 @@ struct ForwardScratch {
 pub struct RappPredictor {
     pub weights: RappWeights,
     pub perf: PerfModel,
-    cache: Mutex<HashMap<(String, u32, u32, u32), f64>>,
+    /// Memo keyed on (graph, batch, sm‰, quota‰, class-factor‰).
+    cache: Mutex<HashMap<(String, u32, u32, u32, u32), f64>>,
     /// Two-level (graph name → batch → entry) so the steady-state probe
     /// costs two hash lookups and **no allocation**; the name `String` is
     /// cloned only when a graph's first plan is inserted.
@@ -342,14 +407,21 @@ impl RappPredictor {
         out[0]
     }
 
-    /// Raw forward pass: returns predicted ln(latency_ms). Allocation-free
-    /// once the (graph, batch) plan is warm.
+    /// Raw forward pass at the reference class: returns predicted
+    /// ln(latency_ms). Allocation-free once the (graph, batch) plan is warm.
     pub fn forward(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f32 {
+        self.forward_at(g, batch, sm, quota, 1.0)
+    }
+
+    /// Forward pass with the GPU-class throughput factor fed through the
+    /// trailing class feature column (and the anchor replayed on the class
+    /// clock). `factor = 1.0` is [`RappPredictor::forward`] bit-for-bit.
+    pub fn forward_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f32 {
         let entry = self.plan_entry(g, batch);
         let w = &self.weights;
         let mut st = self.scratch.lock().unwrap();
         let st = &mut *st;
-        entry.plan.fill_graph_feats(sm, quota, &mut st.gfeats);
+        entry.plan.fill_graph_feats_at(sm, quota, factor, &mut st.gfeats);
         Self::head_from_gfeats(
             w,
             &entry.pooled,
@@ -361,16 +433,31 @@ impl RappPredictor {
         )
     }
 
-    /// Row-batched forward over a quota sweep at fixed (graph, batch, sm):
-    /// one matmul-shaped pass per layer over all rows. Each output is
-    /// bit-identical to the scalar [`RappPredictor::forward`] at the same
-    /// point ([`Dense::forward_rows`] preserves per-row accumulation order).
+    /// Row-batched forward over a quota sweep at fixed (graph, batch, sm),
+    /// reference class: one matmul-shaped pass per layer over all rows.
+    /// Each output is bit-identical to the scalar [`RappPredictor::forward`]
+    /// at the same point ([`Dense::forward_rows`] preserves per-row
+    /// accumulation order).
     pub fn forward_batch(
         &self,
         g: &OpGraph,
         batch: u32,
         sm: f64,
         quotas: &[f64],
+        out: &mut Vec<f32>,
+    ) {
+        self.forward_batch_at(g, batch, sm, quotas, 1.0, out)
+    }
+
+    /// [`RappPredictor::forward_batch`] at a GPU-class throughput factor;
+    /// row-for-row bit-identical to [`RappPredictor::forward_at`].
+    pub fn forward_batch_at(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
         out: &mut Vec<f32>,
     ) {
         let rows = quotas.len();
@@ -387,7 +474,7 @@ impl RappPredictor {
         st.gfeats_rows.clear();
         st.gx_rows.clear();
         for &q in quotas {
-            entry.plan.fill_graph_feats(sm, q, &mut st.gfeats);
+            entry.plan.fill_graph_feats_at(sm, q, factor, &mut st.gfeats);
             st.gfeats_rows.extend_from_slice(&st.gfeats);
             for (k, &v) in st.gfeats.iter().enumerate() {
                 st.gx_rows.push((v - w.g_mean[k]) / w.g_std[k]);
@@ -424,12 +511,19 @@ impl RappPredictor {
         }
     }
 
-    fn cache_key(g: &OpGraph, batch: u32, sm: f64, quota: f64) -> (String, u32, u32, u32) {
+    fn cache_key(
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quota: f64,
+        factor: f64,
+    ) -> (String, u32, u32, u32, u32) {
         (
             g.name.clone(),
             batch,
             (sm * 1000.0).round() as u32,
             (quota * 1000.0).round() as u32,
+            (factor * 1000.0).round() as u32,
         )
     }
 
@@ -444,26 +538,49 @@ impl RappPredictor {
 
 impl LatencyPredictor for RappPredictor {
     fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
-        let key = Self::cache_key(g, batch, sm, quota);
+        self.latency_at(g, batch, sm, quota, 1.0)
+    }
+
+    /// Class-aware scalar query: the factor flows through the class feature
+    /// column (not a post-hoc `1/factor` scale), memoised per lattice point.
+    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        let key = Self::cache_key(g, batch, sm, quota, factor);
         if let Some(&v) = self.cache.lock().unwrap().get(&key) {
             return v;
         }
-        let secs = Self::ln_ms_to_secs(self.forward(g, batch, sm, quota) as f64);
+        let secs = Self::ln_ms_to_secs(self.forward_at(g, batch, sm, quota, factor) as f64);
         self.cache.lock().unwrap().insert(key, secs);
         secs
     }
 
-    /// Whole-sweep latency: memo hits are served from the cache; the missing
-    /// rows run through one [`RappPredictor::forward_batch`] pass. Values are
-    /// bit-identical to the equivalent scalar-query sequence: the memo keys
-    /// on the per-mille lattice while forwards run at the raw quota (the
-    /// scalar contract), so quotas aliasing to one lattice cell within a
-    /// sweep are deduped — the first occurrence computes, later aliases
-    /// reuse its value, exactly as back-to-back `latency` calls would.
+    fn capacity_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
+        let t_raw = self.latency_at(g, batch, sm, 1.0, factor);
+        batch as f64 * quota / t_raw
+    }
+
     fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
+        self.latency_batch_at(g, batch, sm, quotas, 1.0, out)
+    }
+
+    /// Whole-sweep latency: memo hits are served from the cache; the missing
+    /// rows run through one [`RappPredictor::forward_batch_at`] pass. Values
+    /// are bit-identical to the equivalent scalar-query sequence: the memo
+    /// keys on the per-mille lattice while forwards run at the raw quota
+    /// (the scalar contract), so quotas aliasing to one lattice cell within
+    /// a sweep are deduped — the first occurrence computes, later aliases
+    /// reuse its value, exactly as back-to-back `latency` calls would.
+    fn latency_batch_at(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
+        out: &mut Vec<f64>,
+    ) {
         out.clear();
         out.resize(quotas.len(), f64::NAN);
-        let mut miss_keys: Vec<(String, u32, u32, u32)> = Vec::new();
+        let mut miss_keys: Vec<(String, u32, u32, u32, u32)> = Vec::new();
         let mut miss_idx: Vec<usize> = Vec::new();
         let mut miss_q: Vec<f64> = Vec::new();
         // (out position, miss slot) for quotas aliasing an earlier miss.
@@ -471,7 +588,7 @@ impl LatencyPredictor for RappPredictor {
         {
             let cache = self.cache.lock().unwrap();
             for (i, &q) in quotas.iter().enumerate() {
-                let key = Self::cache_key(g, batch, sm, q);
+                let key = Self::cache_key(g, batch, sm, q, factor);
                 if let Some(&v) = cache.get(&key) {
                     out[i] = v;
                 } else if let Some(slot) = miss_keys.iter().position(|k| *k == key) {
@@ -487,7 +604,7 @@ impl LatencyPredictor for RappPredictor {
             return;
         }
         let mut fresh = Vec::new();
-        self.forward_batch(g, batch, sm, &miss_q, &mut fresh);
+        self.forward_batch_at(g, batch, sm, &miss_q, factor, &mut fresh);
         let mut secs_by_slot = Vec::with_capacity(fresh.len());
         {
             let mut cache = self.cache.lock().unwrap();
@@ -672,6 +789,41 @@ mod tests {
         );
         assert_eq!(out[0], q.latency(&g, 8, 0.5, 0.4));
         assert_eq!(out[1], q.latency(&g, 8, 0.5, 0.4004));
+    }
+
+    #[test]
+    fn class_factor_queries_are_distinct_and_factor_one_is_identity() {
+        let g = zoo_graph(ZooModel::ResNet50);
+        let p = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 16, 21),
+            PerfModel::default(),
+        );
+        let reference = p.latency(&g, 8, 0.5, 0.5);
+        // factor 1.0 is the same memo cell and the same bits.
+        assert_eq!(p.latency_at(&g, 8, 0.5, 0.5, 1.0), reference);
+        // A different class factor is a distinct, deterministic prediction.
+        let fast = p.latency_at(&g, 8, 0.5, 0.5, 2.0);
+        assert!(fast.is_finite() && fast > 0.0);
+        let p2 = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 16, 21),
+            PerfModel::default(),
+        );
+        assert_eq!(p2.latency_at(&g, 8, 0.5, 0.5, 2.0), fast);
+        // Batched class sweep is bit-identical to scalar class queries.
+        let quotas = [0.2, 0.5, 0.9];
+        let mut out = Vec::new();
+        p.latency_batch_at(&g, 8, 0.5, &quotas, 2.0, &mut out);
+        for (&q, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, p.latency_at(&g, 8, 0.5, q, 2.0), "q={q}");
+        }
+        // The oracle's class surface is window-exact and orders correctly.
+        let o = OraclePredictor::default();
+        assert_eq!(
+            o.latency_at(&g, 8, 0.5, 0.5, 1.0).to_bits(),
+            o.latency(&g, 8, 0.5, 0.5).to_bits()
+        );
+        assert!(o.latency_at(&g, 8, 0.5, 0.5, 2.0) < o.latency(&g, 8, 0.5, 0.5));
+        assert!(o.capacity_at(&g, 8, 0.5, 0.5, 2.0) > o.capacity(&g, 8, 0.5, 0.5));
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::perf::PerfModel;
 use crate::rapp::{CachedPredictor, LatencyPredictor, OraclePredictor};
 use crate::simclock::EventQueue;
 use crate::util::prng::Pcg64;
+use crate::vgpu::GpuClass;
 use crate::workload::Trace;
 use std::collections::{BTreeSet, VecDeque};
 
@@ -44,6 +45,10 @@ pub struct SimConfig {
     /// for KServe-style exclusive allocation, [`BillingMode::FineGrained`]
     /// for the sm×quota slice. Platform registry specs carry this directly.
     pub billing: BillingMode,
+    /// Fleet composition: one GPU per entry, in order. Empty (the default)
+    /// means `n_gpus` reference-class (V100) devices — the pre-fleet
+    /// homogeneous construction, byte-identical by definition.
+    pub fleet: Vec<GpuClass>,
 }
 
 impl Default for SimConfig {
@@ -57,6 +62,7 @@ impl Default for SimConfig {
             drain: 60.0,
             backlog_horizon: 2.0,
             billing: BillingMode::FineGrained,
+            fleet: Vec::new(),
         }
     }
 }
@@ -71,6 +77,14 @@ impl SimConfig {
             billing,
             ..SimConfig::default()
         }
+    }
+
+    /// Pin the run to an explicit fleet (one GPU per class entry, in
+    /// order); `n_gpus` follows the fleet size.
+    pub fn with_fleet(mut self, fleet: Vec<GpuClass>) -> Self {
+        self.n_gpus = fleet.len();
+        self.fleet = fleet;
+        self
     }
 }
 
@@ -135,12 +149,24 @@ pub fn run_sim(
     perf: &PerfModel,
     cfg: &SimConfig,
 ) -> RunReport {
-    let mut cluster = ClusterState::new(cfg.n_gpus, perf.dev.mem_cap);
+    let mut cluster = if cfg.fleet.is_empty() {
+        ClusterState::new(cfg.n_gpus, perf.dev.mem_cap)
+    } else {
+        ClusterState::from_classes(&cfg.fleet)
+    };
     for f in functions {
         cluster.register_function(f.clone());
     }
     let mut recon = Reconfigurator::new(&cluster, cfg.seed);
     let mut report = RunReport::new(policy.name());
+    // Fleet composition for the report's per-class columns (uniform
+    // reference-class runs carry {"v100": n}, which the exporters omit).
+    for i in 0..cluster.n_gpus() {
+        *report
+            .fleet_gpus
+            .entry(cluster.gpu(crate::cluster::GpuId(i)).class().name.clone())
+            .or_insert(0) += 1;
+    }
     // One accounting engine for the whole run: every pod-second is billed
     // exactly once, at the slice held during that second, under the run's
     // real billing mode (see metrics::ledger).
@@ -383,13 +409,17 @@ fn try_dispatch(
     batch_pool: &mut Vec<Vec<Request>>,
 ) {
     let f = &functions[f_idx];
-    // Idle + ready pods, largest capacity first (capacity-weighted routing).
+    // Idle + ready pods, largest capacity first (capacity-weighted routing;
+    // heterogeneous fleets weight by the hosting class's throughput — `× 1.0`
+    // on the reference class, so uniform routing order is unchanged).
     let mut pods: Vec<(&crate::cluster::Pod, f64)> = cluster
         .pods_of(&f.name)
         .into_iter()
         .filter(|p| p.is_ready(now) && !busy.contains(&p.id))
         .map(|p| {
-            let cap = crate::vgpu::sm_to_f64(p.sm) * crate::vgpu::quota_to_f64(p.quota);
+            let cap = crate::vgpu::sm_to_f64(p.sm)
+                * crate::vgpu::quota_to_f64(p.quota)
+                * cluster.gpu(p.gpu).throughput();
             (p, cap)
         })
         .collect();
@@ -414,11 +444,14 @@ fn try_dispatch(
         let mut batch = batch_pool.pop().unwrap_or_default();
         debug_assert!(batch.is_empty());
         batch.extend(queues[f_idx].drain(..take));
-        let service = serve.latency(
+        // Service time on the pod's own GPU class (factor 1.0 routes through
+        // the reference surface verbatim).
+        let service = serve.latency_at(
             &f.graph,
             take as u32,
             crate::vgpu::sm_to_f64(pod.sm),
             crate::vgpu::quota_to_f64(pod.quota),
+            cluster.gpu(pod.gpu).throughput(),
         );
         busy.insert(pod.id);
         q.push_at(
@@ -631,6 +664,76 @@ mod tests {
         );
         // The waits are bounded by the run duration.
         assert!(dropped.iter().all(|&l| l <= r.duration));
+    }
+
+    #[test]
+    fn mixed_fleet_run_tracks_composition_and_per_class_costs() {
+        let fns = test_functions();
+        let trace = small_trace(&fns);
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        let fleet = vec![
+            GpuClass::a100(),
+            GpuClass::v100(),
+            GpuClass::v100(),
+            GpuClass::t4(),
+            GpuClass::t4(),
+            GpuClass::t4(),
+        ];
+        let cfg = SimConfig::for_experiment(0, 42, BillingMode::FineGrained).with_fleet(fleet);
+        assert_eq!(cfg.n_gpus, 6);
+        let mut p = HybridAutoscaler::new(HybridConfig::default());
+        let r = run_sim(&mut p, &fns, &trace, &pred, &perf, &cfg);
+        assert_eq!(r.fleet_gpus.get("a100"), Some(&1));
+        assert_eq!(r.fleet_gpus.get("v100"), Some(&2));
+        assert_eq!(r.fleet_gpus.get("t4"), Some(&3));
+        assert!(r.total_served() > 500, "served {}", r.total_served());
+        // Per-class billing sums to the run total.
+        let class_total: f64 = r
+            .costs
+            .billed_classes()
+            .map(|c| r.costs.class_cost_of(c))
+            .sum();
+        assert!((class_total - r.costs.total_cost()).abs() < 1e-9);
+        assert!(r.costs.total_cost() > 0.0);
+        // The export carries the fleet + class sections for mixed runs.
+        let j = r.to_json();
+        assert!(j.get("fleet_gpus").is_ok());
+        assert!(j.get("class_costs").is_ok());
+        // …and a uniform run omits them (byte-stability of the old export).
+        let mut p2 = HybridAutoscaler::new(HybridConfig::default());
+        let r2 = run_sim(&mut p2, &fns, &trace, &pred, &perf, &SimConfig::default());
+        assert!(r2.to_json().get("fleet_gpus").is_err());
+    }
+
+    #[test]
+    fn uniform_fleet_config_is_byte_identical_to_homogeneous_constructor() {
+        // SimConfig::with_fleet(v100 × n) must reproduce the homogeneous
+        // run to the last bit — the keystone the expt golden test builds on.
+        let fns = test_functions();
+        let trace = small_trace(&fns);
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        let base = SimConfig {
+            n_gpus: 8,
+            ..SimConfig::default()
+        };
+        let fleet_cfg = base.clone().with_fleet(vec![GpuClass::v100(); 8]);
+        let mut a = HybridAutoscaler::new(HybridConfig::default());
+        let mut b = HybridAutoscaler::new(HybridConfig::default());
+        let ra = run_sim(&mut a, &fns, &trace, &pred, &perf, &base);
+        let rb = run_sim(&mut b, &fns, &trace, &pred, &perf, &fleet_cfg);
+        assert_eq!(ra.total_served(), rb.total_served());
+        assert_eq!(ra.total_dropped(), rb.total_dropped());
+        assert_eq!(
+            ra.costs.total_cost().to_bits(),
+            rb.costs.total_cost().to_bits(),
+            "uniform fleet must not perturb a single bit of cost"
+        );
+        assert_eq!(
+            (ra.vertical_ups, ra.horizontal_ups, ra.horizontal_downs),
+            (rb.vertical_ups, rb.horizontal_ups, rb.horizontal_downs)
+        );
     }
 
     #[test]

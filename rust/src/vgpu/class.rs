@@ -1,0 +1,161 @@
+//! The GPU class catalog — device-class descriptors for heterogeneous
+//! fleets.
+//!
+//! The paper's testbed is a uniform rack of V100s, but real serverless
+//! fleets mix device generations: pricing and SM throughput differ per
+//! class, and placement quality across non-uniform GPUs dominates cost
+//! (Torpor, ESG). A [`GpuClass`] captures the four facts the control plane
+//! needs about a device class:
+//!
+//! * `sm_count` — physical streaming multiprocessors (informational; the
+//!   allocation substrate keeps working in per-mille *fractions* of
+//!   whatever device hosts the slot, so SM alignment is class-agnostic);
+//! * `mem_cap` — device memory in bytes (placement feasibility);
+//! * `throughput` — relative execution speed versus the reference V100:
+//!   a kernel that takes `t` seconds on the reference class takes
+//!   `t / throughput` on this class (single-factor model: compute and
+//!   bandwidth scale together; launch overhead rides along). The token
+//!   **window length is a scheduler constant** and does not scale — quota
+//!   semantics are identical on every class;
+//! * `price_per_hour` — $/hr for the whole device (Google-Cloud-style
+//!   on-demand pricing). Billing scales a run's configured reference price
+//!   by [`GpuClass::price_relative`], so the reference class always bills
+//!   at exactly the configured rate.
+//!
+//! **Name stability:** like platform names, class names are export keys
+//! (per-class grid columns in `BENCH_sim.json`). Never reuse a name for a
+//! different device configuration; renaming one is a schema change.
+
+/// Registry name of the reference class every throughput/price factor is
+/// expressed against (the paper's testbed device).
+pub const REFERENCE_CLASS: &str = "v100";
+
+/// One GPU device class: the unit of fleet heterogeneity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuClass {
+    /// Stable class key (export schema; see module docs).
+    pub name: String,
+    /// Physical SM count (informational — allocation is fractional).
+    pub sm_count: u32,
+    /// Device memory capacity in bytes.
+    pub mem_cap: f64,
+    /// Relative execution speed vs. the reference class (V100 = 1.0):
+    /// kernel time on this class = reference time / `throughput`.
+    pub throughput: f64,
+    /// On-demand $/hr for the whole device.
+    pub price_per_hour: f64,
+}
+
+impl GpuClass {
+    /// The reference class: V100-16GB, the paper's testbed GPU. Its
+    /// `mem_cap` and `price_per_hour` equal
+    /// [`crate::perf::DeviceSpec::default`]'s (pinned by test), so a
+    /// uniform-V100 fleet is indistinguishable from the pre-catalog
+    /// homogeneous cluster.
+    pub fn v100() -> Self {
+        GpuClass {
+            name: REFERENCE_CLASS.to_string(),
+            sm_count: 80,
+            mem_cap: 16.0e9,
+            throughput: 1.0,
+            price_per_hour: 2.48,
+        }
+    }
+
+    /// A100-40GB: ~2x the V100's effective throughput on inference-shaped
+    /// work, 2.5x the memory, at a premium hourly rate.
+    pub fn a100() -> Self {
+        GpuClass {
+            name: "a100".to_string(),
+            sm_count: 108,
+            mem_cap: 40.0e9,
+            throughput: 2.0,
+            price_per_hour: 3.67,
+        }
+    }
+
+    /// T4-16GB: the budget inference card — ~0.4x V100 throughput at a
+    /// fraction of the price. The cost-optimal home for latency-slack
+    /// functions.
+    pub fn t4() -> Self {
+        GpuClass {
+            name: "t4".to_string(),
+            sm_count: 40,
+            mem_cap: 16.0e9,
+            throughput: 0.4,
+            price_per_hour: 0.95,
+        }
+    }
+
+    /// The built-in catalog, reference class first.
+    pub fn catalog() -> Vec<GpuClass> {
+        vec![GpuClass::v100(), GpuClass::a100(), GpuClass::t4()]
+    }
+
+    /// Case-insensitive catalog lookup.
+    pub fn from_name(name: &str) -> Option<GpuClass> {
+        GpuClass::catalog()
+            .into_iter()
+            .find(|c| c.name.eq_ignore_ascii_case(name.trim()))
+    }
+
+    /// Price of this class relative to the reference class. Billing
+    /// multiplies a run's configured reference-class price by this factor,
+    /// so the reference class bills at **exactly** the configured rate
+    /// (`x * 1.0` is exact in IEEE 754 — the uniform fleet's costs are
+    /// bit-identical to the pre-catalog ledger).
+    pub fn price_relative(&self) -> f64 {
+        self.price_per_hour / GpuClass::v100().price_per_hour
+    }
+
+    pub fn is_reference(&self) -> bool {
+        self.name == REFERENCE_CLASS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::DeviceSpec;
+
+    #[test]
+    fn reference_class_matches_device_spec_exactly() {
+        // The uniform-fleet byte-identity contract hinges on these being the
+        // *same* f64 values the pre-catalog code used.
+        let v = GpuClass::v100();
+        let dev = DeviceSpec::default();
+        assert_eq!(v.mem_cap.to_bits(), dev.mem_cap.to_bits());
+        assert_eq!(v.price_per_hour.to_bits(), dev.price_per_hour.to_bits());
+        assert_eq!(v.throughput.to_bits(), 1.0f64.to_bits());
+        assert_eq!(v.price_relative().to_bits(), 1.0f64.to_bits());
+        assert!(v.is_reference());
+    }
+
+    #[test]
+    fn catalog_names_are_distinct_and_resolvable() {
+        let cat = GpuClass::catalog();
+        for c in &cat {
+            assert_eq!(GpuClass::from_name(&c.name).as_ref(), Some(c));
+            assert_eq!(GpuClass::from_name(&c.name.to_uppercase()).as_ref(), Some(c));
+            assert!(c.throughput > 0.0 && c.price_per_hour > 0.0 && c.mem_cap > 0.0);
+        }
+        let mut names: Vec<&str> = cat.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), cat.len());
+        assert!(GpuClass::from_name("h100").is_none());
+    }
+
+    #[test]
+    fn price_and_throughput_order_the_catalog_sensibly() {
+        let (v, a, t) = (GpuClass::v100(), GpuClass::a100(), GpuClass::t4());
+        assert!(a.throughput > v.throughput && v.throughput > t.throughput);
+        assert!(a.price_per_hour > v.price_per_hour && v.price_per_hour > t.price_per_hour);
+        // T4 is the cheapest per hour; A100 the cheapest per unit throughput.
+        assert!(t.price_relative() < 1.0 && a.price_relative() > 1.0);
+        assert!(
+            a.price_per_hour / a.throughput < v.price_per_hour / v.throughput,
+            "a100 should win on $/throughput"
+        );
+    }
+}

@@ -15,8 +15,11 @@
 //! * [`device_file::DeviceFile`] — the two per-vGPU resource-configuration
 //!   "device files" the GPU Re-configurator writes and the scheduler reads.
 
+pub mod class;
 pub mod device_file;
 pub mod tokens;
+
+pub use class::{GpuClass, REFERENCE_CLASS};
 
 use std::collections::BTreeMap;
 
@@ -70,8 +73,17 @@ impl Slot {
         self.clients.values().sum()
     }
 
+    /// Remaining quota headroom. Saturating: a slot that a buggy caller
+    /// over-committed reports zero headroom instead of underflow-panicking
+    /// the whole plan tick in debug builds (the invariant itself is still
+    /// asserted in debug, and [`VGpu::check_invariants`] reports it).
     pub fn quota_free(&self) -> QuotaMille {
-        QUOTA_FULL - self.quota_used()
+        let used = self.quota_used();
+        debug_assert!(
+            used <= QUOTA_FULL,
+            "slot over-committed: {used}‰ > {QUOTA_FULL}‰"
+        );
+        QUOTA_FULL.saturating_sub(used)
     }
 }
 
@@ -100,9 +112,16 @@ pub struct VGpu {
     mem_cap: f64,
     mem_used: f64,
     clients: BTreeMap<ClientId, Placement>,
+    /// Device class (throughput factor, pricing, catalog identity). The
+    /// allocation substrate itself is class-agnostic — fractions of
+    /// whatever device hosts the slot — so the class only informs the
+    /// control plane (placement, billing, service-time scaling).
+    class: GpuClass,
 }
 
 impl VGpu {
+    /// A reference-class (V100) GPU with an explicit memory capacity — the
+    /// pre-catalog constructor, unchanged for every homogeneous caller.
     pub fn new(uuid: &str, mem_cap: f64) -> Self {
         VGpu {
             uuid: uuid.to_string(),
@@ -110,7 +129,30 @@ impl VGpu {
             mem_cap,
             mem_used: 0.0,
             clients: BTreeMap::new(),
+            class: GpuClass::v100(),
         }
+    }
+
+    /// A GPU of an explicit device class; memory capacity comes from the
+    /// class descriptor.
+    pub fn with_class(uuid: &str, class: GpuClass) -> Self {
+        VGpu {
+            uuid: uuid.to_string(),
+            slots: Vec::new(),
+            mem_cap: class.mem_cap,
+            mem_used: 0.0,
+            clients: BTreeMap::new(),
+            class,
+        }
+    }
+
+    pub fn class(&self) -> &GpuClass {
+        &self.class
+    }
+
+    /// The class throughput factor (1.0 for the reference V100).
+    pub fn throughput(&self) -> f64 {
+        self.class.throughput
     }
 
     pub fn slots(&self) -> &[Slot] {
@@ -530,6 +572,52 @@ mod tests {
         assert_eq!(g.sm_free(), 800);
         // Class freed: a new size is admissible again.
         g.attach(ClientId(3), 450, 500, 1e8).unwrap();
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quota_free_saturates_on_overcommitted_slot() {
+        // Regression: `QUOTA_FULL - quota_used()` underflow-panicked in debug
+        // if a caller ever over-committed a slot. quota_free now saturates to
+        // zero headroom (with the invariant debug_assert'ed).
+        let mut clients = BTreeMap::new();
+        clients.insert(ClientId(1), 800);
+        clients.insert(ClientId(2), 700); // 1500‰ — an over-commit only a buggy caller produces
+        let slot = Slot { sm: 500, clients };
+        if cfg!(debug_assertions) {
+            // The invariant assertion fires first in debug builds.
+            let prev = std::panic::take_hook();
+            std::panic::set_hook(Box::new(|_| {}));
+            let r = std::panic::catch_unwind(|| slot.quota_free());
+            std::panic::set_hook(prev);
+            assert!(r.is_err(), "debug build must assert the invariant");
+        } else {
+            assert_eq!(slot.quota_free(), 0, "release build must saturate, not wrap");
+        }
+        // A full-but-not-over slot reports exactly zero either way.
+        let mut full = BTreeMap::new();
+        full.insert(ClientId(1), QUOTA_FULL);
+        assert_eq!(Slot { sm: 500, clients: full }.quota_free(), 0);
+    }
+
+    #[test]
+    fn default_constructor_is_reference_class() {
+        let g = gpu();
+        assert!(g.class().is_reference());
+        assert_eq!(g.throughput(), 1.0);
+        assert_eq!(g.mem_free(), 16e9);
+    }
+
+    #[test]
+    fn class_constructor_takes_mem_cap_from_class() {
+        let g = VGpu::with_class("GPU-a100-0", GpuClass::a100());
+        assert_eq!(g.class().name, "a100");
+        assert_eq!(g.mem_free(), GpuClass::a100().mem_cap);
+        assert_eq!(g.throughput(), 2.0);
+        // Allocation substrate is class-agnostic: same per-mille rules.
+        let mut g = g;
+        g.attach(ClientId(1), 500, 600, 1e9).unwrap();
+        assert_eq!(g.sm_allocated(), 500);
         g.check_invariants().unwrap();
     }
 

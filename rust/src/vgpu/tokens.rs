@@ -262,6 +262,40 @@ mod tests {
     }
 
     #[test]
+    fn quota_rewrite_boundary_semantics_independent_of_kernel_time_scale() {
+        // GPU classes scale *kernel durations* (a faster class issues
+        // cheaper acquires), never the scheduler: the token window is a
+        // scheduler constant and a staged quota re-write must land at the
+        // next window boundary regardless of how the class clock scales the
+        // per-acquire cost. Two clients whose costs differ by a 2x "class
+        // factor" must observe the identical rewrite protocol.
+        for class_factor in [1.0f64, 2.0, 0.4] {
+            let ts = TokenScheduler::new(W);
+            ts.register(ClientId(1), 200);
+            // Drain the current window's budget (overdraw is allowed; the
+            // absolute cost magnitude is irrelevant to the protocol).
+            ts.acquire(ClientId(1), W).unwrap();
+            ts.set_quota(ClientId(1), 800);
+            // Staged, not applied: reads must still see the old quota…
+            assert_eq!(
+                ts.quota(ClientId(1)),
+                Some(200),
+                "factor {class_factor}: rewrite must wait for the boundary"
+            );
+            // …and a second stage before the boundary replaces the pending
+            // value (returns the previously staged target).
+            assert_eq!(ts.set_quota(ClientId(1), 600), Some(800));
+            std::thread::sleep(Duration::from_secs_f64(W * 1.5));
+            ts.acquire(ClientId(1), W * 0.01 / class_factor).unwrap();
+            assert_eq!(
+                ts.quota(ClientId(1)),
+                Some(600),
+                "factor {class_factor}: rewrite must land at the boundary"
+            );
+        }
+    }
+
+    #[test]
     fn zero_quota_rejected() {
         let ts = TokenScheduler::new(W);
         ts.register(ClientId(1), 0);

@@ -5,12 +5,16 @@
 //! oscillate on steady workloads.
 
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, KalmanFilter, ScalingPolicy};
-use has_gpu::cluster::{ClusterState, FunctionSpec, GpuId, Reconfigurator, ScalingAction};
+use has_gpu::cluster::{Applied, ClusterState, FunctionSpec, GpuId, Reconfigurator, ScalingAction};
+use has_gpu::metrics::{BillingLedger, BillingMode};
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::OraclePredictor;
+use has_gpu::util::prng::Pcg64;
 use has_gpu::util::proptest::{run_prop, PropConfig};
-use has_gpu::vgpu::{ClientId, VGpu, QUOTA_FULL, SM_FULL, SM_STEP};
+use has_gpu::vgpu::{
+    ClientId, GpuClass, VGpu, MAX_SM_CLASSES, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP,
+};
 
 #[test]
 fn prop_vgpu_invariants_hold_under_random_ops() {
@@ -220,6 +224,265 @@ fn pred_capacity(
         has_gpu::vgpu::sm_to_f64(sm),
         has_gpu::vgpu::quota_to_f64(quota),
     )
+}
+
+// ---- Heterogeneous-fleet properties (GpuClass catalog) -------------------
+
+/// A random fleet of 2–5 GPUs drawn from the catalog (at least two distinct
+/// classes whenever size allows, so the heterogeneity is real).
+fn random_fleet(rng: &mut Pcg64) -> Vec<GpuClass> {
+    let catalog = GpuClass::catalog();
+    let n = 2 + rng.next_below(4) as usize;
+    let mut fleet: Vec<GpuClass> = (0..n)
+        .map(|_| catalog[rng.next_below(catalog.len() as u64) as usize].clone())
+        .collect();
+    if fleet.iter().all(|c| c.name == fleet[0].name) {
+        let other = catalog
+            .iter()
+            .find(|c| c.name != fleet[0].name)
+            .unwrap()
+            .clone();
+        fleet[0] = other;
+    }
+    fleet
+}
+
+fn mixed_spec() -> FunctionSpec {
+    FunctionSpec {
+        name: "mobilenetv2".into(),
+        graph: zoo_graph(ZooModel::MobileNetV2),
+        slo: 0.25,
+        batch: 1,
+        artifact: None,
+    }
+}
+
+/// One random raw scaling action against the current pod set. Rejections
+/// (alignment/capacity/memory races) are part of the property: they must
+/// leave every invariant intact.
+fn random_action(
+    rng: &mut Pcg64,
+    spec: &FunctionSpec,
+    n_gpus: usize,
+    live: &[has_gpu::cluster::PodId],
+) -> Option<ScalingAction> {
+    match rng.next_below(3) {
+        0 => Some(ScalingAction::CreatePod {
+            function: spec.name.clone(),
+            gpu: GpuId(rng.next_below(n_gpus as u64) as usize),
+            sm: SM_STEP * (1 + rng.next_below(20) as u32),
+            quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
+            batch: spec.batch,
+            new_gpu: false,
+        }),
+        1 if !live.is_empty() => Some(ScalingAction::SetQuota {
+            pod: live[rng.next_below(live.len() as u64) as usize],
+            quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
+        }),
+        _ if !live.is_empty() => Some(ScalingAction::RemovePod {
+            pod: live[rng.next_below(live.len() as u64) as usize],
+        }),
+        _ => None,
+    }
+}
+
+#[test]
+fn prop_mixed_fleet_invariants_hold_under_random_actions() {
+    // The ISSUE's invariant list, asserted explicitly per step on random
+    // heterogeneous fleets: Σ slot SM ≤ 1000 per GPU, Σ quota ≤ 1000 per
+    // slot, ≤ MAX_SM_CLASSES partition classes, per-class memory caps
+    // respected — plus the cluster-wide placement-consistency check.
+    run_prop(
+        "mixed-fleet-invariants",
+        PropConfig {
+            cases: 96,
+            max_size: 48,
+            ..PropConfig::default()
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng);
+            let spec = mixed_spec();
+            let perf = PerfModel::default();
+            let mut cluster = ClusterState::from_classes(&fleet);
+            cluster.register_function(spec.clone());
+            let mut recon = Reconfigurator::new(&cluster, 13);
+            let mut live: Vec<has_gpu::cluster::PodId> = Vec::new();
+            for step in 0..size * 2 {
+                let Some(action) = random_action(rng, &spec, fleet.len(), &live) else {
+                    continue;
+                };
+                match recon.apply(&mut cluster, &perf, &action, step as f64) {
+                    Ok(Applied::PodCreated { pod, .. }) => live.push(pod),
+                    Ok(Applied::PodRemoved { pod }) => live.retain(|&p| p != pod),
+                    Ok(Applied::QuotaSet { .. }) | Err(_) => {}
+                }
+                cluster.check_invariants()?;
+                for i in 0..cluster.n_gpus() {
+                    let g = cluster.gpu(GpuId(i));
+                    has_gpu::prop_assert!(
+                        g.sm_allocated() <= SM_FULL,
+                        "step {step}: GPU {i} over-allocated: {}‰",
+                        g.sm_allocated()
+                    );
+                    has_gpu::prop_assert!(
+                        g.sm_classes().len() <= MAX_SM_CLASSES,
+                        "step {step}: GPU {i} classes {:?}",
+                        g.sm_classes()
+                    );
+                    for (si, slot) in g.slots().iter().enumerate() {
+                        has_gpu::prop_assert!(
+                            slot.quota_used() <= QUOTA_FULL,
+                            "step {step}: GPU {i} slot {si} quota {}‰",
+                            slot.quota_used()
+                        );
+                    }
+                    // Per-class memory cap: accounting never exceeds the
+                    // *device's own* class capacity.
+                    has_gpu::prop_assert!(
+                        g.mem_free() >= -1.0,
+                        "step {step}: GPU {i} ({}) over-committed memory",
+                        g.class().name
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mixed_fleet_ledger_matches_per_class_slice_time_integral() {
+    // For random heterogeneous action sequences the ledger must equal the
+    // analytic per-class slice-time integral — per class AND in total, in
+    // BOTH billing modes, with each pod priced at its class's effective
+    // rate (reference price × catalog ratio), exactly as `record_applied`
+    // prices real runs.
+    const PRICE: f64 = 3600.0; // $1 per reference slice-second
+    run_prop(
+        "mixed-fleet-billing",
+        PropConfig {
+            cases: 64,
+            max_size: 40,
+            ..PropConfig::default()
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng);
+            let spec = mixed_spec();
+            let perf = PerfModel::default();
+            let mut cluster = ClusterState::from_classes(&fleet);
+            cluster.register_function(spec.clone());
+            let mut recon = Reconfigurator::new(&cluster, 7);
+            let mut fine = BillingLedger::new(BillingMode::FineGrained, PRICE);
+            let mut whole = BillingLedger::new(BillingMode::WholeGpu, PRICE);
+            // Live pods with their (class name, price ratio, sm‰, q‰).
+            let mut live: Vec<(has_gpu::cluster::PodId, String, f64, u32, u32)> = Vec::new();
+            let mut fine_ref: std::collections::BTreeMap<String, f64> = Default::default();
+            let mut whole_ref: std::collections::BTreeMap<String, f64> = Default::default();
+            let mut now = 0.0f64;
+            for _ in 0..size {
+                let dt = rng.next_f64() * 3.0;
+                for (_, class, ratio, sm, q) in &live {
+                    *fine_ref.entry(class.clone()).or_insert(0.0) +=
+                        (*sm as f64 / 1000.0) * (*q as f64 / 1000.0) * dt * ratio;
+                    *whole_ref.entry(class.clone()).or_insert(0.0) += dt * ratio;
+                }
+                now += dt;
+                let live_ids: Vec<_> = live.iter().map(|(p, ..)| *p).collect();
+                let Some(action) = random_action(rng, &spec, fleet.len(), &live_ids) else {
+                    continue;
+                };
+                match recon.apply(&mut cluster, &perf, &action, now) {
+                    Ok(Applied::PodCreated { pod, .. }) => {
+                        let p = cluster.pod(pod).expect("created");
+                        let class = cluster.gpu(p.gpu).class().clone();
+                        let price = PRICE * class.price_relative();
+                        fine.open_on(pod, &p.function, p.sm, p.quota, &class.name, price, now);
+                        whole.open_on(pod, &p.function, p.sm, p.quota, &class.name, price, now);
+                        live.push((pod, class.name.clone(), class.price_relative(), p.sm, p.quota));
+                    }
+                    Ok(Applied::QuotaSet { pod, new, .. }) => {
+                        fine.resize(pod, new, now);
+                        whole.resize(pod, new, now);
+                        let e = live.iter_mut().find(|(p, ..)| *p == pod).unwrap();
+                        e.4 = new;
+                    }
+                    Ok(Applied::PodRemoved { pod }) => {
+                        fine.close(pod, now);
+                        whole.close(pod, now);
+                        live.retain(|(p, ..)| *p != pod);
+                    }
+                    Err(_) => {}
+                }
+            }
+            let t_end = now + rng.next_f64() * 2.0;
+            for (_, class, ratio, sm, q) in &live {
+                *fine_ref.entry(class.clone()).or_insert(0.0) +=
+                    (*sm as f64 / 1000.0) * (*q as f64 / 1000.0) * (t_end - now) * ratio;
+                *whole_ref.entry(class.clone()).or_insert(0.0) += (t_end - now) * ratio;
+            }
+            let fine_meter = fine.into_meter(t_end);
+            let whole_meter = whole.into_meter(t_end);
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs()));
+            for (refs, meter, label) in [
+                (&fine_ref, &fine_meter, "fine-grained"),
+                (&whole_ref, &whole_meter, "whole-gpu"),
+            ] {
+                for (class, &expect) in refs {
+                    has_gpu::prop_assert!(
+                        close(meter.class_cost_of(class), expect),
+                        "{label} class {class}: ledger {} vs analytic {expect}",
+                        meter.class_cost_of(class)
+                    );
+                }
+                let total_ref: f64 = refs.values().sum();
+                has_gpu::prop_assert!(
+                    close(meter.total_cost(), total_ref),
+                    "{label} total: ledger {} vs analytic {total_ref}",
+                    meter.total_cost()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hybrid_plan_actions_applicable_on_mixed_fleets() {
+    // Whatever demand arrives, the class-aware hybrid scaler's actions must
+    // apply cleanly on random heterogeneous fleets and keep every
+    // invariant — the mixed-fleet extension of the homogeneous
+    // `prop_autoscaler_actions_always_applicable`.
+    run_prop(
+        "mixed-fleet-autoscaler",
+        PropConfig {
+            cases: 48,
+            max_size: 48,
+            ..Default::default()
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng);
+            let spec = spec();
+            let mut cluster = ClusterState::from_classes(&fleet);
+            cluster.register_function(spec.clone());
+            let mut recon = Reconfigurator::new(&cluster, 21);
+            let pm = PerfModel::default();
+            let pred = OraclePredictor::default();
+            let mut scaler = HybridAutoscaler::new(HybridConfig::default());
+            let mut now = 0.0;
+            for _ in 0..size * 2 {
+                now += 1.0;
+                let demand = rng.uniform(0.0, 600.0);
+                let actions = scaler.plan(&spec, demand, &cluster, &pred, now);
+                for a in &actions {
+                    recon
+                        .apply(&mut cluster, &pm, a, now)
+                        .map_err(|e| format!("fleet {fleet:?}: action {a:?} failed: {e}"))?;
+                }
+                cluster.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

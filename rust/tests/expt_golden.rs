@@ -1,4 +1,5 @@
-//! Golden byte-identity for the platform-registry redesign.
+//! Golden byte-identity for the platform-registry redesign **and** the
+//! GPU-class / fleet extension.
 //!
 //! The registry replaced the closed `expt::Platform` enum; the hard API
 //! contract is that for the stock trio (`has-gpu`, `kserve`, `fast-gshare`)
@@ -8,13 +9,22 @@
 //! canonical preset-major cell walk — runs both paths on the same grid, and
 //! compares the full pretty-printed export byte for byte.
 //!
-//! A second contract rides along: ablation platforms *extend* the grid
-//! without perturbing the stock cells they share it with.
+//! The frozen path is doubly golden since the `GpuClass` catalog landed: it
+//! still builds its clusters through the **pre-fleet homogeneous
+//! constructor** (`ClusterState::new` inside `run_sim`'s empty-fleet path)
+//! while the registry path routes every cell through
+//! `FleetSpec::classes_for` + `ClusterState::from_classes` — so the byte
+//! comparison also pins "`uniform-v100` is an extension, never a
+//! perturbation".
+//!
+//! Two more contracts ride along: ablation platforms *extend* the grid
+//! without perturbing the stock cells they share it with, and adding a
+//! mixed fleet to the fleet axis perturbs no uniform cell.
 
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
 use has_gpu::baselines::{FastGSharePolicy, KServePolicy};
 use has_gpu::expt::{
-    experiment_functions, CellResult, MatrixReport, ScenarioCell, ScenarioMatrix,
+    experiment_functions, CellResult, MatrixReport, ScenarioCell, ScenarioMatrix, DEFAULT_FLEET,
 };
 use has_gpu::metrics::BillingMode;
 use has_gpu::perf::PerfModel;
@@ -96,6 +106,7 @@ fn frozen_run(presets: &[Preset]) -> MatrixReport {
                     platform: platform.name().to_string(),
                     preset,
                     seed,
+                    fleet: DEFAULT_FLEET.to_string(),
                 };
                 cells.push(CellResult::from_report(&cell, &fns, &report));
             }
@@ -105,6 +116,7 @@ fn frozen_run(presets: &[Preset]) -> MatrixReport {
         seconds: SECONDS,
         gpus: GPUS,
         rps: RPS,
+        fleets: vec![DEFAULT_FLEET.to_string()],
         cells,
     }
 }
@@ -177,5 +189,104 @@ fn ablation_platforms_extend_the_grid_without_perturbing_stock_cells() {
     assert_eq!(
         json::fingerprint(&trio.to_json()),
         json::fingerprint(&again.to_json())
+    );
+}
+
+fn fleet_matrix(fleets: &[&str]) -> ScenarioMatrix {
+    ScenarioMatrix {
+        fleets: fleets.iter().map(|s| s.to_string()).collect(),
+        ..registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+    }
+}
+
+#[test]
+fn mixed_fleet_extension_perturbs_no_uniform_cells() {
+    // The heterogeneity contract: adding a mixed fleet to the grid's fleet
+    // axis leaves every uniform-v100 cell — and the summary rows derived
+    // from them — byte-identical, while the mixed cells run end-to-end
+    // with per-class columns.
+    let uniform = fleet_matrix(&[DEFAULT_FLEET]).run(2);
+    let extended = fleet_matrix(&[DEFAULT_FLEET, "mixed-a100-v100-t4"]).run(2);
+    assert_eq!(extended.cells.len(), uniform.cells.len() * 2);
+    // Uniform cells are the byte-identical prefix (fleet-major cell order).
+    let uni_cells: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.fleet == DEFAULT_FLEET)
+        .collect();
+    assert_eq!(uni_cells.len(), uniform.cells.len());
+    for (a, b) in uniform.cells.iter().zip(uni_cells) {
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "uniform cell ({}, {}, {}) perturbed by the mixed fleet",
+            a.platform,
+            a.preset.name(),
+            a.seed
+        );
+    }
+    // Uniform summary rows are identical too.
+    let uni_summary: Vec<_> = extended
+        .summary()
+        .into_iter()
+        .filter(|r| r.fleet == DEFAULT_FLEET)
+        .collect();
+    assert_eq!(uniform.summary(), uni_summary);
+    // The mixed cells actually ran: traffic served, per-class pricing in
+    // the ledger (class costs sum to the cell total), every platform
+    // represented.
+    let mixed: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.fleet == "mixed-a100-v100-t4")
+        .collect();
+    assert_eq!(mixed.len(), uniform.cells.len());
+    for c in &mixed {
+        assert!(c.served > 0, "{} served nothing on the mixed fleet", c.platform);
+        assert!(!c.classes.is_empty(), "{} exported no class columns", c.platform);
+        let class_cost: f64 = c.classes.iter().map(|k| k.cost).sum();
+        assert!(
+            (class_cost - c.total_cost).abs() < 1e-9,
+            "{}: class costs {class_cost} != total {}",
+            c.platform,
+            c.total_cost
+        );
+        let class_gpus: usize = c.classes.iter().map(|k| k.gpus).sum();
+        assert_eq!(class_gpus, GPUS);
+    }
+    for p in ["has-gpu", "kserve", "fast-gshare"] {
+        assert!(mixed.iter().any(|c| c.platform == p), "missing {p}");
+    }
+    // Headline ratios exist per fleet, and the whole fleet grid is --jobs
+    // invariant (the CI fleet smoke's in-process twin).
+    let ratios = extended.ratios_vs_has_gpu();
+    assert!(ratios.iter().any(|r| r.fleet == "mixed-a100-v100-t4"));
+    assert!(ratios.iter().any(|r| r.fleet == DEFAULT_FLEET));
+    let again = fleet_matrix(&[DEFAULT_FLEET, "mixed-a100-v100-t4"]).run(1);
+    assert_eq!(
+        json::fingerprint(&extended.to_json()),
+        json::fingerprint(&again.to_json())
+    );
+    // And the fleet export round-trips losslessly.
+    let back = MatrixReport::from_json(&extended.to_json()).unwrap();
+    assert_eq!(back, extended);
+    assert_eq!(
+        back.to_json().to_string_pretty(),
+        extended.to_json().to_string_pretty()
+    );
+}
+
+#[test]
+fn uniform_fleet_export_is_byte_identical_to_the_pre_fleet_path() {
+    // Belt-and-braces for the fleet axis specifically: the frozen pre-fleet
+    // construction (homogeneous ClusterState::new path, no fleet axis)
+    // versus the registry path running the explicit `uniform-v100` fleet
+    // through FleetSpec::classes_for + ClusterState::from_classes. Full
+    // export, byte for byte.
+    let golden = frozen_run(&[Preset::Standard]).to_json().to_string_pretty();
+    let via_fleet = fleet_matrix(&[DEFAULT_FLEET]).run(3).to_json().to_string_pretty();
+    assert_eq!(
+        golden, via_fleet,
+        "uniform-v100 BENCH_sim.json must not change under the GpuClass catalog"
     );
 }

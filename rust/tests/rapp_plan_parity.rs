@@ -178,8 +178,14 @@ fn plan_cached_extraction_bit_identical_to_seed_extract() {
                     let seed = seed_reference::extract(&g, batch, sm, quota, &pm, mode);
                     let fresh = extract(&g, batch, sm, quota, &pm, mode);
                     plan.fill_graph_feats(sm, quota, &mut gf);
-                    assert_eq!(gf.len(), seed.graph_feats.len());
-                    assert_eq!(fresh.graph_feats.len(), seed.graph_feats.len());
+                    // The GpuClass catalog appended exactly one trailing
+                    // graph column (the class throughput factor, 1.0 on the
+                    // reference class); every seed-era column keeps its
+                    // index and its bits.
+                    assert_eq!(gf.len(), seed.graph_feats.len() + 1);
+                    assert_eq!(fresh.graph_feats.len(), seed.graph_feats.len() + 1);
+                    assert_eq!(gf.last().unwrap().to_bits(), 1.0f32.to_bits());
+                    assert_eq!(fresh.graph_feats.last().unwrap().to_bits(), 1.0f32.to_bits());
                     for (c, ((a, b), s)) in gf
                         .iter()
                         .zip(&fresh.graph_feats)
