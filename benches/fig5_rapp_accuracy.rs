@@ -13,7 +13,7 @@ mod common;
 use has_gpu::model::zoo::{zoo_graph, ZooModel, ALL_ZOO};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::dippm::DippmPredictor;
-use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::rapp::{LatencyPredictor, PredictQuery, RappPredictor};
 use has_gpu::util::bench::ascii_table;
 use has_gpu::util::json;
 use std::path::PathBuf;
@@ -43,8 +43,8 @@ fn main() {
         (32, 1.0, 0.3),
     ] {
         let truth = pm.latency(&g, batch, sm, quota) * 1e3;
-        let p_r = rapp.latency(&g, batch, sm, quota) * 1e3;
-        let p_d = dippm.latency(&g, batch, sm, quota) * 1e3;
+        let p_r = rapp.latency(PredictQuery::new(&g, batch, sm, quota)) * 1e3;
+        let p_d = dippm.latency(PredictQuery::new(&g, batch, sm, quota)) * 1e3;
         rows.push(vec![
             format!("b{batch} sm{:.0}% q{:.0}%", sm * 100.0, quota * 100.0),
             format!("{truth:.2}"),
@@ -89,8 +89,9 @@ fn main() {
             for &sm in &[0.15f64, 0.4, 0.8] {
                 for &q in &[0.25f64, 0.6, 1.0] {
                     let truth = pm.latency(&g, batch, sm, q);
-                    e_rapp.push((rapp.latency(&g, batch, sm, q) - truth).abs() / truth);
-                    e_dippm.push((dippm.latency(&g, batch, sm, q) - truth).abs() / truth);
+                    let query = PredictQuery::new(&g, batch, sm, q);
+                    e_rapp.push((rapp.latency(query) - truth).abs() / truth);
+                    e_dippm.push((dippm.latency(query) - truth).abs() / truth);
                 }
             }
         }

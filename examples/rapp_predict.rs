@@ -10,7 +10,7 @@ use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::dippm::DippmPredictor;
 use has_gpu::rapp::features::{extract, FeatureMode};
-use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::rapp::{LatencyPredictor, PredictQuery, RappPredictor};
 use has_gpu::runtime::{PjrtRapp, PjrtRuntime};
 use has_gpu::util::cli::Cli;
 use std::path::PathBuf;
@@ -42,8 +42,9 @@ fn main() -> anyhow::Result<()> {
     let dippm = DippmPredictor::load(&dir.join("dippm_weights.json"), pm.clone())?;
 
     let truth = pm.latency(&g, batch, sm, quota);
-    let p_rapp = rapp.latency(&g, batch, sm, quota);
-    let p_dippm = dippm.latency(&g, batch, sm, quota);
+    let query = PredictQuery::new(&g, batch, sm, quota);
+    let p_rapp = rapp.latency(query);
+    let p_dippm = dippm.latency(query);
 
     // The same prediction through the AOT-compiled HLO (PJRT path).
     let runtime = Arc::new(PjrtRuntime::new()?);
@@ -75,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "  throughput capability: {:8.1} req/s  (paper: C = batch x quota / t_raw)",
-        rapp.capacity(&g, batch, sm, quota)
+        rapp.capacity(query)
     );
     Ok(())
 }

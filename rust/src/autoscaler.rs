@@ -18,7 +18,7 @@
 //! The scaler emits [`ScalingAction`]s; the GPU Re-configurator applies them.
 
 use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, ScalingAction};
-use crate::rapp::{min_feasible_quota, LatencyPredictor};
+use crate::rapp::{min_feasible_quota, LatencyPredictor, PredictQuery};
 use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
 use std::collections::BTreeMap;
 
@@ -221,7 +221,7 @@ impl HybridAutoscaler {
 
     /// Evaluate the whole quota lattice `{step, 2·step, …}` for one
     /// (function, sm, class factor) in a single
-    /// [`LatencyPredictor::latency_batch_at`] pass (one matmul-shaped sweep
+    /// [`LatencyPredictor::latency_batch`] pass (one lane-parallel sweep
     /// for plan-cached predictors, one table probe per level for the run
     /// cache), filling `self.lat_buf` so the bisections below read prewarmed
     /// values. The decision procedure stays [`min_feasible_quota`] over
@@ -239,7 +239,11 @@ impl HybridAutoscaler {
         self.q_buf.clear();
         self.q_buf
             .extend((1..=n).map(|i| crate::vgpu::quota_to_f64(step * i as u32)));
-        predictor.latency_batch_at(&f.graph, f.batch, smf, &self.q_buf, factor, &mut self.lat_buf);
+        predictor.latency_batch(
+            PredictQuery::new(&f.graph, f.batch, smf, 1.0).with_factor(factor),
+            &self.q_buf,
+            &mut self.lat_buf,
+        );
     }
 
     /// Pod capacity C_{P_i} = RaPP(f, b_i, s_i, q_i) (items/s) on the pod's
@@ -250,12 +254,14 @@ impl HybridAutoscaler {
         factor: f64,
         predictor: &dyn LatencyPredictor,
     ) -> f64 {
-        predictor.capacity_at(
-            &f.graph,
-            pod.batch,
-            crate::vgpu::sm_to_f64(pod.sm),
-            crate::vgpu::quota_to_f64(pod.quota),
-            factor,
+        predictor.capacity(
+            PredictQuery::new(
+                &f.graph,
+                pod.batch,
+                crate::vgpu::sm_to_f64(pod.sm),
+                crate::vgpu::quota_to_f64(pod.quota),
+            )
+            .with_factor(factor),
         )
     }
 
@@ -312,23 +318,17 @@ impl HybridAutoscaler {
             // lattice; the bisections below read the prewarmed values.
             self.fill_latency_lattice(f, smf, factor, predictor);
             let lat = &self.lat_buf;
-            let cap_full = predictor.capacity_at(
-                &f.graph,
-                f.batch,
-                smf,
-                crate::vgpu::quota_to_f64(QUOTA_FULL),
-                factor,
+            let cap_full = predictor.capacity(
+                PredictQuery::new(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(QUOTA_FULL))
+                    .with_factor(factor),
             );
             if cap_full > fallback.0 {
                 fallback = (cap_full, sm, QUOTA_FULL);
             }
             let q_cap = min_feasible_quota(step, QUOTA_FULL, |q| {
-                predictor.capacity_at(
-                    &f.graph,
-                    f.batch,
-                    smf,
-                    crate::vgpu::quota_to_f64(q),
-                    factor,
+                predictor.capacity(
+                    PredictQuery::new(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q))
+                        .with_factor(factor),
                 ) >= delta_r
             });
             let bound = f.slo * self.cfg.slo_margin;
@@ -346,7 +346,8 @@ impl HybridAutoscaler {
                 // can exceed the bisected SLO point (capacity needs no
                 // re-check — it is linear in quota by construction).
                 if q <= self.cfg.headroom_quota
-                    && predictor.latency_at(&f.graph, f.batch, smf, qf, factor)
+                    && predictor
+                        .latency(PredictQuery::new(&f.graph, f.batch, smf, qf).with_factor(factor))
                         <= f.slo * self.cfg.slo_margin
                 {
                     let cost = smf * qf;
@@ -424,7 +425,9 @@ impl ScalingPolicy for HybridAutoscaler {
                 return *ok;
             }
             let ok = mem_need <= c.mem_cap
-                && predictor.latency_at(&f.graph, f.batch, 1.0, 1.0, c.throughput) <= slo_bound;
+                && predictor
+                    .latency(PredictQuery::new(&f.graph, f.batch, 1.0, 1.0).with_factor(c.throughput))
+                    <= slo_bound;
             feas_cache.push((c.name.clone(), ok));
             ok
         };
@@ -452,12 +455,9 @@ impl ScalingPolicy for HybridAutoscaler {
                 while pod.quota + cfg.quota_step * (n + 1) <= a_q && delta_r - gained > 0.0 {
                     n += 1;
                     let q_new = pod.quota + cfg.quota_step * n;
-                    let cap_new = predictor.capacity_at(
-                        &f.graph,
-                        pod.batch,
-                        smf,
-                        crate::vgpu::quota_to_f64(q_new),
-                        pod_factor,
+                    let cap_new = predictor.capacity(
+                        PredictQuery::new(&f.graph, pod.batch, smf, crate::vgpu::quota_to_f64(q_new))
+                            .with_factor(pod_factor),
                     );
                     gained = cap_new - base_cap;
                 }
@@ -495,12 +495,9 @@ impl ScalingPolicy for HybridAutoscaler {
                     };
                     if let Some((s_max, q_max)) = slot {
                         let smf = crate::vgpu::sm_to_f64(s_max);
-                        let c_max = predictor.capacity_at(
-                            &f.graph,
-                            f.batch,
-                            smf,
-                            crate::vgpu::quota_to_f64(q_max),
-                            factor,
+                        let c_max = predictor.capacity(
+                            PredictQuery::new(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q_max))
+                                .with_factor(factor),
                         );
                         if c_max > delta_r {
                             // Find the smallest quota step covering ΔR (lines
@@ -509,12 +506,9 @@ impl ScalingPolicy for HybridAutoscaler {
                             let floor =
                                 self.min_slo_quota(f, s_max, predictor, cfg.slo_margin, factor);
                             let q_need = min_feasible_quota(cfg.quota_step, q_max, |q| {
-                                predictor.capacity_at(
-                                    &f.graph,
-                                    f.batch,
-                                    smf,
-                                    crate::vgpu::quota_to_f64(q),
-                                    factor,
+                                predictor.capacity(
+                                    PredictQuery::new(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q))
+                                        .with_factor(factor),
                                 ) >= delta_r
                             });
                             let quota = match q_need {
@@ -531,12 +525,9 @@ impl ScalingPolicy for HybridAutoscaler {
                                 batch: f.batch,
                                 new_gpu: false,
                             });
-                            delta_r -= predictor.capacity_at(
-                                &f.graph,
-                                f.batch,
-                                smf,
-                                crate::vgpu::quota_to_f64(quota),
-                                factor,
+                            delta_r -= predictor.capacity(
+                                PredictQuery::new(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(quota))
+                                    .with_factor(factor),
                             );
                         }
                     }
@@ -603,12 +594,9 @@ impl ScalingPolicy for HybridAutoscaler {
                 let mut freed = 0.0;
                 while vertical && pod.quota >= floor + cfg.quota_step * (n + 1) {
                     let q_new = pod.quota - cfg.quota_step * (n + 1);
-                    let cap_new = predictor.capacity_at(
-                        &f.graph,
-                        pod.batch,
-                        smf,
-                        crate::vgpu::quota_to_f64(q_new),
-                        pod_factor,
+                    let cap_new = predictor.capacity(
+                        PredictQuery::new(&f.graph, pod.batch, smf, crate::vgpu::quota_to_f64(q_new))
+                            .with_factor(pod_factor),
                     );
                     if c_remaining - (base_cap - cap_new) < target {
                         break;
@@ -734,7 +722,7 @@ mod tests {
             place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 0.3));
         // Demand slightly above capacity: a quota bump suffices.
         let actions = hs.plan(&spec, cap * 1.3, &c, &pred, 10.0);
         assert!(
@@ -750,7 +738,7 @@ mod tests {
         place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 1.0));
         let actions = hs.plan(&spec, cap * 1.5, &c, &pred, 10.0);
         assert!(
             actions
@@ -776,7 +764,7 @@ mod tests {
         place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 1000, 1000, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let cap = pred.capacity(&spec.graph, 8, 1.0, 1.0);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 1.0, 1.0));
         let actions = hs.plan(&spec, cap * 3.0, &c, &pred, 10.0);
         let create = actions
             .iter()
@@ -795,7 +783,7 @@ mod tests {
         place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 500, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.5);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 0.5));
         // R = 0.6·C: between β=0.4 and α=0.8 ⇒ no actions.
         let actions = hs.plan(&spec, cap * 0.6, &c, &pred, 10.0);
         assert!(actions.is_empty(), "{actions:?}");
@@ -808,7 +796,7 @@ mod tests {
             place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
         let pred = OraclePredictor::default();
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 1.0));
         // Feed the filter a steady low rate so the estimate is low.
         for t in 0..20 {
             let _ = hs.plan(&spec, cap * 0.05, &c, &pred, t as f64);
@@ -855,7 +843,7 @@ mod tests {
         let pred = OraclePredictor::default();
         // Pick an SLO between the q=0.3 and q=0.4 latencies so the margin-1.0
         // floor and the default-margin floor land on different lattice steps.
-        spec.slo = pred.latency(&spec.graph, 8, 0.5, 0.35);
+        spec.slo = pred.latency(PredictQuery::new(&spec.graph, 8, 0.5, 0.35));
         let mut hs = HybridAutoscaler::new(HybridConfig::default());
         let relaxed_floor = hs.min_slo_quota(&spec, 500, &pred, 1.0, 1.0).max(hs.cfg.min_quota);
         let strict_floor = hs
@@ -895,7 +883,8 @@ mod tests {
         // Full-quota pod: vertical scale-up is exhausted, so each tick walks
         // the horizontal paths (min_slo_quota + most_efficient_slice).
         place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
-        let demand = OraclePredictor::default().capacity(&spec.graph, 8, 0.5, 1.0) * 40.0;
+        let demand =
+            OraclePredictor::default().capacity(PredictQuery::new(&spec.graph, 8, 0.5, 1.0)) * 40.0;
         let ticks = 20;
 
         let raw = CountingPredictor::new(OraclePredictor::default());
@@ -931,8 +920,12 @@ mod tests {
             let smf = crate::vgpu::sm_to_f64(sm);
             for &margin in &[0.75, 1.0] {
                 let want = min_feasible_quota(hs.cfg.quota_step, QUOTA_FULL, |q| {
-                    pred.latency(&spec.graph, spec.batch, smf, crate::vgpu::quota_to_f64(q))
-                        <= spec.slo * margin
+                    pred.latency(PredictQuery::new(
+                        &spec.graph,
+                        spec.batch,
+                        smf,
+                        crate::vgpu::quota_to_f64(q),
+                    )) <= spec.slo * margin
                 })
                 .unwrap_or(QUOTA_FULL);
                 assert_eq!(hs.min_slo_quota(&spec, sm, &pred, margin, 1.0), want, "sm={sm}");
@@ -959,7 +952,7 @@ mod tests {
         // With a pod at full quota (vertical runway exhausted), even huge
         // demand must not add replicas.
         place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 1000, 8, 0.0).unwrap();
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 1.0);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 1.0));
         for t in 1..20 {
             let actions = hs.plan(&spec, cap * 10.0, &c, &pred, t as f64);
             assert!(
@@ -984,7 +977,7 @@ mod tests {
             ..HybridConfig::default()
         };
         let mut hs = HybridAutoscaler::new(cfg);
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 0.3));
         let actions = hs.plan(&spec, cap * 1.3, &c, &pred, 10.0);
         assert!(
             matches!(actions.as_slice(), [ScalingAction::SetQuota { pod: p, quota }] if *p == pod && *quota > 300),
@@ -1003,7 +996,7 @@ mod tests {
             ..HybridConfig::default()
         };
         let mut hs = HybridAutoscaler::named("has-horizontal-only", cfg);
-        let cap = pred.capacity(&spec.graph, 8, 0.5, 0.3);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 0.3));
         let actions = hs.plan(&spec, cap * 1.5, &c, &pred, 10.0);
         assert!(
             !actions.iter().any(|a| matches!(a, ScalingAction::SetQuota { .. })),
@@ -1096,8 +1089,10 @@ mod tests {
         }
         // SLO between the two class clocks: the T4 cannot meet it even at
         // full resources, so placement pays up for the A100.
-        let lat_a100 = pred.latency_at(&spec.graph, spec.batch, 1.0, 1.0, 2.0);
-        let lat_t4 = pred.latency_at(&spec.graph, spec.batch, 1.0, 1.0, 0.4);
+        let lat_a100 =
+            pred.latency(PredictQuery::new(&spec.graph, spec.batch, 1.0, 1.0).with_factor(2.0));
+        let lat_t4 =
+            pred.latency(PredictQuery::new(&spec.graph, spec.batch, 1.0, 1.0).with_factor(0.4));
         assert!(lat_t4 > lat_a100);
         spec.slo = (lat_a100 + lat_t4) / 2.0 / hs.cfg.slo_margin;
         let mut hs2 = HybridAutoscaler::new(HybridConfig::default());

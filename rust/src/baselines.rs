@@ -14,7 +14,7 @@
 
 use crate::autoscaler::ScalingPolicy;
 use crate::cluster::{ClusterState, FunctionSpec, GpuId, Pod, PodPhase, ScalingAction};
-use crate::rapp::{min_feasible_quota, LatencyPredictor};
+use crate::rapp::{min_feasible_quota, LatencyPredictor, PredictQuery};
 use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, SM_FULL};
 use std::collections::BTreeMap;
 
@@ -36,12 +36,14 @@ fn class_feasible(
     class: &GpuClass,
 ) -> bool {
     f.graph.memory_bytes(f.batch) <= class.mem_cap
-        && predictor.latency_at(
-            &f.graph,
-            f.batch,
-            crate::vgpu::sm_to_f64(sm),
-            crate::vgpu::quota_to_f64(quota),
-            class.throughput,
+        && predictor.latency(
+            PredictQuery::new(
+                &f.graph,
+                f.batch,
+                crate::vgpu::sm_to_f64(sm),
+                crate::vgpu::quota_to_f64(quota),
+            )
+            .with_factor(class.throughput),
         ) <= f.slo
 }
 
@@ -138,7 +140,8 @@ impl ScalingPolicy for KServePolicy {
             .last()
             .map(|&g| cluster.gpu(g).throughput())
             .unwrap_or(1.0);
-        let cap = predictor.capacity_at(&f.graph, f.batch, 1.0, 1.0, next_factor);
+        let cap =
+            predictor.capacity(PredictQuery::new(&f.graph, f.batch, 1.0, 1.0).with_factor(next_factor));
         let desired = ((rate / (cap * self.target_util)).ceil() as usize).max(1);
         let current = pods.len();
         let mut actions = Vec::new();
@@ -219,8 +222,12 @@ impl FastGSharePolicy {
         let mut fallback = (0.0f64, SM_FULL, QUOTA_FULL);
         for sm in (100..=SM_FULL).step_by(100) {
             let smf = crate::vgpu::sm_to_f64(sm);
-            let cap_full =
-                predictor.capacity(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(QUOTA_FULL));
+            let cap_full = predictor.capacity(PredictQuery::new(
+                &f.graph,
+                f.batch,
+                smf,
+                crate::vgpu::quota_to_f64(QUOTA_FULL),
+            ));
             if cap_full > fallback.0 {
                 fallback = (cap_full, sm, QUOTA_FULL);
             }
@@ -229,12 +236,17 @@ impl FastGSharePolicy {
             // (the source of its persistent violations under fluctuation,
             // paper §4.3).
             let Some(q) = min_feasible_quota(100, QUOTA_FULL, |q| {
-                predictor.latency(&f.graph, f.batch, smf, crate::vgpu::quota_to_f64(q)) <= f.slo
+                predictor.latency(PredictQuery::new(
+                    &f.graph,
+                    f.batch,
+                    smf,
+                    crate::vgpu::quota_to_f64(q),
+                )) <= f.slo
             }) else {
                 continue;
             };
             let qf = crate::vgpu::quota_to_f64(q);
-            let cap = predictor.capacity(&f.graph, f.batch, smf, qf);
+            let cap = predictor.capacity(PredictQuery::new(&f.graph, f.batch, smf, qf));
             let eff = cap / (smf * qf);
             if best.map_or(true, |(e, _, _)| eff > e) {
                 best = Some((eff, sm, q));
@@ -302,12 +314,12 @@ impl ScalingPolicy for FastGSharePolicy {
         // profiled on the reference class — FaST-GShare's offline step knows
         // one device; mixed fleets only reorder *where* replicas land.
         let (sm, quota) = self.slice_for(f, predictor);
-        let slice_cap = predictor.capacity(
+        let slice_cap = predictor.capacity(PredictQuery::new(
             &f.graph,
             f.batch,
             crate::vgpu::sm_to_f64(sm),
             crate::vgpu::quota_to_f64(quota),
-        );
+        ));
         let pods: Vec<&Pod> = cluster
             .pods_of(&f.name)
             .into_iter()
@@ -399,7 +411,7 @@ mod tests {
             .unwrap();
         let pred = OraclePredictor::default();
         let mut ks = KServePolicy::default();
-        let cap = pred.capacity(&spec.graph, 8, 1.0, 1.0);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 1.0, 1.0));
         // Push the EWMA up with repeated high observations.
         let mut actions = Vec::new();
         for t in 0..20 {
@@ -423,7 +435,7 @@ mod tests {
         }
         let pred = OraclePredictor::default();
         let mut ks = KServePolicy::default();
-        let cap = pred.capacity(&spec.graph, 8, 1.0, 1.0);
+        let cap = pred.capacity(PredictQuery::new(&spec.graph, 8, 1.0, 1.0));
         let actions = ks.plan(&spec, cap * 100.0, &c, &pred, 0.0);
         assert!(actions.is_empty(), "no idle GPUs left: {actions:?}");
     }
@@ -439,12 +451,12 @@ mod tests {
         let _ = fg.plan(&spec, 50.0, &c, &pred, 1.0);
         assert_eq!(fg.slices[&spec.name], slice);
         // SLO-feasible.
-        let lat = pred.latency(
+        let lat = pred.latency(PredictQuery::new(
             &spec.graph,
             spec.batch,
             crate::vgpu::sm_to_f64(slice.0),
             crate::vgpu::quota_to_f64(slice.1),
-        );
+        ));
         assert!(lat <= spec.slo, "slice {slice:?} lat {lat}");
         // Fine-grained (not a whole GPU).
         assert!(slice.0 < SM_FULL || slice.1 < QUOTA_FULL);
@@ -462,12 +474,12 @@ mod tests {
         }
         // Demand forcing a second replica.
         let slice = fg.slices[&spec.name];
-        let cap = pred.capacity(
+        let cap = pred.capacity(PredictQuery::new(
             &spec.graph,
             spec.batch,
             crate::vgpu::sm_to_f64(slice.0),
             crate::vgpu::quota_to_f64(slice.1),
-        );
+        ));
         let mut a2 = Vec::new();
         for t in 1..30 {
             a2 = fg.plan(&spec, cap * 1.9, &c, &pred, t as f64);
@@ -510,8 +522,9 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // SLO the T4 cannot meet even as a whole GPU: next-cheapest class.
-        let lat_t4 = pred.latency_at(&spec.graph, spec.batch, 1.0, 1.0, 0.4);
-        let lat_v100 = pred.latency(&spec.graph, spec.batch, 1.0, 1.0);
+        let lat_t4 =
+            pred.latency(PredictQuery::new(&spec.graph, spec.batch, 1.0, 1.0).with_factor(0.4));
+        let lat_v100 = pred.latency(PredictQuery::new(&spec.graph, spec.batch, 1.0, 1.0));
         spec.slo = (lat_v100 + lat_t4) / 2.0;
         let mut ks2 = KServePolicy::default();
         let actions = ks2.plan(&spec, 10.0, &c, &pred, 0.0);

@@ -632,13 +632,14 @@ mod tests {
     #[test]
     fn predictor_selectors_build_working_predictors() {
         use crate::model::zoo::{zoo_graph, ZooModel};
+        use crate::rapp::PredictQuery;
         let g = zoo_graph(ZooModel::MobileNetV2);
         for sel in [PredictorSel::Oracle, PredictorSel::Rapp, PredictorSel::Dippm] {
             let p = sel.build();
-            let l = p.latency(&g, 4, 0.5, 0.5);
+            let l = p.latency(PredictQuery::new(&g, 4, 0.5, 0.5));
             assert!(l.is_finite() && l > 0.0, "{sel:?} latency {l}");
             // Deterministic across fresh builds (artifacts or seeded fallback).
-            assert_eq!(sel.build().latency(&g, 4, 0.5, 0.5), l, "{sel:?}");
+            assert_eq!(sel.build().latency(PredictQuery::new(&g, 4, 0.5, 0.5)), l, "{sel:?}");
         }
     }
 

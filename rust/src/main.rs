@@ -9,7 +9,7 @@ use has_gpu::expt::{
 };
 use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
 use has_gpu::perf::PerfModel;
-use has_gpu::rapp::{LatencyPredictor, RappPredictor};
+use has_gpu::rapp::{LatencyPredictor, PredictQuery, RappPredictor};
 use has_gpu::util::cli::Cli;
 use has_gpu::util::json;
 use has_gpu::workload::TraceGen;
@@ -243,12 +243,13 @@ fn predict(argv: Vec<String>) -> anyhow::Result<()> {
     println!("ground truth: {:.3} ms", truth * 1e3);
     if dir.join("rapp_weights.json").exists() {
         let rapp = RappPredictor::load(&dir.join("rapp_weights.json"), pm.clone())?;
-        let p = rapp.latency(&g, batch, sm, quota);
+        let q = PredictQuery::new(&g, batch, sm, quota);
+        let p = rapp.latency(q);
         println!(
             "RaPP:         {:.3} ms ({:+.1}%)  capacity {:.1} req/s",
             p * 1e3,
             (p / truth - 1.0) * 100.0,
-            rapp.capacity(&g, batch, sm, quota)
+            rapp.capacity(q)
         );
     } else {
         println!("(no artifacts — run `make artifacts` for RaPP predictions)");

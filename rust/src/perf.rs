@@ -126,10 +126,12 @@ impl PerfModel {
 
     /// Steady-state throughput capacity (items/s) of a pod running
     /// back-to-back batches: the pod holds fraction `q` of its partition's
-    /// time, so capacity = batch · q / t_raw.
+    /// time, so capacity = batch · q / t_raw. Delegates to the class
+    /// surface at factor 1.0, mirroring [`PerfModel::latency`] — `d / 1.0`
+    /// is exact in IEEE 754, and the capacity formula lives in exactly one
+    /// place ([`PerfModel::capacity_class`]).
     pub fn capacity(&self, g: &OpGraph, batch: u32, sm: f64, q: f64) -> f64 {
-        let t_raw = self.raw_graph_time(g, batch, sm);
-        batch as f64 * q / t_raw
+        self.capacity_class(g, batch, sm, q, 1.0)
     }
 
     /// [`PerfModel::latency`] on a device class with relative throughput

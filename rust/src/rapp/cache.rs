@@ -6,14 +6,16 @@
 //! Every allocation the substrate can express lives on the per-mille lattice
 //! ([`crate::vgpu::SmMille`] / [`crate::vgpu::QuotaMille`]), so predictor
 //! queries from the scaling hot path only ever hit lattice points.
-//! [`CachedPredictor`] keys on `(graph, batch, sm‰, quota‰)` and evaluates
-//! the inner predictor **at the quantized point**, so a cached run is
-//! bit-identical to an uncached one for lattice inputs (the `--jobs`
+//! [`CachedPredictor`] keys on `(graph, batch, sm‰, quota‰, factor‰)` — the
+//! GPU-class factor is **part of the key type** ([`LatticeKey`]), not a
+//! side-table, so two classes can never alias onto one cache line — and
+//! evaluates the inner predictor **at the quantized point**, so a cached run
+//! is bit-identical to an uncached one for lattice inputs (the `--jobs`
 //! byte-identical export guarantee is preserved). The cache is shared by
 //! [`crate::autoscaler::HybridAutoscaler`], the [`crate::baselines`]
 //! policies, and the simulator's dispatch path — one table per run.
 
-use super::LatencyPredictor;
+use super::{LatencyPredictor, PredictQuery};
 use crate::model::OpGraph;
 use crate::vgpu::QuotaMille;
 use std::collections::HashMap;
@@ -25,15 +27,65 @@ fn mille(x: f64) -> u32 {
     (x * 1000.0).round() as u32
 }
 
+/// A query quantized to the per-mille lattice — everything that identifies a
+/// cache line except the graph (the outer map level keys on the name).
+/// `factor` is folded into the key itself: reference-class queries carry
+/// `f_m == 1000`, class queries their own cell, and no future factor-varying
+/// caller can collide two classes.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct LatticeKey {
+    batch: u32,
+    sm_m: u32,
+    q_m: u32,
+    f_m: u32,
+}
+
+impl LatticeKey {
+    fn new(q: &PredictQuery) -> Self {
+        let key = LatticeKey {
+            batch: q.batch,
+            sm_m: mille(q.sm),
+            q_m: mille(q.quota),
+            f_m: mille(q.factor),
+        };
+        // The quantization must round-trip: evaluating the inner predictor
+        // at `key.query(..)` and quantizing *that* query again must land on
+        // the same cell, or the cached value would not be a pure function
+        // of the key.
+        debug_assert!(
+            mille(key.sm_m as f64 / 1000.0) == key.sm_m
+                && mille(key.q_m as f64 / 1000.0) == key.q_m
+                && mille(key.f_m as f64 / 1000.0) == key.f_m,
+            "per-mille quantization failed to round-trip: {key:?}"
+        );
+        key
+    }
+
+    /// The exact lattice-point query this cell memoises.
+    fn query<'g>(&self, graph: &'g OpGraph) -> PredictQuery<'g> {
+        PredictQuery {
+            graph,
+            batch: self.batch,
+            sm: self.sm_m as f64 / 1000.0,
+            quota: self.q_m as f64 / 1000.0,
+            factor: self.f_m as f64 / 1000.0,
+        }
+    }
+}
+
 /// Memoizing wrapper: latency predictions cached per
-/// `(graph, batch, sm‰, quota‰)`. Capacity queries go through the default
-/// [`LatencyPredictor::capacity`] (one full-quota latency lookup), so a whole
-/// quota sweep at fixed sm costs a single underlying predictor invocation.
+/// `(graph, batch, sm‰, quota‰, factor‰)`. Capacity queries go through the
+/// default [`LatencyPredictor::capacity`] (one full-quota latency lookup), so
+/// a whole quota sweep at fixed sm costs a single underlying invocation.
 ///
-/// The table is two-level (graph name → lattice point → latency) so a cache
+/// The table is two-level (graph name → lattice key → latency) so a cache
 /// hit — the steady state of the dispatch and plan hot paths — costs one
 /// lock and two hash probes with **no allocation**; the graph-name `String`
 /// is cloned only when a graph's first lattice point is inserted.
+///
+/// `factor == 1.0` queries evaluate the inner predictor at exactly
+/// `factor == 1.0` (`1000 / 1000.0` is exact in IEEE 754), so the
+/// reference-path-verbatim contract flows straight through the cache.
 ///
 /// Wrapping a predictor that already memoizes internally (e.g.
 /// [`super::RappPredictor`]) is harmless but redundant — this wrapper is the
@@ -42,13 +94,7 @@ fn mille(x: f64) -> u32 {
 pub struct CachedPredictor<'a> {
     inner: &'a dyn LatencyPredictor,
     #[allow(clippy::type_complexity)]
-    cache: Mutex<HashMap<String, HashMap<(u32, u32, u32), f64>>>,
-    /// Class-factor side table: `(batch, sm‰, quota‰, factor‰)` → latency,
-    /// for non-reference GPU classes (heterogeneous fleets). Kept separate
-    /// so the reference-class table — and every byte it feeds — is
-    /// untouched by class-aware callers.
-    #[allow(clippy::type_complexity)]
-    cache_class: Mutex<HashMap<String, HashMap<(u32, u32, u32, u32), f64>>>,
+    cache: Mutex<HashMap<String, HashMap<LatticeKey, f64>>>,
 }
 
 impl<'a> CachedPredictor<'a> {
@@ -56,14 +102,12 @@ impl<'a> CachedPredictor<'a> {
         CachedPredictor {
             inner,
             cache: Mutex::new(HashMap::new()),
-            cache_class: Mutex::new(HashMap::new()),
         }
     }
 
-    /// Number of distinct lattice points evaluated so far (both tables).
+    /// Number of distinct lattice points evaluated so far.
     pub fn len(&self) -> usize {
-        self.cache.lock().unwrap().values().map(|m| m.len()).sum::<usize>()
-            + self.cache_class.lock().unwrap().values().map(|m| m.len()).sum::<usize>()
+        self.cache.lock().unwrap().values().map(|m| m.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -72,25 +116,22 @@ impl<'a> CachedPredictor<'a> {
 }
 
 impl LatencyPredictor for CachedPredictor<'_> {
-    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
-        let (sm_m, q_m) = (mille(sm), mille(quota));
-        let key = (batch, sm_m, q_m);
+    fn latency(&self, q: PredictQuery) -> f64 {
+        let key = LatticeKey::new(&q);
         {
             let cache = self.cache.lock().unwrap();
-            if let Some(&v) = cache.get(g.name.as_str()).and_then(|m| m.get(&key)) {
+            if let Some(&v) = cache.get(q.graph.name.as_str()).and_then(|m| m.get(&key)) {
                 return v;
             }
         }
         // Evaluate at the quantized point (lock released during the forward)
         // so the cached value is a pure function of the key — sub-mille
         // inputs alias to their lattice cell.
-        let v = self
-            .inner
-            .latency(g, batch, sm_m as f64 / 1000.0, q_m as f64 / 1000.0);
+        let v = self.inner.latency(key.query(q.graph));
         self.cache
             .lock()
             .unwrap()
-            .entry(g.name.clone())
+            .entry(q.graph.name.clone())
             .or_default()
             .insert(key, v);
         v
@@ -100,22 +141,21 @@ impl LatencyPredictor for CachedPredictor<'_> {
     /// forwarded to the inner predictor **as one batch** (at the quantized
     /// points, preserving the pure-function-of-the-key invariant). The steady
     /// state — every point cached — allocates nothing.
-    fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
-        let sm_m = mille(sm);
+    fn latency_batch(&self, q: PredictQuery, quotas: &[f64], out: &mut Vec<f64>) {
         out.clear();
         out.resize(quotas.len(), f64::NAN);
         let mut miss_idx: Vec<usize> = Vec::new();
         let mut miss_q: Vec<f64> = Vec::new();
         {
             let cache = self.cache.lock().unwrap();
-            let table = cache.get(g.name.as_str());
-            for (i, &q) in quotas.iter().enumerate() {
-                let key = (batch, sm_m, mille(q));
+            let table = cache.get(q.graph.name.as_str());
+            for (i, &quota) in quotas.iter().enumerate() {
+                let key = LatticeKey::new(&q.with_quota(quota));
                 match table.and_then(|m| m.get(&key)) {
                     Some(&v) => out[i] = v,
                     None => {
                         miss_idx.push(i);
-                        miss_q.push(mille(q) as f64 / 1000.0);
+                        miss_q.push(key.q_m as f64 / 1000.0);
                     }
                 }
             }
@@ -124,105 +164,21 @@ impl LatencyPredictor for CachedPredictor<'_> {
             return;
         }
         let mut fresh = Vec::new();
-        self.inner
-            .latency_batch(g, batch, sm_m as f64 / 1000.0, &miss_q, &mut fresh);
+        let base = LatticeKey::new(&q).query(q.graph);
+        self.inner.latency_batch(base, &miss_q, &mut fresh);
         let mut cache = self.cache.lock().unwrap();
-        let table = cache.entry(g.name.clone()).or_default();
-        for ((&i, &q), &v) in miss_idx.iter().zip(&miss_q).zip(&fresh) {
-            table.insert((batch, sm_m, mille(q)), v);
-            out[i] = v;
-        }
-    }
-
-    /// Class-aware lookup: factor 1.0 routes through the reference table
-    /// verbatim; other factors memoise in the class side table, evaluating
-    /// the inner predictor's class surface at the quantized point.
-    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        if factor == 1.0 {
-            return self.latency(g, batch, sm, quota);
-        }
-        let (sm_m, q_m, f_m) = (mille(sm), mille(quota), mille(factor));
-        let key = (batch, sm_m, q_m, f_m);
-        {
-            let cache = self.cache_class.lock().unwrap();
-            if let Some(&v) = cache.get(g.name.as_str()).and_then(|m| m.get(&key)) {
-                return v;
-            }
-        }
-        let v = self.inner.latency_at(
-            g,
-            batch,
-            sm_m as f64 / 1000.0,
-            q_m as f64 / 1000.0,
-            f_m as f64 / 1000.0,
-        );
-        self.cache_class
-            .lock()
-            .unwrap()
-            .entry(g.name.clone())
-            .or_default()
-            .insert(key, v);
-        v
-    }
-
-    /// Class-aware sweep: factor 1.0 is the reference sweep verbatim;
-    /// otherwise misses batch through the inner class surface at quantized
-    /// points, mirroring [`CachedPredictor::latency_batch`].
-    fn latency_batch_at(
-        &self,
-        g: &OpGraph,
-        batch: u32,
-        sm: f64,
-        quotas: &[f64],
-        factor: f64,
-        out: &mut Vec<f64>,
-    ) {
-        if factor == 1.0 {
-            return self.latency_batch(g, batch, sm, quotas, out);
-        }
-        let (sm_m, f_m) = (mille(sm), mille(factor));
-        out.clear();
-        out.resize(quotas.len(), f64::NAN);
-        let mut miss_idx: Vec<usize> = Vec::new();
-        let mut miss_q: Vec<f64> = Vec::new();
-        {
-            let cache = self.cache_class.lock().unwrap();
-            let table = cache.get(g.name.as_str());
-            for (i, &q) in quotas.iter().enumerate() {
-                let key = (batch, sm_m, mille(q), f_m);
-                match table.and_then(|m| m.get(&key)) {
-                    Some(&v) => out[i] = v,
-                    None => {
-                        miss_idx.push(i);
-                        miss_q.push(mille(q) as f64 / 1000.0);
-                    }
-                }
-            }
-        }
-        if miss_idx.is_empty() {
-            return;
-        }
-        let mut fresh = Vec::new();
-        self.inner.latency_batch_at(
-            g,
-            batch,
-            sm_m as f64 / 1000.0,
-            &miss_q,
-            f_m as f64 / 1000.0,
-            &mut fresh,
-        );
-        let mut cache = self.cache_class.lock().unwrap();
-        let table = cache.entry(g.name.clone()).or_default();
-        for ((&i, &q), &v) in miss_idx.iter().zip(&miss_q).zip(&fresh) {
-            table.insert((batch, sm_m, mille(q), f_m), v);
+        let table = cache.entry(q.graph.name.clone()).or_default();
+        for ((&i, &quota), &v) in miss_idx.iter().zip(&miss_q).zip(&fresh) {
+            table.insert(LatticeKey::new(&base.with_quota(quota)), v);
             out[i] = v;
         }
     }
 }
 
 /// Counting wrapper for benches/tests: how many times does a code path
-/// actually invoke the underlying predictor? (Capacity queries route through
-/// `latency`, so this counts every predictor forward.)
+/// actually invoke the underlying predictor? (Capacity queries and the
+/// default batch sweep route through `latency`, so this counts every
+/// predictor forward.)
 pub struct CountingPredictor<P> {
     pub inner: P,
     count: AtomicU64,
@@ -242,16 +198,11 @@ impl<P> CountingPredictor<P> {
 }
 
 impl<P: LatencyPredictor> LatencyPredictor for CountingPredictor<P> {
-    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
+    /// Count, then delegate so the inner predictor's exact class surface is
+    /// what gets measured.
+    fn latency(&self, q: PredictQuery) -> f64 {
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.inner.latency(g, batch, sm, quota)
-    }
-
-    /// Count, then delegate so the inner predictor's exact class surface
-    /// (not the `1/factor` default) is what gets measured.
-    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.inner.latency_at(g, batch, sm, quota, factor)
+        self.inner.latency(q)
     }
 }
 
@@ -290,21 +241,25 @@ mod tests {
     use crate::model::zoo::{zoo_graph, ZooModel};
     use crate::rapp::OraclePredictor;
 
+    fn q(g: &OpGraph, batch: u32, sm: f64, quota: f64) -> PredictQuery<'_> {
+        PredictQuery::new(g, batch, sm, quota)
+    }
+
     #[test]
     fn cached_matches_uncached_on_lattice_points() {
         let oracle = OraclePredictor::default();
         let cached = CachedPredictor::new(&oracle);
         let g = zoo_graph(ZooModel::ResNet50);
-        for &(sm, q) in &[(0.05, 0.1), (0.25, 0.3), (0.5, 0.5), (1.0, 1.0)] {
-            let a = cached.latency(&g, 8, sm, q);
-            let b = oracle.latency(&g, 8, sm, q);
-            assert_eq!(a, b, "sm={sm} q={q}");
+        for &(sm, quota) in &[(0.05, 0.1), (0.25, 0.3), (0.5, 0.5), (1.0, 1.0)] {
+            let a = cached.latency(q(&g, 8, sm, quota));
+            let b = oracle.latency(q(&g, 8, sm, quota));
+            assert_eq!(a, b, "sm={sm} q={quota}");
             // Second query hits the cache and returns the identical value.
-            assert_eq!(cached.latency(&g, 8, sm, q), a);
+            assert_eq!(cached.latency(q(&g, 8, sm, quota)), a);
         }
         assert_eq!(cached.len(), 4);
-        let ca = cached.capacity(&g, 8, 0.5, 0.7);
-        let cb = oracle.capacity(&g, 8, 0.5, 0.7);
+        let ca = cached.capacity(q(&g, 8, 0.5, 0.7));
+        let cb = oracle.capacity(q(&g, 8, 0.5, 0.7));
         assert_eq!(ca, cb);
     }
 
@@ -314,12 +269,12 @@ mod tests {
         let cached = CachedPredictor::new(&counting);
         let g = zoo_graph(ZooModel::MobileNetV2);
         for _ in 0..10 {
-            cached.latency(&g, 4, 0.5, 0.6);
+            cached.latency(q(&g, 4, 0.5, 0.6));
         }
         assert_eq!(counting.invocations(), 1, "9 of 10 queries must hit cache");
         // A capacity sweep over the quota axis costs one underlying forward.
-        for q in 1..=10u32 {
-            cached.capacity(&g, 4, 0.5, q as f64 / 10.0);
+        for step in 1..=10u32 {
+            cached.capacity(q(&g, 4, 0.5, step as f64 / 10.0));
         }
         assert_eq!(counting.invocations(), 2);
     }
@@ -345,52 +300,53 @@ mod tests {
         let g = zoo_graph(ZooModel::ResNet50);
         let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
         // Prime one point through the scalar path.
-        let primed = cached.latency(&g, 8, 0.5, 0.4);
+        let primed = cached.latency(q(&g, 8, 0.5, 0.4));
         let mut out = Vec::new();
-        cached.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        cached.latency_batch(q(&g, 8, 0.5, 1.0), &quotas, &mut out);
         assert_eq!(counting.invocations(), 10, "9 misses + 1 primed forward");
         assert_eq!(out[3], primed);
         let oracle = OraclePredictor::default();
-        for (&q, &v) in quotas.iter().zip(&out) {
-            assert_eq!(v, oracle.latency(&g, 8, 0.5, q), "q={q}");
-            assert_eq!(v, cached.latency(&g, 8, 0.5, q), "q={q}");
+        for (&quota, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, oracle.latency(q(&g, 8, 0.5, quota)), "q={quota}");
+            assert_eq!(v, cached.latency(q(&g, 8, 0.5, quota)), "q={quota}");
         }
         // A second sweep is all hits: no further underlying forwards.
-        cached.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        cached.latency_batch(q(&g, 8, 0.5, 1.0), &quotas, &mut out);
         assert_eq!(counting.invocations(), 10);
         // Sub-mille inputs alias to their lattice cell, batched or scalar.
-        cached.latency_batch(&g, 8, 0.5, &[0.4004], &mut out);
+        cached.latency_batch(q(&g, 8, 0.5, 1.0), &[0.4004], &mut out);
         assert_eq!(out[0], primed);
         assert_eq!(counting.invocations(), 10);
     }
 
     #[test]
-    fn class_factor_queries_use_a_distinct_table_and_exact_class_surface() {
+    fn class_factor_is_part_of_the_lattice_key() {
         let oracle = OraclePredictor::default();
         let cached = CachedPredictor::new(&oracle);
         let g = zoo_graph(ZooModel::ResNet50);
-        // factor 1.0 routes through the reference table verbatim.
-        let reference = cached.latency_at(&g, 8, 0.5, 0.5, 1.0);
-        assert_eq!(reference, oracle.latency(&g, 8, 0.5, 0.5));
+        // factor 1.0 evaluates the inner reference path verbatim.
+        let reference = cached.latency(q(&g, 8, 0.5, 0.5));
+        assert_eq!(reference, oracle.latency(q(&g, 8, 0.5, 0.5)));
         assert_eq!(cached.len(), 1);
-        // A non-reference factor is a new lattice point with the oracle's
-        // window-exact class value (not reference/factor).
-        let t4 = cached.latency_at(&g, 8, 0.5, 0.5, 0.4);
+        // A non-reference factor is its own lattice cell with the oracle's
+        // window-exact class value (not reference/factor) — no aliasing
+        // onto the reference cell.
+        let t4 = cached.latency(q(&g, 8, 0.5, 0.5).with_factor(0.4));
         assert_eq!(t4, oracle.perf.latency_class(&g, 8, 0.5, 0.5, 0.4));
         assert_eq!(cached.len(), 2);
         // Cached hit returns the identical value; no growth.
-        assert_eq!(cached.latency_at(&g, 8, 0.5, 0.5, 0.4), t4);
+        assert_eq!(cached.latency(q(&g, 8, 0.5, 0.5).with_factor(0.4)), t4);
         assert_eq!(cached.len(), 2);
         // Class sweeps agree with scalar class queries and hit the table.
         let quotas = [0.2, 0.5, 1.0];
         let mut out = Vec::new();
-        cached.latency_batch_at(&g, 8, 0.5, &quotas, 0.4, &mut out);
-        for (&q, &v) in quotas.iter().zip(&out) {
-            assert_eq!(v, cached.latency_at(&g, 8, 0.5, q, 0.4), "q={q}");
-            assert_eq!(v, oracle.perf.latency_class(&g, 8, 0.5, q, 0.4), "q={q}");
+        cached.latency_batch(q(&g, 8, 0.5, 1.0).with_factor(0.4), &quotas, &mut out);
+        for (&quota, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, cached.latency(q(&g, 8, 0.5, quota).with_factor(0.4)), "q={quota}");
+            assert_eq!(v, oracle.perf.latency_class(&g, 8, 0.5, quota, 0.4), "q={quota}");
         }
         // And a factor-1.0 sweep is the reference sweep.
-        cached.latency_batch_at(&g, 8, 0.5, &quotas, 1.0, &mut out);
+        cached.latency_batch(q(&g, 8, 0.5, 1.0), &quotas, &mut out);
         assert_eq!(out[1], reference);
     }
 
@@ -403,9 +359,10 @@ mod tests {
         for &sm in &[0.2, 0.5, 1.0] {
             for &bound_ms in &[20.0, 60.0, 200.0] {
                 let bound = bound_ms / 1e3;
-                let feasible =
-                    |q: QuotaMille| oracle.latency(&g, 8, sm, q as f64 / 1000.0) <= bound;
-                let linear = (1..=10).map(|n| n * 100).find(|&q| feasible(q));
+                let feasible = |quota: QuotaMille| {
+                    oracle.latency(q(&g, 8, sm, quota as f64 / 1000.0)) <= bound
+                };
+                let linear = (1..=10).map(|n| n * 100).find(|&quota| feasible(quota));
                 let bisect = min_feasible_quota(100, 1000, feasible);
                 assert_eq!(bisect, linear, "sm={sm} bound={bound_ms}ms");
             }

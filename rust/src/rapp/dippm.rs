@@ -8,8 +8,7 @@
 //! architecture and training budget are identical to RaPP's, so Fig. 5
 //! isolates exactly the contribution of runtime features.
 
-use super::{LatencyPredictor, RappPredictor, RappWeights};
-use crate::model::OpGraph;
+use super::{LatencyPredictor, PredictQuery, RappPredictor, RappWeights};
 use crate::perf::PerfModel;
 use crate::rapp::features::FeatureMode;
 
@@ -31,26 +30,14 @@ impl DippmPredictor {
 }
 
 impl LatencyPredictor for DippmPredictor {
-    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
-        self.0.latency(g, batch, sm, quota)
-    }
-
     /// Class queries flow through the underlying class feature column (the
     /// factor is part of DIPPM's static query configuration, like sm/quota).
-    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        self.0.latency_at(g, batch, sm, quota, factor)
+    fn latency(&self, q: PredictQuery) -> f64 {
+        self.0.latency(q)
     }
 
-    fn latency_batch_at(
-        &self,
-        g: &OpGraph,
-        batch: u32,
-        sm: f64,
-        quotas: &[f64],
-        factor: f64,
-        out: &mut Vec<f64>,
-    ) {
-        self.0.latency_batch_at(g, batch, sm, quotas, factor, out)
+    fn latency_batch(&self, q: PredictQuery, quotas: &[f64], out: &mut Vec<f64>) {
+        self.0.latency_batch(q, quotas, out)
     }
 }
 
@@ -70,6 +57,6 @@ mod tests {
         let w = RappWeights::random(FeatureMode::StaticOnly, 8, 1);
         let d = DippmPredictor::new(w, PerfModel::default()).unwrap();
         let g = zoo_graph(ZooModel::MobileNetV2);
-        assert!(d.latency(&g, 4, 0.5, 0.5).is_finite());
+        assert!(d.latency(PredictQuery::new(&g, 4, 0.5, 0.5)).is_finite());
     }
 }

@@ -24,78 +24,87 @@ use crate::model::OpGraph;
 use crate::perf::PerfModel;
 use crate::util::json::Json;
 use features::{FeatureMode, FeaturePlan};
-use nn::{Dense, GatLayer, GatScratch};
+use nn::{Dense, GatLayer, GatScratch, LaneScratch};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+/// One predictor query: which `graph`, at what `batch` size, on what GPU
+/// slice (`sm` fraction, temporal `quota`), on which GPU-class clock
+/// (`factor` = [`crate::vgpu::GpuClass::throughput`]; 1.0 = the reference
+/// V100). This is the *entire* argument surface of [`LatencyPredictor`] —
+/// one value type instead of the 5-arg tuple matrix the `_at` method family
+/// used to thread through every impl.
+///
+/// `Copy` on purpose: queries are built on the stack in the plan hot loop
+/// and derived with [`PredictQuery::with_quota`] / `with_factor` without
+/// touching the graph reference.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictQuery<'g> {
+    pub graph: &'g OpGraph,
+    pub batch: u32,
+    pub sm: f64,
+    pub quota: f64,
+    pub factor: f64,
+}
+
+impl<'g> PredictQuery<'g> {
+    /// A reference-class query (`factor == 1.0`).
+    pub fn new(graph: &'g OpGraph, batch: u32, sm: f64, quota: f64) -> Self {
+        PredictQuery {
+            graph,
+            batch,
+            sm,
+            quota,
+            factor: 1.0,
+        }
+    }
+
+    /// The same query at a different temporal quota.
+    pub fn with_quota(self, quota: f64) -> Self {
+        PredictQuery { quota, ..self }
+    }
+
+    /// The same query on a different GPU-class clock.
+    pub fn with_factor(self, factor: f64) -> Self {
+        PredictQuery { factor, ..self }
+    }
+}
+
 /// Latency prediction interface used by the auto-scalers.
+///
+/// **Class contract (PR 5):** `factor == 1.0` must take the reference code
+/// path verbatim — same bits as a query that never heard of GPU classes —
+/// so uniform reference-class fleets stay byte-identical to the pre-catalog
+/// pipeline by construction. Implementations own their class surface (the
+/// oracle replays the token window on the class clock; RaPP feeds the
+/// factor through its trailing class feature column); there is no shared
+/// `1/factor` approximation any more.
 pub trait LatencyPredictor: Send + Sync {
     /// Predicted end-to-end inference latency (seconds) of one batch.
-    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64;
+    fn latency(&self, q: PredictQuery) -> f64;
 
     /// Throughput capability C = batch · quota / t_raw (items/s), where
     /// t_raw is the predicted latency at full quota (paper: C = Batch/Latency
-    /// under saturated time-sharing).
-    fn capacity(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
-        let t_raw = self.latency(g, batch, sm, 1.0);
-        batch as f64 * quota / t_raw
+    /// under saturated time-sharing). The factor clock rides in through
+    /// `q.factor` — this default is the *only* place the capacity formula
+    /// exists; no impl overrides it.
+    fn capacity(&self, q: PredictQuery) -> f64 {
+        let t_raw = self.latency(q.with_quota(1.0));
+        q.batch as f64 * q.quota / t_raw
     }
 
-    /// Latency at each quota in `quotas` (same sm), written into `out`.
-    /// Implementations with a row-batched forward override this to evaluate
-    /// a whole lattice level in one matmul-shaped pass; the default loops
-    /// [`LatencyPredictor::latency`]. Every element must equal the scalar
-    /// query bit-for-bit — callers (the autoscaler's candidate sweeps) rely
-    /// on batched and scalar paths being interchangeable.
-    fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
+    /// Latency at each quota in `quotas` (same graph/batch/sm/factor),
+    /// written into `out`; `q.quota` is ignored — row *i* is
+    /// `q.with_quota(quotas[i])`. Implementations with a row-batched
+    /// forward override this to evaluate a whole lattice level in one
+    /// lane-parallel pass; the default loops [`LatencyPredictor::latency`].
+    /// Every element must equal the scalar query bit-for-bit — callers (the
+    /// autoscaler's candidate sweeps) rely on batched and scalar paths
+    /// being interchangeable.
+    fn latency_batch(&self, q: PredictQuery, quotas: &[f64], out: &mut Vec<f64>) {
         out.clear();
-        out.extend(quotas.iter().map(|&q| self.latency(g, batch, sm, q)));
-    }
-
-    /// Latency on a GPU class with relative throughput `factor`
-    /// ([`crate::vgpu::GpuClass::throughput`]; 1.0 = the reference V100).
-    /// **Contract:** `factor == 1.0` must be bit-identical to
-    /// [`LatencyPredictor::latency`] — the default takes that exact path, so
-    /// uniform reference-class fleets are byte-identical to the pre-catalog
-    /// pipeline by construction. The default scales the reference
-    /// prediction by `1/factor` (exact for raw execution; approximate
-    /// around token-window boundaries); the oracle overrides with the
-    /// window-exact class surface, and RaPP feeds the factor through its
-    /// class feature column.
-    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        if factor == 1.0 {
-            return self.latency(g, batch, sm, quota);
-        }
-        self.latency(g, batch, sm, quota) / factor
-    }
-
-    /// Throughput capability on a class with relative throughput `factor`.
-    /// `factor == 1.0` is bit-identical to [`LatencyPredictor::capacity`].
-    fn capacity_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        if factor == 1.0 {
-            return self.capacity(g, batch, sm, quota);
-        }
-        let t_raw = self.latency_at(g, batch, sm, 1.0, factor);
-        batch as f64 * quota / t_raw
-    }
-
-    /// [`LatencyPredictor::latency_batch`] on a class with relative
-    /// throughput `factor`; same bit-for-bit interchangeability contract,
-    /// and `factor == 1.0` routes through `latency_batch` unchanged.
-    fn latency_batch_at(
-        &self,
-        g: &OpGraph,
-        batch: u32,
-        sm: f64,
-        quotas: &[f64],
-        factor: f64,
-        out: &mut Vec<f64>,
-    ) {
-        if factor == 1.0 {
-            return self.latency_batch(g, batch, sm, quotas, out);
-        }
-        out.clear();
-        out.extend(quotas.iter().map(|&q| self.latency_at(g, batch, sm, q, factor)));
+        out.extend(quotas.iter().map(|&quota| self.latency(q.with_quota(quota))));
     }
 }
 
@@ -106,26 +115,13 @@ pub struct OraclePredictor {
 }
 
 impl LatencyPredictor for OraclePredictor {
-    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
-        self.perf.latency(g, batch, sm, quota)
-    }
-
     /// The oracle knows the class surface exactly: token-window replay on
-    /// the class clock, not the `1/factor` approximation. `factor == 1.0`
-    /// takes the reference path verbatim (byte-identity contract).
-    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        if factor == 1.0 {
-            return self.perf.latency(g, batch, sm, quota);
-        }
-        self.perf.latency_class(g, batch, sm, quota, factor)
-    }
-
-    fn capacity_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        if factor == 1.0 {
-            return self.capacity(g, batch, sm, quota);
-        }
-        let t_raw = self.latency_at(g, batch, sm, 1.0, factor);
-        batch as f64 * quota / t_raw
+    /// the class clock. `factor == 1.0` is the reference path verbatim —
+    /// [`PerfModel::latency`] *is* `latency_class(.., 1.0)` (the window
+    /// replay exists once, in `latency_class`).
+    fn latency(&self, q: PredictQuery) -> f64 {
+        self.perf
+            .latency_class(q.graph, q.batch, q.sm, q.quota, q.factor)
     }
 }
 
@@ -261,9 +257,8 @@ struct PlanEntry {
     pooled: Vec<f32>,
 }
 
-/// Reusable forward buffers (one per predictor, serialised by a mutex: the
-/// decision loop is effectively single-threaded per run, and contention only
-/// costs a short wait, never wrong numbers).
+/// Reusable forward buffers. One arena lives in each planner thread (see
+/// [`SCRATCH`]); nothing is shared, so nothing is locked.
 #[derive(Default)]
 struct ForwardScratch {
     /// Standardised op features / GAT activations (plan build only).
@@ -284,6 +279,20 @@ struct ForwardScratch {
     cat_rows: Vec<f32>,
     hh_rows: Vec<f32>,
     out_rows: Vec<f32>,
+    /// SoA transpose blocks for the lane kernel.
+    lanes: LaneScratch,
+}
+
+thread_local! {
+    /// Per-thread forward arena. The seed serialised every forward behind a
+    /// `Mutex<ForwardScratch>` *per predictor*, so concurrent planners —
+    /// the `expt` runner ticks one cell per pool thread — contended on a
+    /// lock even though each cell owns its predictor. Each planner thread
+    /// now owns an arena outright: plan ticks overlap across cells with
+    /// zero lock contention. The buffers are pure scratch (fully
+    /// re-initialised per forward), so which thread's arena services a
+    /// query can never change a bit of the result.
+    static SCRATCH: RefCell<ForwardScratch> = RefCell::new(ForwardScratch::default());
 }
 
 /// The native RaPP predictor with a per-(model,config) memo cache and a
@@ -298,7 +307,6 @@ pub struct RappPredictor {
     /// cloned only when a graph's first plan is inserted.
     #[allow(clippy::type_complexity)]
     plans: Mutex<HashMap<String, HashMap<u32, Arc<PlanEntry>>>>,
-    scratch: Mutex<ForwardScratch>,
 }
 
 impl RappPredictor {
@@ -308,7 +316,6 @@ impl RappPredictor {
             perf,
             cache: Mutex::new(HashMap::new()),
             plans: Mutex::new(HashMap::new()),
-            scratch: Mutex::new(ForwardScratch::default()),
         }
     }
 
@@ -339,9 +346,8 @@ impl RappPredictor {
         let n = plan.n_nodes();
         let f_op = plan.f_op();
         let mut pooled = Vec::new();
-        {
-            let mut st = self.scratch.lock().unwrap();
-            let st = &mut *st;
+        SCRATCH.with(|cell| {
+            let st = &mut *cell.borrow_mut();
             // Standardise the raw op rows.
             st.x.clear();
             st.x.resize(n * f_op, 0.0);
@@ -354,7 +360,7 @@ impl RappPredictor {
             w.gat1.forward_into(&st.x, n, &plan.adj, &mut st.gat, &mut st.h1);
             w.gat2.forward_into(&st.h1, n, &plan.adj, &mut st.gat, &mut st.h2);
             nn::mean_pool_into(&st.h2, n, w.hidden, &mut pooled);
-        }
+        });
         let entry = Arc::new(PlanEntry { plan, pooled });
         self.plans
             .lock()
@@ -417,20 +423,23 @@ impl RappPredictor {
     /// trailing class feature column (and the anchor replayed on the class
     /// clock). `factor = 1.0` is [`RappPredictor::forward`] bit-for-bit.
     pub fn forward_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f32 {
+        // The plan fetch happens before the arena borrow: a cold plan build
+        // borrows the same thread-local arena internally.
         let entry = self.plan_entry(g, batch);
         let w = &self.weights;
-        let mut st = self.scratch.lock().unwrap();
-        let st = &mut *st;
-        entry.plan.fill_graph_feats_at(sm, quota, factor, &mut st.gfeats);
-        Self::head_from_gfeats(
-            w,
-            &entry.pooled,
-            &st.gfeats,
-            &mut st.gx,
-            &mut st.gh,
-            &mut st.cat,
-            &mut st.hh,
-        )
+        SCRATCH.with(|cell| {
+            let st = &mut *cell.borrow_mut();
+            entry.plan.fill_graph_feats_at(sm, quota, factor, &mut st.gfeats);
+            Self::head_from_gfeats(
+                w,
+                &entry.pooled,
+                &st.gfeats,
+                &mut st.gx,
+                &mut st.gh,
+                &mut st.cat,
+                &mut st.hh,
+            )
+        })
     }
 
     /// Row-batched forward over a quota sweep at fixed (graph, batch, sm),
@@ -450,7 +459,11 @@ impl RappPredictor {
     }
 
     /// [`RappPredictor::forward_batch`] at a GPU-class throughput factor;
-    /// row-for-row bit-identical to [`RappPredictor::forward_at`].
+    /// row-for-row bit-identical to [`RappPredictor::forward_at`]. The
+    /// dense passes run through the SIMD lane kernel
+    /// ([`Dense::forward_rows_lanes`]) — per-row bit-identity with the
+    /// scalar path is preserved by construction, so the lanes change no
+    /// bits, only the wall clock.
     pub fn forward_batch_at(
         &self,
         g: &OpGraph,
@@ -460,70 +473,105 @@ impl RappPredictor {
         factor: f64,
         out: &mut Vec<f32>,
     ) {
+        self.forward_batch_impl(g, batch, sm, quotas, factor, out, true);
+    }
+
+    /// The scalar-reference twin of [`RappPredictor::forward_batch_at`]:
+    /// identical row assembly, dense passes through the plain
+    /// [`Dense::forward_rows`] loop. This is the reference the lane kernel
+    /// is bit-compared and benchmarked against (`rapp_forward_simd` vs
+    /// `rapp_forward_scalar_ref` in `benches/scheduler_hotpath.rs`).
+    pub fn forward_batch_scalar_ref(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
+        out: &mut Vec<f32>,
+    ) {
+        self.forward_batch_impl(g, batch, sm, quotas, factor, out, false);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_batch_impl(
+        &self,
+        g: &OpGraph,
+        batch: u32,
+        sm: f64,
+        quotas: &[f64],
+        factor: f64,
+        out: &mut Vec<f32>,
+        lanes: bool,
+    ) {
         let rows = quotas.len();
         out.clear();
         if rows == 0 {
             return;
         }
+        // The plan fetch happens before the arena borrow: a cold plan build
+        // borrows the same thread-local arena internally.
         let entry = self.plan_entry(g, batch);
         let w = &self.weights;
         let (f_g, h) = (w.mode.f_g(), w.hidden);
-        let mut st = self.scratch.lock().unwrap();
-        let st = &mut *st;
-        // Assemble the raw + standardised graph-feature matrices [rows × f_g].
-        st.gfeats_rows.clear();
-        st.gx_rows.clear();
-        for &q in quotas {
-            entry.plan.fill_graph_feats_at(sm, q, factor, &mut st.gfeats);
-            st.gfeats_rows.extend_from_slice(&st.gfeats);
-            for (k, &v) in st.gfeats.iter().enumerate() {
-                st.gx_rows.push((v - w.g_mean[k]) / w.g_std[k]);
+        SCRATCH.with(|cell| {
+            let st = &mut *cell.borrow_mut();
+            let mut dense_rows = |d: &Dense, x: &[f32], y: &mut [f32], ls: &mut LaneScratch| {
+                if lanes {
+                    d.forward_rows_lanes(x, rows, y, ls);
+                } else {
+                    d.forward_rows(x, rows, y);
+                }
+            };
+            // Assemble the raw + standardised graph-feature matrices [rows × f_g].
+            st.gfeats_rows.clear();
+            st.gx_rows.clear();
+            for &q in quotas {
+                entry.plan.fill_graph_feats_at(sm, q, factor, &mut st.gfeats);
+                st.gfeats_rows.extend_from_slice(&st.gfeats);
+                for (k, &v) in st.gfeats.iter().enumerate() {
+                    st.gx_rows.push((v - w.g_mean[k]) / w.g_std[k]);
+                }
             }
-        }
-        // Graph MLP over all rows, ReLU.
-        st.gh_rows.clear();
-        st.gh_rows.resize(rows * h, 0.0);
-        w.mlp_g.forward_rows(&st.gx_rows, rows, &mut st.gh_rows);
-        for v in st.gh_rows.iter_mut() {
-            *v = nn::relu(*v);
-        }
-        // Concat [pooled | gh] per row, then the two heads.
-        st.cat_rows.clear();
-        for r in 0..rows {
-            st.cat_rows.extend_from_slice(&entry.pooled);
-            st.cat_rows.extend_from_slice(&st.gh_rows[r * h..(r + 1) * h]);
-        }
-        st.hh_rows.clear();
-        st.hh_rows.resize(rows * h, 0.0);
-        w.head1.forward_rows(&st.cat_rows, rows, &mut st.hh_rows);
-        for v in st.hh_rows.iter_mut() {
-            *v = nn::relu(*v);
-        }
-        st.out_rows.clear();
-        st.out_rows.resize(rows, 0.0);
-        w.head2.forward_rows(&st.hh_rows, rows, &mut st.out_rows);
-        for (r, &o) in st.out_rows.iter().enumerate() {
-            let mut v = o;
-            if let Some(c) = w.residual_col {
-                v += st.gfeats_rows[r * f_g + c];
+            // Graph MLP over all rows, ReLU.
+            st.gh_rows.clear();
+            st.gh_rows.resize(rows * h, 0.0);
+            dense_rows(&w.mlp_g, &st.gx_rows, &mut st.gh_rows, &mut st.lanes);
+            for v in st.gh_rows.iter_mut() {
+                *v = nn::relu(*v);
             }
-            out.push(v);
-        }
+            // Concat [pooled | gh] per row, then the two heads.
+            st.cat_rows.clear();
+            for r in 0..rows {
+                st.cat_rows.extend_from_slice(&entry.pooled);
+                st.cat_rows.extend_from_slice(&st.gh_rows[r * h..(r + 1) * h]);
+            }
+            st.hh_rows.clear();
+            st.hh_rows.resize(rows * h, 0.0);
+            dense_rows(&w.head1, &st.cat_rows, &mut st.hh_rows, &mut st.lanes);
+            for v in st.hh_rows.iter_mut() {
+                *v = nn::relu(*v);
+            }
+            st.out_rows.clear();
+            st.out_rows.resize(rows, 0.0);
+            dense_rows(&w.head2, &st.hh_rows, &mut st.out_rows, &mut st.lanes);
+            for (r, &o) in st.out_rows.iter().enumerate() {
+                let mut v = o;
+                if let Some(c) = w.residual_col {
+                    v += st.gfeats_rows[r * f_g + c];
+                }
+                out.push(v);
+            }
+        });
     }
 
-    fn cache_key(
-        g: &OpGraph,
-        batch: u32,
-        sm: f64,
-        quota: f64,
-        factor: f64,
-    ) -> (String, u32, u32, u32, u32) {
+    fn cache_key(q: &PredictQuery) -> (String, u32, u32, u32, u32) {
         (
-            g.name.clone(),
-            batch,
-            (sm * 1000.0).round() as u32,
-            (quota * 1000.0).round() as u32,
-            (factor * 1000.0).round() as u32,
+            q.graph.name.clone(),
+            q.batch,
+            (q.sm * 1000.0).round() as u32,
+            (q.quota * 1000.0).round() as u32,
+            (q.factor * 1000.0).round() as u32,
         )
     }
 
@@ -537,29 +585,18 @@ impl RappPredictor {
 }
 
 impl LatencyPredictor for RappPredictor {
-    fn latency(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64) -> f64 {
-        self.latency_at(g, batch, sm, quota, 1.0)
-    }
-
     /// Class-aware scalar query: the factor flows through the class feature
     /// column (not a post-hoc `1/factor` scale), memoised per lattice point.
-    fn latency_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        let key = Self::cache_key(g, batch, sm, quota, factor);
+    /// `factor == 1.0` is the reference query — same key, same forward.
+    fn latency(&self, q: PredictQuery) -> f64 {
+        let key = Self::cache_key(&q);
         if let Some(&v) = self.cache.lock().unwrap().get(&key) {
             return v;
         }
-        let secs = Self::ln_ms_to_secs(self.forward_at(g, batch, sm, quota, factor) as f64);
+        let secs =
+            Self::ln_ms_to_secs(self.forward_at(q.graph, q.batch, q.sm, q.quota, q.factor) as f64);
         self.cache.lock().unwrap().insert(key, secs);
         secs
-    }
-
-    fn capacity_at(&self, g: &OpGraph, batch: u32, sm: f64, quota: f64, factor: f64) -> f64 {
-        let t_raw = self.latency_at(g, batch, sm, 1.0, factor);
-        batch as f64 * quota / t_raw
-    }
-
-    fn latency_batch(&self, g: &OpGraph, batch: u32, sm: f64, quotas: &[f64], out: &mut Vec<f64>) {
-        self.latency_batch_at(g, batch, sm, quotas, 1.0, out)
     }
 
     /// Whole-sweep latency: memo hits are served from the cache; the missing
@@ -569,15 +606,7 @@ impl LatencyPredictor for RappPredictor {
     /// (the scalar contract), so quotas aliasing to one lattice cell within
     /// a sweep are deduped — the first occurrence computes, later aliases
     /// reuse its value, exactly as back-to-back `latency` calls would.
-    fn latency_batch_at(
-        &self,
-        g: &OpGraph,
-        batch: u32,
-        sm: f64,
-        quotas: &[f64],
-        factor: f64,
-        out: &mut Vec<f64>,
-    ) {
+    fn latency_batch(&self, q: PredictQuery, quotas: &[f64], out: &mut Vec<f64>) {
         out.clear();
         out.resize(quotas.len(), f64::NAN);
         let mut miss_keys: Vec<(String, u32, u32, u32, u32)> = Vec::new();
@@ -587,8 +616,8 @@ impl LatencyPredictor for RappPredictor {
         let mut aliases: Vec<(usize, usize)> = Vec::new();
         {
             let cache = self.cache.lock().unwrap();
-            for (i, &q) in quotas.iter().enumerate() {
-                let key = Self::cache_key(g, batch, sm, q, factor);
+            for (i, &quota) in quotas.iter().enumerate() {
+                let key = Self::cache_key(&q.with_quota(quota));
                 if let Some(&v) = cache.get(&key) {
                     out[i] = v;
                 } else if let Some(slot) = miss_keys.iter().position(|k| *k == key) {
@@ -596,7 +625,7 @@ impl LatencyPredictor for RappPredictor {
                 } else {
                     miss_keys.push(key);
                     miss_idx.push(i);
-                    miss_q.push(q);
+                    miss_q.push(quota);
                 }
             }
         }
@@ -604,7 +633,7 @@ impl LatencyPredictor for RappPredictor {
             return;
         }
         let mut fresh = Vec::new();
-        self.forward_batch_at(g, batch, sm, &miss_q, factor, &mut fresh);
+        self.forward_batch_at(q.graph, q.batch, q.sm, &miss_q, q.factor, &mut fresh);
         let mut secs_by_slot = Vec::with_capacity(fresh.len());
         {
             let mut cache = self.cache.lock().unwrap();
@@ -626,13 +655,18 @@ mod tests {
     use super::*;
     use crate::model::zoo::{zoo_graph, ZooModel};
 
+    /// Shorthand for a reference-class query in these tests.
+    fn q(g: &OpGraph, batch: u32, sm: f64, quota: f64) -> PredictQuery<'_> {
+        PredictQuery::new(g, batch, sm, quota)
+    }
+
     #[test]
     fn oracle_matches_perf_model() {
         let o = OraclePredictor::default();
         let g = zoo_graph(ZooModel::ResNet50);
-        let l = o.latency(&g, 8, 0.5, 0.5);
+        let l = o.latency(q(&g, 8, 0.5, 0.5));
         assert!((l - PerfModel::default().latency(&g, 8, 0.5, 0.5)).abs() < 1e-15);
-        let c = o.capacity(&g, 8, 0.5, 0.5);
+        let c = o.capacity(q(&g, 8, 0.5, 0.5));
         assert!((c - PerfModel::default().capacity(&g, 8, 0.5, 0.5)).abs() < 1e-12);
     }
 
@@ -643,15 +677,15 @@ mod tests {
             PerfModel::default(),
         );
         let g = zoo_graph(ZooModel::ConvNextTiny);
-        let a = p.latency(&g, 8, 0.5, 0.5);
-        let b = p.latency(&g, 8, 0.5, 0.5); // cached path
+        let a = p.latency(q(&g, 8, 0.5, 0.5));
+        let b = p.latency(q(&g, 8, 0.5, 0.5)); // cached path
         assert!(a.is_finite() && a > 0.0);
         assert_eq!(a, b);
         let p2 = RappPredictor::new(
             RappWeights::random(FeatureMode::Full, 32, 5),
             PerfModel::default(),
         );
-        assert_eq!(p2.latency(&g, 8, 0.5, 0.5), a);
+        assert_eq!(p2.latency(q(&g, 8, 0.5, 0.5)), a);
     }
 
     #[test]
@@ -729,7 +763,7 @@ mod tests {
                 PerfModel::default(),
             );
             let g = zoo_graph(ZooModel::Vgg16);
-            let l = p.latency(&g, 32, 0.05, 0.05);
+            let l = p.latency(q(&g, 32, 0.05, 0.05));
             assert!(l.is_finite() && l > 0.0);
         }
     }
@@ -781,14 +815,14 @@ mod tests {
             PerfModel::default(),
         );
         let mut out = Vec::new();
-        p.latency_batch(&g, 8, 0.5, &[0.4, 0.4004], &mut out);
+        p.latency_batch(q(&g, 8, 0.5, 1.0), &[0.4, 0.4004], &mut out);
         assert_eq!(out[0], out[1], "alias must reuse the first occurrence");
-        let q = RappPredictor::new(
+        let fresh = RappPredictor::new(
             RappWeights::random(FeatureMode::Full, 16, 9),
             PerfModel::default(),
         );
-        assert_eq!(out[0], q.latency(&g, 8, 0.5, 0.4));
-        assert_eq!(out[1], q.latency(&g, 8, 0.5, 0.4004));
+        assert_eq!(out[0], fresh.latency(q(&g, 8, 0.5, 0.4)));
+        assert_eq!(out[1], fresh.latency(q(&g, 8, 0.5, 0.4004)));
     }
 
     #[test]
@@ -798,32 +832,32 @@ mod tests {
             RappWeights::random(FeatureMode::Full, 16, 21),
             PerfModel::default(),
         );
-        let reference = p.latency(&g, 8, 0.5, 0.5);
+        let reference = p.latency(q(&g, 8, 0.5, 0.5));
         // factor 1.0 is the same memo cell and the same bits.
-        assert_eq!(p.latency_at(&g, 8, 0.5, 0.5, 1.0), reference);
+        assert_eq!(p.latency(q(&g, 8, 0.5, 0.5).with_factor(1.0)), reference);
         // A different class factor is a distinct, deterministic prediction.
-        let fast = p.latency_at(&g, 8, 0.5, 0.5, 2.0);
+        let fast = p.latency(q(&g, 8, 0.5, 0.5).with_factor(2.0));
         assert!(fast.is_finite() && fast > 0.0);
         let p2 = RappPredictor::new(
             RappWeights::random(FeatureMode::Full, 16, 21),
             PerfModel::default(),
         );
-        assert_eq!(p2.latency_at(&g, 8, 0.5, 0.5, 2.0), fast);
+        assert_eq!(p2.latency(q(&g, 8, 0.5, 0.5).with_factor(2.0)), fast);
         // Batched class sweep is bit-identical to scalar class queries.
         let quotas = [0.2, 0.5, 0.9];
         let mut out = Vec::new();
-        p.latency_batch_at(&g, 8, 0.5, &quotas, 2.0, &mut out);
-        for (&q, &v) in quotas.iter().zip(&out) {
-            assert_eq!(v, p.latency_at(&g, 8, 0.5, q, 2.0), "q={q}");
+        p.latency_batch(q(&g, 8, 0.5, 1.0).with_factor(2.0), &quotas, &mut out);
+        for (&quota, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, p.latency(q(&g, 8, 0.5, quota).with_factor(2.0)), "q={quota}");
         }
         // The oracle's class surface is window-exact and orders correctly.
         let o = OraclePredictor::default();
         assert_eq!(
-            o.latency_at(&g, 8, 0.5, 0.5, 1.0).to_bits(),
-            o.latency(&g, 8, 0.5, 0.5).to_bits()
+            o.latency(q(&g, 8, 0.5, 0.5).with_factor(1.0)).to_bits(),
+            o.latency(q(&g, 8, 0.5, 0.5)).to_bits()
         );
-        assert!(o.latency_at(&g, 8, 0.5, 0.5, 2.0) < o.latency(&g, 8, 0.5, 0.5));
-        assert!(o.capacity_at(&g, 8, 0.5, 0.5, 2.0) > o.capacity(&g, 8, 0.5, 0.5));
+        assert!(o.latency(q(&g, 8, 0.5, 0.5).with_factor(2.0)) < o.latency(q(&g, 8, 0.5, 0.5)));
+        assert!(o.capacity(q(&g, 8, 0.5, 0.5).with_factor(2.0)) > o.capacity(q(&g, 8, 0.5, 0.5)));
     }
 
     #[test]
@@ -834,17 +868,45 @@ mod tests {
             PerfModel::default(),
         );
         // Prime two points via the scalar path, then sweep across them.
-        let a = p.latency(&g, 8, 0.5, 0.3);
-        let b = p.latency(&g, 8, 0.5, 0.7);
+        let a = p.latency(q(&g, 8, 0.5, 0.3));
+        let b = p.latency(q(&g, 8, 0.5, 0.7));
         let quotas = [0.1, 0.3, 0.5, 0.7, 0.9];
         let mut out = Vec::new();
-        p.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        p.latency_batch(q(&g, 8, 0.5, 1.0), &quotas, &mut out);
         assert_eq!(out.len(), 5);
         assert_eq!(out[1], a);
         assert_eq!(out[3], b);
-        for (&q, &v) in quotas.iter().zip(&out) {
-            assert_eq!(v, p.latency(&g, 8, 0.5, q), "q={q}");
+        for (&quota, &v) in quotas.iter().zip(&out) {
+            assert_eq!(v, p.latency(q(&g, 8, 0.5, quota)), "q={quota}");
             assert!(v.is_finite() && v > 0.0);
+        }
+    }
+
+    #[test]
+    fn simd_batched_forward_bitwise_matches_scalar_reference_pass() {
+        // The lane-kernel batch and the scalar-reference batch are the same
+        // numbers to the bit, at the reference class and on a class clock,
+        // including sweep lengths that exercise the lane tail.
+        let g = zoo_graph(ZooModel::ResNet50);
+        let p = RappPredictor::new(
+            RappWeights::random(FeatureMode::Full, 32, 13),
+            PerfModel::default(),
+        );
+        for len in [1usize, 7, 8, 10, 19] {
+            let quotas: Vec<f64> = (1..=len).map(|i| i as f64 / len as f64).collect();
+            for factor in [1.0, 0.4] {
+                let (mut simd, mut scalar) = (Vec::new(), Vec::new());
+                p.forward_batch_at(&g, 8, 0.5, &quotas, factor, &mut simd);
+                p.forward_batch_scalar_ref(&g, 8, 0.5, &quotas, factor, &mut scalar);
+                assert_eq!(simd.len(), scalar.len());
+                for (r, (a, b)) in simd.iter().zip(&scalar).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "len={len} factor={factor} row {r}"
+                    );
+                }
+            }
         }
     }
 }

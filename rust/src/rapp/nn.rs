@@ -23,6 +23,22 @@
 
 use crate::model::Adjacency;
 
+/// SIMD lane width of the row-batched forward: how many query rows advance
+/// together through [`Dense::forward_rows_lanes`]. 8 × f32 = one AVX2
+/// register (and two NEON registers); the kernel is generic over the width,
+/// so retuning is a one-line change.
+pub const LANES: usize = 8;
+
+/// Structure-of-arrays transpose buffers for the lane kernel: `xt` holds a
+/// `LANES`-row input block as `[n_in][LANES]` (lane *l* = query row *l*),
+/// `ot` the matching `[n_out][LANES]` output block. One instance serves any
+/// number of forwards; nothing is allocated once capacities are warm.
+#[derive(Clone, Debug, Default)]
+pub struct LaneScratch {
+    xt: Vec<f32>,
+    ot: Vec<f32>,
+}
+
 /// A dense layer: `y = W^T x + b`, with `w` stored row-major `[n_in][n_out]`.
 #[derive(Clone, Debug)]
 pub struct Dense {
@@ -60,6 +76,88 @@ impl Dense {
                 &x[r * self.n_in..(r + 1) * self.n_in],
                 &mut out[r * self.n_out..(r + 1) * self.n_out],
             );
+        }
+    }
+
+    /// Lane-parallel row-batched forward: `LANES` query rows advance in
+    /// lock-step, one row per SIMD lane (structure-of-arrays: the block is
+    /// transposed so lane *l* holds row *l*, weights broadcast across
+    /// lanes). For a fixed (row, output) element the accumulation runs over
+    /// inputs in ascending order with one add per **non-zero** input —
+    /// exactly [`Dense::forward`]'s order and skip rule — so every row is
+    /// bit-identical to the scalar reference *by construction*, lanes or
+    /// not. Rows beyond the last full block take the scalar path (the
+    /// tail); without the `simd` feature the whole call does.
+    pub fn forward_rows_lanes(
+        &self,
+        x: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        scratch: &mut LaneScratch,
+    ) {
+        debug_assert_eq!(x.len(), rows * self.n_in);
+        debug_assert_eq!(out.len(), rows * self.n_out);
+        let blocks = if cfg!(feature = "simd") { rows / LANES } else { 0 };
+        let (n_in, n_out) = (self.n_in, self.n_out);
+        if blocks > 0 {
+            scratch.xt.clear();
+            scratch.xt.resize(n_in * LANES, 0.0);
+            scratch.ot.clear();
+            scratch.ot.resize(n_out * LANES, 0.0);
+        }
+        for blk in 0..blocks {
+            let base = blk * LANES;
+            // SoA transpose in: lane l = query row base + l. Pure data
+            // movement — the f32 bits are untouched.
+            for i in 0..n_in {
+                for l in 0..LANES {
+                    scratch.xt[i * LANES + l] = x[(base + l) * n_in + i];
+                }
+            }
+            // Bias splat: every lane starts from b, like `forward`'s
+            // `copy_from_slice(&self.b)`.
+            for o in 0..n_out {
+                scratch.ot[o * LANES..(o + 1) * LANES].fill(self.b[o]);
+            }
+            self.lane_block::<LANES>(&scratch.xt, &mut scratch.ot);
+            // Transpose back out.
+            for o in 0..n_out {
+                for l in 0..LANES {
+                    out[(base + l) * n_out + o] = scratch.ot[o * LANES + l];
+                }
+            }
+        }
+        for r in blocks * LANES..rows {
+            self.forward(
+                &x[r * n_in..(r + 1) * n_in],
+                &mut out[r * n_out..(r + 1) * n_out],
+            );
+        }
+    }
+
+    /// The lane-width-generic inner kernel: `xt`/`ot` are SoA blocks of `L`
+    /// rows. Loop order is input-outer, output-middle, lane-innermost, so
+    /// per (lane, output) the adds land in ascending input order — the
+    /// scalar order. The per-lane `x != 0.0` guard compiles to a
+    /// compare+select (no branch), preserving the scalar path's zero-skip
+    /// bit behaviour: a zero input leaves the accumulator bits untouched
+    /// (an unconditional `acc + 0.0·w` could flip `-0.0` to `+0.0`).
+    #[inline]
+    fn lane_block<const L: usize>(&self, xt: &[f32], ot: &mut [f32]) {
+        debug_assert_eq!(xt.len(), self.n_in * L);
+        debug_assert_eq!(ot.len(), self.n_out * L);
+        for i in 0..self.n_in {
+            let xl: &[f32; L] = xt[i * L..(i + 1) * L].try_into().unwrap();
+            let row = &self.w[i * self.n_out..(i + 1) * self.n_out];
+            for (o, &wv) in row.iter().enumerate() {
+                let acc: &mut [f32; L] = (&mut ot[o * L..(o + 1) * L]).try_into().unwrap();
+                for l in 0..L {
+                    let xv = xl[l];
+                    if xv != 0.0 {
+                        acc[l] += xv * wv;
+                    }
+                }
+            }
         }
     }
 }
@@ -105,6 +203,7 @@ pub struct GatScratch {
     s_src: Vec<f32>,
     s_dst: Vec<f32>,
     weights: Vec<f32>,
+    lanes: LaneScratch,
 }
 
 impl GatLayer {
@@ -120,14 +219,13 @@ impl GatLayer {
     ) {
         let h = self.lin.n_out;
         debug_assert_eq!(adj.n(), n);
-        // h_i = W x_i for all nodes.
+        // h_i = W x_i for all nodes — one lane-parallel pass over the node
+        // rows (bit-identical per node to the scalar forward).
         scratch.hx.clear();
         scratch.hx.resize(n * h, 0.0);
+        self.lin
+            .forward_rows_lanes(&x[..n * self.lin.n_in], n, &mut scratch.hx, &mut scratch.lanes);
         let hx = &mut scratch.hx;
-        for i in 0..n {
-            let (src, dst) = (&x[i * self.lin.n_in..(i + 1) * self.lin.n_in], i * h);
-            self.lin.forward(src, &mut hx[dst..dst + h]);
-        }
         // Pre-compute a_src·h_i and a_dst·h_j.
         scratch.s_src.clear();
         scratch.s_src.resize(n, 0.0);
@@ -187,15 +285,33 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Masked mean-pool over node embeddings `[n][h]`, into a reusable buffer.
+///
+/// Pooling is a cross-row reduction, so the lanes here run across the `h`
+/// embedding **columns** (`LANES` accumulators advance together), never
+/// across rows: each output element still sums rows in ascending order —
+/// the accumulation order, and therefore every bit, is unchanged from the
+/// plain column loop.
 pub fn mean_pool_into(x: &[f32], n: usize, h: usize, out: &mut Vec<f32>) {
     out.clear();
     out.resize(h, 0.0);
     if n == 0 {
         return;
     }
+    let lanes_end = if cfg!(feature = "simd") { h - h % LANES } else { 0 };
     for i in 0..n {
-        for (o, &v) in out.iter_mut().zip(&x[i * h..(i + 1) * h]) {
-            *o += v;
+        let row = &x[i * h..(i + 1) * h];
+        let mut c = 0;
+        while c < lanes_end {
+            let acc: &mut [f32; LANES] = (&mut out[c..c + LANES]).try_into().unwrap();
+            let src: &[f32; LANES] = row[c..c + LANES].try_into().unwrap();
+            for l in 0..LANES {
+                acc[l] += src[l];
+            }
+            c += LANES;
+        }
+        while c < h {
+            out[c] += row[c];
+            c += 1;
         }
     }
     for o in out.iter_mut() {
@@ -259,6 +375,64 @@ mod tests {
             d.forward(&x[r * 7..(r + 1) * 7], &mut one);
             for k in 0..5 {
                 assert_eq!(one[k].to_bits(), batched[r * 5 + k].to_bits(), "row {r} col {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_lanes_bitwise_match_scalar_including_tail() {
+        // Row counts straddling the lane width: 1 (all tail), LANES-1,
+        // LANES, LANES+3, 3*LANES (all blocks). Every row must match the
+        // scalar forward to the bit.
+        let mut rng = Pcg64::seeded(31);
+        let d = rand_dense(&mut rng, 11, 6);
+        let mut scratch = LaneScratch::default();
+        for rows in [1, LANES - 1, LANES, LANES + 3, 3 * LANES] {
+            let x: Vec<f32> = (0..rows * 11).map(|_| rng.normal_ms(0.0, 1.0) as f32).collect();
+            let mut lanes = vec![0.0f32; rows * 6];
+            d.forward_rows_lanes(&x, rows, &mut lanes, &mut scratch);
+            let mut reference = vec![0.0f32; rows * 6];
+            d.forward_rows(&x, rows, &mut reference);
+            for (k, (a, b)) in lanes.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} elem {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_lanes_honour_the_zero_skip_rule() {
+        // Zero-heavy inputs (one-hot features, post-ReLU activations) take
+        // the scalar path's skip; the lane kernel's select must leave the
+        // accumulator bits untouched for those lanes — including the sign
+        // of a -0.0 bias surviving an all-zero input row.
+        let mut rng = Pcg64::seeded(32);
+        let mut d = rand_dense(&mut rng, 9, 5);
+        d.b[2] = -0.0;
+        let mut scratch = LaneScratch::default();
+        let rows = 2 * LANES + 1;
+        let x: Vec<f32> = (0..rows * 9)
+            .map(|k| {
+                if k % 3 == 0 {
+                    0.0
+                } else {
+                    relu(rng.normal_ms(0.0, 1.0) as f32)
+                }
+            })
+            .collect();
+        let mut lanes = vec![0.0f32; rows * 5];
+        d.forward_rows_lanes(&x, rows, &mut lanes, &mut scratch);
+        let mut reference = vec![0.0f32; rows * 5];
+        d.forward_rows(&x, rows, &mut reference);
+        for (k, (a, b)) in lanes.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {k}");
+        }
+        // An all-zero input row reproduces the bias verbatim, -0.0 and all.
+        let zero = vec![0.0f32; LANES * 9];
+        let mut out = vec![0.0f32; LANES * 5];
+        d.forward_rows_lanes(&zero, LANES, &mut out, &mut scratch);
+        for r in 0..LANES {
+            for (o, &b) in d.b.iter().enumerate() {
+                assert_eq!(out[r * 5 + o].to_bits(), b.to_bits(), "row {r} col {o}");
             }
         }
     }

@@ -446,12 +446,14 @@ fn try_dispatch(
         batch.extend(queues[f_idx].drain(..take));
         // Service time on the pod's own GPU class (factor 1.0 routes through
         // the reference surface verbatim).
-        let service = serve.latency_at(
-            &f.graph,
-            take as u32,
-            crate::vgpu::sm_to_f64(pod.sm),
-            crate::vgpu::quota_to_f64(pod.quota),
-            cluster.gpu(pod.gpu).throughput(),
+        let service = serve.latency(
+            crate::rapp::PredictQuery::new(
+                &f.graph,
+                take as u32,
+                crate::vgpu::sm_to_f64(pod.sm),
+                crate::vgpu::quota_to_f64(pod.quota),
+            )
+            .with_factor(cluster.gpu(pod.gpu).throughput()),
         );
         busy.insert(pod.id);
         q.push_at(

@@ -187,7 +187,7 @@ fn trained_rapp_accurate_on_unseen_zoo_models() {
         let g = has_gpu::model::zoo::zoo_graph(m);
         for &(batch, sm, quota) in &[(1u32, 0.3f64, 0.5f64), (8, 0.6, 0.8), (16, 0.15, 0.25)] {
             let truth = pm.latency(&g, batch, sm, quota);
-            let pred = rapp.latency(&g, batch, sm, quota);
+            let pred = rapp.latency(has_gpu::rapp::PredictQuery::new(&g, batch, sm, quota));
             errs.push((truth - pred).abs() / truth);
         }
     }

@@ -217,13 +217,13 @@ fn pred_capacity(
     sm: has_gpu::vgpu::SmMille,
     quota: has_gpu::vgpu::QuotaMille,
 ) -> f64 {
-    use has_gpu::rapp::LatencyPredictor;
-    pred.capacity(
+    use has_gpu::rapp::{LatencyPredictor, PredictQuery};
+    pred.capacity(PredictQuery::new(
         &zoo_graph(ZooModel::ResNet50),
         batch,
         has_gpu::vgpu::sm_to_f64(sm),
         has_gpu::vgpu::quota_to_f64(quota),
-    )
+    ))
 }
 
 // ---- Heterogeneous-fleet properties (GpuClass catalog) -------------------

@@ -1,0 +1,128 @@
+//! Lock-free concurrent planning: many threads driving plan ticks and raw
+//! predictions through ONE shared `RappPredictor` must produce exactly the
+//! bits a single-threaded run produces. The forward scratch lives in
+//! thread-local arenas (no `Mutex<ForwardScratch>` since the lane-parallel
+//! rework), so the only shared mutable state is the memo and plan caches —
+//! and a memoised value observed by one thread may have been computed by
+//! another, which is only sound because every forward is a pure function of
+//! the query. These tests are the cross-thread pin of that purity.
+
+use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
+use has_gpu::cluster::reconfigurator::place_pod;
+use has_gpu::cluster::{ClusterState, FunctionSpec, GpuId, Reconfigurator, ScalingAction};
+use has_gpu::model::zoo::{zoo_graph, ZooModel};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::features::FeatureMode;
+use has_gpu::rapp::{LatencyPredictor, PredictQuery, RappPredictor, RappWeights};
+
+fn predictor(seed: u64) -> RappPredictor {
+    RappPredictor::new(
+        RappWeights::random(FeatureMode::Full, 32, seed),
+        PerfModel::default(),
+    )
+}
+
+/// One worker's deterministic plan-tick sequence: its own cluster, function,
+/// autoscaler state, and demand profile — only the predictor is shared.
+/// Returns every tick's action list.
+fn tick_sequence(pred: &dyn LatencyPredictor, worker: u64) -> Vec<Vec<ScalingAction>> {
+    let pm = PerfModel::default();
+    let model = [ZooModel::ResNet50, ZooModel::MobileNetV2][worker as usize % 2];
+    let spec = FunctionSpec {
+        name: format!("f-{worker}"),
+        graph: zoo_graph(model),
+        slo: 0.25,
+        batch: 8,
+        artifact: None,
+    };
+    let mut cluster = ClusterState::new(4, pm.dev.mem_cap);
+    cluster.register_function(spec.clone());
+    let mut recon = Reconfigurator::new(&cluster, 1);
+    place_pod(&mut recon, &mut cluster, &pm, &spec.name, GpuId(0), 500, 300, 8, 0.0).unwrap();
+    let mut hs = HybridAutoscaler::new(HybridConfig::default());
+    (0..40)
+        .map(|t| {
+            // Sawtooth demand phase-shifted per worker: scale-up, hysteresis,
+            // and scale-down branches all fire across the run.
+            let demand = 5.0 + 12.0 * ((t + worker) % 7) as f64;
+            hs.plan(&spec, demand, &cluster, pred, t as f64)
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_plan_ticks_match_the_single_threaded_sequences() {
+    let shared = predictor(7);
+    let workers: Vec<u64> = (0..4).collect();
+    // Reference: each worker's sequence computed serially against a FRESH
+    // predictor — no shared caches, no other threads.
+    let reference: Vec<Vec<Vec<ScalingAction>>> = workers
+        .iter()
+        .map(|&w| tick_sequence(&predictor(7), w))
+        .collect();
+    // All workers concurrently against one shared predictor: plan caches and
+    // memo tables race, forward arenas are thread-local.
+    let concurrent: Vec<Vec<Vec<ScalingAction>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .iter()
+            .map(|&w| {
+                let p = &shared;
+                s.spawn(move || tick_sequence(p, w))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (w, (got, want)) in concurrent.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            got, want,
+            "worker {w}: concurrent decision sequence diverged from single-threaded"
+        );
+    }
+}
+
+#[test]
+fn shared_predictor_latencies_are_bit_identical_across_racing_threads() {
+    // 8 threads hammer the SAME query grid through one predictor while each
+    // checks every value against its own private predictor (same weights).
+    // A memo hit may return a value computed by a different thread on a
+    // different arena — it must still be the exact bits.
+    let shared = predictor(11);
+    let grid: Vec<(ZooModel, u32, f64, f64, f64)> = [ZooModel::ResNet50, ZooModel::BertTiny]
+        .into_iter()
+        .flat_map(|m| {
+            (1..=10u32).flat_map(move |q| {
+                [(m, 4u32, 0.5, q as f64 / 10.0, 1.0), (m, 8, 0.25, q as f64 / 10.0, 0.4)]
+            })
+        })
+        .collect();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let shared = &shared;
+            let grid = &grid;
+            s.spawn(move || {
+                let own = predictor(11);
+                for &(m, batch, sm, quota, factor) in grid {
+                    let g = zoo_graph(m);
+                    let q = PredictQuery::new(&g, batch, sm, quota).with_factor(factor);
+                    assert_eq!(
+                        shared.latency(q).to_bits(),
+                        own.latency(q).to_bits(),
+                        "{m:?} b{batch} sm{sm} q{quota} f{factor}"
+                    );
+                    assert_eq!(shared.capacity(q).to_bits(), own.capacity(q).to_bits());
+                }
+                // Batched sweeps race the same lattice rows concurrently.
+                let quotas: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+                let g = zoo_graph(ZooModel::ResNet50);
+                let base = PredictQuery::new(&g, 4, 0.5, 1.0);
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                shared.latency_batch(base, &quotas, &mut a);
+                own.latency_batch(base, &quotas, &mut b);
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            });
+        }
+    });
+}

@@ -8,7 +8,7 @@
 use has_gpu::model::zoo::{zoo_graph, ALL_ZOO};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::features::{extract, FeatureMode, FeaturePlan};
-use has_gpu::rapp::{CachedPredictor, LatencyPredictor, RappPredictor, RappWeights};
+use has_gpu::rapp::{CachedPredictor, LatencyPredictor, PredictQuery, RappPredictor, RappWeights};
 
 /// The seed's feature extraction, frozen **verbatim** (modulo imports) from
 /// the pre-FeaturePlan `rapp::features::extract`. This is the independent
@@ -279,15 +279,15 @@ fn cached_predictor_lattice_sweep_matches_scalar_latencies() {
     let mut out = Vec::new();
     for m in ALL_ZOO {
         let g = zoo_graph(m);
-        cached.latency_batch(&g, 8, 0.5, &quotas, &mut out);
+        cached.latency_batch(PredictQuery::new(&g, 8, 0.5, 1.0), &quotas, &mut out);
         for (&q, &v) in quotas.iter().zip(&out) {
             assert_eq!(
                 v,
-                reference.latency(&g, 8, 0.5, q),
+                reference.latency(PredictQuery::new(&g, 8, 0.5, q)),
                 "{m:?} q={q}: cached sweep vs fresh scalar latency"
             );
             // Re-query scalar through the same cache: identical.
-            assert_eq!(v, cached.latency(&g, 8, 0.5, q));
+            assert_eq!(v, cached.latency(PredictQuery::new(&g, 8, 0.5, q)));
         }
     }
 }

@@ -1,0 +1,124 @@
+//! SIMD lane-parallel forward vs. the scalar reference: randomized
+//! property pinning of the bit-identity contract. The lane kernel
+//! (`Dense::forward_rows_lanes`) claims per-row bit-identity *by
+//! construction* — per-(row, output) accumulation order equals the scalar
+//! loop and the per-lane zero-skip select leaves accumulator bits untouched
+//! exactly where the scalar `continue` does. This suite hammers that claim
+//! over random graphs, batches, SM fractions, quotas, and class factors,
+//! including lattice sizes that are not a multiple of the lane width (the
+//! scalar-tail path). No external property-testing crate: seeded `Pcg64`
+//! loops keep failures reproducible by trial index.
+
+use has_gpu::model::{GraphBuilder, OpGraph, OpKind};
+use has_gpu::perf::PerfModel;
+use has_gpu::rapp::features::FeatureMode;
+use has_gpu::rapp::nn::LANES;
+use has_gpu::rapp::{RappPredictor, RappWeights};
+use has_gpu::util::prng::Pcg64;
+
+/// A random linear-ish op graph (2–10 nodes) drawn from the builder's op
+/// vocabulary. Shapes are kept small — the property is about f32 operation
+/// order, not realism — but cover every kernel-count and zero-feature case
+/// (elementwise ops produce zero `params`, pooling zero FLOP-heavy columns).
+fn random_graph(rng: &mut Pcg64, tag: usize) -> OpGraph {
+    let mut b = GraphBuilder::new(&format!("rand-simd-{tag}"), "proptest");
+    let mut last = b.conv(
+        &[],
+        1 + 2 * rng.next_below(2) as u32,
+        3,
+        8 + rng.next_below(24) as u32,
+        8 + rng.next_below(24) as u32,
+        1 + rng.next_below(2) as u32,
+        1 + rng.next_below(3) as u32,
+    );
+    for _ in 0..1 + rng.next_below(8) {
+        last = match rng.next_below(5) {
+            0 => b.conv(
+                &[last],
+                3,
+                8,
+                8 + rng.next_below(16) as u32,
+                7 + rng.next_below(8) as u32,
+                1,
+                1 + rng.next_below(4) as u32,
+            ),
+            1 => b.dense(
+                &[last],
+                32 + rng.next_below(96) as u32,
+                16 + rng.next_below(48) as u32,
+            ),
+            2 => b.elemwise(&[last], OpKind::Relu, 1e4 + rng.uniform(0.0, 1e5), 0.0),
+            3 => b.pool(&[last], 8 + rng.next_below(24) as u32, 7, 2),
+            _ => b.attention(&[last], 16 + rng.next_below(48) as u32, 32),
+        };
+    }
+    b.build()
+}
+
+#[test]
+fn lane_parallel_batched_forward_is_bit_identical_to_scalar_for_random_graphs() {
+    let pm = PerfModel::default();
+    let mut rng = Pcg64::seeded(0x51bd);
+    let batches = [1u32, 2, 4, 8, 16, 32];
+    let factors = [1.0, 0.4, 0.7, 2.0];
+    for trial in 0..30usize {
+        let g = random_graph(&mut rng, trial);
+        let hidden = 16 * (1 + rng.next_below(3) as usize);
+        let mode = if trial % 4 == 3 { FeatureMode::StaticOnly } else { FeatureMode::Full };
+        let rapp = RappPredictor::new(RappWeights::random(mode, hidden, trial as u64), pm.clone());
+        let batch = batches[rng.next_below(batches.len() as u64) as usize];
+        let sm = (1 + rng.next_below(20)) as f64 / 20.0;
+        let factor = factors[rng.next_below(factors.len() as u64) as usize];
+        // Random lattice length in [1, 2·LANES+3): full lane blocks, scalar
+        // tails, and all-tail (rows < LANES) passes all occur.
+        let rows = 1 + rng.next_below(2 * LANES as u64 + 2) as usize;
+        let quotas: Vec<f64> = (0..rows)
+            .map(|_| (1 + rng.next_below(1000)) as f64 / 1000.0)
+            .collect();
+
+        let mut simd = Vec::new();
+        let mut scalar = Vec::new();
+        rapp.forward_batch_at(&g, batch, sm, &quotas, factor, &mut simd);
+        rapp.forward_batch_scalar_ref(&g, batch, sm, &quotas, factor, &mut scalar);
+        assert_eq!(simd.len(), rows);
+        assert_eq!(scalar.len(), rows);
+        for (row, (&a, &b)) in simd.iter().zip(&scalar).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "trial {trial} row {row}/{rows} (batch {batch} sm {sm} factor {factor}): \
+                 lane kernel diverged from scalar reference"
+            );
+        }
+        // Every batched row must also equal the one-at-a-time scalar entry
+        // point — the surface the plan-parity golden gates are pinned on.
+        for (row, &q) in quotas.iter().enumerate() {
+            let one = rapp.forward_at(&g, batch, sm, q, factor);
+            assert_eq!(
+                one.to_bits(),
+                simd[row].to_bits(),
+                "trial {trial} row {row}: batched row vs scalar forward_at"
+            );
+        }
+    }
+}
+
+#[test]
+fn tail_lengths_around_the_lane_width_all_agree() {
+    // Deterministic sweep of the block/tail boundary: every length from 1 to
+    // 3·LANES+1 — each splits differently into lane blocks + scalar tail.
+    let pm = PerfModel::default();
+    let rapp = RappPredictor::new(RappWeights::random(FeatureMode::Full, 32, 97), pm);
+    let mut rng = Pcg64::seeded(0x7a11);
+    let g = random_graph(&mut rng, 999);
+    let mut simd = Vec::new();
+    let mut scalar = Vec::new();
+    for rows in 1..=3 * LANES + 1 {
+        let quotas: Vec<f64> = (0..rows).map(|i| (i % 1000 + 1) as f64 / 1000.0).collect();
+        rapp.forward_batch_at(&g, 8, 0.5, &quotas, 1.0, &mut simd);
+        rapp.forward_batch_scalar_ref(&g, 8, 0.5, &quotas, 1.0, &mut scalar);
+        for (row, (&a, &b)) in simd.iter().zip(&scalar).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} row={row}");
+        }
+    }
+}
