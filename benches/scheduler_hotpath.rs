@@ -7,7 +7,7 @@ mod common;
 use common::functions;
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, ScalingPolicy};
 use has_gpu::cluster::reconfigurator::place_pod;
-use has_gpu::cluster::{ClusterState, GpuId, Reconfigurator};
+use has_gpu::cluster::{ClusterState, GpuId, Reconfigurator, ScalingAction};
 use has_gpu::metrics::BillingMode;
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
@@ -300,6 +300,41 @@ fn main() {
             uncached >= 5 * cached.max(1),
             "capacity cache must cut predictor invocations ≥5x: {uncached} vs {cached}"
         );
+    }
+
+    // Pod lifecycle swap round-trip: demote to the host tier and promote
+    // back through the reconfigurator — the keep-alive hot path a
+    // lifecycle-aware planner pays per parked/revived replica.
+    {
+        let pod = cluster.pods_of(&fns[0].name)[0].id;
+        let mut t_swap = 10_000.0;
+        h.bench("pod_swap_tick", || {
+            t_swap += 1.0;
+            recon
+                .apply(&mut cluster, &pm, &ScalingAction::DemotePod { pod }, t_swap)
+                .unwrap();
+            t_swap += 1.0;
+            recon
+                .apply(&mut cluster, &pm, &ScalingAction::PromotePod { pod }, t_swap)
+                .unwrap();
+            black_box(pod);
+        });
+    }
+
+    // TTFT percentile extraction at reporting scale: 5k wait samples into a
+    // Summary, P50 + P99 out — what every lifecycle cell pays at End.
+    {
+        use has_gpu::util::stats::Summary;
+        let samples: Vec<f64> = (0..5000u64)
+            .map(|i| (i.wrapping_mul(2654435761) % 1000) as f64 / 1000.0)
+            .collect();
+        h.bench_elems("ttft_summary_5k", Some(5000), || {
+            let mut s = Summary::new();
+            for &v in &samples {
+                s.add(v);
+            }
+            black_box((s.p50(), s.p99()));
+        });
     }
 
     // vGPU allocation round-trip.

@@ -7,8 +7,9 @@
 //!
 //! Results for the recorded run live in EXPERIMENTS.md.
 
-use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig};
+use has_gpu::autoscaler::{HybridAutoscaler, ScalingPolicy};
 use has_gpu::cluster::FunctionSpec;
+use has_gpu::expt::PlatformRegistry;
 use has_gpu::gateway::{Server, ServerConfig};
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::rapp::{OraclePredictor, RappPredictor};
@@ -20,7 +21,15 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
+    let registry = PlatformRegistry::default();
     let args = Cli::new("serve_azure_trace", "real-mode trace serving demo")
+        .opt_dyn("platform", "has-gpu", registry.cli_help())
+        .opt(
+            "keep-alive",
+            "inf",
+            "idle-pod keep-alive horizon in seconds for hybrid platforms \
+             (inf = keep the last replica resident forever)",
+        )
         .opt("seconds", "45", "trace length in (real) seconds")
         .opt("rps", "60", "mean request rate")
         .opt("seed", "7", "workload seed")
@@ -66,13 +75,40 @@ fn main() -> anyhow::Result<()> {
         )?)
     };
 
+    // Resolve the serving platform through the registry — the same
+    // case-insensitive lookup and name menu as `has-gpu expt`.
+    let platform = args.get("platform");
+    let Some(spec) = registry.get(platform) else {
+        anyhow::bail!(
+            "unknown platform '{platform}'; registered: {}",
+            registry.names().join(", ")
+        );
+    };
+    let keep_alive_raw = args.get("keep-alive");
+    let keep_alive = if keep_alive_raw.eq_ignore_ascii_case("inf") {
+        f64::INFINITY
+    } else {
+        keep_alive_raw
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("bad --keep-alive '{keep_alive_raw}' (seconds or 'inf')"))?
+    };
+    anyhow::ensure!(keep_alive > 0.0, "--keep-alive must be positive");
+    // Hybrid-family platforms get the real-mode cooldown plus the
+    // keep-alive knob; everything else serves through its stock policy.
+    let policy: Box<dyn ScalingPolicy> = match &spec.hybrid {
+        Some(cfg) => {
+            let mut cfg = cfg.clone();
+            cfg.cooldown = 5.0;
+            cfg.keep_alive = keep_alive;
+            Box::new(HybridAutoscaler::named(spec.name.clone(), cfg))
+        }
+        None => spec.policy(),
+    };
+
     let server = Server::start(
         &dir,
         functions.clone(),
-        Box::new(HybridAutoscaler::new(HybridConfig {
-            cooldown: 5.0,
-            ..HybridConfig::default()
-        })),
+        policy,
         predictor,
         ServerConfig {
             n_gpus: 2,

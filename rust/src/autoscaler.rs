@@ -17,7 +17,7 @@
 //!
 //! The scaler emits [`ScalingAction`]s; the GPU Re-configurator applies them.
 
-use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, ScalingAction};
+use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, PodState, ScalingAction};
 use crate::rapp::{min_feasible_quota, LatencyPredictor, PredictQuery};
 use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
 use std::collections::BTreeMap;
@@ -159,6 +159,14 @@ pub struct HybridConfig {
     /// Which scaling axes the algorithm may exercise (`Both` = Algorithm 1;
     /// the single-axis values express the ablation platforms).
     pub scaling_axes: ScalingAxes,
+    /// Idle keep-alive horizon (seconds). With the default
+    /// (`f64::INFINITY`) surplus pods are deleted outright — the historical
+    /// behaviour, byte-identical to pre-lifecycle plans. A finite horizon
+    /// makes scale-down *demote* surplus resident pods to the host-cached
+    /// swap tier instead of removing them (reactivation then costs one
+    /// host→device swap, not a full cold start); parked pods idle longer
+    /// than this horizon are reaped for real.
+    pub keep_alive: f64,
 }
 
 impl Default for HybridConfig {
@@ -176,6 +184,7 @@ impl Default for HybridConfig {
             slo_margin: 0.75,
             headroom_quota: 600,
             scaling_axes: ScalingAxes::Both,
+            keep_alive: f64::INFINITY,
         }
     }
 }
@@ -387,13 +396,34 @@ impl ScalingPolicy for HybridAutoscaler {
             .update(observed_rps);
 
         let mut actions = Vec::new();
-        // Non-draining pods participate in capacity (cold-starting pods will
-        // be ready soon; counting them avoids scale-up storms).
-        let mut pods: Vec<&Pod> = cluster
-            .pods_of(&f.name)
-            .into_iter()
-            .filter(|p| p.phase != PodPhase::Draining)
+        // Non-draining *device-resident* pods participate in capacity
+        // (cold-starting pods will be ready soon; counting them avoids
+        // scale-up storms). Host-cached pods hold no device residency: they
+        // contribute no capacity and are invisible to vertical scaling, but
+        // scale-up prefers promoting one over paying a fresh cold start.
+        // With the default infinite keep-alive no pod is ever parked, so
+        // both lists — and every decision below — match the pre-lifecycle
+        // planner exactly.
+        let all_pods = cluster.pods_of(&f.name);
+        let mut parked: Vec<&Pod> = all_pods
+            .iter()
+            .copied()
+            .filter(|p| p.phase != PodPhase::Draining && p.state == PodState::HostCached)
             .collect();
+        let mut pods: Vec<&Pod> = all_pods
+            .into_iter()
+            .filter(|p| p.phase != PodPhase::Draining && p.state != PodState::HostCached)
+            .collect();
+        // Reap parked pods that outlived the keep-alive horizon: the swap
+        // tier is a grace window, not a permanent parking lot.
+        if cfg.keep_alive.is_finite() {
+            for pod in &parked {
+                if now - pod.state_since > cfg.keep_alive {
+                    actions.push(ScalingAction::RemovePod { pod: pod.id });
+                }
+            }
+            parked.retain(|p| now - p.state_since <= cfg.keep_alive);
+        }
         // Axis restrictions (ablation platforms). A function with zero pods
         // cannot scale vertically, so the bootstrap pod is always allowed —
         // vertical-only platforms still come up, then never add replicas.
@@ -467,6 +497,22 @@ impl ScalingPolicy for HybridAutoscaler {
                         quota: pod.quota + cfg.quota_step * n,
                     });
                     delta_r -= gained;
+                }
+            }
+            // Promote parked pods before creating anything: resuming a
+            // host-cached replica costs one host→device swap instead of a
+            // full cold start, so every parked pod of f is cheaper capacity
+            // than any CreatePod. Largest SM partitions first, mirroring the
+            // vertical preference above.
+            if horizontal && !parked.is_empty() {
+                parked.sort_by(|a, b| b.sm.cmp(&a.sm).then(a.id.0.cmp(&b.id.0)));
+                for pod in &parked {
+                    if delta_r <= 0.0 {
+                        break;
+                    }
+                    let factor = cluster.gpu(pod.gpu).throughput();
+                    actions.push(ScalingAction::PromotePod { pod: pod.id });
+                    delta_r -= Self::pod_capacity(f, pod, factor, predictor);
                 }
             }
             // Horizontal scale-up to a used GPU (lines 10-17), extended for
@@ -615,7 +661,15 @@ impl ScalingPolicy for HybridAutoscaler {
                     // Quota would hit zero: horizontal scale-down (lines 23-24)
                     // — but only if capacity after removal still covers r.
                     if c_remaining - base_cap >= r.max(0.0) || base_cap <= 0.0 {
-                        actions.push(ScalingAction::RemovePod { pod: pod.id });
+                        // A finite keep-alive horizon parks the surplus pod
+                        // in host memory instead of deleting it; the reaper
+                        // at the top of plan() deletes it for real once it
+                        // idles past the horizon.
+                        if cfg.keep_alive.is_finite() {
+                            actions.push(ScalingAction::DemotePod { pod: pod.id });
+                        } else {
+                            actions.push(ScalingAction::RemovePod { pod: pod.id });
+                        }
                         c_remaining -= base_cap;
                         remaining_pods -= 1;
                     }
@@ -1204,12 +1258,143 @@ mod tests {
         let cost = |s: (SmMille, QuotaMille)| (s.0 as u64) * (s.1 as u64);
         assert!(cost(small) < cost(big), "small {small:?} big {big:?}");
         // The small slice really covers 5 rps.
-        let cap = pred.capacity(
+        let cap = pred.capacity(PredictQuery::new(
             &spec.graph,
             spec.batch,
             crate::vgpu::sm_to_f64(small.0),
             crate::vgpu::quota_to_f64(small.1),
-        );
+        ));
         assert!(cap >= 5.0);
+    }
+
+    #[test]
+    fn default_keep_alive_is_infinite_and_plans_match_pre_lifecycle() {
+        // Identity keystone at the planner level: the default config must
+        // never emit Demote/Promote and must remove surplus pods outright,
+        // exactly as before the lifecycle landed.
+        let cfg = HybridConfig::default();
+        assert!(cfg.keep_alive.is_infinite());
+        let (mut c, mut recon, pm, spec) = setup();
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 400, 8, 0.0).unwrap();
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 400, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(cfg);
+        let mut removed = 0;
+        for t in 0..60 {
+            for a in hs.plan(&spec, 0.0, &c, &pred, t as f64 * 40.0) {
+                assert!(
+                    !matches!(
+                        a,
+                        ScalingAction::DemotePod { .. } | ScalingAction::PromotePod { .. }
+                    ),
+                    "default config must never touch the swap tier: {a:?}"
+                );
+                if matches!(a, ScalingAction::RemovePod { .. }) {
+                    removed += 1;
+                }
+                let _ = recon.apply(&mut c, &pm, &a, t as f64 * 40.0);
+            }
+        }
+        assert_eq!(removed, 1, "surplus pod is deleted, not parked");
+    }
+
+    #[test]
+    fn finite_keep_alive_demotes_surplus_then_reaps_parked_pods() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let p1 =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 400, 8, 0.0).unwrap();
+        let p2 =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 250, 400, 8, 0.0).unwrap();
+        let pred = OraclePredictor::default();
+        let cfg = HybridConfig {
+            scaling_axes: ScalingAxes::HorizontalOnly,
+            keep_alive: 100.0,
+            ..HybridConfig::default()
+        };
+        let mut hs = HybridAutoscaler::new(cfg);
+        // Idle traffic at t=0: the surplus pod is demoted, not removed.
+        let first = hs.plan(&spec, 0.0, &c, &pred, 0.0);
+        let parked = match first.as_slice() {
+            [ScalingAction::DemotePod { pod }] => *pod,
+            other => panic!("expected a single demotion, got {other:?}"),
+        };
+        assert!(parked == p1 || parked == p2);
+        recon
+            .apply(&mut c, &pm, &ScalingAction::DemotePod { pod: parked }, 0.0)
+            .unwrap();
+        // Inside the horizon the parked pod survives and the resident pod is
+        // retained by keep-alive.
+        let mid = hs.plan(&spec, 0.0, &c, &pred, 60.0);
+        assert!(mid.is_empty(), "{mid:?}");
+        // Past the horizon the reaper deletes the parked pod for real.
+        let late = hs.plan(&spec, 0.0, &c, &pred, 150.0);
+        assert!(
+            late.iter()
+                .any(|a| matches!(a, ScalingAction::RemovePod { pod } if *pod == parked)),
+            "{late:?}"
+        );
+    }
+
+    #[test]
+    fn scale_up_promotes_parked_pod_before_creating() {
+        let (mut c, mut recon, pm, spec) = setup();
+        place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 600, 8, 0.0).unwrap();
+        let p2 =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 400, 8, 0.0).unwrap();
+        recon
+            .apply(&mut c, &pm, &ScalingAction::DemotePod { pod: p2 }, 0.0)
+            .unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig {
+            keep_alive: 300.0,
+            ..HybridConfig::default()
+        });
+        // Demand just above the resident pod's capacity: vertical runway on
+        // GPU-0 is exhausted (quota 600+400 committed), so the gap must be
+        // covered horizontally — and the parked replica is the cheapest way.
+        let cap1 = pred.capacity(PredictQuery::new(&spec.graph, 8, 0.5, 0.6));
+        let actions = hs.plan(&spec, cap1, &c, &pred, 10.0);
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, ScalingAction::PromotePod { pod } if *pod == p2)),
+            "{actions:?}"
+        );
+        assert!(
+            !actions
+                .iter()
+                .any(|a| matches!(a, ScalingAction::CreatePod { .. })),
+            "the parked pod covers the gap — no cold start needed: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn parked_pods_are_invisible_to_capacity_and_vertical_scaling() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let p1 =
+            place_pod(&mut recon, &mut c, &pm, "resnet50", GpuId(0), 500, 400, 8, 0.0).unwrap();
+        recon
+            .apply(&mut c, &pm, &ScalingAction::DemotePod { pod: p1 }, 0.0)
+            .unwrap();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig {
+            keep_alive: 300.0,
+            ..HybridConfig::default()
+        });
+        // The only pod is parked ⇒ C_f = 0 and any demand triggers scale-up;
+        // the parked pod must come back via PromotePod, never SetQuota.
+        let actions = hs.plan(&spec, 5.0, &c, &pred, 10.0);
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, ScalingAction::PromotePod { pod } if *pod == p1)),
+            "{actions:?}"
+        );
+        assert!(
+            !actions
+                .iter()
+                .any(|a| matches!(a, ScalingAction::SetQuota { .. })),
+            "host-cached pods must not receive quota writes: {actions:?}"
+        );
     }
 }

@@ -11,9 +11,14 @@
 //!   each function gets a **fixed** most-efficient (sm, quota) slice chosen
 //!   once via the predictor, then scales horizontally only, paying container
 //!   cold starts. No vertical scaling: bursts must wait for new replicas.
+//! * [`TorporPolicy`] — Torpor/FaaSwap-like swap tier: the same fixed
+//!   fine-grained slices, but idle replicas are **demoted** to host memory
+//!   after a short idle window and **promoted** (host→device swap) on
+//!   demand. GPU-frugal — parked replicas bill at the reduced host-cached
+//!   rate — at the price of a swap-latency TTFT tail at every burst head.
 
 use crate::autoscaler::ScalingPolicy;
-use crate::cluster::{ClusterState, FunctionSpec, GpuId, Pod, PodPhase, ScalingAction};
+use crate::cluster::{ClusterState, FunctionSpec, GpuId, Pod, PodPhase, PodState, ScalingAction};
 use crate::rapp::{min_feasible_quota, LatencyPredictor, PredictQuery};
 use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, SM_FULL};
 use std::collections::BTreeMap;
@@ -66,6 +71,54 @@ fn class_feasible_memo<'a>(
         cache.push((c.name.clone(), ok));
         ok
     }
+}
+
+/// The offline "most efficient configuration" search shared by the
+/// fine-grained baselines: the slice maximising throughput-per-GPU-share
+/// subject to the SLO.
+///
+/// Efficiency `cap/(sm×quota)` is quota-invariant (capacity is linear in
+/// quota), so per SM class the winner is the *smallest* SLO-feasible
+/// quota — found by bisection over the monotone quota axis instead of a
+/// full grid sweep. Callers memoise per function; lookups go through the
+/// run's shared capacity cache.
+fn efficient_slice(f: &FunctionSpec, predictor: &dyn LatencyPredictor) -> (SmMille, QuotaMille) {
+    let mut best: Option<(f64, SmMille, QuotaMille)> = None;
+    let mut fallback = (0.0f64, SM_FULL, QUOTA_FULL);
+    for sm in (100..=SM_FULL).step_by(100) {
+        let smf = crate::vgpu::sm_to_f64(sm);
+        let cap_full = predictor.capacity(PredictQuery::new(
+            &f.graph,
+            f.batch,
+            smf,
+            crate::vgpu::quota_to_f64(QUOTA_FULL),
+        ));
+        if cap_full > fallback.0 {
+            fallback = (cap_full, sm, QUOTA_FULL);
+        }
+        // FaST-GShare maximises throughput-per-GPU-share subject to the
+        // SLO — it runs with latency close to the bound and no headroom
+        // (the source of its persistent violations under fluctuation,
+        // paper §4.3).
+        let Some(q) = min_feasible_quota(100, QUOTA_FULL, |q| {
+            predictor.latency(PredictQuery::new(
+                &f.graph,
+                f.batch,
+                smf,
+                crate::vgpu::quota_to_f64(q),
+            )) <= f.slo
+        }) else {
+            continue;
+        };
+        let qf = crate::vgpu::quota_to_f64(q);
+        let cap = predictor.capacity(PredictQuery::new(&f.graph, f.batch, smf, qf));
+        let eff = cap / (smf * qf);
+        if best.map_or(true, |(e, _, _)| eff > e) {
+            best = Some((eff, sm, q));
+        }
+    }
+    best.map(|(_, s, q)| (s, q))
+        .unwrap_or((fallback.1, fallback.2))
 }
 
 /// KServe-like: whole-GPU pods, horizontal-only.
@@ -202,14 +255,8 @@ impl Default for FastGSharePolicy {
 }
 
 impl FastGSharePolicy {
-    /// The offline "most efficient configuration" search: the slice
-    /// maximising throughput-per-GPU-share subject to the SLO.
-    ///
-    /// Efficiency `cap/(sm×quota)` is quota-invariant (capacity is linear in
-    /// quota), so per SM class the winner is the *smallest* SLO-feasible
-    /// quota — found by bisection over the monotone quota axis instead of
-    /// the seed's full grid sweep. Runs once per function; lookups go
-    /// through the run's shared capacity cache.
+    /// Memoised [`efficient_slice`] — FaST-GShare's offline profiling step,
+    /// run once per function.
     fn slice_for(
         &mut self,
         f: &FunctionSpec,
@@ -218,43 +265,7 @@ impl FastGSharePolicy {
         if let Some(&s) = self.slices.get(&f.name) {
             return s;
         }
-        let mut best: Option<(f64, SmMille, QuotaMille)> = None;
-        let mut fallback = (0.0f64, SM_FULL, QUOTA_FULL);
-        for sm in (100..=SM_FULL).step_by(100) {
-            let smf = crate::vgpu::sm_to_f64(sm);
-            let cap_full = predictor.capacity(PredictQuery::new(
-                &f.graph,
-                f.batch,
-                smf,
-                crate::vgpu::quota_to_f64(QUOTA_FULL),
-            ));
-            if cap_full > fallback.0 {
-                fallback = (cap_full, sm, QUOTA_FULL);
-            }
-            // FaST-GShare maximises throughput-per-GPU-share subject to the
-            // SLO — it runs with latency close to the bound and no headroom
-            // (the source of its persistent violations under fluctuation,
-            // paper §4.3).
-            let Some(q) = min_feasible_quota(100, QUOTA_FULL, |q| {
-                predictor.latency(PredictQuery::new(
-                    &f.graph,
-                    f.batch,
-                    smf,
-                    crate::vgpu::quota_to_f64(q),
-                )) <= f.slo
-            }) else {
-                continue;
-            };
-            let qf = crate::vgpu::quota_to_f64(q);
-            let cap = predictor.capacity(PredictQuery::new(&f.graph, f.batch, smf, qf));
-            let eff = cap / (smf * qf);
-            if best.map_or(true, |(e, _, _)| eff > e) {
-                best = Some((eff, sm, q));
-            }
-        }
-        let slice = best
-            .map(|(_, s, q)| (s, q))
-            .unwrap_or((fallback.1, fallback.2));
+        let slice = efficient_slice(f, predictor);
         self.slices.insert(f.name.clone(), slice);
         slice
     }
@@ -360,6 +371,168 @@ impl ScalingPolicy for FastGSharePolicy {
                 if !actions.is_empty() {
                     self.last_scale_down.insert(f.name.clone(), now);
                 }
+            }
+        }
+        actions
+    }
+}
+
+/// Torpor/FaaSwap-like: fine-grained slices with a host-memory swap tier.
+///
+/// Replicas are sized like FaST-GShare (fixed most-efficient slice), but a
+/// function idle past [`Self::idle_timeout`] has *all* its resident
+/// replicas demoted to host memory — weights parked, device memory freed,
+/// billing dropped to the host-cached rate. Demand revives parked replicas
+/// via promotion (one host→device swap) before any cold CreatePod; parked
+/// replicas idle past [`Self::keep_alive`] are deleted for real. This is
+/// the GPU-frugal design point the paper's keep-alive floor is compared
+/// against: cheaper than always-on, but every burst head pays the swap
+/// latency in TTFT.
+pub struct TorporPolicy {
+    slices: BTreeMap<String, (SmMille, QuotaMille)>,
+    pub target_util: f64,
+    /// Seconds without a single arrival before resident replicas are parked.
+    pub idle_timeout: f64,
+    /// Seconds a parked replica survives before actual deletion.
+    pub keep_alive: f64,
+    last_active: BTreeMap<String, f64>,
+    ewma: BTreeMap<String, f64>,
+    pub ewma_alpha: f64,
+}
+
+impl Default for TorporPolicy {
+    fn default() -> Self {
+        TorporPolicy {
+            slices: BTreeMap::new(),
+            target_util: 0.7,
+            // Torpor reclaims device memory aggressively — swaps are assumed
+            // cheap, so the idle window is an order of magnitude shorter
+            // than the baselines' scale-down cooldowns.
+            idle_timeout: 10.0,
+            keep_alive: 300.0,
+            last_active: BTreeMap::new(),
+            ewma: BTreeMap::new(),
+            ewma_alpha: 0.3,
+        }
+    }
+}
+
+impl TorporPolicy {
+    fn slice_for(
+        &mut self,
+        f: &FunctionSpec,
+        predictor: &dyn LatencyPredictor,
+    ) -> (SmMille, QuotaMille) {
+        if let Some(&s) = self.slices.get(&f.name) {
+            return s;
+        }
+        let slice = efficient_slice(f, predictor);
+        self.slices.insert(f.name.clone(), slice);
+        slice
+    }
+}
+
+impl ScalingPolicy for TorporPolicy {
+    fn name(&self) -> &str {
+        "torpor-like"
+    }
+
+    fn plan(
+        &mut self,
+        f: &FunctionSpec,
+        observed_rps: f64,
+        cluster: &ClusterState,
+        predictor: &dyn LatencyPredictor,
+        now: f64,
+    ) -> Vec<ScalingAction> {
+        let rate = {
+            let e = self.ewma.entry(f.name.clone()).or_insert(observed_rps);
+            *e = (1.0 - self.ewma_alpha) * *e + self.ewma_alpha * observed_rps;
+            *e
+        };
+        // The idle clock starts at the first plan tick and resets on any
+        // arrival — parking keys off real silence, not the EWMA's slow
+        // decay tail.
+        let last_active = self.last_active.entry(f.name.clone()).or_insert(now);
+        if observed_rps > 0.0 {
+            *last_active = now;
+        }
+        let idle = now - *last_active > self.idle_timeout;
+
+        let (sm, quota) = self.slice_for(f, predictor);
+        let all = cluster.pods_of(&f.name);
+        let mut parked: Vec<&Pod> = all
+            .iter()
+            .copied()
+            .filter(|p| p.phase != PodPhase::Draining && p.state == PodState::HostCached)
+            .collect();
+        let resident: Vec<&Pod> = all
+            .into_iter()
+            .filter(|p| p.phase != PodPhase::Draining && p.state != PodState::HostCached)
+            .collect();
+        let mut actions = Vec::new();
+
+        if idle {
+            // Park everything; reap parked replicas past the keep-alive.
+            for p in &resident {
+                actions.push(ScalingAction::DemotePod { pod: p.id });
+            }
+            for p in &parked {
+                if now - p.state_since > self.keep_alive {
+                    actions.push(ScalingAction::RemovePod { pod: p.id });
+                }
+            }
+            return actions;
+        }
+
+        let slice_cap = predictor.capacity(PredictQuery::new(
+            &f.graph,
+            f.batch,
+            crate::vgpu::sm_to_f64(sm),
+            crate::vgpu::quota_to_f64(quota),
+        ));
+        let desired = ((rate / (slice_cap * self.target_util)).ceil() as usize).max(1);
+        let current = resident.len();
+        if desired > current {
+            let mut need = desired - current;
+            // Most recently parked first: their host copies are warmest and
+            // ties break deterministically on pod id.
+            parked.sort_by(|a, b| {
+                b.state_since
+                    .partial_cmp(&a.state_since)
+                    .unwrap()
+                    .then(a.id.0.cmp(&b.id.0))
+            });
+            for p in &parked {
+                if need == 0 {
+                    break;
+                }
+                actions.push(ScalingAction::PromotePod { pod: p.id });
+                need -= 1;
+            }
+            if need > 0 {
+                // Cold create only once the swap tier is exhausted — one per
+                // tick, reconcile-loop style (see FastGShare's note).
+                if let Some((gpu, new_gpu)) =
+                    FastGSharePolicy::find_gpu(cluster, f, predictor, sm, quota)
+                {
+                    actions.push(ScalingAction::CreatePod {
+                        function: f.name.clone(),
+                        gpu,
+                        sm,
+                        quota,
+                        batch: f.batch,
+                        new_gpu,
+                    });
+                }
+            }
+        } else if desired < current {
+            // Surplus goes to the swap tier immediately (no cooldown:
+            // demotion is reversible at one swap, unlike deletion).
+            let mut victims: Vec<&&Pod> = resident.iter().collect();
+            victims.sort_by(|a, b| b.created_at.partial_cmp(&a.created_at).unwrap());
+            for v in victims.into_iter().take(current - desired) {
+                actions.push(ScalingAction::DemotePod { pod: v.id });
             }
         }
         actions
@@ -564,6 +737,68 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn torpor_parks_idle_replicas_then_revives_them_on_demand() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pred = OraclePredictor::default();
+        let mut tp = TorporPolicy::default();
+        // Bootstrap a replica under live traffic.
+        let boot = tp.plan(&spec, 5.0, &c, &pred, 0.0);
+        assert!(
+            matches!(boot.as_slice(), [ScalingAction::CreatePod { .. }]),
+            "{boot:?}"
+        );
+        for a in &boot {
+            recon.apply(&mut c, &pm, a, 0.0).unwrap();
+        }
+        let pod = c.pods_of(&spec.name)[0].id;
+        // Silence inside the idle window: nothing happens.
+        let quiet = tp.plan(&spec, 0.0, &c, &pred, 5.0);
+        assert!(quiet.is_empty(), "{quiet:?}");
+        // Silence past the window: the replica is parked, not deleted.
+        let parked_at = 20.0;
+        let park = tp.plan(&spec, 0.0, &c, &pred, parked_at);
+        assert!(
+            matches!(park.as_slice(), [ScalingAction::DemotePod { pod: p }] if *p == pod),
+            "{park:?}"
+        );
+        for a in &park {
+            recon.apply(&mut c, &pm, a, parked_at).unwrap();
+        }
+        // Demand returns: the parked replica is promoted — never a cold
+        // CreatePod while the swap tier can cover the gap.
+        let revive = tp.plan(&spec, 5.0, &c, &pred, 30.0);
+        assert!(
+            matches!(revive.as_slice(), [ScalingAction::PromotePod { pod: p }] if *p == pod),
+            "{revive:?}"
+        );
+    }
+
+    #[test]
+    fn torpor_reaps_parked_replicas_past_keep_alive() {
+        let (mut c, mut recon, pm, spec) = setup();
+        let pred = OraclePredictor::default();
+        let mut tp = TorporPolicy::default();
+        assert_eq!(tp.name(), "torpor-like");
+        for a in tp.plan(&spec, 5.0, &c, &pred, 0.0) {
+            recon.apply(&mut c, &pm, &a, 0.0).unwrap();
+        }
+        let pod = c.pods_of(&spec.name)[0].id;
+        for a in tp.plan(&spec, 0.0, &c, &pred, 20.0) {
+            recon.apply(&mut c, &pm, &a, 20.0).unwrap();
+        }
+        assert_eq!(c.pod(pod).unwrap().state, crate::cluster::PodState::HostCached);
+        // Still parked inside the keep-alive horizon.
+        let mid = tp.plan(&spec, 0.0, &c, &pred, 100.0);
+        assert!(mid.is_empty(), "{mid:?}");
+        // Past it: deleted for real.
+        let late = tp.plan(&spec, 0.0, &c, &pred, 400.0);
+        assert!(
+            matches!(late.as_slice(), [ScalingAction::RemovePod { pod: p }] if *p == pod),
+            "{late:?}"
+        );
     }
 
     #[test]

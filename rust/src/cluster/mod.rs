@@ -70,6 +70,44 @@ pub enum PodPhase {
     Draining,
 }
 
+/// Where a pod's model weights live — the cold-start axis (Torpor/FaaSwap
+/// design space). Orthogonal to [`PodPhase`]: phase tracks the container's
+/// serving lifecycle, state tracks weight residency. Only `DeviceResident`
+/// pods can serve; a `HostCached` pod is parked (weights in host memory,
+/// billed at the reduced host-memory rate) and must be promoted — paying
+/// the host→device swap — before serving again.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodState {
+    /// No weights staged anywhere yet (freshly scheduled).
+    Cold,
+    /// Weights parked in host memory; device SM/quota held but idle.
+    HostCached,
+    /// Weights on the device: the only state that serves traffic.
+    DeviceResident,
+}
+
+impl PodState {
+    /// Legal state-machine edges: `Cold → HostCached → DeviceResident` with
+    /// demotion back to `HostCached` (weights are never dropped to `Cold`
+    /// while the pod exists — removal is the only way out).
+    pub fn can_transition(self, to: PodState) -> bool {
+        matches!(
+            (self, to),
+            (PodState::Cold, PodState::HostCached)
+                | (PodState::HostCached, PodState::DeviceResident)
+                | (PodState::DeviceResident, PodState::HostCached)
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PodState::Cold => "cold",
+            PodState::HostCached => "host-cached",
+            PodState::DeviceResident => "device-resident",
+        }
+    }
+}
+
 /// A function instance bound to an SM partition + quota on one GPU.
 #[derive(Clone, Debug)]
 pub struct Pod {
@@ -80,6 +118,13 @@ pub struct Pod {
     pub quota: QuotaMille,
     pub batch: u32,
     pub phase: PodPhase,
+    /// Weight residency (the cold-start axis). Pods created under the
+    /// default zero-latency lifecycle config are born `DeviceResident`.
+    pub state: PodState,
+    /// When the pod entered its current [`PodState`] (keep-alive clock).
+    pub state_since: f64,
+    /// Model weight footprint in bytes (what a host↔device swap moves).
+    pub weight_bytes: f64,
     pub created_at: f64,
 }
 
@@ -89,6 +134,9 @@ impl Pod {
     }
 
     pub fn is_ready(&self, now: f64) -> bool {
+        if self.state != PodState::DeviceResident {
+            return false;
+        }
         match self.phase {
             PodPhase::ColdStarting { ready_at } => now >= ready_at,
             PodPhase::Running => true,
@@ -174,6 +222,42 @@ impl ClusterState {
 
     pub fn pod_mut(&mut self, id: PodId) -> Option<&mut Pod> {
         self.pods.get_mut(&id)
+    }
+
+    /// Move a pod along the lifecycle state machine, keeping the vGPU's
+    /// device/host memory accounting in sync. Rejects illegal edges (see
+    /// [`PodState::can_transition`]). Demotion parks the weight footprint in
+    /// host memory; promotion requires that much free device memory.
+    pub fn set_pod_state(&mut self, id: PodId, to: PodState, now: f64) -> Result<(), String> {
+        let (from, gpu, bytes) = {
+            let p = self
+                .pods
+                .get(&id)
+                .ok_or_else(|| format!("unknown pod {id:?}"))?;
+            (p.state, p.gpu, p.weight_bytes)
+        };
+        if !from.can_transition(to) {
+            return Err(format!(
+                "illegal pod state transition {} -> {}",
+                from.name(),
+                to.name()
+            ));
+        }
+        match (from, to) {
+            (PodState::DeviceResident, PodState::HostCached) => {
+                self.gpus[gpu.0].swap_out(bytes);
+            }
+            (PodState::HostCached, PodState::DeviceResident) => {
+                self.gpus[gpu.0]
+                    .swap_in(bytes)
+                    .map_err(|e| e.to_string())?;
+            }
+            _ => {}
+        }
+        let p = self.pods.get_mut(&id).expect("pod checked above");
+        p.state = to;
+        p.state_since = now;
+        Ok(())
     }
 
     /// Pods of one function (any phase).
@@ -418,6 +502,9 @@ mod tests {
             quota: 500,
             batch: 4,
             phase: PodPhase::ColdStarting { ready_at: 5.0 },
+            state: PodState::DeviceResident,
+            state_since: 0.0,
+            weight_bytes: 1e8,
             created_at: 0.0,
         };
         assert!(!pod.is_ready(4.9));
@@ -425,6 +512,67 @@ mod tests {
         let mut draining = pod.clone();
         draining.phase = PodPhase::Draining;
         assert!(!draining.is_ready(100.0));
+        // Non-resident weights gate readiness regardless of phase.
+        let mut parked = pod.clone();
+        parked.phase = PodPhase::Running;
+        parked.state = PodState::HostCached;
+        assert!(!parked.is_ready(100.0));
+    }
+
+    #[test]
+    fn pod_state_machine_edges() {
+        use PodState::*;
+        assert!(Cold.can_transition(HostCached));
+        assert!(HostCached.can_transition(DeviceResident));
+        assert!(DeviceResident.can_transition(HostCached));
+        for (from, to) in [
+            (Cold, DeviceResident),
+            (DeviceResident, Cold),
+            (HostCached, Cold),
+            (Cold, Cold),
+            (HostCached, HostCached),
+            (DeviceResident, DeviceResident),
+        ] {
+            assert!(!from.can_transition(to), "{from:?} -> {to:?}");
+        }
+    }
+
+    #[test]
+    fn set_pod_state_swaps_memory_accounting() {
+        let mut c = test_cluster();
+        let spec = c.function("resnet50").unwrap().clone();
+        let id = c.alloc_pod_id();
+        let mem = spec.graph.memory_bytes(8);
+        let weights = 4.0 * spec.graph.total_params();
+        c.gpu_mut(GpuId(0))
+            .attach(ClientId(id.0), 500, 500, mem)
+            .unwrap();
+        c.insert_pod(Pod {
+            id,
+            function: "resnet50".into(),
+            gpu: GpuId(0),
+            sm: 500,
+            quota: 500,
+            batch: 8,
+            phase: PodPhase::Running,
+            state: PodState::DeviceResident,
+            state_since: 0.0,
+            weight_bytes: weights,
+            created_at: 0.0,
+        });
+        let free0 = c.gpu(GpuId(0)).mem_free();
+        c.set_pod_state(id, PodState::HostCached, 1.0).unwrap();
+        assert_eq!(c.pod(id).unwrap().state, PodState::HostCached);
+        assert!((c.pod(id).unwrap().state_since - 1.0).abs() < 1e-12);
+        assert!((c.gpu(GpuId(0)).mem_free() - (free0 + weights)).abs() < 1.0);
+        assert!((c.gpu(GpuId(0)).host_mem_used() - weights).abs() < 1.0);
+        // Illegal edge rejected, state untouched.
+        assert!(c.set_pod_state(id, PodState::HostCached, 2.0).is_err());
+        assert!((c.pod(id).unwrap().state_since - 1.0).abs() < 1e-12);
+        c.set_pod_state(id, PodState::DeviceResident, 3.0).unwrap();
+        assert!((c.gpu(GpuId(0)).mem_free() - free0).abs() < 1.0);
+        assert_eq!(c.gpu(GpuId(0)).host_mem_used(), 0.0);
+        c.check_invariants().unwrap();
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! applied through [`Reconfigurator::apply`], which keeps the cluster state,
 //! vGPU accounting, device files, and (in real mode) token schedulers in sync.
 
-use super::{ClusterState, GpuId, Pod, PodId, PodPhase};
+use super::{ClusterState, GpuId, Pod, PodId, PodPhase, PodState};
 use crate::perf::PerfModel;
 use crate::util::prng::Pcg64;
 use crate::vgpu::device_file::DeviceFile;
@@ -32,6 +32,13 @@ pub enum ScalingAction {
     },
     /// Horizontal scale-down (↓): drain and remove a pod.
     RemovePod { pod: PodId },
+    /// Keep-alive demotion: park the pod's weights in host memory
+    /// (`DeviceResident → HostCached`); SM/quota stay reserved, billing
+    /// drops to the host-memory rate.
+    DemotePod { pod: PodId },
+    /// Swap-in promotion: bring parked weights back to the device
+    /// (`HostCached → DeviceResident`), paying the host→device transfer.
+    PromotePod { pod: PodId },
 }
 
 /// Outcome of applying one action.
@@ -40,6 +47,10 @@ pub enum Applied {
     QuotaSet { pod: PodId, old: QuotaMille, new: QuotaMille },
     PodCreated { pod: PodId, ready_at: f64 },
     PodRemoved { pod: PodId },
+    PodDemoted { pod: PodId },
+    /// `ready_at` is when the host→device swap completes and the pod can
+    /// serve again.
+    PodPromoted { pod: PodId, ready_at: f64 },
 }
 
 pub struct Reconfigurator {
@@ -124,7 +135,16 @@ impl Reconfigurator {
                 let jitter = 1.0 + cs.jitter * (2.0 * self.rng.next_f64() - 1.0);
                 // Model-load time scales with weights over PCIe-ish 8 GB/s.
                 let load = 4.0 * spec.graph.total_params() / 8e9;
-                let ready_at = now + base * jitter + load;
+                // Lifecycle traversal Cold → HostCached → DeviceResident:
+                // host staging + host→device swap, scaled by the class
+                // clock. Both terms are exactly 0.0 under the default
+                // (infinite-bandwidth) device spec, so `ready_at` is
+                // bit-identical to the historical formula (`x + 0.0` is
+                // exact in IEEE 754) — the byte-identity contract.
+                let factor = cluster.gpu(*gpu).throughput();
+                let stage = perf.cold_load_time(&spec.graph)
+                    + perf.swap_time_class(&spec.graph, factor);
+                let ready_at = now + base * jitter + load + stage;
                 let pod = Pod {
                     id,
                     function: function.clone(),
@@ -133,6 +153,9 @@ impl Reconfigurator {
                     quota: *quota,
                     batch: *batch,
                     phase: PodPhase::ColdStarting { ready_at },
+                    state: PodState::DeviceResident,
+                    state_since: now,
+                    weight_bytes: 4.0 * spec.graph.total_params(),
                     created_at: now,
                 };
                 cluster.insert_pod(pod);
@@ -150,12 +173,61 @@ impl Reconfigurator {
                     .ok_or(AllocError::UnknownClient(crate::vgpu::ClientId(pod.0)))?;
                 let spec = cluster.function(&p.function).expect("function exists");
                 let mem = spec.graph.memory_bytes(p.batch);
-                cluster.gpu_mut(p.gpu).detach(p.client_id(), mem)?;
+                // A parked pod's weights live in the host tier, not on the
+                // device — free each side exactly what it holds.
+                let (dev_mem, host_mem) = if p.state == PodState::HostCached {
+                    (mem - p.weight_bytes, p.weight_bytes)
+                } else {
+                    (mem, 0.0)
+                };
+                cluster.gpu_mut(p.gpu).detach(p.client_id(), dev_mem)?;
+                if host_mem > 0.0 {
+                    cluster.gpu_mut(p.gpu).release_host(host_mem);
+                }
                 self.device_files[p.gpu.0].remove_client(p.client_id());
                 if let Some(scheds) = &self.schedulers {
                     scheds[p.gpu.0].deregister(p.client_id());
                 }
                 Ok(Applied::PodRemoved { pod: *pod })
+            }
+            ScalingAction::DemotePod { pod } => {
+                let p = cluster
+                    .pod(*pod)
+                    .ok_or(AllocError::UnknownClient(crate::vgpu::ClientId(pod.0)))?;
+                if p.state != PodState::DeviceResident
+                    || matches!(p.phase, PodPhase::Draining)
+                {
+                    return Err(AllocError::BadState(p.client_id()));
+                }
+                cluster
+                    .set_pod_state(*pod, PodState::HostCached, now)
+                    .expect("edge checked above");
+                Ok(Applied::PodDemoted { pod: *pod })
+            }
+            ScalingAction::PromotePod { pod } => {
+                let (state, gpu, function) = {
+                    let p = cluster
+                        .pod(*pod)
+                        .ok_or(AllocError::UnknownClient(crate::vgpu::ClientId(pod.0)))?;
+                    (p.state, p.gpu, p.function.clone())
+                };
+                if state != PodState::HostCached {
+                    return Err(AllocError::BadState(crate::vgpu::ClientId(pod.0)));
+                }
+                let spec = cluster.function(&function).expect("function exists").clone();
+                let factor = cluster.gpu(gpu).throughput();
+                // swap_in is the fallible step (device memory pressure) —
+                // only on success does the pod become resident.
+                cluster
+                    .set_pod_state(*pod, PodState::DeviceResident, now)
+                    .map_err(|_| AllocError::NoMemory {
+                        need: 4.0 * spec.graph.total_params(),
+                        free: cluster.gpu(gpu).mem_free(),
+                    })?;
+                let ready_at = now + perf.swap_time_class(&spec.graph, factor);
+                let p = cluster.pod_mut(*pod).expect("pod exists");
+                p.phase = PodPhase::ColdStarting { ready_at };
+                Ok(Applied::PodPromoted { pod: *pod, ready_at })
             }
         }
     }
@@ -326,6 +398,91 @@ mod tests {
         // Failed placement must not leak state.
         c.check_invariants().unwrap();
         assert_eq!(c.pods_of("resnet50").len(), 1);
+    }
+
+    #[test]
+    fn pods_born_device_resident_with_weight_footprint() {
+        let (mut c, mut r, pm) = setup();
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let p = c.pod(pod).unwrap();
+        assert_eq!(p.state, PodState::DeviceResident);
+        let spec = c.function("resnet50").unwrap();
+        assert!((p.weight_bytes - 4.0 * spec.graph.total_params()).abs() < 1.0);
+        // Default (infinite-bandwidth) spec: lifecycle terms add exactly 0.
+        assert_eq!(pm.cold_load_time(&spec.graph).to_bits(), 0.0f64.to_bits());
+        assert_eq!(
+            pm.swap_time_class(&spec.graph, 1.0).to_bits(),
+            0.0f64.to_bits()
+        );
+    }
+
+    #[test]
+    fn demote_promote_roundtrip_and_bad_states() {
+        let (mut c, mut r, pm) = setup();
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let free0 = c.gpu(GpuId(0)).mem_free();
+        let weights = c.pod(pod).unwrap().weight_bytes;
+
+        let a = r
+            .apply(&mut c, &pm, &ScalingAction::DemotePod { pod }, 5.0)
+            .unwrap();
+        assert_eq!(a, Applied::PodDemoted { pod });
+        assert_eq!(c.pod(pod).unwrap().state, PodState::HostCached);
+        assert!((c.gpu(GpuId(0)).mem_free() - (free0 + weights)).abs() < 1.0);
+        assert!(!c.pod(pod).unwrap().is_ready(100.0));
+        // Double demote is illegal.
+        assert!(matches!(
+            r.apply(&mut c, &pm, &ScalingAction::DemotePod { pod }, 6.0),
+            Err(AllocError::BadState(_))
+        ));
+
+        let a = r
+            .apply(&mut c, &pm, &ScalingAction::PromotePod { pod }, 7.0)
+            .unwrap();
+        let Applied::PodPromoted { ready_at, .. } = a else { panic!() };
+        // Default spec: swap completes instantly (exact zero).
+        assert_eq!(ready_at.to_bits(), 7.0f64.to_bits());
+        assert_eq!(c.pod(pod).unwrap().state, PodState::DeviceResident);
+        assert!(c.pod(pod).unwrap().is_ready(7.0));
+        assert!((c.gpu(GpuId(0)).mem_free() - free0).abs() < 1.0);
+        // Promote a resident pod is illegal.
+        assert!(matches!(
+            r.apply(&mut c, &pm, &ScalingAction::PromotePod { pod }, 8.0),
+            Err(AllocError::BadState(_))
+        ));
+        c.check_invariants().unwrap();
+
+        // Removing a parked pod frees both tiers.
+        r.apply(&mut c, &pm, &ScalingAction::DemotePod { pod }, 9.0)
+            .unwrap();
+        r.apply(&mut c, &pm, &ScalingAction::RemovePod { pod }, 10.0)
+            .unwrap();
+        assert!(c.gpu(GpuId(0)).is_idle());
+        assert_eq!(c.gpu(GpuId(0)).host_mem_used(), 0.0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn finite_swap_bandwidth_delays_promotion() {
+        let (mut c, mut r, _) = setup();
+        let pm = PerfModel::new(crate::perf::DeviceSpec {
+            host_load_bw: 1e9,
+            h2d_bw: 2e8,
+            ..Default::default()
+        });
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let weights = c.pod(pod).unwrap().weight_bytes;
+        r.apply(&mut c, &pm, &ScalingAction::DemotePod { pod }, 5.0)
+            .unwrap();
+        let Applied::PodPromoted { ready_at, .. } = r
+            .apply(&mut c, &pm, &ScalingAction::PromotePod { pod }, 6.0)
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!((ready_at - (6.0 + weights / 2e8)).abs() < 1e-9);
+        assert!(!c.pod(pod).unwrap().is_ready(6.0));
+        assert!(c.pod(pod).unwrap().is_ready(ready_at));
     }
 
     #[test]

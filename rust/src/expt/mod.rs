@@ -199,7 +199,20 @@ impl ScenarioMatrix {
         let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
         let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
             .generate(&names);
-        let perf = PerfModel::default();
+        let mut sim_cfg = SimConfig::for_experiment(self.gpus, cell.seed, spec.billing)
+            .with_fleet(fleet.classes_for(self.gpus));
+        // The cold-start-storm preset is the pod-lifecycle probe: the fleet
+        // starts empty (no warm bootstrap), cold loads and host↔device
+        // swaps take real time, and the cell reports TTFT percentiles.
+        // Every other preset keeps the zero-latency default PerfModel and
+        // warm start, so pre-existing cells keep their exact bytes.
+        let perf = if cell.preset == Preset::ColdStartStorm {
+            sim_cfg.warm_start = false;
+            sim_cfg.lifecycle = true;
+            PerfModel::with_swap_tier()
+        } else {
+            PerfModel::default()
+        };
         let predictor = spec.build_predictor();
         let mut policy = spec.policy();
         // Every cell runs through the fleet-built cluster — for the default
@@ -211,8 +224,7 @@ impl ScenarioMatrix {
             &trace,
             predictor.as_ref(),
             &perf,
-            &SimConfig::for_experiment(self.gpus, cell.seed, spec.billing)
-                .with_fleet(fleet.classes_for(self.gpus)),
+            &sim_cfg,
         );
         let result = CellResult::from_report(&canonical, &fns, &report);
         (report, result)
@@ -311,10 +323,11 @@ pub fn parse_presets(specs: &[String]) -> anyhow::Result<Vec<Preset>> {
         } else if let Some(p) = Preset::from_name(t) {
             push(p, &mut out);
         } else {
-            let valid: Vec<&str> = ALL_PRESETS.iter().map(|p| p.name()).collect();
+            // The menu comes from the canonical PRESET_TABLE, so it can
+            // never drift from what from_name accepts.
             anyhow::bail!(
                 "unknown preset '{t}' (expected one of: {}, or 'all')",
-                valid.join(", ")
+                Preset::name_menu()
             );
         }
     }
@@ -432,6 +445,12 @@ pub struct CellResult {
     /// P99 end-to-end latency merged across all functions (seconds; `0.0`
     /// when nothing was served).
     pub p99_latency: f64,
+    /// Time-to-first-token P50/P99 (arrival → dispatch, seconds). Only
+    /// populated — and only exported — for lifecycle-aware cells (the
+    /// cold-start-storm preset); `None` cells keep their pre-lifecycle
+    /// bytes. `Some(0.0)` when a lifecycle run served nothing.
+    pub ttft_p50: Option<f64>,
+    pub ttft_p99: Option<f64>,
     /// sm×quota-weighted GPU-seconds billed over the run.
     pub gpu_seconds: f64,
     pub total_cost: f64,
@@ -451,6 +470,16 @@ impl CellResult {
     pub fn from_report(cell: &ScenarioCell, fns: &[FunctionSpec], report: &RunReport) -> Self {
         let mut merged = report.merged_latency_summary();
         let p99_latency = if merged.is_empty() { 0.0 } else { merged.p99() };
+        let (ttft_p50, ttft_p99) = if report.lifecycle {
+            let mut t = report.merged_ttft_summary();
+            if t.is_empty() {
+                (Some(0.0), Some(0.0))
+            } else {
+                (Some(t.p50()), Some(t.p99()))
+            }
+        } else {
+            (None, None)
+        };
         let served = report.total_served();
         let slo_violation_rate =
             report.slo_violation_rate(fns.iter().map(|f| (f.name.as_str(), f.slo)));
@@ -528,6 +557,8 @@ impl CellResult {
             dropped: report.total_dropped(),
             slo_violation_rate,
             p99_latency,
+            ttft_p50,
+            ttft_p99,
             gpu_seconds: report.costs.total_gpu_seconds(),
             total_cost: report.costs.total_cost(),
             cost_per_1k: if served == 0 {
@@ -559,6 +590,16 @@ impl CellResult {
             ("dropped", Json::Num(self.dropped as f64)),
             ("slo_violation_rate", Json::Num(self.slo_violation_rate)),
             ("p99_latency", Json::Num(self.p99_latency)),
+        ]);
+        // Same key-omission rule as fleet/classes: TTFT keys exist only on
+        // lifecycle-aware cells, so pre-lifecycle grids keep their bytes.
+        if let Some(t) = self.ttft_p50 {
+            fields.push(("ttft_p50", Json::Num(t)));
+        }
+        if let Some(t) = self.ttft_p99 {
+            fields.push(("ttft_p99", Json::Num(t)));
+        }
+        fields.extend([
             ("gpu_seconds", Json::Num(self.gpu_seconds)),
             ("total_cost", Json::Num(self.total_cost)),
             ("cost_per_1k", Json::Num(self.cost_per_1k)),
@@ -612,6 +653,9 @@ impl CellResult {
             dropped: j.get("dropped")?.as_usize()?,
             slo_violation_rate: j.get("slo_violation_rate")?.as_f64()?,
             p99_latency: j.get("p99_latency")?.as_f64()?,
+            // Absent TTFT keys ⇒ a pre-lifecycle cell.
+            ttft_p50: j.opt("ttft_p50").map(|v| v.as_f64()).transpose()?,
+            ttft_p99: j.opt("ttft_p99").map(|v| v.as_f64()).transpose()?,
             gpu_seconds: j.get("gpu_seconds")?.as_f64()?,
             total_cost: j.get("total_cost")?.as_f64()?,
             cost_per_1k: j.get("cost_per_1k")?.as_f64()?,
@@ -641,6 +685,11 @@ pub struct SummaryRow {
     pub cells: usize,
     pub slo_violation_rate: f64,
     pub p99_latency: f64,
+    /// Mean TTFT percentiles over the group's lifecycle-aware cells;
+    /// `None` when the group has none (pre-lifecycle rows keep their
+    /// bytes — the keys are omitted from the JSON summary).
+    pub ttft_p50: Option<f64>,
+    pub ttft_p99: Option<f64>,
     pub gpu_seconds: f64,
     pub cost_per_1k: f64,
 }
@@ -660,6 +709,11 @@ pub struct HeadlineRatio {
     pub cost_ratio: Option<f64>,
     /// baseline violation rate over HAS-GPU's (paper: 4.8x for FaST-GShare).
     pub violation_ratio: Option<f64>,
+    /// baseline TTFT P99 over HAS-GPU's. `None` unless both rows carry
+    /// TTFT (lifecycle presets) with a positive denominator — and then
+    /// the key is omitted from JSON entirely, keeping pre-lifecycle
+    /// ratio rows byte-identical.
+    pub ttft_ratio: Option<f64>,
 }
 
 /// Everything one `has-gpu expt` invocation produces: config echo, per-cell
@@ -696,6 +750,15 @@ impl MatrixReport {
                     .filter(|c| c.preset == preset && c.fleet == fleet && c.platform == platform)
                     .collect();
                 let n = group.len() as f64;
+                // TTFT averages over the cells that carry it (lifecycle
+                // runs); a group with none stays `None`.
+                let mean_opt = |vals: Vec<f64>| {
+                    if vals.is_empty() {
+                        None
+                    } else {
+                        Some(vals.iter().sum::<f64>() / vals.len() as f64)
+                    }
+                };
                 SummaryRow {
                     preset,
                     fleet: fleet.to_string(),
@@ -704,6 +767,8 @@ impl MatrixReport {
                     slo_violation_rate: group.iter().map(|c| c.slo_violation_rate).sum::<f64>()
                         / n,
                     p99_latency: group.iter().map(|c| c.p99_latency).sum::<f64>() / n,
+                    ttft_p50: mean_opt(group.iter().filter_map(|c| c.ttft_p50).collect()),
+                    ttft_p99: mean_opt(group.iter().filter_map(|c| c.ttft_p99).collect()),
                     gpu_seconds: group.iter().map(|c| c.gpu_seconds).sum::<f64>() / n,
                     cost_per_1k: group.iter().map(|c| c.cost_per_1k).sum::<f64>() / n,
                 }
@@ -733,6 +798,10 @@ impl MatrixReport {
                 platform: row.platform.clone(),
                 cost_ratio: ratio(row.cost_per_1k, has.cost_per_1k),
                 violation_ratio: ratio(row.slo_violation_rate, has.slo_violation_rate),
+                ttft_ratio: match (row.ttft_p99, has.ttft_p99) {
+                    (Some(num), Some(den)) => ratio(num, den),
+                    _ => None,
+                },
             });
         }
         out
@@ -749,8 +818,15 @@ impl MatrixReport {
     /// familiar shape.
     pub fn table(&self) -> String {
         let with_fleet = self.has_fleet_cells();
-        let rows: Vec<Vec<String>> = self
-            .summary()
+        let summary = self.summary();
+        // TTFT columns appear only when some row actually carries TTFT
+        // (lifecycle presets) — stock grids keep the familiar shape.
+        let with_ttft = summary.iter().any(|r| r.ttft_p99.is_some());
+        let fmt_opt = |v: Option<f64>| match v {
+            Some(t) => format!("{:.1}", t * 1e3),
+            None => "-".to_string(),
+        };
+        let rows: Vec<Vec<String>> = summary
             .iter()
             .map(|r| {
                 let mut row = vec![r.preset.name().to_string()];
@@ -762,6 +838,12 @@ impl MatrixReport {
                     format!("{}", r.cells),
                     format!("{:.4}", r.slo_violation_rate),
                     format!("{:.1}", r.p99_latency * 1e3),
+                ]);
+                if with_ttft {
+                    row.push(fmt_opt(r.ttft_p50));
+                    row.push(fmt_opt(r.ttft_p99));
+                }
+                row.extend([
                     format!("{:.1}", r.gpu_seconds),
                     format!("{:.4}", r.cost_per_1k),
                 ]);
@@ -772,7 +854,11 @@ impl MatrixReport {
         if with_fleet {
             headers.push("fleet");
         }
-        headers.extend(["platform", "seeds", "slo-viol", "p99 (ms)", "gpu-sec", "$/1k"]);
+        headers.extend(["platform", "seeds", "slo-viol", "p99 (ms)"]);
+        if with_ttft {
+            headers.extend(["ttft-p50 (ms)", "ttft-p99 (ms)"]);
+        }
+        headers.extend(["gpu-sec", "$/1k"]);
         ascii_table(&headers, &rows)
     }
 
@@ -790,6 +876,16 @@ impl MatrixReport {
                         ("cells", Json::Num(r.cells as f64)),
                         ("slo_violation_rate", Json::Num(r.slo_violation_rate)),
                         ("p99_latency", Json::Num(r.p99_latency)),
+                    ]);
+                    // Key omission mirrors the cell rule: only lifecycle
+                    // rows export TTFT.
+                    if let Some(t) = r.ttft_p50 {
+                        fields.push(("ttft_p50", Json::Num(t)));
+                    }
+                    if let Some(t) = r.ttft_p99 {
+                        fields.push(("ttft_p99", Json::Num(t)));
+                    }
+                    fields.extend([
                         ("gpu_seconds", Json::Num(r.gpu_seconds)),
                         ("cost_per_1k", Json::Num(r.cost_per_1k)),
                     ]);
@@ -811,6 +907,13 @@ impl MatrixReport {
                         ("cost_ratio", opt_num(r.cost_ratio)),
                         ("violation_ratio", opt_num(r.violation_ratio)),
                     ]);
+                    // Unlike cost/violation (whose None means "undefined
+                    // for this grid"), an absent ttft_ratio means the
+                    // metric doesn't exist for the preset — omit the key
+                    // so pre-lifecycle ratio rows keep their bytes.
+                    if let Some(t) = r.ttft_ratio {
+                        fields.push(("ttft_ratio", Json::Num(t)));
+                    }
                     Json::obj(fields)
                 })
                 .collect(),
@@ -1144,6 +1247,8 @@ mod tests {
             dropped: 0,
             slo_violation_rate: viol,
             p99_latency: 0.1,
+            ttft_p50: None,
+            ttft_p99: None,
             gpu_seconds: 50.0,
             total_cost: cost_per_1k,
             cost_per_1k,
@@ -1215,6 +1320,8 @@ mod tests {
             dropped: 0,
             slo_violation_rate: viol,
             p99_latency: 0.05,
+            ttft_p50: None,
+            ttft_p99: None,
             gpu_seconds: 10.0,
             total_cost: 1.0,
             cost_per_1k: 10.0,
@@ -1257,6 +1364,8 @@ mod tests {
                 dropped: 1,
                 slo_violation_rate: 0.25,
                 p99_latency: 0.125,
+                ttft_p50: None,
+                ttft_p99: None,
                 gpu_seconds: 1.5,
                 total_cost: 0.0125,
                 cost_per_1k: 1.25,
@@ -1311,5 +1420,98 @@ mod tests {
     fn bad_schema_rejected() {
         let j = Json::obj(vec![("schema", Json::Str("something/else".into()))]);
         assert!(MatrixReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn storm_cells_carry_ttft_keys_and_standard_cells_do_not() {
+        let m = ScenarioMatrix {
+            platforms: strs(&["has-gpu"]),
+            presets: vec![Preset::Standard, Preset::ColdStartStorm],
+            seeds: vec![4],
+            seconds: 240,
+            gpus: 6,
+            rps: 40.0,
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        let (std_report, std_cell) = m.run_cell(&cells[0]);
+        let (storm_report, storm_cell) = m.run_cell(&cells[1]);
+        // Standard: pre-lifecycle schema to the byte — no TTFT anywhere.
+        assert!(!std_report.lifecycle);
+        assert_eq!(std_cell.ttft_p50, None);
+        assert!(std_cell.to_json().opt("ttft_p50").is_none());
+        assert!(std_cell.to_json().opt("ttft_p99").is_none());
+        // Storm: lifecycle on, cold fleet, real swap latencies ⇒ TTFT
+        // populated and exported.
+        assert!(storm_report.lifecycle);
+        let (p50, p99) = (storm_cell.ttft_p50.unwrap(), storm_cell.ttft_p99.unwrap());
+        assert!(p50 >= 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+        assert!(
+            storm_cell.to_json().opt("ttft_p99").is_some(),
+            "storm cells export TTFT keys"
+        );
+        // Cold fleet + finite load bandwidth: anyone actually served had
+        // to wait out at least one cold load first.
+        if storm_cell.served > 0 {
+            assert!(p99 > 0.0, "cold-start storm must observe non-zero TTFT");
+        }
+        // And lifecycle cells round-trip losslessly through JSON.
+        let back = CellResult::from_json(&storm_cell.to_json()).unwrap();
+        assert_eq!(back, storm_cell);
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            storm_cell.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn ttft_flows_into_summary_table_and_ratios() {
+        let mut has = mk_cell("has-gpu", Preset::ColdStartStorm, 1, 0.01, 1.0);
+        has.ttft_p50 = Some(0.01);
+        has.ttft_p99 = Some(0.05);
+        let mut torpor = mk_cell("torpor-like", Preset::ColdStartStorm, 1, 0.02, 0.8);
+        torpor.ttft_p50 = Some(0.2);
+        torpor.ttft_p99 = Some(1.0);
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
+            cells: vec![
+                mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
+                mk_cell("torpor-like", Preset::Standard, 1, 0.02, 0.8),
+                has,
+                torpor,
+            ],
+        };
+        let summary = report.summary();
+        assert_eq!(summary.len(), 4);
+        // Standard rows stay TTFT-free; storm rows carry it.
+        assert_eq!(summary[0].ttft_p99, None);
+        assert_eq!(summary[2].ttft_p99, Some(0.05));
+        assert_eq!(summary[3].ttft_p99, Some(1.0));
+        // Ratio rows: standard omits ttft_ratio, storm carries 20x.
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios.len(), 2);
+        assert_eq!(ratios[0].preset, Preset::Standard);
+        assert_eq!(ratios[0].ttft_ratio, None);
+        assert_eq!(ratios[1].preset, Preset::ColdStartStorm);
+        assert!((ratios[1].ttft_ratio.unwrap() - 20.0).abs() < 1e-9);
+        // JSON: the key only exists where the ratio does.
+        let j = report.to_json();
+        let jr = j.get("ratios_vs_has_gpu").unwrap().as_arr().unwrap();
+        assert!(jr[0].opt("ttft_ratio").is_none());
+        assert!(jr[1].opt("ttft_ratio").is_some());
+        // Table grows TTFT columns exactly when some row has them.
+        assert!(report.table().contains("ttft-p99"));
+        let plain = MatrixReport {
+            cells: vec![mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0)],
+            ..report.clone()
+        };
+        assert!(!plain.table().contains("ttft"));
+        // And the whole lifecycle-bearing report round-trips.
+        let back = MatrixReport::from_json(&j).unwrap();
+        assert_eq!(back, report);
+        assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
     }
 }

@@ -18,7 +18,7 @@
 //! enum-era output bytes — pinned by `rust/tests/expt_golden.rs`.
 
 use crate::autoscaler::{HybridAutoscaler, HybridConfig, ScalingAxes, ScalingPolicy};
-use crate::baselines::{FastGSharePolicy, KServePolicy};
+use crate::baselines::{FastGSharePolicy, KServePolicy, TorporPolicy};
 use crate::metrics::BillingMode;
 use crate::perf::PerfModel;
 use crate::rapp::dippm::DippmPredictor;
@@ -339,6 +339,17 @@ impl Default for PlatformRegistry {
             .with_predictor(PredictorSel::Dippm),
         ))
         .unwrap();
+        // A fourth comparison point, deliberately *outside* the stock and
+        // ablation groups so the `all`/`ablations` tokens — and every
+        // existing export built from them — keep their exact cell sets.
+        reg.register(PlatformSpec::new(
+            "torpor-like",
+            "fixed slices with a host-memory swap tier: idle replicas parked, swapped in on demand",
+            BillingMode::FineGrained,
+            PredictorSel::Oracle,
+            || Box::new(TorporPolicy::default()),
+        ))
+        .unwrap();
         reg
     }
 }
@@ -496,7 +507,8 @@ mod tests {
                 "fast-gshare",
                 "has-vertical-only",
                 "has-horizontal-only",
-                "has-dippm"
+                "has-dippm",
+                "torpor-like"
             ]
         );
         assert_eq!(
@@ -627,6 +639,27 @@ mod tests {
             reg.resolve(&["my-platform".to_string()]).unwrap(),
             vec!["my-platform"]
         );
+    }
+
+    #[test]
+    fn torpor_like_registers_outside_the_group_tokens() {
+        let reg = PlatformRegistry::default();
+        let tp = reg.get("torpor-like").unwrap();
+        assert_eq!(tp.group, PlatformGroup::Custom);
+        assert_eq!(tp.billing, BillingMode::FineGrained);
+        assert_eq!(tp.predictor, PredictorSel::Oracle);
+        assert!(tp.hybrid.is_none());
+        assert_eq!(tp.policy().name(), "torpor-like");
+        // Neither group token drags it into pre-existing exports…
+        let full = reg
+            .resolve(&["all".to_string(), "ablations".to_string()])
+            .unwrap();
+        assert!(!full.contains(&"torpor-like".to_string()), "{full:?}");
+        // …but it resolves by name alongside them.
+        let with = reg
+            .resolve(&["all".to_string(), "torpor-like".to_string()])
+            .unwrap();
+        assert_eq!(with.last().map(String::as_str), Some("torpor-like"));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use has_gpu::perf::PerfModel;
 use has_gpu::rapp::{LatencyPredictor, PredictQuery, RappPredictor};
 use has_gpu::util::cli::Cli;
 use has_gpu::util::json;
-use has_gpu::workload::TraceGen;
+use has_gpu::workload::{Preset, TraceGen};
 use std::path::PathBuf;
 
 const USAGE: &str = "has-gpu — Hybrid Auto-scaling Serverless GPU inference (reproduction)
@@ -87,7 +87,11 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Cli::new("has-gpu expt", "scenario-matrix experiment runner")
         .opt_dyn("platforms", "all", registry.cli_help())
         .opt_dyn("fleets", "uniform-v100", fleet_registry.cli_help())
-        .opt("preset", "standard", "comma list of workload presets, or 'all'")
+        .opt_dyn(
+            "preset",
+            "standard",
+            format!("comma list of workload presets ({}), or 'all'", Preset::name_menu()),
+        )
         .opt("seeds", "2", "seed count (expands from --seed-base) or comma list")
         .opt("seed-base", "11", "first seed when --seeds is a count")
         .opt("seconds", "300", "trace length per cell (virtual seconds)")
@@ -126,13 +130,19 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         None => "n/a (has-gpu baseline is 0)".to_string(),
     };
     for r in report.ratios_vs_has_gpu() {
+        // TTFT ratios only exist for lifecycle presets (cold-start-storm).
+        let ttft = match r.ttft_ratio {
+            Some(v) => format!(", ttft-p99 {v:.2}x"),
+            None => String::new(),
+        };
         println!(
-            "{} vs has-gpu @ {} [{}]: cost {}, slo-violations {}",
+            "{} vs has-gpu @ {} [{}]: cost {}, slo-violations {}{}",
             r.platform,
             r.preset.name(),
             r.fleet,
             fmt_ratio(r.cost_ratio),
-            fmt_ratio(r.violation_ratio)
+            fmt_ratio(r.violation_ratio),
+            ttft
         );
     }
     let out = PathBuf::from(args.get("out"));
@@ -157,7 +167,11 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             "uniform-v100",
             format!("one fleet name; registered: {}", fleet_registry.names().join(", ")),
         )
-        .opt("preset", "standard", "one workload preset name")
+        .opt_dyn(
+            "preset",
+            "standard",
+            format!("one workload preset name ({})", Preset::name_menu()),
+        )
         .opt("seconds", "300", "trace length (virtual seconds)")
         .opt("gpus", "10", "cluster size")
         .opt("rps", "150", "mean request rate per function")
@@ -259,7 +273,11 @@ fn predict(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn trace_gen(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Cli::new("has-gpu trace-gen", "synthesise an Azure-style workload trace")
-        .opt("preset", "standard", "one workload preset name")
+        .opt_dyn(
+            "preset",
+            "standard",
+            format!("one workload preset name ({})", Preset::name_menu()),
+        )
         .opt("seconds", "300", "trace length in seconds")
         .opt("rps", "150", "mean request rate per function")
         .opt("seed", "11", "trace seed")

@@ -28,6 +28,13 @@ pub enum BillingMode {
     WholeGpu,
 }
 
+/// Billing-rate multiplier for a pod parked in the `HostCached` lifecycle
+/// state: host memory is ~20× cheaper than a held GPU slice, so keep-alive
+/// has a real — but small — cost (the Torpor trade-off). Resident pods bill
+/// at the full rate (multiplier exactly 1.0, which [`BillingLedger::accrue`]
+/// never even applies, preserving bit-identical default-path costs).
+pub const HOST_CACHED_RATE: f64 = 0.05;
+
 impl BillingMode {
     pub fn from_whole_gpu(bill_whole_gpu: bool) -> Self {
         if bill_whole_gpu {
@@ -60,6 +67,9 @@ struct Account {
     /// scaled by the class's catalog price ratio. Exactly the configured
     /// price on the reference class (`× 1.0` is exact).
     price_per_hour: f64,
+    /// Weight residency: `false` while parked `HostCached`, billing the
+    /// reduced [`HOST_CACHED_RATE`] instead of the full slice rate.
+    resident: bool,
 }
 
 /// The transactional billing engine. See the module docs for the invariant.
@@ -98,7 +108,21 @@ impl BillingLedger {
             return;
         }
         let (sm, quota) = mode.billed_fractions(acct.sm, acct.quota);
-        meter.bill_slice_class(&acct.function, &acct.class, sm, quota, dur, acct.price_per_hour);
+        if acct.resident {
+            // Resident path is the historical one, bit for bit — no
+            // multiplier is applied at all.
+            meter.bill_slice_class(&acct.function, &acct.class, sm, quota, dur, acct.price_per_hour);
+        } else {
+            // Parked weights: host-memory rate on the same slice integral.
+            meter.bill_slice_class(
+                &acct.function,
+                &acct.class,
+                sm * HOST_CACHED_RATE,
+                quota,
+                dur,
+                acct.price_per_hour,
+            );
+        }
         acct.billed_until = now;
     }
 
@@ -134,9 +158,23 @@ impl BillingLedger {
                 billed_until: now,
                 class: class.to_string(),
                 price_per_hour,
+                resident: true,
             },
         );
         debug_assert!(prev.is_none(), "double-open of {pod:?}");
+    }
+
+    /// The pod's weight residency changed at `now` (demotion to
+    /// `HostCached` or promotion back): bill the elapsed interval at the
+    /// **old** rate, then flip. Same boundary discipline as
+    /// [`BillingLedger::resize`].
+    pub fn set_resident(&mut self, pod: PodId, resident: bool, now: f64) {
+        let Some(acct) = self.accounts.get_mut(&pod) else {
+            debug_assert!(false, "set_resident of unopened {pod:?}");
+            return;
+        };
+        Self::accrue(&mut self.meter, self.mode, acct, now);
+        acct.resident = resident;
     }
 
     /// The pod's quota changed at `now`: bill the elapsed interval at the
@@ -224,6 +262,14 @@ pub fn record_applied(
         Applied::PodRemoved { pod } => {
             report.horizontal_downs += 1;
             ledger.close(*pod, now);
+        }
+        Applied::PodDemoted { pod } => {
+            report.demotions += 1;
+            ledger.set_resident(*pod, false, now);
+        }
+        Applied::PodPromoted { pod, .. } => {
+            report.promotions += 1;
+            ledger.set_resident(*pod, true, now);
         }
     }
 }
@@ -349,6 +395,46 @@ mod tests {
         assert!((meter.class_cost_of("v100") - 0.5 * 10.0).abs() < 1e-9);
         assert!((meter.class_cost_of("t4") - 0.5 * 10.0 * t4_ratio).abs() < 1e-9);
         assert_eq!(report.horizontal_ups, 2);
+    }
+
+    #[test]
+    fn host_cached_state_bills_reduced_rate_at_boundaries() {
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        l.open(PodId(1), "f", 500, 400, 0.0);
+        l.set_resident(PodId(1), false, 10.0); // 10 s resident
+        l.set_resident(PodId(1), true, 30.0); // 20 s parked
+        l.close(PodId(1), 35.0); // 5 s resident again
+        let expect = 0.5 * 0.4 * (10.0 + 5.0) + 0.5 * HOST_CACHED_RATE * 0.4 * 20.0;
+        assert!((l.meter().cost_of("f") - expect).abs() < 1e-9);
+
+        // Whole-GPU mode: the parked multiplier applies to the full device.
+        let mut l = BillingLedger::new(BillingMode::WholeGpu, PRICE);
+        l.open(PodId(2), "g", 250, 300, 0.0);
+        l.set_resident(PodId(2), false, 4.0);
+        l.close(PodId(2), 10.0);
+        let expect = 4.0 + HOST_CACHED_RATE * 6.0;
+        assert!((l.meter().cost_of("g") - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_applied_maps_lifecycle_transitions() {
+        let cluster = ClusterState::new(1, 16e9);
+        let mut report = RunReport::new("t");
+        let mut l = BillingLedger::new(BillingMode::FineGrained, PRICE);
+        l.open(PodId(1), "f", 500, 1000, 0.0);
+        record_applied(&mut report, &mut l, &cluster, &Applied::PodDemoted { pod: PodId(1) }, 10.0);
+        assert_eq!((report.demotions, report.promotions), (1, 0));
+        record_applied(
+            &mut report,
+            &mut l,
+            &cluster,
+            &Applied::PodPromoted { pod: PodId(1), ready_at: 12.0 },
+            12.0,
+        );
+        assert_eq!((report.demotions, report.promotions), (1, 1));
+        l.close(PodId(1), 20.0);
+        let expect = 0.5 * 10.0 + 0.5 * HOST_CACHED_RATE * 2.0 + 0.5 * 8.0;
+        assert!((l.meter().cost_of("f") - expect).abs() < 1e-9);
     }
 
     #[test]

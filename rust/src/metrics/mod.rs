@@ -13,7 +13,7 @@
 
 pub mod ledger;
 
-pub use ledger::{BillingLedger, BillingMode};
+pub use ledger::{BillingLedger, BillingMode, HOST_CACHED_RATE};
 
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
@@ -39,6 +39,10 @@ pub struct RequestRecord {
 #[derive(Clone, Debug, Default)]
 pub struct FunctionMetrics {
     pub records: Vec<RequestRecord>,
+    /// Time-to-first-token per served request: arrival → dispatch wait
+    /// (queueing behind cold/non-resident pods is exactly what this
+    /// measures — the cold-start axis).
+    pub ttft: Vec<f64>,
 }
 
 impl FunctionMetrics {
@@ -48,6 +52,19 @@ impl FunctionMetrics {
             latency,
             outcome,
         });
+    }
+
+    pub fn record_ttft(&mut self, wait: f64) {
+        self.ttft.push(wait);
+    }
+
+    /// Summary over the TTFT samples.
+    pub fn ttft_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for &w in &self.ttft {
+            s.add(w);
+        }
+        s
     }
 
     pub fn served(&self) -> usize {
@@ -226,6 +243,14 @@ pub struct RunReport {
     /// Fleet composition of the run: GPU class → device count. Empty for
     /// runs that never declared a fleet (homogeneous constructors).
     pub fleet_gpus: BTreeMap<String, usize>,
+    /// Lifecycle transition counts (keep-alive demotions to `HostCached`
+    /// and swap-in promotions back). Zero on the default path.
+    pub demotions: usize,
+    pub promotions: usize,
+    /// True when the run exercised the lifecycle axis (finite swap
+    /// bandwidths / keep-alive): gates the TTFT + transition-count JSON
+    /// export so default-path exports stay byte-identical.
+    pub lifecycle: bool,
 }
 
 impl RunReport {
@@ -257,6 +282,18 @@ impl RunReport {
                 if r.outcome == Outcome::Ok {
                     s.add(r.latency);
                 }
+            }
+        }
+        s
+    }
+
+    /// TTFT summary merged over every function — the grid's cold-start
+    /// columns (P50/P99).
+    pub fn merged_ttft_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for m in self.functions.values() {
+            for &w in &m.ttft {
+                s.add(w);
             }
         }
         s
@@ -332,6 +369,21 @@ impl RunReport {
             .keys()
             .any(|c| c != crate::vgpu::REFERENCE_CLASS)
             || self.fleet_gpus.len() > 1;
+        // Lifecycle runs export transition counts + TTFT; the default path
+        // omits the keys entirely (byte-identity contract).
+        if self.lifecycle {
+            fields.push(("demotions", Json::Num(self.demotions as f64)));
+            fields.push(("promotions", Json::Num(self.promotions as f64)));
+            let mut t = self.merged_ttft_summary();
+            fields.push((
+                "ttft_p50",
+                Json::Num(if t.is_empty() { 0.0 } else { t.p50() }),
+            ));
+            fields.push((
+                "ttft_p99",
+                Json::Num(if t.is_empty() { 0.0 } else { t.p99() }),
+            ));
+        }
         if heterogeneous {
             fields.push((
                 "fleet_gpus",
@@ -479,6 +531,28 @@ mod tests {
             .as_f64()
             .unwrap();
         assert_eq!(v2, 0.0);
+    }
+
+    #[test]
+    fn lifecycle_keys_exported_only_for_lifecycle_runs() {
+        let mut r = RunReport::new("has-gpu");
+        r.function("f").record(0.0, 0.03, Outcome::Ok);
+        r.function("f").record_ttft(0.5);
+        r.function("f").record_ttft(1.5);
+        // Default path: keys absent even though TTFT samples exist.
+        let j = r.to_json();
+        assert!(j.get("ttft_p50").is_err());
+        assert!(j.get("demotions").is_err());
+        // Lifecycle run: keys present with the merged summary.
+        r.lifecycle = true;
+        r.demotions = 3;
+        let j = r.to_json();
+        assert_eq!(j.get("demotions").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("promotions").unwrap().as_f64().unwrap(), 0.0);
+        assert!(j.get("ttft_p99").unwrap().as_f64().unwrap() >= 0.5);
+        let mut s = r.merged_ttft_summary();
+        assert_eq!(s.len(), 2);
+        assert!(s.percentile(100.0) >= 1.5 - 1e-12);
     }
 
     #[test]

@@ -41,6 +41,14 @@ pub struct DeviceSpec {
     pub window: f64,
     /// Hourly price in $ for the whole GPU (Google Cloud V100, §4.3).
     pub price_per_hour: f64,
+    /// Cold-load bandwidth (storage/network → host memory, B/s): the
+    /// `Cold → HostCached` staging step. `INFINITY` (the default) makes the
+    /// step take **exactly** 0 s (`x / INFINITY == 0.0` in IEEE 754), which
+    /// is the byte-identity contract for the pre-lifecycle export.
+    pub host_load_bw: f64,
+    /// Host↔device swap bandwidth (B/s): the `HostCached ↔ DeviceResident`
+    /// transfer. `INFINITY` (default) ⇒ exactly 0 s, same contract.
+    pub h2d_bw: f64,
 }
 
 impl Default for DeviceSpec {
@@ -52,6 +60,8 @@ impl Default for DeviceSpec {
             t_launch: 6.0e-6,
             window: 0.005,
             price_per_hour: 2.48,
+            host_load_bw: f64::INFINITY,
+            h2d_bw: f64::INFINITY,
         }
     }
 }
@@ -87,6 +97,20 @@ pub struct PerfModel {
 impl PerfModel {
     pub fn new(dev: DeviceSpec) -> Self {
         PerfModel { dev }
+    }
+
+    /// The finite-bandwidth device profile the `cold-start-storm` cells run
+    /// under: ~1 GB/s host model load (fetch + init at cold start) and
+    /// ~200 MB/s effective host→device swap bandwidth (pinned-memory DMA
+    /// shared across tenants — the Torpor/FaaSwap operating point). Every
+    /// other device parameter stays at the reference default, so only the
+    /// lifecycle latencies differ from [`PerfModel::default`].
+    pub fn with_swap_tier() -> Self {
+        PerfModel::new(DeviceSpec {
+            host_load_bw: 1e9,
+            h2d_bw: 2e8,
+            ..DeviceSpec::default()
+        })
     }
 
     /// Total execution time of one (stage-aggregated) op node at batch `b` on
@@ -179,6 +203,23 @@ impl PerfModel {
     pub fn capacity_class(&self, g: &OpGraph, batch: u32, sm: f64, q: f64, factor: f64) -> f64 {
         let t_raw = self.raw_graph_time_class(g, batch, sm, factor);
         batch as f64 * q / t_raw
+    }
+
+    /// `Cold → HostCached` staging time: pull the model's weights from
+    /// storage/network into host memory. Exactly 0.0 under the default
+    /// infinite bandwidth (`bytes / INFINITY == 0.0`).
+    pub fn cold_load_time(&self, g: &OpGraph) -> f64 {
+        4.0 * g.total_params() / self.dev.host_load_bw
+    }
+
+    /// `HostCached → DeviceResident` swap time on a device class with
+    /// relative throughput `factor` (faster classes have faster
+    /// interconnects, mirroring [`PerfModel::latency_class`]'s clock rule).
+    /// Exactly 0.0 under the default infinite bandwidth for every factor
+    /// (`0.0 / factor == 0.0`).
+    pub fn swap_time_class(&self, g: &OpGraph, factor: f64) -> f64 {
+        debug_assert!(factor > 0.0);
+        4.0 * g.total_params() / self.dev.h2d_bw / factor
     }
 
     /// Device-memory check for placing (model, batch) on a GPU.
@@ -388,6 +429,38 @@ mod tests {
         assert!(pm.fits_memory_cap(&g, 8, 40e9, 40e9));
         assert!(!pm.fits_memory_cap(&g, 8, 40e9, need / 2.0));
         assert!(!pm.fits_memory_cap(&g, 8, need / 2.0, 40e9));
+    }
+
+    #[test]
+    fn default_lifecycle_latencies_are_exactly_zero() {
+        // The byte-identity contract: infinite default bandwidths make the
+        // staging and swap terms *bit-exact* zero, so `ready_at + 0.0` is
+        // the historical `ready_at` to the bit, for every class factor.
+        let pm = pm();
+        for m in [ZooModel::ResNet50, ZooModel::BertTiny, ZooModel::Vgg16] {
+            let g = zoo_graph(m);
+            assert_eq!(pm.cold_load_time(&g).to_bits(), 0.0f64.to_bits());
+            for f in [0.4, 1.0, 2.0] {
+                assert_eq!(pm.swap_time_class(&g, f).to_bits(), 0.0f64.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn finite_bandwidth_lifecycle_latencies_scale_with_class() {
+        let pm = PerfModel::new(DeviceSpec {
+            host_load_bw: 1e9,
+            h2d_bw: 2e8,
+            ..Default::default()
+        });
+        let g = zoo_graph(ZooModel::ResNet50);
+        let bytes = 4.0 * g.total_params();
+        assert!((pm.cold_load_time(&g) - bytes / 1e9).abs() < 1e-12);
+        let base = pm.swap_time_class(&g, 1.0);
+        assert!((base - bytes / 2e8).abs() < 1e-9);
+        // Faster class ⇒ proportionally faster swap.
+        assert!((pm.swap_time_class(&g, 2.0) - base / 2.0).abs() < 1e-9);
+        assert!(pm.swap_time_class(&g, 0.4) > base);
     }
 
     #[test]

@@ -49,6 +49,15 @@ pub struct SimConfig {
     /// means `n_gpus` reference-class (V100) devices — the pre-fleet
     /// homogeneous construction, byte-identical by definition.
     pub fleet: Vec<GpuClass>,
+    /// Warm bootstrap: deploy pods for the trace's initial rate before the
+    /// clock starts (every platform measured warm — the historical
+    /// behaviour). `false` starts from an *empty* cluster so the first
+    /// burst pays real cold starts (the `cold-start-storm` preset).
+    pub warm_start: bool,
+    /// Marks the run as exercising the lifecycle axis: the report exports
+    /// TTFT percentiles and demotion/promotion counts. `false` (default)
+    /// keeps the export byte-identical to the pre-lifecycle schema.
+    pub lifecycle: bool,
 }
 
 impl Default for SimConfig {
@@ -63,6 +72,8 @@ impl Default for SimConfig {
             backlog_horizon: 2.0,
             billing: BillingMode::FineGrained,
             fleet: Vec::new(),
+            warm_start: true,
+            lifecycle: false,
         }
     }
 }
@@ -216,17 +227,22 @@ pub fn run_sim(
     // Warm bootstrap: every platform deploys pods sized for the trace's
     // initial rate (the paper's platforms are warm when measurement starts;
     // at idle this degenerates to "one instance with minimal resources").
-    for f in functions {
-        let initial_rate = trace.rps_at(&f.name, 0).max(1.0);
-        let actions = policy.plan(f, initial_rate, &cluster, &predictor, 0.0);
-        for a in &actions {
-            apply_action(&mut cluster, &mut recon, &mut ledger, perf, a, 0.0, &mut report);
-        }
-        // Bootstrap pods start warm (deployment-time, not a runtime cold start).
-        let ids: Vec<PodId> = cluster.pods_of(&f.name).iter().map(|p| p.id).collect();
-        for id in ids {
-            if let Some(p) = cluster.pod_mut(id) {
-                p.phase = PodPhase::Running;
+    // Cold-start-storm runs skip this entirely: the cluster starts empty
+    // and the first burst pays real cold starts.
+    if cfg.warm_start {
+        for f in functions {
+            let initial_rate = trace.rps_at(&f.name, 0).max(1.0);
+            let actions = policy.plan(f, initial_rate, &cluster, &predictor, 0.0);
+            for a in &actions {
+                apply_action(&mut cluster, &mut recon, &mut ledger, perf, a, 0.0, &mut report);
+            }
+            // Bootstrap pods start warm (deployment-time, not a runtime cold
+            // start); they are already born DeviceResident.
+            let ids: Vec<PodId> = cluster.pods_of(&f.name).iter().map(|p| p.id).collect();
+            for id in ids {
+                if let Some(p) = cluster.pod_mut(id) {
+                    p.phase = PodPhase::Running;
+                }
             }
         }
     }
@@ -335,8 +351,12 @@ pub fn run_sim(
                                     &mut cluster, &mut recon, &mut ledger, perf, a, now,
                                     &mut report,
                                 ) {
-                                    if let Applied::PodCreated { pod, ready_at } = applied {
-                                        q.push_at(ready_at, Ev::PodReady { pod });
+                                    match applied {
+                                        Applied::PodCreated { pod, ready_at }
+                                        | Applied::PodPromoted { pod, ready_at } => {
+                                            q.push_at(ready_at, Ev::PodReady { pod });
+                                        }
+                                        _ => {}
                                     }
                                 }
                             }
@@ -362,6 +382,7 @@ pub fn run_sim(
                 }
                 report.duration = now;
                 report.event_queue_peak = q.high_water();
+                report.lifecycle = cfg.lifecycle;
                 break;
             }
         }
@@ -444,6 +465,12 @@ fn try_dispatch(
         let mut batch = batch_pool.pop().unwrap_or_default();
         debug_assert!(batch.is_empty());
         batch.extend(queues[f_idx].drain(..take));
+        // TTFT = arrival → dispatch wait: the time spent queueing, which is
+        // where cold starts and swap-ins show up. Recorded on every run;
+        // exported only by lifecycle runs.
+        for r in &batch {
+            report.function(&f.name).record_ttft(now - r.arrival);
+        }
         // Service time on the pod's own GPU class (factor 1.0 routes through
         // the reference surface verbatim).
         let service = serve.latency(
@@ -736,6 +763,46 @@ mod tests {
             (ra.vertical_ups, ra.horizontal_ups, ra.horizontal_downs),
             (rb.vertical_ups, rb.horizontal_ups, rb.horizontal_downs)
         );
+    }
+
+    #[test]
+    fn cold_start_storm_config_starts_empty_and_records_ttft() {
+        let fns = test_functions();
+        let trace = small_trace(&fns);
+        // Finite staging/swap bandwidths: cold starts take real time.
+        let perf = PerfModel::new(crate::perf::DeviceSpec {
+            host_load_bw: 1e9,
+            h2d_bw: 2e8,
+            ..Default::default()
+        });
+        let pred = OraclePredictor::default();
+        let cfg = SimConfig {
+            n_gpus: 8,
+            warm_start: false,
+            lifecycle: true,
+            ..SimConfig::default()
+        };
+        let mut p = HybridAutoscaler::new(HybridConfig::default());
+        let r = run_sim(&mut p, &fns, &trace, &pred, &perf, &cfg);
+        assert!(r.lifecycle);
+        assert!(r.total_served() > 100, "served {}", r.total_served());
+        let mut t = r.merged_ttft_summary();
+        assert!(!t.is_empty());
+        // Someone had to wait behind the initial cold start.
+        assert!(t.percentile(100.0) > 0.0);
+        assert!(r.to_json().get("ttft_p99").is_ok());
+        // The default (warm, zero-latency) path keeps the old export shape.
+        let mut p2 = HybridAutoscaler::new(HybridConfig::default());
+        let r2 = run_sim(
+            &mut p2,
+            &fns,
+            &trace,
+            &pred,
+            &PerfModel::default(),
+            &SimConfig::default(),
+        );
+        assert!(!r2.lifecycle);
+        assert!(r2.to_json().get("ttft_p99").is_err());
     }
 
     #[test]

@@ -99,6 +99,8 @@ pub enum AllocError {
     NoQuota { need: QuotaMille, free: QuotaMille },
     #[error("unknown client {0:?}")]
     UnknownClient(ClientId),
+    #[error("client {0:?} not in a legal lifecycle state for this action")]
+    BadState(ClientId),
     #[error("not enough device memory: need {need:.2e} B, free {free:.2e} B")]
     NoMemory { need: f64, free: f64 },
 }
@@ -111,6 +113,9 @@ pub struct VGpu {
     /// Device memory accounting (bytes).
     mem_cap: f64,
     mem_used: f64,
+    /// Host (pinned) memory holding parked model weights, in bytes — the
+    /// Torpor-style swap tier. Not capacity-bounded: host RAM dwarfs HBM.
+    host_mem_used: f64,
     clients: BTreeMap<ClientId, Placement>,
     /// Device class (throughput factor, pricing, catalog identity). The
     /// allocation substrate itself is class-agnostic — fractions of
@@ -128,6 +133,7 @@ impl VGpu {
             slots: Vec::new(),
             mem_cap,
             mem_used: 0.0,
+            host_mem_used: 0.0,
             clients: BTreeMap::new(),
             class: GpuClass::v100(),
         }
@@ -141,6 +147,7 @@ impl VGpu {
             slots: Vec::new(),
             mem_cap: class.mem_cap,
             mem_used: 0.0,
+            host_mem_used: 0.0,
             clients: BTreeMap::new(),
             class,
         }
@@ -165,6 +172,39 @@ impl VGpu {
 
     pub fn mem_free(&self) -> f64 {
         self.mem_cap - self.mem_used
+    }
+
+    /// Bytes of parked model weights in the host-memory swap tier.
+    pub fn host_mem_used(&self) -> f64 {
+        self.host_mem_used
+    }
+
+    /// Park `bytes` of resident weights in host memory (pod demotion).
+    /// Infallible: host RAM is modelled as unbounded.
+    pub fn swap_out(&mut self, bytes: f64) {
+        self.mem_used = (self.mem_used - bytes).max(0.0);
+        self.host_mem_used += bytes;
+    }
+
+    /// Bring `bytes` of parked weights back to the device (pod promotion).
+    /// Fails if the device lacks free memory; host accounting is untouched
+    /// on failure.
+    pub fn swap_in(&mut self, bytes: f64) -> Result<(), AllocError> {
+        if bytes > self.mem_free() {
+            return Err(AllocError::NoMemory {
+                need: bytes,
+                free: self.mem_free(),
+            });
+        }
+        self.host_mem_used = (self.host_mem_used - bytes).max(0.0);
+        self.mem_used += bytes;
+        Ok(())
+    }
+
+    /// Drop `bytes` from the host tier without touching device memory
+    /// (removing a pod that was parked when it died).
+    pub fn release_host(&mut self, bytes: f64) {
+        self.host_mem_used = (self.host_mem_used - bytes).max(0.0);
     }
 
     /// Total SM allocated to slots (whether or not their quota is full).
@@ -432,6 +472,9 @@ impl VGpu {
         if self.mem_used > self.mem_cap + 1.0 {
             return Err("memory over-committed".into());
         }
+        if self.host_mem_used < 0.0 {
+            return Err("host memory underflow".into());
+        }
         Ok(())
     }
 }
@@ -618,6 +661,27 @@ mod tests {
         let mut g = g;
         g.attach(ClientId(1), 500, 600, 1e9).unwrap();
         assert_eq!(g.sm_allocated(), 500);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_tier_roundtrip_and_device_pressure() {
+        let mut g = gpu();
+        g.attach(ClientId(1), 500, 600, 10e9).unwrap();
+        let free0 = g.mem_free();
+        g.swap_out(4e9);
+        assert_eq!(g.host_mem_used(), 4e9);
+        assert!((g.mem_free() - (free0 + 4e9)).abs() < 1.0);
+        // Promotion needs free device memory: fill it, then fail cleanly.
+        let filler = g.mem_free() - 1e9;
+        g.attach(ClientId(2), 250, 400, filler).unwrap();
+        assert!(matches!(g.swap_in(4e9), Err(AllocError::NoMemory { .. })));
+        assert_eq!(g.host_mem_used(), 4e9, "failed swap-in must not leak host bytes");
+        g.detach(ClientId(2), filler).unwrap();
+        g.swap_in(4e9).unwrap();
+        assert_eq!(g.host_mem_used(), 0.0);
+        g.release_host(1e9); // saturates at zero
+        assert_eq!(g.host_mem_used(), 0.0);
         g.check_invariants().unwrap();
     }
 

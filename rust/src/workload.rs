@@ -28,33 +28,99 @@ pub enum Preset {
     Stress,
     Diurnal,
     SpikyBurst,
+    /// Bursts separated by genuine silence on a zero base rate: every burst
+    /// head hits a platform that has (or should have) scaled its residency
+    /// down, so time-to-first-token is dominated by cold-load/swap latency —
+    /// the pod-lifecycle comparison workload.
+    ColdStartStorm,
 }
 
-/// Every preset, in the canonical matrix order.
-pub const ALL_PRESETS: [Preset; 4] = [
+/// One row of [`PRESET_TABLE`]: the preset, its canonical CLI/export name,
+/// and a one-line description for help text.
+#[derive(Clone, Copy, Debug)]
+pub struct PresetInfo {
+    pub preset: Preset,
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// The canonical preset table, in matrix order. `Preset::name`,
+/// `Preset::from_name`, [`ALL_PRESETS`], and every CLI help/error surface
+/// derive from this single table, so a new preset cannot reach one surface
+/// and miss another.
+pub const PRESET_TABLE: [PresetInfo; 5] = [
+    PresetInfo {
+        preset: Preset::Standard,
+        name: "standard",
+        about: "paper Fig. 7 standard workload: diurnal base, moderate bursts",
+    },
+    PresetInfo {
+        preset: Preset::Stress,
+        name: "stress",
+        about: "paper Fig. 7 stress workload: faster day, heavier bursts",
+    },
+    PresetInfo {
+        preset: Preset::Diurnal,
+        name: "diurnal",
+        about: "one clean compressed day: deep valleys, rare bursts",
+    },
+    PresetInfo {
+        preset: Preset::SpikyBurst,
+        name: "spiky-burst",
+        about: "near-flat base hammered by frequent heavy-tailed spikes",
+    },
+    PresetInfo {
+        preset: Preset::ColdStartStorm,
+        name: "cold-start-storm",
+        about: "silent base with isolated bursts: TTFT is all cold-load/swap latency",
+    },
+];
+
+/// Every preset, in the canonical matrix order (derived column of
+/// [`PRESET_TABLE`]; `preset_table_is_the_single_source` pins agreement).
+pub const ALL_PRESETS: [Preset; 5] = [
     Preset::Standard,
     Preset::Stress,
     Preset::Diurnal,
     Preset::SpikyBurst,
+    Preset::ColdStartStorm,
 ];
 
 impl Preset {
     pub fn name(self) -> &'static str {
-        match self {
-            Preset::Standard => "standard",
-            Preset::Stress => "stress",
-            Preset::Diurnal => "diurnal",
-            Preset::SpikyBurst => "spiky-burst",
-        }
+        PRESET_TABLE
+            .iter()
+            .find(|i| i.preset == self)
+            .map(|i| i.name)
+            .expect("every Preset variant has a PRESET_TABLE row")
+    }
+
+    /// One-line description (CLI help and inventory tables).
+    pub fn about(self) -> &'static str {
+        PRESET_TABLE
+            .iter()
+            .find(|i| i.preset == self)
+            .map(|i| i.about)
+            .expect("every Preset variant has a PRESET_TABLE row")
     }
 
     /// Case-insensitive name lookup (CLI surfaces accept `STANDARD`,
     /// `Spiky-Burst`, …; the canonical lowercase form is what exports use).
     pub fn from_name(s: &str) -> Option<Self> {
-        ALL_PRESETS
+        PRESET_TABLE
             .iter()
-            .copied()
-            .find(|p| p.name().eq_ignore_ascii_case(s.trim()))
+            .find(|i| i.name.eq_ignore_ascii_case(s.trim()))
+            .map(|i| i.preset)
+    }
+
+    /// The canonical comma-joined name list for CLI help and unknown-name
+    /// errors — every surface quotes the same table.
+    pub fn name_menu() -> String {
+        PRESET_TABLE
+            .iter()
+            .map(|i| i.name)
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 }
 
@@ -205,6 +271,22 @@ impl TraceGen {
                 noise_sigma: 0.35,
                 duty_cycle: 0.9,
             },
+            // Zero duty cycle kills the base entirely: traffic is *only*
+            // bursts, separated by real silence (mean gap 30 s — longer
+            // than any swap-tier idle window), so every burst head lands on
+            // whatever residency the platform kept. Pure TTFT probe.
+            Preset::ColdStartStorm => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64,
+                burst_rate: 1.0 / 30.0,
+                burst_alpha: 1.6,
+                burst_cap: 8.0,
+                burst_len: (5, 20),
+                noise_sigma: 0.3,
+                duty_cycle: 0.0,
+            },
         }
     }
 
@@ -332,7 +414,61 @@ mod tests {
         assert_eq!(Preset::from_name("spiky-burst"), Some(Preset::SpikyBurst));
         assert_eq!(Preset::from_name("Spiky-Burst"), Some(Preset::SpikyBurst));
         assert_eq!(Preset::from_name(" STANDARD "), Some(Preset::Standard));
+        assert_eq!(
+            Preset::from_name("Cold-Start-Storm"),
+            Some(Preset::ColdStartStorm)
+        );
         assert_eq!(Preset::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn preset_table_is_the_single_source() {
+        // ALL_PRESETS is a derived column of PRESET_TABLE: same order, no
+        // duplicates, every row reachable through name()/about()/from_name.
+        assert_eq!(PRESET_TABLE.len(), ALL_PRESETS.len());
+        for (row, p) in PRESET_TABLE.iter().zip(ALL_PRESETS) {
+            assert_eq!(row.preset, p);
+            assert_eq!(p.name(), row.name);
+            assert_eq!(p.about(), row.about);
+            assert!(!row.about.is_empty());
+            assert_eq!(row.name, row.name.to_ascii_lowercase(), "canonical names are lowercase");
+        }
+        let menu = Preset::name_menu();
+        for row in PRESET_TABLE {
+            assert!(menu.contains(row.name), "menu missing {}: {menu}", row.name);
+            assert_eq!(
+                PRESET_TABLE.iter().filter(|r| r.name == row.name).count(),
+                1,
+                "duplicate name {}",
+                row.name
+            );
+        }
+    }
+
+    #[test]
+    fn cold_start_storm_is_silence_punctuated_by_bursts() {
+        for seed in 0..6 {
+            let t = TraceGen::preset(Preset::ColdStartStorm, seed, 600, 20.0).generate(&["f"]);
+            let s = &t.series["f"];
+            let idle = s.iter().filter(|&&x| x == 0.0).count();
+            // Mostly silent (no base traffic at all)…
+            assert!(idle > 300, "seed {seed}: only {idle} silent seconds");
+            // …but the bursts still carry real load.
+            assert!(t.total_requests("f") > 100.0, "seed {seed} too quiet");
+            // And the silence comes in runs long enough to outlast a
+            // swap-tier idle window (10 s), so parking actually happens.
+            let mut run = 0usize;
+            let mut longest = 0usize;
+            for &x in s {
+                if x == 0.0 {
+                    run += 1;
+                    longest = longest.max(run);
+                } else {
+                    run = 0;
+                }
+            }
+            assert!(longest > 10, "seed {seed}: longest gap {longest}s");
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use has_gpu::autoscaler::{HybridAutoscaler, HybridConfig, KalmanFilter, ScalingPolicy};
 use has_gpu::cluster::{Applied, ClusterState, FunctionSpec, GpuId, Reconfigurator, ScalingAction};
-use has_gpu::metrics::{BillingLedger, BillingMode};
+use has_gpu::metrics::{BillingLedger, BillingMode, HOST_CACHED_RATE};
 use has_gpu::model::zoo::{zoo_graph, ZooModel};
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::OraclePredictor;
@@ -257,16 +257,18 @@ fn mixed_spec() -> FunctionSpec {
     }
 }
 
-/// One random raw scaling action against the current pod set. Rejections
-/// (alignment/capacity/memory races) are part of the property: they must
-/// leave every invariant intact.
+/// One random raw scaling action against the current pod set, including the
+/// lifecycle edges (demote to the host tier / promote back). Rejections
+/// (alignment/capacity/memory races, illegal state transitions) are part of
+/// the property: they must leave every invariant intact.
 fn random_action(
     rng: &mut Pcg64,
     spec: &FunctionSpec,
     n_gpus: usize,
     live: &[has_gpu::cluster::PodId],
 ) -> Option<ScalingAction> {
-    match rng.next_below(3) {
+    let pick = |rng: &mut Pcg64| live[rng.next_below(live.len() as u64) as usize];
+    match rng.next_below(5) {
         0 => Some(ScalingAction::CreatePod {
             function: spec.name.clone(),
             gpu: GpuId(rng.next_below(n_gpus as u64) as usize),
@@ -276,12 +278,12 @@ fn random_action(
             new_gpu: false,
         }),
         1 if !live.is_empty() => Some(ScalingAction::SetQuota {
-            pod: live[rng.next_below(live.len() as u64) as usize],
+            pod: pick(rng),
             quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
         }),
-        _ if !live.is_empty() => Some(ScalingAction::RemovePod {
-            pod: live[rng.next_below(live.len() as u64) as usize],
-        }),
+        2 if !live.is_empty() => Some(ScalingAction::DemotePod { pod: pick(rng) }),
+        3 if !live.is_empty() => Some(ScalingAction::PromotePod { pod: pick(rng) }),
+        _ if !live.is_empty() => Some(ScalingAction::RemovePod { pod: pick(rng) }),
         _ => None,
     }
 }
@@ -314,7 +316,7 @@ fn prop_mixed_fleet_invariants_hold_under_random_actions() {
                 match recon.apply(&mut cluster, &perf, &action, step as f64) {
                     Ok(Applied::PodCreated { pod, .. }) => live.push(pod),
                     Ok(Applied::PodRemoved { pod }) => live.retain(|&p| p != pod),
-                    Ok(Applied::QuotaSet { .. }) | Err(_) => {}
+                    Ok(_) | Err(_) => {}
                 }
                 cluster.check_invariants()?;
                 for i in 0..cluster.n_gpus() {
@@ -351,12 +353,103 @@ fn prop_mixed_fleet_invariants_hold_under_random_actions() {
 }
 
 #[test]
+fn prop_pod_lifecycle_transitions_are_always_legal() {
+    // Random action sequences — creates, quota rewrites, demotions,
+    // promotions, removals, with rejections in the mix — may only ever move
+    // a pod along the legal state machine (`Cold → HostCached ⇄
+    // DeviceResident`), a rejected action must leave every pod's state (and
+    // keep-alive clock) untouched, and the cluster invariants must hold
+    // throughout. Runs under the swap-tier perf model so the lifecycle
+    // latencies are real.
+    use has_gpu::cluster::PodState;
+    run_prop(
+        "pod-lifecycle-legal",
+        PropConfig {
+            cases: 96,
+            max_size: 48,
+            ..PropConfig::default()
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng);
+            let spec = mixed_spec();
+            let perf = PerfModel::with_swap_tier();
+            let mut cluster = ClusterState::from_classes(&fleet);
+            cluster.register_function(spec.clone());
+            let mut recon = Reconfigurator::new(&cluster, 17);
+            let mut live: Vec<has_gpu::cluster::PodId> = Vec::new();
+            let snapshot = |cluster: &ClusterState| -> std::collections::BTreeMap<_, _> {
+                cluster
+                    .pods_of(&spec.name)
+                    .iter()
+                    .map(|p| (p.id, (p.state, p.state_since)))
+                    .collect()
+            };
+            for step in 0..size * 2 {
+                let now = step as f64;
+                let Some(action) = random_action(rng, &spec, fleet.len(), &live) else {
+                    continue;
+                };
+                let before = snapshot(&cluster);
+                let outcome = recon.apply(&mut cluster, &perf, &action, now);
+                let after = snapshot(&cluster);
+                for (id, (new_state, new_since)) in &after {
+                    match before.get(id) {
+                        // Surviving pods: unchanged, or one legal edge with
+                        // the keep-alive clock restamped to now.
+                        Some((old_state, old_since)) => {
+                            if new_state == old_state {
+                                has_gpu::prop_assert!(
+                                    new_since == old_since,
+                                    "step {step}: {id:?} clock moved without a transition"
+                                );
+                            } else {
+                                has_gpu::prop_assert!(
+                                    old_state.can_transition(*new_state),
+                                    "step {step}: illegal transition {} -> {} on {id:?}",
+                                    old_state.name(),
+                                    new_state.name()
+                                );
+                                has_gpu::prop_assert!(
+                                    (*new_since - now).abs() < 1e-12,
+                                    "step {step}: transition did not restamp state_since"
+                                );
+                            }
+                        }
+                        // Births start device-resident (the swap tier delays
+                        // readiness via ready_at, never via a Cold state).
+                        None => has_gpu::prop_assert!(
+                            *new_state == PodState::DeviceResident,
+                            "step {step}: {id:?} born {}",
+                            new_state.name()
+                        ),
+                    }
+                }
+                match outcome {
+                    Ok(Applied::PodCreated { pod, .. }) => live.push(pod),
+                    Ok(Applied::PodRemoved { pod }) => live.retain(|&p| p != pod),
+                    Ok(_) => {}
+                    // Rejections must be pure no-ops on the state machine.
+                    Err(_) => has_gpu::prop_assert!(
+                        before == after,
+                        "step {step}: rejected {action:?} still mutated pod states"
+                    ),
+                }
+                cluster.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_mixed_fleet_ledger_matches_per_class_slice_time_integral() {
-    // For random heterogeneous action sequences the ledger must equal the
-    // analytic per-class slice-time integral — per class AND in total, in
-    // BOTH billing modes, with each pod priced at its class's effective
-    // rate (reference price × catalog ratio), exactly as `record_applied`
-    // prices real runs.
+    // For random heterogeneous action sequences — now including demotions
+    // to the host tier and promotions back — the ledger must equal the
+    // analytic per-class, per-state slice-time integral: resident intervals
+    // at the full slice rate, parked intervals at `HOST_CACHED_RATE`, per
+    // class AND in total, in BOTH billing modes, with each pod priced at
+    // its class's effective rate (reference price × catalog ratio), exactly
+    // as `record_applied` prices real runs.
     const PRICE: f64 = 3600.0; // $1 per reference slice-second
     run_prop(
         "mixed-fleet-billing",
@@ -374,18 +467,27 @@ fn prop_mixed_fleet_ledger_matches_per_class_slice_time_integral() {
             let mut recon = Reconfigurator::new(&cluster, 7);
             let mut fine = BillingLedger::new(BillingMode::FineGrained, PRICE);
             let mut whole = BillingLedger::new(BillingMode::WholeGpu, PRICE);
-            // Live pods with their (class name, price ratio, sm‰, q‰).
-            let mut live: Vec<(has_gpu::cluster::PodId, String, f64, u32, u32)> = Vec::new();
+            // Live pods: (id, class name, price ratio, sm‰, q‰, resident).
+            let mut live: Vec<(has_gpu::cluster::PodId, String, f64, u32, u32, bool)> =
+                Vec::new();
             let mut fine_ref: std::collections::BTreeMap<String, f64> = Default::default();
             let mut whole_ref: std::collections::BTreeMap<String, f64> = Default::default();
+            let mut accrue =
+                |live: &[(has_gpu::cluster::PodId, String, f64, u32, u32, bool)],
+                 fine_ref: &mut std::collections::BTreeMap<String, f64>,
+                 whole_ref: &mut std::collections::BTreeMap<String, f64>,
+                 dt: f64| {
+                    for (_, class, ratio, sm, q, resident) in live {
+                        let state = if *resident { 1.0 } else { HOST_CACHED_RATE };
+                        *fine_ref.entry(class.clone()).or_insert(0.0) +=
+                            (*sm as f64 / 1000.0) * state * (*q as f64 / 1000.0) * dt * ratio;
+                        *whole_ref.entry(class.clone()).or_insert(0.0) += state * dt * ratio;
+                    }
+                };
             let mut now = 0.0f64;
             for _ in 0..size {
                 let dt = rng.next_f64() * 3.0;
-                for (_, class, ratio, sm, q) in &live {
-                    *fine_ref.entry(class.clone()).or_insert(0.0) +=
-                        (*sm as f64 / 1000.0) * (*q as f64 / 1000.0) * dt * ratio;
-                    *whole_ref.entry(class.clone()).or_insert(0.0) += dt * ratio;
-                }
+                accrue(&live, &mut fine_ref, &mut whole_ref, dt);
                 now += dt;
                 let live_ids: Vec<_> = live.iter().map(|(p, ..)| *p).collect();
                 let Some(action) = random_action(rng, &spec, fleet.len(), &live_ids) else {
@@ -398,13 +500,32 @@ fn prop_mixed_fleet_ledger_matches_per_class_slice_time_integral() {
                         let price = PRICE * class.price_relative();
                         fine.open_on(pod, &p.function, p.sm, p.quota, &class.name, price, now);
                         whole.open_on(pod, &p.function, p.sm, p.quota, &class.name, price, now);
-                        live.push((pod, class.name.clone(), class.price_relative(), p.sm, p.quota));
+                        live.push((
+                            pod,
+                            class.name.clone(),
+                            class.price_relative(),
+                            p.sm,
+                            p.quota,
+                            true,
+                        ));
                     }
                     Ok(Applied::QuotaSet { pod, new, .. }) => {
                         fine.resize(pod, new, now);
                         whole.resize(pod, new, now);
                         let e = live.iter_mut().find(|(p, ..)| *p == pod).unwrap();
                         e.4 = new;
+                    }
+                    Ok(Applied::PodDemoted { pod }) => {
+                        fine.set_resident(pod, false, now);
+                        whole.set_resident(pod, false, now);
+                        let e = live.iter_mut().find(|(p, ..)| *p == pod).unwrap();
+                        e.5 = false;
+                    }
+                    Ok(Applied::PodPromoted { pod, .. }) => {
+                        fine.set_resident(pod, true, now);
+                        whole.set_resident(pod, true, now);
+                        let e = live.iter_mut().find(|(p, ..)| *p == pod).unwrap();
+                        e.5 = true;
                     }
                     Ok(Applied::PodRemoved { pod }) => {
                         fine.close(pod, now);
@@ -415,11 +536,7 @@ fn prop_mixed_fleet_ledger_matches_per_class_slice_time_integral() {
                 }
             }
             let t_end = now + rng.next_f64() * 2.0;
-            for (_, class, ratio, sm, q) in &live {
-                *fine_ref.entry(class.clone()).or_insert(0.0) +=
-                    (*sm as f64 / 1000.0) * (*q as f64 / 1000.0) * (t_end - now) * ratio;
-                *whole_ref.entry(class.clone()).or_insert(0.0) += (t_end - now) * ratio;
-            }
+            accrue(&live, &mut fine_ref, &mut whole_ref, t_end - now);
             let fine_meter = fine.into_meter(t_end);
             let whole_meter = whole.into_meter(t_end);
             let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs()));

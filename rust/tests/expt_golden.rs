@@ -277,6 +277,127 @@ fn mixed_fleet_extension_perturbs_no_uniform_cells() {
 }
 
 #[test]
+fn lifecycle_extension_perturbs_no_stock_cells() {
+    // The pod-lifecycle contract: adding the torpor-like swap tier and the
+    // cold-start-storm preset to a grid leaves every pre-existing
+    // (platform, standard, seed) cell byte-identical — default lifecycle
+    // config (zero load/swap latency, warm start, infinite keep-alive) is
+    // invisible to the export.
+    let stock = registry_matrix(&["has-gpu", "kserve", "fast-gshare", "has-vertical-only"]).run(2);
+    let extended = ScenarioMatrix {
+        presets: vec![Preset::Standard, Preset::ColdStartStorm],
+        ..registry_matrix(&[
+            "has-gpu",
+            "kserve",
+            "fast-gshare",
+            "has-vertical-only",
+            "torpor-like",
+        ])
+    }
+    .run(2);
+    // 5 platforms × 2 presets × 2 seeds.
+    assert_eq!(extended.cells.len(), 20);
+    let shared: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.preset == Preset::Standard && c.platform != "torpor-like")
+        .collect();
+    assert_eq!(shared.len(), stock.cells.len());
+    for (a, b) in stock.cells.iter().zip(shared) {
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "stock cell ({}, {}, {}) perturbed by the lifecycle extension",
+            a.platform,
+            a.preset.name(),
+            a.seed
+        );
+    }
+    // TTFT keys exist exactly on the lifecycle cells.
+    for c in &extended.cells {
+        let j = c.to_json();
+        let has_ttft = j.opt("ttft_p50").is_some() && j.opt("ttft_p99").is_some();
+        assert_eq!(
+            has_ttft,
+            c.preset == Preset::ColdStartStorm,
+            "({}, {}, {}) ttft key presence",
+            c.platform,
+            c.preset.name(),
+            c.seed
+        );
+    }
+    // The extended grid round-trips losslessly and is --jobs invariant.
+    let back = MatrixReport::from_json(&extended.to_json()).unwrap();
+    assert_eq!(
+        back.to_json().to_string_pretty(),
+        extended.to_json().to_string_pretty()
+    );
+    let again = ScenarioMatrix {
+        presets: vec![Preset::Standard, Preset::ColdStartStorm],
+        ..registry_matrix(&[
+            "has-gpu",
+            "kserve",
+            "fast-gshare",
+            "has-vertical-only",
+            "torpor-like",
+        ])
+    }
+    .run(1);
+    assert_eq!(
+        json::fingerprint(&extended.to_json()),
+        json::fingerprint(&again.to_json())
+    );
+}
+
+#[test]
+fn cold_start_storm_headline_directions() {
+    // The paper-shaped outcome for the storm grid: HAS-GPU (hybrid scaling,
+    // idle-margin floor keeps the last replica resident) beats the
+    // torpor-like swap tier on tail TTFT, while the swap tier undercuts
+    // always-on whole-GPU KServe on cost.
+    let report = ScenarioMatrix {
+        presets: vec![Preset::ColdStartStorm],
+        seconds: 240,
+        ..registry_matrix(&["has-gpu", "kserve", "torpor-like"])
+    }
+    .run(2);
+    let summary = report.summary();
+    let row = |p: &str| summary.iter().find(|r| r.platform == p).unwrap();
+    let has = row("has-gpu");
+    let torpor = row("torpor-like");
+    let kserve = row("kserve");
+    // Everyone actually served traffic through the storm.
+    for r in [&has, &torpor, &kserve] {
+        let served: usize = report
+            .cells
+            .iter()
+            .filter(|c| c.platform == r.platform)
+            .map(|c| c.served)
+            .sum();
+        assert!(served > 0, "{} served nothing", r.platform);
+    }
+    let (has_ttft, torpor_ttft) = (has.ttft_p99.unwrap(), torpor.ttft_p99.unwrap());
+    assert!(
+        has_ttft < torpor_ttft,
+        "has-gpu ttft p99 {has_ttft} must beat torpor-like {torpor_ttft}"
+    );
+    assert!(
+        torpor.cost_per_1k < kserve.cost_per_1k,
+        "torpor-like $/1k {} must undercut kserve {}",
+        torpor.cost_per_1k,
+        kserve.cost_per_1k
+    );
+    // And the TTFT headline ratio materialises for the storm rows.
+    let ratios = report.ratios_vs_has_gpu();
+    let tr = ratios
+        .iter()
+        .find(|r| r.platform == "torpor-like")
+        .and_then(|r| r.ttft_ratio)
+        .unwrap();
+    assert!(tr > 1.0, "torpor/has ttft ratio {tr} must exceed 1");
+}
+
+#[test]
 fn uniform_fleet_export_is_byte_identical_to_the_pre_fleet_path() {
     // Belt-and-braces for the fleet axis specifically: the frozen pre-fleet
     // construction (homogeneous ClusterState::new path, no fleet axis)
