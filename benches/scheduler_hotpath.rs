@@ -231,6 +231,60 @@ fn main() {
         black_box(cluster.idle_gpu());
     });
 
+    // Fault-injection overhead: compiling a 10-GPU / 300 s chaos schedule —
+    // what every fault cell pays once before the event loop — stays far off
+    // the per-tick path, and the entry pins it (budget in ci.yml).
+    {
+        use has_gpu::sim::{fault_spec_from_name, FaultPlan};
+        let chaos = fault_spec_from_name("chaos-gpu-failures").unwrap();
+        h.bench("fault_tick_overhead", || {
+            let plan = FaultPlan::compile(&chaos, 11, 10, 300.0);
+            let mut n = 0usize;
+            for &(t, _) in plan.events() {
+                n += (t < 300.0) as usize;
+            }
+            black_box(n);
+        });
+
+        // Recovery replan: the same 40-pod shape as autoscaler_plan_40pods,
+        // but GPU 0 is down and its pods evicted — the per-tick cost of
+        // routing around the hole and proposing replacement replicas while
+        // a device is dead.
+        let mut rec_cluster = ClusterState::new(10, pm.dev.mem_cap);
+        for f in &fns {
+            rec_cluster.register_function(f.clone());
+        }
+        let mut rec_recon = Reconfigurator::new(&rec_cluster, 3);
+        let mut placed = 0;
+        'outer_r: for gpu in 0..10 {
+            for slot in 0..4 {
+                let f = &fns[(gpu + slot) % fns.len()];
+                if place_pod(
+                    &mut rec_recon, &mut rec_cluster, &pm, &f.name, GpuId(gpu), 250, 250,
+                    f.batch, 0.0,
+                )
+                .is_ok()
+                {
+                    placed += 1;
+                }
+                if placed >= 40 {
+                    break 'outer_r;
+                }
+            }
+        }
+        rec_cluster.set_gpu_down(GpuId(0), true);
+        for pod in rec_cluster.pods_on(GpuId(0)) {
+            rec_recon.evict_pod(&mut rec_cluster, pod);
+        }
+        let cached_rec = CachedPredictor::new(&pred);
+        let mut scaler_rec = HybridAutoscaler::new(HybridConfig::default());
+        let mut tr = 0.0;
+        h.bench("recovery_replan_40pods", || {
+            tr += 1.0;
+            black_box(scaler_rec.plan(&fns[0], 120.0, &rec_cluster, &cached_rec, tr));
+        });
+    }
+
     // Class-aware planning on a mixed fleet (cheapest-feasible-class
     // placement + per-pod class factors) — same shape as the 40-pod tick so
     // the heterogeneity overhead is directly readable from the two entries.

@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     // A single request.
-    let rx = server.submit("cnn_s", vec![0.5f32; 3 * 32 * 32]);
+    let rx = server.submit("cnn_s", vec![0.5f32; 3 * 32 * 32])?;
     let reply = rx.recv_timeout(Duration::from_secs(30))?;
     println!(
         "single request: logits[0..3]={:?} latency={:?} (tokens {:?}, exec {:?})",
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     // A burst: dynamic batching + token scheduling kick in.
     let rxs: Vec<_> = (0..32)
         .map(|i| server.submit("cnn_s", vec![i as f32 / 32.0; 3 * 32 * 32]))
-        .collect();
+        .collect::<anyhow::Result<_>>()?;
     let mut max_batch = 0;
     for rx in rxs {
         let r = rx.recv_timeout(Duration::from_secs(30))?;

@@ -141,7 +141,7 @@ fn main() -> anyhow::Result<()> {
                 if let Some(sleep) = target.checked_sub(t0.elapsed()) {
                     std::thread::sleep(sleep);
                 }
-                pending.push(server.submit(&f.name, vec![0.3f32; dim]));
+                pending.push(server.submit(&f.name, vec![0.3f32; dim])?);
                 sent += 1;
             }
         }

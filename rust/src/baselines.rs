@@ -174,10 +174,9 @@ impl ScalingPolicy for KServePolicy {
         // cheapest *feasible* class first (memory + SLO under the class
         // clock), LIFO-by-index inside a class — which on a uniform fleet
         // is exactly the seed's highest-index-first pop, feasible or not.
-        let mut idle: Vec<GpuId> = (0..cluster.n_gpus())
-            .map(GpuId)
-            .filter(|&g| cluster.gpu(g).is_idle())
-            .collect();
+        // `idle_gpus()` (not a hand-rolled scan) so failed devices are
+        // excluded under fault injection.
+        let mut idle: Vec<GpuId> = cluster.idle_gpus().collect();
         let mut feas = class_feasible_memo(f, SM_FULL, QUOTA_FULL, predictor);
         idle.sort_by_key(|&g| {
             let c = cluster.gpu(g).class();
@@ -216,7 +215,7 @@ impl ScalingPolicy for KServePolicy {
             if now - last >= self.cooldown {
                 // Remove the newest pods first (LIFO, like knative).
                 let mut victims: Vec<&&Pod> = pods.iter().collect();
-                victims.sort_by(|a, b| b.created_at.partial_cmp(&a.created_at).unwrap());
+                victims.sort_by(|a, b| b.created_at.total_cmp(&a.created_at));
                 for v in victims.into_iter().take(current - desired) {
                     actions.push(ScalingAction::RemovePod { pod: v.id });
                 }
@@ -364,7 +363,7 @@ impl ScalingPolicy for FastGSharePolicy {
             let last = self.last_scale_down.get(&f.name).copied().unwrap_or(-1e18);
             if now - last >= self.cooldown {
                 let mut victims: Vec<&&Pod> = pods.iter().collect();
-                victims.sort_by(|a, b| b.created_at.partial_cmp(&a.created_at).unwrap());
+                victims.sort_by(|a, b| b.created_at.total_cmp(&a.created_at));
                 for v in victims.into_iter().take(current - desired) {
                     actions.push(ScalingAction::RemovePod { pod: v.id });
                 }
@@ -498,10 +497,7 @@ impl ScalingPolicy for TorporPolicy {
             // Most recently parked first: their host copies are warmest and
             // ties break deterministically on pod id.
             parked.sort_by(|a, b| {
-                b.state_since
-                    .partial_cmp(&a.state_since)
-                    .unwrap()
-                    .then(a.id.0.cmp(&b.id.0))
+                b.state_since.total_cmp(&a.state_since).then(a.id.0.cmp(&b.id.0))
             });
             for p in &parked {
                 if need == 0 {
@@ -530,7 +526,7 @@ impl ScalingPolicy for TorporPolicy {
             // Surplus goes to the swap tier immediately (no cooldown:
             // demotion is reversible at one swap, unlike deletion).
             let mut victims: Vec<&&Pod> = resident.iter().collect();
-            victims.sort_by(|a, b| b.created_at.partial_cmp(&a.created_at).unwrap());
+            victims.sort_by(|a, b| b.created_at.total_cmp(&a.created_at));
             for v in victims.into_iter().take(current - desired) {
                 actions.push(ScalingAction::DemotePod { pod: v.id });
             }

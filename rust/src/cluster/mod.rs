@@ -8,7 +8,7 @@
 
 pub mod reconfigurator;
 
-pub use reconfigurator::{Applied, Reconfigurator, ScalingAction};
+pub use reconfigurator::{Applied, ApplyError, Reconfigurator, ScalingAction};
 
 use crate::model::OpGraph;
 use crate::vgpu::{ClientId, GpuClass, QuotaMille, SmMille, VGpu};
@@ -152,6 +152,10 @@ pub struct ClusterState {
     functions: BTreeMap<String, FunctionSpec>,
     next_pod: u64,
     pub coldstart: ColdStartSpec,
+    /// Failed-device mask (fault injection): `down[i]` excludes GPU `i`
+    /// from every placement iterator until repaired. All-false by default,
+    /// so fault-free runs scan exactly the historical GPU sets.
+    down: Vec<bool>,
 }
 
 impl ClusterState {
@@ -166,6 +170,7 @@ impl ClusterState {
             functions: BTreeMap::new(),
             next_pod: 1,
             coldstart: ColdStartSpec::default(),
+            down: vec![false; n_gpus],
         }
     }
 
@@ -185,6 +190,7 @@ impl ClusterState {
             functions: BTreeMap::new(),
             next_pod: 1,
             coldstart: ColdStartSpec::default(),
+            down: vec![false; classes.len()],
         }
     }
 
@@ -268,23 +274,47 @@ impl ClusterState {
             .collect()
     }
 
+    /// Pod ids resident on one GPU, in id order (fault eviction sweeps).
+    pub fn pods_on(&self, gpu: GpuId) -> Vec<PodId> {
+        self.pods
+            .values()
+            .filter(|p| p.gpu == gpu)
+            .map(|p| p.id)
+            .collect()
+    }
+
+    /// Mark a GPU failed (`down = true`) or repaired (`down = false`).
+    /// Down GPUs vanish from [`ClusterState::used_gpus`] /
+    /// [`ClusterState::idle_gpus`] and thus from every placement rule,
+    /// across all platforms, without touching their rules.
+    pub fn set_gpu_down(&mut self, gpu: GpuId, down: bool) {
+        self.down[gpu.0] = down;
+    }
+
+    /// Whether a GPU is currently failed.
+    pub fn gpu_is_down(&self, gpu: GpuId) -> bool {
+        self.down[gpu.0]
+    }
+
     /// GPUs currently hosting at least one pod, in index order. An
     /// iterator — the plan tick scans this every function every tick, so
     /// no `Vec` is allocated (pinned in `benches/scheduler_hotpath.rs`).
+    /// Down (failed) GPUs are excluded; the mask is all-false in fault-free
+    /// runs, so the historical scan order is untouched.
     pub fn used_gpus(&self) -> impl Iterator<Item = GpuId> + '_ {
         self.gpus
             .iter()
             .enumerate()
-            .filter(|(_, g)| !g.is_idle())
+            .filter(|&(i, g)| !g.is_idle() && !self.down[i])
             .map(|(i, _)| GpuId(i))
     }
 
-    /// Idle GPUs in index order (allocation-free scan).
+    /// Idle GPUs in index order (allocation-free scan; down GPUs excluded).
     pub fn idle_gpus(&self) -> impl Iterator<Item = GpuId> + '_ {
         self.gpus
             .iter()
             .enumerate()
-            .filter(|(_, g)| g.is_idle())
+            .filter(|&(i, g)| g.is_idle() && !self.down[i])
             .map(|(i, _)| GpuId(i))
     }
 
@@ -294,14 +324,11 @@ impl ClusterState {
     }
 
     /// Used GPU with the lowest HGO (Algorithm 1, line 11). First-wins on
-    /// HGO ties (index order), as the seed's `min_by` did.
+    /// HGO ties (index order), as the seed's `min_by` did. `total_cmp`
+    /// orders identically on real HGO values and cannot panic on NaN.
     pub fn least_occupied_used_gpu(&self) -> Option<GpuId> {
-        self.used_gpus().min_by(|&a, &b| {
-            self.gpus[a.0]
-                .hgo()
-                .partial_cmp(&self.gpus[b.0].hgo())
-                .unwrap()
-        })
+        self.used_gpus()
+            .min_by(|&a, &b| self.gpus[a.0].hgo().total_cmp(&self.gpus[b.0].hgo()))
     }
 
     /// Used GPU for a new pod under heterogeneous fleets: cheapest feasible
@@ -431,6 +458,26 @@ mod tests {
         assert_eq!(c.idle_gpus().count(), 4);
         assert!(c.function("resnet50").is_some());
         assert!(c.function("nope").is_none());
+    }
+
+    #[test]
+    fn down_gpus_vanish_from_placement_iterators() {
+        let mut c = test_cluster();
+        c.set_gpu_down(GpuId(0), true);
+        assert!(c.gpu_is_down(GpuId(0)));
+        assert_eq!(c.idle_gpu(), Some(GpuId(1)));
+        assert_eq!(c.idle_gpus().count(), 3);
+        // Occupy GPU 1, then fail it: used_gpus must skip it too.
+        c.gpu_mut(GpuId(1)).attach(ClientId(9), 500, 500, 1e9).unwrap();
+        assert_eq!(c.used_gpus().count(), 1);
+        c.set_gpu_down(GpuId(1), true);
+        assert_eq!(c.used_gpus().count(), 0);
+        assert!(c.least_occupied_used_gpu().is_none());
+        // Repair restores the historical view.
+        c.set_gpu_down(GpuId(1), false);
+        assert_eq!(c.least_occupied_used_gpu(), Some(GpuId(1)));
+        c.set_gpu_down(GpuId(0), false);
+        assert_eq!(c.idle_gpu(), Some(GpuId(0)));
     }
 
     #[test]

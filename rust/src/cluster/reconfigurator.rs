@@ -9,6 +9,7 @@
 
 use super::{ClusterState, GpuId, Pod, PodId, PodPhase, PodState};
 use crate::perf::PerfModel;
+use crate::sim::faults::FaultPlan;
 use crate::util::prng::Pcg64;
 use crate::vgpu::device_file::DeviceFile;
 use crate::vgpu::tokens::TokenScheduler;
@@ -51,6 +52,20 @@ pub enum Applied {
     /// `ready_at` is when the host→device swap completes and the pod can
     /// serve again.
     PodPromoted { pod: PodId, ready_at: f64 },
+}
+
+/// Why [`Reconfigurator::apply_with_faults`] did not apply an action — the
+/// hard-rejection vs transient distinction the fault-aware callers need.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApplyError {
+    /// Hard rejection (allocation race, unknown pod, illegal state):
+    /// retrying the identical action cannot help; the policy re-plans on a
+    /// fresher snapshot.
+    Rejected(AllocError),
+    /// Every attempt failed transiently and the retry budget ran out after
+    /// `attempts` tries. The action is abandoned; the autoscaler sees the
+    /// unchanged cluster next tick and re-plans.
+    Transient { attempts: u32 },
 }
 
 pub struct Reconfigurator {
@@ -230,6 +245,91 @@ impl Reconfigurator {
                 Ok(Applied::PodPromoted { pod: *pod, ready_at })
             }
         }
+    }
+
+    /// Apply one action under a fault plan: each attempt first flips the
+    /// plan's transient coin; a transient failure costs deterministic
+    /// sim-time backoff (`backoff × attempt`, accumulated) and is retried
+    /// up to the spec's retry budget. The backoff manifests as delayed
+    /// readiness on `PodCreated` / `PodPromoted` — instantaneous actions
+    /// (quota writes, removals) simply land late within the same tick.
+    ///
+    /// Hard allocation errors surface immediately as
+    /// [`ApplyError::Rejected`] (retrying an allocation race cannot help);
+    /// exhausted budgets surface as [`ApplyError::Transient`]. With an
+    /// inactive spec the coin is never drawn and this is byte-identical to
+    /// [`Reconfigurator::apply`].
+    pub fn apply_with_faults(
+        &mut self,
+        cluster: &mut ClusterState,
+        perf: &PerfModel,
+        action: &ScalingAction,
+        now: f64,
+        faults: &mut FaultPlan,
+    ) -> Result<Applied, ApplyError> {
+        let (retries, backoff) = {
+            let s = faults.spec();
+            (s.reconfig_retries, s.reconfig_backoff)
+        };
+        let mut delay = 0.0;
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            if faults.draw_transient() {
+                if attempt > retries {
+                    return Err(ApplyError::Transient { attempts: attempt });
+                }
+                delay += backoff * attempt as f64;
+                continue;
+            }
+            let applied = self
+                .apply(cluster, perf, action, now)
+                .map_err(ApplyError::Rejected)?;
+            return Ok(match applied {
+                Applied::PodCreated { pod, ready_at } if delay > 0.0 => {
+                    let ready_at = ready_at + delay;
+                    if let Some(p) = cluster.pod_mut(pod) {
+                        p.phase = PodPhase::ColdStarting { ready_at };
+                    }
+                    Applied::PodCreated { pod, ready_at }
+                }
+                Applied::PodPromoted { pod, ready_at } if delay > 0.0 => {
+                    let ready_at = ready_at + delay;
+                    if let Some(p) = cluster.pod_mut(pod) {
+                        p.phase = PodPhase::ColdStarting { ready_at };
+                    }
+                    Applied::PodPromoted { pod, ready_at }
+                }
+                other => other,
+            });
+        }
+    }
+
+    /// Forcibly remove a pod whose device died: same bookkeeping as the
+    /// `RemovePod` arm of [`Reconfigurator::apply`] (vGPU detach, host-tier
+    /// release, device-file + scheduler cleanup), but it returns the evicted
+    /// [`Pod`] and deliberately skips the scale-down counters and ledger
+    /// boundary — fault eviction is not a scaling decision; the caller
+    /// closes the billing account at the failure instant itself.
+    pub fn evict_pod(&mut self, cluster: &mut ClusterState, pod: PodId) -> Option<Pod> {
+        let p = cluster.remove_pod(pod)?;
+        let spec = cluster.function(&p.function).expect("function exists");
+        let mem = spec.graph.memory_bytes(p.batch);
+        let (dev_mem, host_mem) = if p.state == PodState::HostCached {
+            (mem - p.weight_bytes, p.weight_bytes)
+        } else {
+            (mem, 0.0)
+        };
+        let detached = cluster.gpu_mut(p.gpu).detach(p.client_id(), dev_mem);
+        debug_assert!(detached.is_ok(), "evicted pod must detach cleanly");
+        if host_mem > 0.0 {
+            cluster.gpu_mut(p.gpu).release_host(host_mem);
+        }
+        self.device_files[p.gpu.0].remove_client(p.client_id());
+        if let Some(scheds) = &self.schedulers {
+            scheds[p.gpu.0].deregister(p.client_id());
+        }
+        Some(p)
     }
 
     /// NVML-style inventory line per GPU (UUID, classes, HGO, free SM/mem).
@@ -483,6 +583,172 @@ mod tests {
         assert!((ready_at - (6.0 + weights / 2e8)).abs() < 1e-9);
         assert!(!c.pod(pod).unwrap().is_ready(6.0));
         assert!(c.pod(pod).unwrap().is_ready(ready_at));
+    }
+
+    #[test]
+    fn evict_pod_frees_both_tiers_without_scaling_semantics() {
+        let (mut c, mut r, pm) = setup();
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(0), 500, 300, 8, 0.0).unwrap();
+        let evicted = r.evict_pod(&mut c, pod).expect("pod exists");
+        assert_eq!(evicted.id, pod);
+        assert!(c.pod(pod).is_none());
+        assert!(c.gpu(GpuId(0)).is_idle());
+        c.check_invariants().unwrap();
+        // Idempotent on missing pods.
+        assert!(r.evict_pod(&mut c, pod).is_none());
+
+        // A parked (HostCached) victim frees the host tier too.
+        let pod = place_pod(&mut r, &mut c, &pm, "resnet50", GpuId(1), 500, 300, 8, 0.0).unwrap();
+        r.apply(&mut c, &pm, &ScalingAction::DemotePod { pod }, 1.0)
+            .unwrap();
+        assert!(c.gpu(GpuId(1)).host_mem_used() > 0.0);
+        r.evict_pod(&mut c, pod).unwrap();
+        assert_eq!(c.gpu(GpuId(1)).host_mem_used(), 0.0);
+        assert!(c.gpu(GpuId(1)).is_idle());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn apply_with_faults_inactive_matches_plain_apply() {
+        use crate::sim::faults::FaultSpec;
+        let (mut c1, mut r1, pm) = setup();
+        let (mut c2, mut r2, _) = setup();
+        let mut plan = FaultPlan::compile(&FaultSpec::default(), 42, 3, 100.0);
+        let action = ScalingAction::CreatePod {
+            function: "resnet50".into(),
+            gpu: GpuId(0),
+            sm: 500,
+            quota: 300,
+            batch: 8,
+            new_gpu: true,
+        };
+        let a = r1.apply(&mut c1, &pm, &action, 0.0).unwrap();
+        let b = r2
+            .apply_with_faults(&mut c2, &pm, &action, 0.0, &mut plan)
+            .unwrap();
+        assert_eq!(a, b, "inactive fault plan must not perturb apply");
+        assert_eq!(plan.transients(), 0);
+    }
+
+    #[test]
+    fn apply_with_faults_exhausts_retries_and_distinguishes_rejections() {
+        use crate::sim::faults::{FaultPlan, FaultSpec};
+        let (mut c, mut r, pm) = setup();
+        // Certain transient failure: every action aborts after 1 + retries
+        // attempts and mutates nothing.
+        let spec = FaultSpec {
+            reconfig_fail_p: 1.0,
+            reconfig_retries: 3,
+            ..FaultSpec::default()
+        };
+        let mut plan = FaultPlan::compile(&spec, 7, 3, 100.0);
+        let action = ScalingAction::CreatePod {
+            function: "resnet50".into(),
+            gpu: GpuId(0),
+            sm: 500,
+            quota: 300,
+            batch: 8,
+            new_gpu: true,
+        };
+        let err = r
+            .apply_with_faults(&mut c, &pm, &action, 0.0, &mut plan)
+            .unwrap_err();
+        assert_eq!(err, ApplyError::Transient { attempts: 4 });
+        assert_eq!(plan.transients(), 4);
+        assert_eq!(c.pods_of("resnet50").len(), 0);
+        c.check_invariants().unwrap();
+
+        // A hard allocation error surfaces as Rejected even under faults —
+        // fill the GPU with a clean plan, then ask for more.
+        let mut clean = FaultPlan::compile(&FaultSpec::default(), 7, 3, 100.0);
+        r.apply_with_faults(
+            &mut c,
+            &pm,
+            &ScalingAction::CreatePod {
+                function: "resnet50".into(),
+                gpu: GpuId(0),
+                sm: 1000,
+                quota: 1000,
+                batch: 8,
+                new_gpu: true,
+            },
+            0.0,
+            &mut clean,
+        )
+        .unwrap();
+        let err = r
+            .apply_with_faults(
+                &mut c,
+                &pm,
+                &ScalingAction::CreatePod {
+                    function: "resnet50".into(),
+                    gpu: GpuId(0),
+                    sm: 1000,
+                    quota: 1000,
+                    batch: 8,
+                    new_gpu: false,
+                },
+                1.0,
+                &mut clean,
+            )
+            .unwrap_err();
+        assert!(matches!(err, ApplyError::Rejected(_)));
+    }
+
+    #[test]
+    fn apply_with_faults_backoff_delays_readiness() {
+        use crate::sim::faults::{FaultPlan, FaultSpec};
+        // Half the attempts fail: across many creations, at least one must
+        // succeed after a retry, and every delayed pod's phase must agree
+        // with the returned ready_at.
+        let spec = FaultSpec {
+            reconfig_fail_p: 0.5,
+            reconfig_retries: 5,
+            reconfig_backoff: 0.25,
+            ..FaultSpec::default()
+        };
+        let mut c = ClusterState::new(16, 16e9);
+        c.register_function(FunctionSpec {
+            name: "resnet50".into(),
+            graph: zoo_graph(ZooModel::ResNet50),
+            slo: 0.1,
+            batch: 8,
+            artifact: None,
+        });
+        let mut r = Reconfigurator::new(&c, 42);
+        let mut plan = FaultPlan::compile(&spec, 42, 16, 1000.0);
+        let mut delayed = 0;
+        for gpu in 0..16 {
+            let action = ScalingAction::CreatePod {
+                function: "resnet50".into(),
+                gpu: GpuId(gpu),
+                sm: 500,
+                quota: 300,
+                batch: 8,
+                new_gpu: true,
+            };
+            // Baseline ready_at with the same jitter draw: clone the recon
+            // state before applying so the RNG position matches.
+            if let Ok(Applied::PodCreated { pod, ready_at }) =
+                r.apply_with_faults(&mut c, &pm_default(), &action, 0.0, &mut plan)
+            {
+                let p = c.pod(pod).unwrap();
+                let PodPhase::ColdStarting { ready_at: phase_ready } = p.phase else {
+                    panic!("fresh pod must be cold-starting")
+                };
+                assert_eq!(phase_ready.to_bits(), ready_at.to_bits());
+                if plan.transients() > 0 {
+                    delayed += 1;
+                }
+            }
+        }
+        assert!(plan.transients() > 0, "p=0.5 over 16 creates must draw transients");
+        assert!(delayed > 0);
+        c.check_invariants().unwrap();
+    }
+
+    fn pm_default() -> PerfModel {
+        PerfModel::default()
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::cluster::FunctionSpec;
 use crate::metrics::RunReport;
 use crate::model::zoo::{zoo_graph, ZooModel};
 use crate::perf::PerfModel;
-use crate::sim::{run_sim, SimConfig};
+use crate::sim::{fault_name_menu, fault_spec_from_name, run_sim, SimConfig, NO_FAULTS};
 use crate::util::bench::ascii_table;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -79,7 +79,7 @@ pub fn experiment_functions() -> Vec<FunctionSpec> {
 }
 
 /// One grid cell: a platform (by registry name) run against one preset
-/// instance at one seed, on one named fleet.
+/// instance at one seed, on one named fleet, under one fault preset.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ScenarioCell {
     pub platform: String,
@@ -88,6 +88,9 @@ pub struct ScenarioCell {
     /// Fleet registry name ([`DEFAULT_FLEET`] = the pre-fleet homogeneous
     /// V100 cluster; omitted from the export for byte-stability).
     pub fleet: String,
+    /// Fault preset name ([`NO_FAULTS`] = zero fault events scheduled;
+    /// omitted from the export for byte-stability).
+    pub fault: String,
 }
 
 /// Declarative description of the experiment grid. `platforms` holds
@@ -111,6 +114,10 @@ pub struct ScenarioMatrix {
     /// byte-stable pre-fleet grid.
     pub fleets: Vec<String>,
     pub fleet_registry: FleetRegistry,
+    /// Fault preset names per cell column (see
+    /// [`crate::sim::fault_table`]); default `[no-faults]` — the
+    /// byte-stable zero-fault grid.
+    pub faults: Vec<String>,
 }
 
 impl Default for ScenarioMatrix {
@@ -131,30 +138,38 @@ impl Default for ScenarioMatrix {
             rps: 150.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
             fleet_registry: FleetRegistry::default(),
+            faults: vec![NO_FAULTS.to_string()],
         }
     }
 }
 
 impl ScenarioMatrix {
-    /// The grid cells in canonical (preset-major, then fleet, then
-    /// platform, then seed) order. The order is part of the output
+    /// The grid cells in canonical (preset-major, then fault, then fleet,
+    /// then platform, then seed) order. The order is part of the output
     /// contract: aggregation and serialisation walk it deterministically,
-    /// and with the single default fleet it is exactly the pre-fleet
-    /// (preset, platform, seed) walk.
+    /// and with the single default fault/fleet it is exactly the pre-fault
+    /// (preset, fleet, platform, seed) walk.
     pub fn cells(&self) -> Vec<ScenarioCell> {
         let mut out = Vec::with_capacity(
-            self.presets.len() * self.fleets.len() * self.platforms.len() * self.seeds.len(),
+            self.presets.len()
+                * self.faults.len()
+                * self.fleets.len()
+                * self.platforms.len()
+                * self.seeds.len(),
         );
         for &preset in &self.presets {
-            for fleet in &self.fleets {
-                for platform in &self.platforms {
-                    for &seed in &self.seeds {
-                        out.push(ScenarioCell {
-                            platform: platform.clone(),
-                            preset,
-                            seed,
-                            fleet: fleet.clone(),
-                        });
+            for fault in &self.faults {
+                for fleet in &self.fleets {
+                    for platform in &self.platforms {
+                        for &seed in &self.seeds {
+                            out.push(ScenarioCell {
+                                platform: platform.clone(),
+                                preset,
+                                seed,
+                                fleet: fleet.clone(),
+                                fault: fault.clone(),
+                            });
+                        }
                     }
                 }
             }
@@ -186,6 +201,13 @@ impl ScenarioMatrix {
                 self.fleet_registry.names().join(", ")
             )
         });
+        let fault_spec = fault_spec_from_name(&cell.fault).unwrap_or_else(|| {
+            panic!(
+                "fault preset '{}' not in registry (known: {})",
+                cell.fault,
+                fault_name_menu()
+            )
+        });
         // Lookup is case-insensitive; the *result* always keys on the
         // canonical registry names so summaries, ratios, and the policy's
         // self-reported name agree regardless of the caller's casing.
@@ -194,6 +216,7 @@ impl ScenarioMatrix {
             preset: cell.preset,
             seed: cell.seed,
             fleet: fleet.name.clone(),
+            fault: cell.fault.to_ascii_lowercase(),
         };
         let fns = experiment_functions();
         let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
@@ -213,6 +236,9 @@ impl ScenarioMatrix {
         } else {
             PerfModel::default()
         };
+        // The default spec is inert (zero fault events scheduled, no RNG
+        // consumed), so `no-faults` cells keep their exact pre-fault bytes.
+        sim_cfg.faults = fault_spec;
         let predictor = spec.build_predictor();
         let mut policy = spec.policy();
         // Every cell runs through the fleet-built cluster — for the default
@@ -257,9 +283,31 @@ impl ScenarioMatrix {
             gpus: self.gpus,
             rps: self.rps,
             fleets: self.fleets.clone(),
+            faults: self.faults.clone(),
             cells: results,
         }
     }
+}
+
+/// Parse a fault-preset selection (one `--faults` list entry per element):
+/// names from the fault-preset registry, case-insensitive, deduplicated in
+/// first-appearance order. Unknown names error with the registry menu.
+pub fn parse_faults(specs: &[String]) -> anyhow::Result<Vec<String>> {
+    anyhow::ensure!(!specs.is_empty(), "need at least one fault preset");
+    let mut out: Vec<String> = Vec::new();
+    for s in specs {
+        let t = s.trim().to_ascii_lowercase();
+        anyhow::ensure!(
+            fault_spec_from_name(&t).is_some(),
+            "unknown fault preset '{}' (expected one of: {})",
+            s.trim(),
+            fault_name_menu()
+        );
+        if !out.contains(&t) {
+            out.push(t);
+        }
+    }
+    Ok(out)
 }
 
 /// Parse a fleet selection (one `--fleets` list entry per element) against
@@ -436,10 +484,23 @@ pub struct CellResult {
     pub platform: String,
     /// Fleet the cell ran on; [`DEFAULT_FLEET`] cells omit the key in JSON.
     pub fleet: String,
+    /// Fault preset of the cell; [`NO_FAULTS`] cells omit the key in JSON.
+    pub fault: String,
     pub preset: Preset,
     pub seed: u64,
     pub served: usize,
     pub dropped: usize,
+    /// Requests that died in a killed pod (in-flight at a GPU failure or
+    /// pod crash). Only populated — and only exported — for fault-injected
+    /// cells; `None` cells keep their pre-fault bytes.
+    pub failed: Option<usize>,
+    /// Fraction of fleet GPU-time the devices were up: only on
+    /// fault-injected cells.
+    pub availability: Option<f64>,
+    /// Mean time-to-restore-capacity over every GPU/pod loss that a
+    /// replacement replica closed; `None` when no loss was restored (or no
+    /// faults ran).
+    pub mttr: Option<f64>,
     /// Request-weighted violation rate, each function judged at its own SLO.
     pub slo_violation_rate: f64,
     /// P99 end-to-end latency merged across all functions (seconds; `0.0`
@@ -548,13 +609,26 @@ impl CellResult {
         } else {
             Vec::new()
         };
+        let (failed, availability, mttr) = if report.faults_active {
+            (
+                Some(report.total_failed()),
+                Some(report.availability()),
+                report.mttr_mean(),
+            )
+        } else {
+            (None, None, None)
+        };
         CellResult {
             platform: cell.platform.clone(),
             fleet: cell.fleet.clone(),
+            fault: cell.fault.clone(),
             preset: cell.preset,
             seed: cell.seed,
             served,
             dropped: report.total_dropped(),
+            failed,
+            availability,
+            mttr,
             slo_violation_rate,
             p99_latency,
             ttft_p50,
@@ -583,11 +657,27 @@ impl CellResult {
         if self.fleet != DEFAULT_FLEET {
             fields.push(("fleet", Json::Str(self.fleet.clone())));
         }
+        // Same rule for the fault axis: `no-faults` cells carry no fault
+        // keys at all — the pre-fault export to the byte.
+        if self.fault != NO_FAULTS {
+            fields.push(("fault", Json::Str(self.fault.clone())));
+        }
         fields.extend([
             ("preset", Json::Str(self.preset.name().to_string())),
             ("seed", Json::Num(self.seed as f64)),
             ("served", Json::Num(self.served as f64)),
             ("dropped", Json::Num(self.dropped as f64)),
+        ]);
+        if let Some(f) = self.failed {
+            fields.push(("failed", Json::Num(f as f64)));
+        }
+        if let Some(a) = self.availability {
+            fields.push(("availability", Json::Num(a)));
+        }
+        if let Some(m) = self.mttr {
+            fields.push(("mttr", Json::Num(m)));
+        }
+        fields.extend([
             ("slo_violation_rate", Json::Num(self.slo_violation_rate)),
             ("p99_latency", Json::Num(self.p99_latency)),
         ]);
@@ -636,6 +726,15 @@ impl CellResult {
             }
             None => DEFAULT_FLEET.to_string(),
         };
+        // Absent fault key ⇒ the pre-fault schema ⇒ no faults.
+        let fault = match j.opt("fault") {
+            Some(v) => {
+                let name = v.as_str()?.to_string();
+                anyhow::ensure!(!name.is_empty(), "cell fault name must be non-empty");
+                name
+            }
+            None => NO_FAULTS.to_string(),
+        };
         let classes = match j.opt("classes") {
             Some(v) => v
                 .as_arr()?
@@ -647,10 +746,15 @@ impl CellResult {
         Ok(CellResult {
             platform,
             fleet,
+            fault,
             preset,
             seed: j.get("seed")?.as_f64()? as u64,
             served: j.get("served")?.as_usize()?,
             dropped: j.get("dropped")?.as_usize()?,
+            // Absent fault-metric keys ⇒ a pre-fault (or no-faults) cell.
+            failed: j.opt("failed").map(|v| v.as_usize()).transpose()?,
+            availability: j.opt("availability").map(|v| v.as_f64()).transpose()?,
+            mttr: j.opt("mttr").map(|v| v.as_f64()).transpose()?,
             slo_violation_rate: j.get("slo_violation_rate")?.as_f64()?,
             p99_latency: j.get("p99_latency")?.as_f64()?,
             // Absent TTFT keys ⇒ a pre-lifecycle cell.
@@ -681,10 +785,16 @@ pub struct SummaryRow {
     pub preset: Preset,
     /// Fleet of the group ([`DEFAULT_FLEET`] rows omit the key in JSON).
     pub fleet: String,
+    /// Fault preset of the group ([`NO_FAULTS`] rows omit the key in JSON).
+    pub fault: String,
     pub platform: String,
     pub cells: usize,
     pub slo_violation_rate: f64,
     pub p99_latency: f64,
+    /// Mean availability / MTTR over the group's fault-injected cells;
+    /// `None` when the group has none (pre-fault rows keep their bytes).
+    pub availability: Option<f64>,
+    pub mttr: Option<f64>,
     /// Mean TTFT percentiles over the group's lifecycle-aware cells;
     /// `None` when the group has none (pre-lifecycle rows keep their
     /// bytes — the keys are omitted from the JSON summary).
@@ -704,6 +814,8 @@ pub struct SummaryRow {
 pub struct HeadlineRatio {
     pub preset: Preset,
     pub fleet: String,
+    /// Fault preset of the pair ([`NO_FAULTS`] rows omit the key in JSON).
+    pub fault: String,
     pub platform: String,
     /// baseline $/1k over HAS-GPU $/1k (paper: 10.8x for KServe).
     pub cost_ratio: Option<f64>,
@@ -714,6 +826,10 @@ pub struct HeadlineRatio {
     /// the key is omitted from JSON entirely, keeping pre-lifecycle
     /// ratio rows byte-identical.
     pub ttft_ratio: Option<f64>,
+    /// baseline mean-time-to-restore over HAS-GPU's — the chaos headline
+    /// (has-gpu replaces lost replicas next tick; kserve waits out a full
+    /// instance cold start). Same key-omission rule as `ttft_ratio`.
+    pub mttr_ratio: Option<f64>,
 }
 
 /// Everything one `has-gpu expt` invocation produces: config echo, per-cell
@@ -726,28 +842,38 @@ pub struct MatrixReport {
     /// Fleet names of the grid, in cell-column order. `[uniform-v100]`
     /// (the default) is omitted from the config echo for byte-stability.
     pub fleets: Vec<String>,
+    /// Fault preset names of the grid, in cell-column order. `[no-faults]`
+    /// (the default) is omitted from the config echo for byte-stability.
+    pub faults: Vec<String>,
     pub cells: Vec<CellResult>,
 }
 
 pub const BENCH_SIM_SCHEMA: &str = "has-gpu/bench-sim/v1";
 
 impl MatrixReport {
-    /// Seed-averaged rows per (preset, fleet, platform), in first-appearance
-    /// order (which is the canonical cell order when produced by `run`).
+    /// Seed-averaged rows per (preset, fault, fleet, platform), in
+    /// first-appearance order (which is the canonical cell order when
+    /// produced by `run`).
     pub fn summary(&self) -> Vec<SummaryRow> {
-        let mut order: Vec<(Preset, &str, &str)> = Vec::new();
+        let mut order: Vec<(Preset, &str, &str, &str)> = Vec::new();
         for c in &self.cells {
-            if !order.contains(&(c.preset, c.fleet.as_str(), c.platform.as_str())) {
-                order.push((c.preset, c.fleet.as_str(), c.platform.as_str()));
+            let key = (c.preset, c.fault.as_str(), c.fleet.as_str(), c.platform.as_str());
+            if !order.contains(&key) {
+                order.push(key);
             }
         }
         order
             .into_iter()
-            .map(|(preset, fleet, platform)| {
+            .map(|(preset, fault, fleet, platform)| {
                 let group: Vec<&CellResult> = self
                     .cells
                     .iter()
-                    .filter(|c| c.preset == preset && c.fleet == fleet && c.platform == platform)
+                    .filter(|c| {
+                        c.preset == preset
+                            && c.fault == fault
+                            && c.fleet == fleet
+                            && c.platform == platform
+                    })
                     .collect();
                 let n = group.len() as f64;
                 // TTFT averages over the cells that carry it (lifecycle
@@ -762,11 +888,16 @@ impl MatrixReport {
                 SummaryRow {
                     preset,
                     fleet: fleet.to_string(),
+                    fault: fault.to_string(),
                     platform: platform.to_string(),
                     cells: group.len(),
                     slo_violation_rate: group.iter().map(|c| c.slo_violation_rate).sum::<f64>()
                         / n,
                     p99_latency: group.iter().map(|c| c.p99_latency).sum::<f64>() / n,
+                    availability: mean_opt(
+                        group.iter().filter_map(|c| c.availability).collect(),
+                    ),
+                    mttr: mean_opt(group.iter().filter_map(|c| c.mttr).collect()),
                     ttft_p50: mean_opt(group.iter().filter_map(|c| c.ttft_p50).collect()),
                     ttft_p99: mean_opt(group.iter().filter_map(|c| c.ttft_p99).collect()),
                     gpu_seconds: group.iter().map(|c| c.gpu_seconds).sum::<f64>() / n,
@@ -776,9 +907,10 @@ impl MatrixReport {
             .collect()
     }
 
-    /// Baseline ÷ HAS-GPU ratios per (preset, fleet) — cross-fleet ratios
-    /// would compare different hardware. A zero HAS-GPU denominator yields
-    /// `None` (undefined) rather than an absurd finite number.
+    /// Baseline ÷ HAS-GPU ratios per (preset, fault, fleet) — cross-fleet
+    /// or cross-fault ratios would compare different hardware or different
+    /// luck. A zero HAS-GPU denominator yields `None` (undefined) rather
+    /// than an absurd finite number.
     pub fn ratios_vs_has_gpu(&self) -> Vec<HeadlineRatio> {
         let summary = self.summary();
         let ratio = |num: f64, den: f64| if den > 0.0 { Some(num / den) } else { None };
@@ -788,20 +920,26 @@ impl MatrixReport {
                 continue;
             }
             let Some(has) = summary.iter().find(|r| {
-                r.preset == row.preset && r.fleet == row.fleet && r.platform == HAS_GPU
+                r.preset == row.preset
+                    && r.fault == row.fault
+                    && r.fleet == row.fleet
+                    && r.platform == HAS_GPU
             }) else {
                 continue;
+            };
+            let opt_ratio = |num: Option<f64>, den: Option<f64>| match (num, den) {
+                (Some(num), Some(den)) => ratio(num, den),
+                _ => None,
             };
             out.push(HeadlineRatio {
                 preset: row.preset,
                 fleet: row.fleet.clone(),
+                fault: row.fault.clone(),
                 platform: row.platform.clone(),
                 cost_ratio: ratio(row.cost_per_1k, has.cost_per_1k),
                 violation_ratio: ratio(row.slo_violation_rate, has.slo_violation_rate),
-                ttft_ratio: match (row.ttft_p99, has.ttft_p99) {
-                    (Some(num), Some(den)) => ratio(num, den),
-                    _ => None,
-                },
+                ttft_ratio: opt_ratio(row.ttft_p99, has.ttft_p99),
+                mttr_ratio: opt_ratio(row.mttr, has.mttr),
             });
         }
         out
@@ -813,11 +951,19 @@ impl MatrixReport {
         self.cells.iter().any(|c| c.fleet != DEFAULT_FLEET)
     }
 
+    /// Does this grid contain any fault-injected cells (⇒ the export
+    /// carries fault keys and the table fault/availability/MTTR columns)?
+    fn has_fault_cells(&self) -> bool {
+        self.cells.iter().any(|c| c.fault != NO_FAULTS)
+    }
+
     /// The paper-style comparison table, rendered as ASCII. Grids with a
-    /// non-default fleet gain a `fleet` column; stock grids keep the
-    /// familiar shape.
+    /// non-default fleet gain a `fleet` column, chaos grids gain
+    /// fault/availability/MTTR columns; stock grids keep the familiar
+    /// shape.
     pub fn table(&self) -> String {
         let with_fleet = self.has_fleet_cells();
+        let with_faults = self.has_fault_cells();
         let summary = self.summary();
         // TTFT columns appear only when some row actually carries TTFT
         // (lifecycle presets) — stock grids keep the familiar shape.
@@ -833,12 +979,25 @@ impl MatrixReport {
                 if with_fleet {
                     row.push(r.fleet.clone());
                 }
+                if with_faults {
+                    row.push(r.fault.clone());
+                }
                 row.extend([
                     r.platform.clone(),
                     format!("{}", r.cells),
                     format!("{:.4}", r.slo_violation_rate),
                     format!("{:.1}", r.p99_latency * 1e3),
                 ]);
+                if with_faults {
+                    row.push(match r.availability {
+                        Some(a) => format!("{a:.4}"),
+                        None => "-".to_string(),
+                    });
+                    row.push(match r.mttr {
+                        Some(m) => format!("{m:.1}"),
+                        None => "-".to_string(),
+                    });
+                }
                 if with_ttft {
                     row.push(fmt_opt(r.ttft_p50));
                     row.push(fmt_opt(r.ttft_p99));
@@ -854,7 +1013,13 @@ impl MatrixReport {
         if with_fleet {
             headers.push("fleet");
         }
+        if with_faults {
+            headers.push("fault");
+        }
         headers.extend(["platform", "seeds", "slo-viol", "p99 (ms)"]);
+        if with_faults {
+            headers.extend(["avail", "mttr (s)"]);
+        }
         if with_ttft {
             headers.extend(["ttft-p50 (ms)", "ttft-p99 (ms)"]);
         }
@@ -871,14 +1036,23 @@ impl MatrixReport {
                     if r.fleet != DEFAULT_FLEET {
                         fields.push(("fleet", Json::Str(r.fleet.clone())));
                     }
+                    if r.fault != NO_FAULTS {
+                        fields.push(("fault", Json::Str(r.fault.clone())));
+                    }
                     fields.extend([
                         ("platform", Json::Str(r.platform.clone())),
                         ("cells", Json::Num(r.cells as f64)),
                         ("slo_violation_rate", Json::Num(r.slo_violation_rate)),
                         ("p99_latency", Json::Num(r.p99_latency)),
                     ]);
-                    // Key omission mirrors the cell rule: only lifecycle
-                    // rows export TTFT.
+                    // Key omission mirrors the cell rule: only fault rows
+                    // export availability/MTTR, only lifecycle rows TTFT.
+                    if let Some(a) = r.availability {
+                        fields.push(("availability", Json::Num(a)));
+                    }
+                    if let Some(m) = r.mttr {
+                        fields.push(("mttr", Json::Num(m)));
+                    }
                     if let Some(t) = r.ttft_p50 {
                         fields.push(("ttft_p50", Json::Num(t)));
                     }
@@ -902,17 +1076,24 @@ impl MatrixReport {
                     if r.fleet != DEFAULT_FLEET {
                         fields.push(("fleet", Json::Str(r.fleet.clone())));
                     }
+                    if r.fault != NO_FAULTS {
+                        fields.push(("fault", Json::Str(r.fault.clone())));
+                    }
                     fields.extend([
                         ("platform", Json::Str(r.platform.clone())),
                         ("cost_ratio", opt_num(r.cost_ratio)),
                         ("violation_ratio", opt_num(r.violation_ratio)),
                     ]);
                     // Unlike cost/violation (whose None means "undefined
-                    // for this grid"), an absent ttft_ratio means the
-                    // metric doesn't exist for the preset — omit the key
-                    // so pre-lifecycle ratio rows keep their bytes.
+                    // for this grid"), an absent ttft_ratio/mttr_ratio
+                    // means the metric doesn't exist for the preset — omit
+                    // the key so pre-lifecycle/pre-fault ratio rows keep
+                    // their bytes.
                     if let Some(t) = r.ttft_ratio {
                         fields.push(("ttft_ratio", Json::Num(t)));
+                    }
+                    if let Some(m) = r.mttr_ratio {
+                        fields.push(("mttr_ratio", Json::Num(m)));
                     }
                     Json::obj(fields)
                 })
@@ -923,12 +1104,18 @@ impl MatrixReport {
             ("gpus", Json::Num(self.gpus as f64)),
             ("rps", Json::Num(self.rps)),
         ];
-        // Config echoes the fleet axis only when it departs from the
-        // pre-fleet default (byte-stability of stock grids).
+        // Config echoes the fleet/fault axes only when they depart from
+        // the pre-fleet/pre-fault defaults (byte-stability of stock grids).
         if self.fleets != [DEFAULT_FLEET.to_string()] {
             config.push((
                 "fleets",
                 Json::Arr(self.fleets.iter().map(|f| Json::Str(f.clone())).collect()),
+            ));
+        }
+        if self.faults != [NO_FAULTS.to_string()] {
+            config.push((
+                "faults",
+                Json::Arr(self.faults.iter().map(|f| Json::Str(f.clone())).collect()),
             ));
         }
         Json::obj(vec![
@@ -958,11 +1145,20 @@ impl MatrixReport {
                 .collect::<anyhow::Result<Vec<_>>>()?,
             None => vec![DEFAULT_FLEET.to_string()],
         };
+        let faults = match config.opt("faults") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|f| Ok(f.as_str()?.to_string()))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![NO_FAULTS.to_string()],
+        };
         Ok(MatrixReport {
             seconds: config.get("seconds")?.as_usize()?,
             gpus: config.get("gpus")?.as_usize()?,
             rps: config.get("rps")?.as_f64()?,
             fleets,
+            faults,
             cells: j
                 .get("cells")?
                 .as_arr()?
@@ -1100,6 +1296,7 @@ mod tests {
             gpus: 4,
             rps: 50.0,
             fleets: strs(&["uniform-v100", "mixed-a100-v100-t4"]),
+            faults: vec![NO_FAULTS.to_string()],
             cells,
         };
         let summary = report.summary();
@@ -1227,6 +1424,7 @@ mod tests {
             preset: Preset::Standard,
             seed: 1,
             fleet: DEFAULT_FLEET.into(),
+            fault: NO_FAULTS.into(),
         };
         let _ = m.run_cell(&cell);
     }
@@ -1241,10 +1439,14 @@ mod tests {
         CellResult {
             platform: platform.to_string(),
             fleet: DEFAULT_FLEET.to_string(),
+            fault: NO_FAULTS.to_string(),
             preset,
             seed,
             served: 1000,
             dropped: 0,
+            failed: None,
+            availability: None,
+            mttr: None,
             slo_violation_rate: viol,
             p99_latency: 0.1,
             ttft_p50: None,
@@ -1268,6 +1470,7 @@ mod tests {
             gpus: 4,
             rps: 50.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
             cells: vec![
                 mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
                 mk_cell("has-gpu", Preset::Standard, 2, 0.03, 3.0),
@@ -1295,6 +1498,7 @@ mod tests {
             gpus: 4,
             rps: 50.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
             cells: vec![
                 mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
                 mk_cell("has-vertical-only", Preset::Standard, 1, 0.08, 1.5),
@@ -1314,10 +1518,14 @@ mod tests {
         let mk = |platform: &str, viol: f64| CellResult {
             platform: platform.to_string(),
             fleet: DEFAULT_FLEET.to_string(),
+            fault: NO_FAULTS.to_string(),
             preset: Preset::Diurnal,
             seed: 1,
             served: 100,
             dropped: 0,
+            failed: None,
+            availability: None,
+            mttr: None,
             slo_violation_rate: viol,
             p99_latency: 0.05,
             ttft_p50: None,
@@ -1337,6 +1545,7 @@ mod tests {
             gpus: 4,
             rps: 50.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
             cells: vec![mk("has-gpu", 0.0), mk("kserve", 0.02)],
         };
         let ratios = report.ratios_vs_has_gpu();
@@ -1355,13 +1564,18 @@ mod tests {
             gpus: 2,
             rps: 10.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
             cells: vec![CellResult {
                 platform: "fast-gshare".to_string(),
                 fleet: DEFAULT_FLEET.to_string(),
+                fault: NO_FAULTS.to_string(),
                 preset: Preset::SpikyBurst,
                 seed: 42,
                 served: 10,
                 dropped: 1,
+                failed: None,
+                availability: None,
+                mttr: None,
                 slo_violation_rate: 0.25,
                 p99_latency: 0.125,
                 ttft_p50: None,
@@ -1406,6 +1620,7 @@ mod tests {
             gpus: 1,
             rps: 1.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
             cells: vec![mk_cell("esg-pipeline", Preset::Standard, 1, 0.5, 9.0)],
         };
         let j = report.to_json();
@@ -1465,6 +1680,142 @@ mod tests {
     }
 
     #[test]
+    fn fault_axis_enumerates_between_preset_and_fleet() {
+        let m = ScenarioMatrix {
+            platforms: strs(&["has-gpu", "kserve"]),
+            presets: vec![Preset::Standard],
+            seeds: vec![1, 2],
+            faults: strs(&["no-faults", "chaos-gpu-failures"]),
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        assert_eq!(cells.len(), 8);
+        // fault-major inside each preset: all no-fault cells first.
+        assert!(cells[..4].iter().all(|c| c.fault == NO_FAULTS));
+        assert!(cells[4..].iter().all(|c| c.fault == "chaos-gpu-failures"));
+        assert_eq!(cells[4].platform, "has-gpu");
+        assert_eq!(cells[6].platform, "kserve");
+    }
+
+    #[test]
+    fn fault_preset_parsing() {
+        assert_eq!(
+            parse_faults(&strs(&["no-faults", "chaos-gpu-failures"])).unwrap(),
+            strs(&["no-faults", "chaos-gpu-failures"])
+        );
+        // Case-insensitive, deduplicated.
+        assert_eq!(
+            parse_faults(&strs(&["Chaos-Flaky-Reconfig", "chaos-flaky-reconfig"])).unwrap(),
+            strs(&["chaos-flaky-reconfig"])
+        );
+        let err = parse_faults(&strs(&["chaos-meteor"])).unwrap_err().to_string();
+        assert!(err.contains("no-faults") && err.contains("chaos-gpu-failures"), "{err}");
+        assert!(parse_faults(&[]).is_err());
+    }
+
+    #[test]
+    fn no_fault_cells_export_no_fault_keys_and_chaos_cells_do() {
+        let m = ScenarioMatrix {
+            platforms: strs(&["has-gpu"]),
+            presets: vec![Preset::Standard],
+            seeds: vec![3],
+            seconds: 60,
+            gpus: 6,
+            rps: 40.0,
+            faults: strs(&["no-faults", "chaos-gpu-failures"]),
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        let (calm_report, calm) = m.run_cell(&cells[0]);
+        let (chaos_report, chaos) = m.run_cell(&cells[1]);
+        // No-faults: pre-fault schema to the byte — no fault keys anywhere.
+        assert!(!calm_report.faults_active);
+        assert_eq!((calm.failed, calm.availability, calm.mttr), (None, None, None));
+        for key in ["fault", "failed", "availability", "mttr"] {
+            assert!(calm.to_json().opt(key).is_none(), "unexpected {key} key");
+        }
+        // Chaos: fault keys present, availability a real fraction.
+        assert!(chaos_report.faults_active);
+        assert_eq!(chaos.fault, "chaos-gpu-failures");
+        assert_eq!(
+            chaos.to_json().opt("fault").and_then(|v| v.as_str().ok()),
+            Some("chaos-gpu-failures")
+        );
+        let avail = chaos.availability.expect("chaos cells report availability");
+        assert!((0.0..=1.0).contains(&avail), "availability {avail}");
+        assert!(chaos.to_json().opt("availability").is_some());
+        assert!(chaos.to_json().opt("failed").is_some());
+        // Chaos cells round-trip through JSON losslessly.
+        let back = CellResult::from_json(&chaos.to_json()).unwrap();
+        assert_eq!(back, chaos);
+        assert_eq!(back.to_json().to_string_pretty(), chaos.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn fault_rows_flow_into_summary_table_and_ratios() {
+        let mut chaos_has = mk_cell("has-gpu", Preset::Standard, 1, 0.02, 1.2);
+        chaos_has.fault = "chaos-gpu-failures".into();
+        chaos_has.failed = Some(12);
+        chaos_has.availability = Some(0.95);
+        chaos_has.mttr = Some(2.0);
+        let mut chaos_ks = mk_cell("kserve", Preset::Standard, 1, 0.08, 14.0);
+        chaos_ks.fault = "chaos-gpu-failures".into();
+        chaos_ks.failed = Some(30);
+        chaos_ks.availability = Some(0.95);
+        chaos_ks.mttr = Some(16.0);
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: strs(&["no-faults", "chaos-gpu-failures"]),
+            cells: vec![
+                mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
+                mk_cell("kserve", Preset::Standard, 1, 0.05, 10.0),
+                chaos_has,
+                chaos_ks,
+            ],
+        };
+        // Groups split on the fault axis: four rows, chaos rows carrying
+        // availability/MTTR and calm rows not.
+        let summary = report.summary();
+        assert_eq!(summary.len(), 4);
+        assert_eq!(summary[0].fault, NO_FAULTS);
+        assert_eq!(summary[0].availability, None);
+        assert_eq!(summary[2].fault, "chaos-gpu-failures");
+        assert_eq!(summary[2].availability, Some(0.95));
+        assert_eq!(summary[3].mttr, Some(16.0));
+        // Ratios pair within a fault preset; chaos rows gain mttr_ratio.
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios.len(), 2);
+        assert_eq!(ratios[0].fault, NO_FAULTS);
+        assert_eq!(ratios[0].mttr_ratio, None);
+        assert!((ratios[0].cost_ratio.unwrap() - 10.0).abs() < 1e-9);
+        assert_eq!(ratios[1].fault, "chaos-gpu-failures");
+        assert!((ratios[1].mttr_ratio.unwrap() - 8.0).abs() < 1e-9, "{ratios:?}");
+        // JSON: the key only exists where the ratio does.
+        let j = report.to_json();
+        let jr = j.get("ratios_vs_has_gpu").unwrap().as_arr().unwrap();
+        assert!(jr[0].opt("mttr_ratio").is_none());
+        assert!(jr[1].opt("mttr_ratio").is_some());
+        // Config echoes the fault axis for chaos grids.
+        assert!(j.get("config").unwrap().opt("faults").is_some());
+        // Table grows fault columns exactly when some cell has them.
+        let t = report.table();
+        assert!(t.contains("fault") && t.contains("avail") && t.contains("mttr"));
+        let plain = MatrixReport {
+            faults: vec![NO_FAULTS.to_string()],
+            cells: vec![mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0)],
+            ..report.clone()
+        };
+        assert!(!plain.table().contains("avail"));
+        // And the whole fault-bearing report round-trips.
+        let back = MatrixReport::from_json(&j).unwrap();
+        assert_eq!(back, report);
+        assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+    }
+
+    #[test]
     fn ttft_flows_into_summary_table_and_ratios() {
         let mut has = mk_cell("has-gpu", Preset::ColdStartStorm, 1, 0.01, 1.0);
         has.ttft_p50 = Some(0.01);
@@ -1477,6 +1828,7 @@ mod tests {
             gpus: 4,
             rps: 50.0,
             fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
             cells: vec![
                 mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
                 mk_cell("torpor-like", Preset::Standard, 1, 0.02, 0.8),

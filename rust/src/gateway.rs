@@ -262,13 +262,17 @@ impl Server {
     }
 
     /// Submit a request; returns a receiver for the reply.
-    pub fn submit(&self, function: &str, input: Vec<f32>) -> Receiver<InferReply> {
+    ///
+    /// An unknown function name is a *client* error, not a server bug: it
+    /// comes back as an `Err` listing the deployed menu (the same shape as
+    /// the CLI resolvers) instead of panicking the calling thread.
+    pub fn submit(&self, function: &str, input: Vec<f32>) -> anyhow::Result<Receiver<InferReply>> {
         let (tx, rx) = sync_channel(1);
-        let fq = self
-            .shared
-            .queues
-            .get(function)
-            .unwrap_or_else(|| panic!("unknown function '{function}'"));
+        let Some(fq) = self.shared.queues.get(function) else {
+            let mut menu: Vec<&str> = self.shared.queues.keys().map(String::as_str).collect();
+            menu.sort_unstable();
+            anyhow::bail!("unknown function '{function}'; deployed: {}", menu.join(", "));
+        };
         self.shared.arrivals[function].fetch_add(1, Ordering::AcqRel);
         fq.q.lock().unwrap().push_back(QueuedRequest {
             arrival: Instant::now(),
@@ -276,7 +280,7 @@ impl Server {
             reply: tx,
         });
         fq.cv.notify_one();
-        rx
+        Ok(rx)
     }
 
     /// Spawn the executor thread for a pod.

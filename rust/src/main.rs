@@ -4,8 +4,8 @@
 //! synthesis (`trace-gen`), and the zoo inventory.
 
 use has_gpu::expt::{
-    experiment_functions, parse_fleets, parse_platforms, parse_presets, parse_seeds,
-    FleetRegistry, PlatformRegistry, ScenarioMatrix,
+    experiment_functions, parse_faults, parse_fleets, parse_platforms, parse_presets,
+    parse_seeds, FleetRegistry, PlatformRegistry, ScenarioMatrix,
 };
 use has_gpu::model::zoo::{zoo_graph, zoo_names, ZooModel};
 use has_gpu::perf::PerfModel;
@@ -20,16 +20,18 @@ const USAGE: &str = "has-gpu — Hybrid Auto-scaling Serverless GPU inference (r
 USAGE: has-gpu <COMMAND> [options]
 
 COMMANDS:
-  expt       run a platform × fleet × preset × seed scenario matrix in
-             parallel and export the comparison grid as JSON
+  expt       run a platform × fleet × fault × preset × seed scenario matrix
+             in parallel and export the comparison grid as JSON
              [--platforms all|ablations|csv of names] [--preset all|csv]
-             [--fleets csv of fleet names] [--seeds N|csv] [--seed-base S]
+             [--fleets csv of fleet names] [--faults csv of fault presets]
+             [--seeds N|csv] [--seed-base S]
              [--seconds N] [--gpus N] [--rps R] [--jobs N] [--out PATH]
   simulate   run a single platform-vs-workload cell and print the report
-             [--platform NAME] [--preset NAME] [--fleet NAME]
+             [--platform NAME] [--preset NAME] [--fleet NAME] [--fault NAME]
              [--seconds N] [--gpus N] [--rps R] [--seed S] [--json]
   platforms  list the platform registry (names, groups, billing, predictor)
   fleets     list the fleet registry (GPU-class compositions)
+  faults     list the fault-preset registry (chaos schedules for expt/simulate)
   predict    RaPP latency prediction (requires artifacts)
              [--model NAME] [--batch B] [--sm F] [--quota F]
   trace-gen  synthesise an Azure-style workload trace as JSON to stdout
@@ -53,6 +55,10 @@ fn main() -> anyhow::Result<()> {
         }
         "fleets" => {
             print!("{}", FleetRegistry::default().table());
+            Ok(())
+        }
+        "faults" => {
+            print!("{}", has_gpu::sim::fault_table());
             Ok(())
         }
         "predict" => predict(argv),
@@ -88,6 +94,14 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         .opt_dyn("platforms", "all", registry.cli_help())
         .opt_dyn("fleets", "uniform-v100", fleet_registry.cli_help())
         .opt_dyn(
+            "faults",
+            "no-faults",
+            format!(
+                "comma list of fault presets ({}); see `has-gpu faults`",
+                has_gpu::sim::fault_name_menu()
+            ),
+        )
+        .opt_dyn(
             "preset",
             "standard",
             format!("comma list of workload presets ({}), or 'all'", Preset::name_menu()),
@@ -102,6 +116,7 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         .parse_from_or_exit(argv);
     let platforms = parse_platforms(&args.get_list("platforms"), &registry)?;
     let fleets = parse_fleets(&args.get_list("fleets"), &fleet_registry)?;
+    let faults = parse_faults(&args.get_list("faults"))?;
     let matrix = ScenarioMatrix {
         platforms,
         registry,
@@ -112,13 +127,15 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         rps: args.get_f64("rps"),
         fleets,
         fleet_registry,
+        faults,
     };
     let jobs = args.get_usize("jobs");
     eprintln!(
-        "running {} cells ({} platforms × {} fleets × {} presets × {} seeds) with jobs={}…",
+        "running {} cells ({} platforms × {} fleets × {} faults × {} presets × {} seeds) with jobs={}…",
         matrix.cells().len(),
         matrix.platforms.len(),
         matrix.fleets.len(),
+        matrix.faults.len(),
         matrix.presets.len(),
         matrix.seeds.len(),
         if jobs == 0 { "auto".to_string() } else { jobs.to_string() }
@@ -130,19 +147,31 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
         None => "n/a (has-gpu baseline is 0)".to_string(),
     };
     for r in report.ratios_vs_has_gpu() {
-        // TTFT ratios only exist for lifecycle presets (cold-start-storm).
+        // TTFT ratios only exist for lifecycle presets (cold-start-storm);
+        // MTTR ratios only for fault-injected cells.
         let ttft = match r.ttft_ratio {
             Some(v) => format!(", ttft-p99 {v:.2}x"),
             None => String::new(),
         };
+        let mttr = match r.mttr_ratio {
+            Some(v) => format!(", mttr {v:.2}x"),
+            None => String::new(),
+        };
+        let fault = if r.fault == has_gpu::sim::NO_FAULTS {
+            String::new()
+        } else {
+            format!(" ({})", r.fault)
+        };
         println!(
-            "{} vs has-gpu @ {} [{}]: cost {}, slo-violations {}{}",
+            "{} vs has-gpu @ {} [{}]{}: cost {}, slo-violations {}{}{}",
             r.platform,
             r.preset.name(),
             r.fleet,
+            fault,
             fmt_ratio(r.cost_ratio),
             fmt_ratio(r.violation_ratio),
-            ttft
+            ttft,
+            mttr
         );
     }
     let out = PathBuf::from(args.get("out"));
@@ -172,6 +201,11 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             "standard",
             format!("one workload preset name ({})", Preset::name_menu()),
         )
+        .opt_dyn(
+            "fault",
+            "no-faults",
+            format!("one fault preset name ({})", has_gpu::sim::fault_name_menu()),
+        )
         .opt("seconds", "300", "trace length (virtual seconds)")
         .opt("gpus", "10", "cluster size")
         .opt("rps", "150", "mean request rate per function")
@@ -192,6 +226,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         args.get("preset")
     );
     let fleets = parse_fleets(&[args.get("fleet").to_string()], &fleet_registry)?;
+    let faults = parse_faults(&[args.get("fault").to_string()])?;
     let matrix = ScenarioMatrix {
         platforms,
         registry,
@@ -202,6 +237,7 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
         rps: args.get_f64("rps"),
         fleets,
         fleet_registry,
+        faults,
     };
     let cell = matrix.cells()[0].clone();
     let (report, _cell_result) = matrix.run_cell(&cell);
@@ -219,6 +255,19 @@ fn simulate(argv: Vec<String>) -> anyhow::Result<()> {
             report.horizontal_ups,
             report.horizontal_downs
         );
+        if report.faults_active {
+            let mttr = match report.mttr_mean() {
+                Some(v) => format!("{v:.1}s"),
+                None => "-".to_string(),
+            };
+            println!(
+                "  faults: gpu-failures={} pods-lost={} failed-reqs={} availability={:.4} mttr={mttr}",
+                report.gpu_failures,
+                report.pods_lost,
+                report.total_failed(),
+                report.availability()
+            );
+        }
         for (f, m) in &report.functions {
             let mut s = m.latency_summary();
             if s.is_empty() {

@@ -24,6 +24,10 @@ pub enum Outcome {
     Ok,
     /// Dropped: queue overflowed or no capacity before timeout.
     Dropped,
+    /// Failed: the request was in flight on a pod whose device died (fault
+    /// injection). Recorded with its real time-in-queue up to the failure
+    /// instant — never produced on the fault-free default path.
+    Failed,
 }
 
 /// One served (or dropped) request.
@@ -75,11 +79,22 @@ impl FunctionMetrics {
     }
 
     pub fn dropped(&self) -> usize {
-        self.records.len() - self.served()
+        self.records
+            .iter()
+            .filter(|r| r.outcome == Outcome::Dropped)
+            .count()
     }
 
-    /// Violation rate at an absolute latency bound. Dropped requests always
-    /// count as violations.
+    /// Requests failed by device death (fault runs only).
+    pub fn failed(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.outcome == Outcome::Failed)
+            .count()
+    }
+
+    /// Violation rate at an absolute latency bound. Dropped and failed
+    /// requests always count as violations.
     pub fn violation_rate(&self, slo: f64) -> f64 {
         if self.records.is_empty() {
             return 0.0;
@@ -87,7 +102,7 @@ impl FunctionMetrics {
         let viol = self
             .records
             .iter()
-            .filter(|r| r.outcome == Outcome::Dropped || r.latency > slo)
+            .filter(|r| r.outcome != Outcome::Ok || r.latency > slo)
             .count();
         viol as f64 / self.records.len() as f64
     }
@@ -251,6 +266,25 @@ pub struct RunReport {
     /// bandwidths / keep-alive): gates the TTFT + transition-count JSON
     /// export so default-path exports stay byte-identical.
     pub lifecycle: bool,
+    /// True when the run injected faults: gates the availability / MTTR /
+    /// failed-request JSON export (same key-omission contract as
+    /// `lifecycle`).
+    pub faults_active: bool,
+    /// GPU failure events that fired.
+    pub gpu_failures: usize,
+    /// Total GPU-down seconds summed over devices (intervals still open at
+    /// end of run are truncated there).
+    pub gpu_downtime: f64,
+    /// Pods killed by device death or pod-crash events.
+    pub pods_lost: usize,
+    /// Transient reconfiguration failures drawn (including ones later
+    /// retried to success).
+    pub reconfig_transients: u64,
+    /// Actions abandoned after exhausting their transient-retry budget.
+    pub reconfig_aborts: usize,
+    /// Per-function time-to-restore-capacity samples: seconds from a
+    /// replica's loss to the next replacement replica turning ready.
+    pub mttr_samples: BTreeMap<String, Vec<f64>>,
 }
 
 impl RunReport {
@@ -271,6 +305,35 @@ impl RunReport {
 
     pub fn total_dropped(&self) -> usize {
         self.functions.values().map(|f| f.dropped()).sum()
+    }
+
+    pub fn total_failed(&self) -> usize {
+        self.functions.values().map(|f| f.failed()).sum()
+    }
+
+    /// Fleet availability: 1 − (GPU-down seconds / GPU-fleet seconds).
+    /// Exactly 1.0 when no device ever failed.
+    pub fn availability(&self) -> f64 {
+        let n: usize = self.fleet_gpus.values().sum();
+        if n == 0 || self.duration <= 0.0 {
+            return 1.0;
+        }
+        1.0 - self.gpu_downtime / (n as f64 * self.duration)
+    }
+
+    /// Mean time-to-restore-capacity over every function's samples, if any
+    /// replica was ever lost and replaced.
+    pub fn mttr_mean(&self) -> Option<f64> {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for v in self.mttr_samples.values() {
+            sum += v.iter().sum::<f64>();
+            n += v.len();
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
     }
 
     /// Latency summary merged over every function's served requests — the
@@ -300,8 +363,9 @@ impl RunReport {
     }
 
     /// Request-weighted SLO-violation rate across functions, each request
-    /// judged against its own function's SLO bound. Dropped requests always
-    /// count as violations; functions absent from `slos` are skipped.
+    /// judged against its own function's SLO bound. Dropped and failed
+    /// requests always count as violations; functions absent from `slos`
+    /// are skipped.
     pub fn slo_violation_rate<'a, I>(&self, slos: I) -> f64
     where
         I: IntoIterator<Item = (&'a str, f64)>,
@@ -314,7 +378,7 @@ impl RunReport {
                 viol += m
                     .records
                     .iter()
-                    .filter(|r| r.outcome == Outcome::Dropped || r.latency > slo)
+                    .filter(|r| r.outcome != Outcome::Ok || r.latency > slo)
                     .count();
             }
         }
@@ -333,23 +397,28 @@ impl RunReport {
             .iter()
             .map(|(name, m)| {
                 let mut lat = m.latency_summary();
-                (
-                    name.clone(),
-                    Json::obj(vec![
-                        ("served", Json::Num(m.served() as f64)),
-                        ("dropped", Json::Num(m.dropped() as f64)),
-                        ("p50", Json::Num(if lat.is_empty() { 0.0 } else { lat.p50() })),
-                        ("p90", Json::Num(if lat.is_empty() { 0.0 } else { lat.p90() })),
-                        ("p95", Json::Num(if lat.is_empty() { 0.0 } else { lat.p95() })),
-                        ("p99", Json::Num(if lat.is_empty() { 0.0 } else { lat.p99() })),
-                        ("cost", Json::Num(self.costs.cost_of(name))),
-                        ("gpu_seconds", Json::Num(self.costs.gpu_seconds_of(name))),
-                        (
-                            "cost_per_1k",
-                            Json::Num(self.costs.cost_per_1k(name, m.served())),
-                        ),
-                    ]),
-                )
+                let mut f = vec![
+                    ("served", Json::Num(m.served() as f64)),
+                    ("dropped", Json::Num(m.dropped() as f64)),
+                ];
+                // Fault runs add the failed count right after dropped; the
+                // default path keeps the historical per-function shape.
+                if self.faults_active {
+                    f.push(("failed", Json::Num(m.failed() as f64)));
+                }
+                f.extend(vec![
+                    ("p50", Json::Num(if lat.is_empty() { 0.0 } else { lat.p50() })),
+                    ("p90", Json::Num(if lat.is_empty() { 0.0 } else { lat.p90() })),
+                    ("p95", Json::Num(if lat.is_empty() { 0.0 } else { lat.p95() })),
+                    ("p99", Json::Num(if lat.is_empty() { 0.0 } else { lat.p99() })),
+                    ("cost", Json::Num(self.costs.cost_of(name))),
+                    ("gpu_seconds", Json::Num(self.costs.gpu_seconds_of(name))),
+                    (
+                        "cost_per_1k",
+                        Json::Num(self.costs.cost_per_1k(name, m.served())),
+                    ),
+                ]);
+                (name.clone(), Json::obj(f))
             })
             .collect();
         let mut fields = vec![
@@ -382,6 +451,39 @@ impl RunReport {
             fields.push((
                 "ttft_p99",
                 Json::Num(if t.is_empty() { 0.0 } else { t.p99() }),
+            ));
+        }
+        // Fault runs export availability / failure / MTTR accounting; the
+        // no-fault path omits every key (the standing identity contract).
+        if self.faults_active {
+            fields.push(("availability", Json::Num(self.availability())));
+            fields.push(("gpu_failures", Json::Num(self.gpu_failures as f64)));
+            fields.push(("gpu_downtime", Json::Num(self.gpu_downtime)));
+            fields.push(("pods_lost", Json::Num(self.pods_lost as f64)));
+            fields.push(("failed", Json::Num(self.total_failed() as f64)));
+            fields.push((
+                "reconfig_transients",
+                Json::Num(self.reconfig_transients as f64),
+            ));
+            fields.push(("reconfig_aborts", Json::Num(self.reconfig_aborts as f64)));
+            fields.push((
+                "mttr",
+                Json::Obj(
+                    self.mttr_samples
+                        .iter()
+                        .filter(|(_, v)| !v.is_empty())
+                        .map(|(f, v)| {
+                            (
+                                f.clone(),
+                                Json::Num(v.iter().sum::<f64>() / v.len() as f64),
+                            )
+                        })
+                        .collect(),
+                ),
+            ));
+            fields.push((
+                "mttr_mean",
+                Json::Num(self.mttr_mean().unwrap_or(0.0)),
             ));
         }
         if heterogeneous {
@@ -553,6 +655,42 @@ mod tests {
         let mut s = r.merged_ttft_summary();
         assert_eq!(s.len(), 2);
         assert!(s.percentile(100.0) >= 1.5 - 1e-12);
+    }
+
+    #[test]
+    fn failed_outcome_counts_and_fault_keys_gate_on_faults_active() {
+        let mut r = RunReport::new("has-gpu");
+        r.function("f").record(0.0, 0.01, Outcome::Ok);
+        r.function("f").record(1.0, 2.0, Outcome::Failed);
+        r.function("f").record(2.0, 0.5, Outcome::Dropped);
+        let m = &r.functions["f"];
+        assert_eq!((m.served(), m.dropped(), m.failed()), (1, 1, 1));
+        // Failed always violates, at any SLO.
+        assert!((m.violation_rate(100.0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.slo_violation_rate([("f", 100.0)]) - 2.0 / 3.0).abs() < 1e-12);
+        // Default path: no fault keys, per-function shape unchanged.
+        let j = r.to_json();
+        assert!(j.get("availability").is_err());
+        assert!(j.get("mttr_mean").is_err());
+        assert!(j.get("functions").unwrap().get("f").unwrap().get("failed").is_err());
+        // Fault run: availability reflects downtime, keys appear.
+        r.faults_active = true;
+        r.duration = 100.0;
+        r.fleet_gpus.insert("v100".into(), 4);
+        r.gpu_downtime = 40.0; // 40 of 400 gpu-seconds down
+        r.gpu_failures = 2;
+        r.pods_lost = 3;
+        r.mttr_samples.insert("f".into(), vec![2.0, 4.0]);
+        assert!((r.availability() - 0.9).abs() < 1e-12);
+        assert_eq!(r.mttr_mean(), Some(3.0));
+        let j = r.to_json();
+        assert!((j.get("availability").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(j.get("failed").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("pods_lost").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("mttr_mean").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("mttr").unwrap().get("f").unwrap().as_f64().unwrap(), 3.0);
+        let f = j.get("functions").unwrap().get("f").unwrap();
+        assert_eq!(f.get("failed").unwrap().as_f64().unwrap(), 1.0);
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Deterministic fault injection: the chaos engine behind the robustness
+//! axis of the scenario matrix.
+//!
+//! A [`FaultSpec`] describes *what* can go wrong (per-GPU MTBF/MTTR
+//! failure+repair processes, per-action transient reconfiguration failures,
+//! optional pod-crash events); [`FaultPlan::compile`] turns it into a
+//! concrete, time-sorted event schedule drawn from dedicated RNG streams.
+//!
+//! **Determinism contract.** All schedule draws come from
+//! `Pcg64::new(seed, STREAM_SCHEDULE)` in a fixed order (GPU index-major,
+//! alternating failure-gap / repair-duration, then pod-crash gaps); all
+//! *online* draws (transient reconfiguration coin flips, pod-crash victim
+//! selection) come from `Pcg64::new(seed, STREAM_ONLINE)` and are consumed
+//! only while a fault spec is active. The arrival stream (77) and cold-start
+//! jitter stream (3) are untouched, so a run with [`FaultSpec::default`]
+//! (inactive) schedules **zero** fault events, draws **zero** fault random
+//! numbers, and is byte-identical to a pre-fault build — and an active spec
+//! still yields the same schedule on every run and every `--jobs` value,
+//! because the plan is a pure function of `(spec, seed, n_gpus, horizon)`.
+
+use crate::util::prng::Pcg64;
+
+/// RNG stream for compiling the failure/repair/crash schedule.
+const STREAM_SCHEDULE: u64 = 91;
+/// RNG stream for online draws (transient coin flips, crash victims).
+const STREAM_ONLINE: u64 = 92;
+
+/// What can go wrong during a run. The default is fully inactive: no
+/// schedules, no coin flips, no RNG draws — the byte-identity baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures per GPU (seconds of sim time). `None`
+    /// disables GPU failures entirely.
+    pub gpu_mtbf: Option<f64>,
+    /// Mean time to repair a failed GPU (seconds). Only read when
+    /// `gpu_mtbf` is set.
+    pub gpu_mttr: f64,
+    /// Probability that one `Reconfigurator` action attempt fails
+    /// transiently (retryable). `0.0` disables the coin flip — no RNG draw
+    /// happens at all.
+    pub reconfig_fail_p: f64,
+    /// Retry budget per action after the first attempt.
+    pub reconfig_retries: u32,
+    /// Base backoff (seconds of sim time) added per retry; attempt `k`
+    /// waits `backoff × k`, so an action that succeeds on attempt `k`
+    /// accrues `backoff × k(k−1)/2` of extra readiness delay.
+    pub reconfig_backoff: f64,
+    /// Mean time between individual pod crashes (whole-fleet process);
+    /// `None` disables pod crashes.
+    pub pod_crash_mtbf: Option<f64>,
+    /// Scripted GPU failures `(time, gpu_index)` merged into the schedule —
+    /// for deterministic unit tests and targeted what-if runs.
+    pub scripted_failures: Vec<(f64, usize)>,
+    /// Scripted GPU repairs `(time, gpu_index)`.
+    pub scripted_repairs: Vec<(f64, usize)>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            gpu_mtbf: None,
+            gpu_mttr: 15.0,
+            reconfig_fail_p: 0.0,
+            reconfig_retries: 3,
+            reconfig_backoff: 0.25,
+            pod_crash_mtbf: None,
+            scripted_failures: Vec::new(),
+            scripted_repairs: Vec::new(),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Whether this spec can produce any fault at all. Inactive specs
+    /// compile to an empty plan and consume zero RNG draws.
+    pub fn is_active(&self) -> bool {
+        self.gpu_mtbf.is_some()
+            || self.reconfig_fail_p > 0.0
+            || self.pod_crash_mtbf.is_some()
+            || !self.scripted_failures.is_empty()
+            || !self.scripted_repairs.is_empty()
+    }
+}
+
+/// One scheduled fault event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The GPU at this index dies: resident pods are evicted, their
+    /// accounts closed at the failure instant, in-flight batches fail.
+    GpuFails(usize),
+    /// The GPU at this index comes back and rejoins placement.
+    GpuRepairs(usize),
+    /// One pod (chosen deterministically at event time among residents)
+    /// crashes; its GPU stays up.
+    PodCrash,
+}
+
+/// The compiled, time-sorted fault schedule plus the online RNG for
+/// transient coin flips and crash-victim selection.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    events: Vec<(f64, FaultKind)>,
+    spec: FaultSpec,
+    online: Pcg64,
+    /// Transient reconfiguration failures drawn so far (monotone counter;
+    /// the sim copies it into the report at end of run).
+    transients: u64,
+}
+
+impl FaultPlan {
+    /// Compile `spec` into a concrete schedule over `[0, horizon)`.
+    ///
+    /// Draw order (the determinism contract): for each GPU in index order,
+    /// alternate failure-gap `Exp(1/mtbf)` and repair-duration
+    /// `Exp(1/mttr)` until past the horizon; then pod-crash gaps
+    /// `Exp(1/crash_mtbf)`. Scripted events are merged afterwards and the
+    /// whole schedule is stably sorted by time, so equal-time events keep
+    /// their draw order.
+    pub fn compile(spec: &FaultSpec, seed: u64, n_gpus: usize, horizon: f64) -> Self {
+        let mut events = Vec::new();
+        if spec.is_active() {
+            let mut rng = Pcg64::new(seed, STREAM_SCHEDULE);
+            if let Some(mtbf) = spec.gpu_mtbf {
+                for gpu in 0..n_gpus {
+                    let mut t = 0.0;
+                    loop {
+                        t += rng.exponential(1.0 / mtbf);
+                        if t >= horizon {
+                            break;
+                        }
+                        events.push((t, FaultKind::GpuFails(gpu)));
+                        t += rng.exponential(1.0 / spec.gpu_mttr);
+                        if t >= horizon {
+                            // Stays down to end of run; the sim closes the
+                            // downtime interval at the End event.
+                            break;
+                        }
+                        events.push((t, FaultKind::GpuRepairs(gpu)));
+                    }
+                }
+            }
+            if let Some(crash_mtbf) = spec.pod_crash_mtbf {
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(1.0 / crash_mtbf);
+                    if t >= horizon {
+                        break;
+                    }
+                    events.push((t, FaultKind::PodCrash));
+                }
+            }
+            for &(t, gpu) in &spec.scripted_failures {
+                events.push((t, FaultKind::GpuFails(gpu)));
+            }
+            for &(t, gpu) in &spec.scripted_repairs {
+                events.push((t, FaultKind::GpuRepairs(gpu)));
+            }
+            // Stable: equal-time events keep draw/merge order.
+            events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        FaultPlan {
+            events,
+            spec: spec.clone(),
+            online: Pcg64::new(seed, STREAM_ONLINE),
+            transients: 0,
+        }
+    }
+
+    /// The compiled schedule, time-sorted. Empty for inactive specs.
+    pub fn events(&self) -> &[(f64, FaultKind)] {
+        &self.events
+    }
+
+    /// The spec this plan was compiled from.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Flip the transient-reconfiguration coin. **No RNG is consumed when
+    /// the probability is zero** — the inactive path stays draw-free.
+    pub fn draw_transient(&mut self) -> bool {
+        if self.spec.reconfig_fail_p <= 0.0 {
+            return false;
+        }
+        let fail = self.online.next_f64() < self.spec.reconfig_fail_p;
+        if fail {
+            self.transients += 1;
+        }
+        fail
+    }
+
+    /// Transient failures drawn so far.
+    pub fn transients(&self) -> u64 {
+        self.transients
+    }
+
+    /// Pick a crash victim index among `n` candidates (deterministic given
+    /// the online stream position).
+    pub fn pick_victim(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        self.online.next_below(n as u64) as usize
+    }
+}
+
+/// Canonical name of the inactive fault configuration.
+pub const NO_FAULTS: &str = "no-faults";
+
+struct FaultPresetEntry {
+    name: &'static str,
+    about: &'static str,
+    build: fn() -> FaultSpec,
+}
+
+/// The fault-preset table: the CLI `--faults` axis, `faults` inventory
+/// subcommand, and expt registry all read this one list (same single-source
+/// pattern as the workload `PRESET_TABLE`).
+const FAULT_PRESET_TABLE: &[FaultPresetEntry] = &[
+    FaultPresetEntry {
+        name: NO_FAULTS,
+        about: "no fault injection (default; byte-identical to pre-fault builds)",
+        build: FaultSpec::default,
+    },
+    FaultPresetEntry {
+        name: "chaos-gpu-failures",
+        about: "GPU crash/repair churn: per-GPU MTBF 45 s, MTTR 15 s",
+        build: || FaultSpec {
+            gpu_mtbf: Some(45.0),
+            gpu_mttr: 15.0,
+            ..FaultSpec::default()
+        },
+    },
+    FaultPresetEntry {
+        name: "chaos-flaky-reconfig",
+        about: "30% transient reconfiguration failures, 3 retries, 0.25 s backoff",
+        build: || FaultSpec {
+            reconfig_fail_p: 0.3,
+            reconfig_retries: 3,
+            reconfig_backoff: 0.25,
+            ..FaultSpec::default()
+        },
+    },
+];
+
+/// Resolve a fault-preset name (`no-faults`, `chaos-gpu-failures`,
+/// `chaos-flaky-reconfig`).
+pub fn fault_spec_from_name(name: &str) -> Option<FaultSpec> {
+    FAULT_PRESET_TABLE
+        .iter()
+        .find(|e| e.name.eq_ignore_ascii_case(name))
+        .map(|e| (e.build)())
+}
+
+/// Comma-separated menu of valid fault-preset names (error messages, CLI
+/// help).
+pub fn fault_name_menu() -> String {
+    FAULT_PRESET_TABLE
+        .iter()
+        .map(|e| e.name)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Human-readable inventory table for the `faults` CLI subcommand.
+pub fn fault_table() -> String {
+    let mut out = String::from("fault presets:\n");
+    for e in FAULT_PRESET_TABLE {
+        out.push_str(&format!("  {:<22} {}\n", e.name, e.about));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_inactive_and_compiles_empty() {
+        let spec = FaultSpec::default();
+        assert!(!spec.is_active());
+        let plan = FaultPlan::compile(&spec, 42, 10, 360.0);
+        assert!(plan.events().is_empty());
+    }
+
+    #[test]
+    fn inactive_plan_draws_no_rng_on_transient_checks() {
+        let mut plan = FaultPlan::compile(&FaultSpec::default(), 42, 4, 100.0);
+        // The online stream must stay untouched: a fresh generator on the
+        // same stream produces the same next value after 1000 checks.
+        let mut fresh = Pcg64::new(42, STREAM_ONLINE);
+        for _ in 0..1000 {
+            assert!(!plan.draw_transient());
+        }
+        assert_eq!(plan.online.next_u64(), fresh.next_u64());
+        assert_eq!(plan.transients(), 0);
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let spec = fault_spec_from_name("chaos-gpu-failures").unwrap();
+        let a = FaultPlan::compile(&spec, 7, 6, 120.0);
+        let b = FaultPlan::compile(&spec, 7, 6, 120.0);
+        assert_eq!(a.events(), b.events());
+        assert!(!a.events().is_empty(), "chaos preset must schedule failures");
+        // A different seed gives a different schedule.
+        let c = FaultPlan::compile(&spec, 8, 6, 120.0);
+        assert_ne!(a.events(), c.events());
+    }
+
+    #[test]
+    fn schedule_is_time_sorted_within_horizon_and_alternates_per_gpu() {
+        let spec = FaultSpec {
+            gpu_mtbf: Some(30.0),
+            gpu_mttr: 10.0,
+            ..FaultSpec::default()
+        };
+        let plan = FaultPlan::compile(&spec, 3, 4, 200.0);
+        let evs = plan.events();
+        assert!(evs.windows(2).all(|w| w[0].0 <= w[1].0), "must be time-sorted");
+        assert!(evs.iter().all(|&(t, _)| (0.0..200.0).contains(&t)));
+        // Per GPU, events strictly alternate fail → repair → fail …
+        for gpu in 0..4 {
+            let mine: Vec<FaultKind> = evs
+                .iter()
+                .filter(|(_, k)| {
+                    matches!(k, FaultKind::GpuFails(g) | FaultKind::GpuRepairs(g) if *g == gpu)
+                })
+                .map(|&(_, k)| k)
+                .collect();
+            for (i, k) in mine.iter().enumerate() {
+                let expect = if i % 2 == 0 {
+                    FaultKind::GpuFails(gpu)
+                } else {
+                    FaultKind::GpuRepairs(gpu)
+                };
+                assert_eq!(*k, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_events_merge_into_the_schedule() {
+        let spec = FaultSpec {
+            scripted_failures: vec![(50.0, 0)],
+            scripted_repairs: vec![(70.0, 0)],
+            ..FaultSpec::default()
+        };
+        assert!(spec.is_active());
+        let plan = FaultPlan::compile(&spec, 1, 2, 100.0);
+        assert_eq!(
+            plan.events(),
+            &[(50.0, FaultKind::GpuFails(0)), (70.0, FaultKind::GpuRepairs(0))]
+        );
+    }
+
+    #[test]
+    fn transient_coin_respects_probability_and_counts() {
+        let spec = FaultSpec {
+            reconfig_fail_p: 0.3,
+            ..FaultSpec::default()
+        };
+        let mut plan = FaultPlan::compile(&spec, 9, 2, 60.0);
+        let n = 10_000;
+        let fails = (0..n).filter(|_| plan.draw_transient()).count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate={rate}");
+        assert_eq!(plan.transients(), fails as u64);
+    }
+
+    #[test]
+    fn preset_registry_resolves_and_lists() {
+        assert!(fault_spec_from_name(NO_FAULTS).is_some());
+        assert!(!fault_spec_from_name(NO_FAULTS).unwrap().is_active());
+        assert!(fault_spec_from_name("chaos-gpu-failures").unwrap().is_active());
+        assert!(fault_spec_from_name("chaos-flaky-reconfig").unwrap().is_active());
+        assert!(fault_spec_from_name("nope").is_none());
+        let menu = fault_name_menu();
+        assert!(menu.contains("no-faults") && menu.contains("chaos-gpu-failures"));
+        assert!(fault_table().contains("chaos-flaky-reconfig"));
+    }
+}

@@ -138,6 +138,166 @@ fn ledger_total_matches_analytic_slice_time_integral() {
 }
 
 #[test]
+fn fault_truncation_closes_accounts_at_failure_instants() {
+    // Fault-injection extension of the parity property: random GPU
+    // failures interleave with the scaling actions, and every account of a
+    // pod resident on the dying device closes **at the failure instant** —
+    // the analytic integral simply stops accruing those pods there. If the
+    // ledger billed a single pod-second past a device death, in either
+    // mode, the totals diverge.
+    const N_GPUS: usize = 3;
+    run_prop(
+        "billing-fault-truncation",
+        PropConfig {
+            cases: 96,
+            max_size: 48,
+            ..PropConfig::default()
+        },
+        |rng, size| {
+            let spec = FunctionSpec {
+                name: "mobilenetv2".into(),
+                graph: zoo_graph(ZooModel::MobileNetV2),
+                slo: 0.1,
+                batch: 1,
+                artifact: None,
+            };
+            let perf = PerfModel::default();
+            let mut cluster = ClusterState::new(N_GPUS, perf.dev.mem_cap);
+            cluster.register_function(spec.clone());
+            let mut recon = Reconfigurator::new(&cluster, 7);
+            let mut fine = BillingLedger::new(BillingMode::FineGrained, PRICE);
+            let mut whole = BillingLedger::new(BillingMode::WholeGpu, PRICE);
+
+            // (pod, sm‰, q‰, host gpu) plus the independent accumulators.
+            let mut live: Vec<(PodId, u32, u32, GpuId)> = Vec::new();
+            let mut down = [false; N_GPUS];
+            let mut fine_ref = 0.0f64;
+            let mut whole_ref = 0.0f64;
+            let mut now = 0.0f64;
+
+            for step in 0..size {
+                let dt = rng.next_f64() * 3.0;
+                for &(_, sm, q, _) in &live {
+                    fine_ref += sm_to_f64(sm) * quota_to_f64(q) * dt;
+                    whole_ref += dt;
+                }
+                now += dt;
+
+                match rng.next_below(5) {
+                    // The planner contract: placement only ever targets
+                    // GPUs that are up, so the generator does too.
+                    0 | 1 => {
+                        let up: Vec<usize> =
+                            (0..N_GPUS).filter(|&g| !down[g]).collect();
+                        if up.is_empty() {
+                            continue;
+                        }
+                        let gpu = GpuId(up[rng.next_below(up.len() as u64) as usize]);
+                        let action = ScalingAction::CreatePod {
+                            function: spec.name.clone(),
+                            gpu,
+                            sm: SM_STEP * (1 + rng.next_below(8) as u32),
+                            quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
+                            batch: spec.batch,
+                            new_gpu: false,
+                        };
+                        if let Ok(Applied::PodCreated { pod, .. }) =
+                            recon.apply(&mut cluster, &perf, &action, now)
+                        {
+                            let p = cluster.pod(pod).expect("created");
+                            fine.open(pod, &p.function, p.sm, p.quota, now);
+                            whole.open(pod, &p.function, p.sm, p.quota, now);
+                            live.push((pod, p.sm, p.quota, p.gpu));
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let (pod, _, _, _) =
+                            live[rng.next_below(live.len() as u64) as usize];
+                        let action = ScalingAction::SetQuota {
+                            pod,
+                            quota: QUOTA_STEP * (1 + rng.next_below(10) as u32),
+                        };
+                        if let Ok(Applied::QuotaSet { pod, new, .. }) =
+                            recon.apply(&mut cluster, &perf, &action, now)
+                        {
+                            fine.resize(pod, new, now);
+                            whole.resize(pod, new, now);
+                            let e =
+                                live.iter_mut().find(|(id, _, _, _)| *id == pod).unwrap();
+                            e.2 = new;
+                        }
+                    }
+                    3 if !live.is_empty() => {
+                        let (pod, _, _, _) =
+                            live[rng.next_below(live.len() as u64) as usize];
+                        if let Ok(Applied::PodRemoved { pod }) = recon.apply(
+                            &mut cluster,
+                            &perf,
+                            &ScalingAction::RemovePod { pod },
+                            now,
+                        ) {
+                            fine.close(pod, now);
+                            whole.close(pod, now);
+                            live.retain(|(id, _, _, _)| *id != pod);
+                        }
+                    }
+                    _ => {
+                        // Flip one GPU: repair if down, otherwise fail it
+                        // and truncate every resident account at `now` —
+                        // exactly what run_sim's GpuFailed arm does.
+                        let g = rng.next_below(N_GPUS as u64) as usize;
+                        if down[g] {
+                            down[g] = false;
+                            cluster.set_gpu_down(GpuId(g), false);
+                        } else {
+                            down[g] = true;
+                            cluster.set_gpu_down(GpuId(g), true);
+                            live.retain(|&(pod, _, _, pg)| {
+                                if pg == GpuId(g) {
+                                    fine.close(pod, now);
+                                    whole.close(pod, now);
+                                    let evicted = recon.evict_pod(&mut cluster, pod);
+                                    debug_assert!(evicted.is_some());
+                                    false
+                                } else {
+                                    true
+                                }
+                            });
+                        }
+                    }
+                }
+                prop_assert!(
+                    fine.open_accounts() == live.len()
+                        && whole.open_accounts() == live.len(),
+                    "step {step}: ledgers track {}/{} accounts, {} pods live",
+                    fine.open_accounts(),
+                    whole.open_accounts(),
+                    live.len()
+                );
+            }
+
+            let t_end = now + rng.next_f64() * 2.0;
+            for &(_, sm, q, _) in &live {
+                fine_ref += sm_to_f64(sm) * quota_to_f64(q) * (t_end - now);
+                whole_ref += t_end - now;
+            }
+            let fine_total = fine.into_meter(t_end).total_cost();
+            let whole_total = whole.into_meter(t_end).total_cost();
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs()));
+            prop_assert!(
+                close(fine_total, fine_ref),
+                "fine-grained under faults: ledger {fine_total} vs analytic {fine_ref}"
+            );
+            prop_assert!(
+                close(whole_total, whole_ref),
+                "whole-GPU under faults: ledger {whole_total} vs analytic {whole_ref}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn whole_gpu_mode_bills_full_device_through_resize_boundaries() {
     // Direct pin of the seed bug: a whole-GPU run whose pod is resized
     // mid-run must bill 1×1 for every second, not the fine-grained slice

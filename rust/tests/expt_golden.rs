@@ -29,7 +29,7 @@ use has_gpu::expt::{
 use has_gpu::metrics::BillingMode;
 use has_gpu::perf::PerfModel;
 use has_gpu::rapp::OraclePredictor;
-use has_gpu::sim::{run_sim, SimConfig};
+use has_gpu::sim::{run_sim, SimConfig, NO_FAULTS};
 use has_gpu::util::json;
 use has_gpu::workload::{Preset, TraceGen};
 
@@ -107,6 +107,7 @@ fn frozen_run(presets: &[Preset]) -> MatrixReport {
                     preset,
                     seed,
                     fleet: DEFAULT_FLEET.to_string(),
+                    fault: NO_FAULTS.to_string(),
                 };
                 cells.push(CellResult::from_report(&cell, &fns, &report));
             }
@@ -117,6 +118,7 @@ fn frozen_run(presets: &[Preset]) -> MatrixReport {
         gpus: GPUS,
         rps: RPS,
         fleets: vec![DEFAULT_FLEET.to_string()],
+        faults: vec![NO_FAULTS.to_string()],
         cells,
     }
 }
@@ -395,6 +397,128 @@ fn cold_start_storm_headline_directions() {
         .and_then(|r| r.ttft_ratio)
         .unwrap();
     assert!(tr > 1.0, "torpor/has ttft ratio {tr} must exceed 1");
+}
+
+fn fault_matrix(faults: &[&str]) -> ScenarioMatrix {
+    ScenarioMatrix {
+        faults: faults.iter().map(|s| s.to_string()).collect(),
+        ..registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+    }
+}
+
+#[test]
+fn chaos_extension_perturbs_no_calm_cells() {
+    // The fault-injection contract: adding chaos presets to the grid's
+    // fault axis leaves every no-fault cell — and the summary rows derived
+    // from them — byte-identical. The default FaultSpec schedules zero
+    // events, so the event core's sequence numbers (and therefore every
+    // tie-break) are untouched.
+    let calm = fault_matrix(&[NO_FAULTS]).run(2);
+    let extended =
+        fault_matrix(&[NO_FAULTS, "chaos-gpu-failures", "chaos-flaky-reconfig"]).run(2);
+    assert_eq!(extended.cells.len(), calm.cells.len() * 3);
+    // The calm cells are the byte-identical subset (fault-major cell order
+    // inside each preset keeps them a prefix, but filter to be explicit).
+    let calm_cells: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.fault == NO_FAULTS)
+        .collect();
+    assert_eq!(calm_cells.len(), calm.cells.len());
+    for (a, b) in calm.cells.iter().zip(calm_cells) {
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "calm cell ({}, {}, {}) perturbed by the chaos extension",
+            a.platform,
+            a.preset.name(),
+            a.seed
+        );
+    }
+    // Calm summary rows are identical too.
+    let calm_summary: Vec<_> = extended
+        .summary()
+        .into_iter()
+        .filter(|r| r.fault == NO_FAULTS)
+        .collect();
+    assert_eq!(calm.summary(), calm_summary);
+    // Fault keys exist on exactly the chaos cells.
+    for c in &extended.cells {
+        let j = c.to_json();
+        let chaos = c.fault != NO_FAULTS;
+        assert_eq!(j.opt("fault").is_some(), chaos, "fault key on {}", c.platform);
+        assert_eq!(
+            j.opt("availability").is_some(),
+            chaos,
+            "availability key on ({}, {})",
+            c.platform,
+            c.fault
+        );
+        assert_eq!(j.opt("failed").is_some(), chaos);
+    }
+    // The fault grid round-trips losslessly and is --jobs invariant.
+    let back = MatrixReport::from_json(&extended.to_json()).unwrap();
+    assert_eq!(back, extended);
+    assert_eq!(
+        back.to_json().to_string_pretty(),
+        extended.to_json().to_string_pretty()
+    );
+    let again =
+        fault_matrix(&[NO_FAULTS, "chaos-gpu-failures", "chaos-flaky-reconfig"]).run(1);
+    assert_eq!(
+        json::fingerprint(&extended.to_json()),
+        json::fingerprint(&again.to_json())
+    );
+}
+
+#[test]
+fn chaos_gpu_failures_headline_accounting() {
+    // Under the GPU-failure chaos preset every platform must feel the
+    // failures: fleet availability strictly below 1, per-function MTTR
+    // samples present, failed-request accounting exported — and the whole
+    // grid deterministic across --jobs values.
+    let mk = || ScenarioMatrix {
+        faults: vec!["chaos-gpu-failures".to_string()],
+        seconds: 240,
+        ..registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+    };
+    let report = mk().run(2);
+    assert_eq!(report.cells.len(), 6);
+    for c in &report.cells {
+        assert!(c.served > 0, "{} served nothing under chaos", c.platform);
+        let avail = c.availability.unwrap_or_else(|| {
+            panic!("({}, seed {}) exported no availability", c.platform, c.seed)
+        });
+        assert!(
+            (0.0..1.0).contains(&avail),
+            "({}, seed {}) availability {avail} not in [0,1)",
+            c.platform,
+            c.seed
+        );
+        assert!(c.failed.is_some(), "{} exported no failed count", c.platform);
+    }
+    let summary = report.summary();
+    let row = |p: &str| summary.iter().find(|r| r.platform == p).unwrap();
+    for p in ["has-gpu", "kserve", "fast-gshare"] {
+        let r = row(p);
+        assert_eq!(r.fault, "chaos-gpu-failures");
+        assert!(r.availability.unwrap() < 1.0, "{p} availability");
+        let mttr = r.mttr.unwrap_or_else(|| panic!("{p} has no MTTR samples"));
+        assert!(mttr.is_finite() && mttr > 0.0, "{p} mttr {mttr}");
+    }
+    // The MTTR headline ratio materialises for the chaos rows.
+    let ratios = report.ratios_vs_has_gpu();
+    for p in ["kserve", "fast-gshare"] {
+        let r = ratios.iter().find(|r| r.platform == p).unwrap();
+        assert_eq!(r.fault, "chaos-gpu-failures");
+        assert!(r.mttr_ratio.is_some(), "{p} missing mttr ratio");
+    }
+    // Determinism across worker counts — the CI chaos smoke's twin.
+    let again = mk().run(1);
+    assert_eq!(
+        json::fingerprint(&report.to_json()),
+        json::fingerprint(&again.to_json())
+    );
 }
 
 #[test]

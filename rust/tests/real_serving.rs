@@ -63,11 +63,15 @@ fn start_server(n_gpus: usize) -> Option<Arc<Server>> {
 #[test]
 fn serves_single_request_end_to_end() {
     let Some(server) = start_server(1) else { return };
-    let rx = server.submit("cnn_s", vec![0.5f32; 3 * 32 * 32]);
+    let rx = server.submit("cnn_s", vec![0.5f32; 3 * 32 * 32]).expect("known function");
     let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply");
     assert_eq!(reply.output.len(), 10);
     assert!(reply.output.iter().all(|v| v.is_finite()));
     assert!(reply.latency > Duration::ZERO);
+    // An unknown function is a client error carrying the deployed menu —
+    // never a panic in the gateway.
+    let err = server.submit("no-such-fn", vec![0.0]).unwrap_err().to_string();
+    assert!(err.contains("no-such-fn") && err.contains("cnn_s"), "{err}");
     server.shutdown();
 }
 
@@ -76,7 +80,7 @@ fn serves_concurrent_burst_with_batching() {
     let Some(server) = start_server(2) else { return };
     let n = 64;
     let rxs: Vec<_> = (0..n)
-        .map(|i| server.submit("cnn_s", vec![i as f32 / n as f32; 3 * 32 * 32]))
+        .map(|i| server.submit("cnn_s", vec![i as f32 / n as f32; 3 * 32 * 32]).expect("known"))
         .collect();
     let mut batched = 0;
     for rx in rxs {
@@ -100,7 +104,7 @@ fn sustained_load_triggers_scaling() {
     let mut pending = Vec::new();
     let t0 = std::time::Instant::now();
     while t0.elapsed() < Duration::from_secs(3) {
-        pending.push(server.submit("cnn_s", vec![0.1f32; 3 * 32 * 32]));
+        pending.push(server.submit("cnn_s", vec![0.1f32; 3 * 32 * 32]).expect("known"));
         std::thread::sleep(Duration::from_millis(4));
         // Drain completed replies to bound memory.
         pending.retain(|rx| rx.try_recv().is_err());
@@ -129,7 +133,7 @@ fn token_wait_reflects_quota_pressure() {
     // With the single bootstrap pod at a small quota, a burst must show
     // token-gated waits in at least some replies.
     let rxs: Vec<_> = (0..48)
-        .map(|_| server.submit("cnn_s", vec![0.2f32; 3 * 32 * 32]))
+        .map(|_| server.submit("cnn_s", vec![0.2f32; 3 * 32 * 32]).expect("known"))
         .collect();
     let mut any_wait = Duration::ZERO;
     for rx in rxs {
