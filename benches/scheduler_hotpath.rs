@@ -451,6 +451,58 @@ fn main() {
         );
     }
 
+    // Workflow routing tick: open an origin at the entry stage, route the
+    // detector completion across its hop, join at the classifier, and close
+    // the origin — the full per-request router cost of the 2-stage vision
+    // chain (budget in ci.yml: < 5 µs). The router is recycled every 64k
+    // origins so the bench measures routing, not unbounded origin growth.
+    {
+        use has_gpu::gateway::{StageHop, WorkflowRouter};
+        use has_gpu::workflow::WorkflowRegistry;
+        let reg = WorkflowRegistry::default();
+        let wf = reg.get("pipeline-vision").unwrap().clone();
+        let mut router = WorkflowRouter::new(&wf);
+        let mut hops: Vec<StageHop> = Vec::new();
+        let mut opened = 0u32;
+        let mut tw = 0.0;
+        h.bench("workflow_route_tick", || {
+            if opened == 1 << 16 {
+                router = WorkflowRouter::new(&wf);
+                opened = 0;
+            }
+            tw += 1.0;
+            let o = router.open(tw);
+            opened += 1;
+            let early = router.route_completion(o, 0, tw + 0.01, &mut hops);
+            debug_assert!(early.is_none() && hops.len() == 1);
+            let to = hops[0].to;
+            let e2e = if router.arrive(o, to) {
+                router.route_completion(o, to, tw + 0.02, &mut hops)
+            } else {
+                None
+            };
+            black_box(e2e);
+        });
+    }
+
+    // SLO budget split over a 16-stage chain — the renormalization cost a
+    // co-scaling pass pays per workflow per tick (budget in ci.yml: < 20 µs).
+    {
+        use has_gpu::workflow::{Workflow, IMAGE_TENSOR_BYTES};
+        let names: Vec<String> = (0..16).map(|i| format!("s{i}")).collect();
+        let stages: Vec<(&str, ZooModel, u32)> = names
+            .iter()
+            .map(|n| (n.as_str(), ZooModel::MobileNetV2, 8))
+            .collect();
+        let mut wf16 =
+            Workflow::chain("bench-16", "16-stage split bench", &stages, IMAGE_TENSOR_BYTES);
+        wf16.e2e_slo = 0.5;
+        let lats: Vec<f64> = (0..16).map(|i| 0.002 + i as f64 * 1e-4).collect();
+        h.bench("budget_split_16stage", || {
+            black_box(wf16.stage_budgets(&lats));
+        });
+    }
+
     // First BENCH_hotpath.json trajectory point (schema
     // has-gpu/bench-hotpath/v1); CI uploads it as an artifact. `cargo bench`
     // runs with the package dir as cwd, so HAS_BENCH_OUT lets CI pin an

@@ -102,6 +102,32 @@ pub trait ScalingPolicy: Send {
         predictor: &dyn LatencyPredictor,
         now: f64,
     ) -> Vec<ScalingAction>;
+
+    /// Plan every stage of a workflow in one pass. `stage_fns[s]` is the
+    /// serving function of stage `s` (in stage order) and `observed_rps[s]`
+    /// its measured arrival rate over the last interval.
+    ///
+    /// The default is the **fair single-function-per-stage fallback** the
+    /// baseline platforms inherit: each stage is planned independently on
+    /// its own observed rate, exactly as if it were an unrelated function —
+    /// no pipeline knowledge, no demand propagation. [`HybridAutoscaler`]
+    /// overrides this with the co-scaling pass (bottleneck-stage-first,
+    /// upstream-throughput-propagated demand).
+    fn plan_workflow(
+        &mut self,
+        _wf: &crate::workflow::Workflow,
+        stage_fns: &[&FunctionSpec],
+        observed_rps: &[f64],
+        cluster: &ClusterState,
+        predictor: &dyn LatencyPredictor,
+        now: f64,
+    ) -> Vec<ScalingAction> {
+        let mut out = Vec::new();
+        for (f, &r) in stage_fns.iter().zip(observed_rps) {
+            out.extend(self.plan(f, r, cluster, predictor, now));
+        }
+        out
+    }
 }
 
 /// Which scaling axes Algorithm 1 may exercise. `Both` is the paper's
@@ -686,6 +712,75 @@ impl ScalingPolicy for HybridAutoscaler {
             }
         }
         actions
+    }
+
+    /// HAS-GPU's workflow co-scaling pass.
+    ///
+    /// Two deviations from the independent-stage fallback, together
+    /// enforcing the co-scaling invariant — *a downstream stage's capacity
+    /// never starves an upstream stage's achieved throughput*:
+    ///
+    /// 1. **Topological demand propagation.** Every admitted origin
+    ///    eventually executes each reachable stage once, so a stage's true
+    ///    demand is at least the achieved throughput of any upstream stage
+    ///    feeding it. Demand is propagated forward over the DAG
+    ///    (`demand[s] = max(observed[s], max over incoming demand)`) before
+    ///    planning, so a downstream stage scales *ahead* of the wave instead
+    ///    of reacting one hop-latency late per stage.
+    /// 2. **Bottleneck-stage-first ordering.** Stages plan in ascending
+    ///    capacity/demand margin. The most starved stage claims free quota
+    ///    headroom and devices first — its vertical quota growth happens
+    ///    before any other stage's horizontal add can consume the headroom
+    ///    (and within each stage Algorithm 1 itself grows quota before
+    ///    adding replicas).
+    fn plan_workflow(
+        &mut self,
+        wf: &crate::workflow::Workflow,
+        stage_fns: &[&FunctionSpec],
+        observed_rps: &[f64],
+        cluster: &ClusterState,
+        predictor: &dyn LatencyPredictor,
+        now: f64,
+    ) -> Vec<ScalingAction> {
+        let n = stage_fns.len().min(observed_rps.len());
+        let mut demand: Vec<f64> = observed_rps[..n].to_vec();
+        // Forward edges make ascending stage order topological.
+        for s in 0..n {
+            for e in wf.edges.iter().filter(|e| e.to == s) {
+                if e.from < n && demand[e.from] > demand[s] {
+                    demand[s] = demand[e.from];
+                }
+            }
+        }
+        // Capacity margin per stage over the same pod population plan()
+        // judges (non-draining, device-resident).
+        let mut order: Vec<usize> = (0..n).collect();
+        let margin: Vec<f64> = (0..n)
+            .map(|s| {
+                let f = stage_fns[s];
+                let cap: f64 = cluster
+                    .pods_of(&f.name)
+                    .iter()
+                    .filter(|p| p.phase != PodPhase::Draining && p.state != PodState::HostCached)
+                    .map(|p| {
+                        let factor = cluster.gpu(p.gpu).throughput();
+                        Self::pod_capacity(f, p, factor, predictor)
+                    })
+                    .sum();
+                cap / demand[s].max(1e-9)
+            })
+            .collect();
+        order.sort_by(|&a, &b| {
+            margin[a]
+                .partial_cmp(&margin[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out = Vec::new();
+        for &s in &order {
+            out.extend(self.plan(stage_fns[s], demand[s], cluster, predictor, now));
+        }
+        out
     }
 }
 
@@ -1395,6 +1490,93 @@ mod tests {
                 .iter()
                 .any(|a| matches!(a, ScalingAction::SetQuota { .. })),
             "host-cached pods must not receive quota writes: {actions:?}"
+        );
+    }
+
+    fn workflow_setup() -> (ClusterState, Reconfigurator, PerfModel, crate::workflow::Workflow) {
+        let wf = crate::workflow::WorkflowRegistry::default()
+            .get("pipeline-vision")
+            .unwrap()
+            .clone();
+        let pm = PerfModel::default();
+        let mut c = ClusterState::new(6, 16e9);
+        for f in wf.stage_functions(&pm) {
+            c.register_function(f);
+        }
+        let r = Reconfigurator::new(&c, 1);
+        (c, r, pm, wf)
+    }
+
+    #[test]
+    fn default_plan_workflow_is_the_independent_stage_fallback() {
+        // Baselines inherit the trait default: per-stage planning on the raw
+        // observed rates, identical to planning each stage as an unrelated
+        // function — no demand propagation, no reordering.
+        let (c, _r, pm, wf) = workflow_setup();
+        let fns = wf.stage_functions(&pm);
+        let refs: Vec<&FunctionSpec> = fns.iter().collect();
+        let pred = OraclePredictor::default();
+        let mut base = crate::baselines::KServePolicy::default();
+        let got = base.plan_workflow(&wf, &refs, &[30.0, 0.0], &c, &pred, 0.0);
+        let mut base2 = crate::baselines::KServePolicy::default();
+        let mut want = base2.plan(&fns[0], 30.0, &c, &pred, 0.0);
+        want.extend(base2.plan(&fns[1], 0.0, &c, &pred, 0.0));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn co_scaling_propagates_upstream_demand_downstream() {
+        // The classifier stage observed zero arrivals (the wave has not
+        // reached it yet), but the detector is pulling 40 rps — the hybrid
+        // pass must scale the classifier for the propagated demand anyway.
+        let (c, _r, pm, wf) = workflow_setup();
+        let fns = wf.stage_functions(&pm);
+        let refs: Vec<&FunctionSpec> = fns.iter().collect();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let actions = hs.plan_workflow(&wf, &refs, &[40.0, 0.0], &c, &pred, 0.0);
+        for f in &fns {
+            let made = actions.iter().any(|a| {
+                matches!(a, ScalingAction::CreatePod { function, .. } if function == &f.name)
+            });
+            assert!(
+                made,
+                "stage '{}' must bootstrap under propagated demand: {actions:?}",
+                f.name
+            );
+        }
+        // The independent fallback would have left the zero-observed
+        // classifier unscaled.
+        let mut hs2 = HybridAutoscaler::new(HybridConfig::default());
+        let solo = hs2.plan(&fns[1], 0.0, &c, &pred, 0.0);
+        assert!(solo.is_empty(), "{solo:?}");
+    }
+
+    #[test]
+    fn co_scaling_plans_the_bottleneck_stage_first() {
+        // Detector has a running pod; classifier has none (capacity 0 ⇒ the
+        // workflow bottleneck). The classifier's actions must come first so
+        // its vertical/bootstrap growth claims headroom before any other
+        // stage's horizontal add.
+        let (mut c, mut recon, pm, wf) = workflow_setup();
+        let fns = wf.stage_functions(&pm);
+        let detector = fns[0].name.clone();
+        place_pod(&mut recon, &mut c, &pm, &detector, GpuId(0), 500, 1000, 8, 0.0).unwrap();
+        let refs: Vec<&FunctionSpec> = fns.iter().collect();
+        let pred = OraclePredictor::default();
+        let mut hs = HybridAutoscaler::new(HybridConfig::default());
+        let cap = pred.capacity(PredictQuery::new(&fns[0].graph, 8, 0.5, 1.0));
+        let actions = hs.plan_workflow(&wf, &refs, &[cap * 2.0, 0.0], &c, &pred, 0.0);
+        let first_create = actions
+            .iter()
+            .find_map(|a| match a {
+                ScalingAction::CreatePod { function, .. } => Some(function.clone()),
+                _ => None,
+            })
+            .expect("both stages need pods");
+        assert_eq!(
+            first_create, fns[1].name,
+            "the zero-capacity classifier is the bottleneck and plans first: {actions:?}"
         );
     }
 }

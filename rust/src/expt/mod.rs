@@ -78,6 +78,23 @@ pub fn experiment_functions() -> Vec<FunctionSpec> {
         .collect()
 }
 
+/// The workflow a pipeline preset drives, if any. Preset and registry
+/// names coincide by construction, so the lookup cannot miss for the two
+/// pipeline presets and is `None` for everything else.
+pub fn pipeline_workflow(preset: Preset) -> Option<crate::workflow::Workflow> {
+    let name = match preset {
+        Preset::PipelineVision => "pipeline-vision",
+        Preset::PipelineMixed => "pipeline-mixed",
+        _ => return None,
+    };
+    Some(
+        crate::workflow::WorkflowRegistry::default()
+            .get(name)
+            .expect("pipeline preset workflow is registered")
+            .clone(),
+    )
+}
+
 /// One grid cell: a platform (by registry name) run against one preset
 /// instance at one seed, on one named fleet, under one fault preset.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -218,10 +235,6 @@ impl ScenarioMatrix {
             fleet: fleet.name.clone(),
             fault: cell.fault.to_ascii_lowercase(),
         };
-        let fns = experiment_functions();
-        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
-        let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
-            .generate(&names);
         let mut sim_cfg = SimConfig::for_experiment(self.gpus, cell.seed, spec.billing)
             .with_fleet(fleet.classes_for(self.gpus));
         // The cold-start-storm preset is the pod-lifecycle probe: the fleet
@@ -236,6 +249,26 @@ impl ScenarioMatrix {
         } else {
             PerfModel::default()
         };
+        // The pipeline presets activate the workflow subsystem: the cell's
+        // function set becomes the workflow's stage functions (per-stage
+        // SLOs from the e2e budget split), traffic enters only at the
+        // entry stage, and the sim routes completions stage-to-stage.
+        // Every other preset keeps the stock zoo set and an empty workflow
+        // config, so pre-existing cells keep their exact bytes.
+        let workflow = pipeline_workflow(cell.preset);
+        let fns = match &workflow {
+            Some(wf) => wf.stage_functions(&perf),
+            None => experiment_functions(),
+        };
+        let names: Vec<&str> = match &workflow {
+            Some(wf) => vec![fns[wf.entry()].name.as_str()],
+            None => fns.iter().map(|f| f.name.as_str()).collect(),
+        };
+        let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
+            .generate(&names);
+        if let Some(wf) = &workflow {
+            sim_cfg.workflows = vec![wf.clone()];
+        }
         // The default spec is inert (zero fault events scheduled, no RNG
         // consumed), so `no-faults` cells keep their exact pre-fault bytes.
         sim_cfg.faults = fault_spec;
@@ -478,6 +511,60 @@ impl ClassCellMetrics {
     }
 }
 
+/// Per-workflow slice of one pipeline cell's result: end-to-end latency
+/// percentiles judged against the workflow's e2e SLO, plus what the whole
+/// chain billed. Only populated — and only exported — for workflow-driven
+/// cells, so single-function grids keep their pre-workflow bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkflowCellMetrics {
+    pub name: String,
+    pub e2e_slo: f64,
+    /// Origins whose every stage completed (the last terminal closed them).
+    pub served: usize,
+    /// Origins lost anywhere along the chain (queue overflow, timeout,
+    /// killed pod, end-of-run drain) — each counted exactly once.
+    pub dropped: usize,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    /// Fraction of closed origins whose end-to-end latency missed the e2e
+    /// deadline — a violation is an e2e miss, not any per-stage miss.
+    pub e2e_violation_rate: f64,
+    /// Σ stage-function cost: what the whole chain billed.
+    pub cost: f64,
+    /// Chain $ per 1000 completed workflows (`0.0` when none completed).
+    pub cost_per_1k: f64,
+}
+
+impl WorkflowCellMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("e2e_slo", Json::Num(self.e2e_slo)),
+            ("served", Json::Num(self.served as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("e2e_p50", Json::Num(self.e2e_p50)),
+            ("e2e_p99", Json::Num(self.e2e_p99)),
+            ("e2e_violation_rate", Json::Num(self.e2e_violation_rate)),
+            ("cost", Json::Num(self.cost)),
+            ("cost_per_1k", Json::Num(self.cost_per_1k)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(WorkflowCellMetrics {
+            name: j.get("name")?.as_str()?.to_string(),
+            e2e_slo: j.get("e2e_slo")?.as_f64()?,
+            served: j.get("served")?.as_usize()?,
+            dropped: j.get("dropped")?.as_usize()?,
+            e2e_p50: j.get("e2e_p50")?.as_f64()?,
+            e2e_p99: j.get("e2e_p99")?.as_f64()?,
+            e2e_violation_rate: j.get("e2e_violation_rate")?.as_f64()?,
+            cost: j.get("cost")?.as_f64()?,
+            cost_per_1k: j.get("cost_per_1k")?.as_f64()?,
+        })
+    }
+}
+
 /// Aggregated metrics of one grid cell, keyed by registry platform name.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellResult {
@@ -524,6 +611,9 @@ pub struct CellResult {
     pub functions: Vec<FunctionCellMetrics>,
     /// Per-class columns; empty (and unexported) on reference-uniform cells.
     pub classes: Vec<ClassCellMetrics>,
+    /// Per-workflow e2e columns; empty (and unexported) on non-pipeline
+    /// cells.
+    pub workflows: Vec<WorkflowCellMetrics>,
 }
 
 impl CellResult {
@@ -609,6 +699,41 @@ impl CellResult {
         } else {
             Vec::new()
         };
+        // Per-workflow e2e columns only for workflow-driven runs: the SLO
+        // map is the gate, so a zero-traffic pipeline still gets its row.
+        let empty = crate::metrics::FunctionMetrics::default();
+        let workflows = report
+            .workflow_slos
+            .iter()
+            .map(|(name, &slo)| {
+                let m = report.workflow_e2e.get(name).unwrap_or(&empty);
+                let mut lat = m.latency_summary();
+                let (e2e_p50, e2e_p99) =
+                    if lat.is_empty() { (0.0, 0.0) } else { (lat.p50(), lat.p99()) };
+                let prefix = format!("{name}:");
+                let cost: f64 = fns
+                    .iter()
+                    .filter(|f| f.name.starts_with(&prefix))
+                    .map(|f| report.costs.cost_of(&f.name))
+                    .sum();
+                let wf_served = m.served();
+                WorkflowCellMetrics {
+                    name: name.clone(),
+                    e2e_slo: slo,
+                    served: wf_served,
+                    dropped: m.dropped(),
+                    e2e_p50,
+                    e2e_p99,
+                    e2e_violation_rate: m.violation_rate(slo),
+                    cost,
+                    cost_per_1k: if wf_served == 0 {
+                        0.0
+                    } else {
+                        cost * 1000.0 / wf_served as f64
+                    },
+                }
+            })
+            .collect();
         let (failed, availability, mttr) = if report.faults_active {
             (
                 Some(report.total_failed()),
@@ -646,6 +771,7 @@ impl CellResult {
             horizontal_downs: report.horizontal_downs,
             functions,
             classes,
+            workflows,
         }
     }
 
@@ -705,6 +831,14 @@ impl CellResult {
                 Json::Arr(self.classes.iter().map(|c| c.to_json()).collect()),
             ));
         }
+        // Same key-omission rule again: only pipeline cells carry workflow
+        // rows, so single-function grids keep their pre-workflow bytes.
+        if !self.workflows.is_empty() {
+            fields.push((
+                "workflows",
+                Json::Arr(self.workflows.iter().map(|w| w.to_json()).collect()),
+            ));
+        }
         Json::obj(fields)
     }
 
@@ -743,6 +877,15 @@ impl CellResult {
                 .collect::<anyhow::Result<Vec<_>>>()?,
             None => Vec::new(),
         };
+        // Absent workflows key ⇒ a pre-workflow (or single-function) cell.
+        let workflows = match j.opt("workflows") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(WorkflowCellMetrics::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         Ok(CellResult {
             platform,
             fleet,
@@ -774,6 +917,7 @@ impl CellResult {
                 .map(FunctionCellMetrics::from_json)
                 .collect::<anyhow::Result<Vec<_>>>()?,
             classes,
+            workflows,
         })
     }
 }
@@ -800,6 +944,11 @@ pub struct SummaryRow {
     /// bytes — the keys are omitted from the JSON summary).
     pub ttft_p50: Option<f64>,
     pub ttft_p99: Option<f64>,
+    /// Mean workflow e2e P99 / chain $ per 1k completed workflows over the
+    /// group's pipeline cells; `None` when the group has none
+    /// (pre-workflow rows keep their bytes — the keys are omitted).
+    pub e2e_p99: Option<f64>,
+    pub e2e_cost_per_1k: Option<f64>,
     pub gpu_seconds: f64,
     pub cost_per_1k: f64,
 }
@@ -830,6 +979,10 @@ pub struct HeadlineRatio {
     /// (has-gpu replaces lost replicas next tick; kserve waits out a full
     /// instance cold start). Same key-omission rule as `ttft_ratio`.
     pub mttr_ratio: Option<f64>,
+    /// baseline workflow e2e P99 over HAS-GPU's — the pipeline headline
+    /// (co-scaled stages keep the chain's tail inside the e2e budget).
+    /// Same key-omission rule as `ttft_ratio`.
+    pub e2e_ratio: Option<f64>,
 }
 
 /// Everything one `has-gpu expt` invocation produces: config echo, per-cell
@@ -885,6 +1038,16 @@ impl MatrixReport {
                         Some(vals.iter().sum::<f64>() / vals.len() as f64)
                     }
                 };
+                // Workflow columns average first within a cell (over its
+                // workflows), then across the group's pipeline cells.
+                let wf_mean = |c: &CellResult, f: fn(&WorkflowCellMetrics) -> f64| {
+                    if c.workflows.is_empty() {
+                        None
+                    } else {
+                        let sum: f64 = c.workflows.iter().map(f).sum();
+                        Some(sum / c.workflows.len() as f64)
+                    }
+                };
                 SummaryRow {
                     preset,
                     fleet: fleet.to_string(),
@@ -900,6 +1063,12 @@ impl MatrixReport {
                     mttr: mean_opt(group.iter().filter_map(|c| c.mttr).collect()),
                     ttft_p50: mean_opt(group.iter().filter_map(|c| c.ttft_p50).collect()),
                     ttft_p99: mean_opt(group.iter().filter_map(|c| c.ttft_p99).collect()),
+                    e2e_p99: mean_opt(
+                        group.iter().filter_map(|c| wf_mean(c, |w| w.e2e_p99)).collect(),
+                    ),
+                    e2e_cost_per_1k: mean_opt(
+                        group.iter().filter_map(|c| wf_mean(c, |w| w.cost_per_1k)).collect(),
+                    ),
                     gpu_seconds: group.iter().map(|c| c.gpu_seconds).sum::<f64>() / n,
                     cost_per_1k: group.iter().map(|c| c.cost_per_1k).sum::<f64>() / n,
                 }
@@ -940,6 +1109,7 @@ impl MatrixReport {
                 violation_ratio: ratio(row.slo_violation_rate, has.slo_violation_rate),
                 ttft_ratio: opt_ratio(row.ttft_p99, has.ttft_p99),
                 mttr_ratio: opt_ratio(row.mttr, has.mttr),
+                e2e_ratio: opt_ratio(row.e2e_p99, has.e2e_p99),
             });
         }
         out
@@ -966,8 +1136,10 @@ impl MatrixReport {
         let with_faults = self.has_fault_cells();
         let summary = self.summary();
         // TTFT columns appear only when some row actually carries TTFT
-        // (lifecycle presets) — stock grids keep the familiar shape.
+        // (lifecycle presets) — stock grids keep the familiar shape. The
+        // workflow e2e columns follow the same rule for pipeline presets.
         let with_ttft = summary.iter().any(|r| r.ttft_p99.is_some());
+        let with_wf = summary.iter().any(|r| r.e2e_p99.is_some());
         let fmt_opt = |v: Option<f64>| match v {
             Some(t) => format!("{:.1}", t * 1e3),
             None => "-".to_string(),
@@ -1002,6 +1174,13 @@ impl MatrixReport {
                     row.push(fmt_opt(r.ttft_p50));
                     row.push(fmt_opt(r.ttft_p99));
                 }
+                if with_wf {
+                    row.push(fmt_opt(r.e2e_p99));
+                    row.push(match r.e2e_cost_per_1k {
+                        Some(c) => format!("{c:.4}"),
+                        None => "-".to_string(),
+                    });
+                }
                 row.extend([
                     format!("{:.1}", r.gpu_seconds),
                     format!("{:.4}", r.cost_per_1k),
@@ -1022,6 +1201,9 @@ impl MatrixReport {
         }
         if with_ttft {
             headers.extend(["ttft-p50 (ms)", "ttft-p99 (ms)"]);
+        }
+        if with_wf {
+            headers.extend(["e2e-p99 (ms)", "wf-$/1k"]);
         }
         headers.extend(["gpu-sec", "$/1k"]);
         ascii_table(&headers, &rows)
@@ -1059,6 +1241,12 @@ impl MatrixReport {
                     if let Some(t) = r.ttft_p99 {
                         fields.push(("ttft_p99", Json::Num(t)));
                     }
+                    if let Some(t) = r.e2e_p99 {
+                        fields.push(("e2e_p99", Json::Num(t)));
+                    }
+                    if let Some(c) = r.e2e_cost_per_1k {
+                        fields.push(("e2e_cost_per_1k", Json::Num(c)));
+                    }
                     fields.extend([
                         ("gpu_seconds", Json::Num(r.gpu_seconds)),
                         ("cost_per_1k", Json::Num(r.cost_per_1k)),
@@ -1094,6 +1282,9 @@ impl MatrixReport {
                     }
                     if let Some(m) = r.mttr_ratio {
                         fields.push(("mttr_ratio", Json::Num(m)));
+                    }
+                    if let Some(e) = r.e2e_ratio {
+                        fields.push(("e2e_ratio", Json::Num(e)));
                     }
                     Json::obj(fields)
                 })
@@ -1460,6 +1651,7 @@ mod tests {
             horizontal_downs: 0,
             functions: Vec::new(),
             classes: Vec::new(),
+            workflows: Vec::new(),
         }
     }
 
@@ -1539,6 +1731,7 @@ mod tests {
             horizontal_downs: 0,
             functions: Vec::new(),
             classes: Vec::new(),
+            workflows: Vec::new(),
         };
         let report = MatrixReport {
             seconds: 60,
@@ -1600,6 +1793,7 @@ mod tests {
                     cost_per_1k: 1.25,
                 }],
                 classes: Vec::new(),
+                workflows: Vec::new(),
             }],
         };
         let j = report.to_json();
@@ -1862,6 +2056,117 @@ mod tests {
         };
         assert!(!plain.table().contains("ttft"));
         // And the whole lifecycle-bearing report round-trips.
+        let back = MatrixReport::from_json(&j).unwrap();
+        assert_eq!(back, report);
+        assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+    }
+
+    #[test]
+    fn pipeline_cells_carry_workflow_keys_and_stock_cells_do_not() {
+        let m = ScenarioMatrix {
+            platforms: strs(&["has-gpu"]),
+            presets: vec![Preset::Standard, Preset::PipelineVision],
+            seeds: vec![5],
+            seconds: 120,
+            gpus: 6,
+            rps: 40.0,
+            ..ScenarioMatrix::default()
+        };
+        let cells = m.cells();
+        let (_, std_cell) = m.run_cell(&cells[0]);
+        let (pipe_report, pipe_cell) = m.run_cell(&cells[1]);
+        // Standard: pre-workflow schema to the byte — no workflow keys.
+        assert!(std_cell.workflows.is_empty());
+        assert!(std_cell.to_json().opt("workflows").is_none());
+        // Pipeline: the cell's function set is the workflow's stage set,
+        // and the workflow row carries real e2e numbers.
+        assert_eq!(pipe_cell.workflows.len(), 1);
+        let wf = &pipe_cell.workflows[0];
+        assert_eq!(wf.name, "pipeline-vision");
+        assert!(wf.served > 0, "pipeline served {}", wf.served);
+        assert!(wf.e2e_p99 > 0.0 && wf.e2e_p99.is_finite());
+        assert!(wf.e2e_p50 <= wf.e2e_p99);
+        assert!((0.0..=1.0).contains(&wf.e2e_violation_rate));
+        assert!(wf.cost > 0.0 && wf.cost_per_1k > 0.0);
+        assert_eq!(pipe_cell.functions.len(), 2);
+        assert!(pipe_cell
+            .functions
+            .iter()
+            .all(|f| f.name.starts_with("pipeline-vision:")));
+        // The chain cost is exactly the sum of its stage-function costs.
+        let stage_cost: f64 = pipe_cell.functions.iter().map(|f| f.cost).sum();
+        assert!((wf.cost - stage_cost).abs() < 1e-9);
+        assert_eq!(pipe_report.workflow_slos.len(), 1);
+        assert!(pipe_cell.to_json().opt("workflows").is_some());
+        // Pipeline cells round-trip losslessly through JSON.
+        let back = CellResult::from_json(&pipe_cell.to_json()).unwrap();
+        assert_eq!(back, pipe_cell);
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            pipe_cell.to_json().to_string_pretty()
+        );
+    }
+
+    fn mk_wf(e2e_p99: f64, cost_per_1k: f64) -> WorkflowCellMetrics {
+        WorkflowCellMetrics {
+            name: "pipeline-mixed".into(),
+            e2e_slo: 0.5,
+            served: 100,
+            dropped: 0,
+            e2e_p50: e2e_p99 / 2.0,
+            e2e_p99,
+            e2e_violation_rate: 0.0,
+            cost: cost_per_1k / 10.0,
+            cost_per_1k,
+        }
+    }
+
+    #[test]
+    fn workflow_metrics_flow_into_summary_table_and_ratios() {
+        let mut has = mk_cell("has-gpu", Preset::PipelineMixed, 1, 0.01, 1.0);
+        has.workflows = vec![mk_wf(0.1, 2.0)];
+        let mut ks = mk_cell("kserve", Preset::PipelineMixed, 1, 0.02, 0.8);
+        ks.workflows = vec![mk_wf(0.4, 6.0)];
+        let report = MatrixReport {
+            seconds: 60,
+            gpus: 4,
+            rps: 50.0,
+            fleets: vec![DEFAULT_FLEET.to_string()],
+            faults: vec![NO_FAULTS.to_string()],
+            cells: vec![
+                mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0),
+                mk_cell("kserve", Preset::Standard, 1, 0.02, 0.8),
+                has,
+                ks,
+            ],
+        };
+        let summary = report.summary();
+        assert_eq!(summary.len(), 4);
+        // Standard rows stay workflow-free; pipeline rows carry e2e columns.
+        assert_eq!(summary[0].e2e_p99, None);
+        assert_eq!(summary[2].e2e_p99, Some(0.1));
+        assert_eq!(summary[2].e2e_cost_per_1k, Some(2.0));
+        assert_eq!(summary[3].e2e_p99, Some(0.4));
+        // Ratio rows: standard omits e2e_ratio, the pipeline pair is 4x.
+        let ratios = report.ratios_vs_has_gpu();
+        assert_eq!(ratios.len(), 2);
+        assert_eq!(ratios[0].preset, Preset::Standard);
+        assert_eq!(ratios[0].e2e_ratio, None);
+        assert_eq!(ratios[1].preset, Preset::PipelineMixed);
+        assert!((ratios[1].e2e_ratio.unwrap() - 4.0).abs() < 1e-9);
+        // JSON: the key only exists where the ratio does.
+        let j = report.to_json();
+        let jr = j.get("ratios_vs_has_gpu").unwrap().as_arr().unwrap();
+        assert!(jr[0].opt("e2e_ratio").is_none());
+        assert!(jr[1].opt("e2e_ratio").is_some());
+        // Table grows the e2e columns exactly when some row has them.
+        assert!(report.table().contains("e2e-p99"));
+        let plain = MatrixReport {
+            cells: vec![mk_cell("has-gpu", Preset::Standard, 1, 0.01, 1.0)],
+            ..report.clone()
+        };
+        assert!(!plain.table().contains("e2e"));
+        // And the whole workflow-bearing report round-trips.
         let back = MatrixReport::from_json(&j).unwrap();
         assert_eq!(back, report);
         assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());

@@ -511,6 +511,175 @@ fn requeue(fq: &FunctionQueue, batch: Vec<QueuedRequest>) {
     fq.cv.notify_all();
 }
 
+// ---------------------------------------------------------------------------
+// Workflow stage-to-stage routing
+// ---------------------------------------------------------------------------
+
+/// One scheduled hop along a workflow edge: the completed stage's payload
+/// travels to stage `to`, arriving after `latency` seconds on the wire.
+#[derive(Clone, Copy, Debug)]
+pub struct StageHop {
+    pub to: usize,
+    pub latency: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OriginState {
+    Open,
+    Done,
+    Failed,
+}
+
+/// Per-origin bookkeeping: one entry per workflow request admitted at the
+/// entry stage. Join counts live in the router's flat `counts` arena
+/// (stride = stage count) so opening an origin allocates nothing after the
+/// arena warms up.
+#[derive(Clone, Copy, Debug)]
+struct Origin {
+    arrival: f64,
+    remaining_terminals: u32,
+    state: OriginState,
+}
+
+/// Stage-to-stage router for one [`crate::workflow::Workflow`].
+///
+/// The router is serving-plane-agnostic: the sim's discrete-event loop and
+/// a real gateway both drive it with the same three calls — [`Self::open`]
+/// when a request enters the workflow, [`Self::route_completion`] when a
+/// stage execution finishes (yielding either outgoing hops to schedule or
+/// the finished end-to-end latency), and [`Self::arrive`] when a hop lands
+/// (true = the join is complete, enqueue at that stage *now*).
+///
+/// **Deadline accounting happens exactly once**: every end-to-end figure is
+/// derived from the single origin arrival timestamp (`now − arrival`), so
+/// queue time already measured by a stage's own `FunctionMetrics` is never
+/// re-added on the next hop — `remaining_deadline` shrinks monotonically
+/// through the pipeline and e2e latency equals the sum of per-stage
+/// latencies plus hop latencies by construction (pinned by the 3-stage
+/// chain regression test below).
+#[derive(Clone, Debug)]
+pub struct WorkflowRouter {
+    /// Outgoing hops per stage, hop latencies precomputed from payloads.
+    outgoing: Vec<Vec<StageHop>>,
+    in_deg: Vec<u32>,
+    n_stages: usize,
+    n_terminals: u32,
+    origins: Vec<Origin>,
+    /// Arrived-copy counts, `origin * n_stages + stage`.
+    counts: Vec<u32>,
+}
+
+impl WorkflowRouter {
+    pub fn new(wf: &crate::workflow::Workflow) -> Self {
+        let n = wf.stages.len();
+        let mut outgoing: Vec<Vec<StageHop>> = vec![Vec::new(); n];
+        let mut in_deg = vec![0u32; n];
+        for e in &wf.edges {
+            outgoing[e.from].push(StageHop { to: e.to, latency: e.hop_latency() });
+            in_deg[e.to] += 1;
+        }
+        WorkflowRouter {
+            outgoing,
+            in_deg,
+            n_stages: n,
+            n_terminals: wf.terminal_count() as u32,
+            origins: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    /// Admit one request at the entry stage; returns its origin id.
+    pub fn open(&mut self, arrival: f64) -> u32 {
+        let id = self.origins.len() as u32;
+        self.origins.push(Origin {
+            arrival,
+            remaining_terminals: self.n_terminals,
+            state: OriginState::Open,
+        });
+        self.counts.resize(self.counts.len() + self.n_stages, 0);
+        id
+    }
+
+    /// When the origin entered the workflow.
+    pub fn arrival_of(&self, origin: u32) -> f64 {
+        self.origins[origin as usize].arrival
+    }
+
+    /// Deadline budget left at `now` against the workflow e2e SLO — always
+    /// `slo − (now − arrival)`, never re-derived per stage, so queue time is
+    /// charged exactly once.
+    pub fn remaining_deadline(&self, origin: u32, now: f64, e2e_slo: f64) -> f64 {
+        e2e_slo - (now - self.arrival_of(origin))
+    }
+
+    /// Outgoing hops of a stage (empty for terminal stages).
+    pub fn outgoing(&self, stage: usize) -> &[StageHop] {
+        &self.outgoing[stage]
+    }
+
+    /// A stage execution for `origin` finished OK at `now`. Terminal stage:
+    /// returns `Some(e2e latency)` once the last terminal completes (and
+    /// only for still-open origins — a failed origin finishes nothing).
+    /// Non-terminal: fills `hops` with the outgoing edges to schedule at
+    /// `now + hop.latency` each.
+    pub fn route_completion(
+        &mut self,
+        origin: u32,
+        stage: usize,
+        now: f64,
+        hops: &mut Vec<StageHop>,
+    ) -> Option<f64> {
+        hops.clear();
+        let o = &mut self.origins[origin as usize];
+        if o.state != OriginState::Open {
+            return None;
+        }
+        if self.outgoing[stage].is_empty() {
+            o.remaining_terminals -= 1;
+            if o.remaining_terminals == 0 {
+                o.state = OriginState::Done;
+                return Some(now - o.arrival);
+            }
+        } else {
+            hops.extend_from_slice(&self.outgoing[stage]);
+        }
+        None
+    }
+
+    /// A hop for `origin` landed at `stage`. Returns true when every
+    /// incoming copy has arrived (the join is complete) and the origin is
+    /// still open — the caller enqueues one request at the stage *now*.
+    pub fn arrive(&mut self, origin: u32, stage: usize) -> bool {
+        if self.origins[origin as usize].state != OriginState::Open {
+            return false;
+        }
+        let slot = origin as usize * self.n_stages + stage;
+        self.counts[slot] += 1;
+        self.counts[slot] == self.in_deg[stage]
+    }
+
+    /// Mark the origin failed (a stage copy was dropped or lost). Returns
+    /// the elapsed time since entry for the *first* failure only, so the
+    /// caller records exactly one e2e outcome per origin.
+    pub fn fail(&mut self, origin: u32, now: f64) -> Option<f64> {
+        let o = &mut self.origins[origin as usize];
+        if o.state != OriginState::Open {
+            return None;
+        }
+        o.state = OriginState::Failed;
+        Some(now - o.arrival)
+    }
+
+    /// Origins still open (id, arrival) — the End-of-run finalization list.
+    pub fn open_origins(&self) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.origins
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.state == OriginState::Open)
+            .map(|(i, o)| (i as u32, o.arrival))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Real-mode serving is integration-tested in `rust/tests/` against the
@@ -537,5 +706,110 @@ mod tests {
         // keep rx alive is unnecessary for this ordering test
         requeue(&fq, batch);
         assert_eq!(fq.q.lock().unwrap().len(), 3);
+    }
+
+    use crate::model::zoo::ZooModel;
+    use crate::workflow::{Workflow, WorkflowEdge, WorkflowStage};
+
+    fn chain3() -> Workflow {
+        let mut w = Workflow::chain(
+            "wf",
+            "test chain",
+            &[
+                ("a", ZooModel::MobileNetV2, 4),
+                ("b", ZooModel::ResNet50, 4),
+                ("c", ZooModel::BertTiny, 4),
+            ],
+            1e6,
+        );
+        w.e2e_slo = 1.0;
+        w
+    }
+
+    /// Satellite regression: through a 3-stage chain the end-to-end latency
+    /// equals Σ per-stage latencies + Σ hop latencies *exactly* — the
+    /// remaining deadline is carried through hops exactly once and no queue
+    /// interval is ever double-counted.
+    #[test]
+    fn chain_e2e_is_exact_sum_of_stage_and_hop_latencies() {
+        let w = chain3();
+        let mut r = WorkflowRouter::new(&w);
+        let stage_lat = [0.030, 0.050, 0.020]; // queue + service per stage
+        let hop: Vec<f64> = w.edges.iter().map(|e| e.hop_latency()).collect();
+        let t0 = 5.0;
+        let o = r.open(t0);
+        let mut now = t0;
+        let mut hops = Vec::new();
+        for (s, &lat) in stage_lat.iter().enumerate() {
+            now += lat; // stage s completes
+            let done = r.route_completion(o, s, now, &mut hops);
+            if s < 2 {
+                assert_eq!(done, None);
+                assert_eq!(hops.len(), 1);
+                assert_eq!(hops[0].to, s + 1);
+                now += hops[0].latency; // hop lands
+                assert!(r.arrive(o, s + 1), "chain joins are singletons");
+            } else {
+                let e2e = done.expect("terminal stage finishes the origin");
+                let want: f64 = stage_lat.iter().sum::<f64>() + hop.iter().sum::<f64>();
+                assert!((e2e - want).abs() < 1e-12, "e2e {e2e} vs Σ {want}");
+            }
+        }
+        // The deadline shrank monotonically and exactly once per interval.
+        assert!((r.remaining_deadline(o, now, w.e2e_slo) - (w.e2e_slo - (now - t0))).abs() < 1e-12);
+        // Terminal completion is exactly-once: replays are inert.
+        assert_eq!(r.route_completion(o, 2, now + 1.0, &mut hops), None);
+        assert_eq!(r.fail(o, now + 1.0), None, "done origins cannot fail");
+        assert_eq!(r.open_origins().count(), 0);
+    }
+
+    #[test]
+    fn diamond_join_fires_on_second_arrival_and_fails_once() {
+        let w = Workflow {
+            name: "d".into(),
+            about: "diamond".into(),
+            stages: ["s", "l", "r", "m"]
+                .iter()
+                .map(|n| WorkflowStage {
+                    name: (*n).into(),
+                    model: ZooModel::MobileNetV2,
+                    batch: 4,
+                })
+                .collect(),
+            edges: vec![
+                WorkflowEdge { from: 0, to: 1, payload_bytes: 1e6 },
+                WorkflowEdge { from: 0, to: 2, payload_bytes: 1e6 },
+                WorkflowEdge { from: 1, to: 3, payload_bytes: 1e4 },
+                WorkflowEdge { from: 2, to: 3, payload_bytes: 1e4 },
+            ],
+            e2e_slo: 1.0,
+        };
+        w.validate().unwrap();
+        let mut r = WorkflowRouter::new(&w);
+        let mut hops = Vec::new();
+        let o = r.open(0.0);
+        assert_eq!(r.route_completion(o, 0, 0.1, &mut hops), None);
+        assert_eq!(hops.len(), 2, "split fans out to both branches");
+        assert!(r.arrive(o, 1) && r.arrive(o, 2));
+        assert_eq!(r.route_completion(o, 1, 0.2, &mut hops), None);
+        assert!(!r.arrive(o, 3), "first merge copy must wait for the join");
+        assert_eq!(r.route_completion(o, 2, 0.3, &mut hops), None);
+        assert!(r.arrive(o, 3), "second copy completes the join");
+        let e2e = r.route_completion(o, 3, 0.4, &mut hops);
+        assert_eq!(e2e, Some(0.4));
+
+        // Failure path: one branch drop fails the origin exactly once and
+        // the surviving branch's copies are inert afterwards.
+        let o2 = r.open(1.0);
+        r.route_completion(o2, 0, 1.1, &mut hops);
+        assert_eq!(r.fail(o2, 1.2), Some(1.2 - 1.0));
+        assert_eq!(r.fail(o2, 1.3), None, "second failure is suppressed");
+        assert!(!r.arrive(o2, 2), "failed origins route nothing");
+        assert_eq!(r.route_completion(o2, 2, 1.4, &mut hops), None);
+        assert_eq!(r.open_origins().count(), 0);
+
+        // End finalization sees only still-open origins.
+        let o3 = r.open(2.0);
+        assert_eq!(r.open_origins().collect::<Vec<_>>(), vec![(o3, 2.0)]);
     }
 }

@@ -25,7 +25,9 @@
 //!   seed grids sharded over a thread pool, aggregated into paper-style
 //!   comparison tables and exported as `BENCH_sim.json`;
 //! * [`perf`] — the calibrated roofline performance model (ground truth);
-//! * [`metrics`] — SLO-violation curves, tail latency, and cost accounting.
+//! * [`metrics`] — SLO-violation curves, tail latency, and cost accounting;
+//! * [`workflow`] — DAG pipelines of zoo models: end-to-end SLO budget
+//!   splitting over stages and co-scaled stage planning.
 //!
 //! See `DESIGN.md` for the module inventory and experiment index and
 //! `EXPERIMENTS.md` for measured-vs-paper results.
@@ -44,6 +46,7 @@ pub mod sim;
 pub mod simclock;
 pub mod util;
 pub mod vgpu;
+pub mod workflow;
 pub mod workload;
 
 

@@ -32,6 +32,7 @@ COMMANDS:
   platforms  list the platform registry (names, groups, billing, predictor)
   fleets     list the fleet registry (GPU-class compositions)
   faults     list the fault-preset registry (chaos schedules for expt/simulate)
+  workflows  list the workflow registry (DAG stages, e2e SLOs, edge payloads)
   predict    RaPP latency prediction (requires artifacts)
              [--model NAME] [--batch B] [--sm F] [--quota F]
   trace-gen  synthesise an Azure-style workload trace as JSON to stdout
@@ -59,6 +60,10 @@ fn main() -> anyhow::Result<()> {
         }
         "faults" => {
             print!("{}", has_gpu::sim::fault_table());
+            Ok(())
+        }
+        "workflows" => {
+            print!("{}", has_gpu::workflow::WorkflowRegistry::default().table());
             Ok(())
         }
         "predict" => predict(argv),
@@ -148,7 +153,8 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
     };
     for r in report.ratios_vs_has_gpu() {
         // TTFT ratios only exist for lifecycle presets (cold-start-storm);
-        // MTTR ratios only for fault-injected cells.
+        // MTTR ratios only for fault-injected cells; e2e ratios only for
+        // pipeline presets.
         let ttft = match r.ttft_ratio {
             Some(v) => format!(", ttft-p99 {v:.2}x"),
             None => String::new(),
@@ -157,13 +163,17 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
             Some(v) => format!(", mttr {v:.2}x"),
             None => String::new(),
         };
+        let e2e = match r.e2e_ratio {
+            Some(v) => format!(", e2e-p99 {v:.2}x"),
+            None => String::new(),
+        };
         let fault = if r.fault == has_gpu::sim::NO_FAULTS {
             String::new()
         } else {
             format!(" ({})", r.fault)
         };
         println!(
-            "{} vs has-gpu @ {} [{}]{}: cost {}, slo-violations {}{}{}",
+            "{} vs has-gpu @ {} [{}]{}: cost {}, slo-violations {}{}{}{}",
             r.platform,
             r.preset.name(),
             r.fleet,
@@ -171,7 +181,8 @@ fn expt(argv: Vec<String>) -> anyhow::Result<()> {
             fmt_ratio(r.cost_ratio),
             fmt_ratio(r.violation_ratio),
             ttft,
-            mttr
+            mttr,
+            e2e
         );
     }
     let out = PathBuf::from(args.get("out"));

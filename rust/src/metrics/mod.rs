@@ -285,6 +285,15 @@ pub struct RunReport {
     /// Per-function time-to-restore-capacity samples: seconds from a
     /// replica's loss to the next replacement replica turning ready.
     pub mttr_samples: BTreeMap<String, Vec<f64>>,
+    /// Per-workflow end-to-end request log: one record per pipeline
+    /// *origin* (entry-stage arrival), latency = entry arrival → last
+    /// terminal completion, hop latencies included and every interval
+    /// charged exactly once. Empty on the default (no-workflow) path.
+    pub workflow_e2e: BTreeMap<String, FunctionMetrics>,
+    /// Per-workflow end-to-end SLO. Non-empty exactly when the run was
+    /// configured with workflows — gates the `workflows` JSON export the
+    /// same way `lifecycle` / `faults_active` gate theirs.
+    pub workflow_slos: BTreeMap<String, f64>,
 }
 
 impl RunReport {
@@ -297,6 +306,11 @@ impl RunReport {
 
     pub fn function(&mut self, name: &str) -> &mut FunctionMetrics {
         self.functions.entry(name.to_string()).or_default()
+    }
+
+    /// End-to-end metrics of one workflow (see [`RunReport::workflow_e2e`]).
+    pub fn workflow(&mut self, name: &str) -> &mut FunctionMetrics {
+        self.workflow_e2e.entry(name.to_string()).or_default()
     }
 
     pub fn total_served(&self) -> usize {
@@ -484,6 +498,40 @@ impl RunReport {
             fields.push((
                 "mttr_mean",
                 Json::Num(self.mttr_mean().unwrap_or(0.0)),
+            ));
+        }
+        // Workflow runs export per-pipeline end-to-end percentiles and the
+        // e2e violation rate; runs without workflows omit the key entirely
+        // (the standing byte-identity contract).
+        if !self.workflow_slos.is_empty() {
+            let empty = FunctionMetrics::default();
+            fields.push((
+                "workflows",
+                Json::Obj(
+                    self.workflow_slos
+                        .iter()
+                        .map(|(name, &slo)| {
+                            let m = self.workflow_e2e.get(name).unwrap_or(&empty);
+                            let mut lat = m.latency_summary();
+                            let (p50, p99) = if lat.is_empty() {
+                                (0.0, 0.0)
+                            } else {
+                                (lat.p50(), lat.p99())
+                            };
+                            (
+                                name.clone(),
+                                Json::obj(vec![
+                                    ("e2e_slo", Json::Num(slo)),
+                                    ("served", Json::Num(m.served() as f64)),
+                                    ("dropped", Json::Num(m.dropped() as f64)),
+                                    ("e2e_p50", Json::Num(p50)),
+                                    ("e2e_p99", Json::Num(p99)),
+                                    ("e2e_violation_rate", Json::Num(m.violation_rate(slo))),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
             ));
         }
         if heterogeneous {
@@ -691,6 +739,34 @@ mod tests {
         assert_eq!(j.get("mttr").unwrap().get("f").unwrap().as_f64().unwrap(), 3.0);
         let f = j.get("functions").unwrap().get("f").unwrap();
         assert_eq!(f.get("failed").unwrap().as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn workflow_keys_exported_only_for_workflow_runs() {
+        let mut r = RunReport::new("has-gpu");
+        r.function("wf:a").record(0.0, 0.03, Outcome::Ok);
+        // Default path: no `workflows` key even with stage-like functions.
+        assert!(r.to_json().get("workflows").is_err());
+        // Workflow run: the gate is the SLO map, so a zero-traffic pipeline
+        // still exports (with zeroed percentiles).
+        r.workflow_slos.insert("wf".into(), 0.5);
+        let j = r.to_json();
+        let w = j.get("workflows").unwrap().get("wf").unwrap();
+        assert_eq!(w.get("served").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(w.get("e2e_p99").unwrap().as_f64().unwrap(), 0.0);
+        // With traffic: percentiles and the e2e violation rate (one of the
+        // three records is over the 0.5 s budget, one is a drop).
+        r.workflow("wf").record(0.0, 0.2, Outcome::Ok);
+        r.workflow("wf").record(1.0, 0.9, Outcome::Ok);
+        r.workflow("wf").record(2.0, 0.1, Outcome::Dropped);
+        let j = r.to_json();
+        let w = j.get("workflows").unwrap().get("wf").unwrap();
+        assert_eq!(w.get("served").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(w.get("dropped").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(w.get("e2e_slo").unwrap().as_f64().unwrap(), 0.5);
+        let viol = w.get("e2e_violation_rate").unwrap().as_f64().unwrap();
+        assert!((viol - 2.0 / 3.0).abs() < 1e-12);
+        assert!(w.get("e2e_p99").unwrap().as_f64().unwrap() >= 0.9 - 1e-12);
     }
 
     #[test]

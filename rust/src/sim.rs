@@ -70,6 +70,11 @@ pub struct SimConfig {
     /// zero fault events are scheduled, zero fault RNG draws happen, and
     /// the run is byte-identical to a pre-fault build.
     pub faults: FaultSpec,
+    /// Workflows active in this run (see [`crate::workflow`]). Every stage
+    /// function (named `workflow:stage`) must appear in the run's function
+    /// list. Empty (the default) builds no routers, schedules no hop
+    /// events, and keeps the run byte-identical to a pre-workflow build.
+    pub workflows: Vec<crate::workflow::Workflow>,
 }
 
 impl Default for SimConfig {
@@ -87,6 +92,7 @@ impl Default for SimConfig {
             warm_start: true,
             lifecycle: false,
             faults: FaultSpec::default(),
+            workflows: Vec::new(),
         }
     }
 }
@@ -112,9 +118,17 @@ impl SimConfig {
     }
 }
 
+/// Sentinel workflow tag: the request is a plain single-function request.
+const NOT_WORKFLOW: u32 = u32::MAX;
+
 #[derive(Clone, Copy, Debug)]
 struct Request {
     arrival: f64,
+    /// Workflow index this request belongs to, or [`NOT_WORKFLOW`] for
+    /// plain requests (the default path tags every request that way).
+    wf: u32,
+    /// Pipeline origin id in the workflow's router (0 for plain requests).
+    origin: u32,
 }
 
 #[derive(Clone, Debug)]
@@ -137,6 +151,9 @@ enum Ev {
     GpuRepaired { gpu: usize },
     /// One resident pod (picked deterministically at event time) crashes.
     PodCrash,
+    /// A workflow payload copy lands at stage `to` after its hop latency
+    /// (never scheduled when no workflows are configured).
+    StageHop { wf: usize, origin: u32, to: usize },
 }
 
 /// Per-function streaming arrival cursor. The timestamps themselves are
@@ -172,6 +189,86 @@ impl ArrivalCursor {
     }
 }
 
+/// Per-run workflow routing state. With no workflows configured this is a
+/// handful of empty vectors: nothing is routed, scheduled, or recorded, and
+/// the event sequence is byte-identical to a pre-workflow build.
+struct WfState {
+    defs: Vec<crate::workflow::Workflow>,
+    routers: Vec<crate::gateway::WorkflowRouter>,
+    /// f_idx → (workflow index, stage index) for stage functions; `None`
+    /// for plain single functions.
+    of_fn: Vec<Option<(usize, usize)>>,
+    /// Per workflow, per stage: the index in `functions` serving it.
+    stage_fn: Vec<Vec<usize>>,
+}
+
+impl WfState {
+    fn build(workflows: &[crate::workflow::Workflow], functions: &[FunctionSpec]) -> Self {
+        let mut of_fn = vec![None; functions.len()];
+        let mut stage_fn = Vec::with_capacity(workflows.len());
+        for (w_idx, w) in workflows.iter().enumerate() {
+            let mut fidx = Vec::with_capacity(w.stages.len());
+            for s in 0..w.stages.len() {
+                let name = w.stage_function_name(s);
+                let i = functions
+                    .iter()
+                    .position(|f| f.name == name)
+                    .unwrap_or_else(|| panic!("workflow stage function '{name}' not registered"));
+                of_fn[i] = Some((w_idx, s));
+                fidx.push(i);
+            }
+            stage_fn.push(fidx);
+        }
+        WfState {
+            defs: workflows.to_vec(),
+            routers: workflows.iter().map(crate::gateway::WorkflowRouter::new).collect(),
+            of_fn,
+            stage_fn,
+        }
+    }
+
+    /// Close the origin behind a dropped/killed stage request (first
+    /// failure wins; later stage copies of an already-failed origin no-op)
+    /// and record the end-to-end outcome. Plain requests return untouched.
+    fn fail_request(&mut self, r: &Request, now: f64, report: &mut RunReport, outcome: Outcome) {
+        if r.wf == NOT_WORKFLOW {
+            return;
+        }
+        let w = r.wf as usize;
+        if let Some(e2e) = self.routers[w].fail(r.origin, now) {
+            report.workflow(&self.defs[w].name).record(now - e2e, e2e, outcome);
+        }
+    }
+}
+
+/// Route a completed batch of workflow-stage requests onward: schedule a
+/// hop event per outgoing edge, and record the end-to-end latency when the
+/// last terminal stage of an origin finishes. Plain batches return at once.
+fn route_batch(
+    wfs: &mut WfState,
+    f_idx: usize,
+    now: f64,
+    batch: &[Request],
+    report: &mut RunReport,
+    q: &mut EventQueue<Ev>,
+    hops: &mut Vec<crate::gateway::StageHop>,
+) {
+    let Some((w, stage)) = wfs.of_fn[f_idx] else {
+        return;
+    };
+    for r in batch {
+        if let Some(e2e) = wfs.routers[w].route_completion(r.origin, stage, now, hops) {
+            report.workflow(&wfs.defs[w].name).record(now - e2e, e2e, Outcome::Ok);
+        }
+        for h in hops.iter() {
+            q.push_at(
+                now + h.latency,
+                Ev::StageHop { wf: w, origin: r.origin, to: h.to },
+            );
+        }
+    }
+}
+
 /// Run one policy × trace experiment end-to-end; returns the report.
 pub fn run_sim(
     policy: &mut dyn ScalingPolicy,
@@ -198,6 +295,12 @@ pub fn run_sim(
             .fleet_gpus
             .entry(cluster.gpu(crate::cluster::GpuId(i)).class().name.clone())
             .or_insert(0) += 1;
+    }
+    // Workflow routing state (empty vectors on the default path) + the
+    // per-workflow e2e SLOs the report judges violations against.
+    let mut wfs = WfState::build(&cfg.workflows, functions);
+    for w in &wfs.defs {
+        report.workflow_slos.insert(w.name.clone(), w.e2e_slo);
     }
     // One accounting engine for the whole run: every pod-second is billed
     // exactly once, at the slice held during that second, under the run's
@@ -303,6 +406,8 @@ pub fn run_sim(
     // dispatch reuses it, so the steady state moves batches without
     // allocating per service completion.
     let mut batch_pool: Vec<Vec<Request>> = Vec::new();
+    // Scratch buffer for workflow hop routing (stays empty without them).
+    let mut hops: Vec<crate::gateway::StageHop> = Vec::new();
     // PodReady events are scheduled lazily at creation time.
 
     while let Some((now, ev)) = q.pop() {
@@ -317,6 +422,16 @@ pub fn run_sim(
                     q.push_at(tn, Ev::Arrival { f_idx });
                 }
                 arrivals_this_tick[f_idx] += 1;
+                // A trace arrival at a workflow's entry stage opens a
+                // pipeline origin: the e2e clock starts here and is charged
+                // exactly once, however many hops follow.
+                let (wf_tag, origin) = match wfs.of_fn[f_idx] {
+                    Some((w, s)) if s == wfs.defs[w].entry() => {
+                        (w as u32, wfs.routers[w].open(arrival))
+                    }
+                    _ => (NOT_WORKFLOW, 0),
+                };
+                let req = Request { arrival, wf: wf_tag, origin };
                 if queues[f_idx].len() >= cfg.max_queue {
                     // Overflow drop at arrival: time-in-queue is zero, but
                     // record it through the same now-arrival formula as every
@@ -324,11 +439,12 @@ pub fn run_sim(
                     report
                         .function(&functions[f_idx].name)
                         .record(arrival, now - arrival, Outcome::Dropped);
+                    wfs.fail_request(&req, now, &mut report, Outcome::Dropped);
                 } else {
-                    queues[f_idx].push_back(Request { arrival });
+                    queues[f_idx].push_back(req);
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool,
+                        cfg, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
@@ -353,7 +469,7 @@ pub fn run_sim(
                     }
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool,
+                        cfg, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
@@ -368,6 +484,7 @@ pub fn run_sim(
                         report
                             .function(&functions[f_idx].name)
                             .record(r.arrival, kill_t - r.arrival, Outcome::Failed);
+                        wfs.fail_request(r, kill_t, &mut report, Outcome::Failed);
                     }
                     batch.clear();
                     batch_pool.push(batch);
@@ -378,6 +495,7 @@ pub fn run_sim(
                         .function(&functions[f_idx].name)
                         .record(r.arrival, now - r.arrival, Outcome::Ok);
                 }
+                route_batch(&mut wfs, f_idx, now, &batch, &mut report, &mut q, &mut hops);
                 batch.clear();
                 batch_pool.push(batch);
                 if pending_remove.remove(&pod) {
@@ -397,48 +515,83 @@ pub fn run_sim(
                 } else {
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool,
+                        cfg, &mut report, &mut batch_pool, &mut wfs,
+                    );
+                }
+            }
+            Ev::StageHop { wf, origin, to } => {
+                // A payload copy lands; the stage joins (and enqueues) once
+                // every inbound edge has arrived. Failed origins route
+                // nothing — `arrive` refuses them.
+                if !wfs.routers[wf].arrive(origin, to) {
+                    continue;
+                }
+                let f_idx = wfs.stage_fn[wf][to];
+                arrivals_this_tick[f_idx] += 1;
+                let req = Request { arrival: now, wf: wf as u32, origin };
+                if queues[f_idx].len() >= cfg.max_queue {
+                    report
+                        .function(&functions[f_idx].name)
+                        .record(now, 0.0, Outcome::Dropped);
+                    wfs.fail_request(&req, now, &mut report, Outcome::Dropped);
+                } else {
+                    queues[f_idx].push_back(req);
+                    try_dispatch(
+                        f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
+                        cfg, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
             Ev::Tick => {
                 for (f_idx, f) in functions.iter().enumerate() {
+                    if wfs.of_fn[f_idx].is_some() {
+                        continue; // workflow stages are co-planned below
+                    }
                     let observed = arrivals_this_tick[f_idx] as f64 / cfg.tick
                         + queues[f_idx].len() as f64 / cfg.backlog_horizon;
                     arrivals_this_tick[f_idx] = 0;
                     let actions = policy.plan(f, observed, &cluster, &predictor, now);
-                    for a in &actions {
-                        match a {
-                            ScalingAction::RemovePod { pod } if busy.contains(pod) => {
-                                // Defer: drain in-flight batch first. Billing
-                                // and the action counter happen when the
-                                // removal actually applies.
-                                if let Some(p) = cluster.pod_mut(*pod) {
-                                    p.phase = PodPhase::Draining;
-                                }
-                                pending_remove.insert(*pod);
-                            }
-                            _ => {
-                                if let Some(applied) = apply_action(
-                                    &mut cluster, &mut recon, &mut ledger, perf, a, now,
-                                    &mut report, &mut fplan,
-                                ) {
-                                    match applied {
-                                        Applied::PodCreated { pod, ready_at }
-                                        | Applied::PodPromoted { pod, ready_at } => {
-                                            q.push_at(ready_at, Ev::PodReady { pod });
-                                        }
-                                        _ => {}
-                                    }
-                                }
-                            }
-                        }
-                    }
+                    apply_plan(
+                        &actions, now, &mut cluster, &mut recon, &mut ledger, perf, &mut report,
+                        &mut fplan, &busy, &mut pending_remove, &mut q,
+                    );
                     // New capacity may unblock the queue.
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool,
+                        cfg, &mut report, &mut batch_pool, &mut wfs,
                     );
+                }
+                // Workflow stages: one co-scaling pass per workflow, all
+                // stages planned together. HybridAutoscaler propagates the
+                // demand downstream and grows the bottleneck stage first;
+                // baseline policies fall back to fair independent per-stage
+                // planning (the trait's default method).
+                for w_idx in 0..wfs.defs.len() {
+                    let fidx = wfs.stage_fn[w_idx].clone();
+                    let observed: Vec<f64> = fidx
+                        .iter()
+                        .map(|&i| {
+                            let o = arrivals_this_tick[i] as f64 / cfg.tick
+                                + queues[i].len() as f64 / cfg.backlog_horizon;
+                            arrivals_this_tick[i] = 0;
+                            o
+                        })
+                        .collect();
+                    let stage_fns: Vec<&FunctionSpec> =
+                        fidx.iter().map(|&i| &functions[i]).collect();
+                    let actions = policy.plan_workflow(
+                        &wfs.defs[w_idx], &stage_fns, &observed, &cluster, &predictor, now,
+                    );
+                    apply_plan(
+                        &actions, now, &mut cluster, &mut recon, &mut ledger, perf, &mut report,
+                        &mut fplan, &busy, &mut pending_remove, &mut q,
+                    );
+                    for &i in &fidx {
+                        try_dispatch(
+                            i, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
+                            cfg, &mut report, &mut batch_pool, &mut wfs,
+                        );
+                    }
                 }
             }
             Ev::End => {
@@ -450,6 +603,18 @@ pub fn run_sim(
                         report
                             .function(&f.name)
                             .record(r.arrival, now - r.arrival, Outcome::Dropped);
+                        wfs.fail_request(&r, now, &mut report, Outcome::Dropped);
+                    }
+                }
+                // Origins still open (mid-batch or mid-hop) never completed:
+                // close each one exactly once as an end-of-run drop.
+                for w_idx in 0..wfs.defs.len() {
+                    let open: Vec<(u32, f64)> = wfs.routers[w_idx].open_origins().collect();
+                    for (o, t0) in open {
+                        wfs.routers[w_idx].fail(o, now);
+                        report
+                            .workflow(&wfs.defs[w_idx].name)
+                            .record(t0, now - t0, Outcome::Dropped);
                     }
                 }
                 // GPUs still down at end of run: truncate their downtime
@@ -538,6 +703,50 @@ fn kill_pod(
     }
 }
 
+/// Apply one planning pass's actions: a busy pod drains before removal
+/// (billing and the action counter fire when the removal actually applies);
+/// everything else goes through the Re-configurator with post-success
+/// accounting, and fresh pods schedule their ready events. Shared verbatim
+/// by the per-function and per-workflow tick passes.
+#[allow(clippy::too_many_arguments)]
+fn apply_plan(
+    actions: &[ScalingAction],
+    now: f64,
+    cluster: &mut ClusterState,
+    recon: &mut Reconfigurator,
+    ledger: &mut BillingLedger,
+    perf: &PerfModel,
+    report: &mut RunReport,
+    fplan: &mut FaultPlan,
+    busy: &BTreeSet<PodId>,
+    pending_remove: &mut BTreeSet<PodId>,
+    q: &mut EventQueue<Ev>,
+) {
+    for a in actions {
+        match a {
+            ScalingAction::RemovePod { pod } if busy.contains(pod) => {
+                if let Some(p) = cluster.pod_mut(*pod) {
+                    p.phase = PodPhase::Draining;
+                }
+                pending_remove.insert(*pod);
+            }
+            _ => {
+                if let Some(applied) =
+                    apply_action(cluster, recon, ledger, perf, a, now, report, fplan)
+                {
+                    match applied {
+                        Applied::PodCreated { pod, ready_at }
+                        | Applied::PodPromoted { pod, ready_at } => {
+                            q.push_at(ready_at, Ev::PodReady { pod });
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Apply an action through the Re-configurator, with ledger + counter
 /// accounting **after** the mutation succeeds: rejected actions (allocation
 /// races — the policy planned on a snapshot) bill nothing and count
@@ -587,6 +796,7 @@ fn try_dispatch(
     cfg: &SimConfig,
     report: &mut RunReport,
     batch_pool: &mut Vec<Vec<Request>>,
+    wfs: &mut WfState,
 ) {
     let f = &functions[f_idx];
     // Idle + ready pods, largest capacity first (capacity-weighted routing;
@@ -615,6 +825,7 @@ fn try_dispatch(
                 report
                     .function(&f.name)
                     .record(r.arrival, now - r.arrival, Outcome::Dropped);
+                wfs.fail_request(&r, now, report, Outcome::Dropped);
             } else {
                 break;
             }
@@ -1143,5 +1354,85 @@ mod tests {
         assert_eq!(r.total_served(), 0);
         // Keep-alive still accrues (small) cost.
         assert!(r.costs.total_cost() > 0.0);
+    }
+
+    /// Pipeline fixture: the built-in detector→classifier chain, its stage
+    /// functions, and a trace that feeds *only* the entry stage (downstream
+    /// stages receive hop arrivals, never trace arrivals).
+    fn pipeline_setup() -> (crate::workflow::Workflow, Vec<FunctionSpec>, Trace) {
+        let perf = PerfModel::default();
+        let reg = crate::workflow::WorkflowRegistry::default();
+        let wf = reg.get("pipeline-vision").expect("builtin").clone();
+        let fns = wf.stage_functions(&perf);
+        let entry = wf.stage_function_name(wf.entry());
+        let trace =
+            TraceGen::preset(Preset::PipelineVision, 3, 120, 40.0).generate(&[entry.as_str()]);
+        (wf, fns, trace)
+    }
+
+    fn run_pipeline(policy: &mut dyn ScalingPolicy) -> (crate::workflow::Workflow, RunReport) {
+        let (wf, fns, trace) = pipeline_setup();
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        let cfg = SimConfig {
+            n_gpus: 8,
+            workflows: vec![wf.clone()],
+            ..SimConfig::default()
+        };
+        let r = run_sim(policy, &fns, &trace, &pred, &perf, &cfg);
+        (wf, r)
+    }
+
+    #[test]
+    fn workflow_run_records_e2e_once_per_origin() {
+        let mut p = HybridAutoscaler::new(HybridConfig::default());
+        let (wf, r) = run_pipeline(&mut p);
+        let m = r.workflow_e2e.get(&wf.name).expect("e2e metrics recorded");
+        assert!(m.served() > 100, "e2e served {}", m.served());
+        // Conservation: every entry arrival opened exactly one origin, and
+        // every origin closed exactly once (complete, drop, or end-of-run).
+        let entry = &r.functions[&wf.stage_function_name(wf.entry())];
+        assert_eq!(m.records.len(), entry.records.len());
+        // Both stages actually served traffic through the hop path.
+        let classify = &r.functions[&wf.stage_function_name(1)];
+        assert!(classify.served() > 100, "downstream served {}", classify.served());
+        // e2e can never undercut the hop floor (charged exactly once).
+        let mut e2e = m.latency_summary();
+        let floor = wf.critical_path_hops();
+        let lo = e2e.percentile(0.0);
+        assert!(lo >= floor, "min e2e {lo} < hop floor {floor}");
+        // Export gate: workflow keys present here, absent on a default run.
+        assert!(r.to_json().get("workflows").is_ok());
+        let mut p2 = HybridAutoscaler::new(HybridConfig::default());
+        let r2 = run(&mut p2, false);
+        assert!(r2.to_json().get("workflows").is_err());
+    }
+
+    #[test]
+    fn workflow_runs_are_deterministic() {
+        let mut a = HybridAutoscaler::new(HybridConfig::default());
+        let mut b = HybridAutoscaler::new(HybridConfig::default());
+        let (wf, ra) = run_pipeline(&mut a);
+        let (_, rb) = run_pipeline(&mut b);
+        assert_eq!(ra.total_served(), rb.total_served());
+        assert_eq!(ra.costs.total_cost().to_bits(), rb.costs.total_cost().to_bits());
+        let (ma, mb) = (&ra.workflow_e2e[&wf.name], &rb.workflow_e2e[&wf.name]);
+        assert_eq!(ma.records.len(), mb.records.len());
+        let p99 = |m: &crate::metrics::FunctionMetrics| {
+            let mut s = m.latency_summary();
+            s.p99().to_bits()
+        };
+        assert_eq!(p99(ma), p99(mb));
+    }
+
+    #[test]
+    fn baseline_policies_serve_workflows_via_the_fair_fallback() {
+        // KServe never implements plan_workflow; the trait's default fair
+        // per-stage fallback must still serve the pipeline end to end.
+        let mut ks = KServePolicy::default();
+        let (wf, r) = run_pipeline(&mut ks);
+        let m = r.workflow_e2e.get(&wf.name).expect("fallback still routes");
+        assert!(m.served() > 50, "e2e served {}", m.served());
+        assert_eq!(r.vertical_ups, 0, "kserve must stay horizontal-only");
     }
 }

@@ -1,0 +1,705 @@
+//! Workflow subsystem: DAG pipelines of zoo models with SLO budget
+//! splitting and co-scaled stages.
+//!
+//! A [`Workflow`] describes a chain or DAG of model stages. Every stage
+//! references a zoo model graph; every edge carries a payload size from
+//! which its network **hop latency** is derived (`rtt + bytes / bandwidth`).
+//! The workflow owns one **end-to-end SLO**, which [`split_budget`]
+//! decomposes into per-stage SLO budgets proportionally to RaPP/perf-model
+//! predicted full-resource stage latencies:
+//!
+//! ```text
+//! k = max(0, slo_e2e − H) / L          H = longest-path hop latency
+//! budget[s] = k · lat[s]               L = longest-path stage latency
+//! ```
+//!
+//! For *every* root-to-leaf path `p` this conserves the SLO:
+//! `Σ_p budget + Σ_p hop ≤ k·L + H ≤ slo_e2e` (with equality on the
+//! critical path of a chain). Budgets are renormalized by calling
+//! [`Workflow::stage_budgets`] again with refreshed latency predictions as
+//! stages scale; the split clamps at zero and sanitizes non-finite inputs,
+//! so a budget is never negative or NaN (pinned by
+//! `rust/tests/workflow_properties.rs`).
+//!
+//! [`WorkflowRegistry`] mirrors the `PlatformRegistry` / `FleetRegistry`
+//! name rules (case-insensitive keys, duplicate and CLI-unreachable names
+//! rejected, unknown names error with the full menu) and ships the two
+//! built-in pipelines the scenario matrix exposes as presets:
+//! `pipeline-vision` (detector → classifier chain) and `pipeline-mixed`
+//! (branching diamond over mixed model sizes). Workflow export keys appear
+//! *only* in cells run under a workflow preset — stock grids stay
+//! byte-identical (pinned by `rust/tests/expt_golden.rs`).
+
+use crate::cluster::FunctionSpec;
+use crate::model::zoo::{zoo_graph, ZooModel};
+use crate::perf::PerfModel;
+use crate::util::bench::ascii_table;
+
+/// Inter-stage link bandwidth (bytes/s) used to derive hop latency from an
+/// edge's payload size — a 10 Gbit/s datacenter fabric.
+pub const LINK_BANDWIDTH: f64 = 1.25e9;
+
+/// Fixed per-hop round-trip overhead (seconds): serialization + RPC.
+pub const LINK_RTT: f64 = 1e-3;
+
+/// A float32 `224×224×3` image tensor — the canonical vision payload.
+pub const IMAGE_TENSOR_BYTES: f64 = 602_112.0;
+
+/// One model stage of a workflow.
+#[derive(Clone, Debug)]
+pub struct WorkflowStage {
+    /// Stage name, unique within the workflow (case-insensitive). The
+    /// serving function is named `"{workflow}:{stage}"`.
+    pub name: String,
+    /// Zoo model this stage executes.
+    pub model: ZooModel,
+    /// Serving batch size of the stage's pods.
+    pub batch: u32,
+}
+
+/// A directed edge between two stages. Edges must point *forward*
+/// (`from < to`), which makes every edge list acyclic by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkflowEdge {
+    pub from: usize,
+    pub to: usize,
+    /// Payload handed from `from` to `to` (bytes).
+    pub payload_bytes: f64,
+}
+
+impl WorkflowEdge {
+    /// Network hop latency of this edge (seconds).
+    pub fn hop_latency(&self) -> f64 {
+        LINK_RTT + self.payload_bytes.max(0.0) / LINK_BANDWIDTH
+    }
+}
+
+/// A DAG pipeline of model stages with one end-to-end SLO.
+#[derive(Clone, Debug)]
+pub struct Workflow {
+    /// Stable registry key (export schema — cells carry this name).
+    pub name: String,
+    /// One-line description for `--help` and the `workflows` subcommand.
+    pub about: String,
+    /// Stages in topological order (edges always point forward).
+    pub stages: Vec<WorkflowStage>,
+    pub edges: Vec<WorkflowEdge>,
+    /// End-to-end SLO (seconds): the deadline from entry-stage arrival to
+    /// final-stage completion. Violation is an *e2e* deadline miss, never a
+    /// per-stage one.
+    pub e2e_slo: f64,
+}
+
+impl Workflow {
+    /// A linear chain: consecutive stages connected by edges carrying
+    /// `payload_bytes` each.
+    pub fn chain(
+        name: impl Into<String>,
+        about: impl Into<String>,
+        stages: &[(&str, ZooModel, u32)],
+        payload_bytes: f64,
+    ) -> Self {
+        Workflow {
+            name: name.into(),
+            about: about.into(),
+            stages: stages
+                .iter()
+                .map(|&(n, m, b)| WorkflowStage {
+                    name: n.into(),
+                    model: m,
+                    batch: b,
+                })
+                .collect(),
+            edges: (1..stages.len())
+                .map(|i| WorkflowEdge {
+                    from: i - 1,
+                    to: i,
+                    payload_bytes,
+                })
+                .collect(),
+            e2e_slo: 0.0,
+        }
+    }
+
+    /// Structural validation: non-empty stages with unique reachable names,
+    /// forward in-range edges, exactly one entry stage, every stage
+    /// reachable from it. (The registry additionally validates the SLO.)
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.stages.is_empty(), "workflow '{}' has no stages", self.name);
+        for (i, s) in self.stages.iter().enumerate() {
+            anyhow::ensure!(
+                !s.name.is_empty() && s.name.trim() == s.name && !s.name.contains([':', ',']),
+                "workflow '{}': stage {i} name '{}' must be non-empty, trimmed, and free of \
+                 ':'/',' (it becomes part of the '{{workflow}}:{{stage}}' function name)",
+                self.name,
+                s.name
+            );
+            anyhow::ensure!(
+                s.batch >= 1,
+                "workflow '{}': stage '{}' batch must be ≥ 1",
+                self.name,
+                s.name
+            );
+            for other in &self.stages[..i] {
+                anyhow::ensure!(
+                    !other.name.eq_ignore_ascii_case(&s.name),
+                    "workflow '{}': duplicate stage name '{}'",
+                    self.name,
+                    s.name
+                );
+            }
+        }
+        for e in &self.edges {
+            anyhow::ensure!(
+                e.from < e.to && e.to < self.stages.len(),
+                "workflow '{}': edge {}→{} must point forward within {} stages \
+                 (forward edges keep the DAG acyclic by construction)",
+                self.name,
+                e.from,
+                e.to,
+                self.stages.len()
+            );
+            anyhow::ensure!(
+                e.payload_bytes.is_finite() && e.payload_bytes >= 0.0,
+                "workflow '{}': edge {}→{} payload must be finite and ≥ 0",
+                self.name,
+                e.from,
+                e.to
+            );
+        }
+        let entries: Vec<usize> = (0..self.stages.len())
+            .filter(|&s| self.in_degree(s) == 0)
+            .collect();
+        anyhow::ensure!(
+            entries.len() == 1,
+            "workflow '{}' must have exactly one entry stage (got {})",
+            self.name,
+            entries.len()
+        );
+        // Reachability from the single entry. Indices ascend along any
+        // forward-edge path, so one ascending sweep settles it.
+        let mut reach = vec![false; self.stages.len()];
+        reach[entries[0]] = true;
+        for s in 0..self.stages.len() {
+            if reach[s] {
+                for e in self.edges.iter().filter(|e| e.from == s) {
+                    reach[e.to] = true;
+                }
+            }
+        }
+        if let Some(orphan) = reach.iter().position(|r| !r) {
+            anyhow::bail!(
+                "workflow '{}': stage '{}' is unreachable from the entry stage",
+                self.name,
+                self.stages[orphan].name
+            );
+        }
+        Ok(())
+    }
+
+    /// Index of the single entry stage (no incoming edges).
+    pub fn entry(&self) -> usize {
+        (0..self.stages.len()).find(|&s| self.in_degree(s) == 0).unwrap_or(0)
+    }
+
+    pub fn in_degree(&self, stage: usize) -> usize {
+        self.edges.iter().filter(|e| e.to == stage).count()
+    }
+
+    pub fn is_terminal(&self, stage: usize) -> bool {
+        !self.edges.iter().any(|e| e.from == stage)
+    }
+
+    /// Number of terminal stages (no outgoing edges).
+    pub fn terminal_count(&self) -> usize {
+        (0..self.stages.len()).filter(|&s| self.is_terminal(s)).count()
+    }
+
+    /// Full-resource (`sm = q = 1`) predicted latency per stage under the
+    /// calibrated perf model — the weights the budget splitter distributes
+    /// the SLO over.
+    pub fn full_resource_latencies(&self, perf: &PerfModel) -> Vec<f64> {
+        self.stages
+            .iter()
+            .map(|s| perf.latency(&zoo_graph(s.model), s.batch, 1.0, 1.0))
+            .collect()
+    }
+
+    /// Longest root-to-leaf path sum of per-stage values (edge-connected;
+    /// node weights), i.e. the critical-path latency when `vals` are stage
+    /// latencies.
+    pub fn critical_path(&self, vals: &[f64]) -> f64 {
+        longest_path(self.stages.len(), &self.edges, |s| sane(vals[s]), |_| 0.0)
+    }
+
+    /// Longest root-to-leaf hop-latency path sum (edge weights only).
+    pub fn critical_path_hops(&self) -> f64 {
+        longest_path(self.stages.len(), &self.edges, |_| 0.0, |e| e.hop_latency())
+    }
+
+    /// Per-stage SLO budgets for the current predicted stage latencies.
+    /// Call again with refreshed predictions to renormalize as stages scale.
+    pub fn stage_budgets(&self, lats: &[f64]) -> Vec<f64> {
+        split_budget(self.e2e_slo, lats, self.stages.len(), &self.edges)
+    }
+
+    /// The serving-function name of a stage: `"{workflow}:{stage}"`.
+    pub fn stage_function_name(&self, stage: usize) -> String {
+        format!("{}:{}", self.name, self.stages[stage].name)
+    }
+
+    /// Build the per-stage [`FunctionSpec`]s: one function per stage, named
+    /// `"{workflow}:{stage}"`, whose SLO is the stage's split budget under
+    /// `perf`'s full-resource latency predictions.
+    pub fn stage_functions(&self, perf: &PerfModel) -> Vec<FunctionSpec> {
+        let budgets = self.stage_budgets(&self.full_resource_latencies(perf));
+        self.stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| FunctionSpec {
+                name: self.stage_function_name(i),
+                graph: zoo_graph(s.model),
+                slo: budgets[i],
+                batch: s.batch,
+                artifact: None,
+            })
+            .collect()
+    }
+
+    /// Derive the end-to-end SLO from the perf model: `mult ×` the
+    /// critical-path full-resource latency plus the critical-path hop
+    /// latency — the same "× baseline" convention the single-function
+    /// experiment grid uses for per-function SLOs.
+    pub fn with_auto_slo(mut self, perf: &PerfModel, mult: f64) -> Self {
+        let lats = self.full_resource_latencies(perf);
+        self.e2e_slo = mult * self.critical_path(&lats) + self.critical_path_hops();
+        self
+    }
+}
+
+/// Replace non-finite or negative values with 0 so one poisoned predictor
+/// output can never spread NaN through the budget split.
+fn sane(v: f64) -> f64 {
+    if v.is_finite() && v > 0.0 {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Longest root-to-leaf path over forward edges, summing `node(s)` at every
+/// visited stage and `edge(e)` over every traversed edge. Stages with no
+/// incoming edge start a path; the maximum over all stages is returned
+/// (terminal stages dominate because weights are non-negative).
+fn longest_path(
+    n: usize,
+    edges: &[WorkflowEdge],
+    node: impl Fn(usize) -> f64,
+    edge: impl Fn(&WorkflowEdge) -> f64,
+) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let mut dp = vec![0.0f64; n];
+    for (s, d) in dp.iter_mut().enumerate() {
+        *d = node(s);
+    }
+    // Forward edges mean ascending target order is a topological order.
+    for s in 0..n {
+        for e in edges.iter().filter(|e| e.to == s) {
+            let via = dp[e.from] + edge(e) + node(s);
+            if via > dp[s] {
+                dp[s] = via;
+            }
+        }
+    }
+    dp.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+/// Latency-proportional SLO budget split (module docs): reserve the
+/// longest-path hop latency `H` off the top, then distribute the remainder
+/// over stages proportionally to their predicted latencies, scaled so the
+/// longest latency path `L` exactly spends the remainder. Every budget is
+/// clamped non-negative and NaN-sanitized; an all-zero (or non-finite)
+/// latency vector yields all-zero budgets rather than a division blow-up.
+pub fn split_budget(
+    e2e_slo: f64,
+    lats: &[f64],
+    n_stages: usize,
+    edges: &[WorkflowEdge],
+) -> Vec<f64> {
+    let n = n_stages.min(lats.len());
+    let l = longest_path(n, edges, |s| sane(lats[s]), |_| 0.0);
+    let h = longest_path(n, edges, |_| 0.0, |e| e.hop_latency());
+    let k = if l > 0.0 && e2e_slo.is_finite() {
+        ((e2e_slo - h).max(0.0)) / l
+    } else {
+        0.0
+    };
+    (0..n).map(|s| sane(k * sane(lats[s]))).collect()
+}
+
+/// Ordered collection of [`Workflow`]s; registration order is listing
+/// order. Mirrors the `PlatformRegistry` / `FleetRegistry` contract:
+/// case-insensitive lookup, duplicate and CLI-unreachable names rejected,
+/// unknown names error with the full menu.
+#[derive(Clone, Debug)]
+pub struct WorkflowRegistry {
+    specs: Vec<Workflow>,
+}
+
+impl Default for WorkflowRegistry {
+    /// The two built-in pipelines the scenario matrix exposes as presets.
+    /// End-to-end SLOs follow the grid's `3 × full-resource baseline`
+    /// convention, applied to the critical path (plus hop latency), so the
+    /// per-stage split lands each stage at ≈ 3 × its own baseline — the
+    /// same pressure a single-function grid cell runs under.
+    fn default() -> Self {
+        let perf = PerfModel::default();
+        let mut reg = WorkflowRegistry::empty();
+        reg.register(
+            Workflow::chain(
+                "pipeline-vision",
+                "detector → classifier vision chain (resnet50 → mobilenet_v2)",
+                &[
+                    ("detect", ZooModel::ResNet50, 8),
+                    ("classify", ZooModel::MobileNetV2, 8),
+                ],
+                IMAGE_TENSOR_BYTES,
+            )
+            .with_auto_slo(&perf, 3.0),
+        )
+        .unwrap();
+        reg.register(
+            Workflow {
+                name: "pipeline-mixed".into(),
+                about: "branching diamond over mixed model sizes \
+                        (mobilenet_v2 → {resnet50, convnext_tiny} → bert_tiny)"
+                    .into(),
+                stages: vec![
+                    WorkflowStage {
+                        name: "prep".into(),
+                        model: ZooModel::MobileNetV2,
+                        batch: 8,
+                    },
+                    WorkflowStage {
+                        name: "branch_a".into(),
+                        model: ZooModel::ResNet50,
+                        batch: 8,
+                    },
+                    WorkflowStage {
+                        name: "branch_b".into(),
+                        model: ZooModel::ConvNextTiny,
+                        batch: 8,
+                    },
+                    WorkflowStage {
+                        name: "merge".into(),
+                        model: ZooModel::BertTiny,
+                        batch: 8,
+                    },
+                ],
+                edges: vec![
+                    WorkflowEdge {
+                        from: 0,
+                        to: 1,
+                        payload_bytes: IMAGE_TENSOR_BYTES,
+                    },
+                    WorkflowEdge {
+                        from: 0,
+                        to: 2,
+                        payload_bytes: IMAGE_TENSOR_BYTES,
+                    },
+                    WorkflowEdge {
+                        from: 1,
+                        to: 3,
+                        payload_bytes: 8_192.0,
+                    },
+                    WorkflowEdge {
+                        from: 2,
+                        to: 3,
+                        payload_bytes: 8_192.0,
+                    },
+                ],
+                e2e_slo: 0.0,
+            }
+            .with_auto_slo(&perf, 3.0),
+        )
+        .unwrap();
+        reg
+    }
+}
+
+impl WorkflowRegistry {
+    pub fn empty() -> Self {
+        WorkflowRegistry { specs: Vec::new() }
+    }
+
+    /// Append a workflow; names are case-insensitive keys with the same
+    /// reachability rules as platform/fleet names, and the workflow itself
+    /// must pass [`Workflow::validate`] with a positive finite e2e SLO.
+    pub fn register(&mut self, wf: Workflow) -> anyhow::Result<()> {
+        anyhow::ensure!(!wf.name.is_empty(), "workflow name must be non-empty");
+        anyhow::ensure!(
+            wf.name.trim() == wf.name,
+            "workflow name '{}' must not have surrounding whitespace",
+            wf.name
+        );
+        anyhow::ensure!(
+            !wf.name.contains(',') && !wf.name.contains(':'),
+            "workflow name '{}' must not contain ',' (CLI separator) or ':' \
+             (stage-function separator)",
+            wf.name
+        );
+        wf.validate()?;
+        anyhow::ensure!(
+            wf.e2e_slo.is_finite() && wf.e2e_slo > 0.0,
+            "workflow '{}' needs a positive finite e2e SLO (use with_auto_slo)",
+            wf.name
+        );
+        anyhow::ensure!(
+            self.get(&wf.name).is_none(),
+            "workflow '{}' is already registered",
+            wf.name
+        );
+        self.specs.push(wf);
+        Ok(())
+    }
+
+    /// Case-insensitive lookup.
+    pub fn get(&self, name: &str) -> Option<&Workflow> {
+        self.specs.iter().find(|s| s.name.eq_ignore_ascii_case(name.trim()))
+    }
+
+    pub fn specs(&self) -> &[Workflow] {
+        &self.specs
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Expand a token list into canonical registry names, deduplicated in
+    /// first-appearance order.
+    pub fn resolve(&self, tokens: &[String]) -> anyhow::Result<Vec<String>> {
+        anyhow::ensure!(!tokens.is_empty(), "need at least one workflow");
+        let mut out: Vec<String> = Vec::new();
+        for tok in tokens {
+            let t = tok.trim();
+            let Some(spec) = self.get(t) else {
+                anyhow::bail!(
+                    "unknown workflow '{t}' (expected one of: {})",
+                    self.names().join(", ")
+                );
+            };
+            if !out.iter().any(|n| n == &spec.name) {
+                out.push(spec.name.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// One-line inventory for `--help` text.
+    pub fn cli_help(&self) -> String {
+        format!("comma list of workflow names; names: {}", self.names().join(", "))
+    }
+
+    /// The `has-gpu workflows` inventory table (stages, e2e SLO, edge
+    /// payloads) — same style as `platforms` / `fleets` / `faults`.
+    pub fn table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .specs
+            .iter()
+            .map(|w| {
+                let stages = w
+                    .stages
+                    .iter()
+                    .map(|s| format!("{}({})", s.name, s.model.name()))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                let edges = w
+                    .edges
+                    .iter()
+                    .map(|e| {
+                        format!(
+                            "{}→{} {:.0}KB",
+                            w.stages[e.from].name,
+                            w.stages[e.to].name,
+                            e.payload_bytes / 1024.0
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                vec![
+                    w.name.clone(),
+                    stages,
+                    format!("{:.3} s", w.e2e_slo),
+                    edges,
+                    w.about.clone(),
+                ]
+            })
+            .collect();
+        ascii_table(&["workflow", "stages", "e2e SLO", "edges (payload)", "description"], &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_registry_lists_builtin_pipelines() {
+        let reg = WorkflowRegistry::default();
+        assert_eq!(reg.names(), vec!["pipeline-vision", "pipeline-mixed"]);
+        assert!(reg.get("PIPELINE-VISION").is_some(), "lookup is case-insensitive");
+        for w in reg.specs() {
+            w.validate().unwrap();
+            assert!(w.e2e_slo.is_finite() && w.e2e_slo > 0.0, "{}: slo {}", w.name, w.e2e_slo);
+        }
+        let t = reg.table();
+        assert!(t.contains("pipeline-vision") && t.contains("pipeline-mixed"), "{t}");
+        assert!(t.contains("resnet50") && t.contains("bert_tiny"), "{t}");
+    }
+
+    #[test]
+    fn resolve_dedupes_and_errors_with_menu() {
+        let reg = WorkflowRegistry::default();
+        assert_eq!(
+            reg.resolve(&["Pipeline-Mixed".to_string(), "pipeline-vision".to_string()]).unwrap(),
+            vec!["pipeline-mixed".to_string(), "pipeline-vision".to_string()]
+        );
+        assert_eq!(
+            reg.resolve(&["pipeline-vision".to_string(), "pipeline-vision".to_string()])
+                .unwrap()
+                .len(),
+            1
+        );
+        let err = reg.resolve(&["pipeline-zoo".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("pipeline-vision") && err.contains("pipeline-mixed"), "{err}");
+        assert!(reg.resolve(&[]).is_err());
+    }
+
+    #[test]
+    fn registration_rejects_unreachable_and_invalid() {
+        let mut reg = WorkflowRegistry::default();
+        let perf = PerfModel::default();
+        let mk = |name: &str| {
+            Workflow::chain(name, "t", &[("a", ZooModel::MobileNetV2, 4)], 0.0)
+                .with_auto_slo(&perf, 3.0)
+        };
+        for bad in ["", " padded", "a,b", "a:b", "pipeline-vision", "PIPELINE-VISION"] {
+            assert!(reg.register(mk(bad)).is_err(), "'{bad}' must be rejected");
+        }
+        // Zero SLO rejected.
+        let mut no_slo = mk("no-slo");
+        no_slo.e2e_slo = 0.0;
+        assert!(reg.register(no_slo).is_err());
+        // Backward edge rejected.
+        let mut back = mk("backward");
+        back.stages.push(WorkflowStage {
+            name: "b".into(),
+            model: ZooModel::MobileNetV2,
+            batch: 4,
+        });
+        back.edges.push(WorkflowEdge { from: 1, to: 0, payload_bytes: 1.0 });
+        assert!(back.validate().is_err());
+        // Two entry stages rejected.
+        let mut twin = mk("twin");
+        twin.stages.push(WorkflowStage {
+            name: "b".into(),
+            model: ZooModel::MobileNetV2,
+            batch: 4,
+        });
+        assert!(twin.validate().is_err());
+        // A fresh valid workflow registers, resolves, and lists.
+        reg.register(mk("pipeline-tiny")).unwrap();
+        assert_eq!(reg.resolve(&["pipeline-tiny".into()]).unwrap(), vec!["pipeline-tiny"]);
+        assert!(reg.table().contains("pipeline-tiny"));
+        assert!(reg.cli_help().contains("pipeline-tiny"));
+    }
+
+    #[test]
+    fn chain_budget_split_is_exact_on_the_critical_path() {
+        let reg = WorkflowRegistry::default();
+        let w = reg.get("pipeline-vision").unwrap();
+        let perf = PerfModel::default();
+        let lats = w.full_resource_latencies(&perf);
+        let budgets = w.stage_budgets(&lats);
+        assert_eq!(budgets.len(), 2);
+        assert!(budgets.iter().all(|b| b.is_finite() && *b > 0.0), "{budgets:?}");
+        // A chain has a single path: budgets + hops spend the SLO exactly.
+        let spent: f64 = budgets.iter().sum::<f64>() + w.critical_path_hops();
+        assert!((spent - w.e2e_slo).abs() < 1e-9, "spent {spent} vs slo {}", w.e2e_slo);
+        // Latency-proportional: budget ratio tracks the latency ratio.
+        assert!((budgets[0] / budgets[1] - lats[0] / lats[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diamond_split_conserves_on_every_path() {
+        let reg = WorkflowRegistry::default();
+        let w = reg.get("pipeline-mixed").unwrap();
+        let perf = PerfModel::default();
+        let lats = w.full_resource_latencies(&perf);
+        let budgets = w.stage_budgets(&lats);
+        let hop = |f: usize, t: usize| {
+            w.edges
+                .iter()
+                .find(|e| e.from == f && e.to == t)
+                .unwrap()
+                .hop_latency()
+        };
+        for branch in [1usize, 2] {
+            let path = budgets[0] + budgets[branch] + budgets[3] + hop(0, branch) + hop(branch, 3);
+            assert!(path <= w.e2e_slo + 1e-9, "path via {branch}: {path} > {}", w.e2e_slo);
+        }
+        assert_eq!(w.entry(), 0);
+        assert_eq!(w.in_degree(3), 2, "merge joins both branches");
+        assert!(w.is_terminal(3) && w.terminal_count() == 1);
+    }
+
+    #[test]
+    fn stage_functions_carry_budgets_and_namespaced_names() {
+        let reg = WorkflowRegistry::default();
+        let perf = PerfModel::default();
+        let w = reg.get("pipeline-mixed").unwrap();
+        let fns = w.stage_functions(&perf);
+        assert_eq!(fns.len(), 4);
+        assert_eq!(fns[0].name, "pipeline-mixed:prep");
+        assert_eq!(fns[3].name, "pipeline-mixed:merge");
+        let budgets = w.stage_budgets(&w.full_resource_latencies(&perf));
+        for (f, b) in fns.iter().zip(&budgets) {
+            assert_eq!(f.slo, *b);
+            assert!(f.slo > 0.0 && f.artifact.is_none());
+        }
+    }
+
+    #[test]
+    fn split_budget_sanitizes_degenerate_inputs() {
+        let edges = [WorkflowEdge { from: 0, to: 1, payload_bytes: 1e6 }];
+        // NaN / negative latencies never poison the output.
+        let b = split_budget(0.5, &[f64::NAN, -1.0], 2, &edges);
+        assert!(b.iter().all(|x| x.is_finite() && *x >= 0.0), "{b:?}");
+        // SLO below the hop reserve clamps to zero budgets, not negatives.
+        let b = split_budget(1e-9, &[0.1, 0.1], 2, &edges);
+        assert!(b.iter().all(|x| *x == 0.0), "{b:?}");
+        // Infinite SLO is rejected into zeros rather than Inf budgets.
+        let b = split_budget(f64::INFINITY, &[0.1, 0.1], 2, &edges);
+        assert!(b.iter().all(|x| x.is_finite()), "{b:?}");
+        assert!(split_budget(1.0, &[], 0, &[]).is_empty());
+    }
+
+    #[test]
+    fn renormalization_tracks_scaled_latencies() {
+        let reg = WorkflowRegistry::default();
+        let w = reg.get("pipeline-vision").unwrap();
+        let perf = PerfModel::default();
+        let mut lats = w.full_resource_latencies(&perf);
+        let before = w.stage_budgets(&lats);
+        // Stage 0 slows 2×: its share must grow, stage 1's must shrink,
+        // and the chain still spends exactly the SLO.
+        lats[0] *= 2.0;
+        let after = w.stage_budgets(&lats);
+        assert!(after[0] > before[0] && after[1] < before[1]);
+        let spent: f64 = after.iter().sum::<f64>() + w.critical_path_hops();
+        assert!((spent - w.e2e_slo).abs() < 1e-9);
+    }
+}

@@ -33,6 +33,13 @@ pub enum Preset {
     /// down, so time-to-first-token is dominated by cold-load/swap latency —
     /// the pod-lifecycle comparison workload.
     ColdStartStorm,
+    /// Camera-style steady traffic feeding the `pipeline-vision`
+    /// detector→classifier workflow chain (the trace drives only the
+    /// workflow's entry stage; downstream stages see hop arrivals).
+    PipelineVision,
+    /// Burstier mixed traffic feeding the `pipeline-mixed` branching DAG
+    /// over mixed model sizes — the workflow co-scaling stress case.
+    PipelineMixed,
 }
 
 /// One row of [`PRESET_TABLE`]: the preset, its canonical CLI/export name,
@@ -48,7 +55,7 @@ pub struct PresetInfo {
 /// `Preset::from_name`, [`ALL_PRESETS`], and every CLI help/error surface
 /// derive from this single table, so a new preset cannot reach one surface
 /// and miss another.
-pub const PRESET_TABLE: [PresetInfo; 5] = [
+pub const PRESET_TABLE: [PresetInfo; 7] = [
     PresetInfo {
         preset: Preset::Standard,
         name: "standard",
@@ -74,16 +81,28 @@ pub const PRESET_TABLE: [PresetInfo; 5] = [
         name: "cold-start-storm",
         about: "silent base with isolated bursts: TTFT is all cold-load/swap latency",
     },
+    PresetInfo {
+        preset: Preset::PipelineVision,
+        name: "pipeline-vision",
+        about: "steady camera traffic into the detector->classifier workflow chain",
+    },
+    PresetInfo {
+        preset: Preset::PipelineMixed,
+        name: "pipeline-mixed",
+        about: "bursty traffic into the branching mixed-model workflow DAG",
+    },
 ];
 
 /// Every preset, in the canonical matrix order (derived column of
 /// [`PRESET_TABLE`]; `preset_table_is_the_single_source` pins agreement).
-pub const ALL_PRESETS: [Preset; 5] = [
+pub const ALL_PRESETS: [Preset; 7] = [
     Preset::Standard,
     Preset::Stress,
     Preset::Diurnal,
     Preset::SpikyBurst,
     Preset::ColdStartStorm,
+    Preset::PipelineVision,
+    Preset::PipelineMixed,
 ];
 
 impl Preset {
@@ -286,6 +305,36 @@ impl TraceGen {
                 burst_len: (5, 20),
                 noise_sigma: 0.3,
                 duty_cycle: 0.0,
+            },
+            // Pipeline entry-stage traffic: near-continuous camera feed with
+            // mild bursts — the e2e tail comes from stage contention, not
+            // from trace spikes.
+            Preset::PipelineVision => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 / 2.0,
+                burst_rate: 1.0 / 150.0,
+                burst_alpha: 2.8,
+                burst_cap: 4.0,
+                burst_len: (10, 25),
+                noise_sigma: 0.2,
+                duty_cycle: 0.8,
+            },
+            // Branching-DAG entry traffic: burstier and heavier-tailed, so
+            // the fan-out stages amplify load imbalance and co-scaling (or
+            // its absence) shows up in the e2e percentiles.
+            Preset::PipelineMixed => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 / 3.0,
+                burst_rate: 1.0 / 60.0,
+                burst_alpha: 1.8,
+                burst_cap: 7.0,
+                burst_len: (10, 30),
+                noise_sigma: 0.35,
+                duty_cycle: 0.65,
             },
         }
     }

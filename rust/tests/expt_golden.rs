@@ -522,6 +522,128 @@ fn chaos_gpu_failures_headline_accounting() {
 }
 
 #[test]
+fn pipeline_extension_perturbs_no_stock_cells() {
+    // The workflow contract: adding the pipeline presets to a grid leaves
+    // every pre-existing single-function cell byte-identical — an empty
+    // workflow config schedules no stage hops, consumes no RNG, and gates
+    // every workflow export key off.
+    let stock = registry_matrix(&["has-gpu", "kserve", "fast-gshare"]).run(2);
+    let mk = || ScenarioMatrix {
+        presets: vec![
+            Preset::Standard,
+            Preset::PipelineVision,
+            Preset::PipelineMixed,
+        ],
+        ..registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+    };
+    let extended = mk().run(2);
+    assert_eq!(extended.cells.len(), stock.cells.len() * 3);
+    let shared: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.preset == Preset::Standard)
+        .collect();
+    assert_eq!(shared.len(), stock.cells.len());
+    for (a, b) in stock.cells.iter().zip(shared) {
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "stock cell ({}, {}, {}) perturbed by the pipeline extension",
+            a.platform,
+            a.preset.name(),
+            a.seed
+        );
+    }
+    // Stock summary rows are identical too (pipeline rows only append).
+    let stock_summary: Vec<_> = extended
+        .summary()
+        .into_iter()
+        .filter(|r| r.preset == Preset::Standard)
+        .collect();
+    assert_eq!(stock.summary(), stock_summary);
+    // Workflow keys exist on exactly the pipeline cells.
+    for c in &extended.cells {
+        let pipeline = matches!(c.preset, Preset::PipelineVision | Preset::PipelineMixed);
+        assert_eq!(
+            c.to_json().opt("workflows").is_some(),
+            pipeline,
+            "({}, {}, {}) workflow key presence",
+            c.platform,
+            c.preset.name(),
+            c.seed
+        );
+        assert_eq!(!c.workflows.is_empty(), pipeline);
+    }
+    // Pipeline cells actually flowed traffic through the whole DAG: every
+    // stage function served, and the workflow accounting closed every
+    // opened origin exactly once (served + dropped roll up the chain).
+    for c in extended.cells.iter().filter(|c| !c.workflows.is_empty()) {
+        let wf = &c.workflows[0];
+        assert!(
+            wf.served > 0,
+            "({}, {}, {}) completed no workflows",
+            c.platform,
+            c.preset.name(),
+            c.seed
+        );
+        assert!((0.0..=1.0).contains(&wf.e2e_violation_rate));
+        assert!(c.functions.iter().all(|f| f.name.starts_with(&format!("{}:", wf.name))));
+    }
+    // The extended grid round-trips losslessly and is --jobs invariant.
+    let back = MatrixReport::from_json(&extended.to_json()).unwrap();
+    assert_eq!(back, extended);
+    assert_eq!(
+        back.to_json().to_string_pretty(),
+        extended.to_json().to_string_pretty()
+    );
+    let again = mk().run(1);
+    assert_eq!(
+        json::fingerprint(&extended.to_json()),
+        json::fingerprint(&again.to_json())
+    );
+}
+
+#[test]
+fn pipeline_mixed_headline_directions() {
+    // The paper-shaped outcome for the branching-DAG grid: HAS-GPU's
+    // co-scaled stages keep the e2e tail inside the budget at fine-grained
+    // cost, so its tail-per-dollar product (e2e P99 × chain $/1k) beats
+    // both baselines — kserve burns whole GPUs per stage, fast-gshare lets
+    // the bottleneck stage starve the chain's tail.
+    let report = ScenarioMatrix {
+        presets: vec![Preset::PipelineMixed],
+        seconds: 240,
+        ..registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+    }
+    .run(2);
+    let summary = report.summary();
+    let row = |p: &str| summary.iter().find(|r| r.platform == p).unwrap();
+    let has = row("has-gpu");
+    for p in ["has-gpu", "kserve", "fast-gshare"] {
+        let r = row(p);
+        let e2e = r.e2e_p99.unwrap_or_else(|| panic!("{p} has no e2e_p99"));
+        let dollars = r.e2e_cost_per_1k.unwrap_or_else(|| panic!("{p} has no wf $/1k"));
+        assert!(e2e > 0.0 && e2e.is_finite(), "{p} e2e_p99 {e2e}");
+        assert!(dollars > 0.0, "{p} wf $/1k {dollars}");
+    }
+    for p in ["kserve", "fast-gshare"] {
+        let b = row(p);
+        let has_product = has.e2e_p99.unwrap() * has.e2e_cost_per_1k.unwrap();
+        let b_product = b.e2e_p99.unwrap() * b.e2e_cost_per_1k.unwrap();
+        assert!(
+            has_product < b_product,
+            "has-gpu e2e×$ {has_product} must beat {p} {b_product}"
+        );
+    }
+    // And the e2e headline ratio materialises for the pipeline rows.
+    let ratios = report.ratios_vs_has_gpu();
+    for p in ["kserve", "fast-gshare"] {
+        let r = ratios.iter().find(|r| r.platform == p).unwrap();
+        assert!(r.e2e_ratio.is_some(), "{p} missing e2e ratio");
+    }
+}
+
+#[test]
 fn uniform_fleet_export_is_byte_identical_to_the_pre_fleet_path() {
     // Belt-and-braces for the fleet axis specifically: the frozen pre-fleet
     // construction (homogeneous ClusterState::new path, no fleet axis)

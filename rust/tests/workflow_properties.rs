@@ -1,0 +1,158 @@
+//! Property tests for the workflow SLO budget splitter (hand-rolled with
+//! the repo's seeded PRNG — no external proptest dependency).
+//!
+//! For randomly generated forward-edge DAGs the splitter must:
+//!
+//! 1. **conserve the SLO** — along every root-to-leaf path,
+//!    `Σ stage budgets + Σ hop latencies ≤ e2e SLO` whenever the SLO can
+//!    cover the hop reserve at all (and never exceed the hop reserve
+//!    itself otherwise);
+//! 2. **never produce negative or NaN budgets**, even under degenerate
+//!    latency predictions (NaN, ±∞, negatives) or repeated
+//!    renormalization with rescaled predictions.
+
+use has_gpu::model::zoo::ZooModel;
+use has_gpu::util::prng::Pcg64;
+use has_gpu::workflow::{split_budget, Workflow, WorkflowEdge, WorkflowStage};
+
+/// Build a random valid workflow DAG: stage `s > 0` always receives one
+/// edge from a random earlier stage (single entry, all stages reachable),
+/// plus a few extra random forward edges.
+fn random_dag(rng: &mut Pcg64) -> Workflow {
+    let n = 1 + rng.next_below(8) as usize;
+    let stages = (0..n)
+        .map(|i| WorkflowStage {
+            name: format!("s{i}"),
+            model: ZooModel::MobileNetV2,
+            batch: 1 + rng.next_below(16) as u32,
+        })
+        .collect();
+    let mut edges = Vec::new();
+    for to in 1..n {
+        let from = rng.next_below(to as u64) as usize;
+        edges.push(WorkflowEdge {
+            from,
+            to,
+            payload_bytes: rng.uniform(0.0, 2e6),
+        });
+    }
+    for _ in 0..rng.next_below(4) {
+        if n < 2 {
+            break;
+        }
+        let from = rng.next_below((n - 1) as u64) as usize;
+        let to = from + 1 + rng.next_below((n - from - 1) as u64) as usize;
+        edges.push(WorkflowEdge {
+            from,
+            to,
+            payload_bytes: rng.uniform(0.0, 2e6),
+        });
+    }
+    Workflow {
+        name: "prop".into(),
+        about: "random property-test DAG".into(),
+        stages,
+        edges,
+        e2e_slo: rng.uniform(0.0, 2.0),
+    }
+}
+
+/// Random per-stage latency predictions, occasionally poisoned with the
+/// degenerate values a broken predictor could emit.
+fn random_lats(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|_| match rng.next_below(10) {
+            0 => f64::NAN,
+            1 => -rng.uniform(0.0, 1.0),
+            2 => f64::INFINITY,
+            3 => 0.0,
+            _ => rng.uniform(1e-4, 0.5),
+        })
+        .collect()
+}
+
+/// Longest root-to-leaf sum of `budget[s]` plus traversed hop latencies —
+/// an independent DP (ascending stage index is a topological order for
+/// forward edges), so the test does not reuse the library's path walker.
+fn worst_path(wf: &Workflow, budgets: &[f64]) -> f64 {
+    let n = wf.stages.len();
+    let mut dp: Vec<f64> = (0..n).map(|s| budgets[s]).collect();
+    for s in 0..n {
+        for e in wf.edges.iter().filter(|e| e.to == s) {
+            let via = dp[e.from] + e.hop_latency() + budgets[s];
+            if via > dp[s] {
+                dp[s] = via;
+            }
+        }
+    }
+    dp.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+#[test]
+fn random_dags_are_structurally_valid() {
+    let mut rng = Pcg64::seeded(0xDA6);
+    for _ in 0..500 {
+        let wf = random_dag(&mut rng);
+        wf.validate().unwrap();
+        assert_eq!(wf.entry(), 0, "stage 0 is always the single entry");
+    }
+}
+
+#[test]
+fn budget_split_conserves_the_slo_on_every_path() {
+    let mut rng = Pcg64::seeded(0x510);
+    for case in 0..500 {
+        let wf = random_dag(&mut rng);
+        let lats = random_lats(&mut rng, wf.stages.len());
+        let budgets = wf.stage_budgets(&lats);
+        assert_eq!(budgets.len(), wf.stages.len());
+        let h = wf.critical_path_hops();
+        let worst = worst_path(&wf, &budgets);
+        // The hop reserve comes off the top, so every path fits the SLO
+        // whenever the SLO covers the hops; with an infeasible SLO the
+        // budgets collapse to zero and only the hops remain.
+        let cap = wf.e2e_slo.max(h);
+        assert!(
+            worst <= cap + 1e-9,
+            "case {case}: path spend {worst} > cap {cap} (slo {}, hops {h})",
+            wf.e2e_slo
+        );
+    }
+}
+
+#[test]
+fn budgets_are_never_negative_or_nan_under_renormalization() {
+    let mut rng = Pcg64::seeded(0xF1);
+    for case in 0..500 {
+        let wf = random_dag(&mut rng);
+        let mut lats = random_lats(&mut rng, wf.stages.len());
+        for round in 0..3 {
+            let budgets = wf.stage_budgets(&lats);
+            for (s, b) in budgets.iter().enumerate() {
+                assert!(
+                    b.is_finite() && *b >= 0.0,
+                    "case {case} round {round} stage {s}: budget {b} from lats {lats:?}"
+                );
+            }
+            // Renormalize: stages scale, predictions shift by a random
+            // positive factor (sometimes degenerate again).
+            for l in lats.iter_mut() {
+                *l = if rng.next_below(12) == 0 {
+                    f64::NAN
+                } else {
+                    l.abs().max(1e-6) * rng.uniform(0.25, 4.0)
+                };
+            }
+        }
+    }
+}
+
+#[test]
+fn split_budget_handles_empty_and_mismatched_inputs() {
+    assert!(split_budget(1.0, &[], 0, &[]).is_empty());
+    // More declared stages than latencies: truncated, never a panic.
+    let edges = [WorkflowEdge { from: 0, to: 1, payload_bytes: 1e5 }];
+    let b = split_budget(1.0, &[0.1], 5, &edges);
+    assert_eq!(b.len(), 1);
+    assert!(b[0].is_finite() && b[0] >= 0.0);
+}
