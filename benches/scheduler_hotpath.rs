@@ -451,6 +451,63 @@ fn main() {
         );
     }
 
+    // Trace-backend throughput: the TraceAzureSmall population (48 sampled
+    // functions, heavy-tail popularity, duty-cycled diurnal rates) through
+    // the active-set planner on a cold cluster — requests per wall-clock
+    // second at sampled-trace scale (budget in ci.yml).
+    {
+        use has_gpu::workload::TraceSource;
+        let seconds = if has_gpu::util::bench::fast_mode() { 60 } else { 180 };
+        let perf = PerfModel::default();
+        let src = TraceSource::for_preset(Preset::TraceAzureSmall, 11, seconds, 150.0)
+            .expect("trace preset");
+        let (fns, trace) = src.sample(&perf);
+        let requests: u64 = fns
+            .iter()
+            .map(|f| trace.total_requests(&f.name) as u64)
+            .sum();
+        h.bench_elems("sim_request_rate", Some(requests), || {
+            let mut policy = HybridAutoscaler::new(HybridConfig::default());
+            let pred = OraclePredictor::default();
+            let mut cfg = SimConfig::for_experiment(10, 11, BillingMode::FineGrained);
+            cfg.warm_start = false;
+            cfg.idle_sweep = 8;
+            let r = run_sim(&mut policy, &fns, &trace, &pred, &perf, &cfg);
+            black_box(r.total_served());
+        });
+    }
+
+    // Population-scale planner tick: the 100k-function TraceAzureScale cell.
+    // A full scan would plan 100 000 functions every tick; the active-set
+    // loop touches only the handful with arrivals, queue, or pods, so the
+    // per-tick cost is what this entry pins (budget in ci.yml). The horizon
+    // is deliberately short — the entry measures the planner loop and the
+    // sharded metrics plane, not a long serving run.
+    {
+        use has_gpu::workload::TraceSource;
+        let seconds = if has_gpu::util::bench::fast_mode() { 5 } else { 15 };
+        let perf = PerfModel::default();
+        let src = TraceSource::for_preset(Preset::TraceAzureScale, 11, seconds, 200.0)
+            .expect("trace preset");
+        let (fns, trace) = src.sample(&perf);
+        let mut touched = 0usize;
+        h.bench_elems("trace_tick_100k_fns", Some(seconds as u64), || {
+            let mut policy = HybridAutoscaler::new(HybridConfig::default());
+            let pred = OraclePredictor::default();
+            let mut cfg = SimConfig::for_experiment(10, 11, BillingMode::FineGrained);
+            cfg.warm_start = false;
+            cfg.idle_sweep = 8;
+            cfg.drain = 10.0;
+            let r = run_sim(&mut policy, &fns, &trace, &pred, &perf, &cfg);
+            touched = r.total_served() + r.total_dropped();
+            black_box(touched);
+        });
+        println!(
+            "trace_tick_100k_fns: {} functions in population, {touched} requests touched",
+            fns.len()
+        );
+    }
+
     // Workflow routing tick: open an origin at the entry stage, route the
     // detector completion across its hop, join at the classifier, and close
     // the origin — the full per-request router cost of the 2-stage vision

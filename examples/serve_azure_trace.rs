@@ -133,17 +133,29 @@ fn main() -> anyhow::Result<()> {
     let mut pending = Vec::new();
     let mut sent = 0u64;
     for sec in 0..seconds {
-        for f in &functions {
-            let dim = input_dims.iter().find(|(n, _)| *n == f.name).unwrap().1;
+        // Draw each function's arrivals for this second (function-major, so
+        // the RNG consumption order — and thus the trace — is unchanged),
+        // then merge into one time-sorted stream. Replaying function-by-
+        // function submitted cross-function timestamps out of order: an
+        // earlier arrival of a later-iterated function was paced against a
+        // clock that had already passed it.
+        let mut batch: Vec<(f64, usize)> = Vec::new();
+        for (fi, f) in functions.iter().enumerate() {
             for at in trace.arrivals(&f.name, sec, &mut rng) {
-                // Busy-wait-free pacing.
-                let target = Duration::from_secs_f64(at);
-                if let Some(sleep) = target.checked_sub(t0.elapsed()) {
-                    std::thread::sleep(sleep);
-                }
-                pending.push(server.submit(&f.name, vec![0.3f32; dim])?);
-                sent += 1;
+                batch.push((at, fi));
             }
+        }
+        batch.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for (at, fi) in batch {
+            let f = &functions[fi];
+            let dim = input_dims.iter().find(|(n, _)| *n == f.name).unwrap().1;
+            // Busy-wait-free pacing.
+            let target = Duration::from_secs_f64(at);
+            if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            pending.push(server.submit(&f.name, vec![0.3f32; dim])?);
+            sent += 1;
         }
         pending.retain(|rx| rx.try_recv().is_err());
         if sec % 10 == 9 {

@@ -20,7 +20,7 @@
 use crate::cluster::{ClusterState, FunctionSpec, Pod, PodPhase, PodState, ScalingAction};
 use crate::rapp::{min_feasible_quota, LatencyPredictor, PredictQuery};
 use crate::vgpu::{GpuClass, QuotaMille, SmMille, QUOTA_FULL, QUOTA_STEP, SM_FULL, SM_STEP};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Scalar Kalman filter for short-term RPS estimation (paper §3.3 equations,
 /// with A = H = 1: a random-walk workload model).
@@ -128,6 +128,33 @@ pub trait ScalingPolicy: Send {
         }
         out
     }
+
+    /// Whether this policy needs its periodic [`ScalingPolicy::plan`] call
+    /// for `f` even when the function is **fully idle** — no pods, no queued
+    /// requests, no arrivals since the last plan. The active-set planner
+    /// loop in `run_sim` only skips a function's plan tick when this returns
+    /// `false`; skipped ticks are later replayed through
+    /// [`ScalingPolicy::note_skipped_idle_ticks`].
+    ///
+    /// Default `true`: a policy that mutates per-tick state on every call
+    /// (EWMAs, idle clocks) or that creates capacity at zero demand
+    /// (min-replica platforms) must never be skipped. Only policies whose
+    /// idle plan is a provable no-op should override — see
+    /// [`HybridAutoscaler`].
+    fn wants_idle_plan(&self, _f: &FunctionSpec, _now: f64) -> bool {
+        true
+    }
+
+    /// Replay `missed` skipped idle plan ticks for `f` before its next real
+    /// plan. The caller guarantees every skipped tick observed a rate of
+    /// exactly `0.0` (no arrivals, empty queue throughout) — so a policy
+    /// can reproduce, bit for bit, the rate-tracking state it would have
+    /// reached had it been called each tick. (Under a lazy idle sweep the
+    /// function may have held pods during swept ticks; only the *observed
+    /// rate* of the skipped calls is guaranteed, which is all the replay
+    /// reconstructs.)
+    /// Default: nothing to replay.
+    fn note_skipped_idle_ticks(&mut self, _f: &FunctionSpec, _missed: u64) {}
 }
 
 /// Which scaling axes Algorithm 1 may exercise. `Both` is the paper's
@@ -158,8 +185,9 @@ impl ScalingAxes {
     }
 }
 
-/// Tunables of Algorithm 1.
-#[derive(Clone, Debug)]
+/// Tunables of Algorithm 1. `Copy` on purpose: `plan` snapshots the config
+/// by value each call instead of cloning through an allocation.
+#[derive(Clone, Copy, Debug)]
 pub struct HybridConfig {
     /// Scale-up trigger threshold α (fraction of capacity considered "full").
     pub alpha: f64,
@@ -227,14 +255,26 @@ pub struct HybridAutoscaler {
     /// Platform name this instance serves under ("has-gpu" for the stock
     /// policy; ablation platforms set their registry name via [`Self::named`]).
     name: String,
-    filters: BTreeMap<String, KalmanFilter>,
-    last_scale_down: BTreeMap<String, f64>,
+    /// Function-name interning: each function seen by `plan` gets a dense
+    /// id on first sight, and the per-function hot state below is indexed
+    /// by it. The name `String` is cloned once per function *lifetime*
+    /// (at interning), never per tick — at 100k functions the old
+    /// `BTreeMap<String, _>` entry-per-tick pattern was allocation churn.
+    ids: HashMap<String, u32>,
+    /// Kalman filter per interned function id.
+    filters: Vec<KalmanFilter>,
+    /// Last scale-down instant per interned id ([`NEVER_SCALED`] sentinel).
+    last_scale_down: Vec<f64>,
     /// Reusable quota-lattice sweep buffers (quotas, latencies) — the
     /// candidate sweeps evaluate a whole lattice level per predictor pass
     /// without allocating per tick.
     q_buf: Vec<f64>,
     lat_buf: Vec<f64>,
 }
+
+/// `last_scale_down` sentinel for "never": far enough in the past that any
+/// cooldown window has always expired (the historical `unwrap_or(-1e18)`).
+const NEVER_SCALED: f64 = -1e18;
 
 impl HybridAutoscaler {
     pub fn new(cfg: HybridConfig) -> Self {
@@ -247,11 +287,26 @@ impl HybridAutoscaler {
         HybridAutoscaler {
             cfg,
             name: name.into(),
-            filters: BTreeMap::new(),
-            last_scale_down: BTreeMap::new(),
+            ids: HashMap::new(),
+            filters: Vec::new(),
+            last_scale_down: Vec::new(),
             q_buf: Vec::new(),
             lat_buf: Vec::new(),
         }
+    }
+
+    /// Dense id for `name`, interning it (and allocating its filter slot)
+    /// on first sight.
+    fn fn_id(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.ids.get(name) {
+            return i as usize;
+        }
+        let i = self.filters.len();
+        self.ids.insert(name.to_string(), i as u32);
+        self.filters
+            .push(KalmanFilter::new(self.cfg.kalman.0, self.cfg.kalman.1));
+        self.last_scale_down.push(NEVER_SCALED);
+        i
     }
 
     /// Evaluate the whole quota lattice `{step, 2·step, …}` for one
@@ -413,13 +468,13 @@ impl ScalingPolicy for HybridAutoscaler {
         predictor: &dyn LatencyPredictor,
         now: f64,
     ) -> Vec<ScalingAction> {
-        let cfg = self.cfg.clone();
-        // Kalman-filtered workload estimate (line 0: predicted RPS R).
-        let r = self
-            .filters
-            .entry(f.name.clone())
-            .or_insert_with(|| KalmanFilter::new(cfg.kalman.0, cfg.kalman.1))
-            .update(observed_rps);
+        // Copy, not clone: the config is plain-old-data and `plan` runs once
+        // per function per tick.
+        let cfg = self.cfg;
+        // Kalman-filtered workload estimate (line 0: predicted RPS R),
+        // indexed through the interned id — no String clone on the hot path.
+        let id = self.fn_id(&f.name);
+        let r = self.filters[id].update(observed_rps);
 
         let mut actions = Vec::new();
         // Non-draining *device-resident* pods participate in capacity
@@ -475,16 +530,21 @@ impl ScalingPolicy for HybridAutoscaler {
         // cost a tiny probe, not a predictor query per device.
         let mem_need = f.graph.memory_bytes(f.batch);
         let slo_bound = f.slo * cfg.slo_margin;
-        let mut feas_cache: Vec<(String, bool)> = Vec::new();
+        // Feasibility depends only on the class's memory capacity and
+        // throughput factor, so the memo keys on those two values directly
+        // (bit patterns — classes are finitely many fixed constants), not on
+        // a cloned class-name String per probe.
+        let mut feas_cache: Vec<((u64, u64), bool)> = Vec::new();
         let mut class_ok = |c: &GpuClass| {
-            if let Some((_, ok)) = feas_cache.iter().find(|(n, _)| n == &c.name) {
-                return *ok;
+            let key = (c.mem_cap.to_bits(), c.throughput.to_bits());
+            if let Some(&(_, ok)) = feas_cache.iter().find(|(k, _)| *k == key) {
+                return ok;
             }
             let ok = mem_need <= c.mem_cap
                 && predictor
                     .latency(PredictQuery::new(&f.graph, f.batch, 1.0, 1.0).with_factor(c.throughput))
                     <= slo_bound;
-            feas_cache.push((c.name.clone(), ok));
+            feas_cache.push((key, ok));
             ok
         };
 
@@ -627,7 +687,7 @@ impl ScalingPolicy for HybridAutoscaler {
         }
 
         // ---- Scaling down (lines 20-26) --------------------------------
-        let last_down = self.last_scale_down.get(&f.name).copied().unwrap_or(-1e18);
+        let last_down = self.last_scale_down[id];
         if r < c_f * cfg.beta && now - last_down >= cfg.cooldown && !pods.is_empty() {
             // Keep enough capacity that r stays below the scale-up trigger:
             // target C such that r ≈ C·(α+β)/2 (centred in the hysteresis band).
@@ -708,10 +768,33 @@ impl ScalingPolicy for HybridAutoscaler {
                 }
             }
             if !actions.is_empty() {
-                self.last_scale_down.insert(f.name.clone(), now);
+                self.last_scale_down[id] = now;
             }
         }
         actions
+    }
+
+    /// HAS-GPU is quiescent for a fully idle function iff its filter state
+    /// is exactly zero (or the function was never planned): every skipped
+    /// plan would observe `0.0`, keep `x ≡ 0.0`, find no pods to reap or
+    /// shrink, and emit no action — a provable no-op whose only effect (the
+    /// filter covariance walk) [`Self::note_skipped_idle_ticks`] replays
+    /// bit-for-bit. A positive estimate means the next plan could still
+    /// bootstrap a pod, so the function must keep its tick.
+    fn wants_idle_plan(&self, f: &FunctionSpec, _now: f64) -> bool {
+        match self.ids.get(f.name.as_str()) {
+            Some(&id) => self.filters[id as usize].estimate() != 0.0,
+            None => false,
+        }
+    }
+
+    /// Sequential zero-rate updates — not a closed form — so the covariance
+    /// path is bit-identical to having been called every tick.
+    fn note_skipped_idle_ticks(&mut self, f: &FunctionSpec, missed: u64) {
+        let id = self.fn_id(&f.name);
+        for _ in 0..missed {
+            self.filters[id].update(0.0);
+        }
     }
 
     /// HAS-GPU's workflow co-scaling pass.
@@ -862,6 +945,44 @@ mod tests {
             errs_kf += (est - 40.0f64).abs();
         }
         assert!(errs_kf < errs_raw * 0.6, "kf {errs_kf} raw {errs_raw}");
+    }
+
+    #[test]
+    fn skipped_idle_ticks_replay_identically() {
+        // The active-set planner contract: planning a quiescent function
+        // every tick with observed 0.0 must leave the policy in bit-identical
+        // state to skipping those ticks and replaying them through
+        // note_skipped_idle_ticks.
+        let (c, _recon, _pm, spec) = setup(); // no pods placed
+        let pred = OraclePredictor::default();
+
+        let mut full = HybridAutoscaler::new(HybridConfig::default());
+        for t in 1..=7 {
+            let a = full.plan(&spec, 0.0, &c, &pred, t as f64);
+            assert!(a.is_empty(), "idle plan must be a no-op, got {a:?}");
+            assert!(
+                !full.wants_idle_plan(&spec, t as f64),
+                "zero-estimate function stays quiescent"
+            );
+        }
+        let a = full.plan(&spec, 20.0, &c, &pred, 8.0);
+
+        let mut lazy = HybridAutoscaler::new(HybridConfig::default());
+        assert!(
+            !lazy.wants_idle_plan(&spec, 0.0),
+            "never-planned function is quiescent"
+        );
+        lazy.note_skipped_idle_ticks(&spec, 7);
+        let b = lazy.plan(&spec, 20.0, &c, &pred, 8.0);
+
+        assert_eq!(a, b, "reactivation actions diverge");
+        assert!(!a.is_empty(), "traffic resumption must bootstrap a pod");
+        let (kf_full, kf_lazy) = (&full.filters[0], &lazy.filters[0]);
+        assert_eq!(kf_full.estimate().to_bits(), kf_lazy.estimate().to_bits());
+        assert_eq!(kf_full.gain().to_bits(), kf_lazy.gain().to_bits());
+        // A positive estimate ends quiescence on both paths.
+        assert!(full.wants_idle_plan(&spec, 9.0));
+        assert!(lazy.wants_idle_plan(&spec, 9.0));
     }
 
     #[test]

@@ -150,6 +150,11 @@ pub struct ClusterState {
     gpus: Vec<VGpu>,
     pods: BTreeMap<PodId, Pod>,
     functions: BTreeMap<String, FunctionSpec>,
+    /// function → pod ids, kept sorted ascending — the same order the old
+    /// full-map scan produced — so `pods_of` is O(own pods) instead of
+    /// O(all pods). Maintained by the sole mutation points
+    /// [`ClusterState::insert_pod`] / [`ClusterState::remove_pod`].
+    by_fn: BTreeMap<String, Vec<PodId>>,
     next_pod: u64,
     pub coldstart: ColdStartSpec,
     /// Failed-device mask (fault injection): `down[i]` excludes GPU `i`
@@ -168,6 +173,7 @@ impl ClusterState {
                 .collect(),
             pods: BTreeMap::new(),
             functions: BTreeMap::new(),
+            by_fn: BTreeMap::new(),
             next_pod: 1,
             coldstart: ColdStartSpec::default(),
             down: vec![false; n_gpus],
@@ -188,6 +194,7 @@ impl ClusterState {
                 .collect(),
             pods: BTreeMap::new(),
             functions: BTreeMap::new(),
+            by_fn: BTreeMap::new(),
             next_pod: 1,
             coldstart: ColdStartSpec::default(),
             down: vec![false; classes.len()],
@@ -266,12 +273,19 @@ impl ClusterState {
         Ok(())
     }
 
-    /// Pods of one function (any phase).
+    /// Pods of one function (any phase), ascending pod id — exactly the
+    /// order the historical full-map scan returned.
     pub fn pods_of(&self, function: &str) -> Vec<&Pod> {
-        self.pods
-            .values()
-            .filter(|p| p.function == function)
-            .collect()
+        self.by_fn
+            .get(function)
+            .map(|ids| ids.iter().map(|id| &self.pods[id]).collect())
+            .unwrap_or_default()
+    }
+
+    /// Whether the function currently owns any pod — O(log functions), no
+    /// allocation (the active-set planner's residency probe).
+    pub fn has_pods(&self, function: &str) -> bool {
+        self.by_fn.get(function).is_some_and(|v| !v.is_empty())
     }
 
     /// Pod ids resident on one GPU, in id order (fault eviction sweeps).
@@ -392,11 +406,25 @@ impl ClusterState {
     }
 
     pub(crate) fn insert_pod(&mut self, pod: Pod) {
+        let ids = self.by_fn.entry(pod.function.clone()).or_default();
+        let pos = ids.partition_point(|&id| id < pod.id);
+        if ids.get(pos) != Some(&pod.id) {
+            ids.insert(pos, pod.id);
+        }
         self.pods.insert(pod.id, pod);
     }
 
     pub(crate) fn remove_pod(&mut self, id: PodId) -> Option<Pod> {
-        self.pods.remove(&id)
+        let p = self.pods.remove(&id);
+        if let Some(pod) = &p {
+            if let Some(ids) = self.by_fn.get_mut(&pod.function) {
+                ids.retain(|&x| x != id);
+                if ids.is_empty() {
+                    self.by_fn.remove(&pod.function);
+                }
+            }
+        }
+        p
     }
 
     /// Global invariant check for property tests: every pod's placement is
@@ -427,6 +455,34 @@ impl ClusterState {
                     return Err(format!("orphan client {c:?} on {}", g.uuid));
                 }
             }
+        }
+        // The per-function pod index mirrors the pod map exactly.
+        let mut indexed = 0usize;
+        for (f, ids) in &self.by_fn {
+            if ids.is_empty() {
+                return Err(format!("empty by_fn bucket for {f}"));
+            }
+            for w in ids.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("by_fn bucket for {f} not sorted: {ids:?}"));
+                }
+            }
+            for id in ids {
+                let p = self
+                    .pods
+                    .get(id)
+                    .ok_or_else(|| format!("by_fn {f} lists missing pod {id:?}"))?;
+                if p.function != *f {
+                    return Err(format!("pod {id:?} indexed under {f} but owned by {}", p.function));
+                }
+                indexed += 1;
+            }
+        }
+        if indexed != self.pods.len() {
+            return Err(format!(
+                "by_fn indexes {indexed} pods but map holds {}",
+                self.pods.len()
+            ));
         }
         Ok(())
     }

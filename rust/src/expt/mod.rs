@@ -253,19 +253,33 @@ impl ScenarioMatrix {
         // function set becomes the workflow's stage functions (per-stage
         // SLOs from the e2e budget split), traffic enters only at the
         // entry stage, and the sim routes completions stage-to-stage.
-        // Every other preset keeps the stock zoo set and an empty workflow
-        // config, so pre-existing cells keep their exact bytes.
+        // The trace presets swap the synthetic zoo grid for a sampled
+        // Azure-style population (heavy-tail popularity, mostly-idle
+        // functions): the cluster starts cold and the active-set planner
+        // runs with a lazy idle sweep — the knobs that make the 100k-
+        // function cell feasible. Every other preset keeps the stock zoo
+        // set and an empty workflow config, so pre-existing cells keep
+        // their exact bytes.
         let workflow = pipeline_workflow(cell.preset);
-        let fns = match &workflow {
-            Some(wf) => wf.stage_functions(&perf),
-            None => experiment_functions(),
+        let (fns, trace) = if let Some(src) =
+            crate::workload::TraceSource::for_preset(cell.preset, cell.seed, self.seconds, self.rps)
+        {
+            sim_cfg.warm_start = false;
+            sim_cfg.idle_sweep = 8;
+            src.sample(&perf)
+        } else {
+            let fns = match &workflow {
+                Some(wf) => wf.stage_functions(&perf),
+                None => experiment_functions(),
+            };
+            let names: Vec<&str> = match &workflow {
+                Some(wf) => vec![fns[wf.entry()].name.as_str()],
+                None => fns.iter().map(|f| f.name.as_str()).collect(),
+            };
+            let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
+                .generate(&names);
+            (fns, trace)
         };
-        let names: Vec<&str> = match &workflow {
-            Some(wf) => vec![fns[wf.entry()].name.as_str()],
-            None => fns.iter().map(|f| f.name.as_str()).collect(),
-        };
-        let trace = TraceGen::preset(cell.preset, cell.seed, self.seconds, self.rps)
-            .generate(&names);
         if let Some(wf) = &workflow {
             sim_cfg.workflows = vec![wf.clone()];
         }
@@ -634,8 +648,13 @@ impl CellResult {
         let served = report.total_served();
         let slo_violation_rate =
             report.slo_violation_rate(fns.iter().map(|f| (f.name.as_str(), f.slo)));
+        // Trace-preset cells carry only *touched* functions (the sampled
+        // population is overwhelmingly idle; 100k all-zero rows would
+        // swamp the export). Every other preset keeps one row per
+        // function, zeros included — the historical shape, to the byte.
         let functions = fns
             .iter()
+            .filter(|f| !cell.preset.is_trace() || report.functions.contains_key(&f.name))
             .map(|f| {
                 let (srv, drp, p50, p99, violation_rate) = match report.functions.get(&f.name) {
                     Some(m) => {

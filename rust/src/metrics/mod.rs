@@ -62,6 +62,14 @@ impl FunctionMetrics {
         self.ttft.push(wait);
     }
 
+    /// True when nothing was ever recorded. The simulator's sharded
+    /// per-function logs use this to merge only touched functions into
+    /// [`RunReport::functions`], matching the lazy-entry shape that
+    /// [`RunReport::function`] always produced.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty() && self.ttft.is_empty()
+    }
+
     /// Summary over the TTFT samples.
     pub fn ttft_summary(&self) -> Summary {
         let mut s = Summary::new();

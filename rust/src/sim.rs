@@ -23,14 +23,33 @@ use crate::cluster::{
     Applied, ApplyError, ClusterState, FunctionSpec, GpuId, PodId, PodPhase, Reconfigurator,
     ScalingAction,
 };
-use crate::metrics::{BillingLedger, BillingMode, Outcome, RunReport};
+use crate::metrics::{BillingLedger, BillingMode, FunctionMetrics, Outcome, RunReport};
 use crate::perf::PerfModel;
 use crate::rapp::{CachedPredictor, LatencyPredictor, OraclePredictor};
 use crate::simclock::EventQueue;
 use crate::util::prng::Pcg64;
 use crate::vgpu::GpuClass;
 use crate::workload::Trace;
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+
+/// Planner loop strategy for [`run_sim`]'s tick handler (see DESIGN.md
+/// "Trace-scale workloads").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// O(active) per tick: a function is planned only while it is *active*
+    /// — it had arrivals or queued work since its last plan, holds pods, or
+    /// its policy asks for idle plans ([`ScalingPolicy::wants_idle_plan`]).
+    /// Plan ticks skipped while fully quiescent are replayed through
+    /// [`ScalingPolicy::note_skipped_idle_ticks`] at reactivation, so with
+    /// `idle_sweep == 1` decisions are **byte-identical** to [`FullScan`]
+    /// (pinned by `active_set_planner_matches_full_scan_bit_for_bit` and
+    /// the CI stock-cell cmp).
+    #[default]
+    ActiveSet,
+    /// The historical every-function-every-tick scan — the identity
+    /// baseline the byte-identity tests compare against.
+    FullScan,
+}
 
 /// Simulation tunables.
 #[derive(Clone, Debug)]
@@ -75,6 +94,16 @@ pub struct SimConfig {
     /// list. Empty (the default) builds no routers, schedules no hop
     /// events, and keeps the run byte-identical to a pre-workflow build.
     pub workflows: Vec<crate::workflow::Workflow>,
+    /// Planner loop strategy. The default [`PlannerMode::ActiveSet`] is
+    /// byte-identical to the historical full scan at `idle_sweep == 1`.
+    pub planner: PlannerMode,
+    /// Lazy idle-sweep stride: an *idle* function (no arrivals, empty
+    /// queue this tick) is planned only on ticks where
+    /// `tick % idle_sweep == f_idx % idle_sweep`. `1` (default) plans idle
+    /// functions every tick — exact. `> 1` staggers idle replans (scale-down
+    /// may lag by up to `idle_sweep − 1` ticks — a documented approximation
+    /// the 100k-function trace cells opt into).
+    pub idle_sweep: u64,
 }
 
 impl Default for SimConfig {
@@ -93,6 +122,8 @@ impl Default for SimConfig {
             lifecycle: false,
             faults: FaultSpec::default(),
             workflows: Vec::new(),
+            planner: PlannerMode::default(),
+            idle_sweep: 1,
         }
     }
 }
@@ -390,6 +421,46 @@ pub fn run_sim(
         }
     }
 
+    // Dense name → index map: the PodReady and pod-kill paths resolve a
+    // pod's function in O(1) instead of an O(functions) scan.
+    let fn_ix: HashMap<&str, usize> = functions
+        .iter()
+        .enumerate()
+        .map(|(i, f)| (f.name.as_str(), i))
+        .collect();
+
+    // Active-set planner state (see [`PlannerMode`]). A function index is
+    // in `active` while it holds pods, had arrivals/queue since its last
+    // plan, or its policy still asks for idle plans. BTreeSet iteration is
+    // ascending, so the due list is always a subset of the full scan *in
+    // the full scan's order* — the identity argument then only needs
+    // "skipped plans are no-ops" (guaranteed by `wants_idle_plan` +
+    // `note_skipped_idle_ticks` replay).
+    let mut active: BTreeSet<usize> = BTreeSet::new();
+    for (f_idx, f) in functions.iter().enumerate() {
+        if wfs.of_fn[f_idx].is_some() {
+            continue; // workflow stages are co-planned every tick
+        }
+        if cluster.has_pods(&f.name) || policy.wants_idle_plan(f, 0.0) {
+            active.insert(f_idx);
+        }
+    }
+    // Last tick each function was planned at (tick *counter*, not sim
+    // time), so reactivation knows exactly how many idle plan ticks were
+    // skipped and can replay them.
+    let mut planned_upto: Vec<u64> = vec![0; functions.len()];
+    let mut tick_index: u64 = 0;
+    // Reused due-list buffer for the tick handler.
+    let mut due: Vec<usize> = Vec::new();
+
+    // Sharded per-function request logs: a dense Vec indexed by f_idx on
+    // the hot paths (no name hashing, no map walk per record); merged into
+    // the report's name-keyed map once, after the event loop. Only
+    // functions that recorded anything get an entry — preserving the
+    // lazy-entry export shape `report.function()` always produced.
+    let mut fn_metrics: Vec<FunctionMetrics> =
+        functions.iter().map(|_| FunctionMetrics::default()).collect();
+
     // Per-function FIFO queues + per-pod busy state.
     let mut queues: Vec<VecDeque<Request>> = functions.iter().map(|_| VecDeque::new()).collect();
     let mut busy: BTreeSet<PodId> = BTreeSet::new();
@@ -422,6 +493,9 @@ pub fn run_sim(
                     q.push_at(tn, Ev::Arrival { f_idx });
                 }
                 arrivals_this_tick[f_idx] += 1;
+                if wfs.of_fn[f_idx].is_none() {
+                    active.insert(f_idx); // traffic reactivates the planner
+                }
                 // A trace arrival at a workflow's entry stage opens a
                 // pipeline origin: the e2e clock starts here and is charged
                 // exactly once, however many hops follow.
@@ -436,15 +510,13 @@ pub fn run_sim(
                     // Overflow drop at arrival: time-in-queue is zero, but
                     // record it through the same now-arrival formula as every
                     // other drop path.
-                    report
-                        .function(&functions[f_idx].name)
-                        .record(arrival, now - arrival, Outcome::Dropped);
+                    fn_metrics[f_idx].record(arrival, now - arrival, Outcome::Dropped);
                     wfs.fail_request(&req, now, &mut report, Outcome::Dropped);
                 } else {
                     queues[f_idx].push_back(req);
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool, &mut wfs,
+                        cfg, &mut fn_metrics, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
@@ -453,10 +525,13 @@ pub fn run_sim(
                     if matches!(p.phase, PodPhase::ColdStarting { .. }) {
                         p.phase = PodPhase::Running;
                     }
-                    let f_idx = functions
-                        .iter()
-                        .position(|f| f.name == p.function)
-                        .expect("known function");
+                    let f_idx = *fn_ix.get(p.function.as_str()).expect("known function");
+                    // A pod turning ready keeps its function planned (it is
+                    // normally already active — it held this pod — but the
+                    // insert is cheap and makes the invariant local).
+                    if wfs.of_fn[f_idx].is_none() {
+                        active.insert(f_idx);
+                    }
                     // Recovery accounting: a replica turning ready restores
                     // capacity for the oldest outstanding loss of its
                     // function — the MTTR sample is loss → ready.
@@ -469,7 +544,7 @@ pub fn run_sim(
                     }
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool, &mut wfs,
+                        cfg, &mut fn_metrics, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
@@ -481,9 +556,7 @@ pub fn run_sim(
                     // arrival to the death, not to this (phantom)
                     // completion.
                     for r in &batch {
-                        report
-                            .function(&functions[f_idx].name)
-                            .record(r.arrival, kill_t - r.arrival, Outcome::Failed);
+                        fn_metrics[f_idx].record(r.arrival, kill_t - r.arrival, Outcome::Failed);
                         wfs.fail_request(r, kill_t, &mut report, Outcome::Failed);
                     }
                     batch.clear();
@@ -491,9 +564,7 @@ pub fn run_sim(
                     continue;
                 }
                 for r in &batch {
-                    report
-                        .function(&functions[f_idx].name)
-                        .record(r.arrival, now - r.arrival, Outcome::Ok);
+                    fn_metrics[f_idx].record(r.arrival, now - r.arrival, Outcome::Ok);
                 }
                 route_batch(&mut wfs, f_idx, now, &batch, &mut report, &mut q, &mut hops);
                 batch.clear();
@@ -515,7 +586,7 @@ pub fn run_sim(
                 } else {
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool, &mut wfs,
+                        cfg, &mut fn_metrics, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
@@ -530,23 +601,54 @@ pub fn run_sim(
                 arrivals_this_tick[f_idx] += 1;
                 let req = Request { arrival: now, wf: wf as u32, origin };
                 if queues[f_idx].len() >= cfg.max_queue {
-                    report
-                        .function(&functions[f_idx].name)
-                        .record(now, 0.0, Outcome::Dropped);
+                    fn_metrics[f_idx].record(now, 0.0, Outcome::Dropped);
                     wfs.fail_request(&req, now, &mut report, Outcome::Dropped);
                 } else {
                     queues[f_idx].push_back(req);
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool, &mut wfs,
+                        cfg, &mut fn_metrics, &mut report, &mut batch_pool, &mut wfs,
                     );
                 }
             }
             Ev::Tick => {
-                for (f_idx, f) in functions.iter().enumerate() {
+                tick_index += 1;
+                // Build the due list. FullScan: every function, every tick
+                // (the historical loop). ActiveSet: only the active subset
+                // — BTreeSet iteration is ascending index order, i.e. the
+                // full scan's order restricted to active functions.
+                due.clear();
+                match cfg.planner {
+                    PlannerMode::FullScan => due.extend(0..functions.len()),
+                    PlannerMode::ActiveSet => due.extend(active.iter().copied()),
+                }
+                for &f_idx in &due {
+                    let f = &functions[f_idx];
                     if wfs.of_fn[f_idx].is_some() {
                         continue; // workflow stages are co-planned below
                     }
+                    // Lazy idle sweep (idle_sweep > 1 only): a function
+                    // with no arrivals and an empty queue this tick replans
+                    // on a staggered cadence instead of every tick. Every
+                    // swept tick provably observed 0.0 rps, so the replay
+                    // below keeps filter state exact; only scale-*down*
+                    // lags, by at most idle_sweep − 1 ticks.
+                    if cfg.idle_sweep > 1
+                        && arrivals_this_tick[f_idx] == 0
+                        && queues[f_idx].is_empty()
+                        && tick_index % cfg.idle_sweep != f_idx as u64 % cfg.idle_sweep
+                    {
+                        continue;
+                    }
+                    // Replay plan ticks skipped while quiescent (each one
+                    // observed exactly 0.0 rps) so policy-internal state —
+                    // the Kalman covariance in particular — is bit-identical
+                    // to what the full scan would hold.
+                    let missed = tick_index - 1 - planned_upto[f_idx];
+                    if missed > 0 {
+                        policy.note_skipped_idle_ticks(f, missed);
+                    }
+                    planned_upto[f_idx] = tick_index;
                     let observed = arrivals_this_tick[f_idx] as f64 / cfg.tick
                         + queues[f_idx].len() as f64 / cfg.backlog_horizon;
                     arrivals_this_tick[f_idx] = 0;
@@ -558,8 +660,19 @@ pub fn run_sim(
                     // New capacity may unblock the queue.
                     try_dispatch(
                         f_idx, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                        cfg, &mut report, &mut batch_pool, &mut wfs,
+                        cfg, &mut fn_metrics, &mut report, &mut batch_pool, &mut wfs,
                     );
+                    // Deactivate fully quiescent functions (ActiveSet
+                    // only): nothing queued, no pods left, and the policy
+                    // no longer wants idle plans. Arrival / PodReady events
+                    // reactivate.
+                    if cfg.planner == PlannerMode::ActiveSet
+                        && queues[f_idx].is_empty()
+                        && !cluster.has_pods(&f.name)
+                        && !policy.wants_idle_plan(f, now)
+                    {
+                        active.remove(&f_idx);
+                    }
                 }
                 // Workflow stages: one co-scaling pass per workflow, all
                 // stages planned together. HybridAutoscaler propagates the
@@ -589,7 +702,7 @@ pub fn run_sim(
                     for &i in &fidx {
                         try_dispatch(
                             i, now, &mut queues, &mut busy, &cluster, &serve, functions, &mut q,
-                            cfg, &mut report, &mut batch_pool, &mut wfs,
+                            cfg, &mut fn_metrics, &mut report, &mut batch_pool, &mut wfs,
                         );
                     }
                 }
@@ -598,11 +711,9 @@ pub fn run_sim(
                 // Drain queues: anything still waiting is a drop, recorded
                 // with its real time-in-queue (not 0.0) so drop records are
                 // comparable across the three drop paths.
-                for (f_idx, f) in functions.iter().enumerate() {
+                for f_idx in 0..functions.len() {
                     while let Some(r) = queues[f_idx].pop_front() {
-                        report
-                            .function(&f.name)
-                            .record(r.arrival, now - r.arrival, Outcome::Dropped);
+                        fn_metrics[f_idx].record(r.arrival, now - r.arrival, Outcome::Dropped);
                         wfs.fail_request(&r, now, &mut report, Outcome::Dropped);
                     }
                 }
@@ -637,7 +748,7 @@ pub fn run_sim(
                     for pod in cluster.pods_on(gid) {
                         kill_pod(
                             pod, now, &mut cluster, &mut recon, &mut ledger, &mut report, &busy,
-                            &mut killed_at, &mut pending_remove, &mut lost, functions,
+                            &mut killed_at, &mut pending_remove, &mut lost, &fn_ix,
                         );
                     }
                 }
@@ -657,13 +768,21 @@ pub fn run_sim(
                     let v = victims[fplan.pick_victim(victims.len())];
                     kill_pod(
                         v, now, &mut cluster, &mut recon, &mut ledger, &mut report, &busy,
-                        &mut killed_at, &mut pending_remove, &mut lost, functions,
+                        &mut killed_at, &mut pending_remove, &mut lost, &fn_ix,
                     );
                 }
             }
         }
     }
     debug_assert!(cluster.check_invariants().is_ok());
+    // Merge the sharded per-function logs into the report's name-keyed
+    // map — one entry per *touched* function only, so exports (and their
+    // byte-identity contracts) are unchanged from the lazy-entry era.
+    for (f, m) in functions.iter().zip(fn_metrics) {
+        if !m.is_empty() {
+            report.functions.insert(f.name.clone(), m);
+        }
+    }
     report.reconfig_transients = fplan.transients();
     // Final settlement: bill every still-open pod account to end-of-run.
     report.costs = ledger.into_meter(report.duration);
@@ -687,7 +806,7 @@ fn kill_pod(
     killed_at: &mut BTreeMap<PodId, f64>,
     pending_remove: &mut BTreeSet<PodId>,
     lost: &mut [VecDeque<f64>],
-    functions: &[FunctionSpec],
+    fn_ix: &HashMap<&str, usize>,
 ) {
     let Some(p) = recon.evict_pod(cluster, pod) else {
         return;
@@ -698,7 +817,7 @@ fn kill_pod(
     if busy.contains(&pod) {
         killed_at.insert(pod, now);
     }
-    if let Some(f_idx) = functions.iter().position(|f| f.name == p.function) {
+    if let Some(&f_idx) = fn_ix.get(p.function.as_str()) {
         lost[f_idx].push_back(now);
     }
 }
@@ -794,6 +913,7 @@ fn try_dispatch(
     functions: &[FunctionSpec],
     q: &mut EventQueue<Ev>,
     cfg: &SimConfig,
+    fm: &mut [FunctionMetrics],
     report: &mut RunReport,
     batch_pool: &mut Vec<Vec<Request>>,
     wfs: &mut WfState,
@@ -822,9 +942,7 @@ fn try_dispatch(
         while let Some(r) = queues[f_idx].front() {
             if now - r.arrival > cfg.timeout {
                 let r = queues[f_idx].pop_front().unwrap();
-                report
-                    .function(&f.name)
-                    .record(r.arrival, now - r.arrival, Outcome::Dropped);
+                fm[f_idx].record(r.arrival, now - r.arrival, Outcome::Dropped);
                 wfs.fail_request(&r, now, report, Outcome::Dropped);
             } else {
                 break;
@@ -841,7 +959,7 @@ fn try_dispatch(
         // where cold starts and swap-ins show up. Recorded on every run;
         // exported only by lifecycle runs.
         for r in &batch {
-            report.function(&f.name).record_ttft(now - r.arrival);
+            fm[f_idx].record_ttft(now - r.arrival);
         }
         // Service time on the pod's own GPU class (factor 1.0 routes through
         // the reference surface verbatim).
@@ -1151,6 +1269,129 @@ mod tests {
             (ra.vertical_ups, ra.horizontal_ups, ra.horizontal_downs),
             (rb.vertical_ups, rb.horizontal_ups, rb.horizontal_downs)
         );
+    }
+
+    /// Run the same policy × trace under both planner modes and demand the
+    /// full JSON export (every record-derived number) plus the billing
+    /// total match to the last bit.
+    fn assert_planner_modes_identical(
+        mk_policy: &dyn Fn() -> Box<dyn ScalingPolicy>,
+        fns: &[FunctionSpec],
+        trace: &Trace,
+        base: &SimConfig,
+        what: &str,
+    ) {
+        let perf = PerfModel::default();
+        let pred = OraclePredictor::default();
+        let mut full_cfg = base.clone();
+        full_cfg.planner = PlannerMode::FullScan;
+        let mut act_cfg = base.clone();
+        act_cfg.planner = PlannerMode::ActiveSet;
+        let ra = run_sim(&mut *mk_policy(), fns, trace, &pred, &perf, &full_cfg);
+        let rb = run_sim(&mut *mk_policy(), fns, trace, &pred, &perf, &act_cfg);
+        assert_eq!(
+            ra.to_json().to_string_pretty(),
+            rb.to_json().to_string_pretty(),
+            "{what}: active-set export must be byte-identical to full scan"
+        );
+        assert_eq!(
+            ra.costs.total_cost().to_bits(),
+            rb.costs.total_cost().to_bits(),
+            "{what}: active-set cost must not perturb a single bit"
+        );
+    }
+
+    #[test]
+    fn active_set_planner_matches_full_scan_bit_for_bit() {
+        let fns = test_functions();
+        let trace = small_trace(&fns);
+        let policies: Vec<(&str, Box<dyn Fn() -> Box<dyn ScalingPolicy>>)> = vec![
+            ("has-gpu", Box::new(|| Box::new(HybridAutoscaler::new(HybridConfig::default())))),
+            ("kserve", Box::new(|| Box::<KServePolicy>::default())),
+            ("fastgshare", Box::new(|| Box::<FastGSharePolicy>::default())),
+        ];
+        for (name, mk) in &policies {
+            for warm in [true, false] {
+                let cfg = SimConfig {
+                    n_gpus: 8,
+                    warm_start: warm,
+                    ..SimConfig::default()
+                };
+                assert_planner_modes_identical(
+                    mk,
+                    &fns,
+                    &trace,
+                    &cfg,
+                    &format!("{name} warm={warm}"),
+                );
+            }
+        }
+        // The hard case: a cold cluster and a trace that is silent for its
+        // first 60 s. The hybrid policy is quiescent through those ticks,
+        // the active set is genuinely empty (real skips happen), and the
+        // Kalman catch-up replay must reconstruct the full scan's filter
+        // state exactly when traffic finally arrives.
+        let mut gap = Trace::default();
+        for f in &fns {
+            let mut s = vec![0.0; 60];
+            s.extend(vec![40.0; 60]);
+            gap.series.insert(f.name.clone(), s);
+        }
+        let cold = SimConfig {
+            n_gpus: 8,
+            warm_start: false,
+            ..SimConfig::default()
+        };
+        assert_planner_modes_identical(
+            &|| Box::new(HybridAutoscaler::new(HybridConfig::default())),
+            &fns,
+            &gap,
+            &cold,
+            "has-gpu silent-head cold start",
+        );
+    }
+
+    #[test]
+    fn sampled_trace_cell_runs_at_population_scale() {
+        use crate::workload::TraceSource;
+        // A 2 000-function sampled population (heavy-tail popularity, mostly
+        // idle) through the active-set planner with a lazy idle sweep: the
+        // run must complete quickly, serve traffic, and stay deterministic.
+        let perf = PerfModel::default();
+        let src = TraceSource {
+            seed: 11,
+            duration: 30,
+            total_rps: 60.0,
+            functions: 2000,
+            zipf_s: 1.2,
+            day_period: 15.0,
+            noise_sigma: 0.5,
+            duty_cycle: 0.25,
+        };
+        let (fns, trace) = src.sample(&perf);
+        assert_eq!(fns.len(), 2000);
+        let cfg = SimConfig {
+            n_gpus: 16,
+            warm_start: false,
+            idle_sweep: 8,
+            drain: 10.0,
+            ..SimConfig::default()
+        };
+        let pred = OraclePredictor::default();
+        let run_once = || {
+            let mut p = HybridAutoscaler::new(HybridConfig::default());
+            run_sim(&mut p, &fns, &trace, &pred, &perf, &cfg)
+        };
+        let ra = run_once();
+        let rb = run_once();
+        assert!(ra.total_served() > 100, "served {}", ra.total_served());
+        assert_eq!(ra.total_served(), rb.total_served());
+        assert_eq!(ra.total_dropped(), rb.total_dropped());
+        assert_eq!(ra.costs.total_cost().to_bits(), rb.costs.total_cost().to_bits());
+        // The sharded logs merge only touched functions: far fewer entries
+        // than the population, and every entry non-empty.
+        assert!(ra.functions.len() < fns.len());
+        assert!(ra.functions.values().all(|m| !m.is_empty()));
     }
 
     #[test]

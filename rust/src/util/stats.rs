@@ -62,8 +62,11 @@ impl Summary {
             return f64::NAN;
         }
         if !self.sorted {
-            self.values
-                .sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+            // IEEE total order: NaN sorts to a fixed place (above +inf)
+            // instead of panicking the whole report — the same fix the
+            // dispatch sort got (`partial_cmp().expect()` aborted on the
+            // first NaN sample).
+            self.values.sort_unstable_by(f64::total_cmp);
             self.sorted = true;
         }
         let n = self.values.len();
@@ -285,6 +288,28 @@ mod tests {
         }
         assert!((s.frac_above(6.5) - 0.3).abs() < 1e-9);
         assert_eq!(s.frac_above(100.0), 0.0);
+    }
+
+    #[test]
+    fn summary_percentile_survives_nan_sample() {
+        // Regression: the percentile sort used partial_cmp().expect("NaN
+        // latency"), so one NaN sample panicked every consumer of the
+        // report. total_cmp ranks +NaN above every number: finite
+        // percentiles still read the finite samples, and only the extreme
+        // upper tail ever sees the NaN.
+        let mut s = Summary::new();
+        for i in 1..=99 {
+            s.add(i as f64);
+        }
+        s.add(f64::NAN);
+        // 100 samples, NaN ranked last: the median interpolates 50 and 51.
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        // The NaN occupies the top rank; p100 reports it rather than lying.
+        assert!(s.percentile(100.0).is_nan());
+        // Interleaved adds after a query still re-sort without panicking.
+        s.add(0.5);
+        assert!(s.percentile(1.0).is_finite());
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! driver thins each second into Poisson arrival timestamps (open-loop, like
 //! k6's constant-arrival-rate executor).
 
+use crate::cluster::FunctionSpec;
+use crate::perf::PerfModel;
 use crate::util::json::Json;
 use crate::util::prng::Pcg64;
 use std::collections::BTreeMap;
@@ -40,6 +42,14 @@ pub enum Preset {
     /// Burstier mixed traffic feeding the `pipeline-mixed` branching DAG
     /// over mixed model sizes — the workflow co-scaling stress case.
     PipelineMixed,
+    /// Sampled Azure-style trace population at grid scale: a few dozen
+    /// functions with Zipf-skewed popularity sharing the aggregate rps
+    /// budget, most of them idle most of the time. Driven by
+    /// [`TraceSource`], not [`TraceGen`].
+    TraceAzureSmall,
+    /// The trace-scale cell: 100k sampled functions under a bounded
+    /// aggregate rps — the workload the O(active) planner loop exists for.
+    TraceAzureScale,
 }
 
 /// One row of [`PRESET_TABLE`]: the preset, its canonical CLI/export name,
@@ -55,7 +65,7 @@ pub struct PresetInfo {
 /// `Preset::from_name`, [`ALL_PRESETS`], and every CLI help/error surface
 /// derive from this single table, so a new preset cannot reach one surface
 /// and miss another.
-pub const PRESET_TABLE: [PresetInfo; 7] = [
+pub const PRESET_TABLE: [PresetInfo; 9] = [
     PresetInfo {
         preset: Preset::Standard,
         name: "standard",
@@ -91,11 +101,21 @@ pub const PRESET_TABLE: [PresetInfo; 7] = [
         name: "pipeline-mixed",
         about: "bursty traffic into the branching mixed-model workflow DAG",
     },
+    PresetInfo {
+        preset: Preset::TraceAzureSmall,
+        name: "trace-azure-small",
+        about: "sampled Azure-style population: Zipf popularity, mostly-idle functions",
+    },
+    PresetInfo {
+        preset: Preset::TraceAzureScale,
+        name: "trace-azure-scale",
+        about: "trace at fleet scale: 100k sampled functions, bounded aggregate rps",
+    },
 ];
 
 /// Every preset, in the canonical matrix order (derived column of
 /// [`PRESET_TABLE`]; `preset_table_is_the_single_source` pins agreement).
-pub const ALL_PRESETS: [Preset; 7] = [
+pub const ALL_PRESETS: [Preset; 9] = [
     Preset::Standard,
     Preset::Stress,
     Preset::Diurnal,
@@ -103,6 +123,8 @@ pub const ALL_PRESETS: [Preset; 7] = [
     Preset::ColdStartStorm,
     Preset::PipelineVision,
     Preset::PipelineMixed,
+    Preset::TraceAzureSmall,
+    Preset::TraceAzureScale,
 ];
 
 impl Preset {
@@ -130,6 +152,14 @@ impl Preset {
             .iter()
             .find(|i| i.name.eq_ignore_ascii_case(s.trim()))
             .map(|i| i.preset)
+    }
+
+    /// Whether this preset is driven by the sampled-population
+    /// [`TraceSource`] backend instead of [`TraceGen`] over the fixed
+    /// experiment zoo. Trace presets bring their own function population
+    /// and run cold (`warm_start = false`) with a lazy idle sweep.
+    pub fn is_trace(self) -> bool {
+        matches!(self, Preset::TraceAzureSmall | Preset::TraceAzureScale)
     }
 
     /// The canonical comma-joined name list for CLI help and unknown-name
@@ -336,6 +366,35 @@ impl TraceGen {
                 noise_sigma: 0.35,
                 duty_cycle: 0.65,
             },
+            // The trace presets are normally driven by [`TraceSource`]
+            // (sampled population); these TraceGen knobs exist so generic
+            // surfaces that iterate ALL_PRESETS through TraceGen (the
+            // trace-gen CLI, tests) still produce a sane Azure-flavoured
+            // series: short duty windows, heavy tails.
+            Preset::TraceAzureSmall => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 / 2.0,
+                burst_rate: 1.0 / 90.0,
+                burst_alpha: 1.5,
+                burst_cap: 8.0,
+                burst_len: (5, 25),
+                noise_sigma: 0.4,
+                duty_cycle: 0.35,
+            },
+            Preset::TraceAzureScale => TraceGen {
+                seed,
+                duration,
+                base_rps,
+                day_period: duration as f64 / 2.0,
+                burst_rate: 1.0 / 120.0,
+                burst_alpha: 1.4,
+                burst_cap: 10.0,
+                burst_len: (5, 20),
+                noise_sigma: 0.5,
+                duty_cycle: 0.25,
+            },
         }
     }
 
@@ -393,6 +452,179 @@ impl TraceGen {
             trace.series.insert(f.to_string(), series);
         }
         trace
+    }
+}
+
+/// Sampled Azure-style trace population — the first-class trace workload
+/// backend behind the `trace-azure-*` presets.
+///
+/// Where [`TraceGen`] synthesises one series per *named* function of the
+/// fixed experiment zoo, `TraceSource` samples a whole **population**:
+/// `functions` serverless functions whose mean rates follow a Zipf
+/// popularity law (rank-`r` functions get `∝ 1/(r+1)^zipf_s` of the
+/// aggregate `total_rps`), with RNG-shuffled rank assignment, per-function
+/// diurnal phase, duty-cycled idle windows, and multiplicative noise.
+///
+/// Determinism contract: every function's series comes from its **own**
+/// seeded RNG stream (`seed`, stream `FN_STREAM_BASE + i`), and the
+/// popularity shuffle from its own dedicated stream — so the sampled trace
+/// is identical regardless of sampling order, `--jobs` parallelism, or
+/// which subset of functions a caller materialises.
+#[derive(Clone, Debug)]
+pub struct TraceSource {
+    pub seed: u64,
+    /// Trace length in seconds.
+    pub duration: usize,
+    /// Aggregate mean request rate across the whole population (rps) — the
+    /// rps scaling knob: mean per-function rates are normalised to sum here.
+    pub total_rps: f64,
+    /// Population size — the function-count scaling knob.
+    pub functions: usize,
+    /// Zipf exponent for function popularity (larger ⇒ heavier head).
+    pub zipf_s: f64,
+    /// Compressed "day" period in seconds.
+    pub day_period: f64,
+    /// Multiplicative lognormal noise sigma.
+    pub noise_sigma: f64,
+    /// Fraction of the day each function receives traffic (Azure functions
+    /// are idle most of the time — this is what the active-set planner and
+    /// the lazy idle sweep exploit).
+    pub duty_cycle: f64,
+}
+
+impl TraceSource {
+    /// Per-function series streams live far above [`TraceGen`]'s
+    /// `100 + fi` block so the two backends never collide on a seed.
+    const FN_STREAM_BASE: u64 = 1_000_000;
+    /// Stream for the popularity-rank shuffle.
+    const RANK_STREAM: u64 = 999_983;
+
+    /// The `TraceSource` behind a trace preset, or `None` for presets driven
+    /// by [`TraceGen`]. `rps` is the aggregate population rps.
+    pub fn for_preset(preset: Preset, seed: u64, duration: usize, rps: f64) -> Option<Self> {
+        match preset {
+            Preset::TraceAzureSmall => Some(TraceSource {
+                seed,
+                duration,
+                total_rps: rps,
+                functions: 48,
+                zipf_s: 1.1,
+                day_period: duration as f64 / 2.0,
+                noise_sigma: 0.4,
+                duty_cycle: 0.35,
+            }),
+            Preset::TraceAzureScale => Some(TraceSource {
+                seed,
+                duration,
+                total_rps: rps,
+                functions: 100_000,
+                zipf_s: 1.2,
+                day_period: duration as f64 / 2.0,
+                noise_sigma: 0.5,
+                duty_cycle: 0.25,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Canonical name of sampled function `i`.
+    pub fn function_name(i: usize) -> String {
+        format!("azfn-{i:06}")
+    }
+
+    /// Mean rps per function: Zipf weights over RNG-shuffled ranks,
+    /// normalised so they sum to `total_rps`. Deterministic in `seed` alone.
+    pub fn mean_rates(&self) -> Vec<f64> {
+        let n = self.functions;
+        let mut rank: Vec<u32> = (0..n as u32).collect();
+        // Fisher–Yates off a dedicated stream: which function is popular is
+        // random, but the popularity *distribution* is exactly Zipf.
+        let mut rng = Pcg64::new(self.seed, Self::RANK_STREAM);
+        for i in (1..n).rev() {
+            let j = rng.next_below(i as u64 + 1) as usize;
+            rank.swap(i, j);
+        }
+        let mut w: Vec<f64> = rank
+            .iter()
+            .map(|&r| 1.0 / (r as f64 + 1.0).powf(self.zipf_s))
+            .collect();
+        let sum: f64 = w.iter().sum();
+        for x in &mut w {
+            *x *= self.total_rps / sum;
+        }
+        w
+    }
+
+    /// Rate series for function `i` with mean `mean_rps`: diurnal base with
+    /// a random phase, duty-cycled idle windows, lognormal noise. Each
+    /// function draws from its own stream, so sampling order is irrelevant.
+    pub fn series(&self, i: usize, mean_rps: f64) -> Vec<f64> {
+        use std::f64::consts::TAU;
+        let mut rng = Pcg64::new(self.seed, Self::FN_STREAM_BASE + i as u64);
+        let phase = rng.next_f64() * TAU;
+        let mut out = vec![0.0f64; self.duration];
+        for (t, slot) in out.iter_mut().enumerate() {
+            let day_pos = (t as f64 / self.day_period + phase / TAU).fract();
+            if day_pos >= self.duty_cycle {
+                continue; // idle window: no draw, rate stays 0
+            }
+            let day = (1.0 + 0.95 * (TAU * t as f64 / self.day_period + phase).sin()).max(0.0);
+            let noise =
+                rng.lognormal(-self.noise_sigma * self.noise_sigma / 2.0, self.noise_sigma);
+            // Divide by the duty cycle so the mean over the whole day (idle
+            // windows included) stays ≈ mean_rps.
+            *slot = (mean_rps / self.duty_cycle * day * noise).max(0.0);
+        }
+        out
+    }
+
+    /// The small cycle of model shapes the population serves. Azure-style
+    /// functions are tiny models; using a handful of **shared** graphs (same
+    /// name ⇒ same predictor cache entry) keeps a 100k-function cell's
+    /// specs at hundreds of bytes each and its RaPP caches O(shapes), not
+    /// O(functions). Returns `(graph, slo, batch)` per shape.
+    fn shape_table(perf: &PerfModel) -> Vec<(crate::model::OpGraph, f64, u32)> {
+        use crate::model::builders::GraphBuilder;
+        use crate::model::OpKind;
+        let mut shapes = Vec::new();
+        for (name, hidden) in [
+            ("azshape-mlp-s", 256u32),
+            ("azshape-mlp-m", 512u32),
+            ("azshape-mlp-l", 1024u32),
+        ] {
+            let mut b = GraphBuilder::new(name, "azure-fn");
+            let a = b.dense(&[], hidden, hidden);
+            let r = b.elemwise(&[a], OpKind::Relu, hidden as f64, 0.0);
+            b.dense(&[r], hidden, 64);
+            let graph = b.build();
+            let baseline = perf.latency(&graph, 1, 1.0, 1.0);
+            // Same SLO discipline as the experiment zoo: a few multiples of
+            // the unit-GPU baseline. Small batch — these are light models.
+            shapes.push((graph, baseline * 4.0, 4u32));
+        }
+        shapes
+    }
+
+    /// Materialise the sampled population: one [`FunctionSpec`] per function
+    /// (cycling the shared shape table) plus the dense [`Trace`].
+    pub fn sample(&self, perf: &PerfModel) -> (Vec<FunctionSpec>, Trace) {
+        let shapes = Self::shape_table(perf);
+        let means = self.mean_rates();
+        let mut fns = Vec::with_capacity(self.functions);
+        let mut trace = Trace::default();
+        for (i, &mean) in means.iter().enumerate() {
+            let (graph, slo, batch) = &shapes[i % shapes.len()];
+            let name = Self::function_name(i);
+            trace.series.insert(name.clone(), self.series(i, mean));
+            fns.push(FunctionSpec {
+                name,
+                graph: graph.clone(),
+                slo: *slo,
+                batch: *batch,
+                artifact: None,
+            });
+        }
+        (fns, trace)
     }
 }
 
@@ -588,6 +820,120 @@ mod tests {
         for (x, y) in a.iter().zip(b) {
             assert!((x - y).abs() < 1e-9);
         }
+    }
+
+    fn small_source(seed: u64) -> TraceSource {
+        TraceSource::for_preset(Preset::TraceAzureSmall, seed, 300, 120.0).unwrap()
+    }
+
+    #[test]
+    fn trace_source_is_deterministic_and_order_independent() {
+        let perf = PerfModel::default();
+        let src = small_source(9);
+        let (fns_a, tr_a) = src.sample(&perf);
+        let (fns_b, tr_b) = src.sample(&perf);
+        assert_eq!(fns_a.len(), 48);
+        for (a, b) in fns_a.iter().zip(&fns_b) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.slo.to_bits(), b.slo.to_bits());
+        }
+        for f in &fns_a {
+            let (x, y) = (&tr_a.series[&f.name], &tr_b.series[&f.name]);
+            assert_eq!(x.len(), y.len());
+            for (p, q) in x.iter().zip(y) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+        // Order independence: function i's series is a pure function of
+        // (seed, i) — materialising it alone matches the full sample.
+        let means = src.mean_rates();
+        for i in [0usize, 7, 47] {
+            let solo = src.series(i, means[i]);
+            let full = &tr_a.series[&TraceSource::function_name(i)];
+            assert_eq!(solo.len(), full.len());
+            for (p, q) in solo.iter().zip(full) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+        // Different seed ⇒ different trace.
+        let (_, tr_c) = small_source(10).sample(&perf);
+        assert!(fns_a
+            .iter()
+            .any(|f| tr_a.series[&f.name] != tr_c.series[&f.name]));
+    }
+
+    #[test]
+    fn trace_source_popularity_is_heavy_tailed() {
+        let src = small_source(4);
+        let mut w = src.mean_rates();
+        assert_eq!(w.len(), 48);
+        let sum: f64 = w.iter().sum();
+        assert!((sum - src.total_rps).abs() < 1e-6, "sum {sum}");
+        w.sort_by(|a, b| b.total_cmp(a));
+        // Exact Zipf tail: rank-0 over median rank is (25)^s by construction.
+        let expect = 25f64.powf(src.zipf_s);
+        let got = w[0] / w[24];
+        assert!((got - expect).abs() / expect < 1e-9, "got {got} want {expect}");
+        // Head-heavy: top 10% of functions carry most of the aggregate rps.
+        let head: f64 = w.iter().take(5).sum();
+        assert!(head > 0.5 * sum, "head {head} of {sum}");
+    }
+
+    #[test]
+    fn trace_source_functions_are_mostly_idle() {
+        let perf = PerfModel::default();
+        let (fns, trace) = small_source(2).sample(&perf);
+        let mut idle_seconds = 0usize;
+        let mut total_seconds = 0usize;
+        let mut total = 0.0;
+        for f in &fns {
+            let s = &trace.series[&f.name];
+            assert_eq!(s.len(), 300);
+            idle_seconds += s.iter().filter(|&&x| x == 0.0).count();
+            total_seconds += s.len();
+            total += trace.total_requests(&f.name);
+        }
+        // Duty cycle 0.35 ⇒ well over half of all function-seconds silent.
+        assert!(
+            idle_seconds as f64 > 0.5 * total_seconds as f64,
+            "only {idle_seconds}/{total_seconds} idle"
+        );
+        // …but the aggregate still lands near total_rps × duration.
+        let expected = 120.0 * 300.0;
+        assert!(
+            total > 0.3 * expected && total < 3.0 * expected,
+            "total {total} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn trace_source_shapes_are_shared_and_tiny() {
+        let perf = PerfModel::default();
+        let (fns, _) = small_source(1).sample(&perf);
+        let mut shape_names: Vec<&str> = fns.iter().map(|f| f.graph.name.as_str()).collect();
+        shape_names.sort_unstable();
+        shape_names.dedup();
+        // A handful of shared shapes, not one graph per function — this is
+        // what keeps 100k-function specs and predictor caches small.
+        assert!(shape_names.len() <= 4, "shapes {shape_names:?}");
+        for f in &fns {
+            assert!(f.graph.nodes.len() <= 4, "{} too big", f.graph.name);
+            assert!(f.slo > 0.0 && f.batch >= 1);
+        }
+    }
+
+    #[test]
+    fn trace_preset_surfaces_are_wired() {
+        assert!(Preset::TraceAzureSmall.is_trace());
+        assert!(Preset::TraceAzureScale.is_trace());
+        assert!(!Preset::Standard.is_trace());
+        assert_eq!(
+            Preset::from_name("trace-azure-small"),
+            Some(Preset::TraceAzureSmall)
+        );
+        assert!(TraceSource::for_preset(Preset::Standard, 1, 10, 1.0).is_none());
+        let scale = TraceSource::for_preset(Preset::TraceAzureScale, 1, 10, 200.0).unwrap();
+        assert_eq!(scale.functions, 100_000);
     }
 
     #[test]

@@ -604,6 +604,92 @@ fn pipeline_extension_perturbs_no_stock_cells() {
 }
 
 #[test]
+fn trace_extension_perturbs_no_stock_cells() {
+    // The trace-backend contract: adding the sampled-trace preset to a grid
+    // leaves every stock synthetic cell byte-identical. The trace path
+    // draws only from its own RNG streams (per-function + rank-shuffle,
+    // disjoint from the sim/trace-gen streams) and flips its sim knobs
+    // (cold start, lazy idle sweep) only inside its own cells.
+    let stock = registry_matrix(&["has-gpu", "kserve", "fast-gshare"]).run(2);
+    let mk = || ScenarioMatrix {
+        presets: vec![Preset::Standard, Preset::TraceAzureSmall],
+        ..registry_matrix(&["has-gpu", "kserve", "fast-gshare"])
+    };
+    let extended = mk().run(2);
+    assert_eq!(extended.cells.len(), stock.cells.len() * 2);
+    let shared: Vec<&CellResult> = extended
+        .cells
+        .iter()
+        .filter(|c| c.preset == Preset::Standard)
+        .collect();
+    assert_eq!(shared.len(), stock.cells.len());
+    for (a, b) in stock.cells.iter().zip(shared) {
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "stock cell ({}, {}, {}) perturbed by the trace extension",
+            a.platform,
+            a.preset.name(),
+            a.seed
+        );
+    }
+    // Stock summary rows are identical too (trace rows only append).
+    let stock_summary: Vec<_> = extended
+        .summary()
+        .into_iter()
+        .filter(|r| r.preset == Preset::Standard)
+        .collect();
+    assert_eq!(stock.summary(), stock_summary);
+    // The trace cells ran the sampled population end-to-end: traffic
+    // flowed (served or dropped — every arrival is accounted), and the
+    // export carries only *touched* sampled functions, never the idle
+    // bulk of the population.
+    for c in extended
+        .cells
+        .iter()
+        .filter(|c| c.preset == Preset::TraceAzureSmall)
+    {
+        assert!(
+            c.served + c.dropped > 0,
+            "({}, seed {}) trace cell saw no traffic",
+            c.platform,
+            c.seed
+        );
+        assert!(!c.functions.is_empty());
+        assert!(
+            c.functions.len() <= 48,
+            "trace cell exported {} rows for a 48-function population",
+            c.functions.len()
+        );
+        assert!(c.functions.iter().all(|f| f.name.starts_with("azfn-")));
+        assert!(
+            c.functions.iter().all(|f| f.served + f.dropped > 0),
+            "({}, seed {}) exported an untouched function row",
+            c.platform,
+            c.seed
+        );
+    }
+    // The fine-grained paper platform actually serves under the sampled
+    // population (whole-GPU baselines may starve most of it — that is the
+    // comparison the preset exists to make).
+    let has = extended
+        .cells
+        .iter()
+        .find(|c| c.preset == Preset::TraceAzureSmall && c.platform == "has-gpu")
+        .unwrap();
+    assert!(has.served > 0, "has-gpu served nothing on the sampled trace");
+    // The extended grid round-trips losslessly and is --jobs invariant
+    // (sampling order and metric sharding must not leak into the export).
+    let back = MatrixReport::from_json(&extended.to_json()).unwrap();
+    assert_eq!(back, extended);
+    let again = mk().run(1);
+    assert_eq!(
+        json::fingerprint(&extended.to_json()),
+        json::fingerprint(&again.to_json())
+    );
+}
+
+#[test]
 fn pipeline_mixed_headline_directions() {
     // The paper-shaped outcome for the branching-DAG grid: HAS-GPU's
     // co-scaled stages keep the e2e tail inside the budget at fine-grained
